@@ -1,0 +1,164 @@
+//! End-to-end driver — proves all three layers compose on a real small
+//! workload (the EXPERIMENTS.md §E2E run).
+//!
+//! Pipeline: synthetic COVID cohort → numeric encoding → streaming mining
+//! with backpressure ([`tspm_plus::pipeline`]) → sparsity screen → MSMR
+//! feature selection on the **PJRT co-occurrence artifacts (L1 Pallas
+//! kernel inside)** → logistic-regression training via the **PJRT
+//! `logreg_grad` artifact** → evaluation, plus the WHO Post-COVID
+//! vignette validated against ground truth. Reports the paper's headline
+//! metric (mining throughput + memory) along the way.
+//!
+//! Requires `make artifacts` (falls back to pure Rust with a warning).
+//!
+//! Run with: `cargo run --release --example e2e_pipeline`
+
+use std::time::Instant;
+
+use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::matrix::SeqMatrix;
+use tspm_plus::metrics::{fmt_bytes, fmt_duration, MemTracker};
+use tspm_plus::mining::MiningConfig;
+use tspm_plus::ml::{self, TrainConfig};
+use tspm_plus::msmr::{self, MsmrConfig};
+use tspm_plus::pipeline::{run as run_pipeline, PipelineConfig};
+use tspm_plus::postcovid::{identify, validate, PostCovidConfig};
+use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet};
+use tspm_plus::sparsity::SparsityConfig;
+use tspm_plus::synthea::{SyntheaConfig, COVID_CODE, SYMPTOM_CODES};
+
+fn main() {
+    println!("=== tSPM+ end-to-end pipeline ===\n");
+    let artifacts = match ArtifactSet::load(&default_artifacts_dir()) {
+        Ok(set) => {
+            println!(
+                "[runtime] PJRT CPU client up; artifacts: {:?} (tiles {}x{})",
+                set.names(),
+                set.tile_rows,
+                set.tile_features
+            );
+            Some(set)
+        }
+        Err(e) => {
+            println!("[runtime] WARNING: {e}\n[runtime] continuing with pure-Rust analytics");
+            None
+        }
+    };
+
+    // ---- stage 1: workload ------------------------------------------------
+    let mut gen_cfg = SyntheaConfig::synthea_covid_like(0.02); // 700 patients
+    gen_cfg.vocab_size = 2_000;
+    let g = gen_cfg.generate_with_truth();
+    let db = NumericDbMart::encode(&g.dbmart);
+    println!(
+        "\n[data] {} patients, {} rows, {} distinct phenX, {} true Post-COVID pairs",
+        db.num_patients(),
+        db.len(),
+        db.num_phenx(),
+        g.truth.postcovid.len()
+    );
+
+    // ---- stage 2: streaming mining + screen -------------------------------
+    let tracker = MemTracker::new();
+    let t0 = Instant::now();
+    let pipe_cfg = PipelineConfig {
+        mining: MiningConfig::default(),
+        chunk_cap: 2_000_000,
+        queue_depth: 4,
+        shards: 0,
+        screen: Some(SparsityConfig { min_patients: 8, threads: 0 }),
+    };
+    let result = run_pipeline(&db, &pipe_cfg).expect("pipeline");
+    let mine_elapsed = t0.elapsed();
+    let mined_total = result.metrics.records.load(std::sync::atomic::Ordering::Relaxed);
+    tracker.add(result.sequences.byte_size());
+    println!(
+        "[mine] {} sequences mined in {} ({:.1} M seq/s), screened to {} \
+         ({} distinct); stage metrics: {}",
+        mined_total,
+        fmt_duration(mine_elapsed),
+        mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6,
+        result.sequences.len(),
+        result.screen_stats.map(|s| s.distinct_after).unwrap_or(0),
+        result.metrics.report()
+    );
+    println!("[mine] resident sequence set: {}", fmt_bytes(result.sequences.byte_size()));
+
+    // ---- stage 3: MSMR on PJRT --------------------------------------------
+    let pc_patients: std::collections::BTreeSet<&str> =
+        g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
+    let labels: Vec<f32> = (0..db.num_patients())
+        .map(|p| f32::from(pc_patients.contains(db.lookup.patient_name(p as u32))))
+        .collect();
+    let m = SeqMatrix::build(&result.sequences.records, db.num_patients() as u32);
+    println!(
+        "\n[msmr] matrix {} × {} ({} nnz)",
+        m.num_patients,
+        m.num_cols(),
+        m.nnz()
+    );
+    let t1 = Instant::now();
+    let sel = msmr::select(
+        &m,
+        &labels,
+        &MsmrConfig { top_k: 200, ..Default::default() },
+        artifacts.as_ref(),
+    )
+    .expect("msmr");
+    println!(
+        "[msmr] selected {} features in {} (top relevance {:.4} nats)",
+        sel.columns.len(),
+        fmt_duration(t1.elapsed()),
+        sel.relevance.first().copied().unwrap_or(0.0)
+    );
+    let selected = m.select_columns(&sel.columns);
+
+    // ---- stage 4: classifier on PJRT --------------------------------------
+    let t2 = Instant::now();
+    let (_, train_m, test_m) = ml::run_workflow(
+        &selected,
+        &labels,
+        &TrainConfig { epochs: 150, ..Default::default() },
+        artifacts.as_ref(),
+    )
+    .expect("training");
+    println!(
+        "\n[classify] trained in {} — train AUC {:.3}, test AUC {:.3} (n={}/{})",
+        fmt_duration(t2.elapsed()),
+        train_m.auc,
+        test_m.auc,
+        train_m.n,
+        test_m.n
+    );
+
+    // ---- stage 5: Post-COVID vignette --------------------------------------
+    let covid = db.lookup.phenx_id(COVID_CODE).expect("covid code");
+    let mut pc_cfg = PostCovidConfig::new(covid);
+    pc_cfg.candidate_filter =
+        Some(SYMPTOM_CODES.iter().filter_map(|s| db.lookup.phenx_id(s)).collect());
+    // The vignette needs unscreened records (rare per-patient patterns).
+    let full = tspm_plus::mining::mine_sequences(&db, &MiningConfig::default()).expect("mine");
+    let pc = identify(&full.records, db.num_patients() as u32, &pc_cfg, artifacts.as_ref())
+        .expect("postcovid");
+    let v = validate(&pc, &g.truth, &db.lookup);
+    println!(
+        "\n[postcovid] {} confirmed pairs — precision {:.3} recall {:.3} F1 {:.3}",
+        pc.confirmed.len(),
+        v.precision(),
+        v.recall(),
+        v.f1()
+    );
+
+    // ---- summary ------------------------------------------------------------
+    println!("\n=== E2E summary ===");
+    println!("mining throughput : {:.1} M seq/s", mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6);
+    println!("test AUC          : {:.3}", test_m.auc);
+    println!("post-covid F1     : {:.3}", v.f1());
+    println!(
+        "layers exercised  : L3 rust pipeline ✓  L2 JAX artifacts {}  L1 Pallas kernel {}",
+        if artifacts.is_some() { "✓" } else { "✗ (fallback)" },
+        if artifacts.is_some() { "✓ (inside cooc artifacts)" } else { "✗" },
+    );
+    assert!(test_m.auc > 0.75, "E2E AUC regression: {}", test_m.auc);
+    assert!(v.recall() > 0.9, "E2E recall regression");
+}

@@ -1,0 +1,30 @@
+//! Vignette 1 — integrating tSPM+ into an MLHO-style ML workflow.
+//!
+//! Mirrors the paper's first vignette: mine sequences, sparsity-screen,
+//! MSMR-select the most informative 200, train a classifier on the
+//! selected sequences (instead of raw EHR entries), and translate the
+//! significant sequences back to readable descriptions.
+//!
+//! Uses the AOT-compiled PJRT artifacts when `artifacts/manifest.json`
+//! exists (build with `make artifacts`); otherwise falls back to the
+//! pure-Rust analytics path.
+//!
+//! Run with: `cargo run --release --example mlho_workflow`
+
+use tspm_plus::ml;
+use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet};
+
+fn main() {
+    let artifacts = match ArtifactSet::load(&default_artifacts_dir()) {
+        Ok(set) => {
+            println!("using PJRT artifacts: {:?}", set.names());
+            Some(set)
+        }
+        Err(e) => {
+            println!("no PJRT artifacts ({e}); using pure-Rust analytics");
+            None
+        }
+    };
+    let report = ml::mlho_vignette(400, 200, 200, artifacts.as_ref()).expect("vignette");
+    print!("{report}");
+}

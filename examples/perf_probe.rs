@@ -1,0 +1,43 @@
+// perf probe: per-phase timing of the screen + sort comparisons
+use std::time::Instant;
+use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::mining::{self, MiningConfig};
+use tspm_plus::sparsity::{self, SparsityConfig};
+use tspm_plus::synthea::SyntheaConfig;
+
+fn main() {
+    let db = NumericDbMart::encode(&SyntheaConfig::synthea_covid_like(0.02).generate());
+    // dbmart sort alone
+    for _ in 0..3 {
+        let mut e = db.entries.clone();
+        let t = Instant::now();
+        let b = mining::sort_and_chunk(&mut e, 1);
+        println!("sort_and_chunk: {:?} ({} patients)", t.elapsed(), b.len()-1);
+    }
+    let set = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+    println!("mined {}", set.len());
+    // screen sort alone (radix by (seq,pid))
+    for _ in 0..2 {
+        let mut recs = set.records.clone();
+        let t = Instant::now();
+        tspm_plus::psort::par_sort_by_radix_key(&mut recs, |r| ((r.seq as u128) << 32) | r.pid as u128, 1);
+        println!("radix sort 46M recs: {:?}", t.elapsed());
+        let t = Instant::now();
+        let mut recs2 = set.records.clone();
+        recs2.sort_unstable_by_key(|r| ((r.seq as u128) << 32) | r.pid as u128);
+        println!("std sort 46M recs:   {:?}", t.elapsed());
+    }
+    // full screen
+    for _ in 0..2 {
+        let mut recs = set.records.clone();
+        let t = Instant::now();
+        sparsity::screen(&mut recs, &SparsityConfig{min_patients: 7, threads: 1});
+        println!("screen total: {:?}", t.elapsed());
+    }
+    // mine timing
+    for _ in 0..3 {
+        let t = Instant::now();
+        let s = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        println!("mine: {:.2} M/s", s.len() as f64 / t.elapsed().as_secs_f64()/1e6);
+    }
+}

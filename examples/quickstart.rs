@@ -1,0 +1,69 @@
+//! Quickstart: the 60-second tour of the tSPM+ public API.
+//!
+//! Generates a small synthetic clinical cohort, mines all transitive
+//! sequences with durations, sparsity-screens them, and shows how a
+//! numeric sequence translates back to human-readable form (paper
+//! Fig. 2).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use tspm_plus::dbmart::{decode_seq, format_seq, NumericDbMart};
+use tspm_plus::metrics::fmt_bytes;
+use tspm_plus::mining::{mine_sequences, MiningConfig};
+use tspm_plus::sparsity::{screen, SparsityConfig};
+use tspm_plus::synthea::SyntheaConfig;
+use tspm_plus::util;
+
+fn main() {
+    // 1. A cohort. Real use: DbMart::read_csv("my_ehr_export.csv").
+    let cohort = SyntheaConfig::small().generate();
+    println!("cohort: {} rows", cohort.len());
+
+    // 2. Numeric encoding with lookup tables (the paper's preprocessing).
+    let db = NumericDbMart::encode(&cohort);
+    println!(
+        "encoded: {} patients, {} distinct phenX, {} per entry",
+        db.num_patients(),
+        db.num_phenx(),
+        fmt_bytes(db.byte_size() / db.len().max(1) as u64),
+    );
+
+    // 3. Mine every transitive sequence, with durations in days.
+    let cfg = MiningConfig::default();
+    let mined = mine_sequences(&db, &cfg).expect("mining");
+    println!("mined: {} sequences ({})", mined.len(), fmt_bytes(mined.byte_size()));
+
+    // 4. Sparsity screen: keep sequences seen in ≥ 5 distinct patients.
+    let mut records = mined.records;
+    let stats = screen(&mut records, &SparsityConfig { min_patients: 5, threads: 0 });
+    println!(
+        "screened: {} → {} records, {} → {} distinct sequences",
+        stats.records_before, stats.records_after, stats.distinct_before, stats.distinct_after
+    );
+
+    // 5. A sequence is a reversible decimal hash (paper Fig. 2).
+    let sample = records[records.len() / 2];
+    let (start, end) = decode_seq(sample.seq);
+    println!(
+        "\nexample record: seq={} ({}) duration={}d patient={}",
+        sample.seq,
+        format_seq(sample.seq),
+        sample.duration,
+        db.lookup.patient_name(sample.pid),
+    );
+    println!(
+        "  translates to: {} -> {}",
+        db.lookup.phenx_name(start),
+        db.lookup.phenx_name(end)
+    );
+
+    // 6. Utility functions: everything downstream of one phenX.
+    let from_start = util::filter_by_start(&records, start);
+    let long_ones = util::filter_min_duration(&from_start, 90);
+    println!(
+        "\nsequences starting with {}: {} total, {} lasting ≥ 90 days",
+        db.lookup.phenx_name(start),
+        from_start.len(),
+        long_ones.len()
+    );
+}

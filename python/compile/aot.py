@@ -1,0 +1,79 @@
+"""AOT compilation: lower every L2 artifact to HLO text for the Rust side.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+The output directory receives one ``<name>.hlo.txt`` per artifact plus a
+``manifest.json`` describing input shapes, consumed by
+``rust/src/runtime``.
+
+Python runs ONLY here, at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    parser.add_argument("--only", default=None, help="comma-separated artifact subset")
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = model.artifact_specs()
+    if args.only:
+        wanted = set(args.only.split(","))
+        specs = {k: v for k, v in specs.items() if k in wanted}
+
+    manifest = {
+        "tile_rows": model.TILE_ROWS,
+        "tile_features": model.TILE_FEATURES,
+        "artifacts": {},
+    }
+    for name, (fn, shapes) in sorted(specs.items()):
+        lowered = lower_artifact(fn, shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_outputs = len(jax.eval_shape(fn, *[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]))
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "input_shapes": [list(s) for s in shapes],
+            "num_outputs": n_outputs,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(shapes)} inputs, {n_outputs} outputs)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

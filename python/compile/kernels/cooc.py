@@ -1,0 +1,107 @@
+"""L1 — Pallas co-occurrence kernel.
+
+The dense hot-spot of the analytics layer is the binary co-occurrence
+count matrix ``C = Xᵀ·Y`` over patient×feature indicator matrices: MSMR's
+joint-mutual-information scoring needs all pairwise co-occurrence counts
+(an F×F matmul over the patient dimension), and the Post-COVID correlation
+step needs the same contraction against a target vector.
+
+The kernel is a classic tiled matmul specialised for this contraction:
+
+* grid ``(A/TA, B/TB, P/TP)`` — output tiles × reduction steps;
+* ``X`` block ``(TP, TA)`` indexed ``(k, i)``, ``Y`` block ``(TP, TB)``
+  indexed ``(k, j)`` — BlockSpec expresses the HBM↔VMEM schedule;
+* an output tile accumulates across the ``k`` (patient) steps in place,
+  initialised on the first step (revisiting grid dimension).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper is
+CPU-only; mapping the contraction to the MXU means choosing TA/TB/TP so
+that the three resident blocks fit VMEM (≈16 MiB/core on TPUv4):
+``TP·TA + TP·TB + TA·TB`` floats. The defaults (128³) use 192 KiB — far
+under budget, sized instead for MXU occupancy (128×128 systolic tiles).
+
+Runs with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: one MXU-shaped tile per operand.
+TILE_P = 128
+TILE_A = 128
+TILE_B = 128
+
+
+def _cooc_kernel(x_ref, y_ref, o_ref):
+    """One grid step: o[i,j] (+)= x[k,i]ᵀ @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 accumulation; on real TPU hardware the operands would be cast
+    # to bf16 for the MXU with an f32 accumulator — preserve_element_type
+    # keeps the contraction exact for {0,1} inputs either way.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_tile(dim: int, tile: int) -> int:
+    """Largest divisor tile ≤ requested tile (shapes here are powers of
+    two or small; fall back to the full dim when it does not divide)."""
+    if dim % tile == 0:
+        return tile
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if cand <= tile and dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "tile_a", "tile_b"))
+def cooc(x, y, *, tile_p: int = TILE_P, tile_a: int = TILE_A, tile_b: int = TILE_B):
+    """Co-occurrence counts ``xᵀ @ y`` via the Pallas kernel.
+
+    Args:
+      x: f32[P, A] indicator (or weighted) matrix.
+      y: f32[P, B] indicator matrix.
+
+    Returns:
+      f32[A, B] contraction over the patient dimension.
+    """
+    p, a = x.shape
+    p2, b = y.shape
+    assert p == p2, f"patient dims differ: {p} vs {p2}"
+    tp = _pick_tile(p, tile_p)
+    ta = _pick_tile(a, tile_a)
+    tb = _pick_tile(b, tile_b)
+    grid = (a // ta, b // tb, p // tp)
+    return pl.pallas_call(
+        _cooc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, ta), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tp, tb), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ta, tb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)
+
+
+def vmem_bytes(tile_p: int = TILE_P, tile_a: int = TILE_A, tile_b: int = TILE_B) -> int:
+    """Estimated VMEM residency of one grid step (f32)."""
+    return 4 * (tile_p * tile_a + tile_p * tile_b + tile_a * tile_b)
+
+
+def mxu_utilization(tile_a: int = TILE_A, tile_b: int = TILE_B) -> float:
+    """Fraction of the 128×128 MXU tile the output block occupies."""
+    return min(tile_a, 128) * min(tile_b, 128) / (128.0 * 128.0)

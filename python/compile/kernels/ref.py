@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every kernel / L2 computation.
+
+These are the correctness references: straightforward, unfused jnp
+implementations that pytest (and hypothesis) compares the Pallas kernel
+and the L2 model functions against.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def cooc_ref(x, y):
+    """Co-occurrence counts: xᵀ @ y."""
+    return jnp.asarray(x, jnp.float32).T @ jnp.asarray(y, jnp.float32)
+
+
+def mi_pair_ref(n11, ci, cj, n):
+    """Pairwise mutual information between binary variables i and j.
+
+    Args:
+      n11: f32[A, B] joint positive counts.
+      ci:  f32[A, 1] positive counts of the row variables.
+      cj:  f32[1, B] positive counts of the column variables.
+      n:   scalar total observation count.
+
+    Returns:
+      f32[A, B] MI in nats, from the 2×2 contingency table
+      (n11, n10, n01, n00) with the convention 0·log(0/·) = 0.
+    """
+    n = jnp.asarray(n, jnp.float32)
+    n11 = jnp.asarray(n11, jnp.float32)
+    n10 = ci - n11
+    n01 = cj - n11
+    n00 = n - ci - cj + n11
+
+    def term(nab, pa_count, pb_count):
+        p = nab / n
+        denom = (pa_count / n) * (pb_count / n)
+        return jnp.where(nab > 0, p * jnp.log((nab / n + EPS) / (denom + EPS)), 0.0)
+
+    mi = (
+        term(n11, ci, cj)
+        + term(n10, ci, n - cj)
+        + term(n01, n - ci, cj)
+        + term(n00, n - ci, n - cj)
+    )
+    return jnp.maximum(mi, 0.0)
+
+
+def logreg_grad_ref(w, b, x, y, mask):
+    """Full-batch logistic-regression gradient and masked mean loss.
+
+    Args:
+      w: f32[F, 1], b: f32[1, 1], x: f32[P, F], y/mask: f32[P, 1].
+
+    Returns:
+      (grad_w f32[F,1], grad_b f32[1,1], loss f32[1,1]); gradients are
+      *sums* over valid rows (the Rust optimizer divides by the global
+      count when accumulating across tiles), loss is the masked sum.
+    """
+    logits = x @ w + b
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    err = (p - y) * mask
+    grad_w = x.T @ err
+    grad_b = jnp.sum(err, keepdims=True).reshape(1, 1)
+    # numerically-stable BCE: log(1+exp(-|z|)) + max(z,0) - z*y
+    z = logits
+    loss_vec = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    loss = jnp.sum(loss_vec * mask, keepdims=True).reshape(1, 1)
+    return grad_w, grad_b, loss
+
+
+def logreg_predict_ref(w, b, x):
+    """Predicted probabilities f32[P, 1]."""
+    return 1.0 / (1.0 + jnp.exp(-(x @ w + b)))
+
+
+def corr_masked_ref(x, t, mask):
+    """Masked Pearson correlation of every column of x with target t.
+
+    Args:
+      x: f32[P, F], t: f32[P, 1], mask: f32[P, 1] (1 = valid row).
+
+    Returns:
+      f32[F, 1] correlation per column (0 where either side is constant).
+    """
+    m = mask
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    xm = jnp.sum(x * m, axis=0, keepdims=True) / n          # [1, F]
+    tm = jnp.sum(t * m) / n                                  # scalar
+    xc = (x - xm) * m
+    tc = (t - tm) * m
+    cov = xc.T @ tc                                          # [F, 1]
+    varx = jnp.sum(xc * xc, axis=0, keepdims=True).T         # [F, 1]
+    vart = jnp.sum(tc * tc)                                  # scalar
+    denom = jnp.sqrt(varx * vart)
+    return jnp.where(denom > EPS, cov / (denom + EPS), 0.0)

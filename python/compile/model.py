@@ -1,0 +1,99 @@
+"""L2 — the JAX compute graph of the analytics layer.
+
+Every function here is AOT-lowered by ``aot.py`` into an HLO-text artifact
+that the Rust coordinator executes via PJRT. The co-occurrence
+contraction goes through the L1 Pallas kernel (``kernels.cooc``) so it
+lowers into the same HLO module; the surrounding arithmetic (MI terms,
+logistic loss, correlation normalisation) is plain jnp that XLA fuses
+around it.
+
+Conventions shared with the Rust side (rust/src/runtime):
+
+* all tensors are f32, row-major;
+* the patient dimension is tiled to ``TILE_ROWS`` and features to
+  ``TILE_FEATURES`` — Rust pads tiles with zeros and passes a row mask
+  where the computation is mask-aware;
+* gradients/counts are *sums*, accumulated across tiles by Rust, so each
+  artifact is tile-local and stateless.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import cooc as cooc_kernel
+from compile.kernels import ref
+
+# Fixed AOT shapes (one compiled executable per shape).
+TILE_ROWS = 512       # patients per tile
+TILE_FEATURES = 256   # feature columns per tile
+
+
+def cooc_counts(x, y):
+    """Pairwise co-occurrence counts xᵀ·y via the Pallas kernel."""
+    return cooc_kernel.cooc(x, y)
+
+
+def cooc_label(x, y_col):
+    """Feature-vs-label counts xᵀ·y for a single label column."""
+    return cooc_kernel.cooc(x, y_col)
+
+
+def mi_pair(n11, ci, cj, n):
+    """Pairwise MI from accumulated counts (elementwise, fuses fully)."""
+    return ref.mi_pair_ref(n11, ci, cj, n)
+
+
+def logreg_grad(w, b, x, y, mask):
+    """Tile-local logistic-regression gradients + loss (sums over rows)."""
+    return ref.logreg_grad_ref(w, b, x, y, mask)
+
+
+def logreg_predict(w, b, x):
+    """Tile-local predicted probabilities."""
+    return ref.logreg_predict_ref(w, b, x)
+
+
+def corr_masked(x, t, mask):
+    """Masked Pearson correlation of each feature column with target t."""
+    return ref.corr_masked_ref(x, t, mask)
+
+
+def artifact_specs():
+    """The artifact registry: name → (function, example input shapes).
+
+    Shapes use (rows, features) = (TILE_ROWS, TILE_FEATURES); every entry
+    becomes ``artifacts/<name>.hlo.txt`` plus a manifest row consumed by
+    the Rust runtime.
+    """
+    P, F = TILE_ROWS, TILE_FEATURES
+    s = jnp.float32
+    return {
+        "cooc": (
+            lambda x, y: (cooc_counts(x, y),),
+            [(P, F), (P, F)],
+        ),
+        "cooc_label": (
+            lambda x, y: (cooc_label(x, y),),
+            [(P, F), (P, 1)],
+        ),
+        "mi_pair": (
+            lambda n11, ci, cj, n: (mi_pair(n11, ci, cj, n),),
+            [(F, F), (F, 1), (1, F), (1, 1)],
+        ),
+        "mi_label": (
+            # label MI: same 2×2 table maths with B=1
+            lambda n11, ci, cj, n: (mi_pair(n11, ci, cj, n),),
+            [(F, 1), (F, 1), (1, 1), (1, 1)],
+        ),
+        "logreg_grad": (
+            lambda w, b, x, y, m: logreg_grad(w, b, x, y, m),
+            [(F, 1), (1, 1), (P, F), (P, 1), (P, 1)],
+        ),
+        "logreg_predict": (
+            lambda w, b, x: (logreg_predict(w, b, x),),
+            [(F, 1), (1, 1), (P, F)],
+        ),
+        "corr_masked": (
+            lambda x, t, m: (corr_masked(x, t, m),),
+            [(P, F), (P, 1), (P, 1)],
+        ),
+    }

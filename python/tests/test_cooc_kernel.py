@@ -1,0 +1,94 @@
+"""L1 correctness: the Pallas co-occurrence kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; assert_allclose against
+ref.cooc_ref is the core correctness signal for the kernel that every
+AOT artifact embeds.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import cooc, ref
+
+
+def _binary(rng, shape, density=0.3):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p=st.sampled_from([1, 2, 4, 8, 32, 128, 256, 512]),
+    a=st.sampled_from([1, 2, 8, 64, 128, 256]),
+    b=st.sampled_from([1, 4, 16, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooc_matches_ref_binary(p, a, b, seed):
+    rng = np.random.default_rng(seed)
+    x = _binary(rng, (p, a))
+    y = _binary(rng, (p, b))
+    got = np.asarray(cooc.cooc(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.cooc_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)  # exact for counts
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([16, 128, 384]),
+    a=st.sampled_from([32, 96, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooc_matches_ref_real_valued(p, a, seed):
+    # The kernel is also used with weighted (non-binary) features.
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((p, a)).astype(np.float32)
+    y = rng.standard_normal((p, a)).astype(np.float32)
+    got = np.asarray(cooc.cooc(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.cooc_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_cooc_counts_are_integers():
+    rng = np.random.default_rng(7)
+    x = _binary(rng, (512, 256))
+    got = np.asarray(cooc.cooc(jnp.asarray(x), jnp.asarray(x)))
+    assert np.all(got == np.round(got))
+    # Diagonal equals the column counts.
+    np.testing.assert_array_equal(np.diag(got), x.sum(axis=0))
+    # Symmetry of X^T X.
+    np.testing.assert_array_equal(got, got.T)
+
+
+def test_cooc_bounds():
+    # Co-occurrence can never exceed either marginal count.
+    rng = np.random.default_rng(11)
+    x = _binary(rng, (256, 64), density=0.5)
+    got = np.asarray(cooc.cooc(jnp.asarray(x), jnp.asarray(x)))
+    counts = x.sum(axis=0)
+    assert np.all(got <= np.minimum.outer(counts, counts) + 1e-6)
+
+
+def test_non_divisible_shapes_fall_back_to_smaller_tiles():
+    rng = np.random.default_rng(3)
+    x = _binary(rng, (96, 48))  # 96 = 32*3, 48 = 16*3 — not 128-divisible
+    y = _binary(rng, (96, 24))
+    got = np.asarray(cooc.cooc(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.cooc_ref(x, y))
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_mismatched_patient_dims_rejected():
+    x = jnp.zeros((8, 4))
+    y = jnp.zeros((16, 4))
+    with pytest.raises(AssertionError):
+        cooc.cooc(x, y)
+
+
+def test_vmem_estimate_within_budget():
+    # The chosen AOT tiles must fit a conservative 4 MiB VMEM budget.
+    assert cooc.vmem_bytes() <= 4 << 20
+    assert 0.0 < cooc.mxu_utilization() <= 1.0
+    # Default tiles fully occupy the MXU output tile.
+    assert cooc.mxu_utilization() == 1.0

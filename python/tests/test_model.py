@@ -1,0 +1,180 @@
+"""L2 correctness: MI, logistic-regression gradients, masked correlation."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _mi_2x2(n11, n10, n01, n00):
+    """Scalar contingency-table MI, computed the slow obvious way."""
+    n = n11 + n10 + n01 + n00
+    mi = 0.0
+    for nab, pa, pb in [
+        (n11, n11 + n10, n11 + n01),
+        (n10, n11 + n10, n10 + n00),
+        (n01, n01 + n00, n11 + n01),
+        (n00, n01 + n00, n10 + n00),
+    ]:
+        if nab > 0:
+            mi += (nab / n) * math.log((nab / n) / ((pa / n) * (pb / n)))
+    return max(mi, 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n11=st.integers(0, 50),
+    n10=st.integers(0, 50),
+    n01=st.integers(0, 50),
+    n00=st.integers(1, 50),
+)
+def test_mi_pair_matches_scalar_table(n11, n10, n01, n00):
+    n = float(n11 + n10 + n01 + n00)
+    ci = float(n11 + n10)
+    cj = float(n11 + n01)
+    got = np.asarray(
+        model.mi_pair(
+            jnp.full((1, 1), float(n11)),
+            jnp.full((1, 1), ci),
+            jnp.full((1, 1), cj),
+            jnp.full((1, 1), n),
+        )
+    )[0, 0]
+    want = _mi_2x2(n11, n10, n01, n00)
+    assert abs(got - want) < 1e-4, (got, want)
+
+
+def test_mi_identical_variables_is_entropy():
+    # MI(X; X) = H(X); for p=0.5, H = ln 2.
+    n = 1000.0
+    c = 500.0
+    got = np.asarray(
+        model.mi_pair(
+            jnp.full((1, 1), c), jnp.full((1, 1), c), jnp.full((1, 1), c), jnp.full((1, 1), n)
+        )
+    )[0, 0]
+    assert abs(got - math.log(2)) < 1e-4
+
+
+def test_mi_independent_variables_is_zero():
+    # Exactly factorised table: n11/n = (ci/n)(cj/n).
+    got = np.asarray(
+        model.mi_pair(
+            jnp.full((1, 1), 25.0),
+            jnp.full((1, 1), 50.0),
+            jnp.full((1, 1), 50.0),
+            jnp.full((1, 1), 100.0),
+        )
+    )[0, 0]
+    assert abs(got) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_logreg_grad_matches_finite_differences(seed):
+    rng = np.random.default_rng(seed)
+    P, F = 32, 8
+    w = rng.standard_normal((F, 1)).astype(np.float32) * 0.1
+    b = rng.standard_normal((1, 1)).astype(np.float32) * 0.1
+    x = (rng.random((P, F)) < 0.4).astype(np.float32)
+    y = (rng.random((P, 1)) < 0.5).astype(np.float32)
+    mask = np.ones((P, 1), np.float32)
+    mask[P // 2 :] = rng.integers(0, 2, (P - P // 2, 1))
+
+    gw, gb, loss = [np.asarray(v) for v in model.logreg_grad(w, b, x, y, mask)]
+
+    def loss_at(wv, bv):
+        z = x @ wv + bv
+        vec = np.maximum(z, 0) - z * y + np.log1p(np.exp(-np.abs(z)))
+        return float((vec * mask).sum())
+
+    eps = 1e-3
+    for idx in [(0, 0), (F // 2, 0), (F - 1, 0)]:
+        wp = w.copy()
+        wp[idx] += eps
+        wm = w.copy()
+        wm[idx] -= eps
+        fd = (loss_at(wp, b) - loss_at(wm, b)) / (2 * eps)
+        assert abs(fd - gw[idx]) < 5e-2, (idx, fd, gw[idx])
+    fd_b = (loss_at(w, b + eps) - loss_at(w, b - eps)) / (2 * eps)
+    assert abs(fd_b - gb[0, 0]) < 5e-2
+    assert abs(loss[0, 0] - loss_at(w, b)) < 1e-2
+
+
+def test_logreg_predict_probabilities():
+    w = np.array([[10.0], [-10.0]], np.float32)
+    b = np.zeros((1, 1), np.float32)
+    x = np.array([[1, 0], [0, 1], [0, 0]], np.float32)
+    p = np.asarray(model.logreg_predict(w, b, x))
+    assert p[0, 0] > 0.99 and p[1, 0] < 0.01 and abs(p[2, 0] - 0.5) < 1e-6
+
+
+def test_masked_rows_do_not_affect_gradients():
+    rng = np.random.default_rng(0)
+    P, F = 16, 4
+    w = rng.standard_normal((F, 1)).astype(np.float32)
+    b = np.zeros((1, 1), np.float32)
+    x = (rng.random((P, F)) < 0.5).astype(np.float32)
+    y = (rng.random((P, 1)) < 0.5).astype(np.float32)
+    mask = np.ones((P, 1), np.float32)
+    mask[8:] = 0.0
+    g1 = [np.asarray(v) for v in model.logreg_grad(w, b, x, y, mask)]
+    # Garbage in the masked rows must not change anything.
+    x2 = x.copy()
+    x2[8:] = 1.0
+    y2 = y.copy()
+    y2[8:] = 1.0
+    g2 = [np.asarray(v) for v in model.logreg_grad(w, b, x2, y2, mask)]
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(a, c, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_corr_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    P, F = 64, 8
+    x = rng.standard_normal((P, F)).astype(np.float32)
+    t = rng.standard_normal((P, 1)).astype(np.float32)
+    mask = np.ones((P, 1), np.float32)
+    got = np.asarray(model.corr_masked(x, t, mask)).ravel()
+    for f in range(F):
+        want = np.corrcoef(x[:, f], t[:, 0])[0, 1]
+        assert abs(got[f] - want) < 1e-4, (f, got[f], want)
+
+
+def test_corr_masked_ignores_invalid_rows():
+    rng = np.random.default_rng(1)
+    P, F = 32, 4
+    x = rng.standard_normal((P, F)).astype(np.float32)
+    t = rng.standard_normal((P, 1)).astype(np.float32)
+    mask = np.ones((P, 1), np.float32)
+    mask[20:] = 0.0
+    got = np.asarray(model.corr_masked(x, t, mask)).ravel()
+    for f in range(F):
+        want = np.corrcoef(x[:20, f], t[:20, 0])[0, 1]
+        assert abs(got[f] - want) < 1e-4
+
+
+def test_corr_constant_column_is_zero():
+    P = 16
+    x = np.ones((P, 2), np.float32)
+    x[:, 1] = np.arange(P)
+    t = np.arange(P, dtype=np.float32).reshape(P, 1)
+    mask = np.ones((P, 1), np.float32)
+    got = np.asarray(model.corr_masked(x, t, mask)).ravel()
+    assert abs(got[0]) < 1e-6          # constant column → 0 by convention
+    assert abs(got[1] - 1.0) < 1e-4    # perfectly correlated
+
+
+def test_cooc_counts_uses_kernel_and_matches_ref():
+    rng = np.random.default_rng(5)
+    x = (rng.random((model.TILE_ROWS, model.TILE_FEATURES)) < 0.2).astype(np.float32)
+    got = np.asarray(model.cooc_counts(jnp.asarray(x), jnp.asarray(x)))
+    want = np.asarray(ref.cooc_ref(x, x))
+    np.testing.assert_allclose(got, want, atol=0)

@@ -1,0 +1,157 @@
+//! Bench A1 — ablations of the design choices the paper's Discussion
+//! credits for the speedup:
+//!
+//! 1. **numeric vs string encoding** — "a fraction of the speedup is
+//!    achieved by replacing slow string operations … with faster numeric
+//!    ones": mine the same cohort through tSPM+ and through the
+//!    string-based inner loop, same protocol.
+//! 2. **sort-then-scan vs hash screening** — "we at first sorted the
+//!    mined sequences by their sequence ID and then just needed to
+//!    iterate": the paper's screen vs the naive hash-map screen.
+//! 3. **psort vs std sort** — the ips4o-style samplesort substrate vs
+//!    Rust's `sort_unstable_by_key` on the mining pre-sort key.
+//! 4. **duration packing** — bit-shift packing vs tuple comparison for
+//!    duration-aware sorting (the paper's "cheap bitshift operations").
+
+use std::time::Instant;
+
+use tspm_plus::baseline::{self, BaselineConfig};
+use tspm_plus::bench_util::{measure, render_table, rows_to_json, RowStats};
+use tspm_plus::dbmart::{pack_duration, NumericDbMart};
+use tspm_plus::mining::{self, MiningConfig};
+use tspm_plus::rng::Rng;
+use tspm_plus::sparsity::{self, SparsityConfig};
+use tspm_plus::synthea::SyntheaConfig;
+
+fn main() {
+    let iters = std::env::var("TSPM_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let scale = std::env::var("TSPM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    let gen_cfg = SyntheaConfig::mgb_like(scale);
+    let raw = gen_cfg.generate();
+    let db = NumericDbMart::encode(&raw);
+
+    // --- ablation 1: numeric vs string encoding --------------------------
+    let mut rows = Vec::new();
+    rows.push(RowStats::from_samples(
+        "A1.1 numeric encoding (tSPM+ inner loop)",
+        &measure(iters, || {
+            let cfg = MiningConfig { first_occurrence_only: true, ..Default::default() };
+            let set = mining::mine_sequences(&db, &cfg).expect("mine");
+            std::hint::black_box(set.len());
+            set.byte_size()
+        }),
+    ));
+    rows.push(RowStats::from_samples(
+        "A1.1 string encoding (baseline inner loop)",
+        &measure(iters, || {
+            let r = baseline::mine(
+                &raw,
+                &BaselineConfig { first_occurrence_only: true, ..Default::default() },
+            );
+            std::hint::black_box(r.sequences.len());
+            r.logical_bytes
+        }),
+    ));
+
+    // --- ablation 2: sort-then-scan vs hash screening ---------------------
+    let mined = mining::mine_sequences(
+        &db,
+        &MiningConfig { first_occurrence_only: true, ..Default::default() },
+    )
+    .expect("mine");
+    let threshold = (gen_cfg.patients / 100).max(2) as u32;
+    rows.push(RowStats::from_samples(
+        "A1.2 screen: radix sort + compaction (ours)",
+        &measure(iters, || {
+            let mut records = mined.records.clone();
+            sparsity::screen(
+                &mut records,
+                &SparsityConfig { min_patients: threshold, threads: 0 },
+            );
+            std::hint::black_box(records.len());
+            (records.capacity() * 16) as u64
+        }),
+    ));
+    rows.push(RowStats::from_samples(
+        "A1.2 screen: sort-mark-truncate (paper)",
+        &measure(iters, || {
+            let mut records = mined.records.clone();
+            sparsity::screen_paper_strategy(
+                &mut records,
+                &SparsityConfig { min_patients: threshold, threads: 0 },
+            );
+            std::hint::black_box(records.len());
+            (records.capacity() * 16) as u64
+        }),
+    ));
+    rows.push(RowStats::from_samples(
+        "A1.2 screen: hash map (naive)",
+        &measure(iters, || {
+            let mut records = mined.records.clone();
+            sparsity::screen_naive(
+                &mut records,
+                &SparsityConfig { min_patients: threshold, threads: 0 },
+            );
+            std::hint::black_box(records.len());
+            (records.capacity() * 16) as u64
+        }),
+    ));
+
+    // --- ablation 3: psort vs std sort ------------------------------------
+    let sort_input: Vec<u64> = {
+        let mut r = Rng::new(99);
+        (0..4_000_000).map(|_| r.next_u64()).collect()
+    };
+    rows.push(RowStats::from_samples(
+        "A1.3 sort: psort samplesort",
+        &measure(iters, || {
+            let mut v = sort_input.clone();
+            tspm_plus::psort::par_sort_by_key(&mut v, |x| *x, 4);
+            std::hint::black_box(v[0]);
+            (v.capacity() * 8) as u64
+        }),
+    ));
+    rows.push(RowStats::from_samples(
+        "A1.3 sort: std sort_unstable",
+        &measure(iters, || {
+            let mut v = sort_input.clone();
+            v.sort_unstable();
+            std::hint::black_box(v[0]);
+            (v.capacity() * 8) as u64
+        }),
+    ));
+
+    // --- ablation 4: duration packing vs tuple keys ------------------------
+    let recs = mined.records.clone();
+    rows.push(RowStats::from_samples(
+        "A1.4 duration sort: packed u64 key (paper)",
+        &measure(iters, || {
+            let mut v = recs.clone();
+            let t = Instant::now();
+            v.sort_unstable_by_key(|r| pack_duration(r.seq, r.duration));
+            std::hint::black_box(t.elapsed());
+            (v.capacity() * 16) as u64
+        }),
+    ));
+    rows.push(RowStats::from_samples(
+        "A1.4 duration sort: (seq, duration) tuple key",
+        &measure(iters, || {
+            let mut v = recs.clone();
+            v.sort_unstable_by_key(|r| (r.seq, r.duration));
+            std::hint::black_box(v.len());
+            (v.capacity() * 16) as u64
+        }),
+    ));
+
+    print!("{}", render_table("Ablations — design-choice contributions", &rows));
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/ablations.json", rows_to_json(&rows).to_string_pretty())
+        .expect("write bench_results/ablations.json");
+    eprintln!("wrote bench_results/ablations.json");
+}

@@ -1,0 +1,33 @@
+//! Bench T1 — paper Table 1: the comparison benchmark (tSPM vs tSPM+).
+//!
+//! Six rows: original tSPM ± sparsity screening, tSPM+ in-memory and
+//! file-based ± screening. Workload: the MGB-Biobank-like cohort (4,985
+//! patients × ~471 entries at scale 1.0; default scale 0.1 to fit this
+//! testbed, override via `TSPM_BENCH_SCALE`). Iterations default to 3
+//! (`TSPM_BENCH_ITERS`; the paper uses 10).
+//!
+//! Prints the paper-style memory/runtime min/max/avg table plus the
+//! headline speedup and memory-reduction factors, and writes
+//! `bench_results/table1.json`.
+
+use tspm_plus::bench_util::{experiments, rows_to_json};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_f64("TSPM_BENCH_SCALE", 0.1);
+    let iters = env_usize("TSPM_BENCH_ITERS", 3);
+    eprintln!("table1: scale={scale} iterations={iters} (paper: scale=1.0, 10 iters)");
+    let rows = experiments::table1(scale, iters);
+    print!("{}", experiments::table1_report(&rows));
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/table1.json", rows_to_json(&rows).to_string_pretty())
+        .expect("write bench_results/table1.json");
+    eprintln!("wrote bench_results/table1.json");
+}

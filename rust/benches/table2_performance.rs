@@ -1,0 +1,41 @@
+//! Bench T2 — paper Table 2: the performance benchmark (tSPM+ only).
+//!
+//! Four tSPM+ rows (memory/file × ±screening) on the Synthea-COVID-like
+//! cohort (35,000 patients × ~318 entries at scale 1.0; default scale
+//! 0.02 here — the full workload mines ~1.8 G sequences ≈ 28 GB which is
+//! the 256 GB-class run from the paper). Also reproduces the paper's
+//! 100k-patient *failure mode*: the element cap (R's 2³¹−1) is exceeded
+//! and adaptive partitioning is required.
+//!
+//! Env overrides: `TSPM_BENCH_SCALE`, `TSPM_BENCH_ITERS`.
+
+use tspm_plus::bench_util::{experiments, render_table, rows_to_json};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_f64("TSPM_BENCH_SCALE", 0.02);
+    let iters = env_usize("TSPM_BENCH_ITERS", 3);
+    eprintln!("table2: scale={scale} iterations={iters} (paper: scale=1.0, 10 iters)");
+
+    // The overflow prologue (paper: the 100k run "failed due to an error
+    // ... R has a limit of (2^31)-1 entries per vector").
+    let (total, cap, chunks) = experiments::table2_overflow_demo(scale);
+    println!(
+        "overflow gate: {total} predicted sequences vs scaled element cap {cap} \
+         → adaptive partitioning resolves it with {chunks} chunks"
+    );
+
+    let rows = experiments::table2(scale, iters);
+    print!("{}", render_table("Table 2 — performance benchmark (tSPM+)", &rows));
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/table2.json", rows_to_json(&rows).to_string_pretty())
+        .expect("write bench_results/table2.json");
+    eprintln!("wrote bench_results/table2.json");
+}

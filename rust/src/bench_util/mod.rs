@@ -1,0 +1,196 @@
+//! Benchmark harness substrate (the `criterion` stand-in).
+//!
+//! Reproduces the paper's measurement protocol: run each configuration for
+//! N iterations (the paper uses 10), record wall-clock runtime and peak
+//! memory per iteration, and report **min / max / average** — exactly the
+//! columns of the paper's Tables 1 and 2. Peak memory is reported two
+//! ways: the process RSS high-water mark (matches GNU `time`, but is
+//! monotone across configurations in one process) and the engine's logical
+//! peak from [`crate::metrics::MemTracker`] (byte-accurate per run, the
+//! number we compare against the paper).
+
+use crate::metrics::{fmt_bytes, fmt_duration};
+use std::time::{Duration, Instant};
+
+pub mod experiments;
+
+/// One measured iteration.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub elapsed: Duration,
+    /// Logical peak bytes held by the engine during the iteration.
+    pub peak_bytes: u64,
+}
+
+/// Aggregated stats for one benchmark row.
+#[derive(Clone, Debug)]
+pub struct RowStats {
+    pub label: String,
+    pub iterations: usize,
+    pub time_min: Duration,
+    pub time_max: Duration,
+    pub time_avg: Duration,
+    pub mem_min: u64,
+    pub mem_max: u64,
+    pub mem_avg: u64,
+}
+
+impl RowStats {
+    pub fn from_samples(label: &str, samples: &[Sample]) -> RowStats {
+        assert!(!samples.is_empty(), "no samples for row {label}");
+        let n = samples.len();
+        let times: Vec<Duration> = samples.iter().map(|s| s.elapsed).collect();
+        let mems: Vec<u64> = samples.iter().map(|s| s.peak_bytes).collect();
+        RowStats {
+            label: label.to_string(),
+            iterations: n,
+            time_min: *times.iter().min().unwrap(),
+            time_max: *times.iter().max().unwrap(),
+            time_avg: times.iter().sum::<Duration>() / n as u32,
+            mem_min: *mems.iter().min().unwrap(),
+            mem_max: *mems.iter().max().unwrap(),
+            mem_avg: mems.iter().sum::<u64>() / n as u64,
+        }
+    }
+}
+
+/// Run `iters` timed iterations of `f`, which returns the logical peak
+/// bytes it observed (0 if not tracked).
+pub fn measure<F: FnMut() -> u64>(iters: usize, mut f: F) -> Vec<Sample> {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        let peak = f();
+        samples.push(Sample { elapsed: start.elapsed(), peak_bytes: peak });
+    }
+    samples
+}
+
+/// Render rows as the paper-style table:
+/// memory (min/max/avg) and runtime (min/max/avg) per implementation row.
+pub fn render_table(title: &str, rows: &[RowStats]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<44} | {:>10} {:>10} {:>10} | {:>12} {:>12} {:>12}\n",
+        "Implementation", "Mem min", "Mem max", "Mem avg", "Time min", "Time max", "Time avg"
+    ));
+    out.push_str(&"-".repeat(44 + 3 + 32 + 3 + 38 + 2));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{:<44} | {:>10} {:>10} {:>10} | {:>12} {:>12} {:>12}\n",
+            r.label,
+            fmt_bytes(r.mem_min),
+            fmt_bytes(r.mem_max),
+            fmt_bytes(r.mem_avg),
+            fmt_duration(r.time_min),
+            fmt_duration(r.time_max),
+            fmt_duration(r.time_avg),
+        ));
+    }
+    out
+}
+
+/// Compute `baseline/current` speedup and memory-reduction factors between
+/// two rows (the paper's "speedup by factor ~920", "~48-fold memory").
+pub fn factors(baseline: &RowStats, current: &RowStats) -> (f64, f64) {
+    let speedup = baseline.time_avg.as_secs_f64() / current.time_avg.as_secs_f64().max(1e-9);
+    let memfold = baseline.mem_avg as f64 / (current.mem_avg as f64).max(1.0);
+    (speedup, memfold)
+}
+
+/// Write a machine-readable copy of the rows next to the human table so
+/// EXPERIMENTS.md can quote exact numbers.
+pub fn rows_to_json(rows: &[RowStats]) -> crate::json::Json {
+    use crate::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::from(r.label.clone())),
+                    ("iterations", Json::from(r.iterations)),
+                    ("time_min_s", Json::from(r.time_min.as_secs_f64())),
+                    ("time_max_s", Json::from(r.time_max.as_secs_f64())),
+                    ("time_avg_s", Json::from(r.time_avg.as_secs_f64())),
+                    ("mem_min_bytes", Json::from(r.mem_min)),
+                    ("mem_max_bytes", Json::from(r.mem_max)),
+                    ("mem_avg_bytes", Json::from(r.mem_avg)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_min_max_avg() {
+        let samples = vec![
+            Sample { elapsed: Duration::from_millis(10), peak_bytes: 100 },
+            Sample { elapsed: Duration::from_millis(20), peak_bytes: 300 },
+            Sample { elapsed: Duration::from_millis(30), peak_bytes: 200 },
+        ];
+        let r = RowStats::from_samples("x", &samples);
+        assert_eq!(r.time_min, Duration::from_millis(10));
+        assert_eq!(r.time_max, Duration::from_millis(30));
+        assert_eq!(r.time_avg, Duration::from_millis(20));
+        assert_eq!(r.mem_min, 100);
+        assert_eq!(r.mem_max, 300);
+        assert_eq!(r.mem_avg, 200);
+    }
+
+    #[test]
+    fn measure_runs_exactly_n() {
+        let mut count = 0;
+        let samples = measure(7, || {
+            count += 1;
+            count as u64
+        });
+        assert_eq!(samples.len(), 7);
+        assert_eq!(count, 7);
+        assert_eq!(samples.last().unwrap().peak_bytes, 7);
+    }
+
+    #[test]
+    fn factors_ratio() {
+        let base = RowStats {
+            label: "tSPM".into(),
+            iterations: 1,
+            time_min: Duration::from_secs(100),
+            time_max: Duration::from_secs(100),
+            time_avg: Duration::from_secs(100),
+            mem_min: 48_000,
+            mem_max: 48_000,
+            mem_avg: 48_000,
+        };
+        let cur = RowStats {
+            label: "tSPM+".into(),
+            iterations: 1,
+            time_min: Duration::from_secs(1),
+            time_max: Duration::from_secs(1),
+            time_avg: Duration::from_secs(1),
+            mem_min: 1_000,
+            mem_max: 1_000,
+            mem_avg: 1_000,
+        };
+        let (speed, mem) = factors(&base, &cur);
+        assert!((speed - 100.0).abs() < 1e-9);
+        assert!((mem - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_contains_rows_and_json_roundtrips() {
+        let rows = vec![RowStats::from_samples(
+            "tSPM+ file no-screen",
+            &[Sample { elapsed: Duration::from_millis(14), peak_bytes: 1 << 30 }],
+        )];
+        let table = render_table("Table 1", &rows);
+        assert!(table.contains("tSPM+ file no-screen"));
+        assert!(table.contains("1.00 GiB"));
+        let j = rows_to_json(&rows).to_string_pretty();
+        assert!(crate::json::Json::parse(&j).is_ok());
+    }
+}

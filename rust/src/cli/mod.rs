@@ -1,0 +1,226 @@
+//! Command-line parsing substrate (the `clap` stand-in).
+//!
+//! Supports the subset of conventions the `tspm` launcher needs:
+//! subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, required-argument errors, and
+//! an auto-generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the option is a boolean flag (takes no value).
+    pub is_flag: bool,
+    /// Default value rendered in help; `None` means required or flag.
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl OptSpec {
+    pub fn value(name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        OptSpec { name, help, is_flag: false, default, required: false }
+    }
+
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, is_flag: false, default: None, required: true }
+    }
+
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, is_flag: true, default: None, required: false }
+    }
+}
+
+/// Parse / validation error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand name) against `spec`.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let find = |name: &str| spec.iter().find(|o| o.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = find(name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    args.flags.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for opt in spec {
+            if opt.required && !args.values.contains_key(opt.name) {
+                return Err(CliError(format!("missing required option --{}", opt.name)));
+            }
+            if let (Some(d), false) = (opt.default, args.values.contains_key(opt.name)) {
+                args.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("invalid value for --{name}: {v:?}"))),
+        }
+    }
+
+    /// Typed accessor that must resolve (option had a default or was given).
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        self.get_parsed::<T>(name)?
+            .ok_or_else(|| CliError(format!("missing --{name}")))
+    }
+}
+
+/// Render a usage/help block for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\noptions:\n");
+    for o in spec {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <value>", o.name)
+        };
+        let mut line = format!("{head:<32} {}", o.help);
+        if let Some(d) = o.default {
+            line.push_str(&format!(" [default: {d}]"));
+        }
+        if o.required {
+            line.push_str(" [required]");
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec::value("patients", Some("100"), "cohort size"),
+            OptSpec::required("out", "output path"),
+            OptSpec::flag("verbose", "noisy logging"),
+            OptSpec::value("mode", Some("memory"), "memory|file"),
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(
+            &sv(&["--patients", "500", "--out=/tmp/x", "--verbose", "pos1"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.req::<u64>("patients").unwrap(), 500);
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&sv(&["--out", "o"]), &spec()).unwrap();
+        assert_eq!(a.req::<u64>("patients").unwrap(), 100);
+        assert_eq!(a.get("mode"), Some("memory"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let err = Args::parse(&sv(&["--patients", "5"]), &spec()).unwrap_err();
+        assert!(err.0.contains("--out"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope", "1", "--out", "o"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn value_option_missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--out"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=1", "--out", "o"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_rejected() {
+        let a = Args::parse(&sv(&["--patients", "abc", "--out", "o"]), &spec()).unwrap();
+        assert!(a.req::<u64>("patients").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all_options() {
+        let u = usage("mine", "mine sequences", &spec());
+        for name in ["patients", "out", "verbose", "mode"] {
+            assert!(u.contains(name));
+        }
+        assert!(u.contains("[required]"));
+        assert!(u.contains("[default: 100]"));
+    }
+}

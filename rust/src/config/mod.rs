@@ -1,0 +1,263 @@
+//! Run configuration: a single JSON-backed config object shared by the CLI,
+//! examples and benchmarks.
+//!
+//! The original system spreads configuration over R function arguments;
+//! here a [`RunConfig`] captures the full pipeline surface (workload,
+//! mining, sparsity, partitioning, artifact paths) with validated loading
+//! from JSON and round-trip serialization, so every experiment is
+//! reproducible from a checked-in config file.
+
+use crate::json::Json;
+use std::fmt;
+use std::path::Path;
+
+/// Errors from loading/validating a config.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    // --- workload ---
+    /// Number of synthetic patients to generate (when no input file given).
+    pub patients: u64,
+    /// Target average entries per patient.
+    pub avg_entries: f64,
+    /// Number of distinct phenX codes in the vocabulary.
+    pub vocab_size: u64,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    // --- mining ---
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Keep only the first occurrence of each phenX per patient
+    /// (the paper's comparison-benchmark protocol).
+    pub first_occurrence_only: bool,
+    /// `memory` or `file` operating mode.
+    pub mode: String,
+    /// Duration unit divisor in days (1 = days, 7 = weeks, 30 = months).
+    pub duration_unit_days: u32,
+    // --- sparsity ---
+    /// Apply the sparsity screen after mining.
+    pub sparsity_screen: bool,
+    /// Minimum number of distinct patients a sequence must occur in.
+    pub sparsity_min_patients: u32,
+    // --- partitioning ---
+    /// Cap on elements per chunk (paper: R's 2^31-1 vector limit).
+    pub max_elements_per_chunk: u64,
+    // --- paths ---
+    /// Directory holding AOT-compiled HLO artifacts.
+    pub artifacts_dir: String,
+    /// Scratch directory for file-based mode.
+    pub work_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            patients: 1000,
+            avg_entries: 400.0,
+            vocab_size: 5_000,
+            seed: 20231107,
+            threads: 0,
+            first_occurrence_only: false,
+            mode: "memory".to_string(),
+            duration_unit_days: 1,
+            sparsity_screen: true,
+            sparsity_min_patients: 50,
+            max_elements_per_chunk: (1u64 << 31) - 1,
+            artifacts_dir: "artifacts".to_string(),
+            work_dir: "/tmp/tspm_work".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("patients", Json::from(self.patients)),
+            ("avg_entries", Json::from(self.avg_entries)),
+            ("vocab_size", Json::from(self.vocab_size)),
+            ("seed", Json::from(self.seed)),
+            ("threads", Json::from(self.threads)),
+            ("first_occurrence_only", Json::from(self.first_occurrence_only)),
+            ("mode", Json::from(self.mode.clone())),
+            ("duration_unit_days", Json::from(self.duration_unit_days as u64)),
+            ("sparsity_screen", Json::from(self.sparsity_screen)),
+            ("sparsity_min_patients", Json::from(self.sparsity_min_patients as u64)),
+            ("max_elements_per_chunk", Json::from(self.max_elements_per_chunk)),
+            ("artifacts_dir", Json::from(self.artifacts_dir.clone())),
+            ("work_dir", Json::from(self.work_dir.clone())),
+        ])
+    }
+
+    /// Parse from a JSON value; unknown keys are rejected (typo guard),
+    /// missing keys fall back to defaults.
+    pub fn from_json(j: &Json) -> Result<RunConfig, ConfigError> {
+        let obj = j.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
+        let known = [
+            "patients", "avg_entries", "vocab_size", "seed", "threads",
+            "first_occurrence_only", "mode", "duration_unit_days",
+            "sparsity_screen", "sparsity_min_patients", "max_elements_per_chunk",
+            "artifacts_dir", "work_dir",
+        ];
+        for k in obj.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(ConfigError(format!("unknown config key {k:?}")));
+            }
+        }
+        let mut c = RunConfig::default();
+        macro_rules! get_u64 {
+            ($field:ident, $key:literal) => {
+                if let Some(v) = j.get($key) {
+                    c.$field = v
+                        .as_u64()
+                        .ok_or_else(|| ConfigError(format!("{} must be a non-negative integer", $key)))?
+                        as _;
+                }
+            };
+        }
+        get_u64!(patients, "patients");
+        get_u64!(vocab_size, "vocab_size");
+        get_u64!(seed, "seed");
+        get_u64!(threads, "threads");
+        get_u64!(duration_unit_days, "duration_unit_days");
+        get_u64!(sparsity_min_patients, "sparsity_min_patients");
+        get_u64!(max_elements_per_chunk, "max_elements_per_chunk");
+        if let Some(v) = j.get("avg_entries") {
+            c.avg_entries = v
+                .as_f64()
+                .ok_or_else(|| ConfigError("avg_entries must be a number".into()))?;
+        }
+        if let Some(v) = j.get("first_occurrence_only") {
+            c.first_occurrence_only =
+                v.as_bool().ok_or_else(|| ConfigError("first_occurrence_only must be a bool".into()))?;
+        }
+        if let Some(v) = j.get("sparsity_screen") {
+            c.sparsity_screen =
+                v.as_bool().ok_or_else(|| ConfigError("sparsity_screen must be a bool".into()))?;
+        }
+        if let Some(v) = j.get("mode") {
+            c.mode = v.as_str().ok_or_else(|| ConfigError("mode must be a string".into()))?.to_string();
+        }
+        if let Some(v) = j.get("artifacts_dir") {
+            c.artifacts_dir =
+                v.as_str().ok_or_else(|| ConfigError("artifacts_dir must be a string".into()))?.to_string();
+        }
+        if let Some(v) = j.get("work_dir") {
+            c.work_dir =
+                v.as_str().ok_or_else(|| ConfigError("work_dir must be a string".into()))?.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<RunConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("cannot read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| ConfigError(e.to_string()))?;
+        Self::from_json(&j)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<(), ConfigError> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| ConfigError(format!("cannot write {}: {e}", path.display())))
+    }
+
+    /// Semantic validation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.mode != "memory" && self.mode != "file" {
+            return Err(ConfigError(format!("mode must be 'memory' or 'file', got {:?}", self.mode)));
+        }
+        if self.patients == 0 {
+            return Err(ConfigError("patients must be > 0".into()));
+        }
+        if self.avg_entries <= 0.0 {
+            return Err(ConfigError("avg_entries must be > 0".into()));
+        }
+        if self.vocab_size == 0 || self.vocab_size >= crate::dbmart::MAX_PHENX as u64 {
+            return Err(ConfigError(format!(
+                "vocab_size must be in 1..{} (7-decimal-digit phenX encoding)",
+                crate::dbmart::MAX_PHENX
+            )));
+        }
+        if self.duration_unit_days == 0 {
+            return Err(ConfigError("duration_unit_days must be > 0".into()));
+        }
+        if self.max_elements_per_chunk == 0 {
+            return Err(ConfigError("max_elements_per_chunk must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.patients = 4985;
+        c.avg_entries = 471.0;
+        c.mode = "file".into();
+        c.sparsity_screen = false;
+        let j = c.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"patiens": 5}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.0.contains("patiens"));
+    }
+
+    #[test]
+    fn bad_mode_rejected() {
+        let j = Json::parse(r#"{"mode": "gpu"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn vocab_limit_enforced() {
+        let j = Json::parse(r#"{"vocab_size": 10000000}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "phenX ids must fit 7 digits");
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"patients": 7}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.patients, 7);
+        assert_eq!(c.vocab_size, RunConfig::default().vocab_size);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tspm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let c = RunConfig::default();
+        c.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back, c);
+    }
+}

@@ -1,0 +1,186 @@
+//! Discretization of continuous clinical values into phenX range codes.
+//!
+//! The paper lists non-discrete data as tSPM+'s main limitation and
+//! suggests the standard workaround: "creating a new phenX for different
+//! ranges". This module implements that workaround as a first-class
+//! feature (the paper's future-work item): fixed-width, quantile and
+//! custom-boundary binning of `(patient, date, value)` measurements into
+//! synthetic phenX codes like `weight[75,80)`.
+
+use super::{DbMart, DbMartEntry};
+
+/// Binning strategy for one continuous variable.
+#[derive(Clone, Debug)]
+pub enum Binning {
+    /// `k` equal-width bins between observed min and max.
+    EqualWidth(usize),
+    /// `k` (approximate) equal-population bins from sample quantiles.
+    Quantile(usize),
+    /// Explicit ascending interior boundaries; values below the first go
+    /// to bin 0, above the last to bin `len`.
+    Boundaries(Vec<f64>),
+}
+
+/// A continuous measurement to discretize.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub patient_id: String,
+    pub date: i32,
+    pub value: f64,
+}
+
+/// Compute the interior bin boundaries for `values` under `binning`.
+pub fn boundaries(values: &[f64], binning: &Binning) -> Vec<f64> {
+    match binning {
+        Binning::Boundaries(b) => {
+            assert!(
+                b.windows(2).all(|w| w[0] < w[1]),
+                "custom boundaries must be strictly ascending"
+            );
+            b.clone()
+        }
+        Binning::EqualWidth(k) => {
+            assert!(*k >= 1, "need at least one bin");
+            if values.is_empty() || *k == 1 {
+                return Vec::new();
+            }
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &v in values {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if lo >= hi {
+                return Vec::new();
+            }
+            let w = (hi - lo) / *k as f64;
+            (1..*k).map(|i| lo + w * i as f64).collect()
+        }
+        Binning::Quantile(k) => {
+            assert!(*k >= 1, "need at least one bin");
+            if values.is_empty() || *k == 1 {
+                return Vec::new();
+            }
+            let mut sorted = values.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut out = Vec::with_capacity(k - 1);
+            for i in 1..*k {
+                let pos = i * sorted.len() / k;
+                let b = sorted[pos.min(sorted.len() - 1)];
+                if out.last().map_or(true, |&prev| b > prev) {
+                    out.push(b);
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Bin index of `value` given interior `bounds` (ascending).
+pub fn bin_index(value: f64, bounds: &[f64]) -> usize {
+    bounds.partition_point(|&b| b <= value)
+}
+
+/// Human-readable phenX code for bin `idx` of variable `name`.
+pub fn bin_phenx(name: &str, idx: usize, bounds: &[f64]) -> String {
+    let lo = if idx == 0 { "-inf".to_string() } else { format!("{:.4}", bounds[idx - 1]) };
+    let hi = if idx == bounds.len() { "inf".to_string() } else { format!("{:.4}", bounds[idx]) };
+    format!("{name}[{lo},{hi})")
+}
+
+/// Discretize measurements of variable `name` and append them to `mart`
+/// as synthetic phenX rows. Returns the boundaries used.
+pub fn discretize_into(
+    mart: &mut DbMart,
+    name: &str,
+    measurements: &[Measurement],
+    binning: &Binning,
+) -> Vec<f64> {
+    let values: Vec<f64> = measurements.iter().map(|m| m.value).collect();
+    let bounds = boundaries(&values, binning);
+    for m in measurements {
+        let idx = bin_index(m.value, &bounds);
+        mart.entries.push(DbMartEntry {
+            patient_id: m.patient_id.clone(),
+            date: m.date,
+            phenx: bin_phenx(name, idx, &bounds),
+            description: Some(format!("{name} measurement bin {idx}")),
+        });
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_width_bounds() {
+        let vals = [0.0, 10.0];
+        let b = boundaries(&vals, &Binning::EqualWidth(4));
+        assert_eq!(b, vec![2.5, 5.0, 7.5]);
+    }
+
+    #[test]
+    fn equal_width_degenerate() {
+        assert!(boundaries(&[5.0, 5.0], &Binning::EqualWidth(4)).is_empty());
+        assert!(boundaries(&[], &Binning::EqualWidth(4)).is_empty());
+        assert!(boundaries(&[1.0, 2.0], &Binning::EqualWidth(1)).is_empty());
+    }
+
+    #[test]
+    fn quantile_bounds_split_population() {
+        let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let b = boundaries(&vals, &Binning::Quantile(4));
+        assert_eq!(b.len(), 3);
+        // Counts per bin should be near 25.
+        let mut counts = vec![0usize; 4];
+        for &v in &vals {
+            counts[bin_index(v, &b)] += 1;
+        }
+        for c in counts {
+            assert!((20..=30).contains(&c), "unbalanced bin: {c}");
+        }
+    }
+
+    #[test]
+    fn quantile_dedups_on_ties() {
+        let vals = vec![1.0; 50];
+        let b = boundaries(&vals, &Binning::Quantile(5));
+        assert!(b.len() <= 1);
+    }
+
+    #[test]
+    fn bin_index_edges() {
+        let b = vec![10.0, 20.0];
+        assert_eq!(bin_index(5.0, &b), 0);
+        assert_eq!(bin_index(10.0, &b), 1); // boundary goes right
+        assert_eq!(bin_index(15.0, &b), 1);
+        assert_eq!(bin_index(25.0, &b), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn custom_bounds_must_ascend() {
+        boundaries(&[1.0], &Binning::Boundaries(vec![5.0, 3.0]));
+    }
+
+    #[test]
+    fn discretize_appends_phenx_rows() {
+        let mut mart = DbMart::default();
+        let ms = vec![
+            Measurement { patient_id: "p1".into(), date: 1, value: 72.0 },
+            Measurement { patient_id: "p1".into(), date: 30, value: 81.0 },
+            Measurement { patient_id: "p2".into(), date: 2, value: 95.0 },
+        ];
+        let bounds =
+            discretize_into(&mut mart, "weight", &ms, &Binning::Boundaries(vec![75.0, 90.0]));
+        assert_eq!(bounds, vec![75.0, 90.0]);
+        assert_eq!(mart.len(), 3);
+        assert_eq!(mart.entries[0].phenx, "weight[-inf,75.0000)");
+        assert_eq!(mart.entries[1].phenx, "weight[75.0000,90.0000)");
+        assert_eq!(mart.entries[2].phenx, "weight[90.0000,inf)");
+        // Same variable+bin maps to the same phenX string → interns to one id.
+        let n = crate::dbmart::NumericDbMart::encode(&mart);
+        assert_eq!(n.num_phenx(), 3);
+    }
+}

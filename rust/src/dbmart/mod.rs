@@ -1,0 +1,510 @@
+//! The `dbmart` data model: MLHO-format clinical tables, numeric encoding
+//! with lookup tables, and the paper's reversible sequence hash.
+//!
+//! A dbmart (MLHO format) is a table of `(patient_num, date, phenx)` rows
+//! — `phenx` being any clinical representation (diagnosis code, medication,
+//! lab bucket…). tSPM+ interns patients and phenX codes to dense `u32`
+//! ids starting at 0 and works exclusively on the numeric form; lookup
+//! tables translate results back to the original strings (paper §Methods).
+//!
+//! The sequence hash (paper Fig. 2): a pair `(start, end)` of phenX ids is
+//! encoded as the decimal concatenation `start * 10^7 + end` in a `u64` —
+//! reversible, human-readable, and totally ordered first by start then by
+//! end. phenX ids must therefore be `< 10^7` ([`MAX_PHENX`]).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+pub mod discretize;
+
+/// Exclusive upper bound on phenX ids: the end id is zero-padded to 7
+/// decimal digits inside the sequence hash.
+pub const MAX_PHENX: u32 = 10_000_000;
+
+/// Multiplier that shifts the start phenX left of the 7 end digits.
+pub const SEQ_SHIFT: u64 = 10_000_000;
+
+/// One raw (string-typed) dbmart row in MLHO format.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DbMartEntry {
+    pub patient_id: String,
+    /// Days since an arbitrary epoch (MLHO stores dates; days keep the
+    /// model simple and match the paper's day-denominated durations).
+    pub date: i32,
+    pub phenx: String,
+    /// Optional human description; discarded in preprocessing (paper:
+    /// "the tSPM algorithm either discards the description column…").
+    pub description: Option<String>,
+}
+
+/// A raw dbmart: rows plus optional provenance.
+#[derive(Clone, Debug, Default)]
+pub struct DbMart {
+    pub entries: Vec<DbMartEntry>,
+}
+
+impl DbMart {
+    pub fn new(entries: Vec<DbMartEntry>) -> Self {
+        DbMart { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Read a CSV file with header `patient_num,start_date,phenx[,description]`.
+    /// Dates are integer day offsets or `YYYY-MM-DD`.
+    pub fn read_csv(path: &Path) -> std::io::Result<DbMart> {
+        let f = std::fs::File::open(path)?;
+        let mut reader = BufReader::new(f);
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let cols: Vec<&str> = header.trim().split(',').collect();
+        let find = |name: &str| cols.iter().position(|c| c.eq_ignore_ascii_case(name));
+        let pi = find("patient_num")
+            .ok_or_else(|| bad_data("missing patient_num column"))?;
+        let di = find("start_date")
+            .or_else(|| find("date"))
+            .ok_or_else(|| bad_data("missing start_date column"))?;
+        let xi = find("phenx").ok_or_else(|| bad_data("missing phenx column"))?;
+        let desci = find("description");
+        let mut entries = Vec::new();
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            let need = pi.max(di).max(xi);
+            if fields.len() <= need {
+                return Err(bad_data(&format!("line {}: too few fields", lineno + 2)));
+            }
+            let date = parse_date(fields[di].trim())
+                .ok_or_else(|| bad_data(&format!("line {}: bad date {:?}", lineno + 2, fields[di])))?;
+            entries.push(DbMartEntry {
+                patient_id: fields[pi].trim().to_string(),
+                date,
+                phenx: fields[xi].trim().to_string(),
+                description: desci
+                    .and_then(|i| fields.get(i))
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty()),
+            });
+        }
+        Ok(DbMart { entries })
+    }
+
+    /// Write as CSV (descriptions included when present).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "patient_num,start_date,phenx,description")?;
+        for e in &self.entries {
+            writeln!(
+                w,
+                "{},{},{},{}",
+                e.patient_id,
+                e.date,
+                e.phenx,
+                e.description.as_deref().unwrap_or("")
+            )?;
+        }
+        w.flush()
+    }
+}
+
+fn bad_data(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Parse an integer day offset or an ISO `YYYY-MM-DD` date to days since
+/// 1970-01-01 (proleptic Gregorian, civil-days algorithm).
+pub fn parse_date(s: &str) -> Option<i32> {
+    if let Ok(v) = s.parse::<i32>() {
+        return Some(v);
+    }
+    let mut parts = s.split('-');
+    let y: i64 = parts.next()?.parse().ok()?;
+    let m: u32 = parts.next()?.parse().ok()?;
+    let d: u32 = parts.next()?.parse().ok()?;
+    if parts.next().is_some() || !(1..=12).contains(&m) || !(1..=31).contains(&d) {
+        return None;
+    }
+    Some(days_from_civil(y, m, d))
+}
+
+/// Howard Hinnant's `days_from_civil`: days since 1970-01-01.
+pub fn days_from_civil(y: i64, m: u32, d: u32) -> i32 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = (y - era * 400) as i64;
+    let mp = ((m + 9) % 12) as i64;
+    let doy = (153 * mp + 2) / 5 + d as i64 - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    (era * 146_097 + doe - 719_468) as i32
+}
+
+/// One numeric dbmart row (the working representation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NumericEntry {
+    pub patient: u32,
+    pub date: i32,
+    pub phenx: u32,
+}
+
+/// Lookup tables mapping dense numeric ids back to the original strings.
+#[derive(Clone, Debug, Default)]
+pub struct LookupTables {
+    pub patients: Vec<String>,
+    pub phenx: Vec<String>,
+    /// Optional phenX descriptions aligned with `phenx`.
+    pub descriptions: Vec<Option<String>>,
+}
+
+impl LookupTables {
+    pub fn patient_name(&self, id: u32) -> &str {
+        &self.patients[id as usize]
+    }
+
+    pub fn phenx_name(&self, id: u32) -> &str {
+        &self.phenx[id as usize]
+    }
+
+    pub fn phenx_description(&self, id: u32) -> Option<&str> {
+        self.descriptions.get(id as usize).and_then(|d| d.as_deref())
+    }
+
+    /// Reverse lookup (linear; only used in tests/examples).
+    pub fn phenx_id(&self, name: &str) -> Option<u32> {
+        self.phenx.iter().position(|p| p == name).map(|i| i as u32)
+    }
+
+    /// Serialize to JSON (the R package writes lookup tables next to the
+    /// mined sequences so results stay translatable).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::obj(vec![
+            (
+                "patients",
+                Json::Arr(self.patients.iter().map(|p| Json::from(p.clone())).collect()),
+            ),
+            (
+                "phenx",
+                Json::Arr(self.phenx.iter().map(|p| Json::from(p.clone())).collect()),
+            ),
+            (
+                "descriptions",
+                Json::Arr(
+                    self.descriptions
+                        .iter()
+                        .map(|d| match d {
+                            Some(s) => Json::from(s.clone()),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &crate::json::Json) -> Option<LookupTables> {
+        let patients = j
+            .get("patients")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()?;
+        let phenx = j
+            .get("phenx")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()?;
+        let descriptions = match j.get("descriptions") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|v| match v {
+                    crate::json::Json::Null => Some(None),
+                    other => other.as_str().map(|s| Some(s.to_string())),
+                })
+                .collect::<Option<Vec<_>>>()?,
+            None => vec![None; phenx.len()],
+        };
+        Some(LookupTables { patients, phenx, descriptions })
+    }
+}
+
+/// A fully numeric dbmart: interned entries plus lookup tables.
+#[derive(Clone, Debug, Default)]
+pub struct NumericDbMart {
+    pub entries: Vec<NumericEntry>,
+    pub lookup: LookupTables,
+}
+
+/// Error for encoding failures (phenX vocabulary overflow).
+#[derive(Debug)]
+pub struct EncodeError(pub String);
+
+impl fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "encode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
+impl NumericDbMart {
+    /// Intern a raw dbmart to the numeric representation.
+    ///
+    /// Ids are assigned in first-appearance order starting at 0 (paper:
+    /// "we assign a running number, starting from 0, to each unique phenX
+    /// and patient ID"). Descriptions, when present, are captured into the
+    /// lookup table and dropped from the working set.
+    pub fn encode(raw: &DbMart) -> NumericDbMart {
+        Self::try_encode(raw).expect("phenX vocabulary exceeds 7-digit limit")
+    }
+
+    /// Like [`NumericDbMart::encode`] but surfaces the vocabulary-overflow
+    /// error instead of panicking.
+    pub fn try_encode(raw: &DbMart) -> Result<NumericDbMart, EncodeError> {
+        let mut patient_ids: HashMap<&str, u32> = HashMap::new();
+        let mut phenx_ids: HashMap<&str, u32> = HashMap::new();
+        let mut lookup = LookupTables::default();
+        let mut entries = Vec::with_capacity(raw.entries.len());
+        for e in &raw.entries {
+            let pid = *patient_ids.entry(&e.patient_id).or_insert_with(|| {
+                lookup.patients.push(e.patient_id.clone());
+                (lookup.patients.len() - 1) as u32
+            });
+            let xid = match phenx_ids.get(e.phenx.as_str()) {
+                Some(&x) => {
+                    // Backfill a description if an earlier row lacked one.
+                    if lookup.descriptions[x as usize].is_none() {
+                        if let Some(d) = &e.description {
+                            lookup.descriptions[x as usize] = Some(d.clone());
+                        }
+                    }
+                    x
+                }
+                None => {
+                    let x = lookup.phenx.len() as u32;
+                    if x >= MAX_PHENX {
+                        return Err(EncodeError(format!(
+                            "more than {MAX_PHENX} distinct phenX codes; the 7-digit sequence hash cannot represent this vocabulary"
+                        )));
+                    }
+                    phenx_ids.insert(&e.phenx, x);
+                    lookup.phenx.push(e.phenx.clone());
+                    lookup.descriptions.push(e.description.clone());
+                    x
+                }
+            };
+            entries.push(NumericEntry { patient: pid, date: e.date, phenx: xid });
+        }
+        Ok(NumericDbMart { entries, lookup })
+    }
+
+    pub fn num_patients(&self) -> usize {
+        self.lookup.patients.len()
+    }
+
+    pub fn num_phenx(&self) -> usize {
+        self.lookup.phenx.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Logical size in bytes of the numeric working set.
+    pub fn byte_size(&self) -> u64 {
+        (self.entries.len() * std::mem::size_of::<NumericEntry>()) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequence hash (paper Fig. 2)
+// ---------------------------------------------------------------------------
+
+/// Encode a (start, end) phenX pair as the paper's reversible decimal hash.
+#[inline]
+pub fn encode_seq(start: u32, end: u32) -> u64 {
+    debug_assert!(start < MAX_PHENX && end < MAX_PHENX);
+    start as u64 * SEQ_SHIFT + end as u64
+}
+
+/// Decode a sequence hash back to its (start, end) phenX pair.
+#[inline]
+pub fn decode_seq(seq: u64) -> (u32, u32) {
+    ((seq / SEQ_SHIFT) as u32, (seq % SEQ_SHIFT) as u32)
+}
+
+/// Pack a duration (in the configured unit) into the low bits of a
+/// combined value: `seq << DUR_BITS | min(duration, DUR_MASK)`.
+///
+/// The paper: "we utilize cheap bitshift operations to shift the duration
+/// on the last bits of the sequence" for duration-aware helpers. 14 bits
+/// hold durations up to ~44.8 years in days.
+pub const DUR_BITS: u32 = 14;
+pub const DUR_MASK: u64 = (1 << DUR_BITS) - 1;
+
+#[inline]
+pub fn pack_duration(seq: u64, duration: u32) -> u64 {
+    debug_assert!(seq < (1u64 << (64 - DUR_BITS)), "sequence hash too large to pack");
+    (seq << DUR_BITS) | (duration as u64).min(DUR_MASK)
+}
+
+#[inline]
+pub fn unpack_duration(packed: u64) -> (u64, u32) {
+    (packed >> DUR_BITS, (packed & DUR_MASK) as u32)
+}
+
+/// Render a sequence hash in the paper's human-readable zero-padded form,
+/// e.g. `42 → 0000042` gives `"12-0000042"` for start 12, end 42.
+pub fn format_seq(seq: u64) -> String {
+    let (s, e) = decode_seq(seq);
+    format!("{s}-{e:07}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(p: &str, date: i32, x: &str) -> DbMartEntry {
+        DbMartEntry {
+            patient_id: p.to_string(),
+            date,
+            phenx: x.to_string(),
+            description: None,
+        }
+    }
+
+    #[test]
+    fn encode_assigns_running_numbers_from_zero() {
+        let raw = DbMart::new(vec![
+            entry("alice", 10, "covid"),
+            entry("bob", 11, "fatigue"),
+            entry("alice", 12, "covid"),
+            entry("carol", 13, "cough"),
+        ]);
+        let n = NumericDbMart::encode(&raw);
+        assert_eq!(n.lookup.patients, vec!["alice", "bob", "carol"]);
+        assert_eq!(n.lookup.phenx, vec!["covid", "fatigue", "cough"]);
+        assert_eq!(n.entries[0], NumericEntry { patient: 0, date: 10, phenx: 0 });
+        assert_eq!(n.entries[2], NumericEntry { patient: 0, date: 12, phenx: 0 });
+        assert_eq!(n.entries[3], NumericEntry { patient: 2, date: 13, phenx: 2 });
+    }
+
+    #[test]
+    fn encode_captures_descriptions() {
+        let mut e1 = entry("p", 1, "x");
+        e1.description = None;
+        let mut e2 = entry("p", 2, "x");
+        e2.description = Some("a code".into());
+        let n = NumericDbMart::encode(&DbMart::new(vec![e1, e2]));
+        assert_eq!(n.lookup.phenx_description(0), Some("a code"));
+    }
+
+    #[test]
+    fn seq_hash_roundtrip() {
+        for (s, e) in [(0u32, 0u32), (1, 2), (42, 9_999_999), (9_999_999, 3)] {
+            let h = encode_seq(s, e);
+            assert_eq!(decode_seq(h), (s, e));
+        }
+    }
+
+    #[test]
+    fn seq_hash_is_decimal_concatenation() {
+        // paper Fig.2: start 12, end 42 → "12" + "0000042"
+        assert_eq!(encode_seq(12, 42), 120_000_042);
+        assert_eq!(format_seq(encode_seq(12, 42)), "12-0000042");
+    }
+
+    #[test]
+    fn seq_hash_orders_by_start_then_end() {
+        assert!(encode_seq(1, 9_999_999) < encode_seq(2, 0));
+        assert!(encode_seq(5, 1) < encode_seq(5, 2));
+    }
+
+    #[test]
+    fn duration_packing_roundtrip() {
+        let seq = encode_seq(123, 456);
+        let packed = pack_duration(seq, 365);
+        let (s2, d2) = unpack_duration(packed);
+        assert_eq!(s2, seq);
+        assert_eq!(d2, 365);
+    }
+
+    #[test]
+    fn duration_packing_saturates() {
+        let (_, d) = unpack_duration(pack_duration(1, u32::MAX));
+        assert_eq!(d as u64, DUR_MASK);
+    }
+
+    #[test]
+    fn date_parsing_iso_and_offsets() {
+        assert_eq!(parse_date("0"), Some(0));
+        assert_eq!(parse_date("-5"), Some(-5));
+        assert_eq!(parse_date("1970-01-01"), Some(0));
+        assert_eq!(parse_date("1970-01-02"), Some(1));
+        assert_eq!(parse_date("2000-03-01"), Some(11017));
+        assert_eq!(parse_date("2020-01-01"), Some(18262));
+        assert_eq!(parse_date("not-a-date"), None);
+        assert_eq!(parse_date("2020-13-01"), None);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("tspm_dbmart_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mart.csv");
+        let mut raw = DbMart::new(vec![
+            entry("p1", 100, "icd:U09.9"),
+            entry("p2", 101, "med:paxlovid"),
+        ]);
+        raw.entries[0].description = Some("post covid".into());
+        raw.write_csv(&path).unwrap();
+        let back = DbMart::read_csv(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.entries[0].patient_id, "p1");
+        assert_eq!(back.entries[0].description.as_deref(), Some("post covid"));
+        assert_eq!(back.entries[1].date, 101);
+    }
+
+    #[test]
+    fn csv_rejects_missing_columns() {
+        let dir = std::env::temp_dir().join("tspm_dbmart_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n").unwrap();
+        assert!(DbMart::read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn lookup_json_roundtrip() {
+        let raw = DbMart::new(vec![entry("p", 1, "x"), entry("q", 2, "y")]);
+        let n = NumericDbMart::encode(&raw);
+        let j = n.lookup.to_json();
+        let back = LookupTables::from_json(&j).unwrap();
+        assert_eq!(back.patients, n.lookup.patients);
+        assert_eq!(back.phenx, n.lookup.phenx);
+    }
+
+    #[test]
+    fn byte_size_matches_entry_layout() {
+        let raw = DbMart::new(vec![entry("p", 1, "x")]);
+        let n = NumericDbMart::encode(&raw);
+        assert_eq!(n.byte_size(), 12); // u32 + i32 + u32
+    }
+}

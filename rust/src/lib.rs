@@ -1,0 +1,72 @@
+//! # tSPM+ — transitive Sequential Pattern Mining, plus durations
+//!
+//! A production-grade Rust reproduction of the tSPM+ system (Hügel, Sax,
+//! Murphy, Estiri, 2023): a high-performance engine for mining *transitive
+//! sequential patterns* — all ordered pairs of clinical observations per
+//! patient, annotated with their duration in days — from time-stamped
+//! clinical data in the MLHO `dbmart` format.
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Substrates** — from-scratch building blocks the engine depends on:
+//!    [`rng`] (deterministic PRNG), [`json`] (config/lookup-table
+//!    serialization), [`par`] (scoped-thread parallel map, the OpenMP
+//!    stand-in), [`psort`] (parallel in-place samplesort, the ips4o
+//!    stand-in), [`metrics`] (wall-clock + peak-RSS instrumentation),
+//!    [`cli`] (argument parsing), [`bench_util`] (paper-style benchmark
+//!    tables).
+//! 2. **The mining engine** — [`dbmart`] (numeric encoding + lookup tables),
+//!    [`synthea`] (synthetic clinical data with a COVID-19 scenario),
+//!    [`mining`] (the tSPM+ sequencer, in-memory and file-based),
+//!    [`seqstore`] (binary on-disk sequence format), [`sparsity`]
+//!    (sort-then-scan screening), [`baseline`] (the original tSPM for
+//!    comparison), [`partition`] (adaptive memory partitioning),
+//!    [`pipeline`] (streaming orchestrator with backpressure).
+//! 3. **Analytics on mined sequences** — [`util`] (sequence filters and
+//!    transitive end-sets), [`matrix`] (patient×sequence matrices),
+//!    [`msmr`] (MSMR feature selection via joint mutual information),
+//!    [`ml`] (MLHO-style classification workflow), [`postcovid`] (the WHO
+//!    Post COVID-19 definition), all optionally accelerated through
+//!    [`runtime`] — AOT-compiled JAX/Pallas artifacts executed via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // Generate a small synthetic cohort and mine it.
+//! let dbmart = tspm_plus::synthea::SyntheaConfig::small().generate();
+//! let numeric = tspm_plus::dbmart::NumericDbMart::encode(&dbmart);
+//! let cfg = tspm_plus::mining::MiningConfig::default();
+//! let mined = tspm_plus::mining::mine_sequences(&numeric, &cfg).unwrap();
+//! println!("mined {} sequences", mined.records.len());
+//! ```
+
+pub mod baseline;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod dbmart;
+pub mod json;
+pub mod matrix;
+pub mod metrics;
+pub mod mining;
+pub mod ml;
+pub mod msmr;
+pub mod par;
+pub mod partition;
+pub mod pipeline;
+pub mod postcovid;
+pub mod psort;
+pub mod rng;
+pub mod runtime;
+pub mod seqstore;
+pub mod sparsity;
+pub mod synthea;
+pub mod util;
+
+/// Commonly used types, re-exported for convenience.
+pub mod prelude {
+    pub use crate::dbmart::{DbMart, DbMartEntry, NumericDbMart, NumericEntry};
+    pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
+    pub use crate::sparsity::SparsityConfig;
+    pub use crate::synthea::SyntheaConfig;
+}

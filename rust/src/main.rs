@@ -1,0 +1,494 @@
+//! `tspm` — the tSPM+ launcher.
+//!
+//! Subcommands:
+//!
+//! * `synth`     — generate a synthetic clinical dbmart (CSV + truth)
+//! * `mine`      — mine transitive sequences from a dbmart CSV
+//! * `screen`    — sparsity-screen a mined sequence file
+//! * `postcovid` — vignette 2: WHO Post COVID-19 identification
+//! * `mlho`      — vignette 1: MSMR + logistic-regression workflow
+//! * `bench`     — regenerate the paper's tables (table1|table2|enduser)
+//! * `e2e`       — full pipeline: synth → mine → screen → MSMR → classify
+//!
+//! Run `tspm <command> --help` for options.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use tspm_plus::bench_util::experiments;
+use tspm_plus::cli::{usage, Args, OptSpec};
+use tspm_plus::config::RunConfig;
+use tspm_plus::dbmart::{format_seq, DbMart, NumericDbMart};
+use tspm_plus::metrics::{fmt_bytes, MemTracker, PhaseTimer};
+use tspm_plus::mining::{self, MiningConfig, MiningMode};
+use tspm_plus::postcovid::{self, PostCovidConfig};
+use tspm_plus::runtime::ArtifactSet;
+use tspm_plus::sparsity::{self, SparsityConfig};
+use tspm_plus::synthea::{Scenario, SyntheaConfig, COVID_CODE, SYMPTOM_CODES};
+use tspm_plus::{ml, seqstore};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_global_help();
+        return ExitCode::from(2);
+    };
+    let result = match cmd.as_str() {
+        "synth" => cmd_synth(rest),
+        "mine" => cmd_mine(rest),
+        "screen" => cmd_screen(rest),
+        "postcovid" => cmd_postcovid(rest),
+        "mlho" => cmd_mlho(rest),
+        "bench" => cmd_bench(rest),
+        "e2e" => cmd_e2e(rest),
+        "--help" | "-h" | "help" => {
+            print_global_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try --help")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_global_help() {
+    println!(
+        "tspm — transitive sequential pattern mining (tSPM+ reproduction)\n\n\
+         commands:\n\
+         \x20 synth      generate a synthetic clinical dbmart\n\
+         \x20 mine       mine transitive sequences (+durations) from a dbmart CSV\n\
+         \x20 screen     sparsity-screen a mined sequence file\n\
+         \x20 postcovid  vignette 2: WHO Post COVID-19 identification\n\
+         \x20 mlho       vignette 1: MSMR + classifier workflow\n\
+         \x20 bench      regenerate paper tables (table1|table2|enduser)\n\
+         \x20 e2e        full pipeline incl. PJRT artifacts\n\n\
+         run `tspm <command> --help` for options"
+    );
+}
+
+fn wants_help(argv: &[String]) -> bool {
+    argv.iter().any(|a| a == "--help" || a == "-h")
+}
+
+// ---------------------------------------------------------------------------
+// synth
+// ---------------------------------------------------------------------------
+
+fn cmd_synth(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::value("patients", Some("1000"), "cohort size"),
+        OptSpec::value("avg-entries", Some("318"), "mean entries per patient"),
+        OptSpec::value("vocab", Some("5000"), "background code vocabulary"),
+        OptSpec::value("seed", Some("7"), "RNG seed"),
+        OptSpec::value("scenario", Some("covid"), "covid|generic"),
+        OptSpec::value("out", Some("dbmart.csv"), "output CSV path"),
+        OptSpec::value("truth-out", None, "write ground-truth JSON here"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm synth", "generate a synthetic dbmart", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let scenario = match a.get("scenario").unwrap() {
+        "covid" => Scenario::Covid,
+        "generic" => Scenario::Generic,
+        other => return Err(format!("scenario must be covid|generic, got {other}")),
+    };
+    let cfg = SyntheaConfig {
+        patients: a.req("patients").map_err(|e| e.to_string())?,
+        avg_entries: a.req("avg-entries").map_err(|e| e.to_string())?,
+        vocab_size: a.req("vocab").map_err(|e| e.to_string())?,
+        seed: a.req("seed").map_err(|e| e.to_string())?,
+        scenario,
+        ..SyntheaConfig::synthea_covid_like(1.0)
+    };
+    let g = cfg.generate_with_truth();
+    let out = PathBuf::from(a.get("out").unwrap());
+    g.dbmart.write_csv(&out).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} rows for {} patients to {}",
+        g.dbmart.len(),
+        cfg.patients,
+        out.display()
+    );
+    if let Some(truth_path) = a.get("truth-out") {
+        use tspm_plus::json::Json;
+        let truth = Json::obj(vec![
+            (
+                "postcovid",
+                Json::Arr(
+                    g.truth
+                        .postcovid
+                        .iter()
+                        .map(|(p, s)| {
+                            Json::Arr(vec![Json::from(p.clone()), Json::from(s.clone())])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "infected",
+                Json::Arr(g.truth.infected.iter().map(|p| Json::from(p.clone())).collect()),
+            ),
+        ]);
+        std::fs::write(truth_path, truth.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote ground truth to {truth_path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// mine
+// ---------------------------------------------------------------------------
+
+fn load_numeric(input: &str) -> Result<NumericDbMart, String> {
+    let raw = DbMart::read_csv(Path::new(input)).map_err(|e| e.to_string())?;
+    NumericDbMart::try_encode(&raw).map_err(|e| e.to_string())
+}
+
+fn cmd_mine(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("input", "dbmart CSV path"),
+        OptSpec::value("out", Some("sequences.tspm"), "output sequence file"),
+        OptSpec::value("lookup-out", Some("lookup.json"), "lookup-table JSON output"),
+        OptSpec::value("mode", Some("memory"), "memory|file"),
+        OptSpec::value("threads", Some("0"), "worker threads (0 = auto)"),
+        OptSpec::value("duration-unit", Some("1"), "duration unit in days"),
+        OptSpec::value("sparsity", Some("0"), "min patients per sequence (0 = no screen)"),
+        OptSpec::flag("first-occurrence", "keep only first occurrence of each phenX"),
+        OptSpec::flag("explain", "print a Fig.2-style decomposition of sample sequences"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm mine", "mine transitive sequences", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let mut timer = PhaseTimer::new();
+    let tracker = MemTracker::new();
+
+    let db = timer.run("load+encode", || load_numeric(a.get("input").unwrap()))?;
+    let cfg = MiningConfig {
+        threads: a.req("threads").map_err(|e| e.to_string())?,
+        first_occurrence_only: a.flag("first-occurrence"),
+        duration_unit_days: a.req("duration-unit").map_err(|e| e.to_string())?,
+        mode: match a.get("mode").unwrap() {
+            "memory" => MiningMode::InMemory,
+            "file" => MiningMode::FileBased,
+            other => return Err(format!("mode must be memory|file, got {other}")),
+        },
+        work_dir: std::env::temp_dir().join("tspm_mine"),
+        include_self_pairs: true,
+    };
+
+    let mut records = match cfg.mode {
+        MiningMode::InMemory => {
+            timer
+                .run("sequence", || mining::mine_sequences_tracked(&db, &cfg, Some(&tracker)))
+                .map_err(|e| e.to_string())?
+                .records
+        }
+        MiningMode::FileBased => {
+            let files = timer
+                .run("sequence", || {
+                    mining::mine_sequences_to_files_tracked(&db, &cfg, Some(&tracker))
+                })
+                .map_err(|e| e.to_string())?;
+            let recs = timer.run("collect", || files.read_all()).map_err(|e| e.to_string())?;
+            let _ = files.remove();
+            recs
+        }
+    };
+
+    let min_patients: u32 = a.req("sparsity").map_err(|e| e.to_string())?;
+    if min_patients > 0 {
+        let stats = timer.run("screen", || {
+            sparsity::screen(
+                &mut records,
+                &SparsityConfig { min_patients, threads: cfg.threads },
+            )
+        });
+        println!(
+            "screen: {} → {} records ({} → {} distinct sequences)",
+            stats.records_before, stats.records_after, stats.distinct_before, stats.distinct_after
+        );
+    }
+
+    if a.flag("explain") {
+        println!("\nFig.2-style decomposition (first 5 sequences):");
+        for r in records.iter().take(5) {
+            let (s, e) = tspm_plus::dbmart::decode_seq(r.seq);
+            println!(
+                "  {:>16} = {:<24} [{} -> {}] duration {}d patient {}",
+                r.seq,
+                format_seq(r.seq),
+                db.lookup.phenx_name(s),
+                db.lookup.phenx_name(e),
+                r.duration,
+                db.lookup.patient_name(r.pid),
+            );
+        }
+        println!();
+    }
+
+    let out = PathBuf::from(a.get("out").unwrap());
+    timer
+        .run("write", || seqstore::write_file(&out, &records))
+        .map_err(|e| e.to_string())?;
+    std::fs::write(
+        a.get("lookup-out").unwrap(),
+        db.lookup.to_json().to_string_pretty(),
+    )
+    .map_err(|e| e.to_string())?;
+
+    println!(
+        "mined {} sequences from {} patients ({} entries) → {}",
+        records.len(),
+        db.num_patients(),
+        db.len(),
+        out.display()
+    );
+    println!("logical peak memory: {}", fmt_bytes(tracker.peak()));
+    print!("{}", timer.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// screen
+// ---------------------------------------------------------------------------
+
+fn cmd_screen(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("input", "mined sequence file (.tspm)"),
+        OptSpec::value("out", Some("screened.tspm"), "output file"),
+        OptSpec::value("min-patients", Some("50"), "distinct-patient threshold"),
+        OptSpec::value("threads", Some("0"), "worker threads (0 = auto)"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm screen", "sparsity-screen sequences", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let mut records =
+        seqstore::read_file(Path::new(a.get("input").unwrap())).map_err(|e| e.to_string())?;
+    let stats = sparsity::screen(
+        &mut records,
+        &SparsityConfig {
+            min_patients: a.req("min-patients").map_err(|e| e.to_string())?,
+            threads: a.req("threads").map_err(|e| e.to_string())?,
+        },
+    );
+    seqstore::write_file(Path::new(a.get("out").unwrap()), &records)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "screened {} → {} records ({} → {} distinct sequences) → {}",
+        stats.records_before,
+        stats.records_after,
+        stats.distinct_before,
+        stats.distinct_after,
+        a.get("out").unwrap()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// postcovid (vignette 2)
+// ---------------------------------------------------------------------------
+
+fn cmd_postcovid(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::value("patients", Some("500"), "synthetic cohort size"),
+        OptSpec::value("seed", Some("11"), "RNG seed"),
+        OptSpec::value("corr-threshold", Some("0.4"), "exclusion correlation threshold"),
+        OptSpec::flag("use-artifacts", "run correlations on PJRT artifacts"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm postcovid", "WHO Post COVID-19 vignette", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let mut gen_cfg = SyntheaConfig::small();
+    gen_cfg.patients = a.req("patients").map_err(|e| e.to_string())?;
+    gen_cfg.seed = a.req("seed").map_err(|e| e.to_string())?;
+    let g = gen_cfg.generate_with_truth();
+    let db = NumericDbMart::encode(&g.dbmart);
+    let mined =
+        mining::mine_sequences(&db, &MiningConfig::default()).map_err(|e| e.to_string())?;
+
+    let covid = db
+        .lookup
+        .phenx_id(COVID_CODE)
+        .ok_or_else(|| "no covid code in cohort".to_string())?;
+    let mut cfg = PostCovidConfig::new(covid);
+    cfg.corr_threshold = a.req("corr-threshold").map_err(|e| e.to_string())?;
+    cfg.candidate_filter =
+        Some(SYMPTOM_CODES.iter().filter_map(|s| db.lookup.phenx_id(s)).collect());
+
+    let artifacts = if a.flag("use-artifacts") {
+        Some(ArtifactSet::load(&tspm_plus::runtime::default_artifacts_dir()).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let result = postcovid::identify(
+        &mined.records,
+        db.num_patients() as u32,
+        &cfg,
+        artifacts.as_ref(),
+    )
+    .map_err(|e| e.to_string())?;
+
+    println!(
+        "candidates: {}   confirmed: {}   excluded: {}",
+        result.candidates.len(),
+        result.confirmed.len(),
+        result.excluded.len()
+    );
+    for (pid, sym) in result.confirmed.iter().take(10) {
+        println!(
+            "  {} has Post-COVID symptom {}",
+            db.lookup.patient_name(*pid),
+            db.lookup.phenx_name(*sym)
+        );
+    }
+    let v = postcovid::validate(&result, &g.truth, &db.lookup);
+    println!(
+        "vs ground truth: precision {:.3}  recall {:.3}  f1 {:.3}  (tp={} fp={} fn={})",
+        v.precision(),
+        v.recall(),
+        v.f1(),
+        v.true_positives,
+        v.false_positives,
+        v.false_negatives
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// mlho (vignette 1)
+// ---------------------------------------------------------------------------
+
+fn cmd_mlho(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::value("patients", Some("400"), "synthetic cohort size"),
+        OptSpec::value("top-k", Some("200"), "MSMR features to keep"),
+        OptSpec::value("epochs", Some("200"), "training epochs"),
+        OptSpec::flag("use-artifacts", "run MI + training on PJRT artifacts"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm mlho", "MSMR + classifier vignette", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let artifacts = if a.flag("use-artifacts") {
+        Some(ArtifactSet::load(&tspm_plus::runtime::default_artifacts_dir()).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let report = ml::mlho_vignette(
+        a.req("patients").map_err(|e| e.to_string())?,
+        a.req("top-k").map_err(|e| e.to_string())?,
+        a.req("epochs").map_err(|e| e.to_string())?,
+        artifacts.as_ref(),
+    )?;
+    print!("{report}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// bench
+// ---------------------------------------------------------------------------
+
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::value("scale", Some("0.1"), "workload scale vs the paper's"),
+        OptSpec::value("iterations", Some("3"), "iterations per row (paper: 10)"),
+        OptSpec::value("json-out", None, "write machine-readable rows here"),
+    ];
+    if wants_help(argv) || argv.is_empty() {
+        println!("usage: tspm bench <table1|table2|enduser> [options]\n");
+        print!("{}", usage("tspm bench", "regenerate paper tables", &spec));
+        return Ok(());
+    }
+    let (which, rest) = argv.split_first().unwrap();
+    let a = Args::parse(rest, &spec).map_err(|e| e.to_string())?;
+    let scale: f64 = a.req("scale").map_err(|e| e.to_string())?;
+    let iters: usize = a.req("iterations").map_err(|e| e.to_string())?;
+
+    let (rows, report) = match which.as_str() {
+        "table1" => {
+            let rows = experiments::table1(scale, iters);
+            let report = experiments::table1_report(&rows);
+            (rows, report)
+        }
+        "table2" => {
+            let (total, cap, chunks) = experiments::table2_overflow_demo(scale);
+            let rows = experiments::table2(scale, iters);
+            let mut report = format!(
+                "overflow gate: {total} sequences vs cap {cap} → adaptive partitioning uses {chunks} chunks\n"
+            );
+            report.push_str(&tspm_plus::bench_util::render_table(
+                "Table 2 — performance benchmark (tSPM+)",
+                &rows,
+            ));
+            (rows, report)
+        }
+        "enduser" => {
+            let rows = experiments::enduser(iters);
+            let report = tspm_plus::bench_util::render_table(
+                "End-user device benchmark (1k patients × ~400 entries)",
+                &rows,
+            );
+            (rows, report)
+        }
+        other => return Err(format!("unknown bench {other:?} (table1|table2|enduser)")),
+    };
+    print!("{report}");
+    if let Some(path) = a.get("json-out") {
+        std::fs::write(path, tspm_plus::bench_util::rows_to_json(&rows).to_string_pretty())
+            .map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// e2e
+// ---------------------------------------------------------------------------
+
+fn cmd_e2e(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::value("config", None, "RunConfig JSON path (defaults inline)"),
+        OptSpec::value("patients", Some("500"), "cohort size when no config given"),
+        OptSpec::flag("no-artifacts", "skip PJRT; use pure-Rust analytics"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm e2e", "full end-to-end pipeline", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let cfg = match a.get("config") {
+        Some(p) => RunConfig::load(Path::new(p)).map_err(|e| e.to_string())?,
+        None => RunConfig {
+            patients: a.req("patients").map_err(|e| e.to_string())?,
+            ..Default::default()
+        },
+    };
+    let artifacts = if a.flag("no-artifacts") {
+        None
+    } else {
+        match ArtifactSet::load(Path::new(&cfg.artifacts_dir)) {
+            Ok(set) => Some(set),
+            Err(e) => {
+                eprintln!("warning: {e}; continuing with pure-Rust analytics");
+                None
+            }
+        }
+    };
+    let report = ml::mlho_vignette(cfg.patients, 200, 150, artifacts.as_ref())?;
+    print!("{report}");
+    Ok(())
+}

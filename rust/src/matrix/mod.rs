@@ -1,0 +1,281 @@
+//! Patient × sequence matrices — the bridge from mined sequences to the
+//! ML layer.
+//!
+//! Downstream analytics (MSMR mutual information, the MLHO classifier,
+//! the Post-COVID correlation step) consume a binary patient×sequence
+//! occurrence matrix. Mined records are sparse, so the matrix is built in
+//! CSR form and densified per tile when feeding the PJRT artifacts
+//! (which take dense `f32` blocks).
+
+use crate::mining::SeqRecord;
+use std::collections::HashMap;
+
+/// Binary patient × sequence occurrence matrix (CSR over patients).
+#[derive(Clone, Debug, Default)]
+pub struct SeqMatrix {
+    /// Column order: distinct sequence ids, ascending.
+    pub seq_ids: Vec<u64>,
+    /// Number of patient rows (dense patient id space).
+    pub num_patients: u32,
+    /// CSR row pointers (len = num_patients + 1).
+    pub row_ptr: Vec<usize>,
+    /// Column indices per row, ascending within a row.
+    pub col_idx: Vec<u32>,
+}
+
+impl SeqMatrix {
+    /// Build from mined records. `num_patients` fixes the row space (use
+    /// the dbmart's patient count so rows align with labels).
+    pub fn build(records: &[SeqRecord], num_patients: u32) -> SeqMatrix {
+        // Column dictionary.
+        let mut seq_ids: Vec<u64> = records.iter().map(|r| r.seq).collect();
+        seq_ids.sort_unstable();
+        seq_ids.dedup();
+        let col_of: HashMap<u64, u32> =
+            seq_ids.iter().enumerate().map(|(i, &s)| (s, i as u32)).collect();
+
+        // Per-row column sets (deduplicated occurrences).
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); num_patients as usize];
+        for r in records {
+            debug_assert!(r.pid < num_patients, "record pid outside matrix rows");
+            rows[r.pid as usize].push(col_of[&r.seq]);
+        }
+        let mut row_ptr = Vec::with_capacity(num_patients as usize + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for row in &mut rows {
+            row.sort_unstable();
+            row.dedup();
+            col_idx.extend_from_slice(row);
+            row_ptr.push(col_idx.len());
+        }
+        SeqMatrix { seq_ids, num_patients, row_ptr, col_idx }
+    }
+
+    /// Number of feature columns.
+    pub fn num_cols(&self) -> usize {
+        self.seq_ids.len()
+    }
+
+    /// Non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Does (patient, column) hold a 1?
+    pub fn get(&self, pid: u32, col: u32) -> bool {
+        let r = &self.col_idx[self.row_ptr[pid as usize]..self.row_ptr[pid as usize + 1]];
+        r.binary_search(&col).is_ok()
+    }
+
+    /// Densify rows `[row0, row0+n_rows)` × cols `[col0, col0+n_cols)`
+    /// into a row-major `f32` tile (zero-padded past the matrix edge) —
+    /// the feed format of the PJRT artifacts.
+    pub fn dense_tile(&self, row0: u32, n_rows: usize, col0: u32, n_cols: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n_rows * n_cols];
+        for i in 0..n_rows {
+            let pid = row0 as usize + i;
+            if pid >= self.num_patients as usize {
+                break;
+            }
+            let cols = &self.col_idx[self.row_ptr[pid]..self.row_ptr[pid + 1]];
+            let start = cols.partition_point(|&c| (c as usize) < col0 as usize);
+            for &c in &cols[start..] {
+                let off = c as usize - col0 as usize;
+                if off >= n_cols {
+                    break;
+                }
+                out[i * n_cols + off] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Full dense matrix (use only for small shapes / tests).
+    pub fn to_dense(&self) -> Vec<f32> {
+        self.dense_tile(0, self.num_patients as usize, 0, self.num_cols())
+    }
+
+    /// Column-wise positive counts (patients per sequence).
+    pub fn col_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.num_cols()];
+        for &c in &self.col_idx {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Build a **duration-aware** matrix: each column is a
+    /// `(sequence, duration-bucket)` pair, encoded with the paper's
+    /// bit-shift packing ([`crate::dbmart::pack_duration`]). This is the
+    /// "new dimension" tSPM+ adds over tSPM — the same sequence occurring
+    /// promptly vs. months later becomes a *different* feature, which is
+    /// what the Post-COVID use case and the duration-sparsity screen
+    /// exploit.
+    pub fn build_with_durations(
+        records: &[SeqRecord],
+        num_patients: u32,
+        bucket_days: u32,
+    ) -> SeqMatrix {
+        let bucket = bucket_days.max(1);
+        let packed: Vec<SeqRecord> = records
+            .iter()
+            .map(|r| SeqRecord {
+                seq: crate::dbmart::pack_duration(r.seq, r.duration / bucket),
+                pid: r.pid,
+                duration: r.duration,
+            })
+            .collect();
+        SeqMatrix::build(&packed, num_patients)
+    }
+
+    /// Decode a duration-aware column back to `(sequence, bucket)`.
+    /// Only meaningful for matrices from [`SeqMatrix::build_with_durations`].
+    pub fn column_seq_bucket(&self, col: u32) -> (u64, u32) {
+        crate::dbmart::unpack_duration(self.seq_ids[col as usize])
+    }
+
+    /// Select a column subset, producing a new matrix whose columns are
+    /// `cols` (in the given order).
+    pub fn select_columns(&self, cols: &[u32]) -> SeqMatrix {
+        let remap: HashMap<u32, u32> =
+            cols.iter().enumerate().map(|(i, &c)| (c, i as u32)).collect();
+        let mut row_ptr = Vec::with_capacity(self.num_patients as usize + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for pid in 0..self.num_patients as usize {
+            let r = &self.col_idx[self.row_ptr[pid]..self.row_ptr[pid + 1]];
+            let mut new_cols: Vec<u32> =
+                r.iter().filter_map(|c| remap.get(c).copied()).collect();
+            new_cols.sort_unstable();
+            col_idx.extend_from_slice(&new_cols);
+            row_ptr.push(col_idx.len());
+        }
+        SeqMatrix {
+            seq_ids: cols.iter().map(|&c| self.seq_ids[c as usize]).collect(),
+            num_patients: self.num_patients,
+            row_ptr,
+            col_idx,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::encode_seq;
+
+    fn rec(seq: u64, pid: u32) -> SeqRecord {
+        SeqRecord { seq, pid, duration: 0 }
+    }
+
+    #[test]
+    fn build_dedupes_and_orders() {
+        let records = vec![
+            rec(encode_seq(2, 1), 0),
+            rec(encode_seq(1, 1), 0),
+            rec(encode_seq(1, 1), 0), // duplicate occurrence
+            rec(encode_seq(1, 1), 2),
+        ];
+        let m = SeqMatrix::build(&records, 3);
+        assert_eq!(m.num_cols(), 2);
+        assert_eq!(m.seq_ids, vec![encode_seq(1, 1), encode_seq(2, 1)]);
+        assert_eq!(m.nnz(), 3);
+        assert!(m.get(0, 0) && m.get(0, 1));
+        assert!(!m.get(1, 0));
+        assert!(m.get(2, 0) && !m.get(2, 1));
+    }
+
+    #[test]
+    fn dense_tile_matches_get() {
+        let records = vec![
+            rec(10, 0),
+            rec(20, 0),
+            rec(30, 1),
+            rec(10, 3),
+        ];
+        let m = SeqMatrix::build(&records, 4);
+        let dense = m.to_dense();
+        for pid in 0..4u32 {
+            for col in 0..3u32 {
+                let expect = if m.get(pid, col) { 1.0 } else { 0.0 };
+                assert_eq!(dense[(pid as usize) * 3 + col as usize], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_tile_pads_beyond_edges() {
+        let m = SeqMatrix::build(&[rec(10, 0)], 1);
+        let tile = m.dense_tile(0, 4, 0, 8);
+        assert_eq!(tile.len(), 32);
+        assert_eq!(tile[0], 1.0);
+        assert_eq!(tile.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn dense_tile_offsets() {
+        let records = vec![rec(10, 0), rec(20, 0), rec(30, 0), rec(20, 1)];
+        let m = SeqMatrix::build(&records, 2);
+        // tile over cols [1,3) = seqs 20,30
+        let tile = m.dense_tile(0, 2, 1, 2);
+        assert_eq!(tile, vec![1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn col_counts_are_patientwise() {
+        let records = vec![rec(10, 0), rec(10, 0), rec(10, 1), rec(20, 1)];
+        let m = SeqMatrix::build(&records, 2);
+        assert_eq!(m.col_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn select_columns_projects() {
+        let records = vec![rec(10, 0), rec(20, 0), rec(30, 1)];
+        let m = SeqMatrix::build(&records, 2);
+        let sel = m.select_columns(&[2, 0]); // seqs 30, 10
+        assert_eq!(sel.seq_ids, vec![30, 10]);
+        assert!(sel.get(1, 0)); // seq 30 for patient 1 → new col 0
+        assert!(sel.get(0, 1)); // seq 10 for patient 0 → new col 1
+        assert!(!sel.get(0, 0));
+        assert_eq!(sel.nnz(), 2);
+    }
+
+    #[test]
+    fn duration_buckets_split_columns() {
+        // same sequence, three duration regimes → distinct columns
+        let records = vec![
+            SeqRecord { seq: 10, pid: 0, duration: 5 },
+            SeqRecord { seq: 10, pid: 1, duration: 35 },
+            SeqRecord { seq: 10, pid: 2, duration: 95 },
+            SeqRecord { seq: 10, pid: 3, duration: 36 }, // same bucket as pid 1
+        ];
+        let m = SeqMatrix::build_with_durations(&records, 4, 30);
+        assert_eq!(m.num_cols(), 3);
+        let buckets: Vec<u32> =
+            (0..m.num_cols() as u32).map(|c| m.column_seq_bucket(c).1).collect();
+        assert_eq!(buckets, vec![0, 1, 3]);
+        assert!(m.get(1, 1) && m.get(3, 1), "bucket-1 column shared by pids 1 and 3");
+        // every column decodes back to the original sequence id
+        for c in 0..m.num_cols() as u32 {
+            assert_eq!(m.column_seq_bucket(c).0, 10);
+        }
+    }
+
+    #[test]
+    fn duration_matrix_without_buckets_matches_plain_when_durations_equal() {
+        let records = vec![rec(10, 0), rec(20, 1)]; // all durations 0
+        let plain = SeqMatrix::build(&records, 2);
+        let dur = SeqMatrix::build_with_durations(&records, 2, 30);
+        assert_eq!(plain.num_cols(), dur.num_cols());
+        assert_eq!(plain.nnz(), dur.nnz());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = SeqMatrix::build(&[], 5);
+        assert_eq!(m.num_cols(), 0);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.to_dense().len(), 0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Instrumentation substrate: phase timers and memory accounting.
+//!
+//! The paper's benchmark protocol measures, per run, the **total wall-clock
+//! runtime**, the **peak memory consumption** (via GNU `time`), and a
+//! per-phase breakdown (data loading, sequencing, sparsity screening).
+//! This module reproduces that protocol in-process:
+//!
+//! * [`PhaseTimer`] — named phase measurements with a formatted report,
+//! * [`peak_rss_bytes`] — the process high-water-mark RSS from
+//!   `/proc/self/status` (`VmHWM`), falling back to `getrusage(2)`,
+//! * [`current_rss_bytes`] — instantaneous RSS (`VmRSS`),
+//! * [`MemTracker`] — byte-accurate logical accounting of the engine's own
+//!   major allocations (what the paper reports as the algorithm's memory),
+//!   useful on machines where RSS is polluted by the allocator or runtime.
+
+use std::time::{Duration, Instant};
+
+/// High-water-mark RSS of this process in bytes.
+///
+/// Reads `VmHWM` from `/proc/self/status`; falls back to
+/// `getrusage(RUSAGE_SELF).ru_maxrss` (kilobytes on Linux).
+pub fn peak_rss_bytes() -> u64 {
+    if let Some(v) = read_status_kb("VmHWM:") {
+        return v * 1024;
+    }
+    unsafe {
+        let mut usage: libc::rusage = std::mem::zeroed();
+        if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 {
+            return (usage.ru_maxrss as u64) * 1024;
+        }
+    }
+    0
+}
+
+/// Instantaneous RSS of this process in bytes (`VmRSS`), 0 if unavailable.
+pub fn current_rss_bytes() -> u64 {
+    read_status_kb("VmRSS:").map(|v| v * 1024).unwrap_or(0)
+}
+
+fn read_status_kb(field: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb);
+        }
+    }
+    None
+}
+
+/// Format a byte count as a human-readable string (GiB/MiB/KiB/B).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+    const KIB: f64 = (1u64 << 10) as f64;
+    let b = bytes as f64;
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a duration as `hh:mm:ss.mmm` (the paper prints `hh:mm:ss`).
+pub fn fmt_duration(d: Duration) -> String {
+    let total_ms = d.as_millis();
+    let ms = total_ms % 1000;
+    let s = (total_ms / 1000) % 60;
+    let m = (total_ms / 60_000) % 60;
+    let h = total_ms / 3_600_000;
+    format!("{h:02}:{m:02}:{s:02}.{ms:03}")
+}
+
+/// A single recorded phase.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub name: String,
+    pub elapsed: Duration,
+    /// RSS delta across the phase (can be negative when memory is freed).
+    pub rss_delta: i64,
+}
+
+/// Named phase timer producing the paper-style per-phase breakdown
+/// (load / encode / sort / sequence / screen ...).
+#[derive(Default)]
+pub struct PhaseTimer {
+    phases: Vec<Phase>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` as the named phase, recording wall time and RSS delta.
+    pub fn run<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let rss_before = current_rss_bytes() as i64;
+        let start = Instant::now();
+        let out = f();
+        let elapsed = start.elapsed();
+        let rss_after = current_rss_bytes() as i64;
+        self.phases.push(Phase {
+            name: name.to_string(),
+            elapsed,
+            rss_delta: rss_after - rss_before,
+        });
+        out
+    }
+
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|p| p.elapsed).sum()
+    }
+
+    /// Elapsed time of a phase by name (first match).
+    pub fn elapsed(&self, name: &str) -> Option<Duration> {
+        self.phases.iter().find(|p| p.name == name).map(|p| p.elapsed)
+    }
+
+    /// Multi-line report of all phases plus total.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let width = self.phases.iter().map(|p| p.name.len()).max().unwrap_or(5).max(5);
+        for p in &self.phases {
+            let sign = if p.rss_delta >= 0 { "+" } else { "-" };
+            out.push_str(&format!(
+                "  {:<width$}  {}  (rss {}{})\n",
+                p.name,
+                fmt_duration(p.elapsed),
+                sign,
+                fmt_bytes(p.rss_delta.unsigned_abs()),
+                width = width
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<width$}  {}\n",
+            "TOTAL",
+            fmt_duration(self.total()),
+            width = width
+        ));
+        out
+    }
+}
+
+/// Logical memory accounting for the engine's own major buffers.
+///
+/// RSS on a shared box includes the allocator's retained pages, the PJRT
+/// runtime, etc.; the paper's memory numbers are effectively "bytes the
+/// algorithm holds live". `MemTracker` counts exactly that: modules call
+/// [`MemTracker::add`]/[`MemTracker::sub`] around their big allocations and
+/// the high-water mark is reported next to RSS.
+#[derive(Default, Debug)]
+pub struct MemTracker {
+    live: std::sync::atomic::AtomicU64,
+    peak: std::sync::atomic::AtomicU64,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, bytes: u64) {
+        use std::sync::atomic::Ordering;
+        let now = self.live.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, bytes: u64) {
+        use std::sync::atomic::Ordering;
+        self.live.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn live(&self) -> u64 {
+        self.live.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_positive_on_linux() {
+        assert!(peak_rss_bytes() > 0);
+        assert!(current_rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= current_rss_bytes() / 2);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 << 30), "5.00 GiB");
+    }
+
+    #[test]
+    fn fmt_duration_fields() {
+        let d = Duration::from_millis(3_600_000 + 23 * 60_000 + 45_000 + 678);
+        assert_eq!(fmt_duration(d), "01:23:45.678");
+        assert_eq!(fmt_duration(Duration::from_millis(14)), "00:00:00.014");
+    }
+
+    #[test]
+    fn phase_timer_records_in_order() {
+        let mut t = PhaseTimer::new();
+        let v = t.run("load", || 40);
+        let w = t.run("mine", || 2);
+        assert_eq!(v + w, 42);
+        assert_eq!(t.phases().len(), 2);
+        assert_eq!(t.phases()[0].name, "load");
+        assert_eq!(t.phases()[1].name, "mine");
+        assert!(t.elapsed("load").is_some());
+        assert!(t.elapsed("nope").is_none());
+        assert!(t.report().contains("TOTAL"));
+    }
+
+    #[test]
+    fn mem_tracker_high_water() {
+        let m = MemTracker::new();
+        m.add(100);
+        m.add(50);
+        m.sub(120);
+        m.add(10);
+        assert_eq!(m.live(), 40);
+        assert_eq!(m.peak(), 150);
+    }
+}

@@ -1,0 +1,632 @@
+//! The tSPM+ mining engine (the paper's core contribution).
+//!
+//! Pipeline per the paper §Methods:
+//!
+//! 1. **Sort** the numeric dbmart by `(patient, date)` with the parallel
+//!    samplesort ([`crate::psort`]) so each patient forms one contiguous,
+//!    chronologically ordered chunk.
+//! 2. **Sequence**: for every entry `x` of a patient, pair it with every
+//!    later entry `y` (`y.date ≥ x.date`, `y` after `x` in order),
+//!    emitting the reversible decimal hash `encode_seq(x.phenx, y.phenx)`
+//!    plus the **duration** `(y.date − x.date) / unit` — the paper's new
+//!    dimension. This mines `n(n−1)/2` sequences for a patient with `n`
+//!    entries.
+//! 3. Patient chunks are distributed over worker threads, each appending
+//!    to a **thread-local vector** (avoids cache invalidation), merged at
+//!    the end — or, in **file-based mode**, streamed to per-worker binary
+//!    spill files ([`crate::seqstore`]) so the resident set stays tiny.
+//!
+//! The optional *first-occurrence-only* filter reproduces the protocol of
+//! the paper's comparison benchmark (and of the earlier AD study): only
+//! the first occurrence of each phenX per patient enters sequencing.
+
+use crate::dbmart::{encode_seq, NumericDbMart, NumericEntry};
+use crate::metrics::MemTracker;
+use crate::par;
+use crate::psort;
+use crate::seqstore::{SeqFileSet, SeqWriter};
+use std::path::PathBuf;
+
+/// One mined sequence record — 16 bytes, the paper's "128 bit" layout:
+/// 8 bytes sequence hash, 4 bytes patient id, 4 bytes duration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(C)]
+pub struct SeqRecord {
+    /// `start_phenx * 10^7 + end_phenx` (see [`crate::dbmart::encode_seq`]).
+    pub seq: u64,
+    /// Dense patient id.
+    pub pid: u32,
+    /// Duration in the configured unit (default: days).
+    pub duration: u32,
+}
+
+/// Operating mode (paper §Results: "two distinct operational modes").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MiningMode {
+    /// Sequences returned as one in-memory vector.
+    InMemory,
+    /// Sequences spilled to per-worker binary files.
+    FileBased,
+}
+
+/// Mining configuration.
+#[derive(Clone, Debug)]
+pub struct MiningConfig {
+    /// Worker threads (0 = auto-detect, honouring `TSPM_THREADS`).
+    pub threads: usize,
+    /// Keep only the first occurrence of each phenX per patient.
+    pub first_occurrence_only: bool,
+    /// Duration divisor in days (1 = days, 7 = weeks, 30 = months).
+    pub duration_unit_days: u32,
+    pub mode: MiningMode,
+    /// Spill directory for [`MiningMode::FileBased`].
+    pub work_dir: PathBuf,
+    /// Include same-phenX pairs (x → x at a later date). The paper keeps
+    /// them; exposed for ablation.
+    pub include_self_pairs: bool,
+}
+
+impl Default for MiningConfig {
+    fn default() -> Self {
+        MiningConfig {
+            threads: 0,
+            first_occurrence_only: false,
+            duration_unit_days: 1,
+            mode: MiningMode::InMemory,
+            work_dir: std::env::temp_dir().join("tspm_work"),
+            include_self_pairs: true,
+        }
+    }
+}
+
+/// In-memory mining result.
+#[derive(Clone, Debug, Default)]
+pub struct SequenceSet {
+    pub records: Vec<SeqRecord>,
+    /// Number of patients in the source dbmart (for matrix shapes).
+    pub num_patients: u32,
+    /// Number of distinct phenX codes in the source dbmart.
+    pub num_phenx: u32,
+}
+
+impl SequenceSet {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Logical bytes held by the record buffer.
+    pub fn byte_size(&self) -> u64 {
+        (self.records.len() * std::mem::size_of::<SeqRecord>()) as u64
+    }
+}
+
+/// Mining errors.
+#[derive(Debug)]
+pub enum MiningError {
+    Io(std::io::Error),
+    /// In-memory result would exceed the configured element cap
+    /// (reproduces the paper's R 2³¹−1 failure mode; see
+    /// [`crate::partition`] for the adaptive remedy).
+    TooManySequences { mined: u64, cap: u64 },
+}
+
+impl std::fmt::Display for MiningError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MiningError::Io(e) => write!(f, "mining I/O error: {e}"),
+            MiningError::TooManySequences { mined, cap } => write!(
+                f,
+                "mined {mined} sequences which exceeds the element cap {cap} \
+                 (R dataframe limit 2^31-1); use file-based mode or adaptive partitioning"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MiningError {}
+
+impl From<std::io::Error> for MiningError {
+    fn from(e: std::io::Error) -> Self {
+        MiningError::Io(e)
+    }
+}
+
+/// Sort entries by `(patient, date)` in place and return the per-patient
+/// chunk boundaries `[start_0, start_1, …, len]`.
+///
+/// Requires patient ids to be dense (`< num_patients`), which
+/// [`NumericDbMart::encode`] guarantees.
+pub fn sort_and_chunk(entries: &mut [NumericEntry], threads: usize) -> Vec<usize> {
+    // Composite key: patient, then date (shifted to unsigned), then phenX.
+    // Including phenX makes the order — and therefore the orientation of
+    // same-date pairs — fully deterministic regardless of thread count.
+    // Adaptive sort: pdqsort on one worker, parallel radix otherwise.
+    psort::sort_auto(
+        entries,
+        |e| {
+            ((e.patient as u128) << 64)
+                | (((e.date as i64 - i32::MIN as i64) as u128) << 32)
+                | e.phenx as u128
+        },
+        threads,
+    );
+    let mut bounds = Vec::new();
+    let mut prev = u32::MAX;
+    for (i, e) in entries.iter().enumerate() {
+        if e.patient != prev {
+            bounds.push(i);
+            prev = e.patient;
+        }
+    }
+    bounds.push(entries.len());
+    bounds
+}
+
+/// Number of sequences a patient chunk will produce (n·(n−1)/2).
+#[inline]
+pub fn pairs_for(n: usize) -> u64 {
+    (n as u64) * (n as u64 - 1) / 2
+}
+
+/// Total sequences the sorted+filtered dbmart will produce. Used by
+/// [`crate::partition`] for adaptive chunking and by callers to pre-size.
+pub fn count_sequences(entries: &[NumericEntry], bounds: &[usize], cfg: &MiningConfig) -> u64 {
+    let mut total = 0u64;
+    for w in bounds.windows(2) {
+        let chunk = &entries[w[0]..w[1]];
+        let n = if cfg.first_occurrence_only {
+            count_first_occurrences(chunk)
+        } else {
+            chunk.len()
+        };
+        if n >= 1 {
+            total += pairs_for(n);
+        }
+    }
+    total
+}
+
+fn count_first_occurrences(chunk: &[NumericEntry]) -> usize {
+    // Chunks are small (hundreds); a sorted Vec dedupe avoids per-call
+    // hashing overhead.
+    let mut seen: Vec<u32> = chunk.iter().map(|e| e.phenx).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    seen.len()
+}
+
+/// Apply the first-occurrence filter to one sorted patient chunk,
+/// appending survivors to `out` (cleared first).
+fn first_occurrences(chunk: &[NumericEntry], out: &mut Vec<NumericEntry>) {
+    out.clear();
+    // Date-sorted input → linear scan with a seen-set keeps the earliest.
+    let mut seen: Vec<u32> = Vec::with_capacity(chunk.len().min(64));
+    for e in chunk {
+        // Small-vector membership test beats HashSet for typical chunk
+        // sizes; falls back gracefully for big chunks because `seen` is
+        // kept sorted.
+        match seen.binary_search(&e.phenx) {
+            Ok(_) => {}
+            Err(pos) => {
+                seen.insert(pos, e.phenx);
+                out.push(*e);
+            }
+        }
+    }
+}
+
+/// Emit all transitive sequences for one (already filtered, date-sorted)
+/// patient chunk into `sink`.
+#[inline]
+fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnMut(SeqRecord)) {
+    let unit = cfg.duration_unit_days.max(1);
+    for i in 0..chunk.len() {
+        let x = chunk[i];
+        for y in &chunk[i + 1..] {
+            if !cfg.include_self_pairs && y.phenx == x.phenx {
+                continue;
+            }
+            debug_assert!(y.date >= x.date, "chunk must be date-sorted");
+            let duration = ((y.date - x.date) as u32) / unit;
+            sink(SeqRecord { seq: encode_seq(x.phenx, y.phenx), pid: x.patient, duration });
+        }
+    }
+}
+
+/// Mine all transitive sequences **in memory** (paper mode 2).
+///
+/// `tracker`, when provided, accounts the engine's logical peak memory
+/// (entry copy + thread-local buffers + merged output).
+pub fn mine_sequences(db: &NumericDbMart, cfg: &MiningConfig) -> Result<SequenceSet, MiningError> {
+    mine_sequences_tracked(db, cfg, None)
+}
+
+/// [`mine_sequences`] with optional logical memory accounting.
+pub fn mine_sequences_tracked(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SequenceSet, MiningError> {
+    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let track = |b: u64| {
+        if let Some(t) = tracker {
+            t.add(b)
+        }
+    };
+    let untrack = |b: u64| {
+        if let Some(t) = tracker {
+            t.sub(b)
+        }
+    };
+
+    // Working copy of the entries (the caller keeps the original dbmart).
+    let mut entries = db.entries.clone();
+    let entries_bytes = (entries.len() * std::mem::size_of::<NumericEntry>()) as u64;
+    track(entries_bytes);
+    let bounds = sort_and_chunk(&mut entries, threads);
+
+    let total = count_sequences(&entries, &bounds, cfg);
+    let out_bytes = total * std::mem::size_of::<SeqRecord>() as u64;
+    track(out_bytes);
+
+    // Thread-local mining over contiguous ranges of patient chunks.
+    // Patients are pre-aggregated into near-equal *entry* ranges so the
+    // O(n²) work is balanced even with skewed chunk sizes.
+    let patient_ranges = balance_patients(&bounds, threads);
+    let mut results: Vec<Vec<SeqRecord>> =
+        par::par_map_chunks(patient_ranges.len(), threads, |range| {
+            let mut local: Vec<SeqRecord> = Vec::new();
+            let mut scratch: Vec<NumericEntry> = Vec::new();
+            for pr in &patient_ranges[range] {
+                for w in bounds[pr.start..pr.end + 1].windows(2) {
+                    let chunk = &entries[w[0]..w[1]];
+                    if cfg.first_occurrence_only {
+                        first_occurrences(chunk, &mut scratch);
+                        local.reserve(pairs_for(scratch.len()) as usize);
+                        sequence_chunk(&scratch, cfg, |r| local.push(r));
+                    } else {
+                        local.reserve(pairs_for(chunk.len()) as usize);
+                        sequence_chunk(chunk, cfg, |r| local.push(r));
+                    }
+                }
+            }
+            local
+        });
+
+    // Merge thread-local vectors into one output buffer.
+    let mut records: Vec<SeqRecord> = Vec::with_capacity(total as usize);
+    for r in &mut results {
+        records.append(r);
+    }
+    // `total` counts self-pairs; with include_self_pairs=false the actual
+    // output is smaller, so `total` is an upper bound used for capacity.
+    debug_assert!(records.len() as u64 <= total);
+    debug_assert!(cfg.include_self_pairs == false || records.len() as u64 == total);
+
+    untrack(entries_bytes);
+    drop(entries);
+    Ok(SequenceSet {
+        records,
+        num_patients: db.num_patients() as u32,
+        num_phenx: db.num_phenx() as u32,
+    })
+}
+
+/// Mine all transitive sequences to **spill files** (paper mode 1).
+///
+/// Each worker streams its records through a buffered [`SeqWriter`]; the
+/// resident set stays at O(buffer × threads) regardless of output size —
+/// this is the configuration behind the paper's "1.33 GB instead of
+/// 43 GB" row in Table 1.
+pub fn mine_sequences_to_files(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+) -> Result<SeqFileSet, MiningError> {
+    mine_sequences_to_files_tracked(db, cfg, None)
+}
+
+/// [`mine_sequences_to_files`] with optional logical memory accounting.
+pub fn mine_sequences_to_files_tracked(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqFileSet, MiningError> {
+    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    if let Some(t) = tracker {
+        t.add((db.entries.len() * std::mem::size_of::<NumericEntry>()) as u64);
+    }
+    let mut entries = db.entries.clone();
+    let bounds = sort_and_chunk(&mut entries, threads);
+    let patient_ranges = balance_patients(&bounds, threads);
+
+    let paths: Vec<Result<(PathBuf, u64), std::io::Error>> =
+        par::par_map_chunks(patient_ranges.len(), threads, |range| {
+            let path = cfg.work_dir.join(format!("seqs_{:04}.tspm", range.start));
+            let mut writer = SeqWriter::create(&path)?;
+            if let Some(t) = tracker {
+                t.add(crate::seqstore::WRITER_BUFFER_BYTES as u64);
+            }
+            let mut scratch: Vec<NumericEntry> = Vec::new();
+            for pr in &patient_ranges[range] {
+                for w in bounds[pr.start..pr.end + 1].windows(2) {
+                    let chunk = &entries[w[0]..w[1]];
+                    let mut err: Option<std::io::Error> = None;
+                    {
+                        let sink = |r: SeqRecord| {
+                            if err.is_none() {
+                                if let Err(e) = writer.write(r) {
+                                    err = Some(e);
+                                }
+                            }
+                        };
+                        if cfg.first_occurrence_only {
+                            first_occurrences(chunk, &mut scratch);
+                            sequence_chunk(&scratch, cfg, sink);
+                        } else {
+                            sequence_chunk(chunk, cfg, sink);
+                        }
+                    }
+                    if let Some(e) = err {
+                        return Err(e);
+                    }
+                }
+            }
+            let count = writer.finish()?;
+            if let Some(t) = tracker {
+                t.sub(crate::seqstore::WRITER_BUFFER_BYTES as u64);
+            }
+            Ok((path, count))
+        });
+
+    let mut fileset = SeqFileSet {
+        files: Vec::new(),
+        total_records: 0,
+        num_patients: db.num_patients() as u32,
+        num_phenx: db.num_phenx() as u32,
+    };
+    for p in paths {
+        let (path, count) = p?;
+        fileset.total_records += count;
+        fileset.files.push(path);
+    }
+    if let Some(t) = tracker {
+        t.sub((db.entries.len() * std::mem::size_of::<NumericEntry>()) as u64);
+    }
+    Ok(fileset)
+}
+
+/// Group patient chunks into per-worker ranges balanced by *quadratic*
+/// cost (n²), since sequencing cost is quadratic in chunk length.
+/// Returns ranges over indices into `bounds` windows.
+fn balance_patients(bounds: &[usize], workers: usize) -> Vec<std::ops::Range<usize>> {
+    let n_patients = bounds.len().saturating_sub(1);
+    if n_patients == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n_patients);
+    let cost = |i: usize| {
+        let n = (bounds[i + 1] - bounds[i]) as u64;
+        1 + n * n
+    };
+    let total: u64 = (0..n_patients).map(cost).sum();
+    let per_worker = total / workers as u64 + 1;
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for i in 0..n_patients {
+        acc += cost(i);
+        if acc >= per_worker && ranges.len() + 1 < workers {
+            ranges.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    if start < n_patients {
+        ranges.push(start..n_patients);
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::{decode_seq, DbMart, DbMartEntry};
+
+    fn raw(p: &str, date: i32, x: &str) -> DbMartEntry {
+        DbMartEntry { patient_id: p.into(), date, phenx: x.into(), description: None }
+    }
+
+    fn tiny_db() -> NumericDbMart {
+        // patient A: a@1, b@3, a@7   patient B: c@2, b@2
+        NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", 1, "a"),
+            raw("A", 3, "b"),
+            raw("A", 7, "a"),
+            raw("B", 2, "c"),
+            raw("B", 2, "b"),
+        ]))
+    }
+
+    #[test]
+    fn mines_all_ordered_pairs_with_durations() {
+        let db = tiny_db();
+        let got = mine_sequences(&db, &MiningConfig::default()).unwrap();
+        // A: 3 entries → 3 pairs; B: 2 entries → 1 pair.
+        assert_eq!(got.len(), 4);
+        let a = db.lookup.phenx_id("a").unwrap();
+        let b = db.lookup.phenx_id("b").unwrap();
+        let c = db.lookup.phenx_id("c").unwrap();
+        let mut set: Vec<(u64, u32, u32)> =
+            got.records.iter().map(|r| (r.seq, r.pid, r.duration)).collect();
+        set.sort_unstable();
+        let common = vec![
+            (encode_seq(a, b), 0u32, 2u32), // a@1 → b@3
+            (encode_seq(a, a), 0, 6),       // a@1 → a@7 (self pair)
+            (encode_seq(b, a), 0, 4),       // b@3 → a@7
+        ];
+        // Same-date pair direction depends on the deterministic phenX
+        // tie-break; accept either orientation.
+        let mut variant1 = common.clone();
+        variant1.push((encode_seq(c, b), 1, 0));
+        variant1.sort_unstable();
+        let mut variant2 = common;
+        variant2.push((encode_seq(b, c), 1, 0));
+        variant2.sort_unstable();
+        assert!(set == variant1 || set == variant2, "got {set:?}");
+    }
+
+    #[test]
+    fn sequence_count_formula_holds() {
+        // paper: ((n-1)·n)/2 sequences per patient
+        let mut entries = Vec::new();
+        for (p, n) in [("p1", 10), ("p2", 25), ("p3", 1), ("p4", 0)] {
+            for i in 0..n {
+                entries.push(raw(p, i, &format!("x{i}")));
+            }
+        }
+        let db = NumericDbMart::encode(&DbMart::new(entries));
+        let got = mine_sequences(&db, &MiningConfig::default()).unwrap();
+        assert_eq!(got.len() as u64, pairs_for(10) + pairs_for(25) + pairs_for(1));
+    }
+
+    #[test]
+    fn first_occurrence_filter_dedupes_phenx() {
+        let db = NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", 1, "a"),
+            raw("A", 2, "b"),
+            raw("A", 3, "a"), // dropped: 'a' already seen
+            raw("A", 4, "c"),
+        ]));
+        let cfg = MiningConfig { first_occurrence_only: true, ..Default::default() };
+        let got = mine_sequences(&db, &cfg).unwrap();
+        assert_eq!(got.len() as u64, pairs_for(3)); // a,b,c
+        // And the dropped occurrence must not shift durations: a→c uses a@1.
+        let a = db.lookup.phenx_id("a").unwrap();
+        let c = db.lookup.phenx_id("c").unwrap();
+        let ac = got.records.iter().find(|r| r.seq == encode_seq(a, c)).unwrap();
+        assert_eq!(ac.duration, 3);
+    }
+
+    #[test]
+    fn duration_unit_divides() {
+        let db = NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", 0, "a"),
+            raw("A", 21, "b"),
+        ]));
+        let cfg = MiningConfig { duration_unit_days: 7, ..Default::default() };
+        let got = mine_sequences(&db, &cfg).unwrap();
+        assert_eq!(got.records[0].duration, 3); // 21 days = 3 weeks
+    }
+
+    #[test]
+    fn self_pairs_can_be_excluded() {
+        let db = NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", 1, "a"),
+            raw("A", 2, "a"),
+            raw("A", 3, "b"),
+        ]));
+        let cfg = MiningConfig { include_self_pairs: false, ..Default::default() };
+        let got = mine_sequences(&db, &cfg).unwrap();
+        for r in &got.records {
+            let (s, e) = decode_seq(r.seq);
+            assert_ne!(s, e);
+        }
+        assert_eq!(got.len(), 2); // a@1→b, a@2→b
+    }
+
+    #[test]
+    fn unsorted_input_is_sorted_internally() {
+        let db = NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", 9, "c"),
+            raw("A", 1, "a"),
+            raw("A", 5, "b"),
+        ]));
+        let got = mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let a = db.lookup.phenx_id("a").unwrap();
+        let c = db.lookup.phenx_id("c").unwrap();
+        let ac = got.records.iter().find(|r| r.seq == encode_seq(a, c)).unwrap();
+        assert_eq!(ac.duration, 8);
+    }
+
+    #[test]
+    fn thread_counts_agree() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let mut last: Option<Vec<SeqRecord>> = None;
+        for threads in [1usize, 2, 4] {
+            let cfg = MiningConfig { threads, ..Default::default() };
+            let mut got = mine_sequences(&db, &cfg).unwrap().records;
+            got.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+            if let Some(prev) = &last {
+                assert_eq!(prev, &got, "threads={threads} changed the result");
+            }
+            last = Some(got);
+        }
+    }
+
+    #[test]
+    fn file_mode_matches_memory_mode() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let mem = mine_sequences(&db, &MiningConfig::default()).unwrap();
+
+        let dir = std::env::temp_dir().join("tspm_test_filemode");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = MiningConfig {
+            mode: MiningMode::FileBased,
+            work_dir: dir.clone(),
+            threads: 3,
+            ..Default::default()
+        };
+        let files = mine_sequences_to_files(&db, &cfg).unwrap();
+        assert_eq!(files.total_records as usize, mem.len());
+        let mut from_files = files.read_all().unwrap();
+        let mut from_mem = mem.records.clone();
+        from_files.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        from_mem.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        assert_eq!(from_files, from_mem);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dbmart_yields_empty_set() {
+        let db = NumericDbMart::default();
+        let got = mine_sequences(&db, &MiningConfig::default()).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn balance_patients_covers_all() {
+        // bounds for 5 patients with sizes 1, 100, 2, 3, 50
+        let bounds = vec![0, 1, 101, 103, 106, 156];
+        for workers in [1usize, 2, 3, 8] {
+            let ranges = balance_patients(&bounds, workers);
+            let mut covered = Vec::new();
+            for r in &ranges {
+                for i in r.clone() {
+                    covered.push(i);
+                }
+            }
+            assert_eq!(covered, (0..5).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn record_is_16_bytes() {
+        assert_eq!(std::mem::size_of::<SeqRecord>(), 16);
+    }
+
+    #[test]
+    fn memory_tracker_records_peak() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let tracker = MemTracker::new();
+        let got = mine_sequences_tracked(&db, &MiningConfig::default(), Some(&tracker)).unwrap();
+        assert!(tracker.peak() >= got.byte_size());
+    }
+}

@@ -1,0 +1,410 @@
+//! MLHO-style machine-learning workflow (vignette 1).
+//!
+//! Reproduces the paper's first vignette: mined + screened sequences →
+//! MSMR top-K selection → classifier → evaluation → translation of the
+//! significant sequences back to human-readable descriptions. The
+//! classifier is a logistic regression trained by full-batch gradient
+//! descent; forward/backward run as the AOT-compiled `logreg_grad` /
+//! `logreg_predict` PJRT artifacts (tiled over patients, gradients
+//! accumulated in Rust — Rust owns the optimizer loop, PJRT owns the
+//! compute), with a pure-Rust fallback for artifact-less runs.
+
+use crate::matrix::SeqMatrix;
+use crate::rng::Rng;
+use crate::runtime::{ArtifactSet, RuntimeError, Tensor};
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub learning_rate: f32,
+    pub epochs: usize,
+    /// L2 regularisation strength.
+    pub l2: f32,
+    /// Train fraction of the patient split.
+    pub train_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { learning_rate: 0.5, epochs: 200, l2: 1e-4, train_fraction: 0.7, seed: 17 }
+    }
+}
+
+/// A trained logistic-regression model.
+#[derive(Clone, Debug)]
+pub struct LogReg {
+    pub w: Vec<f32>,
+    pub b: f32,
+}
+
+impl LogReg {
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let z: f32 = self.b + row.iter().zip(&self.w).map(|(x, w)| x * w).sum::<f32>();
+        1.0 / (1.0 + (-z).exp())
+    }
+}
+
+/// Evaluation metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Metrics {
+    pub auc: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Patient-level train/test split (deterministic for a seed).
+pub fn split_patients(num_patients: u32, train_fraction: f64, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut ids: Vec<u32> = (0..num_patients).collect();
+    Rng::new(seed).shuffle(&mut ids);
+    let cut = ((num_patients as f64) * train_fraction).round() as usize;
+    let (train, test) = ids.split_at(cut.min(ids.len()));
+    (train.to_vec(), test.to_vec())
+}
+
+/// Area under the ROC curve (rank statistic, ties handled by midrank).
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midranks
+    let mut ranks = vec![0f64; scores.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = midrank;
+        }
+        i = j + 1;
+    }
+    let npos = labels.iter().filter(|&&l| l > 0.5).count() as f64;
+    let nneg = labels.len() as f64 - npos;
+    if npos == 0.0 || nneg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = labels
+        .iter()
+        .zip(&ranks)
+        .filter(|(&l, _)| l > 0.5)
+        .map(|(_, &r)| r)
+        .sum();
+    (rank_sum - npos * (npos + 1.0) / 2.0) / (npos * nneg)
+}
+
+/// Dense design-matrix view over selected patients (row-major, F cols).
+pub struct Design {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Materialise (X, y) for a patient subset from the CSR matrix.
+pub fn design(m: &SeqMatrix, labels: &[f32], patients: &[u32]) -> Design {
+    let cols = m.num_cols();
+    let mut x = vec![0f32; patients.len() * cols];
+    let mut y = vec![0f32; patients.len()];
+    for (i, &pid) in patients.iter().enumerate() {
+        y[i] = labels[pid as usize];
+        for &c in &m.col_idx[m.row_ptr[pid as usize]..m.row_ptr[pid as usize + 1]] {
+            x[i * cols + c as usize] = 1.0;
+        }
+    }
+    Design { x, y, rows: patients.len(), cols }
+}
+
+/// Train with pure-Rust gradient descent (fallback & oracle).
+pub fn train_rust(d: &Design, cfg: &TrainConfig) -> LogReg {
+    let mut w = vec![0f32; d.cols];
+    let mut b = 0f32;
+    let n = d.rows.max(1) as f32;
+    for _ in 0..cfg.epochs {
+        let mut gw = vec![0f32; d.cols];
+        let mut gb = 0f32;
+        for r in 0..d.rows {
+            let row = &d.x[r * d.cols..(r + 1) * d.cols];
+            let z: f32 = b + row.iter().zip(&w).map(|(x, wv)| x * wv).sum::<f32>();
+            let p = 1.0 / (1.0 + (-z).exp());
+            let err = p - d.y[r];
+            for (g, x) in gw.iter_mut().zip(row) {
+                *g += err * x;
+            }
+            gb += err;
+        }
+        for (wv, g) in w.iter_mut().zip(&gw) {
+            *wv -= cfg.learning_rate * (g / n + cfg.l2 * *wv);
+        }
+        b -= cfg.learning_rate * gb / n;
+    }
+    LogReg { w, b }
+}
+
+/// Train via the PJRT `logreg_grad` artifact, tiling patients and
+/// accumulating gradient sums in Rust.
+pub fn train_pjrt(d: &Design, cfg: &TrainConfig, arts: &ArtifactSet) -> Result<LogReg, RuntimeError> {
+    let (tp, tf) = (arts.tile_rows, arts.tile_features);
+    if d.cols > tf {
+        return Err(RuntimeError(format!(
+            "design has {} features; artifact tile holds {tf} — select ≤ {tf} features first",
+            d.cols
+        )));
+    }
+    let grad_art = arts.get("logreg_grad")?;
+
+    // Pre-build the padded per-tile (X, y, mask) tensors once.
+    let mut tiles: Vec<(Tensor, Tensor, Tensor)> = Vec::new();
+    for row0 in (0..d.rows).step_by(tp) {
+        let rows_here = tp.min(d.rows - row0);
+        let mut x = vec![0f32; tp * tf];
+        let mut y = vec![0f32; tp];
+        let mut mask = vec![0f32; tp];
+        for i in 0..rows_here {
+            let src = &d.x[(row0 + i) * d.cols..(row0 + i + 1) * d.cols];
+            x[i * tf..i * tf + d.cols].copy_from_slice(src);
+            y[i] = d.y[row0 + i];
+            mask[i] = 1.0;
+        }
+        tiles.push((
+            Tensor::new(vec![tp, tf], x),
+            Tensor::new(vec![tp, 1], y),
+            Tensor::new(vec![tp, 1], mask),
+        ));
+    }
+
+    let n = d.rows.max(1) as f32;
+    let mut w = Tensor::zeros(vec![tf, 1]);
+    let mut b = Tensor::zeros(vec![1, 1]);
+    for _ in 0..cfg.epochs {
+        let mut gw = vec![0f32; tf];
+        let mut gb = 0f32;
+        for (x, y, mask) in &tiles {
+            let out =
+                grad_art.run(&[w.clone(), b.clone(), x.clone(), y.clone(), mask.clone()])?;
+            for (acc, g) in gw.iter_mut().zip(&out[0].data) {
+                *acc += g;
+            }
+            gb += out[1].data[0];
+        }
+        for (wv, g) in w.data.iter_mut().zip(&gw) {
+            *wv -= cfg.learning_rate * (g / n + cfg.l2 * *wv);
+        }
+        b.data[0] -= cfg.learning_rate * gb / n;
+    }
+    Ok(LogReg { w: w.data[..d.cols].to_vec(), b: b.data[0] })
+}
+
+/// Evaluate a model on a design.
+pub fn evaluate(model: &LogReg, d: &Design) -> Metrics {
+    let scores: Vec<f32> = (0..d.rows)
+        .map(|r| model.predict_one(&d.x[r * d.cols..(r + 1) * d.cols]))
+        .collect();
+    let correct = scores
+        .iter()
+        .zip(&d.y)
+        .filter(|(&s, &y)| (s > 0.5) == (y > 0.5))
+        .count();
+    Metrics {
+        auc: auc(&scores, &d.y),
+        accuracy: correct as f64 / d.rows.max(1) as f64,
+        n: d.rows,
+    }
+}
+
+/// Full MLHO-style run: split → train → evaluate.
+pub fn run_workflow(
+    m: &SeqMatrix,
+    labels: &[f32],
+    cfg: &TrainConfig,
+    artifacts: Option<&ArtifactSet>,
+) -> Result<(LogReg, Metrics, Metrics), RuntimeError> {
+    let (train_ids, test_ids) = split_patients(m.num_patients, cfg.train_fraction, cfg.seed);
+    let train_d = design(m, labels, &train_ids);
+    let test_d = design(m, labels, &test_ids);
+    let model = match artifacts {
+        Some(a) => train_pjrt(&train_d, cfg, a)?,
+        None => train_rust(&train_d, cfg),
+    };
+    Ok((model.clone(), evaluate(&model, &train_d), evaluate(&model, &test_d)))
+}
+
+/// Vignette 1 end-to-end driver (shared by `tspm mlho`, `tspm e2e` and
+/// `examples/mlho_workflow.rs`): generate the synthetic COVID cohort,
+/// mine + screen sequences, label patients by Post-COVID ground truth,
+/// MSMR-select `top_k` sequences, train and evaluate the classifier, and
+/// translate the most predictive sequences back to readable form.
+pub fn mlho_vignette(
+    patients: u64,
+    top_k: usize,
+    epochs: usize,
+    artifacts: Option<&ArtifactSet>,
+) -> Result<String, String> {
+    use crate::mining::{mine_sequences, MiningConfig};
+    use crate::msmr::{self, MsmrConfig};
+    use crate::sparsity::{self, SparsityConfig};
+
+    let mut gen_cfg = crate::synthea::SyntheaConfig::small();
+    gen_cfg.patients = patients;
+    let g = gen_cfg.generate_with_truth();
+    let db = crate::dbmart::NumericDbMart::encode(&g.dbmart);
+
+    // Label: does the patient develop Post-COVID (any symptom)?
+    let pc_patients: std::collections::BTreeSet<&str> =
+        g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
+    let labels: Vec<f32> = (0..db.num_patients())
+        .map(|p| f32::from(pc_patients.contains(db.lookup.patient_name(p as u32))))
+        .collect();
+
+    let mut out = String::new();
+    let mined = mine_sequences(&db, &MiningConfig::default()).map_err(|e| e.to_string())?;
+    let mut records = mined.records;
+    let stats = sparsity::screen(
+        &mut records,
+        &SparsityConfig {
+            min_patients: crate::bench_util::experiments::threshold_for(patients),
+            threads: 0,
+        },
+    );
+    out.push_str(&format!(
+        "mined {} records; screened to {} ({} distinct sequences)\n",
+        stats.records_before, stats.records_after, stats.distinct_after
+    ));
+
+    let m = crate::matrix::SeqMatrix::build(&records, db.num_patients() as u32);
+    let sel = msmr::select(&m, &labels, &MsmrConfig { top_k, ..Default::default() }, artifacts)
+        .map_err(|e| e.to_string())?;
+    out.push_str(&format!("MSMR selected {} features\n", sel.columns.len()));
+    let selected = m.select_columns(&sel.columns);
+
+    let (model, train_m, test_m) = run_workflow(
+        &selected,
+        &labels,
+        &TrainConfig { epochs, ..Default::default() },
+        artifacts,
+    )
+    .map_err(|e| e.to_string())?;
+    out.push_str(&format!(
+        "train: AUC {:.3} acc {:.3} (n={})\ntest:  AUC {:.3} acc {:.3} (n={})\n",
+        train_m.auc, train_m.accuracy, train_m.n, test_m.auc, test_m.accuracy, test_m.n
+    ));
+
+    // Translate the most predictive sequences back to human-readable form
+    // (the vignette's final step).
+    let mut weighted: Vec<(f32, usize)> =
+        model.w.iter().enumerate().map(|(i, &w)| (w, i)).collect();
+    weighted.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
+    out.push_str("top predictive sequences:\n");
+    for (w, col) in weighted.iter().take(5) {
+        let seq = selected.seq_ids[*col];
+        let (s, e) = crate::dbmart::decode_seq(seq);
+        out.push_str(&format!(
+            "  w={w:+.3}  {} -> {}\n",
+            db.lookup.phenx_name(s),
+            db.lookup.phenx_name(e)
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::SeqRecord;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &[1.0, 1.0, 0.0, 0.0]), 1.0);
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &[1.0, 1.0, 0.0, 0.0]), 0.0);
+        assert_eq!(auc(&[0.5, 0.5, 0.5, 0.5], &[1.0, 0.0, 1.0, 0.0]), 0.5);
+        assert_eq!(auc(&[0.3], &[1.0]), 0.5); // single class degenerates
+    }
+
+    #[test]
+    fn auc_with_ties_uses_midranks() {
+        // scores: pos {0.8, 0.5}, neg {0.5, 0.2} → AUC = (1 + 0.5 + 1 + 0)/4?
+        // pairs: (0.8 vs 0.5)=1, (0.8 vs 0.2)=1, (0.5 vs 0.5)=0.5, (0.5 vs 0.2)=1 → 3.5/4
+        let got = auc(&[0.8, 0.5, 0.5, 0.2], &[1.0, 1.0, 0.0, 0.0]);
+        assert!((got - 3.5 / 4.0).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn split_is_deterministic_and_disjoint() {
+        let (a1, b1) = split_patients(100, 0.7, 42);
+        let (a2, b2) = split_patients(100, 0.7, 42);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_eq!(a1.len(), 70);
+        assert_eq!(b1.len(), 30);
+        let mut all: Vec<u32> = a1.iter().chain(b1.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    fn separable_matrix() -> (SeqMatrix, Vec<f32>) {
+        // 60 patients; positives carry seq 10, negatives seq 20; noise 30.
+        let mut records = Vec::new();
+        let mut r = Rng::new(3);
+        for pid in 0..60u32 {
+            if pid < 30 {
+                records.push(SeqRecord { seq: 10, pid, duration: 0 });
+            } else {
+                records.push(SeqRecord { seq: 20, pid, duration: 0 });
+            }
+            if r.gen_bool(0.5) {
+                records.push(SeqRecord { seq: 30, pid, duration: 0 });
+            }
+        }
+        let labels: Vec<f32> = (0..60).map(|p| f32::from(p < 30)).collect();
+        (SeqMatrix::build(&records, 60), labels)
+    }
+
+    #[test]
+    fn rust_training_separates_separable_data() {
+        let (m, labels) = separable_matrix();
+        let (model, train_m, test_m) =
+            run_workflow(&m, &labels, &TrainConfig::default(), None).unwrap();
+        assert!(train_m.auc > 0.99, "train auc {}", train_m.auc);
+        assert!(test_m.auc > 0.99, "test auc {}", test_m.auc);
+        // weight on the positive marker must exceed the noise weight
+        let col10 = m.seq_ids.iter().position(|&s| s == 10).unwrap();
+        let col30 = m.seq_ids.iter().position(|&s| s == 30).unwrap();
+        assert!(model.w[col10] > model.w[col30].abs());
+    }
+
+    #[test]
+    fn pjrt_training_matches_rust_when_artifacts_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let arts = ArtifactSet::load(&dir).unwrap();
+        let (m, labels) = separable_matrix();
+        let cfg = TrainConfig { epochs: 50, ..Default::default() };
+        let (train_ids, _) = split_patients(m.num_patients, cfg.train_fraction, cfg.seed);
+        let d = design(&m, &labels, &train_ids);
+        let rust_model = train_rust(&d, &cfg);
+        let pjrt_model = train_pjrt(&d, &cfg, &arts).unwrap();
+        assert!((rust_model.b - pjrt_model.b).abs() < 1e-3);
+        for (a, b) in rust_model.w.iter().zip(&pjrt_model.w) {
+            assert!((a - b).abs() < 1e-3, "rust {a} vs pjrt {b}");
+        }
+    }
+
+    #[test]
+    fn design_materialises_rows_in_patient_order() {
+        let (m, labels) = separable_matrix();
+        let d = design(&m, &labels, &[5, 45]);
+        assert_eq!(d.rows, 2);
+        assert_eq!(d.y, vec![1.0, 0.0]);
+        let col10 = m.seq_ids.iter().position(|&s| s == 10).unwrap();
+        let col20 = m.seq_ids.iter().position(|&s| s == 20).unwrap();
+        assert_eq!(d.x[col10], 1.0);
+        assert_eq!(d.x[d.cols + col20], 1.0);
+    }
+
+    use crate::rng::Rng;
+}

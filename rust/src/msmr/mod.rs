@@ -1,0 +1,392 @@
+//! MSMR — Minimize Sparsity, Maximize Relevance feature selection.
+//!
+//! After the sparsity screen, MSMR (Estiri et al. 2020) ranks the
+//! surviving sequences by **joint mutual information** against the
+//! phenotype label and keeps the top-K (the MLHO vignette uses K = 200).
+//! This implementation follows the JMI family: greedy forward selection
+//! maximising `MI(f; y) − mean_{s ∈ selected} MI(f; s)` — relevance minus
+//! redundancy — where all MI terms come from 2×2 contingency tables over
+//! the binary patient×sequence matrix.
+//!
+//! The count contractions (`Xᵀ·y` for relevance, `Xᵀ·X` over the
+//! candidate pool for redundancy) are the dense hot-spot; when an
+//! [`ArtifactSet`] is supplied they run on the AOT-compiled Pallas
+//! kernel via PJRT (`cooc`, `cooc_label` artifacts), tiled and
+//! accumulated across the patient dimension. A pure-Rust path computes
+//! the same numbers for artifact-less runs and as the test oracle.
+
+use crate::matrix::SeqMatrix;
+use crate::runtime::{ArtifactSet, RuntimeError, Tensor};
+
+/// Selection configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MsmrConfig {
+    /// Features to keep.
+    pub top_k: usize,
+    /// Candidate pool ranked by relevance before the greedy pass
+    /// (bounds the F×F redundancy matrix).
+    pub pool_size: usize,
+    /// Redundancy weight β in `MI(f;y) − β·mean MI(f;s)`.
+    pub beta: f64,
+}
+
+impl Default for MsmrConfig {
+    fn default() -> Self {
+        MsmrConfig { top_k: 200, pool_size: 256, beta: 1.0 }
+    }
+}
+
+/// Selection result.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Chosen columns (indices into the input matrix), selection order.
+    pub columns: Vec<u32>,
+    /// Relevance MI(f; y) per chosen column.
+    pub relevance: Vec<f64>,
+}
+
+/// Mutual information of a 2×2 contingency table given `n11`, the
+/// marginals `ci`, `cj`, and the total `n` (natural log; the convention
+/// 0·log(0/·) = 0). Mirrors `python/compile/kernels/ref.py::mi_pair_ref`.
+pub fn mi_from_counts(n11: f64, ci: f64, cj: f64, n: f64) -> f64 {
+    debug_assert!(n > 0.0);
+    let n10 = ci - n11;
+    let n01 = cj - n11;
+    let n00 = n - ci - cj + n11;
+    let term = |nab: f64, pa: f64, pb: f64| -> f64 {
+        if nab > 0.0 && pa > 0.0 && pb > 0.0 {
+            (nab / n) * ((nab * n) / (pa * pb)).ln()
+        } else {
+            0.0
+        }
+    };
+    let mi = term(n11, ci, cj)
+        + term(n10, ci, n - cj)
+        + term(n01, n - ci, cj)
+        + term(n00, n - ci, n - cj);
+    mi.max(0.0)
+}
+
+/// Per-feature label co-occurrence counts `n11[f] = #{p : X[p,f]=1 ∧ y[p]=1}`.
+///
+/// Pure-Rust path over the CSR matrix.
+pub fn label_counts_rust(m: &SeqMatrix, labels: &[f32]) -> Vec<f64> {
+    assert_eq!(labels.len(), m.num_patients as usize);
+    let mut n11 = vec![0f64; m.num_cols()];
+    for pid in 0..m.num_patients as usize {
+        if labels[pid] > 0.5 {
+            for &c in &m.col_idx[m.row_ptr[pid]..m.row_ptr[pid + 1]] {
+                n11[c as usize] += 1.0;
+            }
+        }
+    }
+    n11
+}
+
+/// Pairwise co-occurrence counts over a column subset (pool × pool),
+/// pure-Rust path (sparse row intersection via dense marker).
+pub fn pair_counts_rust(m: &SeqMatrix, pool: &[u32]) -> Vec<f64> {
+    let k = pool.len();
+    let mut pos_in_pool = vec![usize::MAX; m.num_cols()];
+    for (i, &c) in pool.iter().enumerate() {
+        pos_in_pool[c as usize] = i;
+    }
+    let mut counts = vec![0f64; k * k];
+    let mut present: Vec<usize> = Vec::new();
+    for pid in 0..m.num_patients as usize {
+        present.clear();
+        for &c in &m.col_idx[m.row_ptr[pid]..m.row_ptr[pid + 1]] {
+            let p = pos_in_pool[c as usize];
+            if p != usize::MAX {
+                present.push(p);
+            }
+        }
+        for (ai, &a) in present.iter().enumerate() {
+            for &b in &present[ai..] {
+                counts[a * k + b] += 1.0;
+                if a != b {
+                    counts[b * k + a] += 1.0;
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Label co-occurrence counts via the PJRT `cooc_label` artifact,
+/// accumulating over row tiles.
+pub fn label_counts_pjrt(
+    m: &SeqMatrix,
+    labels: &[f32],
+    arts: &ArtifactSet,
+) -> Result<Vec<f64>, RuntimeError> {
+    let (tp, tf) = (arts.tile_rows, arts.tile_features);
+    let artifact = arts.get("cooc_label")?;
+    let mut n11 = vec![0f64; m.num_cols()];
+    let rows = m.num_patients as usize;
+    for row0 in (0..rows).step_by(tp) {
+        // Label tile (zero-padded → padded rows contribute nothing).
+        let mut y = vec![0f32; tp];
+        for i in 0..tp.min(rows - row0) {
+            y[i] = labels[row0 + i];
+        }
+        let y = Tensor::new(vec![tp, 1], y);
+        for col0 in (0..m.num_cols()).step_by(tf) {
+            let x = Tensor::new(vec![tp, tf], m.dense_tile(row0 as u32, tp, col0 as u32, tf));
+            let out = artifact.run(&[x, y.clone()])?;
+            for (i, v) in out[0].data.iter().enumerate() {
+                if col0 + i < m.num_cols() {
+                    n11[col0 + i] += *v as f64;
+                }
+            }
+        }
+    }
+    Ok(n11)
+}
+
+/// Pool × pool co-occurrence via the PJRT `cooc` artifact. The pool is
+/// padded to one feature tile (pool_size ≤ tile_features).
+pub fn pair_counts_pjrt(
+    m: &SeqMatrix,
+    pool: &[u32],
+    arts: &ArtifactSet,
+) -> Result<Vec<f64>, RuntimeError> {
+    let (tp, tf) = (arts.tile_rows, arts.tile_features);
+    assert!(pool.len() <= tf, "pool must fit one feature tile");
+    let artifact = arts.get("cooc")?;
+    let sub = m.select_columns(pool);
+    let k = pool.len();
+    let mut counts = vec![0f64; k * k];
+    let rows = m.num_patients as usize;
+    for row0 in (0..rows).step_by(tp) {
+        let x = Tensor::new(vec![tp, tf], sub.dense_tile(row0 as u32, tp, 0, tf));
+        let out = artifact.run(&[x.clone(), x])?;
+        for a in 0..k {
+            for b in 0..k {
+                counts[a * k + b] += out[0].data[a * tf + b] as f64;
+            }
+        }
+    }
+    Ok(counts)
+}
+
+/// Run MSMR selection. `labels[p] ∈ {0,1}` per dense patient id; with
+/// `artifacts` the contractions run on PJRT, otherwise pure Rust.
+pub fn select(
+    m: &SeqMatrix,
+    labels: &[f32],
+    cfg: &MsmrConfig,
+    artifacts: Option<&ArtifactSet>,
+) -> Result<Selection, RuntimeError> {
+    let n = m.num_patients as f64;
+    let n_cols = m.num_cols();
+    if n_cols == 0 || m.num_patients == 0 {
+        return Ok(Selection { columns: Vec::new(), relevance: Vec::new() });
+    }
+    let col_counts: Vec<f64> = m.col_counts().iter().map(|&c| c as f64).collect();
+    let npos: f64 = labels.iter().filter(|&&v| v > 0.5).count() as f64;
+
+    // 1. Relevance MI(f; y). Label counts are a *sparse* contraction
+    // (one CSR scan over the nnz), so they stay on L3 regardless of
+    // artifacts — densifying every feature tile to feed the accelerator
+    // costs orders of magnitude more than the count itself (perf pass,
+    // EXPERIMENTS.md §Perf). The dense work PJRT is for is the pool×pool
+    // co-occurrence below. `label_counts_pjrt` remains available and
+    // parity-tested for callers whose matrices are already dense.
+    let n11 = label_counts_rust(m, labels);
+    let relevance: Vec<f64> = (0..n_cols)
+        .map(|f| mi_from_counts(n11[f], col_counts[f], npos, n))
+        .collect();
+
+    // 2. Candidate pool: top `pool_size` by relevance.
+    let pool_size = cfg.pool_size.min(n_cols);
+    let mut order: Vec<u32> = (0..n_cols as u32).collect();
+    order.sort_by(|&a, &b| {
+        relevance[b as usize]
+            .partial_cmp(&relevance[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let pool: Vec<u32> = order[..pool_size].to_vec();
+
+    // 3. Redundancy matrix over the pool.
+    let pair = match artifacts {
+        Some(a) => pair_counts_pjrt(m, &pool, a)?,
+        None => pair_counts_rust(m, &pool),
+    };
+    let k = pool.len();
+    let mi_pair = |a: usize, b: usize| -> f64 {
+        mi_from_counts(
+            pair[a * k + b],
+            col_counts[pool[a] as usize],
+            col_counts[pool[b] as usize],
+            n,
+        )
+    };
+
+    // 4. Greedy forward selection.
+    let top_k = cfg.top_k.min(k);
+    let mut selected: Vec<usize> = Vec::with_capacity(top_k);
+    let mut in_sel = vec![false; k];
+    // redundancy_sum[i] = Σ_{s ∈ selected} MI(pool[i]; pool[s])
+    let mut redundancy_sum = vec![0f64; k];
+    for _ in 0..top_k {
+        // (index, score, redundancy); ties on score break toward the
+        // *less redundant* candidate — a fully redundant duplicate must
+        // never beat an uninformative-but-novel feature at equal score.
+        let mut best: Option<(usize, f64, f64)> = None;
+        for i in 0..k {
+            if in_sel[i] {
+                continue;
+            }
+            let red = if selected.is_empty() {
+                0.0
+            } else {
+                redundancy_sum[i] / selected.len() as f64
+            };
+            let score = relevance[pool[i] as usize] - cfg.beta * red;
+            let better = match best {
+                None => true,
+                Some((_, s, r)) => score > s + 1e-12 || (score > s - 1e-12 && red < r),
+            };
+            if better {
+                best = Some((i, score, red));
+            }
+        }
+        let (chosen, _, _) = best.expect("non-empty pool");
+        in_sel[chosen] = true;
+        selected.push(chosen);
+        for i in 0..k {
+            if !in_sel[i] {
+                redundancy_sum[i] += mi_pair(i, chosen);
+            }
+        }
+    }
+
+    Ok(Selection {
+        relevance: selected.iter().map(|&i| relevance[pool[i] as usize]).collect(),
+        columns: selected.into_iter().map(|i| pool[i]).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::SeqRecord;
+    use crate::rng::Rng;
+
+    fn rec(seq: u64, pid: u32) -> SeqRecord {
+        SeqRecord { seq, pid, duration: 0 }
+    }
+
+    /// 40 patients; label = patient < 20.
+    /// col A (seq 10): perfect predictor. col B (seq 20): copy of A
+    /// (fully redundant). col C (seq 30): random. col D (seq 40): weak.
+    fn synthetic() -> (SeqMatrix, Vec<f32>) {
+        let mut records = Vec::new();
+        let mut r = Rng::new(5);
+        for pid in 0..40u32 {
+            let positive = pid < 20;
+            if positive {
+                records.push(rec(10, pid));
+                records.push(rec(20, pid));
+            }
+            if r.gen_bool(0.5) {
+                records.push(rec(30, pid));
+            }
+            if positive && r.gen_bool(0.8) || (!positive && r.gen_bool(0.2)) {
+                records.push(rec(40, pid));
+            }
+        }
+        let m = SeqMatrix::build(&records, 40);
+        let labels: Vec<f32> = (0..40).map(|p| f32::from(p < 20)).collect();
+        (m, labels)
+    }
+
+    #[test]
+    fn mi_from_counts_basics() {
+        // perfect association: MI = H(y) = ln 2 for balanced y
+        let mi = mi_from_counts(20.0, 20.0, 20.0, 40.0);
+        assert!((mi - (2f64).ln()).abs() < 1e-9, "{mi}");
+        // independence: factorised table
+        assert!(mi_from_counts(10.0, 20.0, 20.0, 40.0).abs() < 1e-12);
+        // degenerate: feature never fires
+        assert_eq!(mi_from_counts(0.0, 0.0, 20.0, 40.0), 0.0);
+    }
+
+    #[test]
+    fn mi_matches_python_oracle_values() {
+        // Spot values cross-checked against kernels/ref.py::mi_pair_ref.
+        let got = mi_from_counts(15.0, 20.0, 25.0, 40.0);
+        assert!(got > 0.0 && got < (2f64).ln());
+    }
+
+    #[test]
+    fn perfect_predictor_ranks_first() {
+        let (m, labels) = synthetic();
+        let sel = select(&m, &labels, &MsmrConfig { top_k: 2, pool_size: 4, beta: 1.0 }, None)
+            .unwrap();
+        let first_seq = m.seq_ids[sel.columns[0] as usize];
+        assert!(first_seq == 10 || first_seq == 20, "first pick {first_seq}");
+        // The redundant copy must NOT be second: redundancy pushes it out.
+        let second_seq = m.seq_ids[sel.columns[1] as usize];
+        assert!(second_seq != 10 && second_seq != 20, "second pick {second_seq}");
+    }
+
+    #[test]
+    fn no_redundancy_penalty_keeps_duplicate() {
+        let (m, labels) = synthetic();
+        let sel = select(&m, &labels, &MsmrConfig { top_k: 2, pool_size: 4, beta: 0.0 }, None)
+            .unwrap();
+        let seqs: Vec<u64> = sel.columns.iter().map(|&c| m.seq_ids[c as usize]).collect();
+        assert_eq!(seqs.iter().filter(|&&s| s == 10 || s == 20).count(), 2);
+    }
+
+    #[test]
+    fn top_k_clamped_to_pool() {
+        let (m, labels) = synthetic();
+        let sel = select(&m, &labels, &MsmrConfig { top_k: 100, pool_size: 3, beta: 1.0 }, None)
+            .unwrap();
+        assert_eq!(sel.columns.len(), 3);
+    }
+
+    #[test]
+    fn empty_matrix_selects_nothing() {
+        let m = SeqMatrix::build(&[], 10);
+        let sel = select(&m, &vec![0.0; 10], &MsmrConfig::default(), None).unwrap();
+        assert!(sel.columns.is_empty());
+    }
+
+    #[test]
+    fn rust_count_paths_are_consistent() {
+        let (m, labels) = synthetic();
+        let n11 = label_counts_rust(&m, &labels);
+        // col for seq 10 fires for exactly the 20 positives
+        let col10 = m.seq_ids.iter().position(|&s| s == 10).unwrap();
+        assert_eq!(n11[col10], 20.0);
+        let pool: Vec<u32> = (0..m.num_cols() as u32).collect();
+        let pair = pair_counts_rust(&m, &pool);
+        let k = pool.len();
+        // diagonal equals column counts
+        let counts = m.col_counts();
+        for i in 0..k {
+            assert_eq!(pair[i * k + i], counts[i] as f64);
+        }
+        // symmetry
+        for a in 0..k {
+            for b in 0..k {
+                assert_eq!(pair[a * k + b], pair[b * k + a]);
+            }
+        }
+    }
+
+    #[test]
+    fn relevance_is_monotone_in_selection_quality() {
+        let (m, labels) = synthetic();
+        let sel =
+            select(&m, &labels, &MsmrConfig { top_k: 4, pool_size: 4, beta: 0.0 }, None).unwrap();
+        for w in sel.relevance.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "beta=0 must select by pure relevance order");
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Scoped-thread parallel-map substrate — the OpenMP stand-in.
+//!
+//! The paper parallelizes tSPM+ with OpenMP `parallel for` over patient
+//! chunks, with thread-local output buffers merged at the end. This module
+//! provides the same structure on `std::thread::scope`:
+//!
+//! * [`num_threads`] — effective worker count (env `TSPM_THREADS` override),
+//! * [`par_chunks_mut`] — split a mutable slice into contiguous chunks and
+//!   process each on its own worker,
+//! * [`par_map_chunks`] — map contiguous index ranges to per-thread results
+//!   (the "thread-local vector" pattern; caller merges),
+//! * [`par_for_each_dynamic`] — dynamic scheduling over an atomic work
+//!   counter for irregular per-item cost (e.g. patients with very different
+//!   entry counts).
+//!
+//! All functions degrade to plain sequential execution for 1 thread or tiny
+//! inputs, so they are safe to call unconditionally.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Effective number of worker threads.
+///
+/// Priority: explicit `requested` argument (Some>0) → `TSPM_THREADS` env →
+/// `std::thread::available_parallelism()`.
+pub fn num_threads(requested: Option<usize>) -> usize {
+    if let Some(n) = requested {
+        if n > 0 {
+            return n;
+        }
+    }
+    if let Ok(v) = std::env::var("TSPM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `[0, len)` into at most `parts` contiguous ranges of near-equal
+/// size. Returns an empty vec for `len == 0`.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Process contiguous mutable chunks of `data` in parallel.
+///
+/// `f(chunk_index, chunk)` runs on a worker thread per chunk; chunk
+/// boundaries follow [`split_ranges`].
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || data.len() < 2 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    let ranges = split_ranges(data.len(), threads);
+    // Carve the slice into disjoint mutable chunks up front.
+    let mut chunks: Vec<&mut [T]> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut consumed = 0usize;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut(r.end - consumed);
+        consumed = r.end;
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (i, chunk) in chunks.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
+/// Map contiguous index ranges of `[0, len)` to one result per worker.
+///
+/// This is the paper's "each thread appends to its own vector" pattern:
+/// `f(range)` produces a thread-local result (typically a `Vec`), and the
+/// per-worker results are returned in range order for the caller to merge.
+pub fn par_map_chunks<R, F>(len: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    let threads = threads.max(1);
+    let ranges = split_ranges(len, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    let n = ranges.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot, range) in slots.iter_mut().zip(ranges) {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(range));
+            });
+        }
+    });
+    slots.into_iter().map(|r| r.expect("worker panicked")).collect()
+}
+
+/// Dynamically scheduled parallel for: items are claimed in blocks of
+/// `block` from an atomic counter, so stragglers don't serialize the run.
+/// Use when per-item cost is irregular.
+pub fn par_for_each_dynamic<F>(len: usize, threads: usize, block: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    let block = block.max(1);
+    if threads == 1 || len <= block {
+        for i in 0..len {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(len) {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(block, Ordering::Relaxed);
+                if start >= len {
+                    break;
+                }
+                let end = (start + block).min(len);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for len in [0usize, 1, 2, 5, 97, 100] {
+            for parts in [1usize, 2, 3, 7, 16, 200] {
+                let ranges = split_ranges(len, parts);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len={len} parts={parts}");
+                // contiguous & non-overlapping
+                let mut expect = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, expect);
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+                if len > 0 {
+                    assert_eq!(expect, len);
+                    // near-equal: sizes differ by at most 1
+                    let min = ranges.iter().map(|r| r.len()).min().unwrap();
+                    let max = ranges.iter().map(|r| r.len()).max().unwrap();
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_every_item_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut data = vec![0u32; 1000];
+            par_chunks_mut(&mut data, threads, |_, chunk| {
+                for v in chunk {
+                    *v += 1;
+                }
+            });
+            assert!(data.iter().all(|&v| v == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_chunk_indices_are_ordered() {
+        let mut data = vec![0usize; 64];
+        par_chunks_mut(&mut data, 4, |ci, chunk| {
+            for v in chunk {
+                *v = ci;
+            }
+        });
+        // chunk indices must be non-decreasing across the slice
+        for w in data.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn par_map_chunks_merges_in_order() {
+        let results = par_map_chunks(100, 4, |r| r.clone().collect::<Vec<usize>>());
+        let merged: Vec<usize> = results.into_iter().flatten().collect();
+        assert_eq!(merged, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_chunks_empty() {
+        let results: Vec<Vec<usize>> = par_map_chunks(0, 4, |r| r.collect());
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn par_for_each_dynamic_visits_all_once() {
+        let counters: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        par_for_each_dynamic(500, 4, 7, |i| {
+            counters[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn num_threads_request_wins() {
+        assert_eq!(num_threads(Some(3)), 3);
+        assert!(num_threads(None) >= 1);
+    }
+}

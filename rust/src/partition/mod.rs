@@ -1,0 +1,282 @@
+//! Adaptive dbmart partitioning — mining huge cohorts under a memory cap.
+//!
+//! The R package's headline utility: split the dbmart into patient chunks
+//! whose *predicted* sequence output fits (a) the available memory and
+//! (b) a hard element cap (R's 2³¹−1 vector limit, which made the paper's
+//! 100k-patient run fail). Each chunk is sequenced separately and the
+//! results are combined — trading extra sequencing passes for a bounded
+//! resident set ("enables the sequencing of phenotypes on resource-
+//! restrained platforms, like laptops").
+//!
+//! Prediction uses the exact per-patient formula `n·(n−1)/2` (after the
+//! optional first-occurrence filter), so a partition plan never
+//! underestimates: a chunk's real output equals its prediction.
+
+use crate::dbmart::{NumericDbMart, NumericEntry};
+use crate::mining::{self, MiningConfig, MiningError, SequenceSet};
+use crate::sparsity::{self, SparsityConfig};
+
+/// A partition plan: per-chunk patient ranges over the *sorted* dbmart.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    /// Sorted entries (by patient, date) the plan indexes into.
+    pub entries: Vec<NumericEntry>,
+    /// Patient chunk boundaries in `entries` (len = patients + 1).
+    pub bounds: Vec<usize>,
+    /// Chunks as ranges over *patient indices* (`bounds` windows).
+    pub chunks: Vec<std::ops::Range<usize>>,
+    /// Predicted sequences per chunk.
+    pub predicted: Vec<u64>,
+}
+
+/// Partitioning errors.
+#[derive(Debug)]
+pub enum PartitionError {
+    /// One single patient alone exceeds the cap — no partition can help.
+    PatientExceedsCap { patient: u32, sequences: u64, cap: u64 },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::PatientExceedsCap { patient, sequences, cap } => write!(
+                f,
+                "patient {patient} alone yields {sequences} sequences, above the cap {cap}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Derive the element cap from a memory budget in bytes (16 bytes per
+/// sequence record), clamped by the hard element cap.
+pub fn cap_from_memory(budget_bytes: u64, hard_element_cap: u64) -> u64 {
+    (budget_bytes / std::mem::size_of::<crate::mining::SeqRecord>() as u64)
+        .min(hard_element_cap)
+        .max(1)
+}
+
+/// Build a partition plan such that every chunk's predicted sequence count
+/// is ≤ `max_sequences_per_chunk`.
+pub fn plan(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    max_sequences_per_chunk: u64,
+) -> Result<PartitionPlan, PartitionError> {
+    let mut entries = db.entries.clone();
+    let threads = crate::par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let bounds = mining::sort_and_chunk(&mut entries, threads);
+    let n_patients = bounds.len().saturating_sub(1);
+
+    let mut chunks = Vec::new();
+    let mut predicted = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for p in 0..n_patients {
+        let chunk = &entries[bounds[p]..bounds[p + 1]];
+        let n = if cfg.first_occurrence_only {
+            let mut seen: Vec<u32> = chunk.iter().map(|e| e.phenx).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            seen.len()
+        } else {
+            chunk.len()
+        };
+        let cost = mining::pairs_for(n.max(1));
+        if cost > max_sequences_per_chunk {
+            return Err(PartitionError::PatientExceedsCap {
+                patient: chunk[0].patient,
+                sequences: cost,
+                cap: max_sequences_per_chunk,
+            });
+        }
+        if acc + cost > max_sequences_per_chunk && p > start {
+            chunks.push(start..p);
+            predicted.push(acc);
+            start = p;
+            acc = 0;
+        }
+        acc += cost;
+    }
+    if start < n_patients {
+        chunks.push(start..n_patients);
+        predicted.push(acc);
+    }
+    Ok(PartitionPlan { entries, bounds, chunks, predicted })
+}
+
+impl PartitionPlan {
+    /// Number of chunks.
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Total predicted sequences across all chunks.
+    pub fn total_predicted(&self) -> u64 {
+        self.predicted.iter().sum()
+    }
+
+    /// Materialise chunk `i` as a standalone numeric dbmart view
+    /// (entries only; lookup tables stay with the parent).
+    pub fn chunk_entries(&self, i: usize) -> &[NumericEntry] {
+        let r = &self.chunks[i];
+        &self.entries[self.bounds[r.start]..self.bounds[r.end]]
+    }
+}
+
+/// Mine a whole dbmart chunk-by-chunk under the cap, screening each chunk
+/// then merging — the R package's "adaptive partitioning" workflow.
+///
+/// Note: screening per chunk then merging is only equivalent to a global
+/// screen when the threshold counts patients *within* a chunk; the R
+/// package has the same semantics (it screens per partition). For a
+/// global screen, pass `screen: None` and screen the merged result.
+pub fn mine_partitioned(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    max_sequences_per_chunk: u64,
+    screen: Option<&SparsityConfig>,
+) -> Result<SequenceSet, MiningErrorOrPartition> {
+    let plan = plan(db, cfg, max_sequences_per_chunk).map_err(MiningErrorOrPartition::Partition)?;
+    let mut merged = SequenceSet {
+        records: Vec::new(),
+        num_patients: db.num_patients() as u32,
+        num_phenx: db.num_phenx() as u32,
+    };
+    for i in 0..plan.len() {
+        let sub = NumericDbMart {
+            entries: plan.chunk_entries(i).to_vec(),
+            lookup: Default::default(),
+        };
+        let mut set = mining::mine_sequences(&sub, cfg).map_err(MiningErrorOrPartition::Mining)?;
+        debug_assert!(set.len() as u64 <= max_sequences_per_chunk);
+        if let Some(sc) = screen {
+            sparsity::screen(&mut set.records, sc);
+        }
+        merged.records.extend_from_slice(&set.records);
+    }
+    Ok(merged)
+}
+
+/// Combined error for the partitioned driver.
+#[derive(Debug)]
+pub enum MiningErrorOrPartition {
+    Mining(MiningError),
+    Partition(PartitionError),
+}
+
+impl std::fmt::Display for MiningErrorOrPartition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MiningErrorOrPartition::Mining(e) => write!(f, "{e}"),
+            MiningErrorOrPartition::Partition(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for MiningErrorOrPartition {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::{DbMart, DbMartEntry};
+
+    fn db_with_sizes(sizes: &[usize]) -> NumericDbMart {
+        let mut entries = Vec::new();
+        for (p, &n) in sizes.iter().enumerate() {
+            for i in 0..n {
+                entries.push(DbMartEntry {
+                    patient_id: format!("p{p}"),
+                    date: i as i32,
+                    phenx: format!("x{i}"),
+                    description: None,
+                });
+            }
+        }
+        NumericDbMart::encode(&DbMart::new(entries))
+    }
+
+    #[test]
+    fn respects_cap() {
+        let db = db_with_sizes(&[10, 10, 10, 10]); // 45 seqs each
+        let plan = plan(&db, &MiningConfig::default(), 100).unwrap();
+        assert!(plan.len() >= 2);
+        for (i, &p) in plan.predicted.iter().enumerate() {
+            assert!(p <= 100, "chunk {i} predicted {p}");
+        }
+        assert_eq!(plan.total_predicted(), 4 * 45);
+    }
+
+    #[test]
+    fn one_chunk_when_cap_is_large() {
+        let db = db_with_sizes(&[10, 10]);
+        let plan = plan(&db, &MiningConfig::default(), 1_000_000).unwrap();
+        assert_eq!(plan.len(), 1);
+    }
+
+    #[test]
+    fn oversized_patient_is_an_error() {
+        let db = db_with_sizes(&[100]); // 4950 sequences
+        let err = plan(&db, &MiningConfig::default(), 100).unwrap_err();
+        match err {
+            PartitionError::PatientExceedsCap { sequences, cap, .. } => {
+                assert_eq!(sequences, 4950);
+                assert_eq!(cap, 100);
+            }
+        }
+    }
+
+    #[test]
+    fn partitioned_mining_equals_unpartitioned() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let cfg = MiningConfig::default();
+        let full = mining::mine_sequences(&db, &cfg).unwrap();
+        let parts = mine_partitioned(&db, &cfg, 50_000, None).unwrap();
+        let mut a = full.records.clone();
+        let mut b = parts.records.clone();
+        a.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        b.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn r_vector_limit_scenario() {
+        // Reproduces Table 2's failure mode in miniature: a cap below the
+        // total forces multiple chunks instead of one giant failing run.
+        let db = db_with_sizes(&[50, 50, 50]); // 1225 each, 3675 total
+        let plan = plan(&db, &MiningConfig::default(), 2000).unwrap();
+        assert!(plan.len() >= 2);
+    }
+
+    #[test]
+    fn cap_from_memory_converts_bytes() {
+        assert_eq!(cap_from_memory(160, u64::MAX), 10);
+        assert_eq!(cap_from_memory(u64::MAX, (1 << 31) - 1), (1 << 31) - 1);
+        assert_eq!(cap_from_memory(0, 100), 1);
+    }
+
+    #[test]
+    fn first_occurrence_prediction_is_exact() {
+        let mut entries = Vec::new();
+        for i in 0..20 {
+            entries.push(DbMartEntry {
+                patient_id: "p".into(),
+                date: i,
+                phenx: format!("x{}", i % 5), // 5 distinct
+                description: None,
+            });
+        }
+        let db = NumericDbMart::encode(&DbMart::new(entries));
+        let cfg = MiningConfig { first_occurrence_only: true, ..Default::default() };
+        let plan = plan(&db, &cfg, 1_000).unwrap();
+        assert_eq!(plan.total_predicted(), 10); // C(5,2)
+        let mined = mining::mine_sequences(&db, &cfg).unwrap();
+        assert_eq!(mined.len() as u64, plan.total_predicted());
+    }
+}

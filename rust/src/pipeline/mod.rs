@@ -1,0 +1,299 @@
+//! Streaming orchestration — sharded mining with bounded queues and
+//! backpressure.
+//!
+//! The batch entry points in [`crate::mining`] materialise everything;
+//! this module is the *data-pipeline* face of the system: dbmart
+//! partitions flow through a staged graph
+//!
+//! ```text
+//!   source (partition chunks) ──▶ [bounded queue] ──▶ miner shard 0..N
+//!        (backpressure)                                   │
+//!                                 [bounded queue] ◀───────┘
+//!                                        │
+//!                                  collector (+ optional screen)
+//! ```
+//!
+//! * **Sharding**: partition chunks are claimed by miners from a shared
+//!   work queue — idle shards steal the next chunk, which *is* the
+//!   rebalancing policy (no static assignment to go stale).
+//! * **Backpressure**: queues are bounded; a fast producer blocks instead
+//!   of ballooning the resident set, so peak memory is
+//!   `O(queue_depth × chunk_output)` rather than `O(total output)`.
+//! * **Metrics**: per-stage counts and blocking times are reported for
+//!   the perf pass.
+
+use crate::dbmart::NumericDbMart;
+use crate::mining::{self, MiningConfig, SeqRecord, SequenceSet};
+use crate::partition;
+use crate::sparsity::{self, SparsityConfig};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub mining: MiningConfig,
+    /// Max predicted sequences per partition chunk.
+    pub chunk_cap: u64,
+    /// Bounded-queue depth between stages (chunks in flight).
+    pub queue_depth: usize,
+    /// Miner shards.
+    pub shards: usize,
+    /// Optional screening of the merged stream.
+    pub screen: Option<SparsityConfig>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            mining: MiningConfig::default(),
+            chunk_cap: 4_000_000,
+            queue_depth: 4,
+            shards: 0, // auto
+            screen: None,
+        }
+    }
+}
+
+/// Per-stage metrics.
+#[derive(Debug, Default)]
+pub struct StageMetrics {
+    /// Chunks emitted by the source.
+    pub chunks: AtomicUsize,
+    /// Records that crossed the miner → collector queue.
+    pub records: AtomicU64,
+    /// Nanoseconds the source spent blocked on a full queue
+    /// (backpressure engaged).
+    pub source_blocked_ns: AtomicU64,
+    /// Chunks processed per shard.
+    pub per_shard: Mutex<Vec<usize>>,
+}
+
+impl StageMetrics {
+    pub fn report(&self) -> String {
+        let shards = self.per_shard.lock().unwrap();
+        format!(
+            "chunks={} records={} source_blocked={:?} shard_loads={:?}",
+            self.chunks.load(Ordering::Relaxed),
+            self.records.load(Ordering::Relaxed),
+            Duration::from_nanos(self.source_blocked_ns.load(Ordering::Relaxed)),
+            *shards,
+        )
+    }
+}
+
+/// Result of a streaming run.
+pub struct PipelineResult {
+    pub sequences: SequenceSet,
+    pub metrics: StageMetrics,
+    pub screen_stats: Option<sparsity::ScreenStats>,
+}
+
+/// Blocking send that accounts backpressure time.
+fn send_with_backpressure<T>(
+    tx: &SyncSender<T>,
+    mut item: T,
+    blocked_ns: &AtomicU64,
+) -> Result<(), ()> {
+    loop {
+        match tx.try_send(item) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Full(back)) => {
+                let start = Instant::now();
+                item = back;
+                std::thread::yield_now();
+                std::thread::sleep(Duration::from_micros(50));
+                blocked_ns.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(()),
+        }
+    }
+}
+
+/// Run the streaming pipeline over a dbmart.
+pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, String> {
+    let shards = if cfg.shards > 0 {
+        cfg.shards
+    } else {
+        crate::par::num_threads(None)
+    };
+    let plan = partition::plan(db, &cfg.mining, cfg.chunk_cap).map_err(|e| e.to_string())?;
+    let metrics = StageMetrics::default();
+    *metrics.per_shard.lock().unwrap() = vec![0usize; shards];
+
+    let n_chunks = plan.len();
+    let (chunk_tx, chunk_rx) = std::sync::mpsc::sync_channel::<usize>(cfg.queue_depth);
+    let (out_tx, out_rx) = std::sync::mpsc::sync_channel::<Vec<SeqRecord>>(cfg.queue_depth);
+    let chunk_rx = SharedReceiver(Mutex::new(chunk_rx));
+
+    let mut merged: Vec<SeqRecord> = Vec::new();
+    let mut failed: Option<String> = None;
+
+    std::thread::scope(|s| {
+        // Source: enqueue chunk indices (bounded → backpressure).
+        let metrics_ref = &metrics;
+        s.spawn(move || {
+            for i in 0..n_chunks {
+                if send_with_backpressure(&chunk_tx, i, &metrics_ref.source_blocked_ns).is_err() {
+                    break;
+                }
+                metrics_ref.chunks.fetch_add(1, Ordering::Relaxed);
+            }
+            drop(chunk_tx);
+        });
+
+        // Miner shards: claim chunks dynamically (work stealing =
+        // rebalancing), mine, push record batches downstream.
+        let plan_ref = &plan;
+        let chunk_rx_ref = &chunk_rx;
+        let mining_cfg = &cfg.mining;
+        for shard in 0..shards {
+            let out_tx = out_tx.clone();
+            let metrics_ref = &metrics;
+            s.spawn(move || {
+                loop {
+                    let idx = match chunk_rx_ref.recv() {
+                        Some(i) => i,
+                        None => break,
+                    };
+                    let sub = NumericDbMart {
+                        entries: plan_ref.chunk_entries(idx).to_vec(),
+                        lookup: Default::default(),
+                    };
+                    // Each shard mines its chunk single-threaded; shard-level
+                    // parallelism already saturates the pool.
+                    let local_cfg = MiningConfig { threads: 1, ..mining_cfg.clone() };
+                    match mining::mine_sequences(&sub, &local_cfg) {
+                        Ok(set) => {
+                            metrics_ref
+                                .records
+                                .fetch_add(set.records.len() as u64, Ordering::Relaxed);
+                            metrics_ref.per_shard.lock().unwrap()[shard] += 1;
+                            if out_tx.send(set.records).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        drop(out_tx); // collector sees EOF once all shards finish
+
+        // Collector (runs on this thread): merge batches in arrival order.
+        for batch in out_rx.iter() {
+            merged.extend_from_slice(&batch);
+        }
+        if metrics.chunks.load(Ordering::Relaxed) != n_chunks {
+            failed = Some("source stage aborted early".to_string());
+        }
+    });
+
+    if let Some(f) = failed {
+        return Err(f);
+    }
+
+    let screen_stats = cfg.screen.as_ref().map(|sc| sparsity::screen(&mut merged, sc));
+    Ok(PipelineResult {
+        sequences: SequenceSet {
+            records: merged,
+            num_patients: db.num_patients() as u32,
+            num_phenx: db.num_phenx() as u32,
+        },
+        metrics,
+        screen_stats,
+    })
+}
+
+/// mpsc `Receiver` shared across shards behind a mutex (work-queue
+/// semantics: whichever shard locks first gets the next chunk).
+struct SharedReceiver<T>(Mutex<Receiver<T>>);
+
+impl<T> SharedReceiver<T> {
+    fn recv(&self) -> Option<T> {
+        self.0.lock().unwrap().recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::NumericDbMart;
+
+    fn test_db() -> NumericDbMart {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        NumericDbMart::encode(&mart)
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let db = test_db();
+        let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let cfg = PipelineConfig { chunk_cap: 50_000, shards: 3, ..Default::default() };
+        let streamed = run(&db, &cfg).unwrap();
+        assert_eq!(streamed.sequences.len(), batch.len());
+        let mut a = batch.records;
+        let mut b = streamed.sequences.records;
+        a.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        b.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn screening_in_pipeline_matches_batch_screen() {
+        let db = test_db();
+        let sc = SparsityConfig { min_patients: 5, threads: 1 };
+        let mut batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let batch_stats = sparsity::screen(&mut batch.records, &sc);
+        let cfg = PipelineConfig {
+            chunk_cap: 50_000,
+            shards: 2,
+            screen: Some(sc),
+            ..Default::default()
+        };
+        let streamed = run(&db, &cfg).unwrap();
+        assert_eq!(streamed.screen_stats.unwrap(), batch_stats);
+        assert_eq!(streamed.sequences.len(), batch.len());
+    }
+
+    #[test]
+    fn all_chunks_flow_through() {
+        let db = test_db();
+        let cfg = PipelineConfig { chunk_cap: 50_000, shards: 2, queue_depth: 2, ..Default::default() };
+        let result = run(&db, &cfg).unwrap();
+        let plan = partition::plan(&db, &cfg.mining, cfg.chunk_cap).unwrap();
+        assert_eq!(result.metrics.chunks.load(Ordering::Relaxed), plan.len());
+        let shard_loads = result.metrics.per_shard.lock().unwrap().clone();
+        assert_eq!(shard_loads.iter().sum::<usize>(), plan.len());
+        assert_eq!(
+            result.metrics.records.load(Ordering::Relaxed),
+            result.sequences.len() as u64
+        );
+    }
+
+    #[test]
+    fn tiny_queue_depth_still_completes() {
+        // queue_depth=1 maximises backpressure; correctness must hold.
+        let db = test_db();
+        let cfg = PipelineConfig {
+            chunk_cap: 50_000,
+            queue_depth: 1,
+            shards: 4,
+            ..Default::default()
+        };
+        let result = run(&db, &cfg).unwrap();
+        let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        assert_eq!(result.sequences.len(), batch.len());
+    }
+
+    #[test]
+    fn metrics_report_formats() {
+        let db = test_db();
+        let result = run(&db, &PipelineConfig::default()).unwrap();
+        let report = result.metrics.report();
+        assert!(report.contains("chunks="));
+        assert!(report.contains("records="));
+    }
+}

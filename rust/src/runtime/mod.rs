@@ -1,0 +1,313 @@
+//! PJRT runtime — loading and executing the AOT-compiled JAX/Pallas
+//! artifacts from the Rust hot path.
+//!
+//! `make artifacts` (build-time Python, never on the request path) lowers
+//! every L2 function to HLO text under `artifacts/`, described by
+//! `manifest.json`. This module wraps the published `xla` crate:
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile
+//!                   → exe.execute(&[Literal]) → tuple outputs
+//! ```
+//!
+//! One [`Artifact`] per HLO module (compiled once, executed many times);
+//! an [`ArtifactSet`] loads the whole manifest. All tensors are f32
+//! row-major, shapes fixed at lowering time (`tile_rows` × `tile_features`
+//! in the manifest) — [`crate::matrix::SeqMatrix::dense_tile`] produces
+//! exactly these tiles.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Runtime errors (manifest, XLA, shape mismatches).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "runtime error: {}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError(format!("xla: {e}"))
+    }
+}
+
+/// A dense f32 tensor travelling between Rust and PJRT.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0f32; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![1, 1], data: vec![v] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal, RuntimeError> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor, RuntimeError> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with shape-checked inputs; returns the unpacked tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(RuntimeError(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, want)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            if &t.shape != want {
+                return Err(RuntimeError(format!(
+                    "{}: input {i} shape {:?} != artifact shape {:?}",
+                    self.name, t.shape, want
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_, _>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → root is always a tuple.
+        let elements = result.decompose_tuple()?;
+        if elements.len() != self.num_outputs {
+            return Err(RuntimeError(format!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.num_outputs,
+                elements.len()
+            )));
+        }
+        elements.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// The full artifact registry of one `artifacts/` directory.
+pub struct ArtifactSet {
+    pub tile_rows: usize,
+    pub tile_features: usize,
+    artifacts: BTreeMap<String, Artifact>,
+}
+
+impl ArtifactSet {
+    /// Create the PJRT CPU client and compile every artifact in the
+    /// manifest. Compilation happens once per process.
+    pub fn load(dir: &Path) -> Result<ArtifactSet, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        Self::load_with_client(dir, &client)
+    }
+
+    /// [`ArtifactSet::load`] with a caller-owned client.
+    pub fn load_with_client(dir: &Path, client: &xla::PjRtClient) -> Result<ArtifactSet, RuntimeError> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError(format!(
+                "cannot read {} — run `make artifacts` first: {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest =
+            Json::parse(&text).map_err(|e| RuntimeError(format!("manifest: {e}")))?;
+        let tile_rows = manifest
+            .get("tile_rows")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| RuntimeError("manifest missing tile_rows".into()))? as usize;
+        let tile_features = manifest
+            .get("tile_features")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| RuntimeError("manifest missing tile_features".into()))?
+            as usize;
+        let entries = manifest
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| RuntimeError("manifest missing artifacts".into()))?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in entries {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError(format!("{name}: missing file")))?;
+            let input_shapes: Vec<Vec<usize>> = entry
+                .get("input_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| RuntimeError(format!("{name}: missing input_shapes")))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_u64).map(|d| d as usize).collect()
+                        })
+                        .ok_or_else(|| RuntimeError(format!("{name}: bad shape")))
+                })
+                .collect::<Result<_, _>>()?;
+            let num_outputs = entry
+                .get("num_outputs")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| RuntimeError(format!("{name}: missing num_outputs")))?
+                as usize;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| RuntimeError("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.insert(
+                name.clone(),
+                Artifact { name: name.clone(), input_shapes, num_outputs, exe },
+            );
+        }
+        Ok(ArtifactSet { tile_rows, tile_features, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact, RuntimeError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError(format!("artifact {name:?} not in manifest")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Default artifacts directory: `$TSPM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TSPM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> Option<ArtifactSet> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(ArtifactSet::load(&dir).expect("artifact load"))
+        } else {
+            eprintln!("skipping runtime tests: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(Tensor::zeros(vec![4, 4]).data.len(), 16);
+        assert_eq!(Tensor::scalar(5.0).data, vec![5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_rejects_bad_shape() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn loads_manifest_and_runs_cooc() {
+        let Some(set) = artifacts_available() else { return };
+        assert!(set.names().contains(&"cooc"));
+        let (p, f) = (set.tile_rows, set.tile_features);
+        // X with a single 1 at (0, 0) and (0, 1) → cooc[0,1] = 1.
+        let mut x = Tensor::zeros(vec![p, f]);
+        x.data[0] = 1.0;
+        x.data[1] = 1.0;
+        let out = set.get("cooc").unwrap().run(&[x.clone(), x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![f, f]);
+        assert_eq!(out[0].data[0], 1.0); // (0,0)
+        assert_eq!(out[0].data[1], 1.0); // (0,1)
+        assert_eq!(out[0].data[f + 1], 1.0); // (1,1)
+        assert_eq!(out[0].data[2], 0.0);
+    }
+
+    #[test]
+    fn cooc_matches_rust_reference_on_random_tile() {
+        let Some(set) = artifacts_available() else { return };
+        let (p, f) = (set.tile_rows, set.tile_features);
+        let mut rng = crate::rng::Rng::new(33);
+        let x = Tensor::new(
+            vec![p, f],
+            (0..p * f).map(|_| f32::from(rng.gen_bool(0.2))).collect(),
+        );
+        let out = &set.get("cooc").unwrap().run(&[x.clone(), x.clone()]).unwrap()[0];
+        // spot-check 20 random cells against a direct dot product
+        for _ in 0..20 {
+            let a = rng.gen_range(f as u64) as usize;
+            let b = rng.gen_range(f as u64) as usize;
+            let want: f32 = (0..p).map(|r| x.data[r * f + a] * x.data[r * f + b]).sum();
+            assert_eq!(out.data[a * f + b], want, "cell ({a},{b})");
+        }
+    }
+
+    #[test]
+    fn logreg_grad_runs_and_shapes_match() {
+        let Some(set) = artifacts_available() else { return };
+        let (p, f) = (set.tile_rows, set.tile_features);
+        let w = Tensor::zeros(vec![f, 1]);
+        let b = Tensor::zeros(vec![1, 1]);
+        let x = Tensor::zeros(vec![p, f]);
+        let y = Tensor::zeros(vec![p, 1]);
+        let mask = Tensor::new(vec![p, 1], vec![1.0; p]);
+        let out = set.get("logreg_grad").unwrap().run(&[w, b, x, y, mask]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].shape, vec![f, 1]);
+        assert_eq!(out[1].shape, vec![1, 1]);
+        assert_eq!(out[2].shape, vec![1, 1]);
+        // all-zero inputs: p = 0.5, loss = P·ln2
+        let want_loss = p as f32 * std::f32::consts::LN_2;
+        assert!((out[2].data[0] - want_loss).abs() < 1e-2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(set) = artifacts_available() else { return };
+        let bad = Tensor::zeros(vec![3, 3]);
+        let err = set.get("cooc").unwrap().run(&[bad.clone(), bad]).unwrap_err();
+        assert!(err.0.contains("shape"));
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let Some(set) = artifacts_available() else { return };
+        assert!(set.get("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Binary on-disk sequence storage — the paper's file-based mode.
+//!
+//! Format `TSPM1` (little-endian):
+//!
+//! ```text
+//! magic    8 bytes  "TSPMSEQ1"
+//! count    8 bytes  u64 number of records
+//! records  16 bytes each: seq u64 | pid u32 | duration u32
+//! ```
+//!
+//! Writers buffer records and stream them out so mining in file mode keeps
+//! a small resident set; readers either stream ([`SeqReader`]) or bulk-load
+//! ([`read_file`]). A [`SeqFileSet`] groups the per-worker spill files of
+//! one mining run.
+
+use crate::mining::SeqRecord;
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"TSPMSEQ1";
+const RECORD_BYTES: usize = 16;
+
+/// Writer buffer size; also the per-worker resident cost of file mode.
+pub const WRITER_BUFFER_BYTES: usize = 1 << 20;
+
+/// Streaming record writer. Call [`SeqWriter::finish`] to patch the count.
+pub struct SeqWriter {
+    out: BufWriter<File>,
+    count: u64,
+}
+
+impl SeqWriter {
+    pub fn create(path: &Path) -> io::Result<SeqWriter> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::with_capacity(WRITER_BUFFER_BYTES, file);
+        out.write_all(MAGIC)?;
+        out.write_all(&0u64.to_le_bytes())?; // count patched in finish()
+        Ok(SeqWriter { out, count: 0 })
+    }
+
+    #[inline]
+    pub fn write(&mut self, r: SeqRecord) -> io::Result<()> {
+        let mut buf = [0u8; RECORD_BYTES];
+        buf[0..8].copy_from_slice(&r.seq.to_le_bytes());
+        buf[8..12].copy_from_slice(&r.pid.to_le_bytes());
+        buf[12..16].copy_from_slice(&r.duration.to_le_bytes());
+        self.out.write_all(&buf)?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Flush, patch the header count, and return the record count.
+    pub fn finish(mut self) -> io::Result<u64> {
+        use std::io::Seek;
+        self.out.flush()?;
+        let mut file = self.out.into_inner().map_err(|e| e.into_error())?;
+        file.seek(io::SeekFrom::Start(8))?;
+        file.write_all(&self.count.to_le_bytes())?;
+        file.sync_data().ok(); // best-effort durability
+        Ok(self.count)
+    }
+}
+
+/// Streaming record reader (iterator interface).
+pub struct SeqReader {
+    input: BufReader<File>,
+    remaining: u64,
+}
+
+impl SeqReader {
+    pub fn open(path: &Path) -> io::Result<SeqReader> {
+        let file = File::open(path)?;
+        let mut input = BufReader::with_capacity(WRITER_BUFFER_BYTES, file);
+        let mut magic = [0u8; 8];
+        input.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: not a TSPMSEQ1 file", path.display()),
+            ));
+        }
+        let mut count_buf = [0u8; 8];
+        input.read_exact(&mut count_buf)?;
+        Ok(SeqReader { input, remaining: u64::from_le_bytes(count_buf) })
+    }
+
+    /// Records left to read.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Read up to `buf.len()` records into `buf`; returns how many were
+    /// filled (0 at EOF). Batched form for the screening hot path.
+    pub fn read_batch(&mut self, buf: &mut [SeqRecord]) -> io::Result<usize> {
+        let want = (buf.len() as u64).min(self.remaining) as usize;
+        if want == 0 {
+            return Ok(0);
+        }
+        let mut raw = vec![0u8; want * RECORD_BYTES];
+        self.input.read_exact(&mut raw)?;
+        for (i, chunk) in raw.chunks_exact(RECORD_BYTES).enumerate() {
+            buf[i] = SeqRecord {
+                seq: u64::from_le_bytes(chunk[0..8].try_into().unwrap()),
+                pid: u32::from_le_bytes(chunk[8..12].try_into().unwrap()),
+                duration: u32::from_le_bytes(chunk[12..16].try_into().unwrap()),
+            };
+        }
+        self.remaining -= want as u64;
+        Ok(want)
+    }
+}
+
+impl Iterator for SeqReader {
+    type Item = io::Result<SeqRecord>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut one = [SeqRecord { seq: 0, pid: 0, duration: 0 }];
+        match self.read_batch(&mut one) {
+            Ok(1) => Some(Ok(one[0])),
+            Ok(_) => None,
+            Err(e) => Some(Err(e)),
+        }
+    }
+}
+
+/// Bulk-load an entire file.
+pub fn read_file(path: &Path) -> io::Result<Vec<SeqRecord>> {
+    let mut reader = SeqReader::open(path)?;
+    let mut out = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; reader.remaining() as usize];
+    let mut filled = 0;
+    while filled < out.len() {
+        let n = reader.read_batch(&mut out[filled..])?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated TSPMSEQ1 file"));
+        }
+        filled += n;
+    }
+    Ok(out)
+}
+
+/// Write a whole record slice to `path`.
+pub fn write_file(path: &Path, records: &[SeqRecord]) -> io::Result<()> {
+    let mut w = SeqWriter::create(path)?;
+    for &r in records {
+        w.write(r)?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+/// The spill files of one file-based mining run.
+#[derive(Clone, Debug, Default)]
+pub struct SeqFileSet {
+    pub files: Vec<PathBuf>,
+    pub total_records: u64,
+    pub num_patients: u32,
+    pub num_phenx: u32,
+}
+
+impl SeqFileSet {
+    /// Load every file into one vector (used by tests and by in-memory
+    /// consumers after a file-based run).
+    pub fn read_all(&self) -> io::Result<Vec<SeqRecord>> {
+        let mut out = Vec::with_capacity(self.total_records as usize);
+        for f in &self.files {
+            out.extend(read_file(f)?);
+        }
+        Ok(out)
+    }
+
+    /// Stream every record to `f` without materialising the set.
+    pub fn for_each(&self, mut f: impl FnMut(SeqRecord)) -> io::Result<()> {
+        let mut buf = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; 64 * 1024];
+        for path in &self.files {
+            let mut reader = SeqReader::open(path)?;
+            loop {
+                let n = reader.read_batch(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                for &r in &buf[..n] {
+                    f(r);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Delete the spill files (cleanup after consumption).
+    pub fn remove(&self) -> io::Result<()> {
+        for f in &self.files {
+            std::fs::remove_file(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tspm_seqstore_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn recs(n: u64) -> Vec<SeqRecord> {
+        (0..n)
+            .map(|i| SeqRecord { seq: i * 31, pid: (i % 97) as u32, duration: (i % 400) as u32 })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_bulk() {
+        let path = tmp("bulk.tspm");
+        let data = recs(10_000);
+        write_file(&path, &data).unwrap();
+        assert_eq!(read_file(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_streaming() {
+        let path = tmp("stream.tspm");
+        let data = recs(1234);
+        write_file(&path, &data).unwrap();
+        let reader = SeqReader::open(&path).unwrap();
+        assert_eq!(reader.remaining(), 1234);
+        let got: Vec<SeqRecord> = reader.map(|r| r.unwrap()).collect();
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn empty_file_roundtrip() {
+        let path = tmp("empty.tspm");
+        write_file(&path, &[]).unwrap();
+        assert!(read_file(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.tspm");
+        std::fs::write(&path, b"NOTTSPM!.............").unwrap();
+        assert!(SeqReader::open(&path).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let path = tmp("trunc.tspm");
+        write_file(&path, &recs(100)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(read_file(&path).is_err());
+    }
+
+    #[test]
+    fn fileset_for_each_streams_everything() {
+        let p1 = tmp("fs1.tspm");
+        let p2 = tmp("fs2.tspm");
+        let d1 = recs(500);
+        let d2 = recs(300);
+        write_file(&p1, &d1).unwrap();
+        write_file(&p2, &d2).unwrap();
+        let fs = SeqFileSet {
+            files: vec![p1, p2],
+            total_records: 800,
+            num_patients: 97,
+            num_phenx: 0,
+        };
+        let mut seen = Vec::new();
+        fs.for_each(|r| seen.push(r)).unwrap();
+        assert_eq!(seen.len(), 800);
+        assert_eq!(&seen[..500], &d1[..]);
+        assert_eq!(&seen[500..], &d2[..]);
+    }
+
+    #[test]
+    fn batched_reads_cross_boundaries() {
+        let path = tmp("batch.tspm");
+        let data = recs(1000);
+        write_file(&path, &data).unwrap();
+        let mut reader = SeqReader::open(&path).unwrap();
+        let mut buf = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; 333];
+        let mut got = Vec::new();
+        loop {
+            let n = reader.read_batch(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(got, data);
+    }
+}

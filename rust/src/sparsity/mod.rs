@@ -1,0 +1,396 @@
+//! Sparsity screening — removing sequences that occur in too few patients.
+//!
+//! Sparse sequences (present in only a handful of patients) invite
+//! overfitting in downstream ML, so tSPM+ drops every sequence whose
+//! *distinct-patient* count is below a threshold. Three implementations
+//! live here, all verified equivalent:
+//!
+//! * [`screen`] — the production path (perf pass): one adaptive sort by
+//!   `(seq, pid)` + a single-pass stable in-place compaction;
+//! * [`screen_paper_strategy`] — the paper's "sophisticated approach"
+//!   verbatim: sort by sequence id → run start positions → parallel
+//!   **mark** of sparse records (`pid = u32::MAX`) → sort by patient id
+//!   → one truncation ("this strategy optimized the number of memory
+//!   allocations by minimizing its frequency to one");
+//! * [`screen_naive`] — hash-map counting, the correctness oracle and
+//!   the ablation baseline (bench `ablations`).
+
+use crate::mining::SeqRecord;
+use crate::par;
+use crate::psort;
+
+/// Marker pid for records scheduled for removal (paper: "assigning the
+/// maximal possible value to the patient number").
+pub const TOMBSTONE_PID: u32 = u32::MAX;
+
+/// Screening configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SparsityConfig {
+    /// Minimum number of *distinct patients* a sequence must appear in.
+    pub min_patients: u32,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for SparsityConfig {
+    fn default() -> Self {
+        SparsityConfig { min_patients: 50, threads: 0 }
+    }
+}
+
+/// Outcome statistics of a screen.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScreenStats {
+    pub records_before: u64,
+    pub records_after: u64,
+    pub distinct_before: u64,
+    pub distinct_after: u64,
+}
+
+/// The production screen: radix sort by `(seq, pid)` + run scan + one
+/// stable in-place compaction (perf pass, EXPERIMENTS.md §Perf).
+///
+/// Semantically identical to [`screen_paper_strategy`] — same surviving
+/// records, same `(seq, pid)` output order — but avoids the strategy's
+/// two extra full sorts: compaction happens in a single forward pass
+/// (sorted order means survivors stay sorted), so the whole screen is
+/// one sort + two linear passes.
+///
+/// Postcondition: `records` contains exactly the records of sequences
+/// occurring in ≥ `min_patients` distinct patients, sorted by
+/// `(seq, pid)`.
+pub fn screen(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let mut stats = ScreenStats {
+        records_before: records.len() as u64,
+        ..Default::default()
+    };
+    if records.is_empty() {
+        return stats;
+    }
+
+    // 1. Sort by (seq, pid) — adaptive: pdqsort on one worker, parallel
+    // radix otherwise (see psort::sort_auto).
+    psort::sort_auto(records, |r| ((r.seq as u128) << 32) | r.pid as u128, threads);
+
+    // 2+3. Run scan + stable compaction in one forward pass: for each
+    // distinct-sequence run, count pid transitions; dense runs are
+    // copied (within the same buffer, never overlapping reads ahead of
+    // writes) to the write cursor.
+    let len = records.len();
+    let mut write = 0usize;
+    let mut i = 0usize;
+    while i < len {
+        let seq = records[i].seq;
+        let mut distinct = 1u32;
+        let mut j = i + 1;
+        while j < len && records[j].seq == seq {
+            if records[j].pid != records[j - 1].pid {
+                distinct += 1;
+            }
+            j += 1;
+        }
+        stats.distinct_before += 1;
+        if distinct >= cfg.min_patients {
+            stats.distinct_after += 1;
+            let run_len = j - i;
+            if write != i {
+                records.copy_within(i..j, write);
+            }
+            write += run_len;
+        }
+        i = j;
+    }
+    records.truncate(write);
+    stats.records_after = records.len() as u64;
+    stats
+}
+
+/// The paper's original sort–mark–truncate strategy, kept verbatim for
+/// the ablation benchmark and as a second implementation to cross-check
+/// [`screen`] against:
+///
+/// sort by sequence id → start positions → parallel mark (`pid =
+/// u32::MAX`) → sort by patient id → truncate at the first tombstone →
+/// restore sequence order.
+pub fn screen_paper_strategy(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let mut stats = ScreenStats {
+        records_before: records.len() as u64,
+        ..Default::default()
+    };
+    if records.is_empty() {
+        return stats;
+    }
+
+    // 1. Sort by (seq, pid): one composite u128 key comparison.
+    psort::par_sort_by_key(records, |r| ((r.seq as u128) << 32) | r.pid as u128, threads);
+
+    // 2. Start positions of each distinct sequence.
+    let mut starts: Vec<usize> = Vec::new();
+    let mut prev = u64::MAX;
+    for (i, r) in records.iter().enumerate() {
+        if r.seq != prev {
+            starts.push(i);
+            prev = r.seq;
+        }
+    }
+    starts.push(records.len());
+    stats.distinct_before = (starts.len() - 1) as u64;
+
+    // 3. Parallel mark phase over run chunks. Runs are disjoint record
+    //    ranges, so handing each worker a disjoint set of runs keeps the
+    //    writes race-free; chunk sizes are large enough that marking does
+    //    not thrash shared cache lines (paper: "the sequence chunks are
+    //    large enough to mitigate cache invalidations").
+    let min_patients = cfg.min_patients;
+    let n_runs = starts.len() - 1;
+    let kept_counts: Vec<u64> = {
+        // Split runs into contiguous worker ranges aligned on run
+        // boundaries, then let each worker mark its records via raw
+        // pointers into the shared buffer. The base address travels as a
+        // usize (Send + Sync); safety: runs are disjoint record ranges, so
+        // no two workers ever touch the same record.
+        let base_addr = records.as_mut_ptr() as usize;
+        par::par_map_chunks(n_runs, threads, |run_range| {
+            let base = base_addr as *mut SeqRecord;
+            let mut kept = 0u64;
+            for run in run_range {
+                let (lo, hi) = (starts[run], starts[run + 1]);
+                // Distinct patients in the run: pid transitions (input is
+                // pid-sorted within the run).
+                let slice = unsafe { std::slice::from_raw_parts_mut(base.add(lo), hi - lo) };
+                let mut distinct = 1u32;
+                for w in 0..slice.len().saturating_sub(1) {
+                    if slice[w].pid != slice[w + 1].pid {
+                        distinct += 1;
+                    }
+                }
+                if distinct < min_patients {
+                    for r in slice.iter_mut() {
+                        r.pid = TOMBSTONE_PID;
+                    }
+                } else {
+                    kept += 1;
+                }
+            }
+            kept
+        })
+    };
+    stats.distinct_after = kept_counts.iter().sum();
+
+    // 4. Sort by pid → tombstones collect at the end; truncate once.
+    psort::par_sort_by_key(records, |r| r.pid, threads);
+    let cut = records.partition_point(|r| r.pid != TOMBSTONE_PID);
+    records.truncate(cut);
+    stats.records_after = records.len() as u64;
+
+    // Restore (seq, pid) order for downstream consumers (matrix building,
+    // utilities) — the paper's pipeline also continues on sequence order.
+    psort::par_sort_by_key(records, |r| ((r.seq as u128) << 32) | r.pid as u128, threads);
+    stats
+}
+
+/// Naive hash-based screen (correctness oracle / ablation baseline):
+/// count distinct patients per sequence with a hash map, then filter.
+pub fn screen_naive(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    use std::collections::HashMap;
+    let mut stats = ScreenStats {
+        records_before: records.len() as u64,
+        ..Default::default()
+    };
+    // seq -> (last pid seen, distinct count); records of one (seq,pid)
+    // pair may be scattered, so count via a set-like two-pass.
+    let mut seen: HashMap<(u64, u32), ()> = HashMap::new();
+    let mut counts: HashMap<u64, u32> = HashMap::new();
+    for r in records.iter() {
+        if seen.insert((r.seq, r.pid), ()).is_none() {
+            *counts.entry(r.seq).or_insert(0) += 1;
+        }
+    }
+    stats.distinct_before = counts.len() as u64;
+    records.retain(|r| counts[&r.seq] >= cfg.min_patients);
+    stats.records_after = records.len() as u64;
+    stats.distinct_after =
+        counts.values().filter(|&&c| c >= cfg.min_patients).count() as u64;
+    stats
+}
+
+/// Duration-sparsity screen (paper: duration helpers "leverage this
+/// feature ... e.g. when calculating duration sparsity"): a sequence
+/// survives only if, additionally, its *duration-bucket* diversity is
+/// wide enough — i.e. it occurs with at least `min_distinct_durations`
+/// different duration buckets of width `bucket_days` across the cohort.
+pub fn screen_by_duration(
+    records: &mut Vec<SeqRecord>,
+    bucket_days: u32,
+    min_distinct_durations: u32,
+) -> ScreenStats {
+    use crate::dbmart::pack_duration;
+    use std::collections::HashMap;
+    let bucket = bucket_days.max(1);
+    let mut stats = ScreenStats {
+        records_before: records.len() as u64,
+        ..Default::default()
+    };
+    let mut buckets: HashMap<u64, Vec<u64>> = HashMap::new();
+    for r in records.iter() {
+        // The packed form keeps (seq, bucket) as a single sortable u64 —
+        // exactly what the paper's bit-shift trick is for.
+        let packed = pack_duration(r.seq, r.duration / bucket);
+        buckets.entry(r.seq).or_default().push(packed);
+    }
+    stats.distinct_before = buckets.len() as u64;
+    let mut keep: HashMap<u64, bool> = HashMap::with_capacity(buckets.len());
+    for (seq, mut packs) in buckets {
+        packs.sort_unstable();
+        packs.dedup();
+        let ok = packs.len() as u32 >= min_distinct_durations;
+        stats.distinct_after += u64::from(ok);
+        keep.insert(seq, ok);
+    }
+    records.retain(|r| keep[&r.seq]);
+    stats.records_after = records.len() as u64;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rec(seq: u64, pid: u32) -> SeqRecord {
+        SeqRecord { seq, pid, duration: 0 }
+    }
+
+    #[test]
+    fn drops_sequences_below_threshold() {
+        // seq 1 in 3 patients, seq 2 in 1 patient, seq 3 in 2 patients
+        let mut records = vec![
+            rec(1, 10),
+            rec(1, 11),
+            rec(1, 12),
+            rec(2, 10),
+            rec(3, 10),
+            rec(3, 11),
+        ];
+        let stats = screen(&mut records, &SparsityConfig { min_patients: 2, threads: 1 });
+        let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+        assert!(seqs.contains(&1) && seqs.contains(&3) && !seqs.contains(&2));
+        assert_eq!(stats.records_before, 6);
+        assert_eq!(stats.records_after, 5);
+        assert_eq!(stats.distinct_before, 3);
+        assert_eq!(stats.distinct_after, 2);
+    }
+
+    #[test]
+    fn counts_distinct_patients_not_occurrences() {
+        // seq 7 occurs 5 times but in only 1 patient → must be dropped at
+        // threshold 2.
+        let mut records: Vec<SeqRecord> = (0..5).map(|_| rec(7, 42)).collect();
+        records.push(rec(8, 1));
+        records.push(rec(8, 2));
+        screen(&mut records, &SparsityConfig { min_patients: 2, threads: 1 });
+        assert!(records.iter().all(|r| r.seq == 8));
+    }
+
+    #[test]
+    fn threshold_one_keeps_everything() {
+        let mut records = vec![rec(1, 1), rec(2, 2), rec(3, 3)];
+        let stats = screen(&mut records, &SparsityConfig { min_patients: 1, threads: 1 });
+        assert_eq!(stats.records_after, 3);
+        assert_eq!(stats.distinct_after, 3);
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut records: Vec<SeqRecord> = Vec::new();
+        let stats = screen(&mut records, &SparsityConfig::default());
+        assert_eq!(stats, ScreenStats::default());
+    }
+
+    #[test]
+    fn everything_sparse_empties_the_set() {
+        let mut records = vec![rec(1, 1), rec(2, 2)];
+        let stats = screen(&mut records, &SparsityConfig { min_patients: 10, threads: 1 });
+        assert!(records.is_empty());
+        assert_eq!(stats.distinct_after, 0);
+    }
+
+    #[test]
+    fn matches_naive_oracle_on_random_input() {
+        let mut meta = Rng::new(4242);
+        for case in 0..20 {
+            let n = 1000 + meta.gen_range(30_000) as usize;
+            let n_seqs = 1 + meta.gen_range(200);
+            let n_pats = 1 + meta.gen_range(100);
+            let threshold = 1 + meta.gen_range(8) as u32;
+            let threads = 1 + meta.gen_range(4) as usize;
+            let mut r = Rng::new(case);
+            let mut a: Vec<SeqRecord> = (0..n)
+                .map(|_| SeqRecord {
+                    seq: r.gen_range(n_seqs),
+                    pid: r.gen_range(n_pats) as u32,
+                    duration: r.gen_range(1000) as u32,
+                })
+                .collect();
+            let mut b = a.clone();
+            let mut c = a.clone();
+            let sa = screen(&mut a, &SparsityConfig { min_patients: threshold, threads });
+            let sb = screen_naive(&mut b, &SparsityConfig { min_patients: threshold, threads });
+            let sc = screen_paper_strategy(
+                &mut c,
+                &SparsityConfig { min_patients: threshold, threads },
+            );
+            a.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            b.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            c.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            assert_eq!(a, b, "case={case}");
+            assert_eq!(a, c, "case={case} (paper strategy diverged)");
+            assert_eq!(sa.records_after, sb.records_after);
+            assert_eq!(sa.distinct_after, sb.distinct_after);
+            assert_eq!(sa.distinct_before, sb.distinct_before);
+            assert_eq!(sa, sc);
+        }
+    }
+
+    #[test]
+    fn output_is_seq_sorted() {
+        let mut r = Rng::new(1);
+        let mut records: Vec<SeqRecord> = (0..10_000)
+            .map(|_| SeqRecord {
+                seq: r.gen_range(50),
+                pid: r.gen_range(500) as u32,
+                duration: 0,
+            })
+            .collect();
+        screen(&mut records, &SparsityConfig { min_patients: 3, threads: 2 });
+        assert!(records.windows(2).all(|w| (w[0].seq, w[0].pid) <= (w[1].seq, w[1].pid)));
+    }
+
+    #[test]
+    fn real_pid_equal_to_tombstone_is_impossible_by_construction() {
+        // Patient ids come from dense interning (< number of patients),
+        // so u32::MAX can never be a real pid; this test documents the
+        // invariant the marking scheme relies on.
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = crate::dbmart::NumericDbMart::encode(&mart);
+        assert!((db.num_patients() as u32) < TOMBSTONE_PID);
+    }
+
+    #[test]
+    fn duration_screen_requires_bucket_diversity() {
+        // seq 1: durations 0, 100, 200 (3 buckets of 30d) — survives k=2.
+        // seq 2: durations 5, 10 (same bucket) — dropped at k=2.
+        let mut records = vec![
+            SeqRecord { seq: 1, pid: 1, duration: 0 },
+            SeqRecord { seq: 1, pid: 2, duration: 100 },
+            SeqRecord { seq: 1, pid: 3, duration: 200 },
+            SeqRecord { seq: 2, pid: 1, duration: 5 },
+            SeqRecord { seq: 2, pid: 2, duration: 10 },
+        ];
+        let stats = screen_by_duration(&mut records, 30, 2);
+        assert!(records.iter().all(|r| r.seq == 1));
+        assert_eq!(stats.distinct_after, 1);
+    }
+}

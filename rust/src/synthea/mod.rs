@@ -1,0 +1,428 @@
+//! Synthetic clinical data generation — the Synthea™/MGB-Biobank stand-in.
+//!
+//! The paper benchmarks on (a) MGB Biobank data (4,985 patients, ~471
+//! entries/patient) and (b) the Synthea 100k COVID-19 synthetic dataset
+//! (reduced to 35k patients, ~318 entries/patient). Neither is shippable,
+//! so this module generates statistically comparable cohorts (see
+//! DESIGN.md §Substitutions): per-patient entry counts follow a lognormal
+//! around the configured mean, visit dates follow a random timeline over a
+//! configurable horizon, and code frequencies follow a Zipf power law —
+//! the three properties the mining workload is actually sensitive to.
+//!
+//! The COVID scenario additionally plants infections and *Post COVID-19*
+//! symptom trajectories per the WHO definition (symptoms present after
+//! infection, persisting ≥ 2 months), together with confounders
+//! (transient post-infection symptoms, pre-existing chronic symptoms, and
+//! symptoms explained by an alternative diagnosis), and returns the ground
+//! truth so the `postcovid` vignette can be *validated*, not just run.
+
+use crate::dbmart::{DbMart, DbMartEntry};
+use crate::rng::Rng;
+use std::collections::BTreeSet;
+
+/// The special phenX string for a COVID-19 infection event.
+pub const COVID_CODE: &str = "dx:covid19";
+
+/// Post-COVID candidate symptom codes (WHO symptom list subset).
+pub const SYMPTOM_CODES: &[&str] = &[
+    "sym:fatigue",
+    "sym:dyspnea",
+    "sym:brain_fog",
+    "sym:chest_pain",
+    "sym:anosmia",
+    "sym:headache",
+    "sym:joint_pain",
+    "sym:palpitations",
+];
+
+/// Alternative diagnoses that "explain away" a symptom (WHO exclusion:
+/// "if it can not be excluded by another rationale").
+pub const ALT_DIAGNOSES: &[&str] = &[
+    "dx:anemia",   // explains fatigue
+    "dx:asthma",   // explains dyspnea
+    "dx:migraine", // explains headache
+    "dx:arthritis", // explains joint_pain
+];
+
+/// Which alternative diagnosis explains which symptom.
+pub const ALT_EXPLAINS: &[(&str, &str)] = &[
+    ("dx:anemia", "sym:fatigue"),
+    ("dx:asthma", "sym:dyspnea"),
+    ("dx:migraine", "sym:headache"),
+    ("dx:arthritis", "sym:joint_pain"),
+];
+
+/// Scenario selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Generic EHR noise only (MGB-Biobank-like benchmark workload).
+    Generic,
+    /// COVID infections + Post-COVID trajectories with ground truth.
+    Covid,
+}
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SyntheaConfig {
+    pub patients: u64,
+    /// Target mean entries per patient.
+    pub avg_entries: f64,
+    /// Distinct background phenX codes.
+    pub vocab_size: u64,
+    /// Observation horizon in days.
+    pub horizon_days: u32,
+    /// Zipf exponent for background code frequency.
+    pub zipf_s: f64,
+    pub seed: u64,
+    pub scenario: Scenario,
+    /// Fraction of the cohort that gets a COVID infection (Covid scenario).
+    pub covid_attack_rate: f64,
+    /// Fraction of infected patients that develop Post-COVID.
+    pub postcovid_rate: f64,
+}
+
+impl SyntheaConfig {
+    /// MGB-Biobank-like comparison-benchmark cohort (paper Table 1),
+    /// optionally scaled down to fit a testbed.
+    pub fn mgb_like(scale: f64) -> SyntheaConfig {
+        SyntheaConfig {
+            patients: ((4985.0 * scale).round() as u64).max(1),
+            avg_entries: 471.0,
+            vocab_size: 8_000,
+            horizon_days: 3650,
+            zipf_s: 1.2,
+            seed: 20170282, // MGB IRB protocol number, for flavour
+            scenario: Scenario::Generic,
+            covid_attack_rate: 0.0,
+            postcovid_rate: 0.0,
+        }
+    }
+
+    /// Synthea-COVID-like performance-benchmark cohort (paper Table 2).
+    pub fn synthea_covid_like(scale: f64) -> SyntheaConfig {
+        SyntheaConfig {
+            patients: ((35_000.0 * scale).round() as u64).max(1),
+            avg_entries: 318.0,
+            vocab_size: 12_000,
+            horizon_days: 1460,
+            zipf_s: 1.15,
+            seed: 100_000,
+            scenario: Scenario::Covid,
+            covid_attack_rate: 0.6,
+            postcovid_rate: 0.25,
+        }
+    }
+
+    /// A small cohort for docs, examples and tests.
+    pub fn small() -> SyntheaConfig {
+        SyntheaConfig {
+            patients: 200,
+            avg_entries: 60.0,
+            vocab_size: 300,
+            horizon_days: 1200,
+            zipf_s: 1.1,
+            seed: 7,
+            scenario: Scenario::Covid,
+            covid_attack_rate: 0.5,
+            postcovid_rate: 0.3,
+        }
+    }
+
+    /// Generate the cohort (ground truth discarded).
+    pub fn generate(&self) -> DbMart {
+        self.generate_with_truth().dbmart
+    }
+
+    /// Generate the cohort together with Post-COVID ground truth.
+    pub fn generate_with_truth(&self) -> GeneratedCohort {
+        generate_cohort(self)
+    }
+}
+
+/// Ground truth emitted by the COVID scenario.
+#[derive(Clone, Debug, Default)]
+pub struct GroundTruth {
+    /// `(patient_id, symptom_code)` pairs that are true Post-COVID
+    /// symptoms under the WHO definition.
+    pub postcovid: BTreeSet<(String, String)>,
+    /// Patients that received a COVID infection.
+    pub infected: BTreeSet<String>,
+}
+
+/// Generator output: the dbmart plus ground truth.
+#[derive(Clone, Debug)]
+pub struct GeneratedCohort {
+    pub dbmart: DbMart,
+    pub truth: GroundTruth,
+}
+
+fn patient_name(i: u64) -> String {
+    format!("pat{i:06}")
+}
+
+fn code_name(i: u64) -> String {
+    format!("code:{i:05}")
+}
+
+fn generate_cohort(cfg: &SyntheaConfig) -> GeneratedCohort {
+    assert!(cfg.patients > 0 && cfg.avg_entries > 0.0 && cfg.vocab_size > 0);
+    let mut rng = Rng::new(cfg.seed);
+    let mut entries: Vec<DbMartEntry> =
+        Vec::with_capacity((cfg.patients as f64 * cfg.avg_entries * 1.05) as usize);
+    let mut truth = GroundTruth::default();
+
+    // Lognormal entry counts: mean cfg.avg_entries, sigma 0.45 — matches
+    // the long-tailed per-patient utilisation seen in EHR cohorts.
+    let sigma: f64 = 0.45;
+    let mu = cfg.avg_entries.ln() - sigma * sigma / 2.0;
+
+    for p in 0..cfg.patients {
+        let pid = patient_name(p);
+        let mut prng = rng.fork();
+        let n_background =
+            ((mu + sigma * prng.gen_normal()).exp().round() as u64).clamp(2, 50_000);
+
+        // Background visits: sorted random dates + zipf codes.
+        let mut dates: Vec<i32> = (0..n_background)
+            .map(|_| prng.gen_range(cfg.horizon_days as u64) as i32)
+            .collect();
+        dates.sort_unstable();
+        for d in dates {
+            let code = code_name(prng.gen_zipf(cfg.vocab_size, cfg.zipf_s));
+            entries.push(DbMartEntry {
+                patient_id: pid.clone(),
+                date: d,
+                phenx: code,
+                description: None,
+            });
+        }
+
+        if cfg.scenario == Scenario::Covid {
+            plant_covid_trajectory(cfg, &mut prng, &pid, &mut entries, &mut truth);
+        }
+    }
+
+    GeneratedCohort { dbmart: DbMart::new(entries), truth }
+}
+
+/// Plant the COVID arc for one patient:
+///
+/// * infection at a random date in the first half of the horizon;
+/// * **Post-COVID** patients: 1–3 symptoms, each recurring from ≥ ~75 days
+///   post infection across a span ≥ 60 days (WHO: ongoing ≥ 2 months);
+/// * **transient** patients: symptoms clustered < 2 months after
+///   infection (must NOT be labelled Post-COVID);
+/// * confounders: chronic pre-infection symptoms, and symptoms carrying an
+///   alternative diagnosis shortly before them (the vignette's exclusion
+///   step must remove these).
+fn plant_covid_trajectory(
+    cfg: &SyntheaConfig,
+    prng: &mut Rng,
+    pid: &str,
+    entries: &mut Vec<DbMartEntry>,
+    truth: &mut GroundTruth,
+) {
+    // Chronic pre-existing symptom for ~15% of all patients.
+    let chronic: Option<&str> = if prng.gen_bool(0.15) {
+        let s = *prng.choose(SYMPTOM_CODES);
+        let start = prng.gen_range((cfg.horizon_days / 4) as u64) as i32;
+        let mut d = start;
+        while d < cfg.horizon_days as i32 {
+            entries.push(DbMartEntry {
+                patient_id: pid.to_string(),
+                date: d,
+                phenx: s.to_string(),
+                description: None,
+            });
+            d += 30 + prng.gen_range(60) as i32;
+        }
+        Some(s)
+    } else {
+        None
+    };
+
+    if !prng.gen_bool(cfg.covid_attack_rate) {
+        return;
+    }
+    let infection_day = prng.gen_range((cfg.horizon_days / 2) as u64) as i32;
+    entries.push(DbMartEntry {
+        patient_id: pid.to_string(),
+        date: infection_day,
+        phenx: COVID_CODE.to_string(),
+        description: Some("COVID-19 infection".to_string()),
+    });
+    truth.infected.insert(pid.to_string());
+
+    let is_postcovid = prng.gen_bool(cfg.postcovid_rate);
+    if is_postcovid {
+        let n_sym = 1 + prng.gen_range(3) as usize;
+        let mut pool: Vec<&str> =
+            SYMPTOM_CODES.iter().copied().filter(|s| Some(*s) != chronic).collect();
+        prng.shuffle(&mut pool);
+        for &sym in pool.iter().take(n_sym) {
+            // Onset ~3 months post infection (WHO: "usually 3 months from
+            // onset"), persisting ≥ 2 months: 3–6 occurrences spanning
+            // ≥ 60 days.
+            let onset = infection_day + 75 + prng.gen_range(45) as i32;
+            let n_occ = 3 + prng.gen_range(4) as i32;
+            let span = 60 + prng.gen_range(120) as i32;
+            for k in 0..n_occ {
+                let d = onset + span * k / (n_occ - 1).max(1);
+                entries.push(DbMartEntry {
+                    patient_id: pid.to_string(),
+                    date: d,
+                    phenx: sym.to_string(),
+                    description: None,
+                });
+            }
+            truth.postcovid.insert((pid.to_string(), sym.to_string()));
+        }
+    } else if prng.gen_bool(0.5) {
+        // Transient (acute-phase) symptoms: all within 2 months.
+        let sym = *prng.choose(SYMPTOM_CODES);
+        let n_occ = 1 + prng.gen_range(2) as i32;
+        for _ in 0..n_occ {
+            let d = infection_day + 3 + prng.gen_range(50) as i32;
+            entries.push(DbMartEntry {
+                patient_id: pid.to_string(),
+                date: d,
+                phenx: sym.to_string(),
+                description: None,
+            });
+        }
+    }
+
+    // Alternative-diagnosis confounder for ~20% of infected patients: a
+    // symptom pattern that *looks* like Post-COVID but is preceded by an
+    // explaining diagnosis.
+    if prng.gen_bool(0.2) {
+        let (dx, sym) = *prng.choose(ALT_EXPLAINS);
+        if !truth.postcovid.contains(&(pid.to_string(), sym.to_string())) {
+            let dx_day = infection_day + 60 + prng.gen_range(30) as i32;
+            entries.push(DbMartEntry {
+                patient_id: pid.to_string(),
+                date: dx_day,
+                phenx: dx.to_string(),
+                description: None,
+            });
+            let n_occ = 3 + prng.gen_range(3) as i32;
+            for k in 0..n_occ {
+                let d = dx_day + 10 + 80 * k / (n_occ - 1).max(1);
+                entries.push(DbMartEntry {
+                    patient_id: pid.to_string(),
+                    date: d,
+                    phenx: sym.to_string(),
+                    description: None,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = SyntheaConfig::small();
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.entries.len(), b.entries.len());
+        assert_eq!(a.entries[0], b.entries[0]);
+        assert_eq!(a.entries[a.len() - 1], b.entries[b.len() - 1]);
+    }
+
+    #[test]
+    fn mean_entries_near_target() {
+        let mut cfg = SyntheaConfig::mgb_like(0.05); // ~250 patients
+        cfg.scenario = Scenario::Generic;
+        let mart = cfg.generate();
+        let mean = mart.len() as f64 / cfg.patients as f64;
+        assert!(
+            (mean - cfg.avg_entries).abs() < cfg.avg_entries * 0.15,
+            "mean {mean} vs target {}",
+            cfg.avg_entries
+        );
+    }
+
+    #[test]
+    fn generic_scenario_has_no_covid() {
+        let cfg = SyntheaConfig::mgb_like(0.01);
+        let g = cfg.generate_with_truth();
+        assert!(g.truth.infected.is_empty());
+        assert!(!g.dbmart.entries.iter().any(|e| e.phenx == COVID_CODE));
+    }
+
+    #[test]
+    fn covid_scenario_plants_infections_and_truth() {
+        let cfg = SyntheaConfig::small();
+        let g = cfg.generate_with_truth();
+        assert!(!g.truth.infected.is_empty());
+        assert!(!g.truth.postcovid.is_empty());
+        for (pid, _) in &g.truth.postcovid {
+            assert!(g.truth.infected.contains(pid));
+        }
+        let covid_pats: BTreeSet<String> = g
+            .dbmart
+            .entries
+            .iter()
+            .filter(|e| e.phenx == COVID_CODE)
+            .map(|e| e.patient_id.clone())
+            .collect();
+        assert_eq!(covid_pats, g.truth.infected);
+    }
+
+    #[test]
+    fn postcovid_truth_satisfies_who_definition_in_data() {
+        // For every ground-truth (patient, symptom): occurrences after the
+        // infection must span >= 60 days.
+        let cfg = SyntheaConfig::small();
+        let g = cfg.generate_with_truth();
+        for (pid, sym) in &g.truth.postcovid {
+            let infection = g
+                .dbmart
+                .entries
+                .iter()
+                .filter(|e| &e.patient_id == pid && e.phenx == COVID_CODE)
+                .map(|e| e.date)
+                .min()
+                .expect("infected");
+            let post_dates: Vec<i32> = g
+                .dbmart
+                .entries
+                .iter()
+                .filter(|e| &e.patient_id == pid && &e.phenx == sym && e.date > infection)
+                .map(|e| e.date)
+                .collect();
+            assert!(post_dates.len() >= 2, "{pid}/{sym} needs recurrences");
+            let span = post_dates.iter().max().unwrap() - post_dates.iter().min().unwrap();
+            assert!(span >= 60, "{pid}/{sym} span {span} < 60 days");
+        }
+    }
+
+    #[test]
+    fn dates_within_horizon_for_background() {
+        let cfg = SyntheaConfig::mgb_like(0.01);
+        let mart = cfg.generate();
+        for e in &mart.entries {
+            assert!(e.date >= 0 && e.date < cfg.horizon_days as i32 + 400);
+        }
+    }
+
+    #[test]
+    fn vocabulary_is_bounded() {
+        let mut cfg = SyntheaConfig::small();
+        cfg.vocab_size = 50;
+        let mart = cfg.generate();
+        let n = crate::dbmart::NumericDbMart::encode(&mart);
+        assert!(n.num_phenx() <= 50 + 1 + SYMPTOM_CODES.len() + ALT_DIAGNOSES.len());
+    }
+
+    #[test]
+    fn scale_parameter_scales_cohort() {
+        assert_eq!(SyntheaConfig::mgb_like(1.0).patients, 4985);
+        assert_eq!(SyntheaConfig::synthea_covid_like(1.0).patients, 35_000);
+        assert!(SyntheaConfig::mgb_like(0.1).patients >= 498);
+    }
+}

@@ -1,0 +1,308 @@
+//! Sequence utilities — the C++ library's "broad array of additional
+//! utility functions allowing fast operations on the sequences".
+//!
+//! Everything here operates on `&[SeqRecord]` slices, exploiting the
+//! `(seq, pid)` sort order the sparsity screen leaves behind where
+//! possible. The paper calls out, specifically:
+//!
+//! * extraction by **start phenX**, **end phenX**, and **minimum
+//!   duration** ([`filter_by_start`], [`filter_by_end`],
+//!   [`filter_min_duration`]);
+//! * the composed *transitive end-set* operation used by the Post-COVID
+//!   vignette: "extract all sequences that end with a phenX which is an
+//!   end phenX of all sequences with a given start phenX"
+//!   ([`transitive_end_sequences`]);
+//! * duration bucketing for the correlation step ([`duration_bucket`],
+//!   [`bucket_counts`]).
+
+use crate::dbmart::{decode_seq, encode_seq};
+use crate::mining::SeqRecord;
+use std::collections::BTreeSet;
+
+/// All records whose sequence starts with `start`.
+///
+/// On `(seq, pid)`-sorted input this is a binary-search range slice;
+/// unsorted input is handled by a linear fallback.
+pub fn filter_by_start(records: &[SeqRecord], start: u32) -> Vec<SeqRecord> {
+    let lo_key = encode_seq(start, 0);
+    let hi_key = encode_seq(start, crate::dbmart::MAX_PHENX - 1);
+    if is_seq_sorted(records) {
+        let lo = records.partition_point(|r| r.seq < lo_key);
+        let hi = records.partition_point(|r| r.seq <= hi_key);
+        records[lo..hi].to_vec()
+    } else {
+        records.iter().filter(|r| decode_seq(r.seq).0 == start).copied().collect()
+    }
+}
+
+/// All records whose sequence ends with `end`.
+pub fn filter_by_end(records: &[SeqRecord], end: u32) -> Vec<SeqRecord> {
+    records.iter().filter(|r| decode_seq(r.seq).1 == end).copied().collect()
+}
+
+/// All records with duration ≥ `min_duration`.
+pub fn filter_min_duration(records: &[SeqRecord], min_duration: u32) -> Vec<SeqRecord> {
+    records.iter().filter(|r| r.duration >= min_duration).copied().collect()
+}
+
+/// Distinct end phenX of all sequences starting with `start`.
+pub fn end_set_of(records: &[SeqRecord], start: u32) -> BTreeSet<u32> {
+    filter_by_start(records, start).iter().map(|r| decode_seq(r.seq).1).collect()
+}
+
+/// The paper's composed utility: all sequences that **end** with any
+/// phenX that is an end phenX of at least one sequence **starting** with
+/// `start` (used to pull every candidate trajectory downstream of a
+/// COVID infection).
+pub fn transitive_end_sequences(records: &[SeqRecord], start: u32) -> Vec<SeqRecord> {
+    let ends = end_set_of(records, start);
+    records.iter().filter(|r| ends.contains(&decode_seq(r.seq).1)).copied().collect()
+}
+
+/// Records of one patient.
+pub fn filter_by_patient(records: &[SeqRecord], pid: u32) -> Vec<SeqRecord> {
+    records.iter().filter(|r| r.pid == pid).copied().collect()
+}
+
+/// Duration bucket index for bucket width `width` (in duration units).
+#[inline]
+pub fn duration_bucket(duration: u32, width: u32) -> u32 {
+    duration / width.max(1)
+}
+
+/// Histogram of duration buckets for the given records.
+pub fn bucket_counts(records: &[SeqRecord], width: u32) -> std::collections::BTreeMap<u32, u64> {
+    let mut out = std::collections::BTreeMap::new();
+    for r in records {
+        *out.entry(duration_bucket(r.duration, width)).or_insert(0) += 1;
+    }
+    out
+}
+
+/// Distinct patients among the records.
+pub fn distinct_patients(records: &[SeqRecord]) -> BTreeSet<u32> {
+    records.iter().map(|r| r.pid).collect()
+}
+
+/// Distinct sequence ids among the records.
+pub fn distinct_sequences(records: &[SeqRecord]) -> BTreeSet<u64> {
+    records.iter().map(|r| r.seq).collect()
+}
+
+/// Per-patient span (max − min duration) of a specific sequence id —
+/// the Post-COVID vignette's "maximal difference of the duration of the
+/// sequences with the same end phenX" primitive, generalised.
+pub fn duration_span_per_patient(
+    records: &[SeqRecord],
+    seq: u64,
+) -> std::collections::BTreeMap<u32, u32> {
+    let mut minmax: std::collections::BTreeMap<u32, (u32, u32)> = Default::default();
+    for r in records.iter().filter(|r| r.seq == seq) {
+        let e = minmax.entry(r.pid).or_insert((r.duration, r.duration));
+        e.0 = e.0.min(r.duration);
+        e.1 = e.1.max(r.duration);
+    }
+    minmax.into_iter().map(|(p, (lo, hi))| (p, hi - lo)).collect()
+}
+
+/// All records for the exact `(start, end)` pair.
+pub fn filter_by_pair(records: &[SeqRecord], start: u32, end: u32) -> Vec<SeqRecord> {
+    let target = encode_seq(start, end);
+    if is_seq_sorted(records) {
+        let lo = records.partition_point(|r| r.seq < target);
+        let hi = records.partition_point(|r| r.seq <= target);
+        records[lo..hi].to_vec()
+    } else {
+        records.iter().filter(|r| r.seq == target).copied().collect()
+    }
+}
+
+/// The `k` most frequent sequences by record count, descending
+/// (ties broken by sequence id for determinism).
+pub fn top_k_sequences(records: &[SeqRecord], k: usize) -> Vec<(u64, u64)> {
+    let mut counts: std::collections::HashMap<u64, u64> = Default::default();
+    for r in records {
+        *counts.entry(r.seq).or_insert(0) += 1;
+    }
+    let mut pairs: Vec<(u64, u64)> = counts.into_iter().collect();
+    pairs.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    pairs.truncate(k);
+    pairs
+}
+
+/// Per-patient record counts (dense, indexed by pid).
+pub fn records_per_patient(records: &[SeqRecord], num_patients: u32) -> Vec<u64> {
+    let mut out = vec![0u64; num_patients as usize];
+    for r in records {
+        out[r.pid as usize] += 1;
+    }
+    out
+}
+
+/// Summary statistics of the duration distribution of a record set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DurationStats {
+    pub min: u32,
+    pub max: u32,
+    pub mean: f64,
+    pub count: u64,
+}
+
+/// Duration summary over the given records (`None` when empty).
+pub fn duration_stats(records: &[SeqRecord]) -> Option<DurationStats> {
+    if records.is_empty() {
+        return None;
+    }
+    let mut s = DurationStats { min: u32::MAX, max: 0, mean: 0.0, count: records.len() as u64 };
+    let mut sum = 0u64;
+    for r in records {
+        s.min = s.min.min(r.duration);
+        s.max = s.max.max(r.duration);
+        sum += r.duration as u64;
+    }
+    s.mean = sum as f64 / s.count as f64;
+    Some(s)
+}
+
+fn is_seq_sorted(records: &[SeqRecord]) -> bool {
+    records.windows(2).all(|w| w[0].seq <= w[1].seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: u32, end: u32, pid: u32, duration: u32) -> SeqRecord {
+        SeqRecord { seq: encode_seq(start, end), pid, duration }
+    }
+
+    fn sample() -> Vec<SeqRecord> {
+        let mut v = vec![
+            rec(1, 2, 0, 10),
+            rec(1, 3, 0, 90),
+            rec(1, 3, 1, 30),
+            rec(2, 3, 1, 5),
+            rec(4, 2, 2, 61),
+            rec(5, 3, 0, 100),
+        ];
+        v.sort_unstable_by_key(|r| (r.seq, r.pid));
+        v
+    }
+
+    #[test]
+    fn start_filter_sorted_and_unsorted_agree() {
+        let sorted = sample();
+        let mut unsorted = sorted.clone();
+        unsorted.swap(0, 5);
+        let mut a = filter_by_start(&sorted, 1);
+        let mut b = filter_by_start(&unsorted, 1);
+        a.sort_unstable_by_key(|r| (r.seq, r.pid));
+        b.sort_unstable_by_key(|r| (r.seq, r.pid));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn end_filter() {
+        let got = filter_by_end(&sample(), 3);
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|r| decode_seq(r.seq).1 == 3));
+    }
+
+    #[test]
+    fn min_duration_filter() {
+        let got = filter_min_duration(&sample(), 61);
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn end_set() {
+        let ends = end_set_of(&sample(), 1);
+        assert_eq!(ends, BTreeSet::from([2, 3]));
+    }
+
+    #[test]
+    fn transitive_end_sequences_matches_paper_description() {
+        // starts with 1 → ends {2, 3}; sequences ending in 2 or 3:
+        // (1,2),(1,3),(1,3),(2,3),(4,2),(5,3) = all 6 here.
+        let got = transitive_end_sequences(&sample(), 1);
+        assert_eq!(got.len(), 6);
+        // starts with 4 → ends {2}; sequences ending in 2: (1,2),(4,2).
+        let got = transitive_end_sequences(&sample(), 4);
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn empty_start_yields_empty() {
+        assert!(filter_by_start(&sample(), 99).is_empty());
+        assert!(transitive_end_sequences(&sample(), 99).is_empty());
+    }
+
+    #[test]
+    fn duration_buckets() {
+        assert_eq!(duration_bucket(0, 30), 0);
+        assert_eq!(duration_bucket(29, 30), 0);
+        assert_eq!(duration_bucket(30, 30), 1);
+        assert_eq!(duration_bucket(100, 0), 100); // width clamps to 1
+        let counts = bucket_counts(&sample(), 50);
+        assert_eq!(counts.get(&0), Some(&3)); // 10, 30, 5
+        assert_eq!(counts.get(&1), Some(&2)); // 90, 61
+        assert_eq!(counts.get(&2), Some(&1)); // 100
+    }
+
+    #[test]
+    fn span_per_patient() {
+        let spans = duration_span_per_patient(&sample(), encode_seq(1, 3));
+        assert_eq!(spans.get(&0), Some(&0)); // single occurrence (90)
+        assert_eq!(spans.get(&1), Some(&0)); // single occurrence (30)
+        let mut recs = sample();
+        recs.push(rec(1, 3, 0, 20));
+        let spans = duration_span_per_patient(&recs, encode_seq(1, 3));
+        assert_eq!(spans.get(&0), Some(&70)); // 90 − 20
+    }
+
+    #[test]
+    fn pair_filter_sorted_and_unsorted() {
+        let sorted = sample();
+        let mut shuffled = sorted.clone();
+        shuffled.reverse();
+        let a = filter_by_pair(&sorted, 1, 3);
+        let mut b = filter_by_pair(&shuffled, 1, 3);
+        b.sort_unstable_by_key(|r| (r.seq, r.pid));
+        assert_eq!(a.len(), 2);
+        assert_eq!(a, b);
+        assert!(filter_by_pair(&sorted, 9, 9).is_empty());
+    }
+
+    #[test]
+    fn top_k_orders_by_count_then_id() {
+        let recs = sample(); // (1,3) appears twice, others once
+        let top = top_k_sequences(&recs, 2);
+        assert_eq!(top[0], (encode_seq(1, 3), 2));
+        assert_eq!(top[1].1, 1);
+        assert_eq!(top_k_sequences(&recs, 100).len(), 5);
+        assert!(top_k_sequences(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn per_patient_counts() {
+        let counts = records_per_patient(&sample(), 4);
+        assert_eq!(counts, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn duration_summary() {
+        let s = duration_stats(&sample()).unwrap();
+        assert_eq!(s.min, 5);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.count, 6);
+        assert!((s.mean - (10 + 90 + 30 + 5 + 61 + 100) as f64 / 6.0).abs() < 1e-9);
+        assert_eq!(duration_stats(&[]), None);
+    }
+
+    #[test]
+    fn distinct_helpers() {
+        assert_eq!(distinct_patients(&sample()), BTreeSet::from([0, 1, 2]));
+        assert_eq!(distinct_sequences(&sample()).len(), 5);
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration over the PJRT runtime: the AOT artifacts loaded from
+//! `artifacts/` must agree with the pure-Rust analytic oracles on real
+//! mined data. Skipped (with a note) when `make artifacts` has not run.
+
+use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::matrix::SeqMatrix;
+use tspm_plus::mining::{mine_sequences, MiningConfig};
+use tspm_plus::ml;
+use tspm_plus::msmr::{self, MsmrConfig};
+use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet, Tensor};
+use tspm_plus::sparsity::{self, SparsityConfig};
+use tspm_plus::synthea::SyntheaConfig;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(ArtifactSet::load(&dir).expect("artifact load"))
+    } else {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn mined_matrix() -> (SeqMatrix, Vec<f32>, NumericDbMart) {
+    let g = SyntheaConfig::small().generate_with_truth();
+    let db = NumericDbMart::encode(&g.dbmart);
+    let mut records = mine_sequences(&db, &MiningConfig::default()).unwrap().records;
+    sparsity::screen(&mut records, &SparsityConfig { min_patients: 8, threads: 0 });
+    let m = SeqMatrix::build(&records, db.num_patients() as u32);
+    let pc: std::collections::BTreeSet<&str> =
+        g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
+    let labels: Vec<f32> = (0..db.num_patients())
+        .map(|p| f32::from(pc.contains(db.lookup.patient_name(p as u32))))
+        .collect();
+    (m, labels, db)
+}
+
+/// Label co-occurrence counts: PJRT accumulation == pure-Rust CSR scan.
+#[test]
+fn pjrt_label_counts_match_rust() {
+    let Some(arts) = artifacts() else { return };
+    let (m, labels, _) = mined_matrix();
+    let rust = msmr::label_counts_rust(&m, &labels);
+    let pjrt = msmr::label_counts_pjrt(&m, &labels, &arts).unwrap();
+    assert_eq!(rust.len(), pjrt.len());
+    for (i, (a, b)) in rust.iter().zip(&pjrt).enumerate() {
+        assert!((a - b).abs() < 1e-3, "col {i}: rust {a} pjrt {b}");
+    }
+}
+
+/// Pairwise co-occurrence counts over a pool: PJRT == Rust.
+#[test]
+fn pjrt_pair_counts_match_rust() {
+    let Some(arts) = artifacts() else { return };
+    let (m, _, _) = mined_matrix();
+    let pool: Vec<u32> = (0..(m.num_cols() as u32).min(64)).collect();
+    let rust = msmr::pair_counts_rust(&m, &pool);
+    let pjrt = msmr::pair_counts_pjrt(&m, &pool, &arts).unwrap();
+    for (i, (a, b)) in rust.iter().zip(&pjrt).enumerate() {
+        assert!((a - b).abs() < 1e-3, "cell {i}: rust {a} pjrt {b}");
+    }
+}
+
+/// Full MSMR selection must pick the same columns through both engines.
+#[test]
+fn msmr_selection_identical_across_engines() {
+    let Some(arts) = artifacts() else { return };
+    let (m, labels, _) = mined_matrix();
+    let cfg = MsmrConfig { top_k: 20, pool_size: 64, beta: 1.0 };
+    let rust_sel = msmr::select(&m, &labels, &cfg, None).unwrap();
+    let pjrt_sel = msmr::select(&m, &labels, &cfg, Some(&arts)).unwrap();
+    assert_eq!(rust_sel.columns, pjrt_sel.columns);
+}
+
+/// Full MLHO workflow through PJRT reaches the same quality as Rust.
+#[test]
+fn mlho_quality_parity() {
+    let Some(arts) = artifacts() else { return };
+    let (m, labels, _) = mined_matrix();
+    let sel = msmr::select(
+        &m,
+        &labels,
+        &MsmrConfig { top_k: 50, pool_size: 128, beta: 1.0 },
+        Some(&arts),
+    )
+    .unwrap();
+    let selected = m.select_columns(&sel.columns);
+    let cfg = ml::TrainConfig { epochs: 80, ..Default::default() };
+    let (_, _, rust_test) = ml::run_workflow(&selected, &labels, &cfg, None).unwrap();
+    let (_, _, pjrt_test) = ml::run_workflow(&selected, &labels, &cfg, Some(&arts)).unwrap();
+    assert!(
+        (rust_test.auc - pjrt_test.auc).abs() < 0.02,
+        "AUC diverged: rust {} vs pjrt {}",
+        rust_test.auc,
+        pjrt_test.auc
+    );
+}
+
+/// The raw cooc artifact (Pallas kernel) on a full random tile, checked
+/// cell-exactly against a Rust dot product.
+#[test]
+fn cooc_artifact_exact_on_dense_random()
+{
+    let Some(arts) = artifacts() else { return };
+    let (p, f) = (arts.tile_rows, arts.tile_features);
+    let mut rng = tspm_plus::rng::Rng::new(2024);
+    let x: Vec<f32> = (0..p * f).map(|_| f32::from(rng.gen_bool(0.35))).collect();
+    let y: Vec<f32> = (0..p * f).map(|_| f32::from(rng.gen_bool(0.15))).collect();
+    let out = arts
+        .get("cooc")
+        .unwrap()
+        .run(&[Tensor::new(vec![p, f], x.clone()), Tensor::new(vec![p, f], y.clone())])
+        .unwrap();
+    for probe in 0..50 {
+        let a = (probe * 37) % f;
+        let b = (probe * 91) % f;
+        let want: f32 = (0..p).map(|r| x[r * f + a] * y[r * f + b]).sum();
+        assert_eq!(out[0].data[a * f + b], want, "cell ({a},{b})");
+    }
+}
+
+/// Post-COVID identification: PJRT correlation path equals Rust path.
+#[test]
+fn postcovid_identical_across_engines() {
+    let Some(arts) = artifacts() else { return };
+    use tspm_plus::postcovid::{identify, PostCovidConfig};
+    use tspm_plus::synthea::{COVID_CODE, SYMPTOM_CODES};
+    let g = SyntheaConfig::small().generate_with_truth();
+    let db = NumericDbMart::encode(&g.dbmart);
+    let mined = mine_sequences(&db, &MiningConfig::default()).unwrap();
+    let covid = db.lookup.phenx_id(COVID_CODE).unwrap();
+    let mut cfg = PostCovidConfig::new(covid);
+    cfg.candidate_filter =
+        Some(SYMPTOM_CODES.iter().filter_map(|s| db.lookup.phenx_id(s)).collect());
+    let rust = identify(&mined.records, db.num_patients() as u32, &cfg, None).unwrap();
+    let pjrt = identify(&mined.records, db.num_patients() as u32, &cfg, Some(&arts)).unwrap();
+    assert_eq!(rust.confirmed, pjrt.confirmed);
+    assert_eq!(rust.candidates, pjrt.candidates);
+}

@@ -1,0 +1,234 @@
+//! Property tests over the coordinator invariants (hand-rolled
+//! generators — the offline registry has no proptest): random cohorts ×
+//! random configurations, asserting the invariants that must hold for
+//! *every* input, not just the curated fixtures:
+//!
+//! * conservation — every mining path emits exactly n·(n−1)/2 records
+//!   per patient (post filter), no loss, no duplication;
+//! * routing — pipeline sharding processes every chunk exactly once
+//!   regardless of shard count / queue depth;
+//! * state — screening is idempotent and thread-count invariant;
+//! * encoding — the sequence hash is injective over the vocabulary.
+
+use tspm_plus::dbmart::{decode_seq, encode_seq, DbMart, DbMartEntry, NumericDbMart};
+use tspm_plus::mining::{self, MiningConfig, SeqRecord};
+use tspm_plus::pipeline::{self, PipelineConfig};
+use tspm_plus::rng::Rng;
+use tspm_plus::sparsity::{self, SparsityConfig};
+
+/// Random dbmart generator: patients with random entry counts, dates and
+/// codes, including adversarial shapes (empty patients, single-entry
+/// patients, all-same-date, all-same-code).
+fn random_dbmart(rng: &mut Rng) -> DbMart {
+    let n_patients = 1 + rng.gen_range(40);
+    let vocab = 1 + rng.gen_range(30);
+    let horizon = 1 + rng.gen_range(1000);
+    let mut entries = Vec::new();
+    for p in 0..n_patients {
+        let shape = rng.gen_range(5);
+        let n = match shape {
+            0 => 0,                            // empty patient
+            1 => 1,                            // single entry
+            _ => 1 + rng.gen_range(60) as usize,
+        };
+        for _ in 0..n {
+            let date = if shape == 2 {
+                42 // all-same-date patient
+            } else {
+                rng.gen_range(horizon) as i32
+            };
+            let code = if shape == 3 {
+                0 // all-same-code patient
+            } else {
+                rng.gen_range(vocab)
+            };
+            entries.push(DbMartEntry {
+                patient_id: format!("p{p}"),
+                date,
+                phenx: format!("c{code}"),
+                description: None,
+            });
+        }
+    }
+    DbMart::new(entries)
+}
+
+fn sorted(mut v: Vec<SeqRecord>) -> Vec<SeqRecord> {
+    v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+    v
+}
+
+#[test]
+fn conservation_across_all_paths() {
+    let mut meta = Rng::new(0xC0FFEE);
+    for case in 0..25 {
+        let mut rng = Rng::new(case);
+        let mart = random_dbmart(&mut rng);
+        let db = NumericDbMart::encode(&mart);
+        let cfg = MiningConfig {
+            threads: 1 + meta.gen_range(4) as usize,
+            first_occurrence_only: meta.gen_bool(0.5),
+            ..Default::default()
+        };
+
+        // exact expected count from the formula
+        let mut per_patient: std::collections::HashMap<u32, Vec<(i32, u32)>> = Default::default();
+        for e in &db.entries {
+            per_patient.entry(e.patient).or_default().push((e.date, e.phenx));
+        }
+        let mut expect = 0u64;
+        for rows in per_patient.values() {
+            let n = if cfg.first_occurrence_only {
+                let mut codes: Vec<u32> = rows.iter().map(|&(_, c)| c).collect();
+                codes.sort_unstable();
+                codes.dedup();
+                codes.len() as u64
+            } else {
+                rows.len() as u64
+            };
+            expect += n * n.saturating_sub(1) / 2;
+        }
+
+        let batch = mining::mine_sequences(&db, &cfg).unwrap();
+        assert_eq!(batch.len() as u64, expect, "case={case} batch count");
+
+        // pipeline must agree record-for-record
+        let streamed = pipeline::run(
+            &db,
+            &PipelineConfig {
+                mining: cfg.clone(),
+                chunk_cap: 2_000 + meta.gen_range(100_000),
+                queue_depth: 1 + meta.gen_range(4) as usize,
+                shards: 1 + meta.gen_range(5) as usize,
+                screen: None,
+            },
+        );
+        match streamed {
+            Ok(s) => assert_eq!(
+                sorted(batch.records.clone()),
+                sorted(s.sequences.records),
+                "case={case} pipeline mismatch"
+            ),
+            Err(e) => {
+                // only legal failure: one patient exceeds the random cap
+                assert!(e.contains("alone yields"), "case={case}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn screening_idempotent_and_thread_invariant() {
+    let mut meta = Rng::new(77);
+    for case in 0..20 {
+        let mut rng = Rng::new(1000 + case);
+        let mart = random_dbmart(&mut rng);
+        let db = NumericDbMart::encode(&mart);
+        let mined = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let threshold = 1 + meta.gen_range(6) as u32;
+
+        let mut once = mined.records.clone();
+        let s1 = sparsity::screen(&mut once, &SparsityConfig { min_patients: threshold, threads: 1 });
+        // idempotence
+        let mut twice = once.clone();
+        let s2 = sparsity::screen(&mut twice, &SparsityConfig { min_patients: threshold, threads: 1 });
+        assert_eq!(once, twice, "case={case} screen not idempotent");
+        assert_eq!(s1.records_after, s2.records_before);
+        assert_eq!(s2.records_before, s2.records_after);
+        // thread invariance
+        for threads in [2usize, 4] {
+            let mut t = mined.records.clone();
+            sparsity::screen(&mut t, &SparsityConfig { min_patients: threshold, threads });
+            assert_eq!(sorted(once.clone()), sorted(t), "case={case} threads={threads}");
+        }
+        // survivor property: every surviving sequence occurs in >= threshold
+        // distinct patients, verified independently
+        let mut by_seq: std::collections::HashMap<u64, std::collections::BTreeSet<u32>> =
+            Default::default();
+        for r in &mined.records {
+            by_seq.entry(r.seq).or_default().insert(r.pid);
+        }
+        for r in &once {
+            assert!(by_seq[&r.seq].len() as u32 >= threshold, "case={case}");
+        }
+        // completeness: no qualifying record was dropped
+        let expect: u64 = mined
+            .records
+            .iter()
+            .filter(|r| by_seq[&r.seq].len() as u32 >= threshold)
+            .count() as u64;
+        assert_eq!(s1.records_after, expect, "case={case}");
+    }
+}
+
+#[test]
+fn sequence_hash_injective_and_monotone() {
+    let mut rng = Rng::new(5);
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..50_000 {
+        let s = rng.gen_range(10_000_000) as u32;
+        let e = rng.gen_range(10_000_000) as u32;
+        let h = encode_seq(s, e);
+        assert_eq!(decode_seq(h), (s, e));
+        if let Some(prev) = seen.insert(h, (s, e)) {
+            assert_eq!(prev, (s, e), "hash collision");
+        }
+    }
+    // monotone in (start, end) lexicographic order
+    assert!(encode_seq(3, 9_999_999) < encode_seq(4, 0));
+}
+
+#[test]
+fn durations_always_consistent_with_dates() {
+    // For every mined record, the duration must equal the date delta of
+    // *some* admissible pair of the patient's entries with those codes.
+    let mut rng = Rng::new(31);
+    for case in 0..10 {
+        let mart = random_dbmart(&mut Rng::new(900 + case));
+        let db = NumericDbMart::encode(&mart);
+        let mined = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let mut per_patient: std::collections::HashMap<u32, Vec<(i32, u32)>> = Default::default();
+        for e in &db.entries {
+            per_patient.entry(e.patient).or_default().push((e.date, e.phenx));
+        }
+        // probe a sample (full check is O(n·m))
+        for _ in 0..200.min(mined.len()) {
+            let r = mined.records[rng.gen_range(mined.len() as u64) as usize];
+            let (s, e) = decode_seq(r.seq);
+            let rows = &per_patient[&r.pid];
+            let ok = rows.iter().any(|&(d1, c1)| {
+                c1 == s
+                    && rows.iter().any(|&(d2, c2)| {
+                        c2 == e && d2 >= d1 && (d2 - d1) as u32 == r.duration
+                    })
+            });
+            assert!(ok, "case={case}: record {r:?} has no supporting entry pair");
+        }
+    }
+}
+
+#[test]
+fn pipeline_backpressure_never_deadlocks_or_drops() {
+    // Adversarial queue/shard combinations, including shards >> chunks
+    // and queue_depth 1.
+    let mart = random_dbmart(&mut Rng::new(4242));
+    let db = NumericDbMart::encode(&mart);
+    let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+    for (shards, depth) in [(1usize, 1usize), (8, 1), (2, 2), (16, 3), (3, 16)] {
+        let result = pipeline::run(
+            &db,
+            &PipelineConfig {
+                chunk_cap: 1_000_000,
+                queue_depth: depth,
+                shards,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            sorted(batch.records.clone()),
+            sorted(result.sequences.records),
+            "shards={shards} depth={depth}"
+        );
+    }
+}
