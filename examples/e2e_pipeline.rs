@@ -1,27 +1,28 @@
 //! End-to-end driver — proves all three layers compose on a real small
 //! workload (the EXPERIMENTS.md §E2E run).
 //!
-//! Pipeline: synthetic COVID cohort → numeric encoding → streaming mining
-//! with backpressure ([`tspm_plus::pipeline`]) → sparsity screen → MSMR
-//! feature selection on the **PJRT co-occurrence artifacts (L1 Pallas
-//! kernel inside)** → logistic-regression training via the **PJRT
-//! `logreg_grad` artifact** → evaluation, plus the WHO Post-COVID
-//! vignette validated against ground truth. Reports the paper's headline
-//! metric (mining throughput + memory) along the way.
+//! Pipeline, orchestrated by the **engine façade** on the **streaming
+//! backend** (bounded queues + backpressure + work-stealing shards):
+//! synthetic COVID cohort → numeric encoding → mining → sparsity screen
+//! → patient×sequence matrix → MSMR feature selection on the **PJRT
+//! co-occurrence artifacts (L1 Pallas kernel inside)** → logistic-
+//! regression training via the **PJRT `logreg_grad` artifact** →
+//! evaluation, plus the WHO Post-COVID vignette validated against ground
+//! truth. Reports the paper's headline metric (mining throughput +
+//! memory) along the way.
 //!
-//! Requires `make artifacts` (falls back to pure Rust with a warning).
+//! Requires `make artifacts` + the `pjrt` cargo feature (falls back to
+//! pure Rust with a warning).
 //!
 //! Run with: `cargo run --release --example e2e_pipeline`
 
 use std::time::Instant;
 
 use tspm_plus::dbmart::NumericDbMart;
-use tspm_plus::matrix::SeqMatrix;
-use tspm_plus::metrics::{fmt_bytes, fmt_duration, MemTracker};
+use tspm_plus::engine::{BackendChoice, Engine};
+use tspm_plus::metrics::{fmt_bytes, fmt_duration};
 use tspm_plus::mining::MiningConfig;
 use tspm_plus::ml::{self, TrainConfig};
-use tspm_plus::msmr::{self, MsmrConfig};
-use tspm_plus::pipeline::{run as run_pipeline, PipelineConfig};
 use tspm_plus::postcovid::{identify, validate, PostCovidConfig};
 use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet};
 use tspm_plus::sparsity::SparsityConfig;
@@ -57,58 +58,53 @@ fn main() {
         db.num_phenx(),
         g.truth.postcovid.len()
     );
-
-    // ---- stage 2: streaming mining + screen -------------------------------
-    let tracker = MemTracker::new();
-    let t0 = Instant::now();
-    let pipe_cfg = PipelineConfig {
-        mining: MiningConfig::default(),
-        chunk_cap: 2_000_000,
-        queue_depth: 4,
-        shards: 0,
-        screen: Some(SparsityConfig { min_patients: 8, threads: 0 }),
-    };
-    let result = run_pipeline(&db, &pipe_cfg).expect("pipeline");
-    let mine_elapsed = t0.elapsed();
-    let mined_total = result.metrics.records.load(std::sync::atomic::Ordering::Relaxed);
-    tracker.add(result.sequences.byte_size());
-    println!(
-        "[mine] {} sequences mined in {} ({:.1} M seq/s), screened to {} \
-         ({} distinct); stage metrics: {}",
-        mined_total,
-        fmt_duration(mine_elapsed),
-        mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6,
-        result.sequences.len(),
-        result.screen_stats.map(|s| s.distinct_after).unwrap_or(0),
-        result.metrics.report()
-    );
-    println!("[mine] resident sequence set: {}", fmt_bytes(result.sequences.byte_size()));
-
-    // ---- stage 3: MSMR on PJRT --------------------------------------------
     let pc_patients: std::collections::BTreeSet<&str> =
         g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
     let labels: Vec<f32> = (0..db.num_patients())
         .map(|p| f32::from(pc_patients.contains(db.lookup.patient_name(p as u32))))
         .collect();
-    let m = SeqMatrix::build(&result.sequences.records, db.num_patients() as u32);
+
+    // ---- stage 2: the engine runs mine → screen → matrix → msmr -----------
+    // Streaming backend pinned; the 32 MiB budget forces real partitioning
+    // (≈2M-record chunks) so backpressure is actually exercised.
+    let out = Engine::from_dbmart(db)
+        .backend(BackendChoice::Streaming)
+        .memory_budget(32 << 20)
+        .mine(MiningConfig::default())
+        .screen(SparsityConfig { min_patients: 8, threads: 0 })
+        .matrix()
+        .msmr(200)
+        .labels(labels.clone())
+        .run_with(artifacts.as_ref())
+        .expect("engine run");
+    let db = &out.db;
+    // Actual mined count from the mine stage (the forecast is an upper
+    // bound once self-pairs are excluded or first-occurrence filtering is
+    // on).
+    let mined_total = out.report.stages[0].records_out;
+    let mine_elapsed = out.report.stages[0].elapsed;
     println!(
-        "\n[msmr] matrix {} × {} ({} nnz)",
+        "[mine] {} sequences mined in {} ({:.1} M seq/s) on the {} backend, \
+         screened to {} ({} distinct)",
+        mined_total,
+        fmt_duration(mine_elapsed),
+        mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6,
+        out.report.backend,
+        out.sequences.len(),
+        out.screen_stats.map(|s| s.distinct_after).unwrap_or(0),
+    );
+    println!("[mine] resident sequence set: {}", fmt_bytes(out.sequences.byte_size()));
+    println!("\n[engine] per-stage report:\n{}", out.report.render());
+
+    // ---- stage 3: MSMR results --------------------------------------------
+    let m = out.matrix.as_ref().expect("matrix stage");
+    let sel = out.selection.as_ref().expect("msmr stage");
+    println!(
+        "[msmr] matrix {} × {} ({} nnz) → selected {} features (top relevance {:.4} nats)",
         m.num_patients,
         m.num_cols(),
-        m.nnz()
-    );
-    let t1 = Instant::now();
-    let sel = msmr::select(
-        &m,
-        &labels,
-        &MsmrConfig { top_k: 200, ..Default::default() },
-        artifacts.as_ref(),
-    )
-    .expect("msmr");
-    println!(
-        "[msmr] selected {} features in {} (top relevance {:.4} nats)",
+        m.nnz(),
         sel.columns.len(),
-        fmt_duration(t1.elapsed()),
         sel.relevance.first().copied().unwrap_or(0.0)
     );
     let selected = m.select_columns(&sel.columns);
@@ -136,9 +132,13 @@ fn main() {
     let mut pc_cfg = PostCovidConfig::new(covid);
     pc_cfg.candidate_filter =
         Some(SYMPTOM_CODES.iter().filter_map(|s| db.lookup.phenx_id(s)).collect());
-    // The vignette needs unscreened records (rare per-patient patterns).
-    let full = tspm_plus::mining::mine_sequences(&db, &MiningConfig::default()).expect("mine");
-    let pc = identify(&full.records, db.num_patients() as u32, &pc_cfg, artifacts.as_ref())
+    // The vignette needs unscreened records (rare per-patient patterns):
+    // a second, mine-only engine run on the auto-selected backend.
+    let full = Engine::from_dbmart(out.db.clone())
+        .mine(MiningConfig::default())
+        .run()
+        .expect("mine");
+    let pc = identify(&full.sequences.records, db.num_patients() as u32, &pc_cfg, artifacts.as_ref())
         .expect("postcovid");
     let v = validate(&pc, &g.truth, &db.lookup);
     println!(
@@ -151,11 +151,14 @@ fn main() {
 
     // ---- summary ------------------------------------------------------------
     println!("\n=== E2E summary ===");
-    println!("mining throughput : {:.1} M seq/s", mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6);
+    println!(
+        "mining throughput : {:.1} M seq/s",
+        mined_total as f64 / mine_elapsed.as_secs_f64() / 1e6
+    );
     println!("test AUC          : {:.3}", test_m.auc);
     println!("post-covid F1     : {:.3}", v.f1());
     println!(
-        "layers exercised  : L3 rust pipeline ✓  L2 JAX artifacts {}  L1 Pallas kernel {}",
+        "layers exercised  : L3 rust engine (streaming backend) ✓  L2 JAX artifacts {}  L1 Pallas kernel {}",
         if artifacts.is_some() { "✓" } else { "✗ (fallback)" },
         if artifacts.is_some() { "✓ (inside cooc artifacts)" } else { "✗" },
     );

@@ -5,14 +5,27 @@
 //! selected sequences (instead of raw EHR entries), and translate the
 //! significant sequences back to readable descriptions.
 //!
+//! The packaged driver [`tspm_plus::ml::mlho_vignette`] runs the whole
+//! thing — its front half (mine → screen → matrix → msmr) is one
+//! [`tspm_plus::engine::Engine`] chain internally. Before invoking it,
+//! this example shows the engine's dry-run surface: the validated plan
+//! and the output-size forecast that drives backend auto-selection,
+//! both computed without mining a single sequence.
+//!
 //! Uses the AOT-compiled PJRT artifacts when `artifacts/manifest.json`
-//! exists (build with `make artifacts`); otherwise falls back to the
-//! pure-Rust analytics path.
+//! exists (build with `make artifacts` and the `pjrt` cargo feature);
+//! otherwise falls back to the pure-Rust analytics path.
 //!
 //! Run with: `cargo run --release --example mlho_workflow`
 
+use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::engine::Engine;
+use tspm_plus::metrics::fmt_bytes;
+use tspm_plus::mining::MiningConfig;
 use tspm_plus::ml;
 use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet};
+use tspm_plus::sparsity::SparsityConfig;
+use tspm_plus::synthea::SyntheaConfig;
 
 fn main() {
     let artifacts = match ArtifactSet::load(&default_artifacts_dir()) {
@@ -25,6 +38,34 @@ fn main() {
             None
         }
     };
-    let report = ml::mlho_vignette(400, 200, 200, artifacts.as_ref()).expect("vignette");
+
+    // Dry-run surface: assemble and validate a stage chain mirroring the
+    // vignette's defaults (same cohort size, threshold_for screen), and
+    // forecast its mining output, before any work happens. This is
+    // illustrative — the vignette below builds its own chain internally.
+    let patients = 400u64;
+    let mut gen_cfg = SyntheaConfig::small();
+    gen_cfg.patients = patients;
+    let db = NumericDbMart::encode(&gen_cfg.generate());
+    let engine = Engine::from_dbmart(db)
+        .mine(MiningConfig::default())
+        .screen(SparsityConfig {
+            min_patients: tspm_plus::bench_util::experiments::threshold_for(patients),
+            threads: 0,
+        })
+        .matrix();
+    let plan = engine.plan().expect("valid plan");
+    let forecast = engine.forecast().expect("forecast");
+    println!(
+        "engine plan: {}  (forecast: {} sequences, {})\n",
+        plan.describe(),
+        forecast.total_sequences,
+        fmt_bytes(forecast.total_bytes)
+    );
+
+    // The packaged vignette (engine-backed internally): mine → screen →
+    // matrix → MSMR → train → evaluate → translate top sequences.
+    let report =
+        ml::mlho_vignette(patients, 200, 200, artifacts.as_ref()).expect("vignette");
     print!("{report}");
 }

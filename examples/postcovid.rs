@@ -7,8 +7,8 @@
 //!
 //! Run with: `cargo run --release --example postcovid`
 
-use tspm_plus::dbmart::NumericDbMart;
-use tspm_plus::mining::{mine_sequences, MiningConfig};
+use tspm_plus::engine::Engine;
+use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{identify, validate, PostCovidConfig};
 use tspm_plus::runtime::{default_artifacts_dir, ArtifactSet};
 use tspm_plus::synthea::{SyntheaConfig, COVID_CODE, SYMPTOM_CODES};
@@ -25,10 +25,16 @@ fn main() {
         g.truth.postcovid.len()
     );
 
-    // 2. Mine all transitive sequences (durations are the key input).
-    let db = NumericDbMart::encode(&g.dbmart);
-    let mined = mine_sequences(&db, &MiningConfig::default()).expect("mining");
-    println!("mined {} sequences", mined.len());
+    // 2. Mine all transitive sequences (durations are the key input)
+    // through the engine façade — no screening: the WHO definition needs
+    // rare per-patient patterns.
+    let run = Engine::from_raw(&g.dbmart)
+        .expect("encode")
+        .mine(MiningConfig::default())
+        .run()
+        .expect("mining");
+    let (db, mined) = (run.db, run.sequences);
+    println!("mined {} sequences via the {} backend", mined.len(), run.report.backend);
 
     // 3. WHO definition over sequences + durations.
     let covid = db.lookup.phenx_id(COVID_CODE).expect("covid code");

@@ -1,51 +1,58 @@
 //! Quickstart: the 60-second tour of the tSPM+ public API.
 //!
-//! Generates a small synthetic clinical cohort, mines all transitive
-//! sequences with durations, sparsity-screens them, and shows how a
-//! numeric sequence translates back to human-readable form (paper
-//! Fig. 2).
+//! One fluent [`Engine`] chain runs the paper's pipeline — generate a
+//! small synthetic clinical cohort, mine all transitive sequences with
+//! durations, sparsity-screen them — on an automatically selected
+//! execution backend, then shows how a numeric sequence translates back
+//! to human-readable form (paper Fig. 2). The per-stage free functions
+//! remain available as the expert layer (see the crate docs).
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use tspm_plus::dbmart::{decode_seq, format_seq, NumericDbMart};
+use tspm_plus::dbmart::{decode_seq, format_seq};
+use tspm_plus::engine::{Engine, TspmError};
 use tspm_plus::metrics::fmt_bytes;
-use tspm_plus::mining::{mine_sequences, MiningConfig};
-use tspm_plus::sparsity::{screen, SparsityConfig};
+use tspm_plus::mining::MiningConfig;
+use tspm_plus::sparsity::SparsityConfig;
 use tspm_plus::synthea::SyntheaConfig;
 use tspm_plus::util;
 
-fn main() {
+fn main() -> Result<(), TspmError> {
     // 1. A cohort. Real use: DbMart::read_csv("my_ehr_export.csv").
     let cohort = SyntheaConfig::small().generate();
     println!("cohort: {} rows", cohort.len());
 
-    // 2. Numeric encoding with lookup tables (the paper's preprocessing).
-    let db = NumericDbMart::encode(&cohort);
+    // 2–4. Encode → mine → screen, as one validated engine plan. The
+    // backend (in-memory / file-backed / streaming) is auto-selected
+    // from the output-size forecast; errors are one unified type.
+    let out = Engine::from_raw(&cohort)?
+        .mine(MiningConfig::default())
+        .screen(SparsityConfig { min_patients: 5, threads: 0 })
+        .run()?;
+
+    let db = &out.db;
     println!(
-        "encoded: {} patients, {} distinct phenX, {} per entry",
+        "encoded: {} patients, {} distinct phenX",
         db.num_patients(),
-        db.num_phenx(),
-        fmt_bytes(db.byte_size() / db.len().max(1) as u64),
+        db.num_phenx()
     );
-
-    // 3. Mine every transitive sequence, with durations in days.
-    let cfg = MiningConfig::default();
-    let mined = mine_sequences(&db, &cfg).expect("mining");
-    println!("mined: {} sequences ({})", mined.len(), fmt_bytes(mined.byte_size()));
-
-    // 4. Sparsity screen: keep sequences seen in ≥ 5 distinct patients.
-    let mut records = mined.records;
-    let stats = screen(&mut records, &SparsityConfig { min_patients: 5, threads: 0 });
+    let stats = out.screen_stats.expect("screen stage ran");
     println!(
-        "screened: {} → {} records, {} → {} distinct sequences",
-        stats.records_before, stats.records_after, stats.distinct_before, stats.distinct_after
+        "mined {} sequences ({}), screened to {} ({} distinct) on the {} backend",
+        stats.records_before,
+        fmt_bytes(out.report.stages[0].bytes_out),
+        stats.records_after,
+        stats.distinct_after,
+        out.report.backend,
     );
+    println!("\nper-stage report:\n{}", out.report.render());
 
     // 5. A sequence is a reversible decimal hash (paper Fig. 2).
+    let records = &out.sequences.records;
     let sample = records[records.len() / 2];
     let (start, end) = decode_seq(sample.seq);
     println!(
-        "\nexample record: seq={} ({}) duration={}d patient={}",
+        "example record: seq={} ({}) duration={}d patient={}",
         sample.seq,
         format_seq(sample.seq),
         sample.duration,
@@ -58,7 +65,7 @@ fn main() {
     );
 
     // 6. Utility functions: everything downstream of one phenX.
-    let from_start = util::filter_by_start(&records, start);
+    let from_start = util::filter_by_start(records, start);
     let long_ones = util::filter_min_duration(&from_start, 90);
     println!(
         "\nsequences starting with {}: {} total, {} lasting ≥ 90 days",
@@ -66,4 +73,5 @@ fn main() {
         from_start.len(),
         long_ones.len()
     );
+    Ok(())
 }

@@ -7,9 +7,12 @@
 //! from JSON and round-trip serialization, so every experiment is
 //! reproducible from a checked-in config file.
 
+use crate::engine::BackendChoice;
 use crate::json::Json;
+use crate::mining::{MiningConfig, MiningMode};
+use crate::sparsity::SparsityConfig;
 use std::fmt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Errors from loading/validating a config.
 #[derive(Debug)]
@@ -43,6 +46,11 @@ pub struct RunConfig {
     pub first_occurrence_only: bool,
     /// `memory` or `file` operating mode.
     pub mode: String,
+    /// Engine execution backend: `auto`, `memory`, `file` or `streaming`
+    /// (see [`crate::engine::BackendChoice`]). `auto` defers to the
+    /// engine's memory forecast, except that `mode = "file"` pins the
+    /// file-backed backend for backwards compatibility.
+    pub backend: String,
     /// Duration unit divisor in days (1 = days, 7 = weeks, 30 = months).
     pub duration_unit_days: u32,
     // --- sparsity ---
@@ -70,6 +78,7 @@ impl Default for RunConfig {
             threads: 0,
             first_occurrence_only: false,
             mode: "memory".to_string(),
+            backend: "auto".to_string(),
             duration_unit_days: 1,
             sparsity_screen: true,
             sparsity_min_patients: 50,
@@ -91,6 +100,7 @@ impl RunConfig {
             ("threads", Json::from(self.threads)),
             ("first_occurrence_only", Json::from(self.first_occurrence_only)),
             ("mode", Json::from(self.mode.clone())),
+            ("backend", Json::from(self.backend.clone())),
             ("duration_unit_days", Json::from(self.duration_unit_days as u64)),
             ("sparsity_screen", Json::from(self.sparsity_screen)),
             ("sparsity_min_patients", Json::from(self.sparsity_min_patients as u64)),
@@ -106,7 +116,7 @@ impl RunConfig {
         let obj = j.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
         let known = [
             "patients", "avg_entries", "vocab_size", "seed", "threads",
-            "first_occurrence_only", "mode", "duration_unit_days",
+            "first_occurrence_only", "mode", "backend", "duration_unit_days",
             "sparsity_screen", "sparsity_min_patients", "max_elements_per_chunk",
             "artifacts_dir", "work_dir",
         ];
@@ -149,6 +159,10 @@ impl RunConfig {
         if let Some(v) = j.get("mode") {
             c.mode = v.as_str().ok_or_else(|| ConfigError("mode must be a string".into()))?.to_string();
         }
+        if let Some(v) = j.get("backend") {
+            c.backend =
+                v.as_str().ok_or_else(|| ConfigError("backend must be a string".into()))?.to_string();
+        }
         if let Some(v) = j.get("artifacts_dir") {
             c.artifacts_dir =
                 v.as_str().ok_or_else(|| ConfigError("artifacts_dir must be a string".into()))?.to_string();
@@ -180,6 +194,9 @@ impl RunConfig {
         if self.mode != "memory" && self.mode != "file" {
             return Err(ConfigError(format!("mode must be 'memory' or 'file', got {:?}", self.mode)));
         }
+        if let Err(e) = self.backend.parse::<BackendChoice>() {
+            return Err(ConfigError(e));
+        }
         if self.patients == 0 {
             return Err(ConfigError("patients must be > 0".into()));
         }
@@ -199,6 +216,41 @@ impl RunConfig {
             return Err(ConfigError("max_elements_per_chunk must be > 0".into()));
         }
         Ok(())
+    }
+
+    // --- engine wiring -----------------------------------------------------
+
+    /// The mining stage configuration this config describes.
+    pub fn mining_config(&self) -> MiningConfig {
+        MiningConfig {
+            threads: self.threads,
+            first_occurrence_only: self.first_occurrence_only,
+            duration_unit_days: self.duration_unit_days,
+            mode: if self.mode == "file" { MiningMode::FileBased } else { MiningMode::InMemory },
+            work_dir: PathBuf::from(&self.work_dir),
+            include_self_pairs: true,
+        }
+    }
+
+    /// The sparsity-screen stage, when `sparsity_screen` is enabled.
+    /// A threshold of 0 keeps every sequence, so it counts as disabled
+    /// (old configs with `sparsity_min_patients: 0` stay loadable).
+    pub fn sparsity_config(&self) -> Option<SparsityConfig> {
+        (self.sparsity_screen && self.sparsity_min_patients > 0).then_some(SparsityConfig {
+            min_patients: self.sparsity_min_patients,
+            threads: self.threads,
+        })
+    }
+
+    /// The engine backend this config requests. `auto` stays automatic
+    /// unless the legacy `mode = "file"` pins file-backed execution.
+    pub fn backend_choice(&self) -> BackendChoice {
+        match self.backend.parse::<BackendChoice>() {
+            Ok(BackendChoice::Auto) if self.mode == "file" => BackendChoice::FileBacked,
+            Ok(choice) => choice,
+            // validate() rejects unknown names before execution.
+            Err(_) => BackendChoice::Auto,
+        }
     }
 }
 
@@ -234,6 +286,48 @@ mod tests {
     fn bad_mode_rejected() {
         let j = Json::parse(r#"{"mode": "gpu"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let j = Json::parse(r#"{"backend": "quantum"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn backend_choice_mapping() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.backend_choice(), BackendChoice::Auto);
+        c.backend = "streaming".into();
+        assert_eq!(c.backend_choice(), BackendChoice::Streaming);
+        c.backend = "memory".into();
+        assert_eq!(c.backend_choice(), BackendChoice::InMemory);
+        // Legacy file mode pins the file-backed backend under auto.
+        c.backend = "auto".into();
+        c.mode = "file".into();
+        assert_eq!(c.backend_choice(), BackendChoice::FileBacked);
+    }
+
+    #[test]
+    fn zero_threshold_counts_as_screen_disabled() {
+        // Seed-era configs could carry min_patients 0 with the screen on
+        // (a no-op); they must stay loadable and simply skip the stage.
+        let j = Json::parse(r#"{"sparsity_screen": true, "sparsity_min_patients": 0}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.sparsity_config().is_none());
+    }
+
+    #[test]
+    fn mining_and_sparsity_wiring() {
+        let mut c = RunConfig::default();
+        c.mode = "file".into();
+        c.duration_unit_days = 7;
+        let mc = c.mining_config();
+        assert!(matches!(mc.mode, MiningMode::FileBased));
+        assert_eq!(mc.duration_unit_days, 7);
+        assert_eq!(c.sparsity_config().unwrap().min_patients, c.sparsity_min_patients);
+        c.sparsity_screen = false;
+        assert!(c.sparsity_config().is_none());
     }
 
     #[test]

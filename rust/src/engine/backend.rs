@@ -1,0 +1,301 @@
+//! Pluggable execution backends for the mine stage.
+//!
+//! All three backends produce the *same* sequence multiset (golden-tested
+//! in the engine tests and `rust/tests/integration.rs`); they differ only
+//! in how the output is materialised:
+//!
+//! * [`BackendKind::InMemory`] — [`crate::mining::mine_sequences`]:
+//!   thread-local vectors merged into one buffer. Fastest when the whole
+//!   output fits the memory budget.
+//! * [`BackendKind::FileBacked`] — [`crate::mining::mine_sequences_to_files`]
+//!   + [`crate::seqstore`]: per-worker spill files, resident set
+//!   O(buffer × threads) during mining (the paper's "1.33 GB instead of
+//!   43 GB" mode).
+//! * [`BackendKind::Streaming`] — [`crate::pipeline::run`]: partition
+//!   chunks flow through bounded queues with backpressure and
+//!   work-stealing shards; intermediate memory is
+//!   O(queue_depth × chunk output).
+//!
+//! Note that the engine contract returns an in-memory
+//! [`SequenceSet`], so every backend ultimately materialises the final
+//! result; the backends differ in their *intermediate* footprint (the
+//! paper's "1.33 GB instead of 43 GB" refers to mining-time residency).
+//! For outputs too large to hold at all, use the expert layer directly:
+//! [`crate::mining::mine_sequences_to_files`] plus streaming consumption
+//! via [`crate::seqstore::SeqFileSet::for_each`].
+//!
+//! Auto-selection uses [`crate::partition`]'s exact per-patient output
+//! prediction (`n·(n−1)/2` after the optional first-occurrence filter):
+//! the whole output fits the budget → `InMemory`; it doesn't, but every
+//! partition chunk can → `Streaming`; even a single patient overflows a
+//! chunk (no partition can help) → `FileBacked`, whose mining phase
+//! keeps only O(write-buffer × threads) resident.
+
+use super::error::TspmError;
+use crate::dbmart::NumericDbMart;
+use crate::metrics::MemTracker;
+use crate::mining::{self, MiningConfig, MiningMode, SeqRecord, SequenceSet};
+use crate::partition;
+use crate::pipeline::{self, PipelineConfig};
+
+/// Hard per-chunk element cap mirroring the R ecosystem's 2³¹−1 vector
+/// limit that motivated the paper's adaptive partitioning.
+pub const HARD_ELEMENT_CAP: u64 = (1u64 << 31) - 1;
+
+/// Default memory budget for auto-selection when the caller sets none:
+/// 4 GiB of sequence records, a laptop-safe figure (paper §"Performance
+/// on End User devices").
+pub const DEFAULT_MEMORY_BUDGET_BYTES: u64 = 4 << 30;
+
+/// Backend requested at plan-build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Pick from the memory forecast at run time (the default).
+    #[default]
+    Auto,
+    InMemory,
+    FileBacked,
+    Streaming,
+}
+
+/// Backend actually executed (the resolution of [`BackendChoice`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    InMemory,
+    FileBacked,
+    Streaming,
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::InMemory => "in-memory",
+            BackendKind::FileBacked => "file-backed",
+            BackendKind::Streaming => "streaming",
+        })
+    }
+}
+
+/// One canonical name→choice mapping shared by the CLI (`--backend`) and
+/// [`crate::config::RunConfig`] — keeps the accepted string set from
+/// drifting between surfaces.
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "memory" => Ok(BackendChoice::InMemory),
+            "file" => Ok(BackendChoice::FileBacked),
+            "streaming" => Ok(BackendChoice::Streaming),
+            other => {
+                Err(format!("backend must be auto|memory|file|streaming, got {other:?}"))
+            }
+        }
+    }
+}
+
+/// Exact output-size forecast for one mining configuration, computed in
+/// one linear pass (dense patient ids make the per-patient counting a
+/// vector index, not a hash).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MiningForecast {
+    /// Σ over patients of n·(n−1)/2 (post first-occurrence filter).
+    pub total_sequences: u64,
+    /// The largest single patient's n·(n−1)/2 — the partitioning floor:
+    /// no chunk can predict below this.
+    pub max_patient_sequences: u64,
+    /// `total_sequences` × 16 bytes (the paper's 128-bit record).
+    pub total_bytes: u64,
+}
+
+/// Predict the mining output without mining. Matches
+/// [`crate::partition::plan`]'s per-patient prediction exactly, so the
+/// forecast is never an underestimate (and is exact when self-pairs are
+/// included, an upper bound otherwise).
+pub fn forecast(db: &NumericDbMart, cfg: &MiningConfig) -> MiningForecast {
+    let n_patients = db.num_patients();
+    if n_patients == 0 {
+        return MiningForecast::default();
+    }
+    let mut counts = vec![0u64; n_patients];
+    if cfg.first_occurrence_only {
+        let mut seen = std::collections::HashSet::with_capacity(db.entries.len());
+        for e in &db.entries {
+            if seen.insert(((e.patient as u64) << 32) | e.phenx as u64) {
+                counts[e.patient as usize] += 1;
+            }
+        }
+    } else {
+        for e in &db.entries {
+            counts[e.patient as usize] += 1;
+        }
+    }
+    let mut total = 0u64;
+    let mut max = 0u64;
+    for &n in &counts {
+        let pairs = n * n.saturating_sub(1) / 2;
+        total += pairs;
+        max = max.max(pairs);
+    }
+    MiningForecast {
+        total_sequences: total,
+        max_patient_sequences: max,
+        total_bytes: total * std::mem::size_of::<SeqRecord>() as u64,
+    }
+}
+
+/// Resolve `Auto` against a forecast and a memory budget (bytes).
+pub fn auto_select(f: &MiningForecast, budget_bytes: u64) -> BackendKind {
+    let cap = partition::cap_from_memory(budget_bytes, HARD_ELEMENT_CAP);
+    if f.total_sequences <= cap {
+        BackendKind::InMemory
+    } else if f.max_patient_sequences <= cap {
+        BackendKind::Streaming
+    } else {
+        BackendKind::FileBacked
+    }
+}
+
+/// Resolve a [`BackendChoice`] to the backend that will run — the one
+/// selection policy, shared by [`crate::engine::Engine::run_with`] and
+/// any external scheduler.
+pub fn resolve(choice: BackendChoice, f: &MiningForecast, budget_bytes: u64) -> BackendKind {
+    match choice {
+        BackendChoice::InMemory => BackendKind::InMemory,
+        BackendChoice::FileBacked => BackendKind::FileBacked,
+        BackendChoice::Streaming => BackendKind::Streaming,
+        BackendChoice::Auto => auto_select(f, budget_bytes),
+    }
+}
+
+/// Execute the mine stage on the chosen backend. Screening is *not*
+/// fused here — the engine applies it as its own stage so all backends
+/// share one screening code path (and one timing entry).
+pub fn execute(
+    kind: BackendKind,
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    chunk_cap: u64,
+    tracker: &MemTracker,
+) -> Result<SequenceSet, TspmError> {
+    match kind {
+        BackendKind::InMemory => {
+            Ok(mining::mine_sequences_tracked(db, cfg, Some(tracker))?)
+        }
+        BackendKind::FileBacked => {
+            let cfg = MiningConfig { mode: MiningMode::FileBased, ..cfg.clone() };
+            let files = mining::mine_sequences_to_files_tracked(db, &cfg, Some(tracker))?;
+            // Collection materialises the full set (the engine contract
+            // returns an in-memory SequenceSet); the backend's memory win
+            // is confined to the mining phase above. See the module docs
+            // for the fully-streaming expert path.
+            let records = files.read_all()?;
+            tracker.add((records.len() * std::mem::size_of::<SeqRecord>()) as u64);
+            let set = SequenceSet {
+                records,
+                num_patients: files.num_patients,
+                num_phenx: files.num_phenx,
+            };
+            // Best-effort cleanup: the result is already in memory, so a
+            // failed unlink (shared work_dir, NFS quirks) must not throw
+            // away a completed mine.
+            let _ = files.remove();
+            Ok(set)
+        }
+        BackendKind::Streaming => {
+            let cfg = PipelineConfig {
+                mining: MiningConfig { mode: MiningMode::InMemory, ..cfg.clone() },
+                chunk_cap: chunk_cap.max(1),
+                screen: None,
+                ..Default::default()
+            };
+            let result = pipeline::run(db, &cfg)?;
+            tracker.add(result.sequences.byte_size());
+            Ok(result.sequences)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::{DbMart, DbMartEntry};
+
+    fn db_with_sizes(sizes: &[usize]) -> NumericDbMart {
+        let mut entries = Vec::new();
+        for (p, &n) in sizes.iter().enumerate() {
+            for i in 0..n {
+                entries.push(DbMartEntry {
+                    patient_id: format!("p{p}"),
+                    date: i as i32,
+                    phenx: format!("x{i}"),
+                    description: None,
+                });
+            }
+        }
+        NumericDbMart::encode(&DbMart::new(entries))
+    }
+
+    #[test]
+    fn forecast_matches_partition_prediction() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        for first_only in [false, true] {
+            let cfg = MiningConfig { first_occurrence_only: first_only, ..Default::default() };
+            let f = forecast(&db, &cfg);
+            let plan = partition::plan(&db, &cfg, u64::MAX).unwrap();
+            assert_eq!(f.total_sequences, plan.total_predicted(), "first_only={first_only}");
+            let mined = mining::mine_sequences(&db, &cfg).unwrap();
+            assert_eq!(f.total_sequences, mined.len() as u64);
+        }
+    }
+
+    #[test]
+    fn forecast_tracks_largest_patient() {
+        let db = db_with_sizes(&[3, 10, 5]);
+        let f = forecast(&db, &MiningConfig::default());
+        assert_eq!(f.max_patient_sequences, 45); // 10·9/2
+        assert_eq!(f.total_sequences, 3 + 45 + 10);
+        assert_eq!(f.total_bytes, f.total_sequences * 16);
+    }
+
+    #[test]
+    fn empty_cohort_forecast_is_zero() {
+        let f = forecast(&NumericDbMart::default(), &MiningConfig::default());
+        assert_eq!(f, MiningForecast::default());
+    }
+
+    #[test]
+    fn auto_select_policy() {
+        let f = MiningForecast {
+            total_sequences: 1000,
+            max_patient_sequences: 100,
+            total_bytes: 16_000,
+        };
+        // Whole output fits → in-memory.
+        assert_eq!(auto_select(&f, 1_000_000), BackendKind::InMemory);
+        // Output doesn't fit, chunks do → streaming.
+        assert_eq!(auto_select(&f, 200 * 16), BackendKind::Streaming);
+        // Even one patient overflows a chunk → file-backed.
+        assert_eq!(auto_select(&f, 50 * 16), BackendKind::FileBacked);
+    }
+
+    #[test]
+    fn backend_names_parse_round() {
+        assert_eq!("auto".parse::<BackendChoice>().unwrap(), BackendChoice::Auto);
+        assert_eq!("memory".parse::<BackendChoice>().unwrap(), BackendChoice::InMemory);
+        assert_eq!("file".parse::<BackendChoice>().unwrap(), BackendChoice::FileBacked);
+        assert_eq!("streaming".parse::<BackendChoice>().unwrap(), BackendChoice::Streaming);
+        assert!("quantum".parse::<BackendChoice>().unwrap_err().contains("quantum"));
+    }
+
+    #[test]
+    fn fixed_choices_resolve_to_themselves() {
+        let f = forecast(&db_with_sizes(&[4]), &MiningConfig::default());
+        assert_eq!(resolve(BackendChoice::InMemory, &f, 1), BackendKind::InMemory);
+        assert_eq!(resolve(BackendChoice::FileBacked, &f, u64::MAX), BackendKind::FileBacked);
+        assert_eq!(resolve(BackendChoice::Streaming, &f, u64::MAX), BackendKind::Streaming);
+        assert_eq!(resolve(BackendChoice::Auto, &f, u64::MAX), BackendKind::InMemory);
+    }
+}

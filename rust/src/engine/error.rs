@@ -1,0 +1,154 @@
+//! The one error type of the engine façade.
+//!
+//! The seed grew five incompatible error types (`MiningError`,
+//! `PartitionError`, the `MiningErrorOrPartition` combinator,
+//! `ConfigError`, `CliError`) plus `EncodeError`, `RuntimeError` and raw
+//! `io::Error`s, so every caller stitched stages together with
+//! `map_err(|e| e.to_string())`. [`TspmError`] absorbs all of them via
+//! `From` impls: any stage result can be `?`-propagated through a façade
+//! run, and `source()` preserves the underlying cause chain.
+
+use crate::cli::CliError;
+use crate::config::ConfigError;
+use crate::dbmart::EncodeError;
+use crate::mining::MiningError;
+use crate::partition::PartitionError;
+use crate::runtime::RuntimeError;
+use std::fmt;
+
+/// Unified error for every engine-orchestrated pipeline stage.
+#[derive(Debug)]
+pub enum TspmError {
+    /// Filesystem / spill-file failures.
+    Io(std::io::Error),
+    /// Sequencing failures ([`crate::mining`]).
+    Mining(MiningError),
+    /// Adaptive-partitioning failures ([`crate::partition`]).
+    Partition(PartitionError),
+    /// Raw-dbmart encoding failures ([`crate::dbmart`]).
+    Encode(EncodeError),
+    /// Configuration loading/validation failures ([`crate::config`]).
+    Config(ConfigError),
+    /// Command-line parsing failures ([`crate::cli`]).
+    Cli(CliError),
+    /// PJRT / artifact failures ([`crate::runtime`]).
+    Runtime(RuntimeError),
+    /// An [`crate::engine::Plan`] that fails validation (empty chain,
+    /// ill-ordered stages, missing labels, …).
+    Plan(String),
+    /// Streaming-orchestrator failures ([`crate::pipeline`]).
+    Pipeline(String),
+}
+
+impl fmt::Display for TspmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TspmError::Io(e) => write!(f, "io error: {e}"),
+            TspmError::Mining(e) => write!(f, "{e}"),
+            TspmError::Partition(e) => write!(f, "{e}"),
+            TspmError::Encode(e) => write!(f, "{e}"),
+            TspmError::Config(e) => write!(f, "{e}"),
+            TspmError::Cli(e) => write!(f, "{e}"),
+            TspmError::Runtime(e) => write!(f, "{e}"),
+            TspmError::Plan(msg) => write!(f, "invalid plan: {msg}"),
+            TspmError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TspmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TspmError::Io(e) => Some(e),
+            TspmError::Mining(e) => Some(e),
+            TspmError::Partition(e) => Some(e),
+            TspmError::Encode(e) => Some(e),
+            TspmError::Config(e) => Some(e),
+            TspmError::Cli(e) => Some(e),
+            TspmError::Runtime(e) => Some(e),
+            TspmError::Plan(_) | TspmError::Pipeline(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TspmError {
+    fn from(e: std::io::Error) -> Self {
+        TspmError::Io(e)
+    }
+}
+
+impl From<MiningError> for TspmError {
+    fn from(e: MiningError) -> Self {
+        TspmError::Mining(e)
+    }
+}
+
+impl From<PartitionError> for TspmError {
+    fn from(e: PartitionError) -> Self {
+        TspmError::Partition(e)
+    }
+}
+
+impl From<EncodeError> for TspmError {
+    fn from(e: EncodeError) -> Self {
+        TspmError::Encode(e)
+    }
+}
+
+impl From<ConfigError> for TspmError {
+    fn from(e: ConfigError) -> Self {
+        TspmError::Config(e)
+    }
+}
+
+impl From<CliError> for TspmError {
+    fn from(e: CliError) -> Self {
+        TspmError::Cli(e)
+    }
+}
+
+impl From<RuntimeError> for TspmError {
+    fn from(e: RuntimeError) -> Self {
+        TspmError::Runtime(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_module_error_converts() {
+        let m: TspmError = MiningError::TooManySequences { mined: 10, cap: 5 }.into();
+        assert!(matches!(m, TspmError::Mining(_)));
+        let p: TspmError =
+            PartitionError::PatientExceedsCap { patient: 1, sequences: 10, cap: 5 }.into();
+        assert!(matches!(p, TspmError::Partition(_)));
+        let c: TspmError = ConfigError("bad".into()).into();
+        assert!(matches!(c, TspmError::Config(_)));
+        let cl: TspmError = CliError("bad flag".into()).into();
+        assert!(matches!(cl, TspmError::Cli(_)));
+        let r: TspmError = RuntimeError("no artifacts".into()).into();
+        assert!(matches!(r, TspmError::Runtime(_)));
+        let e: TspmError = EncodeError("vocab overflow".into()).into();
+        assert!(matches!(e, TspmError::Encode(_)));
+        let i: TspmError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(matches!(i, TspmError::Io(_)));
+    }
+
+    #[test]
+    fn display_preserves_inner_message() {
+        let e = TspmError::from(MiningError::TooManySequences { mined: 7, cap: 3 });
+        let s = e.to_string();
+        assert!(s.contains('7') && s.contains('3'), "got {s}");
+        assert!(TspmError::Plan("empty".into()).to_string().contains("invalid plan"));
+    }
+
+    #[test]
+    fn source_chain_is_preserved() {
+        use std::error::Error;
+        let e = TspmError::from(ConfigError("x".into()));
+        assert!(e.source().is_some());
+        assert!(TspmError::Plan("x".into()).source().is_none());
+    }
+}

@@ -1,0 +1,594 @@
+//! The unified engine façade — one entry object for the whole tSPM+
+//! workflow.
+//!
+//! The paper's contribution is an end-to-end pipeline (dbmart encoding →
+//! transitive-pair mining with durations → sparsity screening →
+//! patient×sequence matrix → MSMR), but the expert modules expose it as
+//! free functions with per-module configs and error types. [`Engine`] is
+//! the composable front door: a fluent builder assembles a validated
+//! [`Plan`] (typed stage chain), dispatches the mine stage to one of
+//! three interchangeable [`backends`](BackendKind) — chosen explicitly or
+//! auto-selected from [`crate::partition`]'s memory prediction — and
+//! returns every stage's output plus a [`RunReport`] of per-stage
+//! timings and sizes. All failures funnel into the single [`TspmError`].
+//!
+//! ```no_run
+//! use tspm_plus::engine::Engine;
+//! use tspm_plus::mining::MiningConfig;
+//! use tspm_plus::sparsity::SparsityConfig;
+//!
+//! let cohort = tspm_plus::synthea::SyntheaConfig::small().generate();
+//! let out = Engine::from_raw(&cohort)?
+//!     .mine(MiningConfig::default())
+//!     .screen(SparsityConfig { min_patients: 5, threads: 0 })
+//!     .matrix()
+//!     .run()?;
+//! println!("{} screened sequences via the {} backend",
+//!          out.sequences.len(), out.report.backend);
+//! println!("{}", out.report.render());
+//! # Ok::<(), tspm_plus::engine::TspmError>(())
+//! ```
+//!
+//! The original free functions remain available as the "expert layer"
+//! (see the crate docs); the façade is the supported composition seam —
+//! future scaling work (async backends, caching, sharded serving) plugs
+//! in behind [`BackendKind`] without touching callers.
+
+pub mod backend;
+pub mod error;
+pub mod plan;
+
+pub use backend::{
+    auto_select, forecast, resolve, BackendChoice, BackendKind, MiningForecast,
+    DEFAULT_MEMORY_BUDGET_BYTES, HARD_ELEMENT_CAP,
+};
+pub use error::TspmError;
+pub use plan::{Plan, Stage};
+
+use crate::config::RunConfig;
+use crate::dbmart::{DbMart, NumericDbMart};
+use crate::matrix::SeqMatrix;
+use crate::metrics::{fmt_bytes, fmt_duration, MemTracker, PhaseTimer};
+use crate::mining::{MiningConfig, SequenceSet};
+use crate::msmr::{self, MsmrConfig, Selection};
+use crate::partition;
+use crate::runtime::ArtifactSet;
+use crate::sparsity::{self, ScreenStats, SparsityConfig};
+use std::time::Duration;
+
+/// Timing/size record for one executed stage.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    /// Stage name ([`Stage::name`]).
+    pub stage: String,
+    pub elapsed: Duration,
+    /// Records flowing out of the stage (matrix: non-zeros; msmr:
+    /// selected features).
+    pub records_out: u64,
+    /// Logical bytes of the stage output.
+    pub bytes_out: u64,
+}
+
+/// What a run did: backend, per-stage breakdown, peak logical memory.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// The backend the mine stage actually executed on.
+    pub backend: BackendKind,
+    /// Output-size forecast that drove backend selection.
+    pub forecast: MiningForecast,
+    pub stages: Vec<StageReport>,
+    /// High-water mark of the engine's logical allocations
+    /// ([`MemTracker`] semantics, not RSS).
+    pub peak_logical_bytes: u64,
+}
+
+impl RunReport {
+    /// Total wall time across stages.
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|s| s.elapsed).sum()
+    }
+
+    /// Multi-line human-readable breakdown.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "backend: {}  (forecast {} sequences, {})\n",
+            self.backend,
+            self.forecast.total_sequences,
+            fmt_bytes(self.forecast.total_bytes)
+        );
+        let width =
+            self.stages.iter().map(|s| s.stage.len()).max().unwrap_or(5).max(5);
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  {:<width$}  {}  {:>12} records  {:>10}\n",
+                s.stage,
+                fmt_duration(s.elapsed),
+                s.records_out,
+                fmt_bytes(s.bytes_out),
+                width = width
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<width$}  {}  peak logical {}\n",
+            "TOTAL",
+            fmt_duration(self.total()),
+            fmt_bytes(self.peak_logical_bytes),
+            width = width
+        ));
+        out
+    }
+}
+
+/// Everything a run produced. Stages that were not in the plan leave
+/// their slot `None`. The encoded dbmart travels back out so callers can
+/// translate numeric ids through its lookup tables.
+pub struct RunOutput {
+    /// The (possibly screened) mined sequences.
+    pub sequences: SequenceSet,
+    /// The encoded dbmart the run consumed (lookup tables included).
+    pub db: NumericDbMart,
+    pub screen_stats: Option<ScreenStats>,
+    pub duration_screen_stats: Option<ScreenStats>,
+    pub matrix: Option<SeqMatrix>,
+    pub selection: Option<Selection>,
+    pub report: RunReport,
+}
+
+/// Fluent pipeline builder over one encoded dbmart. See the module docs
+/// for the canonical chain; every method returns `self` so plans read as
+/// one expression. Nothing executes until [`Engine::run`].
+pub struct Engine {
+    db: NumericDbMart,
+    stages: Vec<Stage>,
+    backend: BackendChoice,
+    memory_budget_bytes: Option<u64>,
+    labels: Option<Vec<f32>>,
+}
+
+impl Engine {
+    /// Start a pipeline over an already-encoded dbmart.
+    pub fn from_dbmart(db: NumericDbMart) -> Engine {
+        Engine {
+            db,
+            stages: Vec::new(),
+            backend: BackendChoice::Auto,
+            memory_budget_bytes: None,
+            labels: None,
+        }
+    }
+
+    /// Start a pipeline over a raw dbmart (encodes it first; surfaces
+    /// vocabulary overflow as [`TspmError::Encode`] instead of
+    /// panicking).
+    pub fn from_raw(raw: &DbMart) -> Result<Engine, TspmError> {
+        Ok(Engine::from_dbmart(NumericDbMart::try_encode(raw)?))
+    }
+
+    /// Build the canonical stage chain from a [`RunConfig`]: mine with
+    /// the config's mining settings, screen when `sparsity_screen` is
+    /// set, backend per `backend`/`mode`, memory budget from
+    /// `max_elements_per_chunk`.
+    pub fn from_config(db: NumericDbMart, cfg: &RunConfig) -> Result<Engine, TspmError> {
+        cfg.validate()?;
+        let mut engine = Engine::from_dbmart(db)
+            .backend(cfg.backend_choice())
+            .memory_budget(
+                cfg.max_elements_per_chunk
+                    .saturating_mul(std::mem::size_of::<crate::mining::SeqRecord>() as u64),
+            )
+            .mine(cfg.mining_config());
+        if let Some(sc) = cfg.sparsity_config() {
+            engine = engine.screen(sc);
+        }
+        Ok(engine)
+    }
+
+    // --- fluent stage chain ------------------------------------------------
+
+    /// Append the mine stage (required, first).
+    pub fn mine(mut self, cfg: MiningConfig) -> Engine {
+        self.stages.push(Stage::Mine(cfg));
+        self
+    }
+
+    /// Append the distinct-patient sparsity screen.
+    pub fn screen(mut self, cfg: SparsityConfig) -> Engine {
+        self.stages.push(Stage::Screen(cfg));
+        self
+    }
+
+    /// Append the duration-bucket diversity screen.
+    pub fn screen_durations(mut self, bucket_days: u32, min_distinct_durations: u32) -> Engine {
+        self.stages.push(Stage::DurationScreen { bucket_days, min_distinct_durations });
+        self
+    }
+
+    /// Append the patient×sequence matrix stage.
+    pub fn matrix(mut self) -> Engine {
+        self.stages.push(Stage::Matrix { duration_bucket_days: None });
+        self
+    }
+
+    /// Append the duration-aware matrix stage (each column is a
+    /// `(sequence, duration-bucket)` pair — the paper's new dimension).
+    pub fn matrix_with_durations(mut self, bucket_days: u32) -> Engine {
+        self.stages.push(Stage::Matrix { duration_bucket_days: Some(bucket_days) });
+        self
+    }
+
+    /// Append MSMR selection of the top-`k` features (needs
+    /// [`Engine::matrix`] before it and [`Engine::labels`]).
+    pub fn msmr(self, top_k: usize) -> Engine {
+        self.msmr_with(MsmrConfig { top_k, ..Default::default() })
+    }
+
+    /// [`Engine::msmr`] with full control of the selection config.
+    pub fn msmr_with(mut self, cfg: MsmrConfig) -> Engine {
+        self.stages.push(Stage::Msmr(cfg));
+        self
+    }
+
+    // --- execution knobs ---------------------------------------------------
+
+    /// Per-patient phenotype labels (`labels[pid] ∈ {0,1}`) for MSMR.
+    pub fn labels(mut self, labels: Vec<f32>) -> Engine {
+        self.labels = Some(labels);
+        self
+    }
+
+    /// Pin the execution backend (default: [`BackendChoice::Auto`]).
+    pub fn backend(mut self, choice: BackendChoice) -> Engine {
+        self.backend = choice;
+        self
+    }
+
+    /// Memory budget in bytes for auto-selection and streaming chunk
+    /// sizing (default: [`DEFAULT_MEMORY_BUDGET_BYTES`]).
+    pub fn memory_budget(mut self, bytes: u64) -> Engine {
+        self.memory_budget_bytes = Some(bytes);
+        self
+    }
+
+    // --- plan / run --------------------------------------------------------
+
+    /// Assemble and validate the plan without executing it.
+    pub fn plan(&self) -> Result<Plan, TspmError> {
+        let plan = Plan {
+            stages: self.stages.clone(),
+            backend: self.backend,
+            memory_budget_bytes: self.memory_budget_bytes,
+        };
+        plan.validate()?;
+        if plan.wants_msmr() {
+            match &self.labels {
+                None => {
+                    return Err(TspmError::Plan(
+                        "msmr needs per-patient labels — call .labels(...) before .run()"
+                            .into(),
+                    ))
+                }
+                Some(l) if l.len() != self.db.num_patients() => {
+                    return Err(TspmError::Plan(format!(
+                        "labels length {} does not match the cohort's {} patients",
+                        l.len(),
+                        self.db.num_patients()
+                    )))
+                }
+                _ => {}
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Forecast the mine stage's output without running anything.
+    pub fn forecast(&self) -> Result<MiningForecast, TspmError> {
+        let plan = self.plan()?;
+        let cfg = plan.mining_config().expect("validated plan has a mine stage");
+        Ok(backend::forecast(&self.db, cfg))
+    }
+
+    /// Validate, resolve the backend, and execute the plan.
+    pub fn run(self) -> Result<RunOutput, TspmError> {
+        self.run_with(None)
+    }
+
+    /// [`Engine::run`] with PJRT artifacts for the analytics stages
+    /// (MSMR contractions); `None` uses the pure-Rust paths.
+    pub fn run_with(self, artifacts: Option<&ArtifactSet>) -> Result<RunOutput, TspmError> {
+        let plan = self.plan()?;
+        let Engine { db, labels, memory_budget_bytes, .. } = self;
+
+        let mining_cfg = plan
+            .mining_config()
+            .expect("validated plan has a mine stage")
+            .clone();
+        let budget = memory_budget_bytes.unwrap_or(DEFAULT_MEMORY_BUDGET_BYTES);
+        let fc = backend::forecast(&db, &mining_cfg);
+        let kind = backend::resolve(plan.backend, &fc, budget);
+        let chunk_cap = partition::cap_from_memory(budget, HARD_ELEMENT_CAP);
+
+        let mut timer = PhaseTimer::new();
+        let tracker = MemTracker::new();
+        let mut stages: Vec<StageReport> = Vec::new();
+
+        // 1. Mine, on the resolved backend.
+        let mut sequences =
+            timer.run("mine", || backend::execute(kind, &db, &mining_cfg, chunk_cap, &tracker))?;
+        stages.push(StageReport {
+            stage: "mine".into(),
+            elapsed: timer.elapsed("mine").unwrap_or_default(),
+            records_out: sequences.len() as u64,
+            bytes_out: sequences.byte_size(),
+        });
+
+        // 2. Sparsity screen (shared code path for every backend).
+        let mut screen_stats = None;
+        if let Some(sc) = plan.screen_config() {
+            let stats = timer.run("screen", || sparsity::screen(&mut sequences.records, &sc));
+            stages.push(StageReport {
+                stage: "screen".into(),
+                elapsed: timer.elapsed("screen").unwrap_or_default(),
+                records_out: stats.records_after,
+                bytes_out: sequences.byte_size(),
+            });
+            screen_stats = Some(stats);
+        }
+
+        // 3. Duration-diversity screen.
+        let mut duration_screen_stats = None;
+        if let Some((bucket, min_distinct)) = plan.duration_screen() {
+            let stats = timer.run("duration_screen", || {
+                sparsity::screen_by_duration(&mut sequences.records, bucket, min_distinct)
+            });
+            stages.push(StageReport {
+                stage: "duration_screen".into(),
+                elapsed: timer.elapsed("duration_screen").unwrap_or_default(),
+                records_out: stats.records_after,
+                bytes_out: sequences.byte_size(),
+            });
+            duration_screen_stats = Some(stats);
+        }
+
+        // 4. Patient×sequence matrix.
+        let mut matrix = None;
+        if let Some(bucket) = plan.matrix_stage() {
+            let m = timer.run("matrix", || match bucket {
+                Some(b) => SeqMatrix::build_with_durations(
+                    &sequences.records,
+                    sequences.num_patients,
+                    b,
+                ),
+                None => SeqMatrix::build(&sequences.records, sequences.num_patients),
+            });
+            let bytes = (m.nnz() * std::mem::size_of::<u32>()
+                + m.row_ptr.len() * std::mem::size_of::<usize>()
+                + m.seq_ids.len() * std::mem::size_of::<u64>()) as u64;
+            tracker.add(bytes);
+            stages.push(StageReport {
+                stage: "matrix".into(),
+                elapsed: timer.elapsed("matrix").unwrap_or_default(),
+                records_out: m.nnz() as u64,
+                bytes_out: bytes,
+            });
+            matrix = Some(m);
+        }
+
+        // 5. MSMR feature selection.
+        let mut selection = None;
+        if let Some(mcfg) = plan.msmr_config() {
+            let m = matrix.as_ref().expect("validated: msmr implies matrix");
+            let l = labels.as_ref().expect("validated: msmr implies labels");
+            let sel = timer.run("msmr", || msmr::select(m, l, &mcfg, artifacts))?;
+            stages.push(StageReport {
+                stage: "msmr".into(),
+                elapsed: timer.elapsed("msmr").unwrap_or_default(),
+                records_out: sel.columns.len() as u64,
+                bytes_out: (sel.columns.len()
+                    * (std::mem::size_of::<u32>() + std::mem::size_of::<f64>()))
+                    as u64,
+            });
+            selection = Some(sel);
+        }
+
+        Ok(RunOutput {
+            sequences,
+            db,
+            screen_stats,
+            duration_screen_stats,
+            matrix,
+            selection,
+            report: RunReport {
+                backend: kind,
+                forecast: fc,
+                stages,
+                peak_logical_bytes: tracker.peak(),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synthea::SyntheaConfig;
+
+    fn small_db() -> NumericDbMart {
+        NumericDbMart::encode(&SyntheaConfig::small().generate())
+    }
+
+    fn sorted(mut records: Vec<crate::mining::SeqRecord>) -> Vec<crate::mining::SeqRecord> {
+        records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        records
+    }
+
+    #[test]
+    fn builder_rejects_empty_and_ill_ordered_chains() {
+        let db = small_db();
+        assert!(matches!(
+            Engine::from_dbmart(db.clone()).plan().unwrap_err(),
+            TspmError::Plan(_)
+        ));
+        assert!(matches!(
+            Engine::from_dbmart(db.clone())
+                .screen(SparsityConfig::default())
+                .plan()
+                .unwrap_err(),
+            TspmError::Plan(_)
+        ));
+        let err = Engine::from_dbmart(db)
+            .mine(MiningConfig::default())
+            .matrix()
+            .screen(SparsityConfig::default())
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("out of order"), "got {err}");
+    }
+
+    #[test]
+    fn msmr_without_labels_is_rejected_before_any_work() {
+        let err = Engine::from_dbmart(small_db())
+            .mine(MiningConfig::default())
+            .matrix()
+            .msmr(10)
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("labels"), "got {err}");
+
+        let err = Engine::from_dbmart(small_db())
+            .mine(MiningConfig::default())
+            .matrix()
+            .msmr(10)
+            .labels(vec![0.0; 3]) // wrong length
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("labels length"), "got {err}");
+    }
+
+    /// The golden test: all three backends produce the identical screened
+    /// sequence set on the small Synthea cohort.
+    #[test]
+    fn golden_backends_agree_on_screened_sets() {
+        let db = small_db();
+        let sc = SparsityConfig { min_patients: 5, threads: 2 };
+        let work_dir = std::env::temp_dir().join("tspm_engine_golden");
+        let _ = std::fs::remove_dir_all(&work_dir);
+        let mine_cfg = MiningConfig { work_dir, ..Default::default() };
+
+        let mut outputs = Vec::new();
+        for choice in
+            [BackendChoice::InMemory, BackendChoice::FileBacked, BackendChoice::Streaming]
+        {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(mine_cfg.clone())
+                .screen(sc)
+                .backend(choice)
+                // Small budget → the streaming run really partitions.
+                .memory_budget(50_000 * 16)
+                .run()
+                .unwrap();
+            outputs.push(out);
+        }
+        let golden = sorted(outputs[0].sequences.records.clone());
+        let golden_stats = outputs[0].screen_stats.unwrap();
+        assert!(golden_stats.records_after > 0, "screen must keep something");
+        for out in &outputs[1..] {
+            assert_eq!(sorted(out.sequences.records.clone()), golden);
+            assert_eq!(out.screen_stats.unwrap(), golden_stats);
+        }
+        // And the façade matches the expert layer exactly.
+        let mut expert = crate::mining::mine_sequences(&db, &mine_cfg).unwrap().records;
+        sparsity::screen(&mut expert, &sc);
+        assert_eq!(sorted(expert), golden);
+    }
+
+    #[test]
+    fn auto_selection_follows_the_memory_budget() {
+        let db = small_db();
+        let fc = backend::forecast(&db, &MiningConfig::default());
+        assert!(fc.total_sequences > 0);
+        // Plenty of memory → in-memory.
+        let out = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .memory_budget(u64::MAX)
+            .run()
+            .unwrap();
+        assert_eq!(out.report.backend, BackendKind::InMemory);
+        // Budget below the forecast but above the largest patient →
+        // streaming.
+        let budget = (fc.max_patient_sequences + 1) * 16;
+        assert!(budget < fc.total_bytes);
+        let out = Engine::from_dbmart(db)
+            .mine(MiningConfig::default())
+            .memory_budget(budget)
+            .run()
+            .unwrap();
+        assert_eq!(out.report.backend, BackendKind::Streaming);
+    }
+
+    #[test]
+    fn full_chain_produces_matrix_selection_and_report() {
+        let g = SyntheaConfig::small().generate_with_truth();
+        let db = NumericDbMart::encode(&g.dbmart);
+        let pc: std::collections::BTreeSet<&str> =
+            g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
+        let labels: Vec<f32> = (0..db.num_patients())
+            .map(|p| f32::from(pc.contains(db.lookup.patient_name(p as u32))))
+            .collect();
+
+        let out = Engine::from_dbmart(db)
+            .mine(MiningConfig::default())
+            .screen(SparsityConfig { min_patients: 8, threads: 0 })
+            .matrix()
+            .msmr(25)
+            .labels(labels)
+            .run()
+            .unwrap();
+
+        let m = out.matrix.as_ref().expect("matrix stage ran");
+        assert_eq!(m.num_cols() as u64, out.screen_stats.unwrap().distinct_after);
+        let sel = out.selection.as_ref().expect("msmr stage ran");
+        assert!(!sel.columns.is_empty() && sel.columns.len() <= 25);
+
+        let names: Vec<&str> =
+            out.report.stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, ["mine", "screen", "matrix", "msmr"]);
+        assert!(out.report.peak_logical_bytes > 0);
+        let rendered = out.report.render();
+        assert!(rendered.contains("mine") && rendered.contains("backend"), "{rendered}");
+    }
+
+    #[test]
+    fn from_config_builds_the_canonical_chain() {
+        let cfg = RunConfig::default();
+        let engine = Engine::from_config(small_db(), &cfg).unwrap();
+        let plan = engine.plan().unwrap();
+        assert_eq!(plan.describe(), "mine → screen");
+        assert_eq!(plan.backend, BackendChoice::Auto);
+        let mc = plan.mining_config().unwrap();
+        assert_eq!(mc.duration_unit_days, cfg.duration_unit_days);
+    }
+
+    #[test]
+    fn run_output_returns_the_lookup_tables() {
+        let raw = SyntheaConfig::small().generate();
+        let out = Engine::from_raw(&raw)
+            .unwrap()
+            .mine(MiningConfig::default())
+            .run()
+            .unwrap();
+        assert_eq!(out.db.num_patients(), out.sequences.num_patients as usize);
+        let r = out.sequences.records[0];
+        let (s, _) = crate::dbmart::decode_seq(r.seq);
+        assert!(!out.db.lookup.phenx_name(s).is_empty());
+    }
+
+    #[test]
+    fn forecast_accessor_requires_a_valid_plan() {
+        assert!(Engine::from_dbmart(small_db()).forecast().is_err());
+        let f = Engine::from_dbmart(small_db())
+            .mine(MiningConfig::default())
+            .forecast()
+            .unwrap();
+        assert!(f.total_sequences > 0);
+    }
+}

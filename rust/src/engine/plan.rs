@@ -1,0 +1,293 @@
+//! Typed execution plans — the validated stage chain behind the fluent
+//! [`crate::engine::Engine`] builder.
+//!
+//! A [`Plan`] is a linear DAG of [`Stage`]s over the paper's workflow:
+//!
+//! ```text
+//! Mine ─▶ (Screen) ─▶ (DurationScreen) ─▶ (Matrix) ─▶ (Msmr)
+//! ```
+//!
+//! Validation happens **before** any work starts, so a mis-assembled
+//! pipeline fails in microseconds with a precise message instead of
+//! after minutes of mining: the chain must be non-empty, start with
+//! exactly one `Mine`, keep stages in dependency order, and contain at
+//! most one of each downstream stage.
+
+use super::backend::BackendChoice;
+use super::error::TspmError;
+use crate::mining::MiningConfig;
+use crate::msmr::MsmrConfig;
+use crate::sparsity::SparsityConfig;
+
+/// One pipeline stage, with its full configuration captured at build
+/// time (plans are self-contained and replayable).
+#[derive(Clone, Debug)]
+pub enum Stage {
+    /// Transitive sequencing (the paper's core step).
+    Mine(MiningConfig),
+    /// Distinct-patient sparsity screen ([`crate::sparsity::screen`]).
+    Screen(SparsityConfig),
+    /// Duration-bucket diversity screen
+    /// ([`crate::sparsity::screen_by_duration`]).
+    DurationScreen { bucket_days: u32, min_distinct_durations: u32 },
+    /// Patient×sequence matrix; `duration_bucket_days` switches to the
+    /// duration-aware column space
+    /// ([`crate::matrix::SeqMatrix::build_with_durations`]).
+    Matrix { duration_bucket_days: Option<u32> },
+    /// MSMR feature selection (needs `Matrix` and labels).
+    Msmr(MsmrConfig),
+}
+
+impl Stage {
+    /// Stable stage name (report keys, error messages).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Mine(_) => "mine",
+            Stage::Screen(_) => "screen",
+            Stage::DurationScreen { .. } => "duration_screen",
+            Stage::Matrix { .. } => "matrix",
+            Stage::Msmr(_) => "msmr",
+        }
+    }
+
+    /// Topological rank; a valid chain has strictly increasing ranks,
+    /// which enforces both ordering and at-most-once per stage kind.
+    fn rank(&self) -> u8 {
+        match self {
+            Stage::Mine(_) => 0,
+            Stage::Screen(_) => 1,
+            Stage::DurationScreen { .. } => 2,
+            Stage::Matrix { .. } => 3,
+            Stage::Msmr(_) => 4,
+        }
+    }
+}
+
+/// A validated, backend-agnostic execution plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Stage chain in execution order.
+    pub stages: Vec<Stage>,
+    /// Requested execution backend (resolved at run time when `Auto`).
+    pub backend: BackendChoice,
+    /// Memory budget steering auto-selection and streaming chunking.
+    pub memory_budget_bytes: Option<u64>,
+}
+
+impl Plan {
+    /// Structural validation: non-empty, `Mine` first, strictly
+    /// increasing stage ranks, per-stage config sanity, and `Msmr`'s
+    /// dependency on `Matrix`. Label presence is checked by
+    /// [`crate::engine::Engine::plan`], which knows the cohort.
+    pub fn validate(&self) -> Result<(), TspmError> {
+        let Some(first) = self.stages.first() else {
+            return Err(TspmError::Plan(
+                "plan is empty — start the chain with .mine(MiningConfig)".into(),
+            ));
+        };
+        if !matches!(first, Stage::Mine(_)) {
+            return Err(TspmError::Plan(format!(
+                "plan must start with the mine stage, found {:?} first",
+                first.name()
+            )));
+        }
+        let mut prev_rank = first.rank();
+        for stage in &self.stages[1..] {
+            let rank = stage.rank();
+            if rank == prev_rank {
+                return Err(TspmError::Plan(format!(
+                    "stage {:?} appears more than once",
+                    stage.name()
+                )));
+            }
+            if rank < prev_rank {
+                return Err(TspmError::Plan(format!(
+                    "stage {:?} is out of order — stages must follow \
+                     mine → screen → duration_screen → matrix → msmr",
+                    stage.name()
+                )));
+            }
+            prev_rank = rank;
+        }
+        if self.wants_msmr() && self.matrix_stage().is_none() {
+            return Err(TspmError::Plan(
+                "msmr needs the patient×sequence matrix — insert .matrix() before .msmr(k)"
+                    .into(),
+            ));
+        }
+        for stage in &self.stages {
+            match stage {
+                Stage::Mine(cfg) if cfg.duration_unit_days == 0 => {
+                    return Err(TspmError::Plan("mine: duration_unit_days must be ≥ 1".into()));
+                }
+                Stage::Screen(cfg) if cfg.min_patients == 0 => {
+                    return Err(TspmError::Plan(
+                        "screen: min_patients must be ≥ 1 (0 would be a no-op)".into(),
+                    ));
+                }
+                Stage::DurationScreen { bucket_days, .. } if *bucket_days == 0 => {
+                    return Err(TspmError::Plan(
+                        "duration_screen: bucket_days must be ≥ 1".into(),
+                    ));
+                }
+                Stage::Msmr(cfg) if cfg.top_k == 0 => {
+                    return Err(TspmError::Plan("msmr: top_k must be ≥ 1".into()));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// The mining configuration (present in every valid plan).
+    pub fn mining_config(&self) -> Option<&MiningConfig> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Mine(cfg) => Some(cfg),
+            _ => None,
+        })
+    }
+
+    /// The sparsity-screen configuration, if the stage is present.
+    pub fn screen_config(&self) -> Option<SparsityConfig> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Screen(cfg) => Some(*cfg),
+            _ => None,
+        })
+    }
+
+    /// `(bucket_days, min_distinct_durations)` of the duration screen.
+    pub fn duration_screen(&self) -> Option<(u32, u32)> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::DurationScreen { bucket_days, min_distinct_durations } => {
+                Some((*bucket_days, *min_distinct_durations))
+            }
+            _ => None,
+        })
+    }
+
+    /// `Some(duration_bucket_days)` when a matrix stage is present
+    /// (`Some(None)` = plain binary matrix).
+    pub fn matrix_stage(&self) -> Option<Option<u32>> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Matrix { duration_bucket_days } => Some(*duration_bucket_days),
+            _ => None,
+        })
+    }
+
+    /// The MSMR configuration, if the stage is present.
+    pub fn msmr_config(&self) -> Option<MsmrConfig> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Msmr(cfg) => Some(*cfg),
+            _ => None,
+        })
+    }
+
+    /// Does the plan end in feature selection?
+    pub fn wants_msmr(&self) -> bool {
+        self.msmr_config().is_some()
+    }
+
+    /// Human-readable chain, e.g. `mine → screen → matrix → msmr`.
+    pub fn describe(&self) -> String {
+        self.stages.iter().map(Stage::name).collect::<Vec<_>>().join(" → ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_of(stages: Vec<Stage>) -> Plan {
+        Plan { stages, backend: BackendChoice::Auto, memory_budget_bytes: None }
+    }
+
+    #[test]
+    fn empty_plan_rejected() {
+        let err = plan_of(vec![]).validate().unwrap_err();
+        assert!(err.to_string().contains("empty"), "got {err}");
+    }
+
+    #[test]
+    fn plan_must_start_with_mine() {
+        let err = plan_of(vec![Stage::Screen(SparsityConfig::default())])
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("mine"), "got {err}");
+    }
+
+    #[test]
+    fn out_of_order_stages_rejected() {
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Matrix { duration_bucket_days: None },
+            Stage::Screen(SparsityConfig::default()),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("out of order"), "got {err}");
+    }
+
+    #[test]
+    fn duplicate_stage_rejected() {
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("more than once"), "got {err}");
+    }
+
+    #[test]
+    fn msmr_requires_matrix() {
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Msmr(MsmrConfig::default()),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("matrix"), "got {err}");
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig { min_patients: 0, threads: 0 }),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("min_patients"), "got {err}");
+
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Matrix { duration_bucket_days: None },
+            Stage::Msmr(MsmrConfig { top_k: 0, ..Default::default() }),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("top_k"), "got {err}");
+    }
+
+    #[test]
+    fn full_chain_validates_and_describes() {
+        let p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            Stage::DurationScreen { bucket_days: 30, min_distinct_durations: 2 },
+            Stage::Matrix { duration_bucket_days: Some(30) },
+            Stage::Msmr(MsmrConfig::default()),
+        ]);
+        p.validate().unwrap();
+        assert_eq!(p.describe(), "mine → screen → duration_screen → matrix → msmr");
+        assert!(p.wants_msmr());
+        assert_eq!(p.matrix_stage(), Some(Some(30)));
+        assert_eq!(p.duration_screen(), Some((30, 2)));
+    }
+
+    #[test]
+    fn mine_only_is_a_valid_plan() {
+        plan_of(vec![Stage::Mine(MiningConfig::default())]).validate().unwrap();
+    }
+}

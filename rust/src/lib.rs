@@ -6,7 +6,43 @@
 //! patient, annotated with their duration in days — from time-stamped
 //! clinical data in the MLHO `dbmart` format.
 //!
-//! The crate is organised in three tiers:
+//! ## Quickstart — the engine façade
+//!
+//! The supported entry point is [`engine::Engine`]: a fluent builder that
+//! assembles a validated stage chain (mine → screen → matrix → msmr),
+//! dispatches mining to an interchangeable execution backend (in-memory,
+//! file-backed, or streaming — auto-selected from a memory forecast), and
+//! reports one unified error type ([`engine::TspmError`]) plus per-stage
+//! timings ([`engine::RunReport`]):
+//!
+//! ```no_run
+//! use tspm_plus::prelude::*;
+//!
+//! // Generate a small synthetic cohort and run the paper's pipeline.
+//! let cohort = SyntheaConfig::small().generate();
+//! let out = Engine::from_raw(&cohort)?
+//!     .mine(MiningConfig::default())
+//!     .screen(SparsityConfig { min_patients: 5, threads: 0 })
+//!     .matrix()
+//!     .run()?;
+//! println!(
+//!     "{} screened sequences, {}×{} matrix, via the {} backend",
+//!     out.sequences.len(),
+//!     out.matrix.as_ref().unwrap().num_patients,
+//!     out.matrix.as_ref().unwrap().num_cols(),
+//!     out.report.backend,
+//! );
+//! # Ok::<(), tspm_plus::engine::TspmError>(())
+//! ```
+//!
+//! See `examples/quickstart.rs` for the 60-second tour and
+//! `examples/e2e_pipeline.rs` for the full workflow including MSMR and
+//! classification.
+//!
+//! ## The expert layer
+//!
+//! Every stage remains callable directly for fine-grained control — the
+//! façade is composition sugar over these, not a replacement:
 //!
 //! 1. **Substrates** — from-scratch building blocks the engine depends on:
 //!    [`rng`] (deterministic PRNG), [`json`] (config/lookup-table
@@ -27,12 +63,12 @@
 //!    [`msmr`] (MSMR feature selection via joint mutual information),
 //!    [`ml`] (MLHO-style classification workflow), [`postcovid`] (the WHO
 //!    Post COVID-19 definition), all optionally accelerated through
-//!    [`runtime`] — AOT-compiled JAX/Pallas artifacts executed via PJRT.
+//!    [`runtime`] — AOT-compiled JAX/Pallas artifacts executed via PJRT
+//!    (behind the `pjrt` cargo feature; pure-Rust fallbacks otherwise).
 //!
-//! ## Quickstart
+//! For example, in-memory mining without the façade:
 //!
 //! ```no_run
-//! // Generate a small synthetic cohort and mine it.
 //! let dbmart = tspm_plus::synthea::SyntheaConfig::small().generate();
 //! let numeric = tspm_plus::dbmart::NumericDbMart::encode(&dbmart);
 //! let cfg = tspm_plus::mining::MiningConfig::default();
@@ -45,6 +81,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod config;
 pub mod dbmart;
+pub mod engine;
 pub mod json;
 pub mod matrix;
 pub mod metrics;
@@ -66,7 +103,11 @@ pub mod util;
 /// Commonly used types, re-exported for convenience.
 pub mod prelude {
     pub use crate::dbmart::{DbMart, DbMartEntry, NumericDbMart, NumericEntry};
+    pub use crate::engine::{
+        BackendChoice, BackendKind, Engine, Plan, RunOutput, RunReport, Stage, TspmError,
+    };
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
+    pub use crate::msmr::MsmrConfig;
     pub use crate::sparsity::SparsityConfig;
     pub use crate::synthea::SyntheaConfig;
 }

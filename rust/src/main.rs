@@ -19,8 +19,9 @@ use tspm_plus::bench_util::experiments;
 use tspm_plus::cli::{usage, Args, OptSpec};
 use tspm_plus::config::RunConfig;
 use tspm_plus::dbmart::{format_seq, DbMart, NumericDbMart};
-use tspm_plus::metrics::{fmt_bytes, MemTracker, PhaseTimer};
-use tspm_plus::mining::{self, MiningConfig, MiningMode};
+use tspm_plus::engine::{BackendChoice, Engine};
+use tspm_plus::metrics::PhaseTimer;
+use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{self, PostCovidConfig};
 use tspm_plus::runtime::ArtifactSet;
 use tspm_plus::sparsity::{self, SparsityConfig};
@@ -156,10 +157,12 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         OptSpec::required("input", "dbmart CSV path"),
         OptSpec::value("out", Some("sequences.tspm"), "output sequence file"),
         OptSpec::value("lookup-out", Some("lookup.json"), "lookup-table JSON output"),
-        OptSpec::value("mode", Some("memory"), "memory|file"),
+        OptSpec::value("backend", Some("auto"), "auto|memory|file|streaming"),
+        OptSpec::value("mode", None, "deprecated alias for --backend (memory|file)"),
         OptSpec::value("threads", Some("0"), "worker threads (0 = auto)"),
         OptSpec::value("duration-unit", Some("1"), "duration unit in days"),
         OptSpec::value("sparsity", Some("0"), "min patients per sequence (0 = no screen)"),
+        OptSpec::value("memory-budget-mb", Some("4096"), "budget steering the auto backend"),
         OptSpec::flag("first-occurrence", "keep only first occurrence of each phenX"),
         OptSpec::flag("explain", "print a Fig.2-style decomposition of sample sequences"),
     ];
@@ -169,49 +172,46 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
     }
     let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
     let mut timer = PhaseTimer::new();
-    let tracker = MemTracker::new();
 
     let db = timer.run("load+encode", || load_numeric(a.get("input").unwrap()))?;
-    let cfg = MiningConfig {
-        threads: a.req("threads").map_err(|e| e.to_string())?,
+    let threads: usize = a.req("threads").map_err(|e| e.to_string())?;
+    let mut backend: BackendChoice = a.get("backend").unwrap().parse()?;
+    // Legacy `--mode memory|file` keeps working as a backend alias
+    // (an explicit non-auto --backend wins).
+    if let Some(mode) = a.get("mode") {
+        eprintln!("warning: --mode is deprecated; use --backend {mode}");
+        if backend == BackendChoice::Auto {
+            backend = match mode {
+                "memory" => BackendChoice::InMemory,
+                "file" => BackendChoice::FileBacked,
+                other => return Err(format!("mode must be memory|file, got {other}")),
+            };
+        }
+    }
+    let budget_mb: u64 = a.req("memory-budget-mb").map_err(|e| e.to_string())?;
+    let mining_cfg = MiningConfig {
+        threads,
         first_occurrence_only: a.flag("first-occurrence"),
         duration_unit_days: a.req("duration-unit").map_err(|e| e.to_string())?,
-        mode: match a.get("mode").unwrap() {
-            "memory" => MiningMode::InMemory,
-            "file" => MiningMode::FileBased,
-            other => return Err(format!("mode must be memory|file, got {other}")),
-        },
         work_dir: std::env::temp_dir().join("tspm_mine"),
-        include_self_pairs: true,
+        ..Default::default()
     };
 
-    let mut records = match cfg.mode {
-        MiningMode::InMemory => {
-            timer
-                .run("sequence", || mining::mine_sequences_tracked(&db, &cfg, Some(&tracker)))
-                .map_err(|e| e.to_string())?
-                .records
-        }
-        MiningMode::FileBased => {
-            let files = timer
-                .run("sequence", || {
-                    mining::mine_sequences_to_files_tracked(&db, &cfg, Some(&tracker))
-                })
-                .map_err(|e| e.to_string())?;
-            let recs = timer.run("collect", || files.read_all()).map_err(|e| e.to_string())?;
-            let _ = files.remove();
-            recs
-        }
-    };
-
+    // Assemble the pipeline through the engine façade; the backend is
+    // picked explicitly or auto-selected from the memory forecast.
+    let mut engine = Engine::from_dbmart(db)
+        .backend(backend)
+        .memory_budget(budget_mb << 20)
+        .mine(mining_cfg);
     let min_patients: u32 = a.req("sparsity").map_err(|e| e.to_string())?;
     if min_patients > 0 {
-        let stats = timer.run("screen", || {
-            sparsity::screen(
-                &mut records,
-                &SparsityConfig { min_patients, threads: cfg.threads },
-            )
-        });
+        engine = engine.screen(SparsityConfig { min_patients, threads });
+    }
+    let result = timer.run("run", || engine.run()).map_err(|e| e.to_string())?;
+    let db = result.db;
+    let records = result.sequences.records;
+
+    if let Some(stats) = result.screen_stats {
         println!(
             "screen: {} → {} records ({} → {} distinct sequences)",
             stats.records_before, stats.records_after, stats.distinct_before, stats.distinct_after
@@ -252,7 +252,7 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         db.len(),
         out.display()
     );
-    println!("logical peak memory: {}", fmt_bytes(tracker.peak()));
+    print!("{}", result.report.render());
     print!("{}", timer.report());
     Ok(())
 }
@@ -315,9 +315,12 @@ fn cmd_postcovid(argv: &[String]) -> Result<(), String> {
     gen_cfg.patients = a.req("patients").map_err(|e| e.to_string())?;
     gen_cfg.seed = a.req("seed").map_err(|e| e.to_string())?;
     let g = gen_cfg.generate_with_truth();
-    let db = NumericDbMart::encode(&g.dbmart);
-    let mined =
-        mining::mine_sequences(&db, &MiningConfig::default()).map_err(|e| e.to_string())?;
+    let run = Engine::from_raw(&g.dbmart)
+        .map_err(|e| e.to_string())?
+        .mine(MiningConfig::default())
+        .run()
+        .map_err(|e| e.to_string())?;
+    let (db, mined) = (run.db, run.sequences);
 
     let covid = db
         .lookup
@@ -393,7 +396,8 @@ fn cmd_mlho(argv: &[String]) -> Result<(), String> {
         a.req("top-k").map_err(|e| e.to_string())?,
         a.req("epochs").map_err(|e| e.to_string())?,
         artifacts.as_ref(),
-    )?;
+    )
+    .map_err(|e| e.to_string())?;
     print!("{report}");
     Ok(())
 }
@@ -488,7 +492,8 @@ fn cmd_e2e(argv: &[String]) -> Result<(), String> {
             }
         }
     };
-    let report = ml::mlho_vignette(cfg.patients, 200, 150, artifacts.as_ref())?;
+    let report =
+        ml::mlho_vignette(cfg.patients, 200, 150, artifacts.as_ref()).map_err(|e| e.to_string())?;
     print!("{report}");
     Ok(())
 }

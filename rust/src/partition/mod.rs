@@ -13,7 +13,8 @@
 //! underestimates: a chunk's real output equals its prediction.
 
 use crate::dbmart::{NumericDbMart, NumericEntry};
-use crate::mining::{self, MiningConfig, MiningError, SequenceSet};
+use crate::engine::TspmError;
+use crate::mining::{self, MiningConfig, SequenceSet};
 use crate::sparsity::{self, SparsityConfig};
 
 /// A partition plan: per-chunk patient ranges over the *sorted* dbmart.
@@ -141,8 +142,8 @@ pub fn mine_partitioned(
     cfg: &MiningConfig,
     max_sequences_per_chunk: u64,
     screen: Option<&SparsityConfig>,
-) -> Result<SequenceSet, MiningErrorOrPartition> {
-    let plan = plan(db, cfg, max_sequences_per_chunk).map_err(MiningErrorOrPartition::Partition)?;
+) -> Result<SequenceSet, TspmError> {
+    let plan = plan(db, cfg, max_sequences_per_chunk)?;
     let mut merged = SequenceSet {
         records: Vec::new(),
         num_patients: db.num_patients() as u32,
@@ -153,7 +154,7 @@ pub fn mine_partitioned(
             entries: plan.chunk_entries(i).to_vec(),
             lookup: Default::default(),
         };
-        let mut set = mining::mine_sequences(&sub, cfg).map_err(MiningErrorOrPartition::Mining)?;
+        let mut set = mining::mine_sequences(&sub, cfg)?;
         debug_assert!(set.len() as u64 <= max_sequences_per_chunk);
         if let Some(sc) = screen {
             sparsity::screen(&mut set.records, sc);
@@ -163,23 +164,11 @@ pub fn mine_partitioned(
     Ok(merged)
 }
 
-/// Combined error for the partitioned driver.
-#[derive(Debug)]
-pub enum MiningErrorOrPartition {
-    Mining(MiningError),
-    Partition(PartitionError),
-}
-
-impl std::fmt::Display for MiningErrorOrPartition {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            MiningErrorOrPartition::Mining(e) => write!(f, "{e}"),
-            MiningErrorOrPartition::Partition(e) => write!(f, "{e}"),
-        }
-    }
-}
-
-impl std::error::Error for MiningErrorOrPartition {}
+/// Deprecated alias kept for one release: the mining-or-partitioning
+/// combinator has been absorbed into the unified
+/// [`crate::engine::TspmError`] (`Mining` and `Partition` variants).
+#[deprecated(since = "0.2.0", note = "use `crate::engine::TspmError` instead")]
+pub type MiningErrorOrPartition = TspmError;
 
 #[cfg(test)]
 mod tests {

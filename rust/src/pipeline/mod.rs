@@ -23,6 +23,7 @@
 //!   the perf pass.
 
 use crate::dbmart::NumericDbMart;
+use crate::engine::TspmError;
 use crate::mining::{self, MiningConfig, SeqRecord, SequenceSet};
 use crate::partition;
 use crate::sparsity::{self, SparsityConfig};
@@ -113,13 +114,13 @@ fn send_with_backpressure<T>(
 }
 
 /// Run the streaming pipeline over a dbmart.
-pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, String> {
+pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, TspmError> {
     let shards = if cfg.shards > 0 {
         cfg.shards
     } else {
         crate::par::num_threads(None)
     };
-    let plan = partition::plan(db, &cfg.mining, cfg.chunk_cap).map_err(|e| e.to_string())?;
+    let plan = partition::plan(db, &cfg.mining, cfg.chunk_cap)?;
     let metrics = StageMetrics::default();
     *metrics.per_shard.lock().unwrap() = vec![0usize; shards];
 
@@ -192,7 +193,7 @@ pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, S
     });
 
     if let Some(f) = failed {
-        return Err(f);
+        return Err(TspmError::Pipeline(f));
     }
 
     let screen_stats = cfg.screen.as_ref().map(|sc| sparsity::screen(&mut merged, sc));

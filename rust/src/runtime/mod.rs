@@ -3,7 +3,8 @@
 //!
 //! `make artifacts` (build-time Python, never on the request path) lowers
 //! every L2 function to HLO text under `artifacts/`, described by
-//! `manifest.json`. This module wraps the published `xla` crate:
+//! `manifest.json`. With the **`pjrt` cargo feature** enabled this module
+//! wraps the published `xla` crate:
 //!
 //! ```text
 //! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile
@@ -15,12 +16,18 @@
 //! row-major, shapes fixed at lowering time (`tile_rows` × `tile_features`
 //! in the manifest) — [`crate::matrix::SeqMatrix::dense_tile`] produces
 //! exactly these tiles.
+//!
+//! **Without the feature** (the default — the `xla` crate is not vendored
+//! here) every entry point compiles to a stub that returns a descriptive
+//! [`RuntimeError`]; callers fall back to the pure-Rust analytics paths,
+//! which compute the same numbers and are parity-tested against the
+//! artifacts in `rust/tests/e2e_artifacts.rs` (itself gated on `pjrt`).
 
 use crate::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-/// Runtime errors (manifest, XLA, shape mismatches).
+/// Runtime errors (manifest, XLA, shape mismatches, feature gating).
 #[derive(Debug)]
 pub struct RuntimeError(pub String);
 
@@ -32,6 +39,7 @@ impl std::fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError(format!("xla: {e}"))
@@ -60,11 +68,13 @@ impl Tensor {
         Tensor { shape: vec![1, 1], data: vec![v] }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal, RuntimeError> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Tensor, RuntimeError> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -78,6 +88,7 @@ pub struct Artifact {
     pub name: String,
     pub input_shapes: Vec<Vec<usize>>,
     pub num_outputs: usize,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -100,6 +111,11 @@ impl Artifact {
                 )));
             }
         }
+        self.execute(inputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| t.to_literal()).collect::<Result<_, _>>()?;
         let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
@@ -115,6 +131,15 @@ impl Artifact {
         }
         elements.iter().map(Tensor::from_literal).collect()
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn execute(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        Err(RuntimeError(format!(
+            "{}: binary compiled without the `pjrt` feature; rebuild with \
+             `--features pjrt` and a vendored `xla` dependency",
+            self.name
+        )))
+    }
 }
 
 /// The full artifact registry of one `artifacts/` directory.
@@ -124,72 +149,124 @@ pub struct ArtifactSet {
     artifacts: BTreeMap<String, Artifact>,
 }
 
+/// One parsed manifest entry (file name, shapes, arity).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+struct ManifestEntry {
+    name: String,
+    file: String,
+    input_shapes: Vec<Vec<usize>>,
+    num_outputs: usize,
+}
+
+/// Parsed `manifest.json`: tile geometry plus per-artifact entries.
+/// Shared by the real PJRT loader and the stub (which uses it only to
+/// produce precise error messages).
+fn parse_manifest(dir: &Path) -> Result<(usize, usize, Vec<ManifestEntry>), RuntimeError> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        RuntimeError(format!(
+            "cannot read {} — run `make artifacts` first: {e}",
+            manifest_path.display()
+        ))
+    })?;
+    let manifest = Json::parse(&text).map_err(|e| RuntimeError(format!("manifest: {e}")))?;
+    let tile_rows = manifest
+        .get("tile_rows")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| RuntimeError("manifest missing tile_rows".into()))? as usize;
+    let tile_features = manifest
+        .get("tile_features")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| RuntimeError("manifest missing tile_features".into()))?
+        as usize;
+    let entries = manifest
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| RuntimeError("manifest missing artifacts".into()))?;
+
+    let mut parsed = Vec::new();
+    for (name, entry) in entries {
+        let file = entry
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| RuntimeError(format!("{name}: missing file")))?;
+        let input_shapes: Vec<Vec<usize>> = entry
+            .get("input_shapes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError(format!("{name}: missing input_shapes")))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|dims| {
+                        dims.iter().filter_map(Json::as_u64).map(|d| d as usize).collect()
+                    })
+                    .ok_or_else(|| RuntimeError(format!("{name}: bad shape")))
+            })
+            .collect::<Result<_, _>>()?;
+        let num_outputs = entry
+            .get("num_outputs")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| RuntimeError(format!("{name}: missing num_outputs")))?
+            as usize;
+        parsed.push(ManifestEntry {
+            name: name.clone(),
+            file: file.to_string(),
+            input_shapes,
+            num_outputs,
+        });
+    }
+    Ok((tile_rows, tile_features, parsed))
+}
+
 impl ArtifactSet {
     /// Create the PJRT CPU client and compile every artifact in the
     /// manifest. Compilation happens once per process.
+    ///
+    /// Without the `pjrt` feature this returns an error immediately (the
+    /// manifest is still parsed so configuration problems surface first).
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<ArtifactSet, RuntimeError> {
         let client = xla::PjRtClient::cpu()?;
         Self::load_with_client(dir, &client)
     }
 
-    /// [`ArtifactSet::load`] with a caller-owned client.
-    pub fn load_with_client(dir: &Path, client: &xla::PjRtClient) -> Result<ArtifactSet, RuntimeError> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            RuntimeError(format!(
-                "cannot read {} — run `make artifacts` first: {e}",
-                manifest_path.display()
-            ))
-        })?;
-        let manifest =
-            Json::parse(&text).map_err(|e| RuntimeError(format!("manifest: {e}")))?;
-        let tile_rows = manifest
-            .get("tile_rows")
-            .and_then(Json::as_u64)
-            .ok_or_else(|| RuntimeError("manifest missing tile_rows".into()))? as usize;
-        let tile_features = manifest
-            .get("tile_features")
-            .and_then(Json::as_u64)
-            .ok_or_else(|| RuntimeError("manifest missing tile_features".into()))?
-            as usize;
-        let entries = manifest
-            .get("artifacts")
-            .and_then(Json::as_obj)
-            .ok_or_else(|| RuntimeError("manifest missing artifacts".into()))?;
+    /// Stub loader: the manifest is validated, then the missing PJRT
+    /// backend is reported. Keeps `ArtifactSet::load` callable from every
+    /// configuration so callers can fall back to pure Rust uniformly.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: &Path) -> Result<ArtifactSet, RuntimeError> {
+        let _ = parse_manifest(dir)?;
+        Err(RuntimeError(
+            "PJRT support not compiled in — rebuild with `--features pjrt` \
+             (requires a vendored `xla` dependency); continuing callers \
+             should fall back to the pure-Rust analytics paths"
+                .into(),
+        ))
+    }
 
+    /// [`ArtifactSet::load`] with a caller-owned client.
+    #[cfg(feature = "pjrt")]
+    pub fn load_with_client(
+        dir: &Path,
+        client: &xla::PjRtClient,
+    ) -> Result<ArtifactSet, RuntimeError> {
+        let (tile_rows, tile_features, entries) = parse_manifest(dir)?;
         let mut artifacts = BTreeMap::new();
-        for (name, entry) in entries {
-            let file = entry
-                .get("file")
-                .and_then(Json::as_str)
-                .ok_or_else(|| RuntimeError(format!("{name}: missing file")))?;
-            let input_shapes: Vec<Vec<usize>> = entry
-                .get("input_shapes")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| RuntimeError(format!("{name}: missing input_shapes")))?
-                .iter()
-                .map(|s| {
-                    s.as_arr()
-                        .map(|dims| {
-                            dims.iter().filter_map(Json::as_u64).map(|d| d as usize).collect()
-                        })
-                        .ok_or_else(|| RuntimeError(format!("{name}: bad shape")))
-                })
-                .collect::<Result<_, _>>()?;
-            let num_outputs = entry
-                .get("num_outputs")
-                .and_then(Json::as_u64)
-                .ok_or_else(|| RuntimeError(format!("{name}: missing num_outputs")))?
-                as usize;
-            let path = dir.join(file);
+        for entry in entries {
+            let path = dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().ok_or_else(|| RuntimeError("non-utf8 path".into()))?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
             artifacts.insert(
-                name.clone(),
-                Artifact { name: name.clone(), input_shapes, num_outputs, exe },
+                entry.name.clone(),
+                Artifact {
+                    name: entry.name,
+                    input_shapes: entry.input_shapes,
+                    num_outputs: entry.num_outputs,
+                    exe,
+                },
             );
         }
         Ok(ArtifactSet { tile_rows, tile_features, artifacts })
@@ -217,16 +294,6 @@ pub fn default_artifacts_dir() -> PathBuf {
 mod tests {
     use super::*;
 
-    fn artifacts_available() -> Option<ArtifactSet> {
-        let dir = default_artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(ArtifactSet::load(&dir).expect("artifact load"))
-        } else {
-            eprintln!("skipping runtime tests: run `make artifacts` first");
-            None
-        }
-    }
-
     #[test]
     fn tensor_shape_checks() {
         let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
@@ -242,72 +309,110 @@ mod tests {
     }
 
     #[test]
-    fn loads_manifest_and_runs_cooc() {
-        let Some(set) = artifacts_available() else { return };
-        assert!(set.names().contains(&"cooc"));
-        let (p, f) = (set.tile_rows, set.tile_features);
-        // X with a single 1 at (0, 0) and (0, 1) → cooc[0,1] = 1.
-        let mut x = Tensor::zeros(vec![p, f]);
-        x.data[0] = 1.0;
-        x.data[1] = 1.0;
-        let out = set.get("cooc").unwrap().run(&[x.clone(), x]).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].shape, vec![f, f]);
-        assert_eq!(out[0].data[0], 1.0); // (0,0)
-        assert_eq!(out[0].data[1], 1.0); // (0,1)
-        assert_eq!(out[0].data[f + 1], 1.0); // (1,1)
-        assert_eq!(out[0].data[2], 0.0);
+    fn missing_manifest_is_a_clear_error() {
+        let dir = std::env::temp_dir().join("tspm_no_artifacts_here");
+        let err = ArtifactSet::load(&dir).unwrap_err();
+        assert!(err.0.contains("manifest") || err.0.contains("pjrt") || err.0.contains("PJRT"));
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn cooc_matches_rust_reference_on_random_tile() {
-        let Some(set) = artifacts_available() else { return };
-        let (p, f) = (set.tile_rows, set.tile_features);
-        let mut rng = crate::rng::Rng::new(33);
-        let x = Tensor::new(
-            vec![p, f],
-            (0..p * f).map(|_| f32::from(rng.gen_bool(0.2))).collect(),
-        );
-        let out = &set.get("cooc").unwrap().run(&[x.clone(), x.clone()]).unwrap()[0];
-        // spot-check 20 random cells against a direct dot product
-        for _ in 0..20 {
-            let a = rng.gen_range(f as u64) as usize;
-            let b = rng.gen_range(f as u64) as usize;
-            let want: f32 = (0..p).map(|r| x.data[r * f + a] * x.data[r * f + b]).sum();
-            assert_eq!(out.data[a * f + b], want, "cell ({a},{b})");
+    fn stub_load_reports_missing_feature() {
+        // With a syntactically valid manifest present the stub must fail
+        // on the missing backend, not on the manifest.
+        let dir = std::env::temp_dir().join("tspm_stub_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"tile_rows": 8, "tile_features": 8, "artifacts": {}}"#,
+        )
+        .unwrap();
+        let err = ArtifactSet::load(&dir).unwrap_err();
+        assert!(err.0.contains("pjrt"), "got: {err}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    mod with_artifacts {
+        use super::super::*;
+
+        fn artifacts_available() -> Option<ArtifactSet> {
+            let dir = default_artifacts_dir();
+            if dir.join("manifest.json").exists() {
+                Some(ArtifactSet::load(&dir).expect("artifact load"))
+            } else {
+                eprintln!("skipping runtime tests: run `make artifacts` first");
+                None
+            }
         }
-    }
 
-    #[test]
-    fn logreg_grad_runs_and_shapes_match() {
-        let Some(set) = artifacts_available() else { return };
-        let (p, f) = (set.tile_rows, set.tile_features);
-        let w = Tensor::zeros(vec![f, 1]);
-        let b = Tensor::zeros(vec![1, 1]);
-        let x = Tensor::zeros(vec![p, f]);
-        let y = Tensor::zeros(vec![p, 1]);
-        let mask = Tensor::new(vec![p, 1], vec![1.0; p]);
-        let out = set.get("logreg_grad").unwrap().run(&[w, b, x, y, mask]).unwrap();
-        assert_eq!(out.len(), 3);
-        assert_eq!(out[0].shape, vec![f, 1]);
-        assert_eq!(out[1].shape, vec![1, 1]);
-        assert_eq!(out[2].shape, vec![1, 1]);
-        // all-zero inputs: p = 0.5, loss = P·ln2
-        let want_loss = p as f32 * std::f32::consts::LN_2;
-        assert!((out[2].data[0] - want_loss).abs() < 1e-2);
-    }
+        #[test]
+        fn loads_manifest_and_runs_cooc() {
+            let Some(set) = artifacts_available() else { return };
+            assert!(set.names().contains(&"cooc"));
+            let (p, f) = (set.tile_rows, set.tile_features);
+            // X with a single 1 at (0, 0) and (0, 1) → cooc[0,1] = 1.
+            let mut x = Tensor::zeros(vec![p, f]);
+            x.data[0] = 1.0;
+            x.data[1] = 1.0;
+            let out = set.get("cooc").unwrap().run(&[x.clone(), x]).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].shape, vec![f, f]);
+            assert_eq!(out[0].data[0], 1.0); // (0,0)
+            assert_eq!(out[0].data[1], 1.0); // (0,1)
+            assert_eq!(out[0].data[f + 1], 1.0); // (1,1)
+            assert_eq!(out[0].data[2], 0.0);
+        }
 
-    #[test]
-    fn shape_mismatch_is_rejected() {
-        let Some(set) = artifacts_available() else { return };
-        let bad = Tensor::zeros(vec![3, 3]);
-        let err = set.get("cooc").unwrap().run(&[bad.clone(), bad]).unwrap_err();
-        assert!(err.0.contains("shape"));
-    }
+        #[test]
+        fn cooc_matches_rust_reference_on_random_tile() {
+            let Some(set) = artifacts_available() else { return };
+            let (p, f) = (set.tile_rows, set.tile_features);
+            let mut rng = crate::rng::Rng::new(33);
+            let x = Tensor::new(
+                vec![p, f],
+                (0..p * f).map(|_| f32::from(rng.gen_bool(0.2))).collect(),
+            );
+            let out = &set.get("cooc").unwrap().run(&[x.clone(), x.clone()]).unwrap()[0];
+            // spot-check 20 random cells against a direct dot product
+            for _ in 0..20 {
+                let a = rng.gen_range(f as u64) as usize;
+                let b = rng.gen_range(f as u64) as usize;
+                let want: f32 = (0..p).map(|r| x.data[r * f + a] * x.data[r * f + b]).sum();
+                assert_eq!(out.data[a * f + b], want, "cell ({a},{b})");
+            }
+        }
 
-    #[test]
-    fn unknown_artifact_is_an_error() {
-        let Some(set) = artifacts_available() else { return };
-        assert!(set.get("nonexistent").is_err());
+        #[test]
+        fn logreg_grad_runs_and_shapes_match() {
+            let Some(set) = artifacts_available() else { return };
+            let (p, f) = (set.tile_rows, set.tile_features);
+            let w = Tensor::zeros(vec![f, 1]);
+            let b = Tensor::zeros(vec![1, 1]);
+            let x = Tensor::zeros(vec![p, f]);
+            let y = Tensor::zeros(vec![p, 1]);
+            let mask = Tensor::new(vec![p, 1], vec![1.0; p]);
+            let out = set.get("logreg_grad").unwrap().run(&[w, b, x, y, mask]).unwrap();
+            assert_eq!(out.len(), 3);
+            assert_eq!(out[0].shape, vec![f, 1]);
+            assert_eq!(out[1].shape, vec![1, 1]);
+            assert_eq!(out[2].shape, vec![1, 1]);
+            // all-zero inputs: p = 0.5, loss = P·ln2
+            let want_loss = p as f32 * std::f32::consts::LN_2;
+            assert!((out[2].data[0] - want_loss).abs() < 1e-2);
+        }
+
+        #[test]
+        fn shape_mismatch_is_rejected() {
+            let Some(set) = artifacts_available() else { return };
+            let bad = Tensor::zeros(vec![3, 3]);
+            let err = set.get("cooc").unwrap().run(&[bad.clone(), bad]).unwrap_err();
+            assert!(err.0.contains("shape"));
+        }
+
+        #[test]
+        fn unknown_artifact_is_an_error() {
+            let Some(set) = artifacts_available() else { return };
+            assert!(set.get("nonexistent").is_err());
+        }
     }
 }

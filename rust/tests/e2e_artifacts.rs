@@ -1,6 +1,12 @@
 //! Integration over the PJRT runtime: the AOT artifacts loaded from
 //! `artifacts/` must agree with the pure-Rust analytic oracles on real
 //! mined data. Skipped (with a note) when `make artifacts` has not run.
+//!
+//! The whole suite is quarantined behind the `pjrt` cargo feature — it
+//! needs the external `xla` crate and AOT-compiled HLO artifacts, neither
+//! of which exist in a plain checkout (the default build compiles the
+//! runtime stubs instead).
+#![cfg(feature = "pjrt")]
 
 use tspm_plus::dbmart::NumericDbMart;
 use tspm_plus::matrix::SeqMatrix;

@@ -303,3 +303,41 @@ fn matrix_projection_consistency() {
         }
     }
 }
+
+/// The engine façade composes with the stored-file workflow: a
+/// config-driven run writes the same screened set the expert layer
+/// produces, and the deprecated error alias still names the unified type.
+#[test]
+fn engine_from_config_matches_expert_layer() {
+    use tspm_plus::config::RunConfig;
+    use tspm_plus::engine::Engine;
+
+    let cohort = SyntheaConfig::small().generate();
+    let db = NumericDbMart::encode(&cohort);
+
+    let mut cfg = RunConfig::default();
+    cfg.sparsity_min_patients = 6;
+    cfg.threads = 2;
+    let out = Engine::from_config(db.clone(), &cfg).unwrap().run().unwrap();
+
+    let mut expert = mining::mine_sequences(&db, &cfg.mining_config()).unwrap().records;
+    sparsity::screen(&mut expert, &cfg.sparsity_config().unwrap());
+
+    let key = |r: &mining::SeqRecord| (r.seq, r.pid, r.duration);
+    let mut got = out.sequences.records;
+    got.sort_unstable_by_key(key);
+    expert.sort_unstable_by_key(key);
+    assert_eq!(got, expert);
+
+    // The report names the canonical stages.
+    let names: Vec<&str> = out.report.stages.iter().map(|s| s.stage.as_str()).collect();
+    assert_eq!(names, ["mine", "screen"]);
+
+    // Deprecated alias resolves to the unified error type for one release.
+    #[allow(deprecated)]
+    fn takes_legacy(e: tspm_plus::partition::MiningErrorOrPartition) -> tspm_plus::engine::TspmError {
+        e
+    }
+    let legacy = takes_legacy(tspm_plus::engine::TspmError::Plan("x".into()));
+    assert!(matches!(legacy, tspm_plus::engine::TspmError::Plan(_)));
+}

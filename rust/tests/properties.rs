@@ -232,3 +232,81 @@ fn pipeline_backpressure_never_deadlocks_or_drops() {
         );
     }
 }
+
+/// seqstore round-trip — write N random `SeqRecord`s, read them back,
+/// assert bit-identical (order and every field preserved), across sizes
+/// from empty to well past the writer's buffer, via both the bulk and
+/// the streaming reader. Guards the engine's file-backed backend.
+#[test]
+fn seqstore_roundtrip_is_bit_identical() {
+    use tspm_plus::seqstore;
+    let dir = std::env::temp_dir().join("tspm_prop_seqstore");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut meta = Rng::new(20231107);
+    for case in 0..12 {
+        let n = match case {
+            0 => 0usize,
+            1 => 1,
+            // past WRITER_BUFFER_BYTES (1 MiB = 65_536 records)
+            2 => 70_000,
+            _ => 1 + meta.gen_range(20_000) as usize,
+        };
+        let mut r = Rng::new(case as u64);
+        let records: Vec<SeqRecord> = (0..n)
+            .map(|_| SeqRecord {
+                // full u64 range, incl. values with high bytes set
+                seq: r.next_u64(),
+                pid: r.next_u32(),
+                duration: r.next_u32(),
+            })
+            .collect();
+        let path = dir.join(format!("case_{case}.tspm"));
+        seqstore::write_file(&path, &records).unwrap();
+
+        let bulk = seqstore::read_file(&path).unwrap();
+        assert_eq!(bulk, records, "case={case} bulk read diverged");
+
+        let reader = seqstore::SeqReader::open(&path).unwrap();
+        assert_eq!(reader.remaining(), n as u64, "case={case} header count");
+        let streamed: Vec<SeqRecord> = reader.map(|x| x.unwrap()).collect();
+        assert_eq!(streamed, records, "case={case} streaming read diverged");
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// The engine façade is a pure re-orchestration: on every random cohort
+/// and every backend it yields exactly the expert-layer mine+screen
+/// result.
+#[test]
+fn engine_backends_match_expert_layer_on_random_cohorts() {
+    use tspm_plus::engine::{BackendChoice, Engine};
+    let mut meta = Rng::new(99);
+    for case in 0..6 {
+        let mart = random_dbmart(&mut Rng::new(1000 + case));
+        let db = NumericDbMart::encode(&mart);
+        let sc = SparsityConfig { min_patients: 1 + meta.gen_range(4) as u32, threads: 2 };
+        let work_dir = std::env::temp_dir().join(format!("tspm_prop_engine_{case}"));
+        let cfg = MiningConfig { work_dir, ..Default::default() };
+
+        let mut expert = mining::mine_sequences(&db, &cfg).unwrap().records;
+        sparsity::screen(&mut expert, &sc);
+        let expert = sorted(expert);
+
+        for backend in
+            [BackendChoice::Auto, BackendChoice::FileBacked, BackendChoice::Streaming]
+        {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(cfg.clone())
+                .screen(sc)
+                .backend(backend)
+                .memory_budget(1 << 20)
+                .run()
+                .unwrap();
+            assert_eq!(
+                sorted(out.sequences.records),
+                expert,
+                "case={case} backend={backend:?}"
+            );
+        }
+    }
+}
