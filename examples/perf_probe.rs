@@ -1,7 +1,10 @@
-// perf probe: per-phase timing of the screen + sort comparisons
+// perf probe: per-phase timing of the screen + sort comparisons, plus the
+// sharded-vs-streaming backend race (first point of the bench trajectory)
 use std::time::Instant;
 use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::json::Json;
 use tspm_plus::mining::{self, MiningConfig};
+use tspm_plus::pipeline::{self, PipelineConfig};
 use tspm_plus::sparsity::{self, SparsityConfig};
 use tspm_plus::synthea::SyntheaConfig;
 
@@ -40,4 +43,43 @@ fn main() {
         let s = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
         println!("mine: {:.2} M/s", s.len() as f64 / t.elapsed().as_secs_f64()/1e6);
     }
+
+    // sharded vs streaming: same synthetic mart, best-of-3 wall time each.
+    // Written to BENCH_sharded_vs_streaming.json so the bench trajectory
+    // has a machine-readable first data point.
+    let mut sharded_best = f64::MAX;
+    for _ in 0..3 {
+        let t = Instant::now();
+        let s = mining::mine_sequences_sharded(&db, &MiningConfig::default()).unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        println!("sharded backend: {:?} ({} records)", t.elapsed(), s.len());
+        sharded_best = sharded_best.min(secs);
+    }
+    let mut streaming_best = f64::MAX;
+    for _ in 0..3 {
+        let t = Instant::now();
+        let s = pipeline::run(&db, &PipelineConfig { chunk_cap: 4_000_000, ..Default::default() })
+            .unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        println!("streaming backend: {:?} ({} records)", t.elapsed(), s.sequences.len());
+        streaming_best = streaming_best.min(secs);
+    }
+    println!(
+        "sharded vs streaming: {:.3}s vs {:.3}s ({:.2}x)",
+        sharded_best,
+        streaming_best,
+        streaming_best / sharded_best
+    );
+    let bench = Json::obj(vec![
+        ("bench", Json::from("sharded_vs_streaming".to_string())),
+        ("patients", Json::from(db.num_patients() as u64)),
+        ("entries", Json::from(db.len() as u64)),
+        ("sequences", Json::from(set.len() as u64)),
+        ("sharded_best_secs", Json::from(sharded_best)),
+        ("streaming_best_secs", Json::from(streaming_best)),
+        ("speedup_sharded_over_streaming", Json::from(streaming_best / sharded_best)),
+    ]);
+    std::fs::write("BENCH_sharded_vs_streaming.json", bench.to_string_pretty())
+        .expect("write BENCH_sharded_vs_streaming.json");
+    println!("wrote BENCH_sharded_vs_streaming.json");
 }

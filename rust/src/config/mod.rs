@@ -46,11 +46,16 @@ pub struct RunConfig {
     pub first_occurrence_only: bool,
     /// `memory` or `file` operating mode.
     pub mode: String,
-    /// Engine execution backend: `auto`, `memory`, `file` or `streaming`
-    /// (see [`crate::engine::BackendChoice`]). `auto` defers to the
-    /// engine's memory forecast, except that `mode = "file"` pins the
-    /// file-backed backend for backwards compatibility.
+    /// Engine execution backend: `auto`, `memory`, `sharded`, `file` or
+    /// `streaming` (see [`crate::engine::BackendChoice`]). `auto` defers
+    /// to the engine's memory forecast and worker count, except that
+    /// `mode = "file"` pins the file-backed backend for backwards
+    /// compatibility.
     pub backend: String,
+    /// Shard count for the sharded backend (0 = auto:
+    /// [`crate::mining::DEFAULT_SHARDS`], a layout independent of the
+    /// worker count).
+    pub shards: usize,
     /// Duration unit divisor in days (1 = days, 7 = weeks, 30 = months).
     pub duration_unit_days: u32,
     // --- sparsity ---
@@ -79,6 +84,7 @@ impl Default for RunConfig {
             first_occurrence_only: false,
             mode: "memory".to_string(),
             backend: "auto".to_string(),
+            shards: 0,
             duration_unit_days: 1,
             sparsity_screen: true,
             sparsity_min_patients: 50,
@@ -101,6 +107,7 @@ impl RunConfig {
             ("first_occurrence_only", Json::from(self.first_occurrence_only)),
             ("mode", Json::from(self.mode.clone())),
             ("backend", Json::from(self.backend.clone())),
+            ("shards", Json::from(self.shards)),
             ("duration_unit_days", Json::from(self.duration_unit_days as u64)),
             ("sparsity_screen", Json::from(self.sparsity_screen)),
             ("sparsity_min_patients", Json::from(self.sparsity_min_patients as u64)),
@@ -116,9 +123,9 @@ impl RunConfig {
         let obj = j.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
         let known = [
             "patients", "avg_entries", "vocab_size", "seed", "threads",
-            "first_occurrence_only", "mode", "backend", "duration_unit_days",
-            "sparsity_screen", "sparsity_min_patients", "max_elements_per_chunk",
-            "artifacts_dir", "work_dir",
+            "first_occurrence_only", "mode", "backend", "shards",
+            "duration_unit_days", "sparsity_screen", "sparsity_min_patients",
+            "max_elements_per_chunk", "artifacts_dir", "work_dir",
         ];
         for k in obj.keys() {
             if !known.contains(&k.as_str()) {
@@ -140,6 +147,7 @@ impl RunConfig {
         get_u64!(vocab_size, "vocab_size");
         get_u64!(seed, "seed");
         get_u64!(threads, "threads");
+        get_u64!(shards, "shards");
         get_u64!(duration_unit_days, "duration_unit_days");
         get_u64!(sparsity_min_patients, "sparsity_min_patients");
         get_u64!(max_elements_per_chunk, "max_elements_per_chunk");
@@ -215,6 +223,13 @@ impl RunConfig {
         if self.max_elements_per_chunk == 0 {
             return Err(ConfigError("max_elements_per_chunk must be > 0".into()));
         }
+        if self.shards > crate::mining::MAX_SHARDS {
+            return Err(ConfigError(format!(
+                "shards must be ≤ {} (0 = auto), got {}",
+                crate::mining::MAX_SHARDS,
+                self.shards
+            )));
+        }
         Ok(())
     }
 
@@ -229,6 +244,7 @@ impl RunConfig {
             mode: if self.mode == "file" { MiningMode::FileBased } else { MiningMode::InMemory },
             work_dir: PathBuf::from(&self.work_dir),
             include_self_pairs: true,
+            shards: self.shards,
         }
     }
 
@@ -302,6 +318,8 @@ mod tests {
         assert_eq!(c.backend_choice(), BackendChoice::Streaming);
         c.backend = "memory".into();
         assert_eq!(c.backend_choice(), BackendChoice::InMemory);
+        c.backend = "sharded".into();
+        assert_eq!(c.backend_choice(), BackendChoice::Sharded);
         // Legacy file mode pins the file-backed backend under auto.
         c.backend = "auto".into();
         c.mode = "file".into();
@@ -315,6 +333,20 @@ mod tests {
         let j = Json::parse(r#"{"sparsity_screen": true, "sparsity_min_patients": 0}"#).unwrap();
         let c = RunConfig::from_json(&j).unwrap();
         assert!(c.sparsity_config().is_none());
+    }
+
+    #[test]
+    fn shards_roundtrip_and_validation() {
+        let mut c = RunConfig::default();
+        c.backend = "sharded".into();
+        c.shards = 12;
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.mining_config().shards, 12);
+
+        let j = Json::parse(r#"{"shards": 99999999}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.0.contains("shards"), "got {}", err.0);
     }
 
     #[test]

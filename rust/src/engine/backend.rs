@@ -1,12 +1,22 @@
 //! Pluggable execution backends for the mine stage.
 //!
-//! All three backends produce the *same* sequence multiset (golden-tested
-//! in the engine tests and `rust/tests/integration.rs`); they differ only
-//! in how the output is materialised:
+//! All four backends produce the *same* sequence multiset
+//! (conformance-tested in `rust/tests/conformance.rs`, golden-tested in
+//! the engine tests and `rust/tests/integration.rs`); they differ only
+//! in how the work is scheduled and the output materialised:
 //!
 //! * [`BackendKind::InMemory`] — [`crate::mining::mine_sequences`]:
-//!   thread-local vectors merged into one buffer. Fastest when the whole
-//!   output fits the memory budget.
+//!   static near-equal ranges, thread-local vectors merged into one
+//!   buffer. The simple single-threaded-friendly path.
+//! * [`BackendKind::Sharded`] — [`crate::mining::mine_sequences_sharded`]:
+//!   the paper's OpenMP parallel-for shape. Patients are grouped into
+//!   cost-balanced shards claimed **dynamically** by workers
+//!   ([`crate::par::par_for_each_dynamic`]) — per-patient entry counts
+//!   are highly skewed, so dynamic scheduling keeps stragglers from
+//!   serializing the run. Per-shard buffers are merged in **stable shard
+//!   order** (never completion order), so the output is deterministic
+//!   for every thread count and `TSPM_THREADS` value. Fastest multi-core
+//!   path when the whole output fits the memory budget.
 //! * [`BackendKind::FileBacked`] — [`crate::mining::mine_sequences_to_files`]
 //!   + [`crate::seqstore`]: per-worker spill files, resident set
 //!   O(buffer × threads) during mining (the paper's "1.33 GB instead of
@@ -25,8 +35,10 @@
 //! via [`crate::seqstore::SeqFileSet::for_each`].
 //!
 //! Auto-selection uses [`crate::partition`]'s exact per-patient output
-//! prediction (`n·(n−1)/2` after the optional first-occurrence filter):
-//! the whole output fits the budget → `InMemory`; it doesn't, but every
+//! prediction (`n·(n−1)/2` after the optional first-occurrence filter)
+//! plus the resolved worker count: the whole output fits the budget →
+//! `Sharded` with more than one worker, `InMemory` otherwise (dynamic
+//! scheduling buys nothing on one thread); it doesn't fit, but every
 //! partition chunk can → `Streaming`; even a single patient overflows a
 //! chunk (no partition can help) → `FileBacked`, whose mining phase
 //! keeps only O(write-buffer × threads) resident.
@@ -54,6 +66,7 @@ pub enum BackendChoice {
     #[default]
     Auto,
     InMemory,
+    Sharded,
     FileBacked,
     Streaming,
 }
@@ -62,6 +75,7 @@ pub enum BackendChoice {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     InMemory,
+    Sharded,
     FileBacked,
     Streaming,
 }
@@ -70,6 +84,7 @@ impl std::fmt::Display for BackendKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             BackendKind::InMemory => "in-memory",
+            BackendKind::Sharded => "sharded",
             BackendKind::FileBacked => "file-backed",
             BackendKind::Streaming => "streaming",
         })
@@ -86,11 +101,12 @@ impl std::str::FromStr for BackendChoice {
         match s {
             "auto" => Ok(BackendChoice::Auto),
             "memory" => Ok(BackendChoice::InMemory),
+            "sharded" => Ok(BackendChoice::Sharded),
             "file" => Ok(BackendChoice::FileBacked),
             "streaming" => Ok(BackendChoice::Streaming),
-            other => {
-                Err(format!("backend must be auto|memory|file|streaming, got {other:?}"))
-            }
+            other => Err(format!(
+                "backend must be auto|memory|sharded|file|streaming, got {other:?}"
+            )),
         }
     }
 }
@@ -145,11 +161,22 @@ pub fn forecast(db: &NumericDbMart, cfg: &MiningConfig) -> MiningForecast {
     }
 }
 
-/// Resolve `Auto` against a forecast and a memory budget (bytes).
-pub fn auto_select(f: &MiningForecast, budget_bytes: u64) -> BackendKind {
+/// Resolve `Auto` against a forecast, a memory budget (bytes), and the
+/// worker count the mine stage will run with.
+///
+/// When the whole forecast output fits the budget, the sharded backend
+/// is preferred on more than one worker (dynamic scheduling absorbs the
+/// per-patient skew); a single worker falls back to the plain in-memory
+/// path, and an empty forecast short-circuits to it too — there is
+/// nothing to shard.
+pub fn auto_select(f: &MiningForecast, budget_bytes: u64, threads: usize) -> BackendKind {
     let cap = partition::cap_from_memory(budget_bytes, HARD_ELEMENT_CAP);
     if f.total_sequences <= cap {
-        BackendKind::InMemory
+        if threads > 1 && f.total_sequences > 0 {
+            BackendKind::Sharded
+        } else {
+            BackendKind::InMemory
+        }
     } else if f.max_patient_sequences <= cap {
         BackendKind::Streaming
     } else {
@@ -159,13 +186,20 @@ pub fn auto_select(f: &MiningForecast, budget_bytes: u64) -> BackendKind {
 
 /// Resolve a [`BackendChoice`] to the backend that will run — the one
 /// selection policy, shared by [`crate::engine::Engine::run_with`] and
-/// any external scheduler.
-pub fn resolve(choice: BackendChoice, f: &MiningForecast, budget_bytes: u64) -> BackendKind {
+/// any external scheduler. `threads` is the resolved worker count
+/// ([`crate::par::num_threads`] of the mining config).
+pub fn resolve(
+    choice: BackendChoice,
+    f: &MiningForecast,
+    budget_bytes: u64,
+    threads: usize,
+) -> BackendKind {
     match choice {
         BackendChoice::InMemory => BackendKind::InMemory,
+        BackendChoice::Sharded => BackendKind::Sharded,
         BackendChoice::FileBacked => BackendKind::FileBacked,
         BackendChoice::Streaming => BackendKind::Streaming,
-        BackendChoice::Auto => auto_select(f, budget_bytes),
+        BackendChoice::Auto => auto_select(f, budget_bytes, threads),
     }
 }
 
@@ -182,6 +216,9 @@ pub fn execute(
     match kind {
         BackendKind::InMemory => {
             Ok(mining::mine_sequences_tracked(db, cfg, Some(tracker))?)
+        }
+        BackendKind::Sharded => {
+            Ok(mining::mine_sequences_sharded_tracked(db, cfg, Some(tracker))?)
         }
         BackendKind::FileBacked => {
             let cfg = MiningConfig { mode: MiningMode::FileBased, ..cfg.clone() };
@@ -204,13 +241,17 @@ pub fn execute(
             Ok(set)
         }
         BackendKind::Streaming => {
-            let cfg = PipelineConfig {
+            let pipe_cfg = PipelineConfig {
                 mining: MiningConfig { mode: MiningMode::InMemory, ..cfg.clone() },
                 chunk_cap: chunk_cap.max(1),
                 screen: None,
+                // Pin the pipeline's miner shards to the config's resolved
+                // worker count; the pipeline's own auto (0) would use the
+                // machine default and ignore an explicit `threads`.
+                shards: cfg.worker_threads(),
                 ..Default::default()
             };
-            let result = pipeline::run(db, &cfg)?;
+            let result = pipeline::run(db, &pipe_cfg)?;
             tracker.add(result.sequences.byte_size());
             Ok(result.sequences)
         }
@@ -273,18 +314,83 @@ mod tests {
             max_patient_sequences: 100,
             total_bytes: 16_000,
         };
-        // Whole output fits → in-memory.
-        assert_eq!(auto_select(&f, 1_000_000), BackendKind::InMemory);
-        // Output doesn't fit, chunks do → streaming.
-        assert_eq!(auto_select(&f, 200 * 16), BackendKind::Streaming);
+        // Whole output fits → in-memory on one worker, sharded otherwise.
+        assert_eq!(auto_select(&f, 1_000_000, 1), BackendKind::InMemory);
+        assert_eq!(auto_select(&f, 1_000_000, 4), BackendKind::Sharded);
+        // Output doesn't fit, chunks do → streaming (threads irrelevant).
+        assert_eq!(auto_select(&f, 200 * 16, 1), BackendKind::Streaming);
+        assert_eq!(auto_select(&f, 200 * 16, 8), BackendKind::Streaming);
         // Even one patient overflows a chunk → file-backed.
-        assert_eq!(auto_select(&f, 50 * 16), BackendKind::FileBacked);
+        assert_eq!(auto_select(&f, 50 * 16, 4), BackendKind::FileBacked);
+    }
+
+    #[test]
+    fn auto_select_boundary_forecast_exactly_at_budget() {
+        let f = MiningForecast {
+            total_sequences: 1000,
+            max_patient_sequences: 100,
+            total_bytes: 16_000,
+        };
+        // A budget of exactly total_bytes still fits (≤, not <) …
+        assert_eq!(auto_select(&f, f.total_bytes, 1), BackendKind::InMemory);
+        assert_eq!(auto_select(&f, f.total_bytes, 2), BackendKind::Sharded);
+        // … one record less tips over to streaming …
+        assert_eq!(auto_select(&f, f.total_bytes - 16, 2), BackendKind::Streaming);
+        // … and exactly the largest patient is the streaming floor.
+        assert_eq!(
+            auto_select(&f, f.max_patient_sequences * 16, 2),
+            BackendKind::Streaming
+        );
+        assert_eq!(
+            auto_select(&f, f.max_patient_sequences * 16 - 16, 2),
+            BackendKind::FileBacked
+        );
+    }
+
+    #[test]
+    fn auto_select_boundary_zero_patient_mart() {
+        // An empty cohort forecasts zero everything: nothing to shard, so
+        // every thread count picks the plain in-memory path.
+        let f = forecast(&NumericDbMart::default(), &MiningConfig::default());
+        assert_eq!(f, MiningForecast::default());
+        for threads in [1usize, 2, 64] {
+            assert_eq!(auto_select(&f, 0, threads), BackendKind::InMemory);
+            assert_eq!(auto_select(&f, u64::MAX, threads), BackendKind::InMemory);
+        }
+    }
+
+    #[test]
+    fn auto_select_boundary_overflow_sized_forecast() {
+        // A forecast beyond the hard element cap can never run in memory,
+        // however large the byte budget: cap_from_memory clamps at
+        // HARD_ELEMENT_CAP.
+        let monster = MiningForecast {
+            total_sequences: u64::MAX,
+            max_patient_sequences: u64::MAX,
+            total_bytes: u64::MAX,
+        };
+        assert_eq!(auto_select(&monster, u64::MAX, 8), BackendKind::FileBacked);
+        // Same total, but partitionable patients → streaming.
+        let skewed = MiningForecast {
+            total_sequences: u64::MAX,
+            max_patient_sequences: HARD_ELEMENT_CAP,
+            total_bytes: u64::MAX,
+        };
+        assert_eq!(auto_select(&skewed, u64::MAX, 8), BackendKind::Streaming);
+        // And a zero budget degenerates to a one-element cap, not zero.
+        let tiny = MiningForecast {
+            total_sequences: 1,
+            max_patient_sequences: 1,
+            total_bytes: 16,
+        };
+        assert_eq!(auto_select(&tiny, 0, 1), BackendKind::InMemory);
     }
 
     #[test]
     fn backend_names_parse_round() {
         assert_eq!("auto".parse::<BackendChoice>().unwrap(), BackendChoice::Auto);
         assert_eq!("memory".parse::<BackendChoice>().unwrap(), BackendChoice::InMemory);
+        assert_eq!("sharded".parse::<BackendChoice>().unwrap(), BackendChoice::Sharded);
         assert_eq!("file".parse::<BackendChoice>().unwrap(), BackendChoice::FileBacked);
         assert_eq!("streaming".parse::<BackendChoice>().unwrap(), BackendChoice::Streaming);
         assert!("quantum".parse::<BackendChoice>().unwrap_err().contains("quantum"));
@@ -293,9 +399,17 @@ mod tests {
     #[test]
     fn fixed_choices_resolve_to_themselves() {
         let f = forecast(&db_with_sizes(&[4]), &MiningConfig::default());
-        assert_eq!(resolve(BackendChoice::InMemory, &f, 1), BackendKind::InMemory);
-        assert_eq!(resolve(BackendChoice::FileBacked, &f, u64::MAX), BackendKind::FileBacked);
-        assert_eq!(resolve(BackendChoice::Streaming, &f, u64::MAX), BackendKind::Streaming);
-        assert_eq!(resolve(BackendChoice::Auto, &f, u64::MAX), BackendKind::InMemory);
+        assert_eq!(resolve(BackendChoice::InMemory, &f, 1, 4), BackendKind::InMemory);
+        assert_eq!(resolve(BackendChoice::Sharded, &f, 1, 1), BackendKind::Sharded);
+        assert_eq!(
+            resolve(BackendChoice::FileBacked, &f, u64::MAX, 4),
+            BackendKind::FileBacked
+        );
+        assert_eq!(
+            resolve(BackendChoice::Streaming, &f, u64::MAX, 4),
+            BackendKind::Streaming
+        );
+        assert_eq!(resolve(BackendChoice::Auto, &f, u64::MAX, 1), BackendKind::InMemory);
+        assert_eq!(resolve(BackendChoice::Auto, &f, u64::MAX, 4), BackendKind::Sharded);
     }
 }

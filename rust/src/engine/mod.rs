@@ -7,8 +7,9 @@
 //! free functions with per-module configs and error types. [`Engine`] is
 //! the composable front door: a fluent builder assembles a validated
 //! [`Plan`] (typed stage chain), dispatches the mine stage to one of
-//! three interchangeable [`backends`](BackendKind) — chosen explicitly or
-//! auto-selected from [`crate::partition`]'s memory prediction — and
+//! four interchangeable [`backends`](BackendKind) — chosen explicitly or
+//! auto-selected from [`crate::partition`]'s memory prediction plus the
+//! resolved worker count — and
 //! returns every stage's output plus a [`RunReport`] of per-stage
 //! timings and sizes. All failures funnel into the single [`TspmError`].
 //!
@@ -304,7 +305,8 @@ impl Engine {
             .clone();
         let budget = memory_budget_bytes.unwrap_or(DEFAULT_MEMORY_BUDGET_BYTES);
         let fc = backend::forecast(&db, &mining_cfg);
-        let kind = backend::resolve(plan.backend, &fc, budget);
+        let threads = mining_cfg.worker_threads();
+        let kind = backend::resolve(plan.backend, &fc, budget, threads);
         let chunk_cap = partition::cap_from_memory(budget, HARD_ELEMENT_CAP);
 
         let mut timer = PhaseTimer::new();
@@ -464,7 +466,7 @@ mod tests {
         assert!(err.to_string().contains("labels length"), "got {err}");
     }
 
-    /// The golden test: all three backends produce the identical screened
+    /// The golden test: all four backends produce the identical screened
     /// sequence set on the small Synthea cohort.
     #[test]
     fn golden_backends_agree_on_screened_sets() {
@@ -475,9 +477,12 @@ mod tests {
         let mine_cfg = MiningConfig { work_dir, ..Default::default() };
 
         let mut outputs = Vec::new();
-        for choice in
-            [BackendChoice::InMemory, BackendChoice::FileBacked, BackendChoice::Streaming]
-        {
+        for choice in [
+            BackendChoice::InMemory,
+            BackendChoice::Sharded,
+            BackendChoice::FileBacked,
+            BackendChoice::Streaming,
+        ] {
             let out = Engine::from_dbmart(db.clone())
                 .mine(mine_cfg.clone())
                 .screen(sc)
@@ -506,13 +511,20 @@ mod tests {
         let db = small_db();
         let fc = backend::forecast(&db, &MiningConfig::default());
         assert!(fc.total_sequences > 0);
-        // Plenty of memory → in-memory.
+        // Plenty of memory, one worker → in-memory.
         let out = Engine::from_dbmart(db.clone())
-            .mine(MiningConfig::default())
+            .mine(MiningConfig { threads: 1, ..Default::default() })
             .memory_budget(u64::MAX)
             .run()
             .unwrap();
         assert_eq!(out.report.backend, BackendKind::InMemory);
+        // Plenty of memory, several workers → sharded.
+        let out = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig { threads: 4, ..Default::default() })
+            .memory_budget(u64::MAX)
+            .run()
+            .unwrap();
+        assert_eq!(out.report.backend, BackendKind::Sharded);
         // Budget below the forecast but above the largest patient →
         // streaming.
         let budget = (fc.max_patient_sequences + 1) * 16;

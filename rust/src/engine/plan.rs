@@ -120,6 +120,14 @@ impl Plan {
                 Stage::Mine(cfg) if cfg.duration_unit_days == 0 => {
                     return Err(TspmError::Plan("mine: duration_unit_days must be ≥ 1".into()));
                 }
+                Stage::Mine(cfg) if cfg.shards > crate::mining::MAX_SHARDS => {
+                    return Err(TspmError::Plan(format!(
+                        "mine: shards must be ≤ {} (got {}); 0 selects the default \
+                         layout",
+                        crate::mining::MAX_SHARDS,
+                        cfg.shards
+                    )));
+                }
                 Stage::Screen(cfg) if cfg.min_patients == 0 => {
                     return Err(TspmError::Plan(
                         "screen: min_patients must be ≥ 1 (0 would be a no-op)".into(),
@@ -289,5 +297,23 @@ mod tests {
     #[test]
     fn mine_only_is_a_valid_plan() {
         plan_of(vec![Stage::Mine(MiningConfig::default())]).validate().unwrap();
+    }
+
+    #[test]
+    fn absurd_shard_count_rejected() {
+        let max = crate::mining::MAX_SHARDS;
+        let err = plan_of(vec![Stage::Mine(MiningConfig {
+            shards: max + 1,
+            ..Default::default()
+        })])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("shards"), "got {err}");
+        // The boundary itself — and auto (0) — are fine.
+        for shards in [0, 1, max] {
+            plan_of(vec![Stage::Mine(MiningConfig { shards, ..Default::default() })])
+                .validate()
+                .unwrap();
+        }
     }
 }

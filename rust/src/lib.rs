@@ -11,9 +11,10 @@
 //! The supported entry point is [`engine::Engine`]: a fluent builder that
 //! assembles a validated stage chain (mine → screen → matrix → msmr),
 //! dispatches mining to an interchangeable execution backend (in-memory,
-//! file-backed, or streaming — auto-selected from a memory forecast), and
-//! reports one unified error type ([`engine::TspmError`]) plus per-stage
-//! timings ([`engine::RunReport`]):
+//! sharded, file-backed, or streaming — auto-selected from a memory
+//! forecast and the worker count), and reports one unified error type
+//! ([`engine::TspmError`]) plus per-stage timings
+//! ([`engine::RunReport`]):
 //!
 //! ```no_run
 //! use tspm_plus::prelude::*;
@@ -38,6 +39,27 @@
 //! See `examples/quickstart.rs` for the 60-second tour and
 //! `examples/e2e_pipeline.rs` for the full workflow including MSMR and
 //! classification.
+//!
+//! ### Picking a backend
+//!
+//! With `BackendChoice::Auto` (the default), the engine forecasts the
+//! exact mining output (`Σ n·(n−1)/2` per patient) and picks:
+//!
+//! * output fits the memory budget, >1 worker → **sharded**
+//!   (`--backend sharded`): patients grouped into cost-balanced shards,
+//!   claimed dynamically by workers, merged in stable shard order. Its
+//!   output is **deterministic** — identical for every thread count and
+//!   `TSPM_THREADS` setting, because the merge never depends on
+//!   completion order.
+//! * output fits, 1 worker → **in-memory** (no scheduling to win).
+//! * output too big, but every partition chunk fits → **streaming**
+//!   (bounded queues + backpressure).
+//! * a single patient alone overflows a chunk → **file-backed**
+//!   (per-worker spill files).
+//!
+//! All four backends produce the same sequence multiset; the
+//! cross-backend conformance harness (`rust/tests/conformance.rs`)
+//! asserts byte-identical sorted output on adversarial cohort shapes.
 //!
 //! ## The expert layer
 //!

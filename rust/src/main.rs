@@ -157,9 +157,10 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         OptSpec::required("input", "dbmart CSV path"),
         OptSpec::value("out", Some("sequences.tspm"), "output sequence file"),
         OptSpec::value("lookup-out", Some("lookup.json"), "lookup-table JSON output"),
-        OptSpec::value("backend", Some("auto"), "auto|memory|file|streaming"),
+        OptSpec::value("backend", Some("auto"), "auto|memory|sharded|file|streaming"),
         OptSpec::value("mode", None, "deprecated alias for --backend (memory|file)"),
         OptSpec::value("threads", Some("0"), "worker threads (0 = auto)"),
+        OptSpec::value("shards", Some("0"), "shards for the sharded backend (0 = auto)"),
         OptSpec::value("duration-unit", Some("1"), "duration unit in days"),
         OptSpec::value("sparsity", Some("0"), "min patients per sequence (0 = no screen)"),
         OptSpec::value("memory-budget-mb", Some("4096"), "budget steering the auto backend"),
@@ -194,6 +195,7 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         first_occurrence_only: a.flag("first-occurrence"),
         duration_unit_days: a.req("duration-unit").map_err(|e| e.to_string())?,
         work_dir: std::env::temp_dir().join("tspm_mine"),
+        shards: a.req("shards").map_err(|e| e.to_string())?,
         ..Default::default()
     };
 

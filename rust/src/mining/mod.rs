@@ -26,6 +26,12 @@ use crate::par;
 use crate::psort;
 use crate::seqstore::{SeqFileSet, SeqWriter};
 use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// Upper bound on the shard count accepted by configuration and plan
+/// validation. Shards beyond this add pure bookkeeping overhead (each is
+/// one slot plus one scheduling claim) with no rebalancing benefit.
+pub const MAX_SHARDS: usize = 1 << 16;
 
 /// One mined sequence record — 16 bytes, the paper's "128 bit" layout:
 /// 8 bytes sequence hash, 4 bytes patient id, 4 bytes duration.
@@ -64,6 +70,12 @@ pub struct MiningConfig {
     /// Include same-phenX pairs (x → x at a later date). The paper keeps
     /// them; exposed for ablation.
     pub include_self_pairs: bool,
+    /// Shard count for the sharded backend (0 = auto: [`DEFAULT_SHARDS`],
+    /// capped by the patient count). The layout never depends on the
+    /// worker count, so sharded output is reproducible across
+    /// `TSPM_THREADS` settings; oversubscribing workers keeps dynamic
+    /// scheduling effective on cohorts with skewed entry counts.
+    pub shards: usize,
 }
 
 impl Default for MiningConfig {
@@ -75,7 +87,19 @@ impl Default for MiningConfig {
             mode: MiningMode::InMemory,
             work_dir: std::env::temp_dir().join("tspm_work"),
             include_self_pairs: true,
+            shards: 0,
         }
+    }
+}
+
+impl MiningConfig {
+    /// The worker count this config resolves to: `threads` when positive,
+    /// else the `TSPM_THREADS` → detected-parallelism chain, always
+    /// clamped ([`crate::par::num_threads`]). The single source of truth
+    /// shared by every mining path, backend auto-selection, and the
+    /// streaming pipeline, so selection and execution cannot disagree.
+    pub fn worker_threads(&self) -> usize {
+        par::num_threads(Some(self.threads).filter(|&t| t > 0))
     }
 }
 
@@ -237,6 +261,66 @@ fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnM
     }
 }
 
+/// Where mined records land. `reserve` receives the upper-bound pair
+/// count of the next chunk (vector sinks pre-size, streaming sinks
+/// ignore it).
+trait RecordSink {
+    fn reserve(&mut self, _additional: u64) {}
+    fn push(&mut self, r: SeqRecord);
+}
+
+impl RecordSink for Vec<SeqRecord> {
+    fn reserve(&mut self, additional: u64) {
+        Vec::reserve(self, additional as usize);
+    }
+    fn push(&mut self, r: SeqRecord) {
+        Vec::push(self, r);
+    }
+}
+
+/// [`SeqWriter`] sink that latches the first I/O error (later pushes
+/// become no-ops); the caller re-surfaces it once the range completes.
+struct WriterSink<'a> {
+    writer: &'a mut SeqWriter,
+    err: &'a mut Option<std::io::Error>,
+}
+
+impl RecordSink for WriterSink<'_> {
+    fn push(&mut self, r: SeqRecord) {
+        if self.err.is_none() {
+            if let Err(e) = self.writer.write(r) {
+                *self.err = Some(e);
+            }
+        }
+    }
+}
+
+/// Mine every patient chunk of `pr` (a range over `bounds` windows) into
+/// `out`, applying the optional first-occurrence filter via `scratch`.
+/// The one inner loop shared by every mining path — static (in-memory),
+/// dynamic (sharded), and file-backed — so the backends can never
+/// diverge on filtering or pre-sizing.
+fn mine_patient_range(
+    entries: &[NumericEntry],
+    bounds: &[usize],
+    pr: &std::ops::Range<usize>,
+    cfg: &MiningConfig,
+    scratch: &mut Vec<NumericEntry>,
+    out: &mut impl RecordSink,
+) {
+    for w in bounds[pr.start..pr.end + 1].windows(2) {
+        let chunk = &entries[w[0]..w[1]];
+        if cfg.first_occurrence_only {
+            first_occurrences(chunk, scratch);
+            out.reserve(pairs_for(scratch.len()));
+            sequence_chunk(scratch, cfg, |r| out.push(r));
+        } else {
+            out.reserve(pairs_for(chunk.len()));
+            sequence_chunk(chunk, cfg, |r| out.push(r));
+        }
+    }
+}
+
 /// Mine all transitive sequences **in memory** (paper mode 2).
 ///
 /// `tracker`, when provided, accounts the engine's logical peak memory
@@ -246,12 +330,44 @@ pub fn mine_sequences(db: &NumericDbMart, cfg: &MiningConfig) -> Result<Sequence
 }
 
 /// [`mine_sequences`] with optional logical memory accounting.
+///
+/// Thread-local mining over contiguous ranges of patient chunks:
+/// patients are pre-aggregated into near-equal quadratic-cost ranges
+/// (one per worker) so the O(n²) work is balanced even with skewed
+/// chunk sizes, and each worker appends to its own vector.
 pub fn mine_sequences_tracked(
     db: &NumericDbMart,
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SequenceSet, MiningError> {
-    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    mine_with_scheduler(db, cfg, tracker, |entries, bounds, threads| {
+        let patient_ranges = balance_patients(bounds, threads);
+        par::par_map_chunks(patient_ranges.len(), threads, |range| {
+            let mut local: Vec<SeqRecord> = Vec::new();
+            let mut scratch: Vec<NumericEntry> = Vec::new();
+            for pr in &patient_ranges[range] {
+                mine_patient_range(entries, bounds, pr, cfg, &mut scratch, &mut local);
+            }
+            local
+        })
+    })
+}
+
+/// Shared prologue + epilogue of the in-memory scheduling paths
+/// ([`mine_sequences_tracked`] static, [`mine_sequences_sharded_tracked`]
+/// dynamic): clone + sort the entries, pre-size from the exact count,
+/// let `schedule` produce per-bucket buffers **in a deterministic bucket
+/// order**, merge them in that order, and account logical memory.
+fn mine_with_scheduler<F>(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    tracker: Option<&MemTracker>,
+    schedule: F,
+) -> Result<SequenceSet, MiningError>
+where
+    F: FnOnce(&[NumericEntry], &[usize], usize) -> Vec<Vec<SeqRecord>>,
+{
+    let threads = cfg.worker_threads();
     let track = |b: u64| {
         if let Some(t) = tracker {
             t.add(b)
@@ -270,42 +386,19 @@ pub fn mine_sequences_tracked(
     let bounds = sort_and_chunk(&mut entries, threads);
 
     let total = count_sequences(&entries, &bounds, cfg);
-    let out_bytes = total * std::mem::size_of::<SeqRecord>() as u64;
-    track(out_bytes);
+    track(total * std::mem::size_of::<SeqRecord>() as u64);
 
-    // Thread-local mining over contiguous ranges of patient chunks.
-    // Patients are pre-aggregated into near-equal *entry* ranges so the
-    // O(n²) work is balanced even with skewed chunk sizes.
-    let patient_ranges = balance_patients(&bounds, threads);
-    let mut results: Vec<Vec<SeqRecord>> =
-        par::par_map_chunks(patient_ranges.len(), threads, |range| {
-            let mut local: Vec<SeqRecord> = Vec::new();
-            let mut scratch: Vec<NumericEntry> = Vec::new();
-            for pr in &patient_ranges[range] {
-                for w in bounds[pr.start..pr.end + 1].windows(2) {
-                    let chunk = &entries[w[0]..w[1]];
-                    if cfg.first_occurrence_only {
-                        first_occurrences(chunk, &mut scratch);
-                        local.reserve(pairs_for(scratch.len()) as usize);
-                        sequence_chunk(&scratch, cfg, |r| local.push(r));
-                    } else {
-                        local.reserve(pairs_for(chunk.len()) as usize);
-                        sequence_chunk(chunk, cfg, |r| local.push(r));
-                    }
-                }
-            }
-            local
-        });
+    let mut buffers = schedule(&entries, &bounds, threads);
 
-    // Merge thread-local vectors into one output buffer.
+    // Merge per-bucket vectors into one output buffer, in bucket order.
     let mut records: Vec<SeqRecord> = Vec::with_capacity(total as usize);
-    for r in &mut results {
-        records.append(r);
+    for b in &mut buffers {
+        records.append(b);
     }
     // `total` counts self-pairs; with include_self_pairs=false the actual
     // output is smaller, so `total` is an upper bound used for capacity.
     debug_assert!(records.len() as u64 <= total);
-    debug_assert!(cfg.include_self_pairs == false || records.len() as u64 == total);
+    debug_assert!(!cfg.include_self_pairs || records.len() as u64 == total);
 
     untrack(entries_bytes);
     drop(entries);
@@ -335,7 +428,7 @@ pub fn mine_sequences_to_files_tracked(
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SeqFileSet, MiningError> {
-    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let threads = cfg.worker_threads();
     std::fs::create_dir_all(&cfg.work_dir)?;
     if let Some(t) = tracker {
         t.add((db.entries.len() * std::mem::size_of::<NumericEntry>()) as u64);
@@ -352,29 +445,15 @@ pub fn mine_sequences_to_files_tracked(
                 t.add(crate::seqstore::WRITER_BUFFER_BYTES as u64);
             }
             let mut scratch: Vec<NumericEntry> = Vec::new();
-            for pr in &patient_ranges[range] {
-                for w in bounds[pr.start..pr.end + 1].windows(2) {
-                    let chunk = &entries[w[0]..w[1]];
-                    let mut err: Option<std::io::Error> = None;
-                    {
-                        let sink = |r: SeqRecord| {
-                            if err.is_none() {
-                                if let Err(e) = writer.write(r) {
-                                    err = Some(e);
-                                }
-                            }
-                        };
-                        if cfg.first_occurrence_only {
-                            first_occurrences(chunk, &mut scratch);
-                            sequence_chunk(&scratch, cfg, sink);
-                        } else {
-                            sequence_chunk(chunk, cfg, sink);
-                        }
-                    }
-                    if let Some(e) = err {
-                        return Err(e);
-                    }
+            let mut err: Option<std::io::Error> = None;
+            {
+                let mut sink = WriterSink { writer: &mut writer, err: &mut err };
+                for pr in &patient_ranges[range] {
+                    mine_patient_range(&entries, &bounds, pr, cfg, &mut scratch, &mut sink);
                 }
+            }
+            if let Some(e) = err {
+                return Err(e);
             }
             let count = writer.finish()?;
             if let Some(t) = tracker {
@@ -398,6 +477,73 @@ pub fn mine_sequences_to_files_tracked(
         t.sub((db.entries.len() * std::mem::size_of::<NumericEntry>()) as u64);
     }
     Ok(fileset)
+}
+
+/// Auto shard count used when `MiningConfig::shards` is 0. A fixed
+/// constant — deliberately *not* derived from the worker count — so the
+/// shard layout, and with it the raw pre-sort record order, is identical
+/// whatever `TSPM_THREADS` resolves to. 64 shards give ~4× dynamic
+/// oversubscription on a 16-core machine; set `shards` explicitly to
+/// trade layout stability for more concurrency on larger irons.
+pub const DEFAULT_SHARDS: usize = 64;
+
+/// Resolve the shard count for [`mine_sequences_sharded`]: an explicit
+/// `shards` wins; `0` means [`DEFAULT_SHARDS`]. The result is clamped to
+/// `[1, min(MAX_SHARDS, n_patients)]` (one shard floor even for empty
+/// cohorts, so callers never divide by zero).
+pub fn effective_shards(shards: usize, n_patients: usize) -> usize {
+    let want = if shards > 0 { shards } else { DEFAULT_SHARDS };
+    want.min(MAX_SHARDS).min(n_patients.max(1))
+}
+
+/// Mine all transitive sequences on the **sharded** backend.
+///
+/// Patients are grouped into [`effective_shards`] cost-balanced shards
+/// (quadratic cost, like the batch path), but unlike
+/// [`mine_sequences`]'s static range assignment, shards are claimed
+/// dynamically by workers over [`crate::par::par_for_each_dynamic`] —
+/// per-patient entry counts are highly skewed in clinical data, so a
+/// straggler shard must not serialize the run.
+///
+/// **Determinism guarantee:** each shard's buffer depends only on the
+/// deterministically sorted entries it covers, the shard layout depends
+/// only on the cohort and the `shards` setting (never the worker count),
+/// and buffers are merged in **stable shard order** — never completion
+/// order. The raw output is therefore byte-identical for every thread
+/// count, `TSPM_THREADS` value, and scheduling interleaving. Changing
+/// `shards` itself may permute the pre-sort record order, but never the
+/// multiset.
+pub fn mine_sequences_sharded(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+) -> Result<SequenceSet, MiningError> {
+    mine_sequences_sharded_tracked(db, cfg, None)
+}
+
+/// [`mine_sequences_sharded`] with optional logical memory accounting.
+pub fn mine_sequences_sharded_tracked(
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SequenceSet, MiningError> {
+    mine_with_scheduler(db, cfg, tracker, |entries, bounds, threads| {
+        let n_patients = bounds.len().saturating_sub(1);
+        let shard_ranges =
+            balance_patients(bounds, effective_shards(cfg.shards, n_patients));
+        // One write-once slot per shard: workers fill slots in whatever
+        // order the dynamic scheduler hands out shards; the merge reads
+        // them in shard order.
+        let slots: Vec<OnceLock<Vec<SeqRecord>>> =
+            (0..shard_ranges.len()).map(|_| OnceLock::new()).collect();
+        par::par_for_each_dynamic(shard_ranges.len(), threads, 1, |si| {
+            let mut local: Vec<SeqRecord> = Vec::new();
+            let mut scratch: Vec<NumericEntry> = Vec::new();
+            mine_patient_range(entries, bounds, &shard_ranges[si], cfg, &mut scratch, &mut local);
+            let filled = slots[si].set(local).is_ok();
+            debug_assert!(filled, "shard {si} claimed twice");
+        });
+        slots.into_iter().map(|s| s.into_inner().unwrap_or_default()).collect()
+    })
 }
 
 /// Group patient chunks into per-worker ranges balanced by *quadratic*
@@ -619,6 +765,87 @@ mod tests {
     #[test]
     fn record_is_16_bytes() {
         assert_eq!(std::mem::size_of::<SeqRecord>(), 16);
+    }
+
+    #[test]
+    fn sharded_matches_batch_for_every_layout() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+        let mut golden = mine_sequences(&db, &MiningConfig::default()).unwrap().records;
+        golden.sort_unstable_by_key(key);
+        for shards in [1usize, 2, 8, 64] {
+            for threads in [1usize, 2, 4] {
+                let cfg = MiningConfig { shards, threads, ..Default::default() };
+                let mut got = mine_sequences_sharded(&db, &cfg).unwrap().records;
+                got.sort_unstable_by_key(key);
+                assert_eq!(got, golden, "shards={shards} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_respects_mining_filters() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+        for (first_only, self_pairs, unit) in
+            [(true, true, 1u32), (false, false, 7), (true, false, 30)]
+        {
+            let cfg = MiningConfig {
+                first_occurrence_only: first_only,
+                include_self_pairs: self_pairs,
+                duration_unit_days: unit,
+                ..Default::default()
+            };
+            let mut batch = mine_sequences(&db, &cfg).unwrap().records;
+            batch.sort_unstable_by_key(key);
+            let sharded_cfg = MiningConfig { shards: 5, threads: 3, ..cfg };
+            let mut got = mine_sequences_sharded(&db, &sharded_cfg).unwrap().records;
+            got.sort_unstable_by_key(key);
+            assert_eq!(got, batch, "first_only={first_only} self_pairs={self_pairs} unit={unit}");
+        }
+    }
+
+    #[test]
+    fn sharded_empty_dbmart_yields_empty_set() {
+        let db = NumericDbMart::default();
+        let got = mine_sequences_sharded(&db, &MiningConfig::default()).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn worker_threads_prefers_explicit_config() {
+        assert_eq!(MiningConfig { threads: 3, ..Default::default() }.worker_threads(), 3);
+        let auto = MiningConfig::default().worker_threads();
+        assert!((1..=crate::par::MAX_THREADS).contains(&auto));
+    }
+
+    #[test]
+    fn effective_shards_policy() {
+        // explicit wins, clamped by patients
+        assert_eq!(effective_shards(6, 100), 6);
+        assert_eq!(effective_shards(200, 100), 100);
+        // auto = DEFAULT_SHARDS, clamped by patients — never the worker
+        // count, so the layout is TSPM_THREADS-independent
+        assert_eq!(effective_shards(0, 1000), DEFAULT_SHARDS);
+        assert_eq!(effective_shards(0, 3), 3);
+        // never zero, even with no patients
+        assert_eq!(effective_shards(0, 0), 1);
+        assert_eq!(effective_shards(1, 0), 1);
+        // hard cap
+        assert_eq!(effective_shards(usize::MAX, usize::MAX), MAX_SHARDS);
+    }
+
+    #[test]
+    fn sharded_tracker_records_peak() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let tracker = MemTracker::new();
+        let got =
+            mine_sequences_sharded_tracked(&db, &MiningConfig::default(), Some(&tracker))
+                .unwrap();
+        assert!(tracker.peak() >= got.byte_size());
     }
 
     #[test]

@@ -18,24 +18,43 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Hard ceiling on the worker count, whatever its source. Every worker is
+/// a real scoped OS thread, so an env override like `TSPM_THREADS=100000`
+/// used to spawn exactly that many threads; any request above this bound
+/// is clamped instead.
+pub const MAX_THREADS: usize = 512;
+
 /// Effective number of worker threads.
 ///
 /// Priority: explicit `requested` argument (Some>0) → `TSPM_THREADS` env →
-/// `std::thread::available_parallelism()`.
+/// `std::thread::available_parallelism()`; every source is clamped to
+/// [`MAX_THREADS`].
 pub fn num_threads(requested: Option<usize>) -> usize {
+    resolve_threads(
+        requested,
+        std::env::var("TSPM_THREADS").ok().as_deref(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )
+}
+
+/// The pure precedence chain behind [`num_threads`], split out so the
+/// override logic is testable without mutating the process environment:
+/// a positive `requested` wins, else a parseable positive `env` value,
+/// else `detected`; the winner is clamped to `[1, MAX_THREADS]`.
+pub fn resolve_threads(requested: Option<usize>, env: Option<&str>, detected: usize) -> usize {
     if let Some(n) = requested {
         if n > 0 {
-            return n;
+            return n.min(MAX_THREADS);
         }
     }
-    if let Ok(v) = std::env::var("TSPM_THREADS") {
+    if let Some(v) = env {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n > 0 {
-                return n;
+                return n.min(MAX_THREADS);
             }
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    detected.clamp(1, MAX_THREADS)
 }
 
 /// Split `[0, len)` into at most `parts` contiguous ranges of near-equal
@@ -236,5 +255,32 @@ mod tests {
     fn num_threads_request_wins() {
         assert_eq!(num_threads(Some(3)), 3);
         assert!(num_threads(None) >= 1);
+        assert!(num_threads(None) <= MAX_THREADS);
+    }
+
+    #[test]
+    fn resolve_threads_precedence_chain() {
+        // explicit request beats env and detection
+        assert_eq!(resolve_threads(Some(3), Some("7"), 16), 3);
+        // request of 0 means "unset" → env wins
+        assert_eq!(resolve_threads(Some(0), Some("7"), 16), 7);
+        assert_eq!(resolve_threads(None, Some("7"), 16), 7);
+        // whitespace is tolerated
+        assert_eq!(resolve_threads(None, Some(" 5 "), 16), 5);
+        // unparseable / non-positive env falls through to detection
+        assert_eq!(resolve_threads(None, Some("lots"), 16), 16);
+        assert_eq!(resolve_threads(None, Some("0"), 16), 16);
+        assert_eq!(resolve_threads(None, Some("-2"), 16), 16);
+        assert_eq!(resolve_threads(None, None, 16), 16);
+    }
+
+    #[test]
+    fn resolve_threads_clamps_every_source() {
+        // the regression: TSPM_THREADS=100000 must not mean 100000 threads
+        assert_eq!(resolve_threads(None, Some("100000"), 8), MAX_THREADS);
+        assert_eq!(resolve_threads(Some(usize::MAX), None, 8), MAX_THREADS);
+        assert_eq!(resolve_threads(None, None, usize::MAX), MAX_THREADS);
+        // and a detection failure still yields at least one worker
+        assert_eq!(resolve_threads(None, None, 0), 1);
     }
 }

@@ -66,7 +66,7 @@ pub fn plan(
     max_sequences_per_chunk: u64,
 ) -> Result<PartitionPlan, PartitionError> {
     let mut entries = db.entries.clone();
-    let threads = crate::par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let threads = cfg.worker_threads();
     let bounds = mining::sort_and_chunk(&mut entries, threads);
     let n_patients = bounds.len().saturating_sub(1);
 

@@ -1,0 +1,326 @@
+//! Cross-backend conformance harness.
+//!
+//! The engine promises that its four execution backends (in-memory,
+//! sharded, file-backed, streaming) are *interchangeable*: same plan in,
+//! same sequence multiset out, whatever the scheduling, spill format, or
+//! thread count. Reordering bugs are exactly the class that slips past
+//! happy-path tests, so this harness feeds **adversarial dbmart shapes**
+//! — empty cohorts, single-entry patients, heavily skewed patients,
+//! duplicate timestamps, maximal durations — through every backend and
+//! asserts **byte-identical** sorted output plus the `RunReport`
+//! invariants each run must satisfy.
+//!
+//! Every future backend (async, caching, remote) gets wired into
+//! `ALL_BACKENDS` below and inherits the whole battery.
+
+use tspm_plus::dbmart::{DbMart, DbMartEntry, NumericDbMart};
+use tspm_plus::engine::{self, BackendChoice, BackendKind, Engine};
+use tspm_plus::mining::{self, MiningConfig, SeqRecord};
+use tspm_plus::rng::Rng;
+
+/// Every backend the engine can execute, paired with the kind the report
+/// must name.
+const ALL_BACKENDS: [(BackendChoice, BackendKind); 4] = [
+    (BackendChoice::InMemory, BackendKind::InMemory),
+    (BackendChoice::Sharded, BackendKind::Sharded),
+    (BackendChoice::FileBacked, BackendKind::FileBacked),
+    (BackendChoice::Streaming, BackendKind::Streaming),
+];
+
+fn entry(p: &str, date: i32, x: &str) -> DbMartEntry {
+    DbMartEntry { patient_id: p.into(), date, phenx: x.into(), description: None }
+}
+
+fn sorted(mut v: Vec<SeqRecord>) -> Vec<SeqRecord> {
+    v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+    v
+}
+
+/// Serialize sorted records to their canonical little-endian byte layout
+/// so "byte-identical" is literal, not just field-wise equality.
+fn record_bytes(records: &[SeqRecord]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(records.len() * 16);
+    for r in records {
+        out.extend_from_slice(&r.seq.to_le_bytes());
+        out.extend_from_slice(&r.pid.to_le_bytes());
+        out.extend_from_slice(&r.duration.to_le_bytes());
+    }
+    out
+}
+
+/// Unique spill directory per (shape, backend) so concurrently running
+/// tests never share file names.
+fn work_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tspm_conf_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The harness core: run the identical plan through all four backends and
+/// assert byte-identical sorted output and the `RunReport` invariants.
+/// Returns the golden sorted records for shape-specific follow-up checks.
+fn assert_backends_conform(shape: &str, mart: &DbMart, cfg: &MiningConfig) -> Vec<SeqRecord> {
+    let db = NumericDbMart::encode(mart);
+    // A budget that clears the largest single patient (streaming would
+    // otherwise legitimately refuse) but sits below most totals, so the
+    // streaming run really partitions.
+    let fc = engine::forecast(&db, cfg);
+    let budget_bytes = (fc.max_patient_sequences + 32) * 16;
+
+    let mut golden: Option<Vec<u8>> = None;
+    let mut golden_records = Vec::new();
+    for (choice, kind) in ALL_BACKENDS {
+        let run_cfg = MiningConfig {
+            work_dir: work_dir(&format!("{shape}_{kind}")),
+            ..cfg.clone()
+        };
+        let out = Engine::from_dbmart(db.clone())
+            .mine(run_cfg)
+            .backend(choice)
+            .memory_budget(budget_bytes)
+            .run()
+            .unwrap_or_else(|e| panic!("{shape}/{kind}: {e}"));
+
+        // --- RunReport invariants, identical for every backend ---------
+        assert_eq!(out.report.backend, kind, "{shape}: report names the wrong backend");
+        let stage_names: Vec<&str> =
+            out.report.stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(stage_names, ["mine"], "{shape}/{kind}");
+        assert_eq!(
+            out.report.stages[0].records_out,
+            out.sequences.len() as u64,
+            "{shape}/{kind}: mine stage under/over-reports records"
+        );
+        assert_eq!(
+            out.report.stages[0].bytes_out,
+            out.sequences.byte_size(),
+            "{shape}/{kind}"
+        );
+        assert_eq!(out.report.forecast, fc, "{shape}/{kind}: forecast drifted");
+        if cfg.include_self_pairs {
+            assert_eq!(
+                fc.total_sequences,
+                out.sequences.len() as u64,
+                "{shape}/{kind}: forecast must be exact with self-pairs"
+            );
+        } else {
+            assert!(fc.total_sequences >= out.sequences.len() as u64, "{shape}/{kind}");
+        }
+        assert!(
+            out.report.peak_logical_bytes >= out.sequences.byte_size(),
+            "{shape}/{kind}: peak below the materialised output"
+        );
+        assert_eq!(out.sequences.num_patients as usize, db.num_patients(), "{shape}/{kind}");
+
+        // --- byte-identical output across backends ---------------------
+        let records = sorted(out.sequences.records);
+        let bytes = record_bytes(&records);
+        match &golden {
+            None => {
+                golden = Some(bytes);
+                golden_records = records;
+            }
+            Some(g) => assert_eq!(
+                g,
+                &bytes,
+                "{shape}: {kind} diverged from {} on {} records",
+                ALL_BACKENDS[0].1,
+                golden_records.len()
+            ),
+        }
+    }
+    golden_records
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial shapes
+// ---------------------------------------------------------------------------
+
+/// Shape 1 — the empty cohort: zero patients, zero entries.
+#[test]
+fn conformance_empty_cohort() {
+    let mart = DbMart::new(vec![]);
+    let golden = assert_backends_conform("empty", &mart, &MiningConfig::default());
+    assert!(golden.is_empty());
+}
+
+/// Shape 2 — single-entry patients only: every patient mines to zero
+/// sequences, so any backend that fabricates or drops boundary chunks
+/// shows up immediately.
+#[test]
+fn conformance_single_entry_patients() {
+    let mart = DbMart::new(
+        (0..40).map(|p| entry(&format!("p{p}"), p, &format!("x{}", p % 7))).collect(),
+    );
+    let golden = assert_backends_conform("single_entry", &mart, &MiningConfig::default());
+    assert!(golden.is_empty(), "single-entry patients must yield no pairs");
+}
+
+/// Shape 3 — heavily skewed cohort: one 200-entry patient next to fifty
+/// 1–3-entry patients. This is the shape dynamic scheduling exists for,
+/// and the shape where static chunk/shard layouts disagree the most.
+#[test]
+fn conformance_heavily_skewed() {
+    let mut entries = Vec::new();
+    for i in 0..200 {
+        entries.push(entry("whale", i, &format!("x{}", i % 23)));
+    }
+    let mut rng = Rng::new(42);
+    for p in 0..50 {
+        for i in 0..(1 + rng.gen_range(3)) {
+            entries.push(entry(
+                &format!("minnow{p}"),
+                i as i32,
+                &format!("x{}", rng.gen_range(23)),
+            ));
+        }
+    }
+    let mart = DbMart::new(entries);
+    let golden = assert_backends_conform("skewed", &mart, &MiningConfig::default());
+    assert!(golden.len() as u64 >= mining::pairs_for(200));
+}
+
+/// Shape 4 — duplicate timestamps: all of a patient's entries share one
+/// date, so *every* pair is a tie and the orientation rests entirely on
+/// the deterministic phenX tie-break. Run with the first-occurrence
+/// filter too, which dedupes on top of the ties.
+#[test]
+fn conformance_duplicate_timestamps() {
+    let mut entries = Vec::new();
+    for p in 0..20 {
+        for i in 0..10 {
+            // Codes repeat within a patient (i % 4) to also exercise
+            // same-code-same-date self pairs.
+            entries.push(entry(&format!("p{p}"), 1000 + p, &format!("c{}", i % 4)));
+        }
+    }
+    let mart = DbMart::new(entries);
+    let golden = assert_backends_conform("dup_ts", &mart, &MiningConfig::default());
+    assert!(golden.iter().all(|r| r.duration == 0), "same-date pairs must span 0 days");
+    assert_backends_conform(
+        "dup_ts_first",
+        &mart,
+        &MiningConfig { first_occurrence_only: true, ..Default::default() },
+    );
+}
+
+/// Shape 5 — maximal durations: date spans close to `i32::MAX` days, so
+/// duration values land in the top buckets of the u32 range, with a
+/// coarse duration unit on top.
+#[test]
+fn conformance_max_duration_buckets() {
+    let mut entries = Vec::new();
+    for p in 0..8 {
+        let pid = format!("p{p}");
+        entries.push(entry(&pid, 0, "start"));
+        entries.push(entry(&pid, 2_100_000_000, "end"));
+        entries.push(entry(&pid, 1_000_000_000 + p, "mid"));
+    }
+    let mart = DbMart::new(entries);
+    let golden = assert_backends_conform("max_dur", &mart, &MiningConfig::default());
+    assert!(golden.iter().any(|r| r.duration >= 2_100_000_000), "top bucket missing");
+    let monthly = assert_backends_conform(
+        "max_dur_monthly",
+        &mart,
+        &MiningConfig { duration_unit_days: 30, ..Default::default() },
+    );
+    assert!(monthly.iter().all(|r| r.duration <= 2_100_000_000 / 30 + 1));
+}
+
+/// Shape 6 — randomized mixture: every adversarial trait at once, across
+/// several seeds, with self-pairs excluded (the config under which the
+/// forecast is only an upper bound).
+#[test]
+fn conformance_random_mixture() {
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(0xBEEF + seed);
+        let mut entries = Vec::new();
+        let n_patients = 1 + rng.gen_range(30);
+        for p in 0..n_patients {
+            let n = match rng.gen_range(4) {
+                0 => 1,
+                1 => 2,
+                _ => 1 + rng.gen_range(40),
+            };
+            let same_date = rng.gen_range(3) == 0;
+            for _ in 0..n {
+                let date = if same_date { 7 } else { rng.gen_range(3000) as i32 };
+                entries.push(entry(
+                    &format!("p{p}"),
+                    date,
+                    &format!("c{}", rng.gen_range(15)),
+                ));
+            }
+        }
+        let mart = DbMart::new(entries);
+        assert_backends_conform(
+            &format!("random{seed}"),
+            &mart,
+            &MiningConfig { include_self_pairs: false, ..Default::default() },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded determinism: output independent of thread and shard count
+// ---------------------------------------------------------------------------
+
+/// The sharded backend's promise, at two strengths. Strong form: for any
+/// fixed `shards` setting (including auto = 0, whose layout is a
+/// constant, never the worker count), the **raw, unsorted** output is
+/// byte-identical for every worker count — the `TSPM_THREADS` axis that
+/// CI drives by running this whole suite under `TSPM_THREADS=1` and
+/// `=4` — because shards are merged in stable shard order, never
+/// completion order. Weak form: across *different* shard layouts, the
+/// sorted output is still byte-identical (same multiset, permuted).
+#[test]
+fn sharded_output_independent_of_threads_and_shards() {
+    let mut entries = Vec::new();
+    let mut rng = Rng::new(7);
+    for i in 0..150 {
+        entries.push(entry("whale", i, &format!("x{}", i % 11)));
+    }
+    for p in 0..30 {
+        for i in 0..(1 + rng.gen_range(8)) {
+            entries.push(entry(
+                &format!("p{p}"),
+                rng.gen_range(500) as i32,
+                &format!("x{}", rng.gen_range(11)),
+            ));
+        }
+    }
+    let db = NumericDbMart::encode(&DbMart::new(entries));
+
+    let golden = sorted(
+        mining::mine_sequences_sharded(
+            &db,
+            &MiningConfig { threads: 1, shards: 1, ..Default::default() },
+        )
+        .unwrap()
+        .records,
+    );
+    assert!(!golden.is_empty());
+    let golden_bytes = record_bytes(&golden);
+    for shards in [0usize, 1, 3, 8, 64] {
+        let mut raw_golden: Option<Vec<u8>> = None;
+        for threads in [1usize, 2, 8] {
+            let cfg = MiningConfig { threads, shards, ..Default::default() };
+            let got = mining::mine_sequences_sharded(&db, &cfg).unwrap().records;
+            // Strong: raw order identical across thread counts.
+            let raw = record_bytes(&got);
+            match &raw_golden {
+                None => raw_golden = Some(raw),
+                Some(g) => assert_eq!(
+                    g, &raw,
+                    "shards={shards}: threads={threads} changed the RAW sharded output"
+                ),
+            }
+            // Weak: sorted output identical across shard layouts too.
+            assert_eq!(
+                record_bytes(&sorted(got)),
+                golden_bytes,
+                "threads={threads} shards={shards} changed the sharded multiset"
+            );
+        }
+    }
+}

@@ -68,9 +68,10 @@ fn lookup_translation_after_json_roundtrip() {
     assert_eq!(lookup.patient_name(r.pid), db.lookup.patient_name(r.pid));
 }
 
-/// All four mining paths (memory/file × batch/pipeline) agree exactly.
+/// All five mining paths (memory/sharded/file × batch/pipeline) agree
+/// exactly.
 #[test]
-fn four_mining_paths_agree() {
+fn five_mining_paths_agree() {
     let cohort = SyntheaConfig::small().generate();
     let db = NumericDbMart::encode(&cohort);
 
@@ -104,6 +105,15 @@ fn four_mining_paths_agree() {
             .records;
     partitioned.sort_unstable_by_key(key);
     assert_eq!(batch_mem, partitioned);
+
+    let mut sharded = mining::mine_sequences_sharded(
+        &db,
+        &MiningConfig { shards: 6, threads: 3, ..Default::default() },
+    )
+    .unwrap()
+    .records;
+    sharded.sort_unstable_by_key(key);
+    assert_eq!(batch_mem, sharded);
 }
 
 /// Baseline and tSPM+ produce identical screened sequence *sets* on
