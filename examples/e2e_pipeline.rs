@@ -138,7 +138,8 @@ fn main() {
         .mine(MiningConfig::default())
         .run()
         .expect("mine");
-    let pc = identify(&full.sequences.records, db.num_patients() as u32, &pc_cfg, artifacts.as_ref())
+    let full_set = full.sequences.materialize().expect("materialize");
+    let pc = identify(&full_set.records, db.num_patients() as u32, &pc_cfg, artifacts.as_ref())
         .expect("postcovid");
     let v = validate(&pc, &g.truth, &db.lookup);
     println!(

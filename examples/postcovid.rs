@@ -33,7 +33,8 @@ fn main() {
         .mine(MiningConfig::default())
         .run()
         .expect("mining");
-    let (db, mined) = (run.db, run.sequences);
+    let db = run.db;
+    let mined = run.sequences.materialize().expect("materialize");
     println!("mined {} sequences via the {} backend", mined.len(), run.report.backend);
 
     // 3. WHO definition over sequences + durations.

@@ -47,8 +47,11 @@ fn main() -> Result<(), TspmError> {
     );
     println!("\nper-stage report:\n{}", out.report.render());
 
-    // 5. A sequence is a reversible decimal hash (paper Fig. 2).
-    let records = &out.sequences.records;
+    // 5. A sequence is a reversible decimal hash (paper Fig. 2). The
+    // engine result is spill-aware (`SequenceOutput`) — materialize()
+    // hands back the in-memory set, a no-op on this small run.
+    let sequences = out.sequences.materialize()?;
+    let records = &sequences.records;
     let sample = records[records.len() / 2];
     let (start, end) = decode_seq(sample.seq);
     println!(

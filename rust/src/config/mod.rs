@@ -7,7 +7,7 @@
 //! from JSON and round-trip serialization, so every experiment is
 //! reproducible from a checked-in config file.
 
-use crate::engine::BackendChoice;
+use crate::engine::{BackendChoice, OutputChoice};
 use crate::json::Json;
 use crate::mining::{MiningConfig, MiningMode};
 use crate::sparsity::SparsityConfig;
@@ -56,6 +56,11 @@ pub struct RunConfig {
     /// [`crate::mining::DEFAULT_SHARDS`], a layout independent of the
     /// worker count).
     pub shards: usize,
+    /// Engine result residency: `auto`, `memory` or `spilled` (see
+    /// [`crate::engine::OutputChoice`]). `auto` spills the result to
+    /// disk when the post-screen forecast exceeds the memory budget on
+    /// an out-of-core backend.
+    pub output: String,
     /// Duration unit divisor in days (1 = days, 7 = weeks, 30 = months).
     pub duration_unit_days: u32,
     // --- sparsity ---
@@ -85,6 +90,7 @@ impl Default for RunConfig {
             mode: "memory".to_string(),
             backend: "auto".to_string(),
             shards: 0,
+            output: "auto".to_string(),
             duration_unit_days: 1,
             sparsity_screen: true,
             sparsity_min_patients: 50,
@@ -108,6 +114,7 @@ impl RunConfig {
             ("mode", Json::from(self.mode.clone())),
             ("backend", Json::from(self.backend.clone())),
             ("shards", Json::from(self.shards)),
+            ("output", Json::from(self.output.clone())),
             ("duration_unit_days", Json::from(self.duration_unit_days as u64)),
             ("sparsity_screen", Json::from(self.sparsity_screen)),
             ("sparsity_min_patients", Json::from(self.sparsity_min_patients as u64)),
@@ -123,7 +130,7 @@ impl RunConfig {
         let obj = j.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
         let known = [
             "patients", "avg_entries", "vocab_size", "seed", "threads",
-            "first_occurrence_only", "mode", "backend", "shards",
+            "first_occurrence_only", "mode", "backend", "shards", "output",
             "duration_unit_days", "sparsity_screen", "sparsity_min_patients",
             "max_elements_per_chunk", "artifacts_dir", "work_dir",
         ];
@@ -171,6 +178,10 @@ impl RunConfig {
             c.backend =
                 v.as_str().ok_or_else(|| ConfigError("backend must be a string".into()))?.to_string();
         }
+        if let Some(v) = j.get("output") {
+            c.output =
+                v.as_str().ok_or_else(|| ConfigError("output must be a string".into()))?.to_string();
+        }
         if let Some(v) = j.get("artifacts_dir") {
             c.artifacts_dir =
                 v.as_str().ok_or_else(|| ConfigError("artifacts_dir must be a string".into()))?.to_string();
@@ -203,6 +214,9 @@ impl RunConfig {
             return Err(ConfigError(format!("mode must be 'memory' or 'file', got {:?}", self.mode)));
         }
         if let Err(e) = self.backend.parse::<BackendChoice>() {
+            return Err(ConfigError(e));
+        }
+        if let Err(e) = self.output.parse::<OutputChoice>() {
             return Err(ConfigError(e));
         }
         if self.patients == 0 {
@@ -260,13 +274,22 @@ impl RunConfig {
 
     /// The engine backend this config requests. `auto` stays automatic
     /// unless the legacy `mode = "file"` pins file-backed execution.
-    pub fn backend_choice(&self) -> BackendChoice {
-        match self.backend.parse::<BackendChoice>() {
-            Ok(BackendChoice::Auto) if self.mode == "file" => BackendChoice::FileBacked,
-            Ok(choice) => choice,
-            // validate() rejects unknown names before execution.
-            Err(_) => BackendChoice::Auto,
-        }
+    ///
+    /// Unparsable names are an error — they used to map silently to
+    /// `Auto`, so callers that skipped [`RunConfig::validate`] ran the
+    /// wrong backend without any diagnostic.
+    pub fn backend_choice(&self) -> Result<BackendChoice, ConfigError> {
+        let choice = self.backend.parse::<BackendChoice>().map_err(ConfigError)?;
+        Ok(match choice {
+            BackendChoice::Auto if self.mode == "file" => BackendChoice::FileBacked,
+            other => other,
+        })
+    }
+
+    /// The engine result residency this config requests; unparsable
+    /// names are an error, mirroring [`RunConfig::backend_choice`].
+    pub fn output_choice(&self) -> Result<OutputChoice, ConfigError> {
+        self.output.parse::<OutputChoice>().map_err(ConfigError)
     }
 }
 
@@ -313,17 +336,42 @@ mod tests {
     #[test]
     fn backend_choice_mapping() {
         let mut c = RunConfig::default();
-        assert_eq!(c.backend_choice(), BackendChoice::Auto);
+        assert_eq!(c.backend_choice().unwrap(), BackendChoice::Auto);
         c.backend = "streaming".into();
-        assert_eq!(c.backend_choice(), BackendChoice::Streaming);
+        assert_eq!(c.backend_choice().unwrap(), BackendChoice::Streaming);
         c.backend = "memory".into();
-        assert_eq!(c.backend_choice(), BackendChoice::InMemory);
+        assert_eq!(c.backend_choice().unwrap(), BackendChoice::InMemory);
         c.backend = "sharded".into();
-        assert_eq!(c.backend_choice(), BackendChoice::Sharded);
+        assert_eq!(c.backend_choice().unwrap(), BackendChoice::Sharded);
         // Legacy file mode pins the file-backed backend under auto.
         c.backend = "auto".into();
         c.mode = "file".into();
-        assert_eq!(c.backend_choice(), BackendChoice::FileBacked);
+        assert_eq!(c.backend_choice().unwrap(), BackendChoice::FileBacked);
+    }
+
+    #[test]
+    fn unparsable_backend_is_an_error_not_auto() {
+        // Regression: callers that skip validate() used to fall back to
+        // Auto silently and run the wrong backend.
+        let mut c = RunConfig::default();
+        c.backend = "quantum".into();
+        let err = c.backend_choice().unwrap_err();
+        assert!(err.to_string().contains("quantum"), "got {err}");
+    }
+
+    #[test]
+    fn output_choice_parses_and_round_trips() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.output_choice().unwrap(), OutputChoice::Auto);
+        c.output = "spilled".into();
+        assert_eq!(c.output_choice().unwrap(), OutputChoice::Spilled);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        c.output = "ram".into();
+        assert!(c.output_choice().is_err());
+        assert!(c.validate().is_err());
+        let j = Json::parse(r#"{"output": "ram"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

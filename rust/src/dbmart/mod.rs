@@ -165,6 +165,11 @@ pub struct LookupTables {
     pub phenx: Vec<String>,
     /// Optional phenX descriptions aligned with `phenx`.
     pub descriptions: Vec<Option<String>>,
+    /// Reverse index `phenX name → dense id`, built during interning so
+    /// [`LookupTables::phenx_id`] is O(1). Resolving a WHO-style code
+    /// list used to do one O(vocab) scan per code — quadratic on large
+    /// vocabularies.
+    pub phenx_index: HashMap<String, u32>,
 }
 
 impl LookupTables {
@@ -180,9 +185,9 @@ impl LookupTables {
         self.descriptions.get(id as usize).and_then(|d| d.as_deref())
     }
 
-    /// Reverse lookup (linear; only used in tests/examples).
+    /// Reverse lookup via the interning-time hash index (O(1)).
     pub fn phenx_id(&self, name: &str) -> Option<u32> {
-        self.phenx.iter().position(|p| p == name).map(|i| i as u32)
+        self.phenx_index.get(name).copied()
     }
 
     /// Serialize to JSON (the R package writes lookup tables next to the
@@ -237,7 +242,9 @@ impl LookupTables {
                 .collect::<Option<Vec<_>>>()?,
             None => vec![None; phenx.len()],
         };
-        Some(LookupTables { patients, phenx, descriptions })
+        let phenx_index =
+            phenx.iter().enumerate().map(|(i, p)| (p.clone(), i as u32)).collect();
+        Some(LookupTables { patients, phenx, descriptions, phenx_index })
     }
 }
 
@@ -268,22 +275,33 @@ impl NumericDbMart {
     /// and patient ID"). Descriptions, when present, are captured into the
     /// lookup table and dropped from the working set.
     pub fn encode(raw: &DbMart) -> NumericDbMart {
-        Self::try_encode(raw).expect("phenX vocabulary exceeds 7-digit limit")
+        Self::try_encode(raw).expect("dbmart fails encoding validation")
     }
 
     /// Like [`NumericDbMart::encode`] but surfaces the vocabulary-overflow
-    /// error instead of panicking.
+    /// and date-validation errors instead of panicking.
     pub fn try_encode(raw: &DbMart) -> Result<NumericDbMart, EncodeError> {
         let mut patient_ids: HashMap<&str, u32> = HashMap::new();
-        let mut phenx_ids: HashMap<&str, u32> = HashMap::new();
         let mut lookup = LookupTables::default();
         let mut entries = Vec::with_capacity(raw.entries.len());
         for e in &raw.entries {
+            // Date-range validation at ingestion: i32::MIN is the classic
+            // missing-value sentinel in exported clinical tables, and any
+            // row carrying it would mine garbage durations. Reject it
+            // here with a precise row reference instead.
+            if e.date == i32::MIN {
+                return Err(EncodeError(format!(
+                    "patient {:?} has date i32::MIN ({}) — a missing-value sentinel, \
+                     not a real date; clean or re-date the row before encoding",
+                    e.patient_id,
+                    i32::MIN
+                )));
+            }
             let pid = *patient_ids.entry(&e.patient_id).or_insert_with(|| {
                 lookup.patients.push(e.patient_id.clone());
                 (lookup.patients.len() - 1) as u32
             });
-            let xid = match phenx_ids.get(e.phenx.as_str()) {
+            let xid = match lookup.phenx_index.get(e.phenx.as_str()) {
                 Some(&x) => {
                     // Backfill a description if an earlier row lacked one.
                     if lookup.descriptions[x as usize].is_none() {
@@ -300,7 +318,7 @@ impl NumericDbMart {
                             "more than {MAX_PHENX} distinct phenX codes; the 7-digit sequence hash cannot represent this vocabulary"
                         )));
                     }
-                    phenx_ids.insert(&e.phenx, x);
+                    lookup.phenx_index.insert(e.phenx.clone(), x);
                     lookup.phenx.push(e.phenx.clone());
                     lookup.descriptions.push(e.description.clone());
                     x
@@ -499,6 +517,33 @@ mod tests {
         let back = LookupTables::from_json(&j).unwrap();
         assert_eq!(back.patients, n.lookup.patients);
         assert_eq!(back.phenx, n.lookup.phenx);
+        // The reverse index is rebuilt on deserialization, not persisted.
+        assert_eq!(back.phenx_id("x"), Some(0));
+        assert_eq!(back.phenx_id("y"), Some(1));
+        assert_eq!(back.phenx_id("z"), None);
+    }
+
+    #[test]
+    fn phenx_id_uses_the_interning_index() {
+        let raw = DbMart::new(
+            (0..500).map(|i| entry("p", i, &format!("code{i}"))).collect(),
+        );
+        let n = NumericDbMart::encode(&raw);
+        assert_eq!(n.lookup.phenx_index.len(), 500);
+        for i in [0u32, 17, 499] {
+            assert_eq!(n.lookup.phenx_id(&format!("code{i}")), Some(i));
+        }
+        assert_eq!(n.lookup.phenx_id("nope"), None);
+    }
+
+    #[test]
+    fn sentinel_date_rejected_at_ingestion() {
+        let raw = DbMart::new(vec![entry("p", i32::MIN, "x")]);
+        let err = NumericDbMart::try_encode(&raw).unwrap_err();
+        assert!(err.to_string().contains("sentinel"), "got {err}");
+        // The neighbouring value is a real (if extreme) date and passes.
+        let ok = DbMart::new(vec![entry("p", i32::MIN + 1, "x")]);
+        assert!(NumericDbMart::try_encode(&ok).is_ok());
     }
 
     #[test]

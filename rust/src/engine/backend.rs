@@ -26,13 +26,17 @@
 //!   work-stealing shards; intermediate memory is
 //!   O(queue_depth × chunk output).
 //!
-//! Note that the engine contract returns an in-memory
-//! [`SequenceSet`], so every backend ultimately materialises the final
-//! result; the backends differ in their *intermediate* footprint (the
-//! paper's "1.33 GB instead of 43 GB" refers to mining-time residency).
-//! For outputs too large to hold at all, use the expert layer directly:
-//! [`crate::mining::mine_sequences_to_files`] plus streaming consumption
-//! via [`crate::seqstore::SeqFileSet::for_each`].
+//! The engine contract is **spill-aware**: a run's sequences come back
+//! as a [`crate::engine::SequenceOutput`] — either one in-memory
+//! [`SequenceSet`] or a durable on-disk [`SeqFileSet`] of spill files
+//! ([`OutputKind::Spilled`]), with
+//! [`materialize()`](crate::engine::SequenceOutput::materialize) as the
+//! explicit escape hatch back to memory. FileBacked and Streaming runs
+//! therefore never need to hold the full record multiset resident: the
+//! mine stage leaves it on disk and the screen stage runs out of core
+//! ([`crate::sparsity::screen_spilled`]). The paper's "1.33 GB instead
+//! of 43 GB" figure thus extends from the mining phase to the whole
+//! end-to-end run.
 //!
 //! Auto-selection uses [`crate::partition`]'s exact per-patient output
 //! prediction (`n·(n−1)/2` after the optional first-occurrence filter)
@@ -41,7 +45,12 @@
 //! scheduling buys nothing on one thread); it doesn't fit, but every
 //! partition chunk can → `Streaming`; even a single patient overflows a
 //! chunk (no partition can help) → `FileBacked`, whose mining phase
-//! keeps only O(write-buffer × threads) resident.
+//! keeps only O(write-buffer × threads) resident. Output residency is
+//! resolved separately ([`resolve_output`]): with [`OutputChoice::Auto`]
+//! the run spills exactly when the forecast post-screen footprint (the
+//! mine forecast is its upper bound — screening only removes records)
+//! exceeds the budget on a backend that already produces its result out
+//! of core.
 
 use super::error::TspmError;
 use crate::dbmart::NumericDbMart;
@@ -49,6 +58,8 @@ use crate::metrics::MemTracker;
 use crate::mining::{self, MiningConfig, MiningMode, SeqRecord, SequenceSet};
 use crate::partition;
 use crate::pipeline::{self, PipelineConfig};
+use crate::seqstore::SeqFileSet;
+use std::path::Path;
 
 /// Hard per-chunk element cap mirroring the R ecosystem's 2³¹−1 vector
 /// limit that motivated the paper's adaptive partitioning.
@@ -107,6 +118,52 @@ impl std::str::FromStr for BackendChoice {
             other => Err(format!(
                 "backend must be auto|memory|sharded|file|streaming, got {other:?}"
             )),
+        }
+    }
+}
+
+/// Result residency requested at plan-build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OutputChoice {
+    /// Decide at run time from the post-screen footprint forecast and
+    /// the memory budget (the default; see [`resolve_output`]).
+    #[default]
+    Auto,
+    /// Always materialise one in-memory [`SequenceSet`].
+    InMemory,
+    /// Always leave the result as on-disk spill files
+    /// ([`SeqFileSet`]); only valid for mine → screen plans.
+    Spilled,
+}
+
+/// Result residency a run actually produced (the resolution of
+/// [`OutputChoice`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputKind {
+    InMemory,
+    Spilled,
+}
+
+impl std::fmt::Display for OutputKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OutputKind::InMemory => "in-memory",
+            OutputKind::Spilled => "spilled",
+        })
+    }
+}
+
+/// One canonical name→choice mapping shared by the CLI and
+/// [`crate::config::RunConfig::output_choice`].
+impl std::str::FromStr for OutputChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(OutputChoice::Auto),
+            "memory" => Ok(OutputChoice::InMemory),
+            "spilled" => Ok(OutputChoice::Spilled),
+            other => Err(format!("output must be auto|memory|spilled, got {other:?}")),
         }
     }
 }
@@ -203,6 +260,95 @@ pub fn resolve(
     }
 }
 
+/// Resolve an [`OutputChoice`] against the resolved backend, the mining
+/// forecast, and the memory budget — the one residency policy, shared by
+/// [`crate::engine::Engine::run_with`] and external schedulers.
+///
+/// The sparsity screen only *removes* records, so the mine forecast is
+/// the upper bound on the post-screen footprint. `Auto` spills exactly
+/// when that bound exceeds the budget *and* the backend already keeps
+/// its result out of core (FileBacked, Streaming) — materialising there
+/// would be the contract bug this policy exists to prevent. In-memory
+/// backends already committed to resident output, so `Auto` never
+/// spills them.
+pub fn resolve_output(
+    choice: OutputChoice,
+    kind: BackendKind,
+    f: &MiningForecast,
+    budget_bytes: u64,
+) -> OutputKind {
+    match choice {
+        OutputChoice::InMemory => OutputKind::InMemory,
+        OutputChoice::Spilled => OutputKind::Spilled,
+        OutputChoice::Auto => {
+            if f.total_bytes > budget_bytes
+                && matches!(kind, BackendKind::FileBacked | BackendKind::Streaming)
+            {
+                OutputKind::Spilled
+            } else {
+                OutputKind::InMemory
+            }
+        }
+    }
+}
+
+/// Execute the mine stage with a **spilled** result: the full record
+/// multiset lands in spill files under `mine_dir` and is never
+/// materialised. FileBacked writes its per-worker spill files straight
+/// there; Streaming redirects the pipeline collector to disk; the
+/// in-memory backends mine normally and then spill (they already
+/// committed to resident intermediates, but the *result* still honours
+/// the on-disk contract so every backend stays interchangeable).
+pub fn execute_spilled(
+    kind: BackendKind,
+    db: &NumericDbMart,
+    cfg: &MiningConfig,
+    chunk_cap: u64,
+    mine_dir: &Path,
+    tracker: &MemTracker,
+) -> Result<SeqFileSet, TspmError> {
+    match kind {
+        BackendKind::FileBacked => {
+            let cfg = MiningConfig {
+                mode: MiningMode::FileBased,
+                work_dir: mine_dir.to_path_buf(),
+                ..cfg.clone()
+            };
+            Ok(mining::mine_sequences_to_files_tracked(db, &cfg, Some(tracker))?)
+        }
+        BackendKind::Streaming => {
+            let pipe_cfg = PipelineConfig {
+                mining: MiningConfig { mode: MiningMode::InMemory, ..cfg.clone() },
+                chunk_cap: chunk_cap.max(1),
+                screen: None,
+                shards: cfg.worker_threads(),
+                spill_dir: Some(mine_dir.to_path_buf()),
+                ..Default::default()
+            };
+            match pipeline::run(db, &pipe_cfg)?.sequences {
+                crate::engine::SequenceOutput::Spilled(files) => Ok(files),
+                crate::engine::SequenceOutput::InMemory(_) => {
+                    unreachable!("pipeline honours spill_dir")
+                }
+            }
+        }
+        BackendKind::InMemory | BackendKind::Sharded => {
+            let set = execute(kind, db, cfg, chunk_cap, tracker)?;
+            std::fs::create_dir_all(mine_dir)?;
+            let path = mine_dir.join("mined_0000.tspm");
+            crate::seqstore::write_file(&path, &set.records)?;
+            let files = SeqFileSet {
+                files: vec![path],
+                total_records: set.records.len() as u64,
+                num_patients: set.num_patients,
+                num_phenx: set.num_phenx,
+            };
+            tracker.sub(set.byte_size());
+            Ok(files)
+        }
+    }
+}
+
 /// Execute the mine stage on the chosen backend. Screening is *not*
 /// fused here — the engine applies it as its own stage so all backends
 /// share one screening code path (and one timing entry).
@@ -251,9 +397,15 @@ pub fn execute(
                 shards: cfg.worker_threads(),
                 ..Default::default()
             };
-            let result = pipeline::run(db, &pipe_cfg)?;
-            tracker.add(result.sequences.byte_size());
-            Ok(result.sequences)
+            match pipeline::run(db, &pipe_cfg)?.sequences {
+                crate::engine::SequenceOutput::InMemory(set) => {
+                    tracker.add(set.byte_size());
+                    Ok(set)
+                }
+                crate::engine::SequenceOutput::Spilled(_) => {
+                    unreachable!("no spill_dir configured")
+                }
+            }
         }
     }
 }
@@ -384,6 +536,63 @@ mod tests {
             total_bytes: 16,
         };
         assert_eq!(auto_select(&tiny, 0, 1), BackendKind::InMemory);
+    }
+
+    #[test]
+    fn resolve_output_policy() {
+        let f = MiningForecast {
+            total_sequences: 1000,
+            max_patient_sequences: 100,
+            total_bytes: 16_000,
+        };
+        // Explicit choices always win.
+        for kind in [
+            BackendKind::InMemory,
+            BackendKind::Sharded,
+            BackendKind::FileBacked,
+            BackendKind::Streaming,
+        ] {
+            assert_eq!(
+                resolve_output(OutputChoice::InMemory, kind, &f, 0),
+                OutputKind::InMemory
+            );
+            assert_eq!(
+                resolve_output(OutputChoice::Spilled, kind, &f, u64::MAX),
+                OutputKind::Spilled
+            );
+        }
+        // Auto: spill only when the forecast exceeds the budget on an
+        // out-of-core backend.
+        assert_eq!(
+            resolve_output(OutputChoice::Auto, BackendKind::FileBacked, &f, f.total_bytes),
+            OutputKind::InMemory
+        );
+        assert_eq!(
+            resolve_output(OutputChoice::Auto, BackendKind::FileBacked, &f, f.total_bytes - 1),
+            OutputKind::Spilled
+        );
+        assert_eq!(
+            resolve_output(OutputChoice::Auto, BackendKind::Streaming, &f, 16),
+            OutputKind::Spilled
+        );
+        // In-memory backends already committed to resident output.
+        assert_eq!(
+            resolve_output(OutputChoice::Auto, BackendKind::InMemory, &f, 16),
+            OutputKind::InMemory
+        );
+        assert_eq!(
+            resolve_output(OutputChoice::Auto, BackendKind::Sharded, &f, 16),
+            OutputKind::InMemory
+        );
+    }
+
+    #[test]
+    fn output_names_parse_round() {
+        assert_eq!("auto".parse::<OutputChoice>().unwrap(), OutputChoice::Auto);
+        assert_eq!("memory".parse::<OutputChoice>().unwrap(), OutputChoice::InMemory);
+        assert_eq!("spilled".parse::<OutputChoice>().unwrap(), OutputChoice::Spilled);
+        assert!("ram".parse::<OutputChoice>().unwrap_err().contains("ram"));
+        assert_eq!(OutputKind::Spilled.to_string(), "spilled");
     }
 
     #[test]

@@ -30,6 +30,12 @@
 //! # Ok::<(), tspm_plus::engine::TspmError>(())
 //! ```
 //!
+//! The engine result is **spill-aware**: [`RunOutput::sequences`] is a
+//! [`SequenceOutput`] — in-memory for ordinary runs, a durable set of
+//! on-disk spill files when the (post-screen) result may not fit the
+//! memory budget — with [`SequenceOutput::materialize`] as the explicit
+//! escape hatch. See [`backend`] for the residency policy.
+//!
 //! The original free functions remain available as the "expert layer"
 //! (see the crate docs); the façade is the supported composition seam —
 //! future scaling work (async backends, caching, sharded serving) plugs
@@ -40,8 +46,9 @@ pub mod error;
 pub mod plan;
 
 pub use backend::{
-    auto_select, forecast, resolve, BackendChoice, BackendKind, MiningForecast,
-    DEFAULT_MEMORY_BUDGET_BYTES, HARD_ELEMENT_CAP,
+    auto_select, execute_spilled, forecast, resolve, resolve_output, BackendChoice,
+    BackendKind, MiningForecast, OutputChoice, OutputKind, DEFAULT_MEMORY_BUDGET_BYTES,
+    HARD_ELEMENT_CAP,
 };
 pub use error::TspmError;
 pub use plan::{Plan, Stage};
@@ -50,11 +57,13 @@ use crate::config::RunConfig;
 use crate::dbmart::{DbMart, NumericDbMart};
 use crate::matrix::SeqMatrix;
 use crate::metrics::{fmt_bytes, fmt_duration, MemTracker, PhaseTimer};
-use crate::mining::{MiningConfig, SequenceSet};
+use crate::mining::{MiningConfig, SeqRecord, SequenceSet};
 use crate::msmr::{self, MsmrConfig, Selection};
 use crate::partition;
 use crate::runtime::ArtifactSet;
+use crate::seqstore::SeqFileSet;
 use crate::sparsity::{self, ScreenStats, SparsityConfig};
+use std::path::PathBuf;
 use std::time::Duration;
 
 /// Timing/size record for one executed stage.
@@ -70,12 +79,15 @@ pub struct StageReport {
     pub bytes_out: u64,
 }
 
-/// What a run did: backend, per-stage breakdown, peak logical memory.
+/// What a run did: backend, result residency, per-stage breakdown, peak
+/// logical memory.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     /// The backend the mine stage actually executed on.
     pub backend: BackendKind,
-    /// Output-size forecast that drove backend selection.
+    /// Where the result landed (the resolution of [`OutputChoice`]).
+    pub output: OutputKind,
+    /// Output-size forecast that drove backend and residency selection.
     pub forecast: MiningForecast,
     pub stages: Vec<StageReport>,
     /// High-water mark of the engine's logical allocations
@@ -92,8 +104,9 @@ impl RunReport {
     /// Multi-line human-readable breakdown.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "backend: {}  (forecast {} sequences, {})\n",
+            "backend: {}  output: {}  (forecast {} sequences, {})\n",
             self.backend,
+            self.output,
             self.forecast.total_sequences,
             fmt_bytes(self.forecast.total_bytes)
         );
@@ -120,12 +133,128 @@ impl RunReport {
     }
 }
 
+/// The spill-aware sequence result of a run: either one in-memory
+/// [`SequenceSet`] or a durable on-disk [`SeqFileSet`] (the engine's
+/// contract for outputs too large to materialise). Both variants answer
+/// the size/shape questions; [`SequenceOutput::materialize`] is the
+/// explicit escape hatch back to memory when the caller knows the set
+/// fits. Spilled files are *kept* on disk — they are the durable result
+/// a caching or serving layer can consume — so callers that want them
+/// gone must call [`SeqFileSet::remove`] themselves.
+#[derive(Clone, Debug)]
+pub enum SequenceOutput {
+    /// The records are resident ([`OutputKind::InMemory`]).
+    InMemory(SequenceSet),
+    /// The records live in spill files ([`OutputKind::Spilled`]),
+    /// sorted by `(seq, pid, duration)` when a screen stage produced
+    /// them.
+    Spilled(SeqFileSet),
+}
+
+impl SequenceOutput {
+    /// The residency this output has.
+    pub fn kind(&self) -> OutputKind {
+        match self {
+            SequenceOutput::InMemory(_) => OutputKind::InMemory,
+            SequenceOutput::Spilled(_) => OutputKind::Spilled,
+        }
+    }
+
+    /// Number of records (resident or on disk).
+    pub fn len(&self) -> usize {
+        match self {
+            SequenceOutput::InMemory(set) => set.len(),
+            SequenceOutput::Spilled(files) => files.total_records as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical payload size (records × 16 bytes), wherever they live.
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            SequenceOutput::InMemory(set) => set.byte_size(),
+            SequenceOutput::Spilled(files) => files.logical_bytes(),
+        }
+    }
+
+    /// Bytes actually resident in memory: the full payload when
+    /// in-memory, zero when spilled.
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            SequenceOutput::InMemory(set) => set.byte_size(),
+            SequenceOutput::Spilled(_) => 0,
+        }
+    }
+
+    /// Number of patients in the source dbmart (for matrix shapes).
+    pub fn num_patients(&self) -> u32 {
+        match self {
+            SequenceOutput::InMemory(set) => set.num_patients,
+            SequenceOutput::Spilled(files) => files.num_patients,
+        }
+    }
+
+    /// Number of distinct phenX codes in the source dbmart.
+    pub fn num_phenx(&self) -> u32 {
+        match self {
+            SequenceOutput::InMemory(set) => set.num_phenx,
+            SequenceOutput::Spilled(files) => files.num_phenx,
+        }
+    }
+
+    /// The resident set, when there is one.
+    pub fn as_in_memory(&self) -> Option<&SequenceSet> {
+        match self {
+            SequenceOutput::InMemory(set) => Some(set),
+            SequenceOutput::Spilled(_) => None,
+        }
+    }
+
+    fn as_in_memory_mut(&mut self) -> Option<&mut SequenceSet> {
+        match self {
+            SequenceOutput::InMemory(set) => Some(set),
+            SequenceOutput::Spilled(_) => None,
+        }
+    }
+
+    /// The spill files, when the result is on disk.
+    pub fn as_spilled(&self) -> Option<&SeqFileSet> {
+        match self {
+            SequenceOutput::Spilled(files) => Some(files),
+            SequenceOutput::InMemory(_) => None,
+        }
+    }
+
+    /// The explicit escape hatch: load everything into one
+    /// [`SequenceSet`]. A no-op for in-memory output; for spilled output
+    /// this reads every spill file (the files stay on disk). Only call
+    /// this when the caller knows the set fits — it is exactly the
+    /// full materialization the spilled contract exists to avoid.
+    pub fn materialize(self) -> Result<SequenceSet, TspmError> {
+        match self {
+            SequenceOutput::InMemory(set) => Ok(set),
+            SequenceOutput::Spilled(files) => {
+                let records = files.read_all()?;
+                Ok(SequenceSet {
+                    records,
+                    num_patients: files.num_patients,
+                    num_phenx: files.num_phenx,
+                })
+            }
+        }
+    }
+}
+
 /// Everything a run produced. Stages that were not in the plan leave
 /// their slot `None`. The encoded dbmart travels back out so callers can
 /// translate numeric ids through its lookup tables.
 pub struct RunOutput {
-    /// The (possibly screened) mined sequences.
-    pub sequences: SequenceSet,
+    /// The (possibly screened) mined sequences — in memory or spilled
+    /// ([`SequenceOutput`]).
+    pub sequences: SequenceOutput,
     /// The encoded dbmart the run consumed (lookup tables included).
     pub db: NumericDbMart,
     pub screen_stats: Option<ScreenStats>,
@@ -143,6 +272,8 @@ pub struct Engine {
     stages: Vec<Stage>,
     backend: BackendChoice,
     memory_budget_bytes: Option<u64>,
+    output: OutputChoice,
+    out_dir: Option<PathBuf>,
     labels: Option<Vec<f32>>,
 }
 
@@ -154,6 +285,8 @@ impl Engine {
             stages: Vec::new(),
             backend: BackendChoice::Auto,
             memory_budget_bytes: None,
+            output: OutputChoice::Auto,
+            out_dir: None,
             labels: None,
         }
     }
@@ -171,11 +304,15 @@ impl Engine {
     /// `max_elements_per_chunk`.
     pub fn from_config(db: NumericDbMart, cfg: &RunConfig) -> Result<Engine, TspmError> {
         cfg.validate()?;
+        // No explicit out_dir: run_with already derives
+        // `<work_dir>/engine_out` from the mining config's work_dir,
+        // which from_config sets from cfg.work_dir.
         let mut engine = Engine::from_dbmart(db)
-            .backend(cfg.backend_choice())
+            .backend(cfg.backend_choice()?)
+            .output(cfg.output_choice()?)
             .memory_budget(
                 cfg.max_elements_per_chunk
-                    .saturating_mul(std::mem::size_of::<crate::mining::SeqRecord>() as u64),
+                    .saturating_mul(std::mem::size_of::<SeqRecord>() as u64),
             )
             .mine(cfg.mining_config());
         if let Some(sc) = cfg.sparsity_config() {
@@ -250,6 +387,22 @@ impl Engine {
         self
     }
 
+    /// Pin the result residency (default: [`OutputChoice::Auto`] — spill
+    /// when the post-screen forecast exceeds the budget on an
+    /// out-of-core backend). [`OutputChoice::Spilled`] is only valid for
+    /// mine → screen plans.
+    pub fn output(mut self, choice: OutputChoice) -> Engine {
+        self.output = choice;
+        self
+    }
+
+    /// Directory for spilled result files (default: `engine_out` under
+    /// the mining `work_dir`).
+    pub fn out_dir(mut self, dir: PathBuf) -> Engine {
+        self.out_dir = Some(dir);
+        self
+    }
+
     // --- plan / run --------------------------------------------------------
 
     /// Assemble and validate the plan without executing it.
@@ -258,6 +411,8 @@ impl Engine {
             stages: self.stages.clone(),
             backend: self.backend,
             memory_budget_bytes: self.memory_budget_bytes,
+            output: self.output,
+            out_dir: self.out_dir.clone(),
         };
         plan.validate()?;
         if plan.wants_msmr() {
@@ -308,52 +463,111 @@ impl Engine {
         let threads = mining_cfg.worker_threads();
         let kind = backend::resolve(plan.backend, &fc, budget, threads);
         let chunk_cap = partition::cap_from_memory(budget, HARD_ELEMENT_CAP);
+        // Residency: chains with in-memory consumers (duration screen,
+        // matrix, MSMR) always materialise — Plan::validate already
+        // rejected an explicit Spilled there, so only Auto lands here.
+        let out_kind = if plan.spill_capable() {
+            backend::resolve_output(plan.output, kind, &fc, budget)
+        } else {
+            OutputKind::InMemory
+        };
+        let out_dir = plan
+            .out_dir
+            .clone()
+            .unwrap_or_else(|| mining_cfg.work_dir.join("engine_out"));
+        let mine_dir = out_dir.join("mine");
 
         let mut timer = PhaseTimer::new();
         let tracker = MemTracker::new();
         let mut stages: Vec<StageReport> = Vec::new();
 
-        // 1. Mine, on the resolved backend.
-        let mut sequences =
-            timer.run("mine", || backend::execute(kind, &db, &mining_cfg, chunk_cap, &tracker))?;
+        // 1. Mine, on the resolved backend, into the resolved residency.
+        let mut output = timer.run("mine", || -> Result<SequenceOutput, TspmError> {
+            match out_kind {
+                OutputKind::InMemory => Ok(SequenceOutput::InMemory(backend::execute(
+                    kind,
+                    &db,
+                    &mining_cfg,
+                    chunk_cap,
+                    &tracker,
+                )?)),
+                OutputKind::Spilled => Ok(SequenceOutput::Spilled(backend::execute_spilled(
+                    kind,
+                    &db,
+                    &mining_cfg,
+                    chunk_cap,
+                    &mine_dir,
+                    &tracker,
+                )?)),
+            }
+        })?;
         stages.push(StageReport {
             stage: "mine".into(),
             elapsed: timer.elapsed("mine").unwrap_or_default(),
-            records_out: sequences.len() as u64,
-            bytes_out: sequences.byte_size(),
+            records_out: output.len() as u64,
+            bytes_out: output.byte_size(),
         });
 
-        // 2. Sparsity screen (shared code path for every backend).
+        // 2. Sparsity screen — one stage, two residencies: the in-place
+        // sort+compact for resident records, the external merge
+        // (`sparsity::screen_spilled`) over spill files.
         let mut screen_stats = None;
         if let Some(sc) = plan.screen_config() {
-            let stats = timer.run("screen", || sparsity::screen(&mut sequences.records, &sc));
+            let stats = timer.run("screen", || -> Result<ScreenStats, TspmError> {
+                match &mut output {
+                    SequenceOutput::InMemory(set) => Ok(sparsity::screen(&mut set.records, &sc)),
+                    SequenceOutput::Spilled(files) => {
+                        let spill_cfg = sparsity::SpillScreenConfig {
+                            min_patients: sc.min_patients,
+                            threads: sc.threads,
+                            buffer_bytes: screen_buffer_bytes(budget),
+                            out_dir: out_dir.clone(),
+                        };
+                        let (survivors, stats) =
+                            sparsity::screen_spilled(files, &spill_cfg, Some(&tracker))?;
+                        // The mined intermediates are consumed; the
+                        // survivor file is the durable result.
+                        let _ = files.remove();
+                        let _ = std::fs::remove_dir(&mine_dir);
+                        *files = survivors;
+                        Ok(stats)
+                    }
+                }
+            })?;
             stages.push(StageReport {
                 stage: "screen".into(),
                 elapsed: timer.elapsed("screen").unwrap_or_default(),
                 records_out: stats.records_after,
-                bytes_out: sequences.byte_size(),
+                bytes_out: output.byte_size(),
             });
             screen_stats = Some(stats);
         }
 
-        // 3. Duration-diversity screen.
+        // 3. Duration-diversity screen (in-memory chains only).
         let mut duration_screen_stats = None;
         if let Some((bucket, min_distinct)) = plan.duration_screen() {
+            let set = output
+                .as_in_memory_mut()
+                .expect("validated: duration_screen implies in-memory output");
             let stats = timer.run("duration_screen", || {
-                sparsity::screen_by_duration(&mut sequences.records, bucket, min_distinct)
+                sparsity::screen_by_duration(&mut set.records, bucket, min_distinct)
             });
+            let bytes = set.byte_size();
             stages.push(StageReport {
                 stage: "duration_screen".into(),
                 elapsed: timer.elapsed("duration_screen").unwrap_or_default(),
                 records_out: stats.records_after,
-                bytes_out: sequences.byte_size(),
+                bytes_out: bytes,
             });
             duration_screen_stats = Some(stats);
         }
 
-        // 4. Patient×sequence matrix.
+        // 4. Patient×sequence matrix (in-memory chains only).
         let mut matrix = None;
         if let Some(bucket) = plan.matrix_stage() {
+            let sequences = output
+                .as_in_memory()
+                .expect("validated: matrix implies in-memory output");
             let m = timer.run("matrix", || match bucket {
                 Some(b) => SeqMatrix::build_with_durations(
                     &sequences.records,
@@ -393,7 +607,7 @@ impl Engine {
         }
 
         Ok(RunOutput {
-            sequences,
+            sequences: output,
             db,
             screen_stats,
             duration_screen_stats,
@@ -401,12 +615,21 @@ impl Engine {
             selection,
             report: RunReport {
                 backend: kind,
+                output: out_kind,
                 forecast: fc,
                 stages,
                 peak_logical_bytes: tracker.peak(),
             },
         })
     }
+}
+
+/// Buffer bound handed to [`sparsity::screen_spilled`]: a fraction of
+/// the run's memory budget (several buffers of this size coexist during
+/// the merge), floored so degenerate budgets still make progress and
+/// capped so huge budgets don't allocate absurd buffers.
+fn screen_buffer_bytes(budget: u64) -> u64 {
+    (budget / 8).clamp(1 << 16, 1 << 28)
 }
 
 #[cfg(test)]
@@ -467,43 +690,113 @@ mod tests {
     }
 
     /// The golden test: all four backends produce the identical screened
-    /// sequence set on the small Synthea cohort.
+    /// sequence set on the small Synthea cohort — whether the result
+    /// stayed resident or spilled (the tiny budget auto-spills the
+    /// file-backed and streaming runs; `materialize()` must reproduce
+    /// the in-memory bytes exactly).
     #[test]
     fn golden_backends_agree_on_screened_sets() {
         let db = small_db();
         let sc = SparsityConfig { min_patients: 5, threads: 2 };
-        let work_dir = std::env::temp_dir().join("tspm_engine_golden");
-        let _ = std::fs::remove_dir_all(&work_dir);
-        let mine_cfg = MiningConfig { work_dir, ..Default::default() };
+        let base_dir = std::env::temp_dir().join("tspm_engine_golden");
+        let _ = std::fs::remove_dir_all(&base_dir);
 
         let mut outputs = Vec::new();
-        for choice in [
+        for (i, choice) in [
             BackendChoice::InMemory,
             BackendChoice::Sharded,
             BackendChoice::FileBacked,
             BackendChoice::Streaming,
-        ] {
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mine_cfg =
+                MiningConfig { work_dir: base_dir.join(format!("b{i}")), ..Default::default() };
             let out = Engine::from_dbmart(db.clone())
-                .mine(mine_cfg.clone())
+                .mine(mine_cfg)
                 .screen(sc)
                 .backend(choice)
-                // Small budget → the streaming run really partitions.
+                // Small budget → the streaming run really partitions and
+                // the out-of-core backends auto-spill their results.
                 .memory_budget(50_000 * 16)
                 .run()
                 .unwrap();
             outputs.push(out);
         }
-        let golden = sorted(outputs[0].sequences.records.clone());
+        assert_eq!(outputs[0].report.output, OutputKind::InMemory);
+        assert!(
+            outputs.iter().any(|o| o.report.output == OutputKind::Spilled),
+            "the tiny budget must spill at least one out-of-core backend"
+        );
+        let golden =
+            sorted(outputs[0].sequences.clone().materialize().unwrap().records);
         let golden_stats = outputs[0].screen_stats.unwrap();
         assert!(golden_stats.records_after > 0, "screen must keep something");
         for out in &outputs[1..] {
-            assert_eq!(sorted(out.sequences.records.clone()), golden);
+            assert_eq!(
+                sorted(out.sequences.clone().materialize().unwrap().records),
+                golden,
+                "backend {} ({} output) diverged",
+                out.report.backend,
+                out.report.output
+            );
             assert_eq!(out.screen_stats.unwrap(), golden_stats);
         }
         // And the façade matches the expert layer exactly.
-        let mut expert = crate::mining::mine_sequences(&db, &mine_cfg).unwrap().records;
+        let expert_cfg =
+            MiningConfig { work_dir: base_dir.join("expert"), ..Default::default() };
+        let mut expert = crate::mining::mine_sequences(&db, &expert_cfg).unwrap().records;
         sparsity::screen(&mut expert, &sc);
         assert_eq!(sorted(expert), golden);
+    }
+
+    /// Explicit spilled output works on every backend, and the result is
+    /// a durable on-disk file set that survives the run.
+    #[test]
+    fn explicit_spilled_output_round_trips_on_every_backend() {
+        let db = small_db();
+        let base_dir = std::env::temp_dir().join("tspm_engine_spill_explicit");
+        let _ = std::fs::remove_dir_all(&base_dir);
+        let golden = {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(MiningConfig::default())
+                .backend(BackendChoice::InMemory)
+                .run()
+                .unwrap();
+            sorted(out.sequences.materialize().unwrap().records)
+        };
+        for (i, choice) in [
+            BackendChoice::InMemory,
+            BackendChoice::Sharded,
+            BackendChoice::FileBacked,
+            BackendChoice::Streaming,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(MiningConfig {
+                    work_dir: base_dir.join(format!("w{i}")),
+                    ..Default::default()
+                })
+                .backend(choice)
+                .output(OutputChoice::Spilled)
+                .out_dir(base_dir.join(format!("out{i}")))
+                .run()
+                .unwrap();
+            assert_eq!(out.report.output, OutputKind::Spilled);
+            let files = out.sequences.as_spilled().unwrap().clone();
+            assert!(files.files.iter().all(|f| f.exists()), "spill files must persist");
+            assert_eq!(out.sequences.len(), golden.len());
+            assert_eq!(out.sequences.resident_bytes(), 0);
+            assert_eq!(
+                sorted(out.sequences.materialize().unwrap().records),
+                golden,
+                "backend {choice:?}"
+            );
+            files.remove().unwrap();
+        }
     }
 
     #[test]
@@ -576,6 +869,7 @@ mod tests {
         let plan = engine.plan().unwrap();
         assert_eq!(plan.describe(), "mine → screen");
         assert_eq!(plan.backend, BackendChoice::Auto);
+        assert_eq!(plan.output, OutputChoice::Auto);
         let mc = plan.mining_config().unwrap();
         assert_eq!(mc.duration_unit_days, cfg.duration_unit_days);
     }
@@ -588,10 +882,29 @@ mod tests {
             .mine(MiningConfig::default())
             .run()
             .unwrap();
-        assert_eq!(out.db.num_patients(), out.sequences.num_patients as usize);
-        let r = out.sequences.records[0];
+        // Default budget → resident output.
+        assert_eq!(out.report.output, OutputKind::InMemory);
+        assert_eq!(out.db.num_patients(), out.sequences.num_patients() as usize);
+        let r = out.sequences.as_in_memory().unwrap().records[0];
         let (s, _) = crate::dbmart::decode_seq(r.seq);
         assert!(!out.db.lookup.phenx_name(s).is_empty());
+    }
+
+    #[test]
+    fn downstream_stages_force_in_memory_output_under_auto() {
+        // A tiny budget would spill a mine → screen chain, but a matrix
+        // consumer forces materialisation under Auto (and Plan::validate
+        // rejects an explicit Spilled on the same chain — see plan.rs).
+        let out = Engine::from_dbmart(small_db())
+            .mine(MiningConfig::default())
+            .screen(SparsityConfig { min_patients: 5, threads: 0 })
+            .matrix()
+            .backend(BackendChoice::FileBacked)
+            .memory_budget(1 << 16)
+            .run()
+            .unwrap();
+        assert_eq!(out.report.output, OutputKind::InMemory);
+        assert!(out.matrix.is_some());
     }
 
     #[test]

@@ -13,11 +13,12 @@
 //! exactly one `Mine`, keep stages in dependency order, and contain at
 //! most one of each downstream stage.
 
-use super::backend::BackendChoice;
+use super::backend::{BackendChoice, OutputChoice};
 use super::error::TspmError;
 use crate::mining::MiningConfig;
 use crate::msmr::MsmrConfig;
 use crate::sparsity::SparsityConfig;
+use std::path::PathBuf;
 
 /// One pipeline stage, with its full configuration captured at build
 /// time (plans are self-contained and replayable).
@@ -72,6 +73,11 @@ pub struct Plan {
     pub backend: BackendChoice,
     /// Memory budget steering auto-selection and streaming chunking.
     pub memory_budget_bytes: Option<u64>,
+    /// Requested result residency (resolved at run time when `Auto`).
+    pub output: OutputChoice,
+    /// Destination for spilled results (`None` = under the mining
+    /// `work_dir`).
+    pub out_dir: Option<PathBuf>,
 }
 
 impl Plan {
@@ -114,6 +120,19 @@ impl Plan {
                 "msmr needs the patient×sequence matrix — insert .matrix() before .msmr(k)"
                     .into(),
             ));
+        }
+        if self.output == OutputChoice::Spilled && !self.spill_capable() {
+            let bad = self
+                .stages
+                .iter()
+                .find(|s| !matches!(s, Stage::Mine(_) | Stage::Screen(_)))
+                .expect("spill_capable is false");
+            return Err(TspmError::Plan(format!(
+                "spilled output supports the mine → screen chain only; stage {:?} needs \
+                 in-memory records — drop .output(OutputChoice::Spilled) or materialize() \
+                 a previous run's result yourself",
+                bad.name()
+            )));
         }
         for stage in &self.stages {
             match stage {
@@ -195,6 +214,13 @@ impl Plan {
         self.msmr_config().is_some()
     }
 
+    /// Can this chain produce a spilled result? Only mine → screen can:
+    /// every later stage (duration screen, matrix, MSMR) consumes
+    /// in-memory records, so those plans always materialise.
+    pub fn spill_capable(&self) -> bool {
+        self.stages.iter().all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_)))
+    }
+
     /// Human-readable chain, e.g. `mine → screen → matrix → msmr`.
     pub fn describe(&self) -> String {
         self.stages.iter().map(Stage::name).collect::<Vec<_>>().join(" → ")
@@ -206,7 +232,13 @@ mod tests {
     use super::*;
 
     fn plan_of(stages: Vec<Stage>) -> Plan {
-        Plan { stages, backend: BackendChoice::Auto, memory_budget_bytes: None }
+        Plan {
+            stages,
+            backend: BackendChoice::Auto,
+            memory_budget_bytes: None,
+            output: OutputChoice::Auto,
+            out_dir: None,
+        }
     }
 
     #[test]
@@ -297,6 +329,48 @@ mod tests {
     #[test]
     fn mine_only_is_a_valid_plan() {
         plan_of(vec![Stage::Mine(MiningConfig::default())]).validate().unwrap();
+    }
+
+    #[test]
+    fn zero_duration_unit_rejected_in_plan() {
+        // Companion to the mining-layer rejection: the plan surface must
+        // refuse the same degenerate config before any work starts.
+        let err = plan_of(vec![Stage::Mine(MiningConfig {
+            duration_unit_days: 0,
+            ..Default::default()
+        })])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("duration_unit_days"), "got {err}");
+    }
+
+    #[test]
+    fn spilled_output_limited_to_mine_screen_chains() {
+        // mine and mine → screen spill fine …
+        for stages in [
+            vec![Stage::Mine(MiningConfig::default())],
+            vec![
+                Stage::Mine(MiningConfig::default()),
+                Stage::Screen(SparsityConfig::default()),
+            ],
+        ] {
+            let mut p = plan_of(stages);
+            p.output = OutputChoice::Spilled;
+            assert!(p.spill_capable());
+            p.validate().unwrap();
+        }
+        // … matrix/msmr chains cannot: they consume in-memory records.
+        let mut p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Matrix { duration_bucket_days: None },
+        ]);
+        assert!(!p.spill_capable());
+        p.output = OutputChoice::Spilled;
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("spilled"), "got {err}");
+        // Auto stays valid on the same chain (it resolves to in-memory).
+        p.output = OutputChoice::Auto;
+        p.validate().unwrap();
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //! sharded, file-backed, or streaming — auto-selected from a memory
 //! forecast and the worker count), and reports one unified error type
 //! ([`engine::TspmError`]) plus per-stage timings
-//! ([`engine::RunReport`]):
+//! ([`engine::RunReport`]). The result is **spill-aware**
+//! ([`engine::SequenceOutput`]): runs whose (post-screen) output may not
+//! fit the memory budget come back as durable on-disk spill files
+//! instead of one giant vector, with
+//! [`materialize()`](engine::SequenceOutput::materialize) as the
+//! explicit escape hatch back to memory:
 //!
 //! ```no_run
 //! use tspm_plus::prelude::*;
@@ -60,6 +65,20 @@
 //! All four backends produce the same sequence multiset; the
 //! cross-backend conformance harness (`rust/tests/conformance.rs`)
 //! asserts byte-identical sorted output on adversarial cohort shapes.
+//!
+//! ### Results larger than memory
+//!
+//! Residency is resolved separately from the backend
+//! ([`engine::OutputChoice`], default `Auto`): when the forecast
+//! post-screen footprint exceeds the budget on a file-backed or
+//! streaming run, the engine leaves the multiset in spill files and
+//! screens it **out of core** ([`sparsity::screen_spilled`] — external
+//! merge by `(seq, pid, duration)` with bounded buffers), so an
+//! end-to-end run finishes even when the screened output alone
+//! overflows RAM. `tspm mine --out-dir DIR` exposes the same contract
+//! on the CLI; [`engine::RunOutput::sequences`] then carries the
+//! [`seqstore::SeqFileSet`] a caching or serving layer can consume
+//! directly.
 //!
 //! ## The expert layer
 //!
@@ -126,7 +145,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::dbmart::{DbMart, DbMartEntry, NumericDbMart, NumericEntry};
     pub use crate::engine::{
-        BackendChoice, BackendKind, Engine, Plan, RunOutput, RunReport, Stage, TspmError,
+        BackendChoice, BackendKind, Engine, OutputChoice, OutputKind, Plan, RunOutput,
+        RunReport, SequenceOutput, Stage, TspmError,
     };
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
     pub use crate::msmr::MsmrConfig;

@@ -19,8 +19,8 @@ use tspm_plus::bench_util::experiments;
 use tspm_plus::cli::{usage, Args, OptSpec};
 use tspm_plus::config::RunConfig;
 use tspm_plus::dbmart::{format_seq, DbMart, NumericDbMart};
-use tspm_plus::engine::{BackendChoice, Engine};
-use tspm_plus::metrics::PhaseTimer;
+use tspm_plus::engine::{BackendChoice, Engine, OutputChoice, SequenceOutput};
+use tspm_plus::metrics::{fmt_bytes, PhaseTimer};
 use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{self, PostCovidConfig};
 use tspm_plus::runtime::ArtifactSet;
@@ -164,6 +164,13 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         OptSpec::value("duration-unit", Some("1"), "duration unit in days"),
         OptSpec::value("sparsity", Some("0"), "min patients per sequence (0 = no screen)"),
         OptSpec::value("memory-budget-mb", Some("4096"), "budget steering the auto backend"),
+        OptSpec::value(
+            "out-dir",
+            None,
+            "leave the (screened) result as spill files here instead of \
+             materialising one .tspm — the out-of-core path for results \
+             larger than memory",
+        ),
         OptSpec::flag("first-occurrence", "keep only first occurrence of each phenX"),
         OptSpec::flag("explain", "print a Fig.2-style decomposition of sample sequences"),
     ];
@@ -201,17 +208,24 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
 
     // Assemble the pipeline through the engine façade; the backend is
     // picked explicitly or auto-selected from the memory forecast.
+    // `--out-dir` requests the out-of-core result contract; without it
+    // the CLI keeps its historical single-file behaviour by pinning the
+    // in-memory output.
+    let out_dir = a.get("out-dir").map(PathBuf::from);
     let mut engine = Engine::from_dbmart(db)
         .backend(backend)
         .memory_budget(budget_mb << 20)
         .mine(mining_cfg);
+    engine = match &out_dir {
+        Some(dir) => engine.output(OutputChoice::Spilled).out_dir(dir.clone()),
+        None => engine.output(OutputChoice::InMemory),
+    };
     let min_patients: u32 = a.req("sparsity").map_err(|e| e.to_string())?;
     if min_patients > 0 {
         engine = engine.screen(SparsityConfig { min_patients, threads });
     }
     let result = timer.run("run", || engine.run()).map_err(|e| e.to_string())?;
     let db = result.db;
-    let records = result.sequences.records;
 
     if let Some(stats) = result.screen_stats {
         println!(
@@ -220,40 +234,69 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         );
     }
 
-    if a.flag("explain") {
-        println!("\nFig.2-style decomposition (first 5 sequences):");
-        for r in records.iter().take(5) {
-            let (s, e) = tspm_plus::dbmart::decode_seq(r.seq);
+    match result.sequences {
+        SequenceOutput::Spilled(files) => {
+            let dir = out_dir.expect("spilled output implies --out-dir");
+            std::fs::write(
+                dir.join("lookup.json"),
+                db.lookup.to_json().to_string_pretty(),
+            )
+            .map_err(|e| e.to_string())?;
+            if a.flag("explain") {
+                eprintln!("note: --explain is skipped for spilled output");
+            }
             println!(
-                "  {:>16} = {:<24} [{} -> {}] duration {}d patient {}",
-                r.seq,
-                format_seq(r.seq),
-                db.lookup.phenx_name(s),
-                db.lookup.phenx_name(e),
-                r.duration,
-                db.lookup.patient_name(r.pid),
+                "mined {} sequences from {} patients ({} entries) → {} spill file(s) \
+                 under {} ({}), lookup.json alongside",
+                files.total_records,
+                db.num_patients(),
+                db.len(),
+                files.files.len(),
+                dir.display(),
+                fmt_bytes(files.logical_bytes()),
+            );
+            for f in &files.files {
+                println!("  {}", f.display());
+            }
+        }
+        SequenceOutput::InMemory(set) => {
+            let records = set.records;
+            if a.flag("explain") {
+                println!("\nFig.2-style decomposition (first 5 sequences):");
+                for r in records.iter().take(5) {
+                    let (s, e) = tspm_plus::dbmart::decode_seq(r.seq);
+                    println!(
+                        "  {:>16} = {:<24} [{} -> {}] duration {}d patient {}",
+                        r.seq,
+                        format_seq(r.seq),
+                        db.lookup.phenx_name(s),
+                        db.lookup.phenx_name(e),
+                        r.duration,
+                        db.lookup.patient_name(r.pid),
+                    );
+                }
+                println!();
+            }
+
+            let out = PathBuf::from(a.get("out").unwrap());
+            timer
+                .run("write", || seqstore::write_file(&out, &records))
+                .map_err(|e| e.to_string())?;
+            std::fs::write(
+                a.get("lookup-out").unwrap(),
+                db.lookup.to_json().to_string_pretty(),
+            )
+            .map_err(|e| e.to_string())?;
+
+            println!(
+                "mined {} sequences from {} patients ({} entries) → {}",
+                records.len(),
+                db.num_patients(),
+                db.len(),
+                out.display()
             );
         }
-        println!();
     }
-
-    let out = PathBuf::from(a.get("out").unwrap());
-    timer
-        .run("write", || seqstore::write_file(&out, &records))
-        .map_err(|e| e.to_string())?;
-    std::fs::write(
-        a.get("lookup-out").unwrap(),
-        db.lookup.to_json().to_string_pretty(),
-    )
-    .map_err(|e| e.to_string())?;
-
-    println!(
-        "mined {} sequences from {} patients ({} entries) → {}",
-        records.len(),
-        db.num_patients(),
-        db.len(),
-        out.display()
-    );
     print!("{}", result.report.render());
     print!("{}", timer.report());
     Ok(())
@@ -322,7 +365,8 @@ fn cmd_postcovid(argv: &[String]) -> Result<(), String> {
         .mine(MiningConfig::default())
         .run()
         .map_err(|e| e.to_string())?;
-    let (db, mined) = (run.db, run.sequences);
+    let db = run.db;
+    let mined = run.sequences.materialize().map_err(|e| e.to_string())?;
 
     let covid = db
         .lookup

@@ -101,6 +101,21 @@ impl MiningConfig {
     pub fn worker_threads(&self) -> usize {
         par::num_threads(Some(self.threads).filter(|&t| t > 0))
     }
+
+    /// Semantic validation, run by every mining entry point. A zero
+    /// `duration_unit_days` used to be silently clamped to 1, which gave
+    /// programmatic callers different semantics from the validated
+    /// [`crate::config::RunConfig`] / [`crate::engine::Plan`] surfaces;
+    /// it is now rejected everywhere.
+    pub fn validate(&self) -> Result<(), MiningError> {
+        if self.duration_unit_days == 0 {
+            return Err(MiningError::InvalidConfig(
+                "duration_unit_days must be ≥ 1 (0 would divide by zero; use 1 for days)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// In-memory mining result.
@@ -136,6 +151,8 @@ pub enum MiningError {
     /// (reproduces the paper's R 2³¹−1 failure mode; see
     /// [`crate::partition`] for the adaptive remedy).
     TooManySequences { mined: u64, cap: u64 },
+    /// A [`MiningConfig`] that fails [`MiningConfig::validate`].
+    InvalidConfig(String),
 }
 
 impl std::fmt::Display for MiningError {
@@ -147,6 +164,7 @@ impl std::fmt::Display for MiningError {
                 "mined {mined} sequences which exceeds the element cap {cap} \
                  (R dataframe limit 2^31-1); use file-based mode or adaptive partitioning"
             ),
+            MiningError::InvalidConfig(msg) => write!(f, "invalid mining config: {msg}"),
         }
     }
 }
@@ -247,7 +265,10 @@ fn first_occurrences(chunk: &[NumericEntry], out: &mut Vec<NumericEntry>) {
 /// patient chunk into `sink`.
 #[inline]
 fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnMut(SeqRecord)) {
-    let unit = cfg.duration_unit_days.max(1);
+    // Zero is rejected by MiningConfig::validate at every entry point
+    // (and by Plan::validate) — no silent clamp.
+    let unit = cfg.duration_unit_days as u64;
+    debug_assert!(unit > 0, "entry points must validate duration_unit_days");
     for i in 0..chunk.len() {
         let x = chunk[i];
         for y in &chunk[i + 1..] {
@@ -255,7 +276,13 @@ fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnM
                 continue;
             }
             debug_assert!(y.date >= x.date, "chunk must be date-sorted");
-            let duration = ((y.date - x.date) as u32) / unit;
+            // Widened span: an i32 subtraction overflows on adversarial
+            // date ranges (i32::MIN-era sentinels vs modern dates). The
+            // full i32 span is ≤ u32::MAX days, so span/unit (unit ≥ 1)
+            // always converts back into u32.
+            let span = (y.date as i64 - x.date as i64) as u64;
+            let duration = u32::try_from(span / unit)
+                .expect("i32 date span divided by a positive unit fits u32");
             sink(SeqRecord { seq: encode_seq(x.phenx, y.phenx), pid: x.patient, duration });
         }
     }
@@ -367,6 +394,7 @@ fn mine_with_scheduler<F>(
 where
     F: FnOnce(&[NumericEntry], &[usize], usize) -> Vec<Vec<SeqRecord>>,
 {
+    cfg.validate()?;
     let threads = cfg.worker_threads();
     let track = |b: u64| {
         if let Some(t) = tracker {
@@ -428,6 +456,7 @@ pub fn mine_sequences_to_files_tracked(
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SeqFileSet, MiningError> {
+    cfg.validate()?;
     let threads = cfg.worker_threads();
     std::fs::create_dir_all(&cfg.work_dir)?;
     if let Some(t) = tracker {
@@ -667,6 +696,48 @@ mod tests {
         let cfg = MiningConfig { duration_unit_days: 7, ..Default::default() };
         let got = mine_sequences(&db, &cfg).unwrap();
         assert_eq!(got.records[0].duration, 3); // 21 days = 3 weeks
+    }
+
+    #[test]
+    fn zero_duration_unit_is_rejected_not_clamped() {
+        // Regression: a unit of 0 used to be silently clamped to 1,
+        // diverging from the validated config/plan surfaces.
+        let db = tiny_db();
+        let cfg = MiningConfig { duration_unit_days: 0, ..Default::default() };
+        assert!(matches!(
+            mine_sequences(&db, &cfg),
+            Err(MiningError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            mine_sequences_sharded(&db, &cfg),
+            Err(MiningError::InvalidConfig(_))
+        ));
+        let file_cfg = MiningConfig {
+            mode: MiningMode::FileBased,
+            work_dir: std::env::temp_dir().join("tspm_test_zero_unit"),
+            ..cfg
+        };
+        assert!(matches!(
+            mine_sequences_to_files(&db, &file_cfg),
+            Err(MiningError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn extreme_date_spans_do_not_overflow() {
+        // y.date - x.date overflows an i32 here; the i64 widening must
+        // produce the exact day span (2^32 - 2 fits u32).
+        let db = NumericDbMart::encode(&DbMart::new(vec![
+            raw("A", i32::MIN + 1, "a"),
+            raw("A", i32::MAX, "b"),
+        ]));
+        let got = mine_sequences(&db, &MiningConfig::default()).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got.records[0].duration, u32::MAX - 1);
+        // And a coarser unit divides the widened span, not a wrapped one.
+        let weekly = MiningConfig { duration_unit_days: 7, ..Default::default() };
+        let got = mine_sequences(&db, &weekly).unwrap();
+        assert_eq!(got.records[0].duration, (u32::MAX - 1) / 7);
     }
 
     #[test]

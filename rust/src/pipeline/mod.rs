@@ -23,10 +23,12 @@
 //!   the perf pass.
 
 use crate::dbmart::NumericDbMart;
-use crate::engine::TspmError;
+use crate::engine::{SequenceOutput, TspmError};
 use crate::mining::{self, MiningConfig, SeqRecord, SequenceSet};
 use crate::partition;
+use crate::seqstore::{SeqFileSet, SeqWriter};
 use crate::sparsity::{self, SparsityConfig};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Mutex;
@@ -42,8 +44,15 @@ pub struct PipelineConfig {
     pub queue_depth: usize,
     /// Miner shards.
     pub shards: usize,
-    /// Optional screening of the merged stream.
+    /// Optional screening of the merged stream (in-memory collection
+    /// only; incompatible with `spill_dir` — screen spilled output with
+    /// [`crate::sparsity::screen_spilled`]).
     pub screen: Option<SparsityConfig>,
+    /// When set, the collector streams record batches to one spill file
+    /// in this directory instead of merging them in memory — the
+    /// pipeline's resident set then never includes the output at all,
+    /// and the run returns [`SequenceOutput::Spilled`].
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -54,6 +63,7 @@ impl Default for PipelineConfig {
             queue_depth: 4,
             shards: 0, // auto
             screen: None,
+            spill_dir: None,
         }
     }
 }
@@ -85,9 +95,11 @@ impl StageMetrics {
     }
 }
 
-/// Result of a streaming run.
+/// Result of a streaming run: the sequences come back in memory by
+/// default, or as one spill file when
+/// [`PipelineConfig::spill_dir`] redirected the collector to disk.
 pub struct PipelineResult {
-    pub sequences: SequenceSet,
+    pub sequences: SequenceOutput,
     pub metrics: StageMetrics,
     pub screen_stats: Option<sparsity::ScreenStats>,
 }
@@ -115,6 +127,14 @@ fn send_with_backpressure<T>(
 
 /// Run the streaming pipeline over a dbmart.
 pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, TspmError> {
+    cfg.mining.validate()?;
+    if cfg.spill_dir.is_some() && cfg.screen.is_some() {
+        return Err(TspmError::Pipeline(
+            "the in-memory screen cannot combine with spill_dir — screen spilled \
+             output with sparsity::screen_spilled"
+                .into(),
+        ));
+    }
     let shards = if cfg.shards > 0 {
         cfg.shards
     } else {
@@ -130,6 +150,14 @@ pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, T
     let chunk_rx = SharedReceiver(Mutex::new(chunk_rx));
 
     let mut merged: Vec<SeqRecord> = Vec::new();
+    let mut spill: Option<(PathBuf, SeqWriter)> = None;
+    if let Some(dir) = &cfg.spill_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("streamed_0000.tspm");
+        let writer = SeqWriter::create(&path)?;
+        spill = Some((path, writer));
+    }
+    let mut spill_err: Option<std::io::Error> = None;
     let mut failed: Option<String> = None;
 
     std::thread::scope(|s| {
@@ -183,29 +211,63 @@ pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, T
         }
         drop(out_tx); // collector sees EOF once all shards finish
 
-        // Collector (runs on this thread): merge batches in arrival order.
+        // Collector (runs on this thread): merge batches in arrival
+        // order — into memory, or straight to the spill file (the first
+        // I/O error latches; the queues still drain so miners finish).
         for batch in out_rx.iter() {
-            merged.extend_from_slice(&batch);
+            match &mut spill {
+                Some((_, writer)) => {
+                    if spill_err.is_none() {
+                        for &r in batch.iter() {
+                            if let Err(e) = writer.write(r) {
+                                spill_err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                }
+                None => merged.extend_from_slice(&batch),
+            }
         }
         if metrics.chunks.load(Ordering::Relaxed) != n_chunks {
             failed = Some("source stage aborted early".to_string());
         }
     });
 
+    if spill_err.is_some() || failed.is_some() {
+        // Never leave a half-written spill file behind: its unpatched
+        // count header (0) would make a later open read "no records"
+        // without any error.
+        if let Some((path, writer)) = spill.take() {
+            drop(writer);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    if let Some(e) = spill_err {
+        return Err(TspmError::Io(e));
+    }
     if let Some(f) = failed {
         return Err(TspmError::Pipeline(f));
     }
 
     let screen_stats = cfg.screen.as_ref().map(|sc| sparsity::screen(&mut merged, sc));
-    Ok(PipelineResult {
-        sequences: SequenceSet {
+    let sequences = match spill {
+        Some((path, writer)) => {
+            let count = writer.finish()?;
+            SequenceOutput::Spilled(SeqFileSet {
+                files: vec![path],
+                total_records: count,
+                num_patients: db.num_patients() as u32,
+                num_phenx: db.num_phenx() as u32,
+            })
+        }
+        None => SequenceOutput::InMemory(SequenceSet {
             records: merged,
             num_patients: db.num_patients() as u32,
             num_phenx: db.num_phenx() as u32,
-        },
-        metrics,
-        screen_stats,
-    })
+        }),
+    };
+    Ok(PipelineResult { sequences, metrics, screen_stats })
 }
 
 /// mpsc `Receiver` shared across shards behind a mutex (work-queue
@@ -236,10 +298,51 @@ mod tests {
         let streamed = run(&db, &cfg).unwrap();
         assert_eq!(streamed.sequences.len(), batch.len());
         let mut a = batch.records;
-        let mut b = streamed.sequences.records;
+        let mut b = streamed.sequences.materialize().unwrap().records;
         a.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
         b.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spilled_collection_matches_in_memory_collection() {
+        let db = test_db();
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_pipeline_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = PipelineConfig {
+            chunk_cap: 50_000,
+            shards: 3,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let result = run(&db, &cfg).unwrap();
+        let files = match &result.sequences {
+            crate::engine::SequenceOutput::Spilled(f) => f.clone(),
+            other => panic!("expected spilled output, got {:?}", other.kind()),
+        };
+        assert_eq!(files.num_patients as usize, db.num_patients());
+        let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        assert_eq!(files.total_records as usize, batch.len());
+        let mut a = batch.records;
+        let mut b = result.sequences.materialize().unwrap().records;
+        let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+        a.sort_unstable_by_key(key);
+        b.sort_unstable_by_key(key);
+        assert_eq!(a, b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_dir_rejects_the_in_memory_screen() {
+        let db = test_db();
+        let cfg = PipelineConfig {
+            spill_dir: Some(std::env::temp_dir().join("tspm_pipeline_bad")),
+            screen: Some(SparsityConfig::default()),
+            ..Default::default()
+        };
+        let err = run(&db, &cfg).unwrap_err();
+        assert!(err.to_string().contains("spill_dir"), "got {err}");
     }
 
     #[test]

@@ -32,8 +32,15 @@ pub struct SeqWriter {
 
 impl SeqWriter {
     pub fn create(path: &Path) -> io::Result<SeqWriter> {
+        Self::create_with_capacity(path, WRITER_BUFFER_BYTES)
+    }
+
+    /// [`SeqWriter::create`] with an explicit buffer capacity —
+    /// budget-bounded consumers (the out-of-core screen) size their
+    /// writers from a memory budget instead of the 1 MiB default.
+    pub fn create_with_capacity(path: &Path, capacity: usize) -> io::Result<SeqWriter> {
         let file = File::create(path)?;
-        let mut out = BufWriter::with_capacity(WRITER_BUFFER_BYTES, file);
+        let mut out = BufWriter::with_capacity(capacity.max(RECORD_BYTES), file);
         out.write_all(MAGIC)?;
         out.write_all(&0u64.to_le_bytes())?; // count patched in finish()
         Ok(SeqWriter { out, count: 0 })
@@ -70,8 +77,14 @@ pub struct SeqReader {
 
 impl SeqReader {
     pub fn open(path: &Path) -> io::Result<SeqReader> {
+        Self::open_with_capacity(path, WRITER_BUFFER_BYTES)
+    }
+
+    /// [`SeqReader::open`] with an explicit buffer capacity, for k-way
+    /// merges that hold many readers open under one memory budget.
+    pub fn open_with_capacity(path: &Path, capacity: usize) -> io::Result<SeqReader> {
         let file = File::open(path)?;
-        let mut input = BufReader::with_capacity(WRITER_BUFFER_BYTES, file);
+        let mut input = BufReader::with_capacity(capacity.max(RECORD_BYTES), file);
         let mut magic = [0u8; 8];
         input.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -162,6 +175,12 @@ pub struct SeqFileSet {
 }
 
 impl SeqFileSet {
+    /// Logical payload size of the stored records (16 bytes each) —
+    /// what the set would occupy if materialised.
+    pub fn logical_bytes(&self) -> u64 {
+        self.total_records * RECORD_BYTES as u64
+    }
+
     /// Load every file into one vector (used by tests and by in-memory
     /// consumers after a file-based run).
     pub fn read_all(&self) -> io::Result<Vec<SeqRecord>> {

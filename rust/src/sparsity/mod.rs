@@ -2,22 +2,36 @@
 //!
 //! Sparse sequences (present in only a handful of patients) invite
 //! overfitting in downstream ML, so tSPM+ drops every sequence whose
-//! *distinct-patient* count is below a threshold. Three implementations
+//! *distinct-patient* count is below a threshold. Four implementations
 //! live here, all verified equivalent:
 //!
-//! * [`screen`] — the production path (perf pass): one adaptive sort by
-//!   `(seq, pid)` + a single-pass stable in-place compaction;
+//! * [`screen`] — the production in-memory path (perf pass): one
+//!   adaptive sort by `(seq, pid)` + a single-pass stable in-place
+//!   compaction;
 //! * [`screen_paper_strategy`] — the paper's "sophisticated approach"
 //!   verbatim: sort by sequence id → run start positions → parallel
 //!   **mark** of sparse records (`pid = u32::MAX`) → sort by patient id
 //!   → one truncation ("this strategy optimized the number of memory
 //!   allocations by minimizing its frequency to one");
 //! * [`screen_naive`] — hash-map counting, the correctness oracle and
-//!   the ablation baseline (bench `ablations`).
+//!   the ablation baseline (bench `ablations`);
+//! * [`screen_spilled`] — the out-of-core path over [`crate::seqstore`]
+//!   spill files: an external merge sort by `(seq, pid, duration)` with
+//!   bounded buffers, counting distinct patients per merged sequence run
+//!   and streaming survivors to new spill files. Resident memory is
+//!   O(buffer), never O(records) — this is what lets a file-backed or
+//!   streaming engine run finish when the screened output itself does
+//!   not fit RAM.
 
+use crate::metrics::MemTracker;
 use crate::mining::SeqRecord;
 use crate::par;
 use crate::psort;
+use crate::seqstore::{SeqFileSet, SeqReader, SeqWriter, WRITER_BUFFER_BYTES};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io;
+use std::path::{Path, PathBuf};
 
 /// Marker pid for records scheduled for removal (paper: "assigning the
 /// maximal possible value to the patient number").
@@ -216,6 +230,380 @@ pub fn screen_naive(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> Scree
     stats
 }
 
+// ---------------------------------------------------------------------------
+// Out-of-core screening (external merge over seqstore spill files)
+// ---------------------------------------------------------------------------
+
+/// Options for [`screen_spilled`]: where survivors land and how much
+/// buffer memory each phase may keep resident.
+#[derive(Clone, Debug)]
+pub struct SpillScreenConfig {
+    /// Minimum number of *distinct patients* a sequence must appear in.
+    pub min_patients: u32,
+    /// Worker threads for the in-buffer sorts (0 = auto).
+    pub threads: usize,
+    /// Bound (bytes) on each phase's record buffers: the run-sort
+    /// buffer, the k-way merge cursors combined, and the pending-run
+    /// buffer are each capped near this size. `u64::MAX` degenerates to
+    /// one in-memory run (still producing identical output).
+    pub buffer_bytes: u64,
+    /// Directory for the survivor file (and the transient sorted runs).
+    pub out_dir: PathBuf,
+}
+
+const REC_BYTES: u64 = std::mem::size_of::<SeqRecord>() as u64;
+const ZERO_REC: SeqRecord = SeqRecord { seq: 0, pid: 0, duration: 0 };
+
+/// Total order used by the external merge: `(seq, pid, duration)`.
+/// Sorting on the *full* record key makes the merged stream — and with
+/// it the survivor file — byte-identical for every buffer size and run
+/// layout: records with equal keys are identical, so tie order between
+/// runs cannot change the output.
+fn spill_key(r: &SeqRecord) -> u128 {
+    ((r.seq as u128) << 64) | ((r.pid as u128) << 32) | r.duration as u128
+}
+
+/// One sorted run being merged: a bounded record buffer over a
+/// capacity-bounded [`SeqReader`].
+struct RunCursor {
+    reader: SeqReader,
+    buf: Vec<SeqRecord>,
+    pos: usize,
+    len: usize,
+}
+
+impl RunCursor {
+    fn open(path: &Path, records: usize) -> io::Result<RunCursor> {
+        let records = records.max(1);
+        let mut c = RunCursor {
+            reader: SeqReader::open_with_capacity(path, records * REC_BYTES as usize)?,
+            buf: vec![ZERO_REC; records],
+            pos: 0,
+            len: 0,
+        };
+        c.refill()?;
+        Ok(c)
+    }
+
+    fn refill(&mut self) -> io::Result<()> {
+        self.pos = 0;
+        self.len = self.reader.read_batch(&mut self.buf)?;
+        Ok(())
+    }
+
+    fn head(&self) -> Option<SeqRecord> {
+        if self.pos < self.len {
+            Some(self.buf[self.pos])
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self) -> io::Result<()> {
+        self.pos += 1;
+        if self.pos >= self.len {
+            self.refill()?;
+        }
+        Ok(())
+    }
+}
+
+/// Maximum sorted runs merged at once. Bounding the fan-in keeps the
+/// open-file count independent of the input/buffer ratio (a ~9 GB
+/// multiset under a tight budget produces thousands of runs — opening
+/// them all at once hits the default 1024-fd ulimit) and keeps per-run
+/// merge buffers from collapsing toward one record. Run counts beyond
+/// this are compacted by intermediate merge passes first.
+const MERGE_FAN_IN: usize = 64;
+
+/// Stream the fully merged (globally `(seq, pid, duration)`-sorted)
+/// record sequence of the sorted runs in `paths` to `emit`. `per_run`
+/// bounds each cursor's record buffer.
+fn merge_sorted_runs(
+    paths: &[PathBuf],
+    per_run: usize,
+    mut emit: impl FnMut(SeqRecord) -> io::Result<()>,
+) -> io::Result<()> {
+    let mut cursors = Vec::with_capacity(paths.len());
+    for p in paths {
+        cursors.push(RunCursor::open(p, per_run)?);
+    }
+    let mut heap: BinaryHeap<Reverse<(u128, usize)>> = BinaryHeap::new();
+    for (i, c) in cursors.iter().enumerate() {
+        if let Some(r) = c.head() {
+            heap.push(Reverse((spill_key(&r), i)));
+        }
+    }
+    while let Some(Reverse((_, i))) = heap.pop() {
+        let r = cursors[i].head().expect("heap entry implies a buffered record");
+        cursors[i].advance()?;
+        if let Some(next) = cursors[i].head() {
+            heap.push(Reverse((spill_key(&next), i)));
+        }
+        emit(r)?;
+    }
+    Ok(())
+}
+
+/// State of the sequence run currently flowing out of the merge. Most
+/// runs fit the bounded `pending` buffer; a run larger than the buffer
+/// overflows to a temp spill file, so even a sequence present in every
+/// record never forces the run resident.
+struct PendingRun {
+    pending: Vec<SeqRecord>,
+    cap: usize,
+    overflow: Option<(SeqWriter, u64)>,
+    overflow_path: PathBuf,
+    write_cap: usize,
+}
+
+impl PendingRun {
+    fn push(&mut self, r: SeqRecord, tracker: Option<&MemTracker>) -> io::Result<()> {
+        if self.pending.len() == self.cap {
+            if self.overflow.is_none() {
+                if let Some(t) = tracker {
+                    t.add(self.write_cap as u64);
+                }
+                self.overflow = Some((
+                    SeqWriter::create_with_capacity(&self.overflow_path, self.write_cap)?,
+                    0,
+                ));
+            }
+            let (w, n) = self.overflow.as_mut().expect("just inserted");
+            for rec in self.pending.drain(..) {
+                w.write(rec)?;
+                *n += 1;
+            }
+        }
+        self.pending.push(r);
+        Ok(())
+    }
+
+    /// Close out the current sequence run: stream it to `out` when it
+    /// survives, drop it otherwise. Returns the number of records kept.
+    fn finalize(
+        &mut self,
+        survives: bool,
+        out: &mut SeqWriter,
+        scratch: &mut [SeqRecord],
+        tracker: Option<&MemTracker>,
+    ) -> io::Result<u64> {
+        let mut kept = 0u64;
+        if let Some((w, count)) = self.overflow.take() {
+            w.finish()?;
+            if let Some(t) = tracker {
+                t.sub(self.write_cap as u64);
+            }
+            if survives {
+                // Overflowed records precede the buffered tail in merge
+                // order — copy them through first.
+                let mut reader =
+                    SeqReader::open_with_capacity(&self.overflow_path, self.write_cap)?;
+                loop {
+                    let n = reader.read_batch(scratch)?;
+                    if n == 0 {
+                        break;
+                    }
+                    for &r in &scratch[..n] {
+                        out.write(r)?;
+                    }
+                }
+                kept += count;
+            }
+            let _ = std::fs::remove_file(&self.overflow_path);
+        }
+        if survives {
+            for &r in self.pending.iter() {
+                out.write(r)?;
+            }
+            kept += self.pending.len() as u64;
+        }
+        self.pending.clear();
+        Ok(kept)
+    }
+}
+
+/// The out-of-core screen: externally merge-sort `input`'s spill files
+/// by `(seq, pid, duration)` using buffers bounded by
+/// [`SpillScreenConfig::buffer_bytes`], count distinct patients per
+/// sequence run on the merged stream, and write surviving records —
+/// globally sorted — to a new spill file under `out_dir`.
+///
+/// Semantically identical to [`screen`] (same survivors, same
+/// [`ScreenStats`]); the output is additionally deterministic across
+/// buffer sizes because the merge orders on the full record key. The
+/// input files are left untouched; `tracker`, when provided, accounts
+/// every buffer so engine runs can prove their budget was honoured.
+pub fn screen_spilled(
+    input: &SeqFileSet,
+    cfg: &SpillScreenConfig,
+    tracker: Option<&MemTracker>,
+) -> io::Result<(SeqFileSet, ScreenStats)> {
+    let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
+    let track = |b: u64| {
+        if let Some(t) = tracker {
+            t.add(b)
+        }
+    };
+    let untrack = |b: u64| {
+        if let Some(t) = tracker {
+            t.sub(b)
+        }
+    };
+
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let run_dir = cfg.out_dir.join("screen_runs");
+    std::fs::create_dir_all(&run_dir)?;
+
+    // Buffer capacity in records: bounded by the budget, floored so
+    // degenerate budgets still make progress, and never sized past the
+    // input itself.
+    let cap = (cfg.buffer_bytes / REC_BYTES).clamp(64, input.total_records.max(64)) as usize;
+    // File buffers follow the same budget, capped at the default 1 MiB.
+    let write_cap =
+        (cfg.buffer_bytes.min(WRITER_BUFFER_BYTES as u64) as usize).max(4096);
+
+    let mut stats = ScreenStats::default();
+
+    // --- pass 1: bounded chunks → sorted run files ---------------------
+    let mut buf = vec![ZERO_REC; cap];
+    track(cap as u64 * REC_BYTES);
+    let mut runs: Vec<PathBuf> = Vec::new();
+    let mut filled = 0usize;
+    let flush = |buf: &mut [SeqRecord], runs: &mut Vec<PathBuf>| -> io::Result<()> {
+        psort::sort_auto(buf, spill_key, threads);
+        let path = run_dir.join(format!("run_{:06}.tspm", runs.len()));
+        track(write_cap as u64);
+        let mut w = SeqWriter::create_with_capacity(&path, write_cap)?;
+        for &r in buf.iter() {
+            w.write(r)?;
+        }
+        w.finish()?;
+        untrack(write_cap as u64);
+        runs.push(path);
+        Ok(())
+    };
+    for source in &input.files {
+        let mut reader = SeqReader::open_with_capacity(source, write_cap)?;
+        loop {
+            let n = reader.read_batch(&mut buf[filled..])?;
+            if n == 0 {
+                break;
+            }
+            filled += n;
+            stats.records_before += n as u64;
+            if filled == cap {
+                flush(&mut buf[..filled], &mut runs)?;
+                filled = 0;
+            }
+        }
+    }
+    if filled > 0 {
+        flush(&mut buf[..filled], &mut runs)?;
+    }
+    drop(flush);
+    drop(buf);
+    untrack(cap as u64 * REC_BYTES);
+
+    // --- pass 2: bounded-fan-in compaction ------------------------------
+    // Multi-pass merge keeps at most MERGE_FAN_IN runs open at once; the
+    // final screened merge below then also stays under the fd bound and
+    // keeps useful per-run buffers. Multi-pass output is identical to a
+    // single-pass merge (full-key order, equal keys are equal records).
+    let mut generation = 0u32;
+    while runs.len() > MERGE_FAN_IN {
+        let per_run = (cap / MERGE_FAN_IN).max(1);
+        let mut next: Vec<PathBuf> = Vec::new();
+        for (gi, group) in runs.chunks(MERGE_FAN_IN).enumerate() {
+            let path = run_dir.join(format!("merge_{generation:02}_{gi:06}.tspm"));
+            let group_bytes =
+                (group.len() * per_run) as u64 * REC_BYTES * 2 + write_cap as u64;
+            track(group_bytes);
+            let mut w = SeqWriter::create_with_capacity(&path, write_cap)?;
+            merge_sorted_runs(group, per_run, |r| w.write(r))?;
+            w.finish()?;
+            untrack(group_bytes);
+            next.push(path);
+        }
+        for p in &runs {
+            let _ = std::fs::remove_file(p);
+        }
+        runs = next;
+        generation += 1;
+    }
+
+    // --- pass 3: final k-way merge + streaming screen --------------------
+    let per_run = (cap / runs.len().max(1)).max(1);
+    // Cursor record buffers + their reader buffers.
+    let merge_bytes = (runs.len() * per_run) as u64 * REC_BYTES * 2;
+    track(merge_bytes);
+
+    let out_path = cfg.out_dir.join("screened_0000.tspm");
+    track(write_cap as u64);
+    let mut out = SeqWriter::create_with_capacity(&out_path, write_cap)?;
+    let mut scratch = vec![ZERO_REC; 4096];
+    track(scratch.len() as u64 * REC_BYTES);
+    let mut run = PendingRun {
+        pending: Vec::with_capacity(cap),
+        cap,
+        overflow: None,
+        overflow_path: run_dir.join("pending_overflow.tspm"),
+        write_cap,
+    };
+    track(cap as u64 * REC_BYTES);
+
+    let mut records_after = 0u64;
+    let mut cur_seq: Option<u64> = None;
+    let mut last_pid = 0u32;
+    let mut distinct = 0u32;
+    merge_sorted_runs(&runs, per_run, |r| {
+        if cur_seq != Some(r.seq) {
+            if cur_seq.is_some() {
+                stats.distinct_before += 1;
+                let survives = distinct >= cfg.min_patients;
+                stats.distinct_after += u64::from(survives);
+                records_after += run.finalize(survives, &mut out, &mut scratch, tracker)?;
+            }
+            cur_seq = Some(r.seq);
+            distinct = 1;
+            last_pid = r.pid;
+        } else if r.pid != last_pid {
+            distinct += 1;
+            last_pid = r.pid;
+        }
+        run.push(r, tracker)
+    })?;
+    if cur_seq.is_some() {
+        stats.distinct_before += 1;
+        let survives = distinct >= cfg.min_patients;
+        stats.distinct_after += u64::from(survives);
+        records_after += run.finalize(survives, &mut out, &mut scratch, tracker)?;
+    }
+
+    let written = out.finish()?;
+    debug_assert_eq!(written, records_after);
+    stats.records_after = records_after;
+
+    untrack(write_cap as u64);
+    untrack(scratch.len() as u64 * REC_BYTES);
+    untrack(cap as u64 * REC_BYTES);
+    untrack(merge_bytes);
+    for p in &runs {
+        let _ = std::fs::remove_file(p);
+    }
+    let _ = std::fs::remove_dir(&run_dir);
+
+    Ok((
+        SeqFileSet {
+            files: vec![out_path],
+            total_records: records_after,
+            num_patients: input.num_patients,
+            num_phenx: input.num_phenx,
+        },
+        stats,
+    ))
+}
+
 /// Duration-sparsity screen (paper: duration helpers "leverage this
 /// feature ... e.g. when calculating duration sparsity"): a sequence
 /// survives only if, additionally, its *duration-bucket* diversity is
@@ -376,6 +764,147 @@ mod tests {
         let mart = crate::synthea::SyntheaConfig::small().generate();
         let db = crate::dbmart::NumericDbMart::encode(&mart);
         assert!((db.num_patients() as u32) < TOMBSTONE_PID);
+    }
+
+    fn spill_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_sparsity_spill_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spilled_input(dir: &Path, records: &[SeqRecord], files: usize) -> SeqFileSet {
+        std::fs::create_dir_all(dir).unwrap();
+        let chunk = records.len().div_ceil(files.max(1)).max(1);
+        let mut paths = Vec::new();
+        for (i, part) in records.chunks(chunk).enumerate() {
+            let p = dir.join(format!("in_{i}.tspm"));
+            crate::seqstore::write_file(&p, part).unwrap();
+            paths.push(p);
+        }
+        if paths.is_empty() {
+            let p = dir.join("in_0.tspm");
+            crate::seqstore::write_file(&p, &[]).unwrap();
+            paths.push(p);
+        }
+        SeqFileSet {
+            files: paths,
+            total_records: records.len() as u64,
+            num_patients: 0,
+            num_phenx: 0,
+        }
+    }
+
+    #[test]
+    fn spilled_screen_matches_in_memory_across_buffer_sizes() {
+        let mut meta = Rng::new(0xC0FFEE);
+        for case in 0..6u64 {
+            let n = 500 + meta.gen_range(20_000) as usize;
+            let n_seqs = 1 + meta.gen_range(150);
+            let n_pats = 1 + meta.gen_range(90);
+            let threshold = 1 + meta.gen_range(6) as u32;
+            let mut r = Rng::new(case);
+            let records: Vec<SeqRecord> = (0..n)
+                .map(|_| SeqRecord {
+                    seq: r.gen_range(n_seqs),
+                    pid: r.gen_range(n_pats) as u32,
+                    duration: r.gen_range(700) as u32,
+                })
+                .collect();
+
+            let mut expect = records.clone();
+            let in_mem_stats =
+                screen(&mut expect, &SparsityConfig { min_patients: threshold, threads: 2 });
+            expect.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+
+            let dir = spill_dir(&format!("match_{case}"));
+            let input = spilled_input(&dir, &records, 3);
+            let mut golden_file_bytes: Option<Vec<SeqRecord>> = None;
+            for buffer_bytes in [1024u64, 64 * 1024, u64::MAX] {
+                let cfg = SpillScreenConfig {
+                    min_patients: threshold,
+                    threads: 2,
+                    buffer_bytes,
+                    out_dir: dir.join(format!("out_{buffer_bytes}")),
+                };
+                let (out, stats) = screen_spilled(&input, &cfg, None).unwrap();
+                assert_eq!(stats, in_mem_stats, "case={case} buf={buffer_bytes}");
+                assert_eq!(out.total_records, in_mem_stats.records_after);
+                // File order (not just multiset): the external merge is
+                // fully sorted, so every buffer size writes the same file.
+                let got = out.read_all().unwrap();
+                assert_eq!(got, expect, "case={case} buf={buffer_bytes}");
+                match &golden_file_bytes {
+                    None => golden_file_bytes = Some(got),
+                    Some(g) => assert_eq!(g, &got, "case={case} buf={buffer_bytes}"),
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn spilled_screen_handles_empty_and_all_sparse_inputs() {
+        let dir = spill_dir("edge");
+        let empty = spilled_input(&dir.join("e"), &[], 1);
+        let cfg = SpillScreenConfig {
+            min_patients: 2,
+            threads: 1,
+            buffer_bytes: 1024,
+            out_dir: dir.join("e_out"),
+        };
+        let (out, stats) = screen_spilled(&empty, &cfg, None).unwrap();
+        assert_eq!(stats, ScreenStats::default());
+        assert_eq!(out.total_records, 0);
+        assert!(out.read_all().unwrap().is_empty());
+
+        // Every sequence below threshold → empty survivor file.
+        let sparse = vec![rec(1, 1), rec(2, 2), rec(3, 3)];
+        let input = spilled_input(&dir.join("s"), &sparse, 2);
+        let cfg = SpillScreenConfig {
+            min_patients: 5,
+            threads: 1,
+            buffer_bytes: 1024,
+            out_dir: dir.join("s_out"),
+        };
+        let (out, stats) = screen_spilled(&input, &cfg, None).unwrap();
+        assert_eq!(stats.records_before, 3);
+        assert_eq!(stats.distinct_before, 3);
+        assert_eq!(stats.distinct_after, 0);
+        assert_eq!(out.total_records, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spilled_screen_overflows_giant_runs_without_buffering_them() {
+        // One sequence spans far more records than the buffer (64-record
+        // cap at 1 KiB) — the pending-run overflow path must stream it.
+        let mut records: Vec<SeqRecord> = (0..5_000)
+            .map(|i| SeqRecord { seq: 7, pid: (i % 200) as u32, duration: i as u32 })
+            .collect();
+        records.push(rec(9, 1)); // sparse straggler, dropped at threshold 2
+        let mut expect = records.clone();
+        let in_mem = screen(&mut expect, &SparsityConfig { min_patients: 2, threads: 1 });
+        expect.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+
+        let dir = spill_dir("overflow");
+        let input = spilled_input(&dir, &records, 2);
+        let cfg = SpillScreenConfig {
+            min_patients: 2,
+            threads: 1,
+            buffer_bytes: 1024,
+            out_dir: dir.join("out"),
+        };
+        let tracker = MemTracker::new();
+        let (out, stats) = screen_spilled(&input, &cfg, Some(&tracker)).unwrap();
+        assert_eq!(stats, in_mem);
+        assert_eq!(out.read_all().unwrap(), expect);
+        // Bounded: nothing near the 80 KB input footprint stays resident
+        // (buffers only — scratch dominates at 64 KiB).
+        assert!(tracker.peak() < 200 * 1024, "peak {}", tracker.peak());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -2,21 +2,37 @@
 //!
 //! The engine promises that its four execution backends (in-memory,
 //! sharded, file-backed, streaming) are *interchangeable*: same plan in,
-//! same sequence multiset out, whatever the scheduling, spill format, or
-//! thread count. Reordering bugs are exactly the class that slips past
-//! happy-path tests, so this harness feeds **adversarial dbmart shapes**
-//! — empty cohorts, single-entry patients, heavily skewed patients,
-//! duplicate timestamps, maximal durations — through every backend and
-//! asserts **byte-identical** sorted output plus the `RunReport`
-//! invariants each run must satisfy.
+//! same sequence multiset out, whatever the scheduling, spill format,
+//! thread count, or **result residency** (in-memory vs spilled).
+//! Reordering bugs are exactly the class that slips past happy-path
+//! tests, so this harness feeds **adversarial dbmart shapes** — empty
+//! cohorts, single-entry patients, heavily skewed patients, duplicate
+//! timestamps, maximal durations — through every backend (and through
+//! every backend again with an explicitly spilled result) and asserts
+//! **byte-identical** sorted output plus the `RunReport` invariants each
+//! run must satisfy. Each shape's golden records additionally flow
+//! through all four sparsity-screen implementations (`screen`,
+//! `screen_paper_strategy`, `screen_naive`, `screen_spilled`), which
+//! must agree on survivors byte-for-byte.
+//!
+//! Spilled-path coverage is unconditional: every shape runs every
+//! backend a second time with `.output(OutputChoice::Spilled)`, so the
+//! out-of-core mine and external-merge screen execute on every push.
+//! `TSPM_MEMORY_BUDGET` (bytes) additionally overrides the per-shape
+//! engine budget (clamped up to the streaming floor) — CI runs the
+//! suite at a second budget point so residency/backend auto-resolution
+//! is tested on more than one budget.
 //!
 //! Every future backend (async, caching, remote) gets wired into
 //! `ALL_BACKENDS` below and inherits the whole battery.
 
+use std::path::Path;
 use tspm_plus::dbmart::{DbMart, DbMartEntry, NumericDbMart};
-use tspm_plus::engine::{self, BackendChoice, BackendKind, Engine};
+use tspm_plus::engine::{self, BackendChoice, BackendKind, Engine, OutputChoice, OutputKind};
 use tspm_plus::mining::{self, MiningConfig, SeqRecord};
 use tspm_plus::rng::Rng;
+use tspm_plus::seqstore::{self, SeqFileSet};
+use tspm_plus::sparsity::{self, SparsityConfig, SpillScreenConfig};
 
 /// Every backend the engine can execute, paired with the kind the report
 /// must name.
@@ -56,16 +72,25 @@ fn work_dir(tag: &str) -> std::path::PathBuf {
     dir
 }
 
-/// The harness core: run the identical plan through all four backends and
+/// Budget override (bytes) so CI can re-run the suite at a second
+/// budget point; clamped up to the per-shape streaming floor by the
+/// caller.
+fn env_budget() -> Option<u64> {
+    std::env::var("TSPM_MEMORY_BUDGET").ok()?.parse().ok()
+}
+
+/// The harness core: run the identical plan through all four backends —
+/// once with auto residency, once pinned to a spilled result — and
 /// assert byte-identical sorted output and the `RunReport` invariants.
 /// Returns the golden sorted records for shape-specific follow-up checks.
 fn assert_backends_conform(shape: &str, mart: &DbMart, cfg: &MiningConfig) -> Vec<SeqRecord> {
     let db = NumericDbMart::encode(mart);
     // A budget that clears the largest single patient (streaming would
     // otherwise legitimately refuse) but sits below most totals, so the
-    // streaming run really partitions.
+    // streaming run really partitions (and out-of-core runs auto-spill).
     let fc = engine::forecast(&db, cfg);
-    let budget_bytes = (fc.max_patient_sequences + 32) * 16;
+    let floor = (fc.max_patient_sequences + 32) * 16;
+    let budget_bytes = env_budget().unwrap_or(floor).max(floor);
 
     let mut golden: Option<Vec<u8>> = None;
     let mut golden_records = Vec::new();
@@ -83,6 +108,11 @@ fn assert_backends_conform(shape: &str, mart: &DbMart, cfg: &MiningConfig) -> Ve
 
         // --- RunReport invariants, identical for every backend ---------
         assert_eq!(out.report.backend, kind, "{shape}: report names the wrong backend");
+        assert_eq!(
+            out.report.output,
+            out.sequences.kind(),
+            "{shape}/{kind}: report names the wrong residency"
+        );
         let stage_names: Vec<&str> =
             out.report.stages.iter().map(|s| s.stage.as_str()).collect();
         assert_eq!(stage_names, ["mine"], "{shape}/{kind}");
@@ -107,13 +137,17 @@ fn assert_backends_conform(shape: &str, mart: &DbMart, cfg: &MiningConfig) -> Ve
             assert!(fc.total_sequences >= out.sequences.len() as u64, "{shape}/{kind}");
         }
         assert!(
-            out.report.peak_logical_bytes >= out.sequences.byte_size(),
-            "{shape}/{kind}: peak below the materialised output"
+            out.report.peak_logical_bytes >= out.sequences.resident_bytes(),
+            "{shape}/{kind}: peak below the resident output"
         );
-        assert_eq!(out.sequences.num_patients as usize, db.num_patients(), "{shape}/{kind}");
+        assert_eq!(
+            out.sequences.num_patients() as usize,
+            db.num_patients(),
+            "{shape}/{kind}"
+        );
 
         // --- byte-identical output across backends ---------------------
-        let records = sorted(out.sequences.records);
+        let records = sorted(out.sequences.materialize().unwrap().records);
         let bytes = record_bytes(&records);
         match &golden {
             None => {
@@ -128,8 +162,108 @@ fn assert_backends_conform(shape: &str, mart: &DbMart, cfg: &MiningConfig) -> Ve
                 golden_records.len()
             ),
         }
+
+        // --- same plan, result pinned to spill files -------------------
+        let spilled = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig {
+                work_dir: work_dir(&format!("{shape}_{kind}_sp")),
+                ..cfg.clone()
+            })
+            .backend(choice)
+            .output(OutputChoice::Spilled)
+            .out_dir(work_dir(&format!("{shape}_{kind}_spout")))
+            .memory_budget(budget_bytes)
+            .run()
+            .unwrap_or_else(|e| panic!("{shape}/{kind}/spilled: {e}"));
+        assert_eq!(spilled.report.output, OutputKind::Spilled, "{shape}/{kind}");
+        assert_eq!(spilled.sequences.resident_bytes(), 0, "{shape}/{kind}");
+        let sp = sorted(spilled.sequences.materialize().unwrap().records);
+        assert_eq!(
+            record_bytes(&sp),
+            *golden.as_ref().expect("golden set above"),
+            "{shape}/{kind}: materialized spilled output diverged"
+        );
     }
     golden_records
+}
+
+/// Screened-path conformance: every screen implementation — the
+/// production sort+compact, the paper's mark-and-truncate strategy, the
+/// naive hash oracle, and the out-of-core external merge — must keep
+/// byte-identical survivors (and identical stats) on this shape's
+/// records, the external merge at every buffer bound.
+fn assert_screens_conform(shape: &str, golden: &[SeqRecord]) {
+    for min_patients in [1u32, 2, 4] {
+        let cfg = SparsityConfig { min_patients, threads: 2 };
+        // Feed every implementation an adversarial (reverse-sorted) order.
+        let scrambled: Vec<SeqRecord> = golden.iter().rev().copied().collect();
+        let mut a = scrambled.clone();
+        let stats_a = sparsity::screen(&mut a, &cfg);
+        let mut b = scrambled.clone();
+        let stats_b = sparsity::screen_paper_strategy(&mut b, &cfg);
+        let mut c = scrambled.clone();
+        let stats_c = sparsity::screen_naive(&mut c, &cfg);
+        let a = sorted(a);
+        assert_eq!(
+            record_bytes(&a),
+            record_bytes(&sorted(b)),
+            "{shape} t={min_patients}: paper strategy diverged"
+        );
+        assert_eq!(
+            record_bytes(&a),
+            record_bytes(&sorted(c)),
+            "{shape} t={min_patients}: naive oracle diverged"
+        );
+        assert_eq!(stats_a, stats_b, "{shape} t={min_patients}");
+        assert_eq!(stats_a, stats_c, "{shape} t={min_patients}");
+
+        // Out-of-core: spill the records across three input files, screen
+        // externally at several buffer bounds (1 KiB / 64 KiB /
+        // unbounded), materialise, compare bytes and stats.
+        let dir = work_dir(&format!("screens_{shape}_{min_patients}"));
+        let input = spilled_input(&dir, &scrambled);
+        for buffer_bytes in [1024u64, 64 * 1024, u64::MAX] {
+            let spill_cfg = SpillScreenConfig {
+                min_patients,
+                threads: 2,
+                buffer_bytes,
+                out_dir: dir.join(format!("out_{buffer_bytes}")),
+            };
+            let (out, stats) = sparsity::screen_spilled(&input, &spill_cfg, None)
+                .unwrap_or_else(|e| panic!("{shape} t={min_patients} buf={buffer_bytes}: {e}"));
+            let got = sorted(out.read_all().unwrap());
+            assert_eq!(
+                record_bytes(&got),
+                record_bytes(&a),
+                "{shape} t={min_patients} buf={buffer_bytes}: spilled screen diverged"
+            );
+            assert_eq!(stats, stats_a, "{shape} t={min_patients} buf={buffer_bytes}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Write `records` as a three-file spill set under `dir`.
+fn spilled_input(dir: &Path, records: &[SeqRecord]) -> SeqFileSet {
+    std::fs::create_dir_all(dir).unwrap();
+    let chunk = records.len().div_ceil(3).max(1);
+    let mut files = Vec::new();
+    for (i, part) in records.chunks(chunk).enumerate() {
+        let p = dir.join(format!("in_{i}.tspm"));
+        seqstore::write_file(&p, part).unwrap();
+        files.push(p);
+    }
+    if files.is_empty() {
+        let p = dir.join("in_0.tspm");
+        seqstore::write_file(&p, &[]).unwrap();
+        files.push(p);
+    }
+    SeqFileSet {
+        files,
+        total_records: records.len() as u64,
+        num_patients: 0,
+        num_phenx: 0,
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -142,6 +276,7 @@ fn conformance_empty_cohort() {
     let mart = DbMart::new(vec![]);
     let golden = assert_backends_conform("empty", &mart, &MiningConfig::default());
     assert!(golden.is_empty());
+    assert_screens_conform("empty", &golden);
 }
 
 /// Shape 2 — single-entry patients only: every patient mines to zero
@@ -154,6 +289,7 @@ fn conformance_single_entry_patients() {
     );
     let golden = assert_backends_conform("single_entry", &mart, &MiningConfig::default());
     assert!(golden.is_empty(), "single-entry patients must yield no pairs");
+    assert_screens_conform("single_entry", &golden);
 }
 
 /// Shape 3 — heavily skewed cohort: one 200-entry patient next to fifty
@@ -178,6 +314,7 @@ fn conformance_heavily_skewed() {
     let mart = DbMart::new(entries);
     let golden = assert_backends_conform("skewed", &mart, &MiningConfig::default());
     assert!(golden.len() as u64 >= mining::pairs_for(200));
+    assert_screens_conform("skewed", &golden);
 }
 
 /// Shape 4 — duplicate timestamps: all of a patient's entries share one
@@ -197,6 +334,7 @@ fn conformance_duplicate_timestamps() {
     let mart = DbMart::new(entries);
     let golden = assert_backends_conform("dup_ts", &mart, &MiningConfig::default());
     assert!(golden.iter().all(|r| r.duration == 0), "same-date pairs must span 0 days");
+    assert_screens_conform("dup_ts", &golden);
     assert_backends_conform(
         "dup_ts_first",
         &mart,
@@ -225,6 +363,7 @@ fn conformance_max_duration_buckets() {
         &MiningConfig { duration_unit_days: 30, ..Default::default() },
     );
     assert!(monthly.iter().all(|r| r.duration <= 2_100_000_000 / 30 + 1));
+    assert_screens_conform("max_dur", &golden);
 }
 
 /// Shape 6 — randomized mixture: every adversarial trait at once, across
@@ -253,11 +392,12 @@ fn conformance_random_mixture() {
             }
         }
         let mart = DbMart::new(entries);
-        assert_backends_conform(
+        let golden = assert_backends_conform(
             &format!("random{seed}"),
             &mart,
             &MiningConfig { include_self_pairs: false, ..Default::default() },
         );
+        assert_screens_conform(&format!("random{seed}"), &golden);
     }
 }
 
@@ -322,5 +462,135 @@ fn sharded_output_independent_of_threads_and_shards() {
                 "threads={threads} shards={shards} changed the sharded multiset"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spill-aware engine results (the out-of-core contract)
+// ---------------------------------------------------------------------------
+
+/// The headline acceptance test for the out-of-core contract: a
+/// FileBacked run whose memory budget is far below the predicted
+/// (post-screen upper bound) output must complete end to end with its
+/// `MemTracker` peak under the budget, auto-spill its result, and
+/// `materialize()` to bytes identical to the InMemory backend's screened
+/// result.
+#[test]
+fn spilled_filebacked_screen_stays_under_budget_and_matches_in_memory() {
+    // 300 patients × 80 entries → ~948k records ≈ 15 MB of output;
+    // overlapping code assignments make most sequences survive a
+    // 2-patient screen, so the post-screen output still dwarfs the
+    // budget.
+    let mut entries = Vec::new();
+    for p in 0..300 {
+        for i in 0..80 {
+            entries.push(entry(&format!("p{p}"), i, &format!("x{}", (i * 7 + p) % 120)));
+        }
+    }
+    let mart = DbMart::new(entries);
+    let db = NumericDbMart::encode(&mart);
+    let mine_cfg = MiningConfig {
+        threads: 1,
+        work_dir: work_dir("budget_mine"),
+        ..Default::default()
+    };
+    let fc = engine::forecast(&db, &mine_cfg);
+    let budget = 6u64 << 20;
+    assert!(
+        fc.total_bytes > 2 * budget,
+        "cohort too small: forecast {} must dwarf the {budget} budget",
+        fc.total_bytes
+    );
+    let sc = SparsityConfig { min_patients: 2, threads: 1 };
+
+    let spilled = Engine::from_dbmart(db.clone())
+        .mine(mine_cfg)
+        .screen(sc)
+        .backend(BackendChoice::FileBacked)
+        .out_dir(work_dir("budget_out"))
+        .memory_budget(budget)
+        .run()
+        .unwrap();
+    assert_eq!(spilled.report.backend, BackendKind::FileBacked);
+    assert_eq!(spilled.report.output, OutputKind::Spilled);
+    assert!(
+        spilled.report.peak_logical_bytes <= budget,
+        "peak {} exceeds the {budget} budget",
+        spilled.report.peak_logical_bytes
+    );
+    let stage_names: Vec<&str> =
+        spilled.report.stages.iter().map(|s| s.stage.as_str()).collect();
+    assert_eq!(stage_names, ["mine", "screen"]);
+
+    let in_mem = Engine::from_dbmart(db)
+        .mine(MiningConfig {
+            threads: 1,
+            work_dir: work_dir("budget_mem"),
+            ..Default::default()
+        })
+        .screen(sc)
+        .backend(BackendChoice::InMemory)
+        .memory_budget(u64::MAX)
+        .run()
+        .unwrap();
+    assert_eq!(in_mem.report.output, OutputKind::InMemory);
+    assert_eq!(spilled.screen_stats, in_mem.screen_stats);
+
+    let a = sorted(spilled.sequences.materialize().unwrap().records);
+    let b = sorted(in_mem.sequences.materialize().unwrap().records);
+    assert!(!a.is_empty(), "the 2-patient screen must keep something");
+    assert_eq!(record_bytes(&a), record_bytes(&b));
+}
+
+/// External-merge determinism: for random record sets, `screen_spilled`
+/// writes the *identical file* (not just the same multiset) at every
+/// buffer bound — 1 KiB, 64 KiB, unbounded — because the merge orders on
+/// the full `(seq, pid, duration)` key. Stats and survivors also match
+/// the in-memory screen.
+#[test]
+fn external_merge_screen_is_deterministic_across_buffer_sizes() {
+    for case in 0..5u64 {
+        let mut rng = Rng::new(0xF00D + case);
+        let n = 2_000 + rng.gen_range(20_000) as usize;
+        let records: Vec<SeqRecord> = (0..n)
+            .map(|_| SeqRecord {
+                seq: rng.gen_range(300),
+                pid: rng.gen_range(80) as u32,
+                duration: rng.gen_range(2_000) as u32,
+            })
+            .collect();
+        let threshold = 1 + rng.gen_range(6) as u32;
+
+        let mut expect = records.clone();
+        let expect_stats = sparsity::screen(
+            &mut expect,
+            &SparsityConfig { min_patients: threshold, threads: 1 },
+        );
+        let expect = sorted(expect);
+
+        let dir = work_dir(&format!("merge_det_{case}"));
+        let input = spilled_input(&dir, &records);
+        let mut golden_file: Option<Vec<SeqRecord>> = None;
+        for buffer_bytes in [1024u64, 64 * 1024, u64::MAX] {
+            let cfg = SpillScreenConfig {
+                min_patients: threshold,
+                threads: 1 + (case as usize % 3),
+                buffer_bytes,
+                out_dir: dir.join(format!("out_{buffer_bytes}")),
+            };
+            let (out, stats) = sparsity::screen_spilled(&input, &cfg, None).unwrap();
+            assert_eq!(stats, expect_stats, "case={case} buf={buffer_bytes}");
+            // Raw file order, no re-sort: determinism is byte-literal.
+            let got = out.read_all().unwrap();
+            match &golden_file {
+                None => golden_file = Some(got.clone()),
+                Some(g) => assert_eq!(
+                    g, &got,
+                    "case={case} buf={buffer_bytes}: buffer size changed the output file"
+                ),
+            }
+            assert_eq!(sorted(got), expect, "case={case} buf={buffer_bytes}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -95,6 +95,8 @@ fn five_mining_paths_agree() {
     )
     .unwrap()
     .sequences
+    .materialize()
+    .unwrap()
     .records;
     streamed.sort_unstable_by_key(key);
     assert_eq!(batch_mem, streamed);
@@ -334,7 +336,7 @@ fn engine_from_config_matches_expert_layer() {
     sparsity::screen(&mut expert, &cfg.sparsity_config().unwrap());
 
     let key = |r: &mining::SeqRecord| (r.seq, r.pid, r.duration);
-    let mut got = out.sequences.records;
+    let mut got = out.sequences.materialize().unwrap().records;
     got.sort_unstable_by_key(key);
     expert.sort_unstable_by_key(key);
     assert_eq!(got, expert);

@@ -101,12 +101,13 @@ fn conservation_across_all_paths() {
                 queue_depth: 1 + meta.gen_range(4) as usize,
                 shards: 1 + meta.gen_range(5) as usize,
                 screen: None,
+                spill_dir: None,
             },
         );
         match streamed {
             Ok(s) => assert_eq!(
                 sorted(batch.records.clone()),
-                sorted(s.sequences.records),
+                sorted(s.sequences.materialize().unwrap().records),
                 "case={case} pipeline mismatch"
             ),
             Err(e) => {
@@ -227,7 +228,7 @@ fn pipeline_backpressure_never_deadlocks_or_drops() {
         .unwrap();
         assert_eq!(
             sorted(batch.records.clone()),
-            sorted(result.sequences.records),
+            sorted(result.sequences.materialize().unwrap().records),
             "shards={shards} depth={depth}"
         );
     }
@@ -333,7 +334,7 @@ fn engine_backends_match_expert_layer_on_random_cohorts() {
                 .run()
                 .unwrap();
             assert_eq!(
-                sorted(out.sequences.records),
+                sorted(out.sequences.materialize().unwrap().records),
                 expert,
                 "case={case} backend={backend:?}"
             );
