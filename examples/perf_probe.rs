@@ -82,4 +82,70 @@ fn main() {
     std::fs::write("BENCH_sharded_vs_streaming.json", bench.to_string_pretty())
         .expect("write BENCH_sharded_vs_streaming.json");
     println!("wrote BENCH_sharded_vs_streaming.json");
+
+    // query layer: index-build throughput + cold vs LRU-cached point-query
+    // latency on the screened set. Written to BENCH_query.json.
+    let mut screened = set.records.clone();
+    sparsity::screen(&mut screened, &SparsityConfig { min_patients: 7, threads: 1 });
+    screened.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+    if screened.is_empty() {
+        println!("screened set empty — skipping query bench");
+        return;
+    }
+    let qdir = std::env::temp_dir().join("tspm_perf_query");
+    let _ = std::fs::remove_dir_all(&qdir);
+    std::fs::create_dir_all(&qdir).unwrap();
+    let spill_path = qdir.join("screened_0000.tspm");
+    tspm_plus::seqstore::write_file(&spill_path, &screened).unwrap();
+    let files = tspm_plus::seqstore::SeqFileSet {
+        files: vec![spill_path],
+        total_records: screened.len() as u64,
+        num_patients: db.num_patients() as u32,
+        num_phenx: 0,
+    };
+    let t = Instant::now();
+    let idx = tspm_plus::query::index::build(
+        &files,
+        &qdir.join("idx"),
+        &tspm_plus::query::IndexConfig::default(),
+        None,
+    )
+    .unwrap();
+    let build_secs = t.elapsed().as_secs_f64();
+    println!(
+        "index build: {build_secs:.3}s ({} records → {} blocks, {} seqs)",
+        idx.total_records,
+        idx.blocks.len(),
+        idx.seqs.len()
+    );
+    let svc = tspm_plus::query::QueryService::from_index(idx, 32 << 20);
+    let probe_seq = screened[screened.len() / 2].seq;
+    let t = Instant::now();
+    let cold = svc.by_sequence(probe_seq).unwrap();
+    let cold_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let warm = svc.by_sequence(probe_seq).unwrap();
+    let cached_secs = t.elapsed().as_secs_f64();
+    assert_eq!(cold.len(), warm.len());
+    let st = svc.stats();
+    println!(
+        "query seq {probe_seq}: cold {:.3}ms vs cached {:.3}ms ({} records, {} cache hit)",
+        cold_secs * 1e3,
+        cached_secs * 1e3,
+        cold.len(),
+        st.hits
+    );
+    let qbench = Json::obj(vec![
+        ("bench", Json::from("query_cold_vs_cached".to_string())),
+        ("records_indexed", Json::from(screened.len())),
+        ("result_records", Json::from(cold.len())),
+        ("index_build_secs", Json::from(build_secs)),
+        ("cold_query_secs", Json::from(cold_secs)),
+        ("cached_query_secs", Json::from(cached_secs)),
+        ("cache_hits", Json::from(st.hits)),
+        ("speedup_cached_over_cold", Json::from(cold_secs / cached_secs.max(1e-9))),
+    ]);
+    std::fs::write("BENCH_query.json", qbench.to_string_pretty())
+        .expect("write BENCH_query.json");
+    println!("wrote BENCH_query.json");
 }

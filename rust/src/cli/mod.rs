@@ -51,6 +51,8 @@ impl std::error::Error for CliError {}
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Option names the user explicitly passed (defaults excluded).
+    provided: Vec<String>,
     pub positionals: Vec<String>,
 }
 
@@ -69,6 +71,7 @@ impl Args {
                 };
                 let opt = find(name)
                     .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                args.provided.push(name.to_string());
                 if opt.is_flag {
                     if inline_val.is_some() {
                         return Err(CliError(format!("flag --{name} takes no value")));
@@ -104,6 +107,14 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Whether the user explicitly passed `--name` (as opposed to the
+    /// option resolving through its default). Lets subcommands with
+    /// mutually exclusive selectors — `tspm query --seq|--pid|--top-k`
+    /// — distinguish "given" from "defaulted".
+    pub fn provided(&self, name: &str) -> bool {
+        self.provided.iter().any(|p| p == name)
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -185,6 +196,18 @@ mod tests {
         let a = Args::parse(&sv(&["--out", "o"]), &spec()).unwrap();
         assert_eq!(a.req::<u64>("patients").unwrap(), 100);
         assert_eq!(a.get("mode"), Some("memory"));
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_from_default() {
+        let a = Args::parse(&sv(&["--out", "o", "--verbose"]), &spec()).unwrap();
+        assert!(a.provided("out"));
+        assert!(a.provided("verbose"));
+        // "patients" resolved through its default: get() answers, but it
+        // was never on the command line.
+        assert_eq!(a.get("patients"), Some("100"));
+        assert!(!a.provided("patients"));
+        assert!(!a.provided("mode"));
     }
 
     #[test]

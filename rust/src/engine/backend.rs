@@ -36,7 +36,9 @@
 //! mine stage leaves it on disk and the screen stage runs out of core
 //! ([`crate::sparsity::screen_spilled`]). The paper's "1.33 GB instead
 //! of 43 GB" figure thus extends from the mining phase to the whole
-//! end-to-end run.
+//! end-to-end run. Spilled results are also what the query subsystem
+//! indexes ([`crate::query::index::build`]) — a serving layer answers
+//! point/range queries from them without ever materialising.
 //!
 //! Auto-selection uses [`crate::partition`]'s exact per-patient output
 //! prediction (`n·(n−1)/2` after the optional first-occurrence filter)

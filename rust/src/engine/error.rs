@@ -13,6 +13,7 @@ use crate::config::ConfigError;
 use crate::dbmart::EncodeError;
 use crate::mining::MiningError;
 use crate::partition::PartitionError;
+use crate::query::QueryError;
 use crate::runtime::RuntimeError;
 use std::fmt;
 
@@ -33,6 +34,9 @@ pub enum TspmError {
     Cli(CliError),
     /// PJRT / artifact failures ([`crate::runtime`]).
     Runtime(RuntimeError),
+    /// Query-subsystem failures ([`crate::query`]): corrupt index
+    /// artifacts, unsorted build input, invalid queries.
+    Query(QueryError),
     /// An [`crate::engine::Plan`] that fails validation (empty chain,
     /// ill-ordered stages, missing labels, …).
     Plan(String),
@@ -50,6 +54,7 @@ impl fmt::Display for TspmError {
             TspmError::Config(e) => write!(f, "{e}"),
             TspmError::Cli(e) => write!(f, "{e}"),
             TspmError::Runtime(e) => write!(f, "{e}"),
+            TspmError::Query(e) => write!(f, "{e}"),
             TspmError::Plan(msg) => write!(f, "invalid plan: {msg}"),
             TspmError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
         }
@@ -66,6 +71,7 @@ impl std::error::Error for TspmError {
             TspmError::Config(e) => Some(e),
             TspmError::Cli(e) => Some(e),
             TspmError::Runtime(e) => Some(e),
+            TspmError::Query(e) => Some(e),
             TspmError::Plan(_) | TspmError::Pipeline(_) => None,
         }
     }
@@ -113,6 +119,12 @@ impl From<RuntimeError> for TspmError {
     }
 }
 
+impl From<QueryError> for TspmError {
+    fn from(e: QueryError) -> Self {
+        TspmError::Query(e)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +144,8 @@ mod tests {
         assert!(matches!(r, TspmError::Runtime(_)));
         let e: TspmError = EncodeError("vocab overflow".into()).into();
         assert!(matches!(e, TspmError::Encode(_)));
+        let q: TspmError = QueryError::Invalid("zero buckets".into()).into();
+        assert!(matches!(q, TspmError::Query(_)));
         let i: TspmError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
         assert!(matches!(i, TspmError::Io(_)));
     }

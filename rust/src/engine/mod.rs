@@ -36,6 +36,12 @@
 //! memory budget — with [`SequenceOutput::materialize`] as the explicit
 //! escape hatch. See [`backend`] for the residency policy.
 //!
+//! A spilled mine → screen chain can additionally end in `.index(dir)`:
+//! the run then also writes an immutable query artifact
+//! ([`crate::query::SeqIndex`], returned via [`RunOutput::index`]) that
+//! [`crate::query::QueryService`] serves point/range queries from —
+//! the first consumer of the spilled contract that never materialises.
+//!
 //! The original free functions remain available as the "expert layer"
 //! (see the crate docs); the façade is the supported composition seam —
 //! future scaling work (async backends, caching, sharded serving) plugs
@@ -60,6 +66,7 @@ use crate::metrics::{fmt_bytes, fmt_duration, MemTracker, PhaseTimer};
 use crate::mining::{MiningConfig, SeqRecord, SequenceSet};
 use crate::msmr::{self, MsmrConfig, Selection};
 use crate::partition;
+use crate::query::{self, SeqIndex};
 use crate::runtime::ArtifactSet;
 use crate::seqstore::SeqFileSet;
 use crate::sparsity::{self, ScreenStats, SparsityConfig};
@@ -261,6 +268,9 @@ pub struct RunOutput {
     pub duration_screen_stats: Option<ScreenStats>,
     pub matrix: Option<SeqMatrix>,
     pub selection: Option<Selection>,
+    /// The query-index artifact, when the plan chained `.index(dir)`
+    /// (already on disk; open it with [`crate::query::QueryService`]).
+    pub index: Option<SeqIndex>,
     pub report: RunReport,
 }
 
@@ -366,6 +376,21 @@ impl Engine {
         self
     }
 
+    /// Append the index stage: turn the spilled screen output into an
+    /// immutable query artifact under `out_dir` ([`crate::query`]).
+    /// Only valid on mine → screen chains; the run's residency is
+    /// forced to spilled.
+    pub fn index(self, out_dir: PathBuf) -> Engine {
+        self.index_with(out_dir, query::DEFAULT_BLOCK_RECORDS)
+    }
+
+    /// [`Engine::index`] with an explicit block size (records per index
+    /// block — the query layer's unit of IO and of resident memory).
+    pub fn index_with(mut self, out_dir: PathBuf, block_records: usize) -> Engine {
+        self.stages.push(Stage::Index { out_dir, block_records });
+        self
+    }
+
     // --- execution knobs ---------------------------------------------------
 
     /// Per-patient phenotype labels (`labels[pid] ∈ {0,1}`) for MSMR.
@@ -466,10 +491,14 @@ impl Engine {
         // Residency: chains with in-memory consumers (duration screen,
         // matrix, MSMR) always materialise — Plan::validate already
         // rejected an explicit Spilled there, so only Auto lands here.
-        let out_kind = if plan.spill_capable() {
-            backend::resolve_output(plan.output, kind, &fc, budget)
-        } else {
+        // An index stage forces spilled output whatever the budget: the
+        // builder consumes the screen's spill files directly.
+        let out_kind = if !plan.spill_capable() {
             OutputKind::InMemory
+        } else if plan.index_stage().is_some() {
+            OutputKind::Spilled
+        } else {
+            backend::resolve_output(plan.output, kind, &fc, budget)
         };
         let out_dir = plan
             .out_dir
@@ -543,6 +572,33 @@ impl Engine {
             screen_stats = Some(stats);
         }
 
+        // 2b. Index: stream the sorted spilled screen output once into
+        // the immutable query artifact (mine → screen → index chains
+        // only; validated above).
+        let mut index = None;
+        if let Some((dir, block_records)) = plan.index_stage() {
+            let files = output
+                .as_spilled()
+                .expect("validated: index implies spilled output")
+                .clone();
+            let dir = dir.to_path_buf();
+            let built = timer.run("index", || -> Result<SeqIndex, TspmError> {
+                Ok(query::index::build(
+                    &files,
+                    &dir,
+                    &query::IndexConfig { block_records },
+                    Some(&tracker),
+                )?)
+            })?;
+            stages.push(StageReport {
+                stage: "index".into(),
+                elapsed: timer.elapsed("index").unwrap_or_default(),
+                records_out: built.total_records,
+                bytes_out: built.artifact_bytes,
+            });
+            index = Some(built);
+        }
+
         // 3. Duration-diversity screen (in-memory chains only).
         let mut duration_screen_stats = None;
         if let Some((bucket, min_distinct)) = plan.duration_screen() {
@@ -613,6 +669,7 @@ impl Engine {
             duration_screen_stats,
             matrix,
             selection,
+            index,
             report: RunReport {
                 backend: kind,
                 output: out_kind,
@@ -797,6 +854,57 @@ mod tests {
             );
             files.remove().unwrap();
         }
+    }
+
+    /// `.index(dir)` as a plan stage: the run leaves a spilled screened
+    /// result *and* a query artifact whose answers match the
+    /// materialized records exactly.
+    #[test]
+    fn index_stage_builds_a_queryable_artifact() {
+        let db = small_db();
+        let base = std::env::temp_dir().join("tspm_engine_index_stage");
+        let _ = std::fs::remove_dir_all(&base);
+        let out = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig { work_dir: base.join("work"), ..Default::default() })
+            .screen(SparsityConfig { min_patients: 5, threads: 2 })
+            .out_dir(base.join("run"))
+            .index(base.join("idx"))
+            .run()
+            .unwrap();
+        assert_eq!(out.report.output, OutputKind::Spilled, "index forces spilled output");
+        let names: Vec<&str> = out.report.stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, ["mine", "screen", "index"]);
+        let built = out.index.as_ref().expect("index stage ran");
+        assert_eq!(built.total_records, out.sequences.len() as u64);
+        assert_eq!(built.num_patients, out.sequences.num_patients());
+
+        // The artifact answers exactly what the spilled result holds.
+        let all = out.sequences.clone().materialize().unwrap().records;
+        let svc = crate::query::QueryService::open(&base.join("idx")).unwrap();
+        let mut seqs: Vec<u64> = all.iter().map(|r| r.seq).collect();
+        seqs.dedup();
+        assert_eq!(svc.index().distinct_seqs(), seqs.len() as u64);
+        for &s in seqs.iter().take(10) {
+            let expect: Vec<crate::mining::SeqRecord> =
+                all.iter().copied().filter(|r| r.seq == s).collect();
+            assert_eq!(*svc.by_sequence(s).unwrap(), expect, "seq {s}");
+        }
+
+        // Plans that cannot feed the index are rejected up front.
+        let err = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .index(base.join("idx2"))
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("screen"), "got {err}");
+        let err = Engine::from_dbmart(db)
+            .mine(MiningConfig::default())
+            .screen(SparsityConfig { min_patients: 5, threads: 0 })
+            .index(base.join("idx3"))
+            .output(OutputChoice::InMemory)
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("spill"), "got {err}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! Mine ─▶ (Screen) ─▶ (DurationScreen) ─▶ (Matrix) ─▶ (Msmr)
+//!             └─────▶ (Index)   — spilled mine → screen chains only
 //! ```
 //!
 //! Validation happens **before** any work starts, so a mis-assembled
@@ -37,6 +38,10 @@ pub enum Stage {
     Matrix { duration_bucket_days: Option<u32> },
     /// MSMR feature selection (needs `Matrix` and labels).
     Msmr(MsmrConfig),
+    /// Build a query-index artifact over the spilled screen output
+    /// ([`crate::query::index::build`]). Terminal stage of spilled
+    /// mine → screen chains; the engine forces spilled residency.
+    Index { out_dir: PathBuf, block_records: usize },
 }
 
 impl Stage {
@@ -48,6 +53,7 @@ impl Stage {
             Stage::DurationScreen { .. } => "duration_screen",
             Stage::Matrix { .. } => "matrix",
             Stage::Msmr(_) => "msmr",
+            Stage::Index { .. } => "index",
         }
     }
 
@@ -60,6 +66,7 @@ impl Stage {
             Stage::DurationScreen { .. } => 2,
             Stage::Matrix { .. } => 3,
             Stage::Msmr(_) => 4,
+            Stage::Index { .. } => 5,
         }
     }
 }
@@ -125,7 +132,7 @@ impl Plan {
             let bad = self
                 .stages
                 .iter()
-                .find(|s| !matches!(s, Stage::Mine(_) | Stage::Screen(_)))
+                .find(|s| !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. }))
                 .expect("spill_capable is false");
             return Err(TspmError::Plan(format!(
                 "spilled output supports the mine → screen chain only; stage {:?} needs \
@@ -133,6 +140,42 @@ impl Plan {
                  a previous run's result yourself",
                 bad.name()
             )));
+        }
+        if let Some((_, block_records)) = self.index_stage() {
+            // The index consumes the *sorted* spill files the screen
+            // writes, so it is validated like OutputChoice::Spilled plus
+            // a hard dependency on the screen stage.
+            if !self.spill_capable() {
+                let bad = self
+                    .stages
+                    .iter()
+                    .find(|s| {
+                        !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. })
+                    })
+                    .expect("spill_capable is false");
+                return Err(TspmError::Plan(format!(
+                    "index builds from spill files; stage {:?} needs in-memory records \
+                     — index plans are mine → screen → index only",
+                    bad.name()
+                )));
+            }
+            if self.screen_config().is_none() {
+                return Err(TspmError::Plan(
+                    "index needs the sorted spilled screen output — insert .screen(...) \
+                     before .index(dir)"
+                        .into(),
+                ));
+            }
+            if self.output == OutputChoice::InMemory {
+                return Err(TspmError::Plan(
+                    "index builds from spill files — drop .output(OutputChoice::InMemory) \
+                     (index plans force spilled residency)"
+                        .into(),
+                ));
+            }
+            if block_records == 0 {
+                return Err(TspmError::Plan("index: block_records must be ≥ 1".into()));
+            }
         }
         for stage in &self.stages {
             match stage {
@@ -214,11 +257,24 @@ impl Plan {
         self.msmr_config().is_some()
     }
 
-    /// Can this chain produce a spilled result? Only mine → screen can:
-    /// every later stage (duration screen, matrix, MSMR) consumes
-    /// in-memory records, so those plans always materialise.
+    /// `(out_dir, block_records)` of the index stage, if present.
+    pub fn index_stage(&self) -> Option<(&std::path::Path, usize)> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Index { out_dir, block_records } => {
+                Some((out_dir.as_path(), *block_records))
+            }
+            _ => None,
+        })
+    }
+
+    /// Can this chain produce a spilled result? Only mine → screen
+    /// (optionally → index) can: every other downstream stage (duration
+    /// screen, matrix, MSMR) consumes in-memory records, so those plans
+    /// always materialise.
     pub fn spill_capable(&self) -> bool {
-        self.stages.iter().all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_)))
+        self.stages
+            .iter()
+            .all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. }))
     }
 
     /// Human-readable chain, e.g. `mine → screen → matrix → msmr`.
@@ -371,6 +427,61 @@ mod tests {
         // Auto stays valid on the same chain (it resolves to in-memory).
         p.output = OutputChoice::Auto;
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn index_stage_validation() {
+        let idx = |block_records| Stage::Index {
+            out_dir: PathBuf::from("/tmp/tspm_plan_idx"),
+            block_records,
+        };
+        // The canonical chain validates, under Auto and explicit Spilled.
+        for output in [OutputChoice::Auto, OutputChoice::Spilled] {
+            let mut p = plan_of(vec![
+                Stage::Mine(MiningConfig::default()),
+                Stage::Screen(SparsityConfig::default()),
+                idx(4096),
+            ]);
+            p.output = output;
+            p.validate().unwrap();
+            assert!(p.spill_capable());
+            assert_eq!(p.describe(), "mine → screen → index");
+            assert_eq!(p.index_stage().unwrap().1, 4096);
+        }
+        // Index without the screen is rejected (mine-only spill output
+        // is unsorted).
+        let err = plan_of(vec![Stage::Mine(MiningConfig::default()), idx(4096)])
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("screen"), "got {err}");
+        // Index cannot share a chain with in-memory consumers.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            Stage::Matrix { duration_bucket_days: None },
+            idx(4096),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("matrix"), "got {err}");
+        // Explicit in-memory residency contradicts the index stage.
+        let mut p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            idx(4096),
+        ]);
+        p.output = OutputChoice::InMemory;
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("spill"), "got {err}");
+        // Degenerate block size.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            idx(0),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("block_records"), "got {err}");
     }
 
     #[test]

@@ -80,6 +80,27 @@
 //! [`seqstore::SeqFileSet`] a caching or serving layer can consume
 //! directly.
 //!
+//! ### Query the results
+//!
+//! A spilled run becomes a **servable artifact**: [`query::index::build`]
+//! streams the sorted spill files exactly once into an immutable,
+//! versioned, block-indexed artifact (manifest + data + block index +
+//! per-sequence table — see the [`query`] module docs for the format
+//! and its compatibility guarantee), and [`query::QueryService`]
+//! answers point/range queries over it — `by_sequence`, `by_patient`,
+//! `patients_with(seq, duration range)`, `top_k_by_support`,
+//! `duration_histogram` — reading one block at a time, never the whole
+//! set, with a size-bounded LRU result cache in front (hits/misses
+//! observable via [`query::QueryService::stats`]). On the engine,
+//! chain `.index(dir)` after a spilled screen and the artifact is built
+//! as a pipeline stage ([`engine::RunOutput::index`]); on the CLI:
+//!
+//! ```text
+//! tspm mine  --input db.csv --sparsity 50 --out-dir run/
+//! tspm index --in-dir run/  --out-dir idx/
+//! tspm query --index-dir idx/ --seq 420000012
+//! ```
+//!
 //! ## The expert layer
 //!
 //! Every stage remains callable directly for fine-grained control — the
@@ -99,8 +120,9 @@
 //!    (sort-then-scan screening), [`baseline`] (the original tSPM for
 //!    comparison), [`partition`] (adaptive memory partitioning),
 //!    [`pipeline`] (streaming orchestrator with backpressure).
-//! 3. **Analytics on mined sequences** — [`util`] (sequence filters and
-//!    transitive end-sets), [`matrix`] (patient×sequence matrices),
+//! 3. **Analytics on mined sequences** — [`query`] (indexed artifacts +
+//!    cached query service over spilled results), [`util`] (sequence
+//!    filters and transitive end-sets), [`matrix`] (patient×sequence matrices),
 //!    [`msmr`] (MSMR feature selection via joint mutual information),
 //!    [`ml`] (MLHO-style classification workflow), [`postcovid`] (the WHO
 //!    Post COVID-19 definition), all optionally accelerated through
@@ -134,6 +156,7 @@ pub mod partition;
 pub mod pipeline;
 pub mod postcovid;
 pub mod psort;
+pub mod query;
 pub mod rng;
 pub mod runtime;
 pub mod seqstore;
@@ -150,6 +173,7 @@ pub mod prelude {
     };
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
     pub use crate::msmr::MsmrConfig;
+    pub use crate::query::{QueryService, SeqIndex};
     pub use crate::sparsity::SparsityConfig;
     pub use crate::synthea::SyntheaConfig;
 }

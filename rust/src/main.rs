@@ -5,6 +5,8 @@
 //! * `synth`     — generate a synthetic clinical dbmart (CSV + truth)
 //! * `mine`      — mine transitive sequences from a dbmart CSV
 //! * `screen`    — sparsity-screen a mined sequence file
+//! * `index`     — build a query-index artifact over a spilled run
+//! * `query`     — point/range queries against an index artifact (JSON out)
 //! * `postcovid` — vignette 2: WHO Post COVID-19 identification
 //! * `mlho`      — vignette 1: MSMR + logistic-regression workflow
 //! * `bench`     — regenerate the paper's tables (table1|table2|enduser)
@@ -20,9 +22,11 @@ use tspm_plus::cli::{usage, Args, OptSpec};
 use tspm_plus::config::RunConfig;
 use tspm_plus::dbmart::{format_seq, DbMart, NumericDbMart};
 use tspm_plus::engine::{BackendChoice, Engine, OutputChoice, SequenceOutput};
+use tspm_plus::json::Json;
 use tspm_plus::metrics::{fmt_bytes, PhaseTimer};
 use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{self, PostCovidConfig};
+use tspm_plus::query::{self, IndexConfig, QueryService};
 use tspm_plus::runtime::ArtifactSet;
 use tspm_plus::sparsity::{self, SparsityConfig};
 use tspm_plus::synthea::{Scenario, SyntheaConfig, COVID_CODE, SYMPTOM_CODES};
@@ -38,6 +42,8 @@ fn main() -> ExitCode {
         "synth" => cmd_synth(rest),
         "mine" => cmd_mine(rest),
         "screen" => cmd_screen(rest),
+        "index" => cmd_index(rest),
+        "query" => cmd_query(rest),
         "postcovid" => cmd_postcovid(rest),
         "mlho" => cmd_mlho(rest),
         "bench" => cmd_bench(rest),
@@ -64,6 +70,8 @@ fn print_global_help() {
          \x20 synth      generate a synthetic clinical dbmart\n\
          \x20 mine       mine transitive sequences (+durations) from a dbmart CSV\n\
          \x20 screen     sparsity-screen a mined sequence file\n\
+         \x20 index      build a query-index artifact over a spilled run\n\
+         \x20 query      point/range queries against an index (JSON output)\n\
          \x20 postcovid  vignette 2: WHO Post COVID-19 identification\n\
          \x20 mlho       vignette 1: MSMR + classifier workflow\n\
          \x20 bench      regenerate paper tables (table1|table2|enduser)\n\
@@ -118,7 +126,6 @@ fn cmd_synth(argv: &[String]) -> Result<(), String> {
         out.display()
     );
     if let Some(truth_path) = a.get("truth-out") {
-        use tspm_plus::json::Json;
         let truth = Json::obj(vec![
             (
                 "postcovid",
@@ -242,12 +249,18 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
                 db.lookup.to_json().to_string_pretty(),
             )
             .map_err(|e| e.to_string())?;
+            // The versioned manifest (counts + per-file checksums) lets
+            // `tspm index` verify this run before building; sorted =
+            // screened (screen_spilled writes global (seq,pid,duration)
+            // order, raw mined spills do not).
+            query::write_spill_manifest(&dir, &files, result.screen_stats.is_some())
+                .map_err(|e| e.to_string())?;
             if a.flag("explain") {
                 eprintln!("note: --explain is skipped for spilled output");
             }
             println!(
                 "mined {} sequences from {} patients ({} entries) → {} spill file(s) \
-                 under {} ({}), lookup.json alongside",
+                 under {} ({}), lookup.json + manifest.json alongside",
                 files.total_records,
                 db.num_patients(),
                 db.len(),
@@ -338,6 +351,269 @@ fn cmd_screen(argv: &[String]) -> Result<(), String> {
         a.get("out").unwrap()
     );
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// index
+// ---------------------------------------------------------------------------
+
+fn cmd_index(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("in-dir", "spilled run directory (tspm mine --out-dir)"),
+        OptSpec::required("out-dir", "directory for the index artifact"),
+        OptSpec::value("block-size", Some("4096"), "records per index block"),
+        OptSpec::flag("no-verify", "skip input checksum verification"),
+    ];
+    if wants_help(argv) {
+        print!(
+            "{}",
+            usage("tspm index", "build a query-index artifact over a spilled run", &spec)
+        );
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let in_dir = PathBuf::from(a.get("in-dir").unwrap());
+    let out_dir = PathBuf::from(a.get("out-dir").unwrap());
+    let block_records: usize = a.req("block-size").map_err(|e| e.to_string())?;
+    let mut timer = PhaseTimer::new();
+
+    let manifest = query::read_spill_manifest(&in_dir).map_err(|e| {
+        format!("{e}\nhint: the input of tspm index is a `tspm mine --out-dir` directory")
+    })?;
+    if !manifest.sorted {
+        return Err(format!(
+            "{}: the spilled run is not sorted — the index needs the *screened* \
+             result; re-run `tspm mine --out-dir` with --sparsity > 0",
+            in_dir.display()
+        ));
+    }
+    // Verification is fused into the build's streaming pass
+    // (build_verified) so the input is read once, not twice.
+    let cfg = IndexConfig { block_records };
+    let built = timer
+        .run("build", || {
+            if a.flag("no-verify") {
+                query::index::build(&manifest.files, &out_dir, &cfg, None)
+            } else {
+                query::index::build_verified(&manifest, &out_dir, &cfg, None)
+            }
+        })
+        .map_err(|e| e.to_string())?;
+    // Carry the lookup tables alongside so downstream consumers can
+    // translate numeric ids without going back to the mine directory.
+    let lookup = in_dir.join("lookup.json");
+    if lookup.exists() {
+        std::fs::copy(&lookup, out_dir.join("lookup.json")).map_err(|e| e.to_string())?;
+    }
+    println!(
+        "indexed {} records / {} distinct sequences → {} ({} blocks of {} records, {})",
+        built.total_records,
+        built.distinct_seqs(),
+        out_dir.display(),
+        built.blocks.len(),
+        block_records,
+        fmt_bytes(built.artifact_bytes),
+    );
+    print!("{}", timer.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// query
+// ---------------------------------------------------------------------------
+
+/// One parsed `tspm query` request (exactly one primary selector).
+struct QuerySpec {
+    seq: Option<u64>,
+    pid: Option<u32>,
+    top_k: Option<usize>,
+    histogram: Option<usize>,
+    dur_min: Option<u32>,
+    dur_max: Option<u32>,
+    limit: usize,
+}
+
+fn cmd_query(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("index-dir", "index artifact directory (tspm index --out-dir)"),
+        OptSpec::value("seq", None, "sequence id — return its records"),
+        OptSpec::value("pid", None, "patient id — return all of the patient's records"),
+        OptSpec::value("top-k", None, "return the k sequences with the most distinct patients"),
+        OptSpec::value("histogram", None, "with --seq: duration histogram with this many buckets"),
+        OptSpec::value("duration-min", None, "with --seq: only durations ≥ this (patients_with)"),
+        OptSpec::value("duration-max", None, "with --seq: only durations ≤ this (patients_with)"),
+        OptSpec::value("limit", Some("1000"), "truncate record/patient lists to this many entries"),
+        OptSpec::value("repeat", Some("1"), "run the query this many times (exercises the cache)"),
+        OptSpec::flag("stats", "include cache statistics in the JSON output"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm query", "query an index artifact (JSON to stdout)", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let q = QuerySpec {
+        seq: a.get_parsed("seq").map_err(|e| e.to_string())?,
+        pid: a.get_parsed("pid").map_err(|e| e.to_string())?,
+        top_k: a.get_parsed("top-k").map_err(|e| e.to_string())?,
+        histogram: a.get_parsed("histogram").map_err(|e| e.to_string())?,
+        dur_min: a.get_parsed("duration-min").map_err(|e| e.to_string())?,
+        dur_max: a.get_parsed("duration-max").map_err(|e| e.to_string())?,
+        limit: a.req("limit").map_err(|e| e.to_string())?,
+    };
+    let selectors =
+        [q.seq.is_some(), q.pid.is_some(), q.top_k.is_some()].iter().filter(|&&s| s).count();
+    if selectors != 1 {
+        return Err("pick exactly one of --seq, --pid, --top-k".into());
+    }
+    if (q.histogram.is_some() || q.dur_min.is_some() || q.dur_max.is_some()) && q.seq.is_none() {
+        return Err("--histogram and --duration-min/--duration-max need --seq".into());
+    }
+    if q.histogram.is_some() && (q.dur_min.is_some() || q.dur_max.is_some()) {
+        return Err("--histogram and --duration-min/--duration-max are mutually exclusive".into());
+    }
+    let repeat: usize = a.req("repeat").map_err(|e| e.to_string())?;
+    let repeat = repeat.max(1);
+
+    let svc = QueryService::open(&PathBuf::from(a.get("index-dir").unwrap()))
+        .map_err(|e| e.to_string())?;
+    let mut latencies: Vec<f64> = Vec::with_capacity(repeat);
+    let mut body = Json::Null;
+    for _ in 0..repeat {
+        let t = std::time::Instant::now();
+        body = run_query(&svc, &q)?;
+        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let Json::Obj(mut obj) = body else { unreachable!("run_query returns objects") };
+    obj.insert(
+        "latency_ms".to_string(),
+        Json::Arr(latencies.iter().map(|&l| Json::from(l)).collect()),
+    );
+    if a.flag("stats") {
+        let st = svc.stats();
+        obj.insert(
+            "stats".to_string(),
+            Json::obj(vec![
+                ("hits", Json::from(st.hits)),
+                ("misses", Json::from(st.misses)),
+                ("evictions", Json::from(st.evictions)),
+                ("cached_entries", Json::from(st.cached_entries)),
+                ("cached_bytes", Json::from(st.cached_bytes)),
+            ]),
+        );
+    }
+    print!("{}", Json::Obj(obj).to_string_pretty());
+    Ok(())
+}
+
+fn run_query(svc: &QueryService, q: &QuerySpec) -> Result<Json, String> {
+    if let Some(k) = q.top_k {
+        let got = svc.top_k_by_support(k).map_err(|e| e.to_string())?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("top_k")),
+            ("k", Json::from(k)),
+            (
+                "sequences",
+                Json::Arr(
+                    got.iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("seq", Json::from(s.seq)),
+                                ("patients", Json::from(s.patients as u64)),
+                                ("records", Json::from(s.records)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if let Some(p) = q.pid {
+        let got = svc.by_patient(p).map_err(|e| e.to_string())?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("by_patient")),
+            ("pid", Json::from(p as u64)),
+            ("count", Json::from(got.len())),
+            ("returned", Json::from(got.len().min(q.limit))),
+            (
+                "records",
+                Json::Arr(
+                    got.iter()
+                        .take(q.limit)
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("seq", Json::from(r.seq)),
+                                ("duration", Json::from(r.duration as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    let s = q.seq.expect("validated: a selector is present");
+    if let Some(n) = q.histogram {
+        let h = svc.duration_histogram(s, n).map_err(|e| e.to_string())?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("duration_histogram")),
+            ("seq", Json::from(s)),
+            ("duration_min", Json::from(h.dur_min as u64)),
+            ("duration_max", Json::from(h.dur_max as u64)),
+            ("count", Json::from(h.total)),
+            (
+                "buckets",
+                Json::Arr(
+                    h.buckets
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("lo", Json::from(b.lo as u64)),
+                                ("hi", Json::from(b.hi as u64)),
+                                ("count", Json::from(b.count)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if q.dur_min.is_some() || q.dur_max.is_some() {
+        let lo = q.dur_min.unwrap_or(0);
+        let hi = q.dur_max.unwrap_or(u32::MAX);
+        let got = svc.patients_with(s, lo, hi).map_err(|e| e.to_string())?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("patients_with")),
+            ("seq", Json::from(s)),
+            ("duration_min", Json::from(lo as u64)),
+            ("duration_max", Json::from(hi as u64)),
+            ("count", Json::from(got.len())),
+            ("returned", Json::from(got.len().min(q.limit))),
+            (
+                "patients",
+                Json::Arr(got.iter().take(q.limit).map(|&p| Json::from(p as u64)).collect()),
+            ),
+        ]));
+    }
+    let got = svc.by_sequence(s).map_err(|e| e.to_string())?;
+    Ok(Json::obj(vec![
+        ("query", Json::from("by_sequence")),
+        ("seq", Json::from(s)),
+        ("count", Json::from(got.len())),
+        ("returned", Json::from(got.len().min(q.limit))),
+        (
+            "records",
+            Json::Arr(
+                got.iter()
+                    .take(q.limit)
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("pid", Json::from(r.pid as u64)),
+                            ("duration", Json::from(r.duration as u64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,166 @@
+//! Size-bounded LRU cache keyed by canonicalized query strings.
+//!
+//! The cache is deliberately tiny and dependency-free: a `HashMap` for
+//! lookup plus a `BTreeMap<stamp, key>` recency list, bounded by an
+//! approximate byte budget rather than an entry count (query results
+//! range from a 16-byte top-k row to a multi-megabyte record list, so
+//! counting entries would let one giant answer evict nothing while a
+//! thousand tiny ones thrash). Eviction is strict LRU: every `get` hit
+//! re-stamps the entry; `put` evicts oldest-first until the new entry
+//! fits. A value larger than the whole budget is simply not cached.
+
+use std::collections::{BTreeMap, HashMap};
+
+struct Slot<V> {
+    value: V,
+    bytes: usize,
+    stamp: u64,
+}
+
+/// A byte-bounded LRU map from canonical query keys to cloneable
+/// results. Not thread-safe by itself — [`crate::query::QueryService`]
+/// wraps it in a `Mutex`.
+pub struct LruCache<V: Clone> {
+    capacity_bytes: usize,
+    map: HashMap<String, Slot<V>>,
+    order: BTreeMap<u64, String>,
+    next_stamp: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+impl<V: Clone> LruCache<V> {
+    pub fn new(capacity_bytes: usize) -> LruCache<V> {
+        LruCache {
+            capacity_bytes,
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            next_stamp: 0,
+            bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look a key up; a hit refreshes its recency.
+    pub fn get(&mut self, key: &str) -> Option<V> {
+        let slot = self.map.get_mut(key)?;
+        self.order.remove(&slot.stamp);
+        slot.stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.order.insert(slot.stamp, key.to_string());
+        Some(slot.value.clone())
+    }
+
+    /// Insert (or replace) a key, evicting least-recently-used entries
+    /// until `bytes` fits the budget. Oversized values are dropped.
+    pub fn put(&mut self, key: String, value: V, bytes: usize) {
+        if self.capacity_bytes == 0 || bytes > self.capacity_bytes {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.order.remove(&old.stamp);
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.capacity_bytes {
+            let Some((_, victim)) = self.order.pop_first() else { break };
+            if let Some(old) = self.map.remove(&victim) {
+                self.bytes -= old.bytes;
+            }
+            self.evictions += 1;
+        }
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.order.insert(stamp, key.clone());
+        self.bytes += bytes;
+        self.map.insert(key, Slot { value, bytes, stamp });
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Approximate bytes of all cached values.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Entries evicted to make room since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_after_put_round_trips() {
+        let mut c: LruCache<String> = LruCache::new(1024);
+        assert!(c.is_empty());
+        c.put("seq:1".into(), "a".into(), 100);
+        assert_eq!(c.get("seq:1").as_deref(), Some("a"));
+        assert_eq!(c.get("seq:2"), None);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut c: LruCache<u32> = LruCache::new(300);
+        c.put("a".into(), 1, 100);
+        c.put("b".into(), 2, 100);
+        c.put("c".into(), 3, 100);
+        // Touch "a" so "b" becomes the LRU victim.
+        assert_eq!(c.get("a"), Some(1));
+        c.put("d".into(), 4, 100);
+        assert_eq!(c.get("b"), None, "b was least recently used");
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.get("c"), Some(3));
+        assert_eq!(c.get("d"), Some(4));
+        assert_eq!(c.evictions(), 1);
+        assert!(c.bytes() <= 300);
+    }
+
+    #[test]
+    fn replacement_updates_bytes_without_duplication() {
+        let mut c: LruCache<u32> = LruCache::new(300);
+        c.put("a".into(), 1, 100);
+        c.put("a".into(), 2, 250);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 250);
+        assert_eq!(c.get("a"), Some(2));
+    }
+
+    #[test]
+    fn oversized_and_zero_capacity_are_no_ops() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("huge".into(), 1, 101);
+        assert!(c.is_empty());
+        let mut z: LruCache<u32> = LruCache::new(0);
+        z.put("a".into(), 1, 1);
+        assert!(z.is_empty());
+        assert_eq!(z.get("a"), None);
+    }
+
+    #[test]
+    fn eviction_frees_enough_for_a_large_entry() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        for i in 0..10 {
+            c.put(format!("k{i}"), i, 10);
+        }
+        assert_eq!(c.len(), 10);
+        c.put("big".into(), 99, 95);
+        assert_eq!(c.get("big"), Some(99));
+        assert!(c.bytes() <= 100, "bytes {}", c.bytes());
+        assert!(c.evictions() >= 9);
+    }
+}

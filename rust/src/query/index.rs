@@ -1,0 +1,1118 @@
+//! Index-artifact builder and loader — see the [module docs](crate::query)
+//! for the on-disk layout and the compatibility guarantee.
+//!
+//! [`build`] streams a sorted [`SeqFileSet`] exactly once, copying the
+//! records into the artifact's own data file while accumulating the
+//! sparse block index and the per-sequence table, so the artifact is
+//! self-contained (the source spill directory can be deleted afterwards)
+//! and the build's resident set is one read buffer plus the two tables.
+//! [`SeqIndex::open`] validates the manifest's format/version, both
+//! table checksums, and the data file's record count before answering
+//! anything; [`SeqIndex::verify_data`] optionally re-checksums the full
+//! data file.
+
+use super::QueryError;
+use crate::json::Json;
+use crate::metrics::MemTracker;
+use crate::mining::SeqRecord;
+use crate::seqstore::{self, SeqFileSet, SeqReader, SeqWriter, RECORD_BYTES};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Manifest `format` value of an index artifact.
+pub const INDEX_FORMAT: &str = "tspm-seqindex";
+/// Layout version this build reads and writes. Bump on any change to
+/// the file layouts below; [`SeqIndex::open`] refuses other versions.
+pub const INDEX_FORMAT_VERSION: u64 = 1;
+/// Manifest `format` value of a spilled-run input manifest
+/// (`tspm mine --out-dir`).
+pub const SPILL_FORMAT: &str = "tspm-spill";
+/// Version of the spill manifest scheme.
+pub const SPILL_FORMAT_VERSION: u64 = 1;
+
+/// Default records per index block — the query layer's unit of IO and
+/// of resident memory (64 KiB of records at the 16-byte record size).
+pub const DEFAULT_BLOCK_RECORDS: usize = 4096;
+
+const MANIFEST_FILE: &str = "manifest.json";
+const DATA_FILE: &str = "data_0000.tspm";
+const BLOCKS_FILE: &str = "blocks.bin";
+const SEQS_FILE: &str = "seqs.bin";
+
+const BLOCKS_MAGIC: &[u8; 8] = b"TSPMBIX1";
+const SEQS_MAGIC: &[u8; 8] = b"TSPMSQT1";
+const TABLE_HEADER_BYTES: usize = 16; // magic + count
+const BLOCK_ENTRY_BYTES: usize = 52;
+const SEQ_ENTRY_BYTES: usize = 36;
+
+const ZERO_REC: SeqRecord = SeqRecord { seq: 0, pid: 0, duration: 0 };
+
+// ---------------------------------------------------------------------------
+// Checksums
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV1A64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a 64 state.
+#[inline]
+pub fn fnv1a64(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x100_0000_01b3);
+    }
+    state
+}
+
+fn checksum_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Stream one TSPMSEQ1 file, returning its record count and the hex
+/// FNV-1a checksum over the 16-byte LE record encodings (header
+/// excluded, so the checksum is a property of the record sequence, not
+/// of incidental file framing).
+pub fn checksum_records(path: &Path) -> Result<(u64, String), QueryError> {
+    let mut reader = SeqReader::open(path)?;
+    let mut buf = vec![ZERO_REC; 8192];
+    let mut h = FNV1A64_INIT;
+    let mut n = 0u64;
+    loop {
+        let got = reader.read_batch(&mut buf)?;
+        if got == 0 {
+            break;
+        }
+        for &r in &buf[..got] {
+            h = fnv1a64(h, &seqstore::encode_record(r));
+        }
+        n += got as u64;
+    }
+    Ok((n, checksum_hex(h)))
+}
+
+// ---------------------------------------------------------------------------
+// Spill-run input manifests (tspm mine --out-dir)
+// ---------------------------------------------------------------------------
+
+/// The verified description of a spilled run directory: the
+/// reconstructed [`SeqFileSet`], whether its records are globally
+/// sorted (the screen's spill order), and each file's recorded count +
+/// checksum for [`SpillManifest::verify`].
+#[derive(Clone, Debug)]
+pub struct SpillManifest {
+    pub files: SeqFileSet,
+    /// Whether the records are globally `(seq, pid, duration)`-sorted —
+    /// true exactly when the run included the sparsity screen.
+    pub sorted: bool,
+    /// `(path, records, checksum)` per spill file, as recorded at write
+    /// time.
+    pub per_file: Vec<(PathBuf, u64, String)>,
+}
+
+impl SpillManifest {
+    /// Re-checksum every spill file against the manifest: detects
+    /// deleted, truncated, or otherwise modified inputs before an index
+    /// build consumes them.
+    pub fn verify(&self) -> Result<(), QueryError> {
+        let mut total = 0u64;
+        for (path, records, checksum) in &self.per_file {
+            let (n, sum) = checksum_records(path)?;
+            if n != *records || sum != *checksum {
+                return Err(QueryError::Artifact(format!(
+                    "{}: spill file changed since its manifest was written \
+                     (recorded {records} records / {checksum}, found {n} / {sum})",
+                    path.display()
+                )));
+            }
+            total += n;
+        }
+        if total != self.files.total_records {
+            return Err(QueryError::Artifact(format!(
+                "spill manifest total_records {} disagrees with the per-file sum {total}",
+                self.files.total_records
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Write `manifest.json` describing a spilled run into `dir`: format +
+/// version, counts, sortedness, and each file's record count + record
+/// checksum. `tspm mine --out-dir` calls this so `tspm index` can
+/// verify its input before building. File entries are stored relative
+/// to `dir` (spill files may sit in subdirectories, e.g. the `mine/`
+/// directory of an unscreened run). Computing the checksums costs one
+/// sequential re-read of the spill files — the price of the integrity
+/// record; [`build_verified`] then re-checks them for free during its
+/// own streaming pass.
+pub fn write_spill_manifest(
+    dir: &Path,
+    files: &SeqFileSet,
+    sorted: bool,
+) -> Result<(), QueryError> {
+    let mut entries = Vec::with_capacity(files.files.len());
+    for f in &files.files {
+        // Relative to the manifest's directory when possible; an
+        // absolute fallback keeps out-of-tree files resolvable
+        // (`dir.join(absolute)` is the absolute path again).
+        let rel = f.strip_prefix(dir).unwrap_or(f);
+        let name = rel
+            .to_str()
+            .ok_or_else(|| {
+                QueryError::Invalid(format!(
+                    "{}: spill file needs a UTF-8 path for the manifest",
+                    f.display()
+                ))
+            })?
+            .to_string();
+        let (n, sum) = checksum_records(f)?;
+        entries.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("records", Json::from(n)),
+            ("checksum", Json::from(sum)),
+        ]));
+    }
+    let j = Json::obj(vec![
+        ("format", Json::from(SPILL_FORMAT)),
+        ("version", Json::from(SPILL_FORMAT_VERSION)),
+        ("total_records", Json::from(files.total_records)),
+        ("num_patients", Json::from(files.num_patients as u64)),
+        ("num_phenx", Json::from(files.num_phenx as u64)),
+        ("sorted", Json::from(sorted)),
+        ("files", Json::Arr(entries)),
+    ]);
+    std::fs::write(dir.join(MANIFEST_FILE), j.to_string_pretty())?;
+    Ok(())
+}
+
+/// Read a spilled run's `manifest.json` back; file names resolve
+/// relative to `dir`. Checksums are *not* re-verified here — call
+/// [`SpillManifest::verify`] for that.
+pub fn read_spill_manifest(dir: &Path) -> Result<SpillManifest, QueryError> {
+    let path = dir.join(MANIFEST_FILE);
+    let j = read_manifest_json(&path, SPILL_FORMAT, SPILL_FORMAT_VERSION)?;
+    let total_records = req_u64(&j, "total_records", &path)?;
+    let num_patients = req_u64(&j, "num_patients", &path)? as u32;
+    let num_phenx = req_u64(&j, "num_phenx", &path)? as u32;
+    let sorted = j
+        .get("sorted")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| field_err(&path, "sorted"))?;
+    let list = j
+        .get("files")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| field_err(&path, "files"))?;
+    let mut files = Vec::with_capacity(list.len());
+    let mut per_file = Vec::with_capacity(list.len());
+    for item in list {
+        let name = item
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| field_err(&path, "files[].name"))?;
+        let records = req_u64(item, "records", &path)?;
+        let checksum = item
+            .get("checksum")
+            .and_then(Json::as_str)
+            .ok_or_else(|| field_err(&path, "files[].checksum"))?;
+        let full = dir.join(name);
+        files.push(full.clone());
+        per_file.push((full, records, checksum.to_string()));
+    }
+    Ok(SpillManifest {
+        files: SeqFileSet { files, total_records, num_patients, num_phenx },
+        sorted,
+        per_file,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Index entries and configuration
+// ---------------------------------------------------------------------------
+
+/// One entry of the sparse block index: a fixed-size run of
+/// `block_records` consecutive records of the data file, with the key
+/// range it spans and per-block pid/duration bounds for pruning.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// First record (0-based offset into the data file).
+    pub start: u64,
+    /// Records in the block (equal to the block size except the tail).
+    pub len: u32,
+    pub first_seq: u64,
+    pub first_pid: u32,
+    pub last_seq: u64,
+    pub last_pid: u32,
+    /// Smallest/largest pid occurring anywhere in the block (not the
+    /// first/last — sequences restart the pid order inside a block).
+    pub pid_min: u32,
+    pub pid_max: u32,
+    /// Duration bounds over the block, for range-query pruning.
+    pub dur_min: u32,
+    pub dur_max: u32,
+}
+
+/// One entry of the per-sequence table: where the sequence's records
+/// live and its pre-aggregated support statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SeqTableEntry {
+    pub seq: u64,
+    /// First record of the sequence's run in the data file.
+    pub start: u64,
+    /// Records in the run.
+    pub count: u64,
+    /// Distinct patients — the sequence's support (the same count the
+    /// sparsity screen thresholds on).
+    pub patients: u32,
+    pub dur_min: u32,
+    pub dur_max: u32,
+}
+
+/// Build-time configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexConfig {
+    /// Records per index block ([`DEFAULT_BLOCK_RECORDS`]); also the
+    /// query service's read-buffer size.
+    pub block_records: usize,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig { block_records: DEFAULT_BLOCK_RECORDS }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The artifact
+// ---------------------------------------------------------------------------
+
+/// A loaded (or just-built) index artifact: the resident tables plus
+/// the path of the on-disk data file they describe.
+#[derive(Clone, Debug)]
+pub struct SeqIndex {
+    /// The artifact directory.
+    pub dir: PathBuf,
+    /// The TSPMSEQ1 data file all offsets refer to.
+    pub data_path: PathBuf,
+    pub block_records: usize,
+    pub total_records: u64,
+    pub num_patients: u32,
+    pub num_phenx: u32,
+    /// Hex FNV-1a checksum over the data file's record encodings (from
+    /// the manifest; verified on demand by [`SeqIndex::verify_data`]).
+    pub data_checksum: String,
+    /// Total on-disk size of the artifact (data + tables + manifest).
+    pub artifact_bytes: u64,
+    /// The sparse block index, in data-file order.
+    pub blocks: Vec<BlockMeta>,
+    /// The per-sequence table, sorted by `seq`.
+    pub seqs: Vec<SeqTableEntry>,
+}
+
+impl SeqIndex {
+    /// Number of distinct sequences in the artifact.
+    pub fn distinct_seqs(&self) -> u64 {
+        self.seqs.len() as u64
+    }
+
+    /// The table entry for `seq`, if the sequence is present.
+    pub fn seq_entry(&self, seq: u64) -> Option<&SeqTableEntry> {
+        self.seqs
+            .binary_search_by_key(&seq, |e| e.seq)
+            .ok()
+            .map(|i| &self.seqs[i])
+    }
+
+    /// Open an artifact directory: parse + version-check the manifest,
+    /// load both tables (verifying their checksums), and cross-check
+    /// the data file's header count. O(tables), not O(data) — use
+    /// [`SeqIndex::verify_data`] for the full data checksum.
+    pub fn open(dir: &Path) -> Result<SeqIndex, QueryError> {
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let j = read_manifest_json(&manifest_path, INDEX_FORMAT, INDEX_FORMAT_VERSION)?;
+        let block_records = req_u64(&j, "block_records", &manifest_path)? as usize;
+        if block_records == 0 {
+            return Err(QueryError::Artifact(format!(
+                "{}: block_records must be ≥ 1",
+                manifest_path.display()
+            )));
+        }
+        let total_records = req_u64(&j, "total_records", &manifest_path)?;
+        let num_patients = req_u64(&j, "num_patients", &manifest_path)? as u32;
+        let num_phenx = req_u64(&j, "num_phenx", &manifest_path)? as u32;
+
+        let (data_name, data_records, data_checksum) =
+            file_section(&j, "data", &manifest_path)?;
+        let (blocks_name, block_count, blocks_checksum) =
+            file_section(&j, "blocks", &manifest_path)?;
+        let (seqs_name, seq_count, seqs_checksum) =
+            file_section(&j, "seqs", &manifest_path)?;
+        if data_records != total_records {
+            return Err(QueryError::Artifact(format!(
+                "{}: data.records {data_records} disagrees with total_records {total_records}",
+                manifest_path.display()
+            )));
+        }
+
+        let blocks_bytes = read_table_file(
+            &dir.join(&blocks_name),
+            BLOCKS_MAGIC,
+            block_count,
+            BLOCK_ENTRY_BYTES,
+            &blocks_checksum,
+        )?;
+        let mut blocks = Vec::with_capacity(block_count as usize);
+        let mut off = TABLE_HEADER_BYTES;
+        for _ in 0..block_count {
+            blocks.push(BlockMeta {
+                start: read_u64(&blocks_bytes, &mut off),
+                len: read_u32(&blocks_bytes, &mut off),
+                first_seq: read_u64(&blocks_bytes, &mut off),
+                first_pid: read_u32(&blocks_bytes, &mut off),
+                last_seq: read_u64(&blocks_bytes, &mut off),
+                last_pid: read_u32(&blocks_bytes, &mut off),
+                pid_min: read_u32(&blocks_bytes, &mut off),
+                pid_max: read_u32(&blocks_bytes, &mut off),
+                dur_min: read_u32(&blocks_bytes, &mut off),
+                dur_max: read_u32(&blocks_bytes, &mut off),
+            });
+        }
+
+        let seqs_bytes = read_table_file(
+            &dir.join(&seqs_name),
+            SEQS_MAGIC,
+            seq_count,
+            SEQ_ENTRY_BYTES,
+            &seqs_checksum,
+        )?;
+        let mut seqs = Vec::with_capacity(seq_count as usize);
+        let mut off = TABLE_HEADER_BYTES;
+        for _ in 0..seq_count {
+            seqs.push(SeqTableEntry {
+                seq: read_u64(&seqs_bytes, &mut off),
+                start: read_u64(&seqs_bytes, &mut off),
+                count: read_u64(&seqs_bytes, &mut off),
+                patients: read_u32(&seqs_bytes, &mut off),
+                dur_min: read_u32(&seqs_bytes, &mut off),
+                dur_max: read_u32(&seqs_bytes, &mut off),
+            });
+        }
+        if seqs.windows(2).any(|w| w[0].seq >= w[1].seq) {
+            return Err(QueryError::Artifact(format!(
+                "{}: sequence table is not strictly sorted by seq",
+                dir.join(&seqs_name).display()
+            )));
+        }
+
+        let data_path = dir.join(&data_name);
+        let reader = SeqReader::open(&data_path)?;
+        if reader.total() != total_records {
+            return Err(QueryError::Artifact(format!(
+                "{}: data file holds {} records but the manifest claims {total_records}",
+                data_path.display(),
+                reader.total()
+            )));
+        }
+        drop(reader);
+
+        let manifest_len = std::fs::metadata(&manifest_path)?.len();
+        let artifact_bytes = std::fs::metadata(&data_path)?.len()
+            + blocks_bytes.len() as u64
+            + seqs_bytes.len() as u64
+            + manifest_len;
+
+        Ok(SeqIndex {
+            dir: dir.to_path_buf(),
+            data_path,
+            block_records,
+            total_records,
+            num_patients,
+            num_phenx,
+            data_checksum,
+            artifact_bytes,
+            blocks,
+            seqs,
+        })
+    }
+
+    /// Full integrity check of the data file: re-checksums every record
+    /// against the manifest. O(data) — an explicit opt-in.
+    pub fn verify_data(&self) -> Result<(), QueryError> {
+        let (n, sum) = checksum_records(&self.data_path)?;
+        if n != self.total_records || sum != self.data_checksum {
+            return Err(QueryError::Artifact(format!(
+                "{}: data checksum mismatch (manifest {} records / {}, found {n} / {sum})",
+                self.data_path.display(),
+                self.total_records,
+                self.data_checksum
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Build
+// ---------------------------------------------------------------------------
+
+/// Build an index artifact under `out_dir` from a **sorted** spilled
+/// result (the order [`crate::sparsity::screen_spilled`] writes:
+/// globally by `(seq, pid, duration)` across the file set's
+/// concatenation). Streams the input exactly once; unsorted input is a
+/// typed [`QueryError::Artifact`], never a silently wrong index.
+/// `tracker`, when provided, accounts the build's read buffer and table
+/// serialization buffers. On *any* failure the partially written
+/// artifact files are removed — `out_dir` never holds a half-built (or
+/// old-manifest/new-data) mix.
+pub fn build(
+    input: &SeqFileSet,
+    out_dir: &Path,
+    cfg: &IndexConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqIndex, QueryError> {
+    // Validate before build_impl touches (truncates) any artifact file,
+    // so a bad config cannot cost an existing artifact its data file.
+    if cfg.block_records == 0 {
+        return Err(QueryError::Invalid("index block_records must be ≥ 1".into()));
+    }
+    let result = build_impl(input, out_dir, cfg, None, tracker);
+    if result.is_err() {
+        remove_partial_artifact(out_dir);
+    }
+    result
+}
+
+/// [`build`], additionally verifying every input file against the spill
+/// manifest's recorded count + checksum **during** the build's own
+/// streaming pass — integrity checking without a separate read of the
+/// (potentially out-of-core-sized) input.
+pub fn build_verified(
+    manifest: &SpillManifest,
+    out_dir: &Path,
+    cfg: &IndexConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqIndex, QueryError> {
+    if cfg.block_records == 0 {
+        return Err(QueryError::Invalid("index block_records must be ≥ 1".into()));
+    }
+    if manifest.per_file.len() != manifest.files.files.len() {
+        return Err(QueryError::Artifact(format!(
+            "spill manifest lists {} checksums for {} files",
+            manifest.per_file.len(),
+            manifest.files.files.len()
+        )));
+    }
+    let result = build_impl(&manifest.files, out_dir, cfg, Some(&manifest.per_file), tracker);
+    if result.is_err() {
+        remove_partial_artifact(out_dir);
+    }
+    result
+}
+
+/// Best-effort removal of every artifact file — called on failed
+/// builds so a stale manifest can never describe fresher partial data.
+fn remove_partial_artifact(out_dir: &Path) {
+    for name in [DATA_FILE, BLOCKS_FILE, SEQS_FILE, MANIFEST_FILE] {
+        let _ = std::fs::remove_file(out_dir.join(name));
+    }
+}
+
+fn build_impl(
+    input: &SeqFileSet,
+    out_dir: &Path,
+    cfg: &IndexConfig,
+    expected: Option<&[(PathBuf, u64, String)]>,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqIndex, QueryError> {
+    if cfg.block_records == 0 {
+        return Err(QueryError::Invalid("index block_records must be ≥ 1".into()));
+    }
+    let block_records = cfg.block_records;
+    std::fs::create_dir_all(out_dir)?;
+    let track = |b: u64| {
+        if let Some(t) = tracker {
+            t.add(b)
+        }
+    };
+    let untrack = |b: u64| {
+        if let Some(t) = tracker {
+            t.sub(b)
+        }
+    };
+
+    let data_path = out_dir.join(DATA_FILE);
+    let mut writer = SeqWriter::create(&data_path)?;
+
+    let mut blocks: Vec<BlockMeta> = Vec::new();
+    let mut seqs: Vec<SeqTableEntry> = Vec::new();
+    let mut block = BlockMeta::default();
+    let mut se = SeqTableEntry::default();
+    let mut seq_open = false;
+    let mut last_pid_in_seq = 0u32;
+    let mut prev: Option<SeqRecord> = None;
+    let mut data_fnv = FNV1A64_INIT;
+    let mut n = 0u64;
+
+    let read_cap = block_records.clamp(1024, 64 * 1024);
+    let mut buf = vec![ZERO_REC; read_cap];
+    track((read_cap * RECORD_BYTES) as u64);
+    for (fi, path) in input.files.iter().enumerate() {
+        let mut reader = SeqReader::open(path)?;
+        let mut file_fnv = FNV1A64_INIT;
+        let mut file_records = 0u64;
+        loop {
+            let got = reader.read_batch(&mut buf)?;
+            if got == 0 {
+                break;
+            }
+            for &r in &buf[..got] {
+                if let Some(p) = prev {
+                    if (p.seq, p.pid, p.duration) > (r.seq, r.pid, r.duration) {
+                        return Err(QueryError::Artifact(format!(
+                            "{}: records are not sorted by (seq, pid, duration) at \
+                             record {n} — the index consumes the *screened* spill \
+                             output (run the sparsity screen first)",
+                            path.display()
+                        )));
+                    }
+                }
+                prev = Some(r);
+                writer.write(r)?;
+                let encoded = seqstore::encode_record(r);
+                data_fnv = fnv1a64(data_fnv, &encoded);
+                file_fnv = fnv1a64(file_fnv, &encoded);
+                file_records += 1;
+
+                // Block accounting (len == 0 means "no open block").
+                if block.len == 0 {
+                    block = BlockMeta {
+                        start: n,
+                        len: 0,
+                        first_seq: r.seq,
+                        first_pid: r.pid,
+                        last_seq: r.seq,
+                        last_pid: r.pid,
+                        pid_min: r.pid,
+                        pid_max: r.pid,
+                        dur_min: r.duration,
+                        dur_max: r.duration,
+                    };
+                }
+                block.len += 1;
+                block.last_seq = r.seq;
+                block.last_pid = r.pid;
+                block.pid_min = block.pid_min.min(r.pid);
+                block.pid_max = block.pid_max.max(r.pid);
+                block.dur_min = block.dur_min.min(r.duration);
+                block.dur_max = block.dur_max.max(r.duration);
+                if block.len as usize >= block_records {
+                    blocks.push(block);
+                    block.len = 0;
+                }
+
+                // Per-sequence accounting.
+                if !seq_open || se.seq != r.seq {
+                    if seq_open {
+                        seqs.push(se);
+                    }
+                    se = SeqTableEntry {
+                        seq: r.seq,
+                        start: n,
+                        count: 0,
+                        patients: 1,
+                        dur_min: r.duration,
+                        dur_max: r.duration,
+                    };
+                    seq_open = true;
+                    last_pid_in_seq = r.pid;
+                } else if r.pid != last_pid_in_seq {
+                    se.patients += 1;
+                    last_pid_in_seq = r.pid;
+                }
+                se.count += 1;
+                se.dur_min = se.dur_min.min(r.duration);
+                se.dur_max = se.dur_max.max(r.duration);
+
+                n += 1;
+            }
+        }
+        if let Some(exp) = expected {
+            let (epath, erecords, esum) = &exp[fi];
+            let sum = checksum_hex(file_fnv);
+            if file_records != *erecords || sum != *esum {
+                return Err(QueryError::Artifact(format!(
+                    "{}: spill file does not match its manifest (recorded {erecords} \
+                     records / {esum}, found {file_records} / {sum})",
+                    epath.display()
+                )));
+            }
+        }
+    }
+    if block.len > 0 {
+        blocks.push(block);
+    }
+    if seq_open {
+        seqs.push(se);
+    }
+    untrack((read_cap * RECORD_BYTES) as u64);
+    drop(buf);
+
+    let written = writer.finish()?;
+    if written != input.total_records {
+        return Err(QueryError::Artifact(format!(
+            "input file set claims {} records but {written} were read — its manifest \
+             is stale",
+            input.total_records
+        )));
+    }
+
+    // Serialize the tables with checksums over the full file bytes.
+    let blocks_bytes = {
+        let mut out = Vec::with_capacity(TABLE_HEADER_BYTES + blocks.len() * BLOCK_ENTRY_BYTES);
+        out.extend_from_slice(BLOCKS_MAGIC);
+        out.extend_from_slice(&(blocks.len() as u64).to_le_bytes());
+        for b in &blocks {
+            out.extend_from_slice(&b.start.to_le_bytes());
+            out.extend_from_slice(&b.len.to_le_bytes());
+            out.extend_from_slice(&b.first_seq.to_le_bytes());
+            out.extend_from_slice(&b.first_pid.to_le_bytes());
+            out.extend_from_slice(&b.last_seq.to_le_bytes());
+            out.extend_from_slice(&b.last_pid.to_le_bytes());
+            out.extend_from_slice(&b.pid_min.to_le_bytes());
+            out.extend_from_slice(&b.pid_max.to_le_bytes());
+            out.extend_from_slice(&b.dur_min.to_le_bytes());
+            out.extend_from_slice(&b.dur_max.to_le_bytes());
+        }
+        out
+    };
+    let seqs_bytes = {
+        let mut out = Vec::with_capacity(TABLE_HEADER_BYTES + seqs.len() * SEQ_ENTRY_BYTES);
+        out.extend_from_slice(SEQS_MAGIC);
+        out.extend_from_slice(&(seqs.len() as u64).to_le_bytes());
+        for e in &seqs {
+            out.extend_from_slice(&e.seq.to_le_bytes());
+            out.extend_from_slice(&e.start.to_le_bytes());
+            out.extend_from_slice(&e.count.to_le_bytes());
+            out.extend_from_slice(&e.patients.to_le_bytes());
+            out.extend_from_slice(&e.dur_min.to_le_bytes());
+            out.extend_from_slice(&e.dur_max.to_le_bytes());
+        }
+        out
+    };
+    track((blocks_bytes.len() + seqs_bytes.len()) as u64);
+    let blocks_checksum = checksum_hex(fnv1a64(FNV1A64_INIT, &blocks_bytes));
+    let seqs_checksum = checksum_hex(fnv1a64(FNV1A64_INIT, &seqs_bytes));
+    std::fs::write(out_dir.join(BLOCKS_FILE), &blocks_bytes)?;
+    std::fs::write(out_dir.join(SEQS_FILE), &seqs_bytes)?;
+    untrack((blocks_bytes.len() + seqs_bytes.len()) as u64);
+    let (blocks_len, seqs_len) = (blocks_bytes.len() as u64, seqs_bytes.len() as u64);
+    drop(blocks_bytes);
+    drop(seqs_bytes);
+
+    let data_checksum = checksum_hex(data_fnv);
+    let manifest = Json::obj(vec![
+        ("format", Json::from(INDEX_FORMAT)),
+        ("version", Json::from(INDEX_FORMAT_VERSION)),
+        ("block_records", Json::from(block_records)),
+        ("total_records", Json::from(written)),
+        ("num_patients", Json::from(input.num_patients as u64)),
+        ("num_phenx", Json::from(input.num_phenx as u64)),
+        ("distinct_seqs", Json::from(seqs.len())),
+        (
+            "data",
+            Json::obj(vec![
+                ("name", Json::from(DATA_FILE)),
+                ("records", Json::from(written)),
+                ("checksum", Json::from(data_checksum.clone())),
+            ]),
+        ),
+        (
+            "blocks",
+            Json::obj(vec![
+                ("name", Json::from(BLOCKS_FILE)),
+                ("count", Json::from(blocks.len())),
+                ("checksum", Json::from(blocks_checksum)),
+            ]),
+        ),
+        (
+            "seqs",
+            Json::obj(vec![
+                ("name", Json::from(SEQS_FILE)),
+                ("count", Json::from(seqs.len())),
+                ("checksum", Json::from(seqs_checksum)),
+            ]),
+        ),
+    ]);
+    let manifest_text = manifest.to_string_pretty();
+    std::fs::write(out_dir.join(MANIFEST_FILE), &manifest_text)?;
+
+    let artifact_bytes = std::fs::metadata(&data_path)?.len()
+        + blocks_len
+        + seqs_len
+        + manifest_text.len() as u64;
+
+    Ok(SeqIndex {
+        dir: out_dir.to_path_buf(),
+        data_path,
+        block_records,
+        total_records: written,
+        num_patients: input.num_patients,
+        num_phenx: input.num_phenx,
+        data_checksum,
+        artifact_bytes,
+        blocks,
+        seqs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Parsing helpers
+// ---------------------------------------------------------------------------
+
+fn field_err(path: &Path, field: &str) -> QueryError {
+    QueryError::Artifact(format!("{}: missing or invalid field {field:?}", path.display()))
+}
+
+fn req_u64(j: &Json, field: &str, path: &Path) -> Result<u64, QueryError> {
+    j.get(field).and_then(Json::as_u64).ok_or_else(|| field_err(path, field))
+}
+
+/// Parse + gate a manifest file on `(format, version)`.
+fn read_manifest_json(
+    path: &Path,
+    want_format: &str,
+    want_version: u64,
+) -> Result<Json, QueryError> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        QueryError::Io(io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+    })?;
+    let j = Json::parse(&text)
+        .map_err(|e| QueryError::Artifact(format!("{}: {e}", path.display())))?;
+    let format = j.get("format").and_then(Json::as_str).unwrap_or("");
+    if format != want_format {
+        return Err(QueryError::Artifact(format!(
+            "{}: format is {format:?}, expected {want_format:?}",
+            path.display()
+        )));
+    }
+    let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
+    if version != want_version {
+        return Err(QueryError::Artifact(format!(
+            "{}: unsupported {want_format} version {version} (this build reads \
+             version {want_version})",
+            path.display()
+        )));
+    }
+    Ok(j)
+}
+
+/// `(name, count, checksum)` of a manifest file section.
+fn file_section(j: &Json, key: &str, path: &Path) -> Result<(String, u64, String), QueryError> {
+    let sect = j.get(key).ok_or_else(|| field_err(path, key))?;
+    let name = sect
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| field_err(path, key))?;
+    let count = sect
+        .get("records")
+        .or_else(|| sect.get("count"))
+        .and_then(Json::as_u64)
+        .ok_or_else(|| field_err(path, key))?;
+    let checksum = sect
+        .get("checksum")
+        .and_then(Json::as_str)
+        .ok_or_else(|| field_err(path, key))?;
+    Ok((name.to_string(), count, checksum.to_string()))
+}
+
+/// Read one binary table file, validating magic, entry count, exact
+/// size, and checksum against the manifest.
+fn read_table_file(
+    path: &Path,
+    magic: &[u8; 8],
+    want_count: u64,
+    entry_bytes: usize,
+    want_checksum: &str,
+) -> Result<Vec<u8>, QueryError> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        QueryError::Io(io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+    })?;
+    if checksum_hex(fnv1a64(FNV1A64_INIT, &bytes)) != want_checksum {
+        return Err(QueryError::Artifact(format!(
+            "{}: checksum mismatch — the artifact is corrupt or was modified",
+            path.display()
+        )));
+    }
+    if bytes.len() < TABLE_HEADER_BYTES || &bytes[..8] != magic {
+        return Err(QueryError::Artifact(format!(
+            "{}: bad table magic",
+            path.display()
+        )));
+    }
+    let count = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    if count != want_count {
+        return Err(QueryError::Artifact(format!(
+            "{}: table holds {count} entries but the manifest claims {want_count}",
+            path.display()
+        )));
+    }
+    let expected = TABLE_HEADER_BYTES as u64 + count * entry_bytes as u64;
+    if bytes.len() as u64 != expected {
+        return Err(QueryError::Artifact(format!(
+            "{}: table is {} bytes, expected {expected} for {count} entries",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    Ok(bytes)
+}
+
+fn read_u64(bytes: &[u8], off: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    v
+}
+
+fn read_u32(bytes: &[u8], off: &mut usize) -> u32 {
+    let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_query_index_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sorted_fixture() -> Vec<SeqRecord> {
+        // 3 sequences, pid runs with duplicates, varied durations.
+        let mut v = Vec::new();
+        for (seq, pids) in [(5u64, 0u32..6), (9, 2..3), (40, 0..20)] {
+            for pid in pids {
+                for d in [10u32, 200, 10 + pid] {
+                    v.push(SeqRecord { seq, pid, duration: d });
+                }
+            }
+        }
+        v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        v
+    }
+
+    fn fileset(dir: &Path, records: &[SeqRecord], n_files: usize) -> SeqFileSet {
+        std::fs::create_dir_all(dir).unwrap();
+        let chunk = records.len().div_ceil(n_files.max(1)).max(1);
+        let mut files = Vec::new();
+        for (i, part) in records.chunks(chunk).enumerate() {
+            let p = dir.join(format!("in_{i}.tspm"));
+            seqstore::write_file(&p, part).unwrap();
+            files.push(p);
+        }
+        if files.is_empty() {
+            let p = dir.join("in_0.tspm");
+            seqstore::write_file(&p, &[]).unwrap();
+            files.push(p);
+        }
+        SeqFileSet {
+            files,
+            total_records: records.len() as u64,
+            num_patients: 20,
+            num_phenx: 7,
+        }
+    }
+
+    #[test]
+    fn build_then_open_round_trips_tables() {
+        let dir = tmpdir("roundtrip");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 2);
+        let built =
+            build(&input, &dir.join("idx"), &IndexConfig { block_records: 7 }, None).unwrap();
+        assert_eq!(built.total_records, data.len() as u64);
+        assert_eq!(built.distinct_seqs(), 3);
+        assert_eq!(built.blocks.len(), data.len().div_ceil(7));
+        // Reopening yields the identical tables and metadata.
+        let opened = SeqIndex::open(&dir.join("idx")).unwrap();
+        assert_eq!(opened.blocks, built.blocks);
+        assert_eq!(opened.seqs, built.seqs);
+        assert_eq!(opened.total_records, built.total_records);
+        assert_eq!(opened.block_records, 7);
+        assert_eq!(opened.data_checksum, built.data_checksum);
+        opened.verify_data().unwrap();
+        // The copied data file is byte-faithful to the input records.
+        assert_eq!(seqstore::read_file(&opened.data_path).unwrap(), data);
+        // Per-seq entries are exact.
+        let e = opened.seq_entry(5).unwrap();
+        assert_eq!(e.count, 18);
+        assert_eq!(e.patients, 6);
+        assert_eq!((e.dur_min, e.dur_max), (10, 200));
+        assert!(opened.seq_entry(6).is_none());
+        // Block offsets tile the data file.
+        let mut expect_start = 0u64;
+        for b in &opened.blocks {
+            assert_eq!(b.start, expect_start);
+            expect_start += b.len as u64;
+        }
+        assert_eq!(expect_start, opened.total_records);
+    }
+
+    #[test]
+    fn empty_input_builds_an_empty_artifact() {
+        let dir = tmpdir("empty");
+        let input = fileset(&dir, &[], 1);
+        let built = build(&input, &dir.join("idx"), &IndexConfig::default(), None).unwrap();
+        assert_eq!(built.total_records, 0);
+        assert!(built.blocks.is_empty() && built.seqs.is_empty());
+        let opened = SeqIndex::open(&dir.join("idx")).unwrap();
+        assert_eq!(opened.total_records, 0);
+        assert!(opened.seq_entry(1).is_none());
+    }
+
+    #[test]
+    fn unsorted_input_is_rejected_and_leaves_no_partial_artifact() {
+        let dir = tmpdir("unsorted");
+        let mut data = sorted_fixture();
+        data.swap(0, 10);
+        let input = fileset(&dir, &data, 1);
+        let idx_dir = dir.join("idx");
+        let err = build(&input, &idx_dir, &IndexConfig::default(), None).unwrap_err();
+        assert!(err.to_string().contains("not sorted"), "got {err}");
+        // Failed builds clean up after themselves: no half-written data
+        // file, no stale manifest.
+        assert!(!idx_dir.join(DATA_FILE).exists());
+        assert!(!idx_dir.join(MANIFEST_FILE).exists());
+    }
+
+    #[test]
+    fn build_verified_checks_checksums_in_the_streaming_pass() {
+        let dir = tmpdir("build_verified");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 2);
+        write_spill_manifest(&dir, &input, true).unwrap();
+        let manifest = read_spill_manifest(&dir).unwrap();
+
+        // Clean input builds fine (no separate verify pass needed).
+        let idx_dir = dir.join("idx");
+        let built =
+            build_verified(&manifest, &idx_dir, &IndexConfig { block_records: 16 }, None)
+                .unwrap();
+        assert_eq!(built.total_records, data.len() as u64);
+
+        // Corrupting one spill file is caught mid-build, and the failed
+        // build removes the partial artifact.
+        let victim = &manifest.files.files[1];
+        let mut recs = seqstore::read_file(victim).unwrap();
+        recs[0].duration ^= 1;
+        seqstore::write_file(victim, &recs).unwrap();
+        let idx_dir2 = dir.join("idx2");
+        let err =
+            build_verified(&manifest, &idx_dir2, &IndexConfig { block_records: 16 }, None)
+                .unwrap_err();
+        assert!(err.to_string().contains("does not match"), "got {err}");
+        assert!(!idx_dir2.join(DATA_FILE).exists());
+    }
+
+    #[test]
+    fn spill_manifest_resolves_files_in_subdirectories() {
+        // Unscreened runs leave their spill files under `<out-dir>/mine/`;
+        // the manifest must record dir-relative paths, not bare names.
+        let dir = tmpdir("subdir_manifest");
+        let data = sorted_fixture();
+        let sub = dir.join("mine");
+        let input = fileset(&sub, &data, 2);
+        write_spill_manifest(&dir, &input, false).unwrap();
+        let m = read_spill_manifest(&dir).unwrap();
+        assert!(!m.sorted);
+        assert_eq!(m.files.files, input.files, "paths must resolve to the subdirectory");
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn zero_block_size_is_rejected() {
+        let dir = tmpdir("zeroblock");
+        let input = fileset(&dir, &sorted_fixture(), 1);
+        let err =
+            build(&input, &dir.join("idx"), &IndexConfig { block_records: 0 }, None).unwrap_err();
+        assert!(matches!(err, QueryError::Invalid(_)), "got {err}");
+    }
+
+    #[test]
+    fn tampered_artifacts_are_refused() {
+        let dir = tmpdir("tamper");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 1);
+        let idx_dir = dir.join("idx");
+        build(&input, &idx_dir, &IndexConfig { block_records: 8 }, None).unwrap();
+
+        // Flip one byte of the block table → checksum mismatch.
+        let bpath = idx_dir.join(BLOCKS_FILE);
+        let mut bytes = std::fs::read(&bpath).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&bpath, &bytes).unwrap();
+        let err = SeqIndex::open(&idx_dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got {err}");
+        bytes[last] ^= 0xFF;
+        std::fs::write(&bpath, &bytes).unwrap();
+        SeqIndex::open(&idx_dir).unwrap();
+
+        // A future version is refused with a version message.
+        let mpath = idx_dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"version\": 1", "\"version\": 99")).unwrap();
+        let err = SeqIndex::open(&idx_dir).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "got {err}");
+        std::fs::write(&mpath, text).unwrap();
+
+        // Truncating the data file is caught at open (count mismatch).
+        let opened = SeqIndex::open(&idx_dir).unwrap();
+        let data_bytes = std::fs::read(&opened.data_path).unwrap();
+        std::fs::write(&opened.data_path, &data_bytes[..data_bytes.len() - 16]).unwrap();
+        assert!(SeqIndex::open(&idx_dir).is_err());
+        std::fs::write(&opened.data_path, &data_bytes).unwrap();
+        SeqIndex::open(&idx_dir).unwrap().verify_data().unwrap();
+    }
+
+    #[test]
+    fn spill_manifest_round_trips_and_verifies() {
+        let dir = tmpdir("spill_manifest");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 3);
+        write_spill_manifest(&dir, &input, true).unwrap();
+        let m = read_spill_manifest(&dir).unwrap();
+        assert!(m.sorted);
+        assert_eq!(m.files.total_records, data.len() as u64);
+        assert_eq!(m.files.files, input.files);
+        assert_eq!(m.files.num_patients, 20);
+        m.verify().unwrap();
+
+        // Appending a record to one spill file breaks verification.
+        let victim = &input.files[1];
+        let mut recs = seqstore::read_file(victim).unwrap();
+        recs.push(SeqRecord { seq: 999, pid: 1, duration: 1 });
+        seqstore::write_file(victim, &recs).unwrap();
+        let err = read_spill_manifest(&dir).unwrap().verify().unwrap_err();
+        assert!(err.to_string().contains("changed"), "got {err}");
+
+        // A deleted spill file surfaces as a typed io error with the path.
+        std::fs::remove_file(victim).unwrap();
+        let err = read_spill_manifest(&dir).unwrap().verify().unwrap_err();
+        assert!(err.to_string().contains("in_1.tspm"), "got {err}");
+    }
+
+    #[test]
+    fn fnv_is_order_sensitive_and_stable() {
+        let a = fnv1a64(FNV1A64_INIT, b"ab");
+        let b = fnv1a64(FNV1A64_INIT, b"ba");
+        assert_ne!(a, b);
+        assert_eq!(a, fnv1a64(fnv1a64(FNV1A64_INIT, b"a"), b"b"));
+        // Known FNV-1a 64 vector: empty input is the offset basis.
+        assert_eq!(fnv1a64(FNV1A64_INIT, b""), FNV1A64_INIT);
+    }
+}

@@ -1,0 +1,135 @@
+//! The query subsystem — indexed sequence artifacts and a cached query
+//! service over spilled run results.
+//!
+//! Every subsystem before this one works in units of a *run*: mine a
+//! cohort, screen it, leave the result in memory or in spill files
+//! ([`crate::seqstore::SeqFileSet`]). Downstream consumers, however,
+//! mostly ask for a small slice of the pattern space — one sequence's
+//! records, one patient's history, the top-k sequences by support — and
+//! answering those by re-scanning (or worse, materialising) the full
+//! multiset wastes both IO and memory. This module turns a spilled run
+//! into an **immutable, versioned, random-access artifact** and serves
+//! point/range queries from it with bounded memory:
+//!
+//! * [`index::build`] streams a *sorted* [`crate::seqstore::SeqFileSet`]
+//!   exactly once and writes a [`SeqIndex`] artifact;
+//! * [`QueryService`] opens an artifact and answers
+//!   [`by_sequence`](QueryService::by_sequence),
+//!   [`by_patient`](QueryService::by_patient),
+//!   [`patients_with`](QueryService::patients_with),
+//!   [`top_k_by_support`](QueryService::top_k_by_support) and
+//!   [`duration_histogram`](QueryService::duration_histogram) via
+//!   block-bounded positioned reads
+//!   ([`crate::seqstore::SeqReader::seek_record`]), with a size-bounded
+//!   LRU result cache in front ([`LruCache`]; hits/misses observable via
+//!   [`QueryService::stats`]);
+//! * the surfaces: `tspm index` / `tspm query` on the CLI, and
+//!   `.index(dir)` as an [`crate::engine::Engine`] plan stage after a
+//!   spilled screen.
+//!
+//! ## The artifact format
+//!
+//! An index directory holds four files:
+//!
+//! ```text
+//! manifest.json   versioned manifest: format ("tspm-seqindex"), version,
+//!                 block size, record/patient/phenX counts, and the name +
+//!                 count + FNV-1a checksum of each sibling file
+//! data_0000.tspm  the records, TSPMSEQ1-encoded, globally sorted by
+//!                 (seq, pid, duration) — the screen's spill order
+//! blocks.bin      sparse block index: for every block of `block_records`
+//!                 records, its start offset, length, first/last (seq, pid)
+//!                 key, pid min/max and duration min/max (for pruning)
+//! seqs.bin        per-sequence table: record offset + count, distinct
+//!                 patient count (the support), duration min/max
+//! ```
+//!
+//! The tables are small next to the data (one block entry per
+//! `block_records` records, one seq entry per distinct sequence) and are
+//! held resident by the service; the data file is only ever read one
+//! block at a time.
+//!
+//! ## Compatibility guarantee
+//!
+//! The manifest's `(format, version)` pair gates every read:
+//! [`SeqIndex::open`] refuses anything but
+//! `("tspm-seqindex", `[`INDEX_FORMAT_VERSION`]`)`, so a future layout
+//! change bumps the version and old artifacts fail loudly instead of
+//! being misread. Within one version the layout is frozen: files are
+//! little-endian, checksummed (FNV-1a 64 over the file bytes; over the
+//! 16-byte record encodings for the data file), and never rewritten in
+//! place — an artifact, once built, is immutable. The spill manifest
+//! `tspm mine --out-dir` writes next to `lookup.json` uses the same
+//! scheme (`"tspm-spill"`, [`SPILL_FORMAT_VERSION`]) so `tspm index` can
+//! verify its input before building.
+
+pub mod cache;
+pub mod index;
+pub mod service;
+
+pub use cache::LruCache;
+pub use index::{
+    checksum_records, read_spill_manifest, write_spill_manifest, BlockMeta, IndexConfig,
+    SeqIndex, SeqTableEntry, SpillManifest, DEFAULT_BLOCK_RECORDS, INDEX_FORMAT_VERSION,
+    SPILL_FORMAT_VERSION,
+};
+pub use service::{
+    Histogram, HistogramBucket, QueryResult, QueryService, QueryStats, SeqSupport,
+    DEFAULT_CACHE_BYTES,
+};
+
+use std::fmt;
+
+/// Errors of the query subsystem.
+#[derive(Debug)]
+pub enum QueryError {
+    /// Filesystem failures while building or reading an artifact.
+    Io(std::io::Error),
+    /// A corrupt or incompatible artifact: bad magic, version mismatch,
+    /// checksum mismatch, unsorted input, index/data disagreement.
+    Artifact(String),
+    /// A structurally invalid request (zero buckets, zero block size…).
+    Invalid(String),
+}
+
+impl fmt::Display for QueryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QueryError::Io(e) => write!(f, "query io error: {e}"),
+            QueryError::Artifact(msg) => write!(f, "query artifact error: {msg}"),
+            QueryError::Invalid(msg) => write!(f, "invalid query: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            QueryError::Io(e) => Some(e),
+            QueryError::Artifact(_) | QueryError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for QueryError {
+    fn from(e: std::io::Error) -> Self {
+        QueryError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_and_source() {
+        use std::error::Error;
+        let io: QueryError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(io.to_string().contains("disk"));
+        assert!(io.source().is_some());
+        let a = QueryError::Artifact("bad checksum".into());
+        assert!(a.to_string().contains("bad checksum"));
+        assert!(a.source().is_none());
+        assert!(QueryError::Invalid("zero buckets".into()).to_string().contains("invalid"));
+    }
+}

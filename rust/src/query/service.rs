@@ -1,0 +1,564 @@
+//! The query engine: answers point/range queries over a [`SeqIndex`]
+//! artifact with block-bounded reads and an LRU result cache.
+//!
+//! Memory contract: aside from the resident index tables and the
+//! returned results themselves, a query's working set is **one block of
+//! records plus one block-sized reader buffer** (`block_records × 16`
+//! bytes each) — never the data file. Every buffer is accounted against
+//! an optional [`MemTracker`] so tests can assert the bound.
+//!
+//! Caching: results are cached under a canonicalized key (range bounds
+//! normalized, `k` clamped to the distinct-sequence count) in a
+//! size-bounded LRU ([`crate::query::LruCache`]); results are shared as
+//! `Arc`s, so a cache hit clones a pointer, not the records. Hit/miss
+//! counts are observable via [`QueryService::stats`]. The service is
+//! `&self` throughout (cache behind a mutex, counters atomic), so a
+//! serving layer can share one instance across threads.
+
+use super::cache::LruCache;
+use super::index::SeqIndex;
+use super::QueryError;
+use crate::metrics::MemTracker;
+use crate::mining::SeqRecord;
+use crate::seqstore::{SeqReader, RECORD_BYTES};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default result-cache budget (32 MiB).
+pub const DEFAULT_CACHE_BYTES: usize = 32 << 20;
+
+const ZERO_REC: SeqRecord = SeqRecord { seq: 0, pid: 0, duration: 0 };
+
+/// One row of a [`QueryService::top_k_by_support`] answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqSupport {
+    pub seq: u64,
+    /// Distinct patients (the support the sparsity screen thresholds on).
+    pub patients: u32,
+    /// Total records of the sequence.
+    pub records: u64,
+}
+
+/// One bucket of a [`QueryService::duration_histogram`] answer
+/// (inclusive bounds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistogramBucket {
+    pub lo: u32,
+    pub hi: u32,
+    pub count: u64,
+}
+
+/// A duration histogram over one sequence's records.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub seq: u64,
+    pub dur_min: u32,
+    pub dur_max: u32,
+    /// Total records bucketed (the sequence's record count; 0 when the
+    /// sequence is absent).
+    pub total: u64,
+    pub buckets: Vec<HistogramBucket>,
+}
+
+/// A cached query answer. `Arc`-wrapped so hits share, never copy.
+#[derive(Clone, Debug)]
+pub enum QueryResult {
+    Records(Arc<Vec<SeqRecord>>),
+    Patients(Arc<Vec<u32>>),
+    TopK(Arc<Vec<SeqSupport>>),
+    Histogram(Arc<Histogram>),
+}
+
+fn result_bytes(r: &QueryResult) -> usize {
+    const OVERHEAD: usize = 64;
+    match r {
+        QueryResult::Records(v) => v.len() * std::mem::size_of::<SeqRecord>() + OVERHEAD,
+        QueryResult::Patients(v) => v.len() * std::mem::size_of::<u32>() + OVERHEAD,
+        QueryResult::TopK(v) => v.len() * std::mem::size_of::<SeqSupport>() + OVERHEAD,
+        QueryResult::Histogram(h) => {
+            h.buckets.len() * std::mem::size_of::<HistogramBucket>() + OVERHEAD
+        }
+    }
+}
+
+/// Cache/traffic counters of one service instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub cached_entries: usize,
+    pub cached_bytes: usize,
+}
+
+/// The query engine over one immutable index artifact.
+pub struct QueryService {
+    index: SeqIndex,
+    cache: Mutex<LruCache<QueryResult>>,
+    cache_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    tracker: Option<Arc<MemTracker>>,
+}
+
+impl QueryService {
+    /// Open an artifact directory with the default cache budget.
+    pub fn open(dir: &Path) -> Result<QueryService, QueryError> {
+        Ok(QueryService::from_index(SeqIndex::open(dir)?, DEFAULT_CACHE_BYTES))
+    }
+
+    /// [`QueryService::open`] with an explicit cache budget in bytes
+    /// (0 disables caching entirely — every query recomputes).
+    pub fn open_with_cache(dir: &Path, cache_bytes: usize) -> Result<QueryService, QueryError> {
+        Ok(QueryService::from_index(SeqIndex::open(dir)?, cache_bytes))
+    }
+
+    /// Wrap an already-loaded index.
+    pub fn from_index(index: SeqIndex, cache_bytes: usize) -> QueryService {
+        QueryService {
+            index,
+            cache: Mutex::new(LruCache::new(cache_bytes)),
+            cache_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            tracker: None,
+        }
+    }
+
+    /// Account every read buffer against `tracker` (for budget proofs).
+    pub fn set_tracker(&mut self, tracker: Arc<MemTracker>) {
+        self.tracker = Some(tracker);
+    }
+
+    /// The underlying artifact.
+    pub fn index(&self) -> &SeqIndex {
+        &self.index
+    }
+
+    /// Cache hit/miss/size counters.
+    pub fn stats(&self) -> QueryStats {
+        let cache = self.cache.lock().unwrap();
+        QueryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: cache.evictions(),
+            cached_entries: cache.len(),
+            cached_bytes: cache.bytes(),
+        }
+    }
+
+    // --- queries -----------------------------------------------------------
+
+    /// All records of `seq`, in `(pid, duration)` order (empty when the
+    /// sequence is absent).
+    pub fn by_sequence(&self, seq: u64) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        let key = format!("seq:{seq}");
+        if let Some(QueryResult::Records(v)) = self.cache_get(&key) {
+            return Ok(v);
+        }
+        let mut out = Vec::new();
+        if let Some(e) = self.index.seq_entry(seq).copied() {
+            out.reserve(e.count as usize);
+            self.scan_range(e.start, e.start + e.count, |r| out.push(r))?;
+        }
+        let v = Arc::new(out);
+        self.cache_put(key, QueryResult::Records(v.clone()));
+        Ok(v)
+    }
+
+    /// All records of patient `pid`, in `(seq, duration)` order. The
+    /// data is sequence-major, so this scans the data file — but block
+    /// by block, pruned by per-block pid bounds, never materialised.
+    pub fn by_patient(&self, pid: u32) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        let key = format!("pid:{pid}");
+        if let Some(QueryResult::Records(v)) = self.cache_get(&key) {
+            return Ok(v);
+        }
+        let mut out = Vec::new();
+        let blocks = &self.index.blocks;
+        let candidate = |b: &super::index::BlockMeta| (b.pid_min..=b.pid_max).contains(&pid);
+        let mut i = 0;
+        while i < blocks.len() {
+            if !candidate(&blocks[i]) {
+                i += 1;
+                continue;
+            }
+            // Coalesce adjacent candidate blocks into one scan.
+            let mut j = i;
+            while j + 1 < blocks.len() && candidate(&blocks[j + 1]) {
+                j += 1;
+            }
+            let start = blocks[i].start;
+            let end = blocks[j].start + blocks[j].len as u64;
+            self.scan_range(start, end, |r| {
+                if r.pid == pid {
+                    out.push(r);
+                }
+            })?;
+            i = j + 1;
+        }
+        let v = Arc::new(out);
+        self.cache_put(key, QueryResult::Records(v.clone()));
+        Ok(v)
+    }
+
+    /// Distinct patients having `seq` with a duration in the inclusive
+    /// range — the targeted-mining shape (TaTIRP-style "who had A→B
+    /// within N days"). Bounds are canonicalized (swapped if reversed);
+    /// blocks whose duration range misses the query are skipped without
+    /// being read.
+    pub fn patients_with(
+        &self,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+    ) -> Result<Arc<Vec<u32>>, QueryError> {
+        let (lo, hi) = if dur_min <= dur_max { (dur_min, dur_max) } else { (dur_max, dur_min) };
+        let key = format!("pw:{seq}:{lo}:{hi}");
+        if let Some(QueryResult::Patients(v)) = self.cache_get(&key) {
+            return Ok(v);
+        }
+        let mut out: Vec<u32> = Vec::new();
+        if let Some(e) = self.index.seq_entry(seq).copied() {
+            let (s, t) = (e.start, e.start + e.count);
+            for bi in self.block_span(s, t) {
+                let b = self.index.blocks[bi];
+                if b.dur_max < lo || b.dur_min > hi {
+                    continue; // the whole block misses the duration range
+                }
+                let bs = b.start.max(s);
+                let be = (b.start + b.len as u64).min(t);
+                self.scan_range(bs, be, |r| {
+                    if (lo..=hi).contains(&r.duration) {
+                        out.push(r.pid);
+                    }
+                })?;
+            }
+            // Within a sequence run the records are pid-sorted, and
+            // skipping blocks preserves order, so adjacent dedup is a
+            // full dedup.
+            out.dedup();
+        }
+        let v = Arc::new(out);
+        self.cache_put(key, QueryResult::Patients(v.clone()));
+        Ok(v)
+    }
+
+    /// The `k` sequences with the most distinct patients (ties broken
+    /// by ascending seq — fully deterministic). Answered from the
+    /// resident per-sequence table: no IO at all.
+    pub fn top_k_by_support(&self, k: usize) -> Result<Arc<Vec<SeqSupport>>, QueryError> {
+        let k = k.min(self.index.seqs.len());
+        let key = format!("topk:{k}");
+        if let Some(QueryResult::TopK(v)) = self.cache_get(&key) {
+            return Ok(v);
+        }
+        let mut all: Vec<SeqSupport> = self
+            .index
+            .seqs
+            .iter()
+            .map(|e| SeqSupport { seq: e.seq, patients: e.patients, records: e.count })
+            .collect();
+        all.sort_unstable_by(|a, b| b.patients.cmp(&a.patients).then(a.seq.cmp(&b.seq)));
+        all.truncate(k);
+        let v = Arc::new(all);
+        self.cache_put(key, QueryResult::TopK(v.clone()));
+        Ok(v)
+    }
+
+    /// Histogram of `seq`'s durations over `n_buckets` equal-width
+    /// buckets spanning its `[dur_min, dur_max]` (from the index; the
+    /// trailing bucket is clipped to `dur_max`). Fewer than `n_buckets`
+    /// buckets come back when the duration span is narrower than the
+    /// bucket count. An absent sequence yields an empty histogram.
+    pub fn duration_histogram(
+        &self,
+        seq: u64,
+        n_buckets: usize,
+    ) -> Result<Arc<Histogram>, QueryError> {
+        if n_buckets == 0 {
+            return Err(QueryError::Invalid("histogram needs at least one bucket".into()));
+        }
+        let key = format!("hist:{seq}:{n_buckets}");
+        if let Some(QueryResult::Histogram(v)) = self.cache_get(&key) {
+            return Ok(v);
+        }
+        let hist = match self.index.seq_entry(seq).copied() {
+            None => Histogram { seq, dur_min: 0, dur_max: 0, total: 0, buckets: Vec::new() },
+            Some(e) => {
+                let span = (e.dur_max - e.dur_min) as u64 + 1;
+                let width = span.div_ceil(n_buckets as u64).max(1);
+                let used = span.div_ceil(width) as usize;
+                let mut counts = vec![0u64; used];
+                self.scan_range(e.start, e.start + e.count, |r| {
+                    let i = ((r.duration - e.dur_min) as u64 / width) as usize;
+                    counts[i] += 1;
+                })?;
+                let buckets = counts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &count)| {
+                        let lo = e.dur_min as u64 + i as u64 * width;
+                        let hi = (lo + width - 1).min(e.dur_max as u64);
+                        HistogramBucket { lo: lo as u32, hi: hi as u32, count }
+                    })
+                    .collect();
+                Histogram {
+                    seq,
+                    dur_min: e.dur_min,
+                    dur_max: e.dur_max,
+                    total: e.count,
+                    buckets,
+                }
+            }
+        };
+        let v = Arc::new(hist);
+        self.cache_put(key, QueryResult::Histogram(v.clone()));
+        Ok(v)
+    }
+
+    // --- internals ---------------------------------------------------------
+
+    fn cache_get(&self, key: &str) -> Option<QueryResult> {
+        if self.cache_bytes == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let got = self.cache.lock().unwrap().get(key);
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    fn cache_put(&self, key: String, value: QueryResult) {
+        if self.cache_bytes == 0 {
+            return;
+        }
+        let bytes = result_bytes(&value);
+        self.cache.lock().unwrap().put(key, value, bytes);
+    }
+
+    fn track(&self, bytes: u64) {
+        if let Some(t) = &self.tracker {
+            t.add(bytes);
+        }
+    }
+
+    fn untrack(&self, bytes: u64) {
+        if let Some(t) = &self.tracker {
+            t.sub(bytes);
+        }
+    }
+
+    /// Block ids whose records overlap `[start, end)` — pure arithmetic,
+    /// since blocks tile the data file in `block_records` strides.
+    fn block_span(&self, start: u64, end: u64) -> std::ops::Range<usize> {
+        if start >= end {
+            return 0..0;
+        }
+        let b = self.index.block_records.max(1) as u64;
+        (start / b) as usize..((end - 1) / b) as usize + 1
+    }
+
+    /// Stream records `[start, end)` of the data file through `f`,
+    /// holding exactly one block-sized record buffer and one
+    /// block-sized reader buffer resident (both tracker-accounted).
+    fn scan_range(
+        &self,
+        start: u64,
+        end: u64,
+        mut f: impl FnMut(SeqRecord),
+    ) -> Result<(), QueryError> {
+        if start >= end {
+            return Ok(());
+        }
+        let cap = self.index.block_records.max(1);
+        let buf_bytes = (cap * RECORD_BYTES) as u64 * 2;
+        self.track(buf_bytes);
+        let result = (|| -> Result<(), QueryError> {
+            let mut reader =
+                SeqReader::open_with_capacity(&self.index.data_path, cap * RECORD_BYTES)?;
+            reader.seek_record(start)?;
+            let mut buf = vec![ZERO_REC; cap];
+            let mut left = end - start;
+            while left > 0 {
+                let want = left.min(buf.len() as u64) as usize;
+                let got = reader.read_batch(&mut buf[..want])?;
+                if got == 0 {
+                    return Err(QueryError::Artifact(format!(
+                        "{}: data file ends before record {end} the index references",
+                        self.index.data_path.display()
+                    )));
+                }
+                for &r in &buf[..got] {
+                    f(r);
+                }
+                left -= got as u64;
+            }
+            Ok(())
+        })();
+        self.untrack(buf_bytes);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::index::{build, IndexConfig};
+    use crate::seqstore::{self, SeqFileSet};
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_query_service_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fixture() -> Vec<SeqRecord> {
+        let mut v = Vec::new();
+        for (seq, n_pids) in [(3u64, 4u32), (17, 2), (90, 9)] {
+            for pid in 0..n_pids {
+                for d in [5u32, 30, 500] {
+                    v.push(SeqRecord { seq, pid, duration: d });
+                }
+            }
+        }
+        v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        v
+    }
+
+    fn service(name: &str, block: usize, cache: usize) -> (QueryService, Vec<SeqRecord>) {
+        let dir = tmpdir(name);
+        let data = fixture();
+        let path = dir.join("in.tspm");
+        seqstore::write_file(&path, &data).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: data.len() as u64,
+            num_patients: 9,
+            num_phenx: 4,
+        };
+        let idx = build(&input, &dir.join("idx"), &IndexConfig { block_records: block }, None)
+            .unwrap();
+        (QueryService::from_index(idx, cache), data)
+    }
+
+    #[test]
+    fn by_sequence_exact_and_missing() {
+        let (svc, data) = service("by_seq", 5, DEFAULT_CACHE_BYTES);
+        let got = svc.by_sequence(17).unwrap();
+        let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.seq == 17).collect();
+        assert_eq!(*got, expect);
+        assert!(svc.by_sequence(4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn by_patient_crosses_sequences() {
+        let (svc, data) = service("by_pid", 4, DEFAULT_CACHE_BYTES);
+        let got = svc.by_patient(1).unwrap();
+        let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.pid == 1).collect();
+        assert_eq!(*got, expect);
+        assert!(svc.by_patient(1000).unwrap().is_empty());
+    }
+
+    #[test]
+    fn patients_with_filters_and_dedups() {
+        let (svc, _) = service("pw", 3, DEFAULT_CACHE_BYTES);
+        // Durations are {5, 30, 500} for every pid; [10, 100] matches only 30.
+        let got = svc.patients_with(90, 10, 100).unwrap();
+        assert_eq!(*got, (0..9).collect::<Vec<u32>>());
+        // Reversed bounds canonicalize to the same answer (and cache key).
+        let rev = svc.patients_with(90, 100, 10).unwrap();
+        assert_eq!(*rev, *got);
+        assert_eq!(svc.stats().hits, 1, "reversed bounds must hit the cache");
+        // A range matching nothing.
+        assert!(svc.patients_with(90, 501, 600).unwrap().is_empty());
+        assert!(svc.patients_with(12345, 0, u32::MAX).unwrap().is_empty());
+    }
+
+    #[test]
+    fn top_k_orders_by_support_then_seq() {
+        let (svc, _) = service("topk", 4, DEFAULT_CACHE_BYTES);
+        let got = svc.top_k_by_support(2).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], SeqSupport { seq: 90, patients: 9, records: 27 });
+        assert_eq!(got[1], SeqSupport { seq: 3, patients: 4, records: 12 });
+        // k beyond the table clamps (and shares the clamped cache key).
+        let all = svc.top_k_by_support(100).unwrap();
+        assert_eq!(all.len(), 3);
+        let again = svc.top_k_by_support(usize::MAX).unwrap();
+        assert_eq!(*again, *all);
+    }
+
+    #[test]
+    fn histogram_covers_all_records() {
+        let (svc, _) = service("hist", 4, DEFAULT_CACHE_BYTES);
+        let h = svc.duration_histogram(3, 4).unwrap();
+        assert_eq!((h.dur_min, h.dur_max, h.total), (5, 500, 12));
+        assert_eq!(h.buckets.iter().map(|b| b.count).sum::<u64>(), 12);
+        assert_eq!(h.buckets.first().unwrap().lo, 5);
+        assert_eq!(h.buckets.last().unwrap().hi, 500);
+        // One bucket degenerates to "everything".
+        let h1 = svc.duration_histogram(3, 1).unwrap();
+        assert_eq!(h1.buckets.len(), 1);
+        assert_eq!(h1.buckets[0].count, 12);
+        // Absent sequence → empty histogram; zero buckets → typed error.
+        assert!(svc.duration_histogram(4, 3).unwrap().buckets.is_empty());
+        assert!(matches!(
+            svc.duration_histogram(3, 0).unwrap_err(),
+            QueryError::Invalid(_)
+        ));
+    }
+
+    #[test]
+    fn cache_hits_share_results_and_are_observable() {
+        let (svc, _) = service("cache_on", 4, DEFAULT_CACHE_BYTES);
+        let a = svc.by_sequence(90).unwrap();
+        let b = svc.by_sequence(90).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "a hit shares the cached Arc");
+        let st = svc.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.cached_entries, 1);
+        assert!(st.cached_bytes > 0);
+    }
+
+    #[test]
+    fn disabled_cache_still_answers_identically() {
+        let (svc, data) = service("cache_off", 4, 0);
+        let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.seq == 90).collect();
+        let a = svc.by_sequence(90).unwrap();
+        let b = svc.by_sequence(90).unwrap();
+        assert_eq!(*a, expect);
+        assert_eq!(*b, expect);
+        assert!(!Arc::ptr_eq(&a, &b), "nothing is cached at budget 0");
+        let st = svc.stats();
+        assert_eq!(st.hits, 0);
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.cached_entries, 0);
+    }
+
+    #[test]
+    fn working_memory_is_block_bounded() {
+        let (mut svc, data) = service("bounded", 4, 0);
+        let tracker = Arc::new(MemTracker::new());
+        svc.set_tracker(tracker.clone());
+        svc.by_sequence(90).unwrap();
+        svc.by_patient(1).unwrap();
+        svc.duration_histogram(90, 8).unwrap();
+        svc.patients_with(90, 0, u32::MAX).unwrap();
+        // One record buffer + one reader buffer per active scan, 4
+        // records each → 128 bytes; far below the 1.3 KiB data payload.
+        let bound = 2 * 4 * RECORD_BYTES as u64;
+        assert!(tracker.peak() <= bound, "peak {} > bound {bound}", tracker.peak());
+        assert!(tracker.peak() < (data.len() * RECORD_BYTES) as u64);
+        assert_eq!(tracker.live(), 0, "all buffers released");
+    }
+}

@@ -15,11 +15,28 @@
 
 use crate::mining::SeqRecord;
 use std::fs::File;
-use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufReader, BufWriter, Read, Seek, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"TSPMSEQ1";
-const RECORD_BYTES: usize = 16;
+
+/// Bytes per serialized record (the paper's 128-bit layout).
+pub const RECORD_BYTES: usize = 16;
+
+/// Bytes before the first record (magic + count).
+pub const HEADER_BYTES: usize = 16;
+
+/// The 16-byte little-endian wire encoding of one record — the one
+/// byte layout shared by [`SeqWriter`], [`SeqReader`] and the
+/// checksums of [`crate::query`]'s index artifacts.
+#[inline]
+pub fn encode_record(r: SeqRecord) -> [u8; RECORD_BYTES] {
+    let mut buf = [0u8; RECORD_BYTES];
+    buf[0..8].copy_from_slice(&r.seq.to_le_bytes());
+    buf[8..12].copy_from_slice(&r.pid.to_le_bytes());
+    buf[12..16].copy_from_slice(&r.duration.to_le_bytes());
+    buf
+}
 
 /// Writer buffer size; also the per-worker resident cost of file mode.
 pub const WRITER_BUFFER_BYTES: usize = 1 << 20;
@@ -48,18 +65,13 @@ impl SeqWriter {
 
     #[inline]
     pub fn write(&mut self, r: SeqRecord) -> io::Result<()> {
-        let mut buf = [0u8; RECORD_BYTES];
-        buf[0..8].copy_from_slice(&r.seq.to_le_bytes());
-        buf[8..12].copy_from_slice(&r.pid.to_le_bytes());
-        buf[12..16].copy_from_slice(&r.duration.to_le_bytes());
-        self.out.write_all(&buf)?;
+        self.out.write_all(&encode_record(r))?;
         self.count += 1;
         Ok(())
     }
 
     /// Flush, patch the header count, and return the record count.
     pub fn finish(mut self) -> io::Result<u64> {
-        use std::io::Seek;
         self.out.flush()?;
         let mut file = self.out.into_inner().map_err(|e| e.into_error())?;
         file.seek(io::SeekFrom::Start(8))?;
@@ -69,10 +81,12 @@ impl SeqWriter {
     }
 }
 
-/// Streaming record reader (iterator interface).
+/// Streaming record reader (iterator interface), with positioned reads
+/// ([`SeqReader::seek_record`]) for index-driven random access.
 pub struct SeqReader {
     input: BufReader<File>,
     remaining: u64,
+    total: u64,
 }
 
 impl SeqReader {
@@ -82,8 +96,27 @@ impl SeqReader {
 
     /// [`SeqReader::open`] with an explicit buffer capacity, for k-way
     /// merges that hold many readers open under one memory budget.
+    ///
+    /// Open-time validation: a missing file, a truncated file (fewer
+    /// payload bytes than the header's record count claims), and a
+    /// payload that is not a whole multiple of the 16-byte record size
+    /// all fail *here* with a typed [`io::Error`] naming the offending
+    /// path, instead of surfacing as a bare `read_exact` failure deep
+    /// inside a merge.
     pub fn open_with_capacity(path: &Path, capacity: usize) -> io::Result<SeqReader> {
-        let file = File::open(path)?;
+        let file = File::open(path).map_err(|e| {
+            io::Error::new(e.kind(), format!("{}: {e}", path.display()))
+        })?;
+        let file_len = file.metadata()?.len();
+        if file_len < HEADER_BYTES as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "{}: {file_len}-byte file is too small for a TSPMSEQ1 header",
+                    path.display()
+                ),
+            ));
+        }
         let mut input = BufReader::with_capacity(capacity.max(RECORD_BYTES), file);
         let mut magic = [0u8; 8];
         input.read_exact(&mut magic)?;
@@ -95,12 +128,74 @@ impl SeqReader {
         }
         let mut count_buf = [0u8; 8];
         input.read_exact(&mut count_buf)?;
-        Ok(SeqReader { input, remaining: u64::from_le_bytes(count_buf) })
+        let count = u64::from_le_bytes(count_buf);
+        let payload = file_len - HEADER_BYTES as u64;
+        if payload % RECORD_BYTES as u64 != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: payload of {payload} bytes is not a multiple of the \
+                     {RECORD_BYTES}-byte record size",
+                    path.display()
+                ),
+            ));
+        }
+        let actual = payload / RECORD_BYTES as u64;
+        if actual < count {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "{}: truncated TSPMSEQ1 file — header claims {count} records, \
+                     payload holds {actual}",
+                    path.display()
+                ),
+            ));
+        }
+        if actual > count {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: payload holds {actual} records but the header claims {count} \
+                     (writer died before SeqWriter::finish?)",
+                    path.display()
+                ),
+            ));
+        }
+        Ok(SeqReader { input, remaining: count, total: count })
     }
 
     /// Records left to read.
     pub fn remaining(&self) -> u64 {
         self.remaining
+    }
+
+    /// Total records in the file (independent of the read position).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Position the reader on record `n` (0-based); subsequent
+    /// [`SeqReader::read_batch`] calls stream from there. `n` may equal
+    /// the record count (positions at EOF); anything past that is an
+    /// `InvalidInput` error.
+    pub fn seek_record(&mut self, n: u64) -> io::Result<()> {
+        if n > self.total {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("seek_record({n}) past the end of a {}-record file", self.total),
+            ));
+        }
+        self.input
+            .seek(io::SeekFrom::Start(HEADER_BYTES as u64 + n * RECORD_BYTES as u64))?;
+        self.remaining = self.total - n;
+        Ok(())
+    }
+
+    /// Positioned batch read: fill `buf` starting at record `n`.
+    /// Equivalent to [`SeqReader::seek_record`] + [`SeqReader::read_batch`].
+    pub fn read_at(&mut self, n: u64, buf: &mut [SeqRecord]) -> io::Result<usize> {
+        self.seek_record(n)?;
+        self.read_batch(buf)
     }
 
     /// Read up to `buf.len()` records into `buf`; returns how many were
@@ -295,6 +390,106 @@ mod tests {
         assert_eq!(seen.len(), 800);
         assert_eq!(&seen[..500], &d1[..]);
         assert_eq!(&seen[500..], &d2[..]);
+    }
+
+    #[test]
+    fn positioned_reads_match_read_batch() {
+        let path = tmp("seek.tspm");
+        let data = recs(1000);
+        write_file(&path, &data).unwrap();
+
+        // Streaming from every seek position equals the slice suffix the
+        // plain batched read path yields.
+        for &n in &[0u64, 1, 499, 997, 1000] {
+            let mut reader = SeqReader::open(&path).unwrap();
+            assert_eq!(reader.total(), 1000);
+            reader.seek_record(n).unwrap();
+            assert_eq!(reader.remaining(), 1000 - n);
+            let mut got = Vec::new();
+            let mut buf = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; 97];
+            loop {
+                let k = reader.read_batch(&mut buf).unwrap();
+                if k == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf[..k]);
+            }
+            assert_eq!(got, data[n as usize..], "seek to {n}");
+        }
+
+        // read_at equals the direct slice, including re-positioning
+        // backwards after a forward read.
+        let mut reader = SeqReader::open(&path).unwrap();
+        let mut buf = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; 64];
+        let k = reader.read_at(600, &mut buf).unwrap();
+        assert_eq!(&buf[..k], &data[600..664]);
+        let k = reader.read_at(3, &mut buf).unwrap();
+        assert_eq!(&buf[..k], &data[3..67]);
+
+        // Past-the-end seeks are typed errors; EOF-position seeks are not.
+        assert!(reader.seek_record(1001).is_err());
+        reader.seek_record(1000).unwrap();
+        assert_eq!(reader.read_batch(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn open_missing_file_names_the_path() {
+        let path = tmp("does_not_exist.tspm");
+        let _ = std::fs::remove_file(&path);
+        let err = SeqReader::open(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::NotFound);
+        assert!(err.to_string().contains("does_not_exist.tspm"), "got {err}");
+        // The file-set bulk path surfaces the same typed error.
+        let fs = SeqFileSet { files: vec![path], total_records: 0, num_patients: 0, num_phenx: 0 };
+        let err = fs.read_all().unwrap_err();
+        assert!(err.to_string().contains("does_not_exist.tspm"), "got {err}");
+    }
+
+    #[test]
+    fn open_rejects_truncation_at_open_time() {
+        let path = tmp("trunc_open.tspm");
+        write_file(&path, &recs(50)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Drop exactly one record: payload stays a multiple of 16, so this
+        // is the pure header-vs-payload count mismatch.
+        std::fs::write(&path, &full[..full.len() - RECORD_BYTES]).unwrap();
+        let err = SeqReader::open(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("trunc_open.tspm"), "got {err}");
+        assert!(err.to_string().contains("50"), "got {err}");
+    }
+
+    #[test]
+    fn open_rejects_non_record_multiple_sizes() {
+        let path = tmp("ragged.tspm");
+        write_file(&path, &recs(10)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SeqReader::open(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("multiple"), "got {err}");
+        assert!(err.to_string().contains("ragged.tspm"), "got {err}");
+
+        // A whole unaccounted trailing record (writer died before finish
+        // patched the header) is also rejected, with the counts shown.
+        let path2 = tmp("unpatched.tspm");
+        write_file(&path2, &recs(10)).unwrap();
+        let mut bytes = std::fs::read(&path2).unwrap();
+        bytes.extend_from_slice(&encode_record(SeqRecord { seq: 1, pid: 2, duration: 3 }));
+        std::fs::write(&path2, &bytes).unwrap();
+        let err = SeqReader::open(&path2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("11"), "got {err}");
+    }
+
+    #[test]
+    fn open_rejects_header_shorter_than_header_bytes() {
+        let path = tmp("stub.tspm");
+        std::fs::write(&path, b"TSPM").unwrap();
+        let err = SeqReader::open(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("stub.tspm"), "got {err}");
     }
 
     #[test]

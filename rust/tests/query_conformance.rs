@@ -1,0 +1,273 @@
+//! Query-subsystem conformance: every `QueryService` answer must equal
+//! the brute-force scan over `SeqFileSet::read_all()`, identically
+//! across block sizes and with the cache on or off; working memory must
+//! stay block-bounded; and the engine's `.index(dir)` stage must yield
+//! an artifact whose answers match the spilled run exactly.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use tspm_plus::dbmart::NumericDbMart;
+use tspm_plus::engine::{Engine, OutputKind};
+use tspm_plus::metrics::MemTracker;
+use tspm_plus::mining::{MiningConfig, SeqRecord};
+use tspm_plus::query::{self, IndexConfig, QueryService, SeqIndex, SeqSupport};
+use tspm_plus::rng::Rng;
+use tspm_plus::seqstore::{self, SeqFileSet, RECORD_BYTES};
+use tspm_plus::sparsity::SparsityConfig;
+use tspm_plus::synthea::SyntheaConfig;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tspm_query_conf_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write `records` (already globally sorted) as an n-file spill set.
+fn spill(dir: &Path, records: &[SeqRecord], n_files: usize, num_patients: u32) -> SeqFileSet {
+    let chunk = records.len().div_ceil(n_files.max(1)).max(1);
+    let mut files = Vec::new();
+    for (i, part) in records.chunks(chunk).enumerate() {
+        let p = dir.join(format!("part_{i}.tspm"));
+        seqstore::write_file(&p, part).unwrap();
+        files.push(p);
+    }
+    if files.is_empty() {
+        let p = dir.join("part_0.tspm");
+        seqstore::write_file(&p, &[]).unwrap();
+        files.push(p);
+    }
+    SeqFileSet { files, total_records: records.len() as u64, num_patients, num_phenx: 0 }
+}
+
+/// A random sorted multiset shaped like a screened run.
+fn random_sorted(case: u64, n: usize, n_seqs: u64, n_pats: u64) -> Vec<SeqRecord> {
+    let mut r = Rng::new(case);
+    let mut v: Vec<SeqRecord> = (0..n)
+        .map(|_| SeqRecord {
+            seq: r.gen_range(n_seqs),
+            pid: r.gen_range(n_pats) as u32,
+            duration: r.gen_range(700) as u32,
+        })
+        .collect();
+    v.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+    v
+}
+
+fn brute_by_seq(all: &[SeqRecord], seq: u64) -> Vec<SeqRecord> {
+    all.iter().copied().filter(|r| r.seq == seq).collect()
+}
+
+fn brute_by_pid(all: &[SeqRecord], pid: u32) -> Vec<SeqRecord> {
+    all.iter().copied().filter(|r| r.pid == pid).collect()
+}
+
+fn brute_patients_with(all: &[SeqRecord], seq: u64, lo: u32, hi: u32) -> Vec<u32> {
+    let mut v: Vec<u32> = all
+        .iter()
+        .filter(|r| r.seq == seq && (lo..=hi).contains(&r.duration))
+        .map(|r| r.pid)
+        .collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn brute_top_k(all: &[SeqRecord], k: usize) -> Vec<SeqSupport> {
+    let mut rows: Vec<SeqSupport> = Vec::new();
+    let mut i = 0;
+    while i < all.len() {
+        let seq = all[i].seq;
+        let mut j = i;
+        let mut patients = 0u32;
+        let mut last_pid = None;
+        while j < all.len() && all[j].seq == seq {
+            if last_pid != Some(all[j].pid) {
+                patients += 1;
+                last_pid = Some(all[j].pid);
+            }
+            j += 1;
+        }
+        rows.push(SeqSupport { seq, patients, records: (j - i) as u64 });
+        i = j;
+    }
+    rows.sort_unstable_by(|a, b| b.patients.cmp(&a.patients).then(a.seq.cmp(&b.seq)));
+    rows.truncate(k.min(rows.len()));
+    rows
+}
+
+/// The core property: every answer equals the brute-force scan, for
+/// every block size, with the cache on and off — and the cached and
+/// uncached services agree with each other by construction.
+#[test]
+fn answers_equal_brute_force_across_block_sizes_and_cache_settings() {
+    let mut meta = Rng::new(0xBEEF);
+    for case in 0..4u64 {
+        let n = 2_000 + meta.gen_range(8_000) as usize;
+        let n_seqs = 1 + meta.gen_range(60);
+        let n_pats = 1 + meta.gen_range(50);
+        let all = random_sorted(case + 1, n, n_seqs, n_pats);
+        let dir = tmpdir(&format!("prop_{case}"));
+        let input = spill(&dir, &all, 3, n_pats as u32);
+
+        // Sample sequences: present (first/middle/last) and absent.
+        let mut sample_seqs: Vec<u64> =
+            vec![all[0].seq, all[all.len() / 2].seq, all[all.len() - 1].seq, u64::MAX];
+        sample_seqs.dedup();
+        let sample_pids = [0u32, (n_pats / 2) as u32, u32::MAX];
+
+        for &block in &[7usize, 128, 4096] {
+            let idx_dir = dir.join(format!("idx_{block}"));
+            query::index::build(&input, &idx_dir, &IndexConfig { block_records: block }, None)
+                .unwrap();
+            for &cache_bytes in &[0usize, 1 << 20] {
+                let svc = QueryService::open_with_cache(&idx_dir, cache_bytes).unwrap();
+                let ctx = format!("case={case} block={block} cache={cache_bytes}");
+                for &s in &sample_seqs {
+                    assert_eq!(*svc.by_sequence(s).unwrap(), brute_by_seq(&all, s), "{ctx}");
+                    assert_eq!(
+                        *svc.patients_with(s, 100, 400).unwrap(),
+                        brute_patients_with(&all, s, 100, 400),
+                        "{ctx}"
+                    );
+                    let h = svc.duration_histogram(s, 6).unwrap();
+                    let expect = brute_by_seq(&all, s);
+                    assert_eq!(h.total, expect.len() as u64, "{ctx}");
+                    assert_eq!(
+                        h.buckets.iter().map(|b| b.count).sum::<u64>(),
+                        expect.len() as u64,
+                        "{ctx}"
+                    );
+                    for b in &h.buckets {
+                        let want = expect
+                            .iter()
+                            .filter(|r| (b.lo..=b.hi).contains(&r.duration))
+                            .count() as u64;
+                        assert_eq!(b.count, want, "{ctx} bucket {}..={}", b.lo, b.hi);
+                    }
+                }
+                for &p in &sample_pids {
+                    assert_eq!(*svc.by_patient(p).unwrap(), brute_by_pid(&all, p), "{ctx}");
+                }
+                for &k in &[1usize, 5, usize::MAX] {
+                    assert_eq!(*svc.top_k_by_support(k).unwrap(), brute_top_k(&all, k), "{ctx}");
+                }
+                // Asking again (cache warm or recomputed) changes nothing.
+                let s = sample_seqs[0];
+                assert_eq!(*svc.by_sequence(s).unwrap(), brute_by_seq(&all, s), "{ctx}");
+                if cache_bytes > 0 {
+                    assert!(svc.stats().hits > 0, "{ctx}: repeat must hit the cache");
+                } else {
+                    assert_eq!(svc.stats().hits, 0, "{ctx}: cache disabled");
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Acceptance: the service's working memory stays bounded by the block
+/// size, not the data size — proved with a MemTracker on a dataset two
+/// orders of magnitude larger than a block.
+#[test]
+fn query_memory_is_bounded_by_block_size_not_data_size() {
+    let all = random_sorted(7, 60_000, 40, 300);
+    let data_bytes = (all.len() * RECORD_BYTES) as u64;
+    let dir = tmpdir("bounded");
+    let input = spill(&dir, &all, 1, 300);
+    let block = 256usize;
+    let idx_dir = dir.join("idx");
+    query::index::build(&input, &idx_dir, &IndexConfig { block_records: block }, None).unwrap();
+
+    let mut svc = QueryService::open_with_cache(&idx_dir, 0).unwrap();
+    let tracker = Arc::new(MemTracker::new());
+    svc.set_tracker(tracker.clone());
+
+    let heavy = svc.top_k_by_support(1).unwrap()[0].seq;
+    assert!(!svc.by_sequence(heavy).unwrap().is_empty());
+    assert!(!svc.by_patient(all[0].pid).unwrap().is_empty());
+    svc.patients_with(heavy, 0, u32::MAX).unwrap();
+    svc.duration_histogram(heavy, 16).unwrap();
+
+    // One record buffer + one reader buffer per scan: 2 × block × 16 B.
+    let bound = 2 * (block * RECORD_BYTES) as u64;
+    assert!(
+        tracker.peak() <= bound,
+        "peak {} exceeds the block bound {bound}",
+        tracker.peak()
+    );
+    assert!(
+        tracker.peak() * 50 < data_bytes,
+        "peak {} is not far below the {data_bytes}-byte data set",
+        tracker.peak()
+    );
+    assert_eq!(tracker.live(), 0, "all query buffers released");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: mine → screen (spilled) → index through the engine, then
+/// `QueryService` answers exactly what a full materialized scan yields,
+/// and repeated queries hit the LRU cache.
+#[test]
+fn engine_chain_mine_screen_index_query_round_trip() {
+    let db = NumericDbMart::encode(&SyntheaConfig::small().generate());
+    let base = tmpdir("engine_chain");
+    let out = Engine::from_dbmart(db)
+        .mine(MiningConfig { work_dir: base.join("work"), ..Default::default() })
+        .screen(SparsityConfig { min_patients: 5, threads: 2 })
+        .out_dir(base.join("run"))
+        .index_with(base.join("idx"), 512)
+        .run()
+        .unwrap();
+    assert_eq!(out.report.output, OutputKind::Spilled);
+    let built = out.index.as_ref().expect("index stage ran");
+    assert_eq!(built.block_records, 512);
+
+    // Full materialized scan = the reference answer set.
+    let all = out.sequences.clone().materialize().unwrap().records;
+    assert_eq!(built.total_records, all.len() as u64);
+
+    let svc = QueryService::open(&base.join("idx")).unwrap();
+    let mut seqs: Vec<u64> = all.iter().map(|r| r.seq).collect();
+    seqs.dedup();
+    assert_eq!(svc.index().distinct_seqs(), seqs.len() as u64);
+    for &s in seqs.iter().take(25) {
+        assert_eq!(*svc.by_sequence(s).unwrap(), brute_by_seq(&all, s), "seq {s}");
+    }
+    assert_eq!(*svc.top_k_by_support(10).unwrap(), brute_top_k(&all, 10));
+
+    // Repeating the same query is a cache hit sharing the same Arc.
+    let s = seqs[0];
+    let first = svc.by_sequence(s).unwrap();
+    let again = svc.by_sequence(s).unwrap();
+    assert!(Arc::ptr_eq(&first, &again));
+    assert!(svc.stats().hits >= 1, "stats: {:?}", svc.stats());
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The artifact is self-contained: the spilled inputs can disappear
+/// after the build and every query still answers. Reopening via
+/// `SeqIndex::open` equals the just-built tables.
+#[test]
+fn artifact_is_self_contained_and_reopenable() {
+    let all = random_sorted(21, 5_000, 30, 40);
+    let dir = tmpdir("selfcontained");
+    let input = spill(&dir, &all, 2, 40);
+    let idx_dir = dir.join("idx");
+    let built =
+        query::index::build(&input, &idx_dir, &IndexConfig { block_records: 64 }, None).unwrap();
+    for f in &input.files {
+        std::fs::remove_file(f).unwrap();
+    }
+    let reopened = SeqIndex::open(&idx_dir).unwrap();
+    assert_eq!(reopened.blocks, built.blocks);
+    assert_eq!(reopened.seqs, built.seqs);
+    reopened.verify_data().unwrap();
+    let svc = QueryService::from_index(reopened, 1 << 20);
+    let s = all[0].seq;
+    assert_eq!(*svc.by_sequence(s).unwrap(), brute_by_seq(&all, s));
+    let _ = std::fs::remove_dir_all(&dir);
+}
