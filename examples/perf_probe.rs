@@ -148,4 +148,54 @@ fn main() {
     std::fs::write("BENCH_query.json", qbench.to_string_pretty())
         .expect("write BENCH_query.json");
     println!("wrote BENCH_query.json");
+
+    // pid-major secondary index: by_patient scan-vs-index latency, plus
+    // the index-fed vs in-memory CSR build. Written to BENCH_pid_index.json.
+    let probe_pid = screened[screened.len() / 2].pid;
+    let t = Instant::now();
+    let fast = svc.by_patient(probe_pid).unwrap();
+    let fast_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let scanned = svc.by_patient_scan(probe_pid).unwrap();
+    let scan_secs = t.elapsed().as_secs_f64();
+    assert_eq!(*fast, scanned, "fast path and scan path must agree");
+    println!(
+        "by_patient pid {probe_pid}: indexed {:.3}ms vs scan {:.3}ms ({} records, {:.1}x)",
+        fast_secs * 1e3,
+        scan_secs * 1e3,
+        fast.len(),
+        scan_secs / fast_secs.max(1e-9)
+    );
+    let num_patients = db.num_patients() as u32;
+    let t = Instant::now();
+    let direct = tspm_plus::matrix::SeqMatrix::build(&screened, num_patients).unwrap();
+    let matrix_mem_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let streamed =
+        tspm_plus::matrix::SeqMatrix::from_index(svc.index(), num_patients).unwrap();
+    let matrix_idx_secs = t.elapsed().as_secs_f64();
+    assert_eq!(streamed, direct, "index-fed CSR must be bit-identical");
+    println!(
+        "matrix {}×{} ({} nnz): in-memory {:.3}s vs index-fed {:.3}s",
+        num_patients,
+        direct.num_cols(),
+        direct.nnz(),
+        matrix_mem_secs,
+        matrix_idx_secs
+    );
+    let pbench = Json::obj(vec![
+        ("bench", Json::from("pid_index".to_string())),
+        ("records_indexed", Json::from(screened.len())),
+        ("probe_pid", Json::from(probe_pid as u64)),
+        ("patient_records", Json::from(fast.len())),
+        ("by_patient_indexed_secs", Json::from(fast_secs)),
+        ("by_patient_scan_secs", Json::from(scan_secs)),
+        ("speedup_indexed_over_scan", Json::from(scan_secs / fast_secs.max(1e-9))),
+        ("matrix_nnz", Json::from(direct.nnz())),
+        ("matrix_in_memory_secs", Json::from(matrix_mem_secs)),
+        ("matrix_from_index_secs", Json::from(matrix_idx_secs)),
+    ]);
+    std::fs::write("BENCH_pid_index.json", pbench.to_string_pretty())
+        .expect("write BENCH_pid_index.json");
+    println!("wrote BENCH_pid_index.json");
 }

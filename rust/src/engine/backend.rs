@@ -38,7 +38,10 @@
 //! of 43 GB" figure thus extends from the mining phase to the whole
 //! end-to-end run. Spilled results are also what the query subsystem
 //! indexes ([`crate::query::index::build`]) — a serving layer answers
-//! point/range queries from them without ever materialising.
+//! point/range queries from them without ever materialising, and the
+//! index in turn feeds the out-of-core matrix builder
+//! ([`crate::matrix::SeqMatrix::from_index`]), so even matrix → MSMR
+//! chains stay under the budget when they follow an index stage.
 //!
 //! Auto-selection uses [`crate::partition`]'s exact per-patient output
 //! prediction (`n·(n−1)/2` after the optional first-occurrence filter)

@@ -11,6 +11,7 @@
 use crate::cli::CliError;
 use crate::config::ConfigError;
 use crate::dbmart::EncodeError;
+use crate::matrix::MatrixError;
 use crate::mining::MiningError;
 use crate::partition::PartitionError;
 use crate::query::QueryError;
@@ -37,6 +38,9 @@ pub enum TspmError {
     /// Query-subsystem failures ([`crate::query`]): corrupt index
     /// artifacts, unsorted build input, invalid queries.
     Query(QueryError),
+    /// Matrix-builder failures ([`crate::matrix`]): a pid outside the
+    /// row space, or an index artifact that disagrees with its tables.
+    Matrix(MatrixError),
     /// An [`crate::engine::Plan`] that fails validation (empty chain,
     /// ill-ordered stages, missing labels, …).
     Plan(String),
@@ -55,6 +59,7 @@ impl fmt::Display for TspmError {
             TspmError::Cli(e) => write!(f, "{e}"),
             TspmError::Runtime(e) => write!(f, "{e}"),
             TspmError::Query(e) => write!(f, "{e}"),
+            TspmError::Matrix(e) => write!(f, "{e}"),
             TspmError::Plan(msg) => write!(f, "invalid plan: {msg}"),
             TspmError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
         }
@@ -72,6 +77,7 @@ impl std::error::Error for TspmError {
             TspmError::Cli(e) => Some(e),
             TspmError::Runtime(e) => Some(e),
             TspmError::Query(e) => Some(e),
+            TspmError::Matrix(e) => Some(e),
             TspmError::Plan(_) | TspmError::Pipeline(_) => None,
         }
     }
@@ -125,6 +131,12 @@ impl From<QueryError> for TspmError {
     }
 }
 
+impl From<MatrixError> for TspmError {
+    fn from(e: MatrixError) -> Self {
+        TspmError::Matrix(e)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +158,9 @@ mod tests {
         assert!(matches!(e, TspmError::Encode(_)));
         let q: TspmError = QueryError::Invalid("zero buckets".into()).into();
         assert!(matches!(q, TspmError::Query(_)));
+        let mx: TspmError =
+            MatrixError::PidOutOfRange { pid: 9, num_patients: 3 }.into();
+        assert!(matches!(mx, TspmError::Matrix(_)));
         let i: TspmError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
         assert!(matches!(i, TspmError::Io(_)));
     }

@@ -36,11 +36,18 @@
 //! memory budget — with [`SequenceOutput::materialize`] as the explicit
 //! escape hatch. See [`backend`] for the residency policy.
 //!
-//! A spilled mine → screen chain can additionally end in `.index(dir)`:
+//! A spilled mine → screen chain can additionally chain `.index(dir)`:
 //! the run then also writes an immutable query artifact
 //! ([`crate::query::SeqIndex`], returned via [`RunOutput::index`]) that
 //! [`crate::query::QueryService`] serves point/range queries from —
 //! the first consumer of the spilled contract that never materialises.
+//! From there the ML stages ride the same contract: `.matrix()` (and
+//! `.msmr(k)`) after `.index(dir)` build the patient×sequence CSR
+//! **straight from the artifact**
+//! ([`crate::matrix::SeqMatrix::from_index`]), so the full
+//! `mine → screen → index → matrix → msmr` pipeline completes under a
+//! memory budget far below the record multiset, with CSR output
+//! bit-identical to the in-memory path.
 //!
 //! The original free functions remain available as the "expert layer"
 //! (see the crate docs); the façade is the supported composition seam —
@@ -378,8 +385,9 @@ impl Engine {
 
     /// Append the index stage: turn the spilled screen output into an
     /// immutable query artifact under `out_dir` ([`crate::query`]).
-    /// Only valid on mine → screen chains; the run's residency is
-    /// forced to spilled.
+    /// Requires a screen stage before it and forces spilled residency;
+    /// `.matrix()` / `.msmr(k)` may follow — they then build straight
+    /// from the artifact instead of materialising the records.
     pub fn index(self, out_dir: PathBuf) -> Engine {
         self.index_with(out_dir, query::DEFAULT_BLOCK_RECORDS)
     }
@@ -586,7 +594,7 @@ impl Engine {
                 Ok(query::index::build(
                     &files,
                     &dir,
-                    &query::IndexConfig { block_records },
+                    &query::IndexConfig { block_records, ..Default::default() },
                     Some(&tracker),
                 )?)
             })?;
@@ -618,20 +626,36 @@ impl Engine {
             duration_screen_stats = Some(stats);
         }
 
-        // 4. Patient×sequence matrix (in-memory chains only).
+        // 4. Patient×sequence matrix. In-memory chains build from the
+        // resident records; spilled chains stream the CSR straight from
+        // the index artifact — the multiset is never materialised.
         let mut matrix = None;
         if let Some(bucket) = plan.matrix_stage() {
-            let sequences = output
-                .as_in_memory()
-                .expect("validated: matrix implies in-memory output");
-            let m = timer.run("matrix", || match bucket {
-                Some(b) => SeqMatrix::build_with_durations(
-                    &sequences.records,
-                    sequences.num_patients,
-                    b,
-                ),
-                None => SeqMatrix::build(&sequences.records, sequences.num_patients),
-            });
+            let m = timer.run("matrix", || -> Result<SeqMatrix, TspmError> {
+                match &output {
+                    SequenceOutput::InMemory(sequences) => Ok(match bucket {
+                        Some(b) => SeqMatrix::build_with_durations(
+                            &sequences.records,
+                            sequences.num_patients,
+                            b,
+                        )?,
+                        None => {
+                            SeqMatrix::build(&sequences.records, sequences.num_patients)?
+                        }
+                    }),
+                    SequenceOutput::Spilled(files) => {
+                        let idx = index
+                            .as_ref()
+                            .expect("validated: spilled matrix implies an index stage");
+                        Ok(SeqMatrix::from_index_tracked(
+                            idx,
+                            files.num_patients,
+                            bucket,
+                            Some(&tracker),
+                        )?)
+                    }
+                }
+            })?;
             let bytes = (m.nnz() * std::mem::size_of::<u32>()
                 + m.row_ptr.len() * std::mem::size_of::<usize>()
                 + m.seq_ids.len() * std::mem::size_of::<u64>()) as u64;
@@ -905,6 +929,52 @@ mod tests {
             .plan()
             .unwrap_err();
         assert!(err.to_string().contains("spill"), "got {err}");
+    }
+
+    /// The out-of-core ML chain: mine → screen → index → matrix → msmr
+    /// with spilled residency produces a CSR (and selection) identical
+    /// to the fully in-memory chain, without materialising the records.
+    #[test]
+    fn index_fed_matrix_and_msmr_match_the_in_memory_chain() {
+        let g = SyntheaConfig::small().generate_with_truth();
+        let db = NumericDbMart::encode(&g.dbmart);
+        let labels: Vec<f32> =
+            (0..db.num_patients()).map(|p| f32::from(p % 3 == 0)).collect();
+        let base = std::env::temp_dir().join("tspm_engine_spilled_matrix");
+        let _ = std::fs::remove_dir_all(&base);
+
+        let golden = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig { work_dir: base.join("mem"), ..Default::default() })
+            .screen(SparsityConfig { min_patients: 5, threads: 2 })
+            .matrix()
+            .msmr(25)
+            .labels(labels.clone())
+            .run()
+            .unwrap();
+        let spilled = Engine::from_dbmart(db)
+            .mine(MiningConfig { work_dir: base.join("spill"), ..Default::default() })
+            .screen(SparsityConfig { min_patients: 5, threads: 2 })
+            .out_dir(base.join("run"))
+            .index(base.join("idx"))
+            .matrix()
+            .msmr(25)
+            .labels(labels)
+            .memory_budget(1 << 20) // ≪ the multiset: the chain must not materialise
+            .run()
+            .unwrap();
+
+        assert_eq!(spilled.report.output, OutputKind::Spilled);
+        let names: Vec<&str> =
+            spilled.report.stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, ["mine", "screen", "index", "matrix", "msmr"]);
+        let gm = golden.matrix.as_ref().unwrap();
+        let sm = spilled.matrix.as_ref().unwrap();
+        assert_eq!(sm, gm, "index-fed CSR must be bit-identical to the in-memory one");
+        assert_eq!(
+            spilled.selection.as_ref().unwrap().columns,
+            golden.selection.as_ref().unwrap().columns
+        );
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

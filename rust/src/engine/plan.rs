@@ -4,9 +4,15 @@
 //! A [`Plan`] is a linear DAG of [`Stage`]s over the paper's workflow:
 //!
 //! ```text
-//! Mine ─▶ (Screen) ─▶ (DurationScreen) ─▶ (Matrix) ─▶ (Msmr)
-//!             └─────▶ (Index)   — spilled mine → screen chains only
+//! in-memory: Mine ─▶ (Screen) ─▶ (DurationScreen) ─▶ (Matrix) ─▶ (Msmr)
+//! spilled:   Mine ─▶  Screen  ─▶ Index ─▶ (Matrix) ─▶ (Msmr)
 //! ```
+//!
+//! The spilled chain never materializes the record multiset: the screen
+//! runs out of core, the index streams the spill files once, and the
+//! matrix stage builds its CSR straight from the artifact
+//! ([`crate::matrix::SeqMatrix::from_index`]) — MSMR then consumes the
+//! (much smaller) matrix as usual.
 //!
 //! Validation happens **before** any work starts, so a mis-assembled
 //! pipeline fails in microseconds with a precise message instead of
@@ -34,13 +40,17 @@ pub enum Stage {
     DurationScreen { bucket_days: u32, min_distinct_durations: u32 },
     /// Patient×sequence matrix; `duration_bucket_days` switches to the
     /// duration-aware column space
-    /// ([`crate::matrix::SeqMatrix::build_with_durations`]).
+    /// ([`crate::matrix::SeqMatrix::build_with_durations`]). On spilled
+    /// chains (after `Index`) the CSR is built straight from the
+    /// artifact ([`crate::matrix::SeqMatrix::from_index`]) — bit
+    /// identical, never materialized.
     Matrix { duration_bucket_days: Option<u32> },
     /// MSMR feature selection (needs `Matrix` and labels).
     Msmr(MsmrConfig),
     /// Build a query-index artifact over the spilled screen output
-    /// ([`crate::query::index::build`]). Terminal stage of spilled
-    /// mine → screen chains; the engine forces spilled residency.
+    /// ([`crate::query::index::build`]). Spilled mine → screen chains
+    /// only; the engine forces spilled residency. Matrix/MSMR stages may
+    /// follow — they feed from the artifact.
     Index { out_dir: PathBuf, block_records: usize },
 }
 
@@ -59,14 +69,16 @@ impl Stage {
 
     /// Topological rank; a valid chain has strictly increasing ranks,
     /// which enforces both ordering and at-most-once per stage kind.
+    /// `Index` sits between the screen and the matrix: on spilled chains
+    /// the matrix is built *from* the artifact.
     fn rank(&self) -> u8 {
         match self {
             Stage::Mine(_) => 0,
             Stage::Screen(_) => 1,
-            Stage::DurationScreen { .. } => 2,
-            Stage::Matrix { .. } => 3,
-            Stage::Msmr(_) => 4,
-            Stage::Index { .. } => 5,
+            Stage::Index { .. } => 2,
+            Stage::DurationScreen { .. } => 3,
+            Stage::Matrix { .. } => 4,
+            Stage::Msmr(_) => 5,
         }
     }
 }
@@ -116,7 +128,7 @@ impl Plan {
             if rank < prev_rank {
                 return Err(TspmError::Plan(format!(
                     "stage {:?} is out of order — stages must follow \
-                     mine → screen → duration_screen → matrix → msmr",
+                     mine → screen → index → duration_screen → matrix → msmr",
                     stage.name()
                 )));
             }
@@ -135,27 +147,28 @@ impl Plan {
                 .find(|s| !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. }))
                 .expect("spill_capable is false");
             return Err(TspmError::Plan(format!(
-                "spilled output supports the mine → screen chain only; stage {:?} needs \
-                 in-memory records — drop .output(OutputChoice::Spilled) or materialize() \
-                 a previous run's result yourself",
+                "spilled output supports mine → screen chains (plus index-fed matrix/msmr); \
+                 stage {:?} needs in-memory records — drop .output(OutputChoice::Spilled), \
+                 insert .index(dir) before it, or materialize() a previous run's result \
+                 yourself",
                 bad.name()
             )));
         }
         if let Some((_, block_records)) = self.index_stage() {
             // The index consumes the *sorted* spill files the screen
             // writes, so it is validated like OutputChoice::Spilled plus
-            // a hard dependency on the screen stage.
-            if !self.spill_capable() {
-                let bad = self
-                    .stages
-                    .iter()
-                    .find(|s| {
-                        !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. })
-                    })
-                    .expect("spill_capable is false");
+            // a hard dependency on the screen stage. Matrix/MSMR may
+            // follow — they feed from the artifact, never from resident
+            // records — but the duration screen cannot: it rewrites the
+            // record multiset in memory.
+            if let Some(bad) = self
+                .stages
+                .iter()
+                .find(|s| matches!(s, Stage::DurationScreen { .. }))
+            {
                 return Err(TspmError::Plan(format!(
-                    "index builds from spill files; stage {:?} needs in-memory records \
-                     — index plans are mine → screen → index only",
+                    "stage {:?} rewrites in-memory records and cannot join an index \
+                     chain — spilled plans are mine → screen → index [→ matrix → msmr]",
                     bad.name()
                 )));
             }
@@ -167,6 +180,9 @@ impl Plan {
                 ));
             }
             if self.output == OutputChoice::InMemory {
+                // The explicit-residency conflict: `.index(dir)` forces
+                // spilled residency, so an explicit InMemory request
+                // must fail loudly, never be silently overridden.
                 return Err(TspmError::Plan(
                     "index builds from spill files — drop .output(OutputChoice::InMemory) \
                      (index plans force spilled residency)"
@@ -267,14 +283,29 @@ impl Plan {
         })
     }
 
-    /// Can this chain produce a spilled result? Only mine → screen
-    /// (optionally → index) can: every other downstream stage (duration
-    /// screen, matrix, MSMR) consumes in-memory records, so those plans
-    /// always materialise.
+    /// Can this chain produce a spilled result? mine → screen chains
+    /// can, and index chains can take it further: the index stage feeds
+    /// matrix (and thus MSMR) straight from the artifact, so those
+    /// stages no longer force materialisation. Everything else (the
+    /// duration screen; matrix without an index) consumes in-memory
+    /// records, so those plans always materialise.
     pub fn spill_capable(&self) -> bool {
-        self.stages
-            .iter()
-            .all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. }))
+        if self.index_stage().is_some() {
+            self.stages.iter().all(|s| {
+                matches!(
+                    s,
+                    Stage::Mine(_)
+                        | Stage::Screen(_)
+                        | Stage::Index { .. }
+                        | Stage::Matrix { .. }
+                        | Stage::Msmr(_)
+                )
+            })
+        } else {
+            self.stages
+                .iter()
+                .all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_)))
+        }
     }
 
     /// Human-readable chain, e.g. `mine → screen → matrix → msmr`.
@@ -454,7 +485,8 @@ mod tests {
             .validate()
             .unwrap_err();
         assert!(err.to_string().contains("screen"), "got {err}");
-        // Index cannot share a chain with in-memory consumers.
+        // The matrix belongs *after* the index (it feeds from the
+        // artifact); putting it before is an ordering violation.
         let err = plan_of(vec![
             Stage::Mine(MiningConfig::default()),
             Stage::Screen(SparsityConfig::default()),
@@ -463,8 +495,9 @@ mod tests {
         ])
         .validate()
         .unwrap_err();
-        assert!(err.to_string().contains("matrix"), "got {err}");
-        // Explicit in-memory residency contradicts the index stage.
+        assert!(err.to_string().contains("out of order"), "got {err}");
+        // Explicit in-memory residency contradicts the index stage —
+        // a validation error, never a silent override.
         let mut p = plan_of(vec![
             Stage::Mine(MiningConfig::default()),
             Stage::Screen(SparsityConfig::default()),
@@ -482,6 +515,60 @@ mod tests {
         .validate()
         .unwrap_err();
         assert!(err.to_string().contains("block_records"), "got {err}");
+    }
+
+    #[test]
+    fn index_fed_matrix_and_msmr_chains_validate() {
+        let idx = || Stage::Index {
+            out_dir: PathBuf::from("/tmp/tspm_plan_idx_matrix"),
+            block_records: 512,
+        };
+        // The full out-of-core chain is valid and spill-capable, under
+        // Auto and explicit Spilled residency.
+        for output in [OutputChoice::Auto, OutputChoice::Spilled] {
+            let mut p = plan_of(vec![
+                Stage::Mine(MiningConfig::default()),
+                Stage::Screen(SparsityConfig::default()),
+                idx(),
+                Stage::Matrix { duration_bucket_days: None },
+                Stage::Msmr(MsmrConfig::default()),
+            ]);
+            p.output = output;
+            p.validate().unwrap();
+            assert!(p.spill_capable());
+            assert_eq!(p.describe(), "mine → screen → index → matrix → msmr");
+        }
+        // The explicit-residency conflict persists with the longer chain.
+        let mut p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            idx(),
+            Stage::Matrix { duration_bucket_days: None },
+        ]);
+        p.output = OutputChoice::InMemory;
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("spill"), "got {err}");
+        // The duration screen rewrites resident records — it cannot join
+        // an index chain in either order.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            idx(),
+            Stage::DurationScreen { bucket_days: 30, min_distinct_durations: 2 },
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("duration_screen"), "got {err}");
+        // Without the index stage, matrix chains stay in-memory-only:
+        // explicit Spilled is still rejected there.
+        let mut p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            Stage::Matrix { duration_bucket_days: None },
+        ]);
+        assert!(!p.spill_capable());
+        p.output = OutputChoice::Spilled;
+        assert!(p.validate().is_err());
     }
 
     #[test]

@@ -91,14 +91,46 @@
 //! `patients_with(seq, duration range)`, `top_k_by_support`,
 //! `duration_histogram` — reading one block at a time, never the whole
 //! set, with a size-bounded LRU result cache in front (hits/misses
-//! observable via [`query::QueryService::stats`]). On the engine,
+//! observable via [`query::QueryService::stats`]). v2 artifacts carry a
+//! **pid-major secondary index** (`pids.bin` + a pid-major record
+//! copy), so `by_patient` reads exactly the patient's own records —
+//! IO scales with the answer, not the artifact (v1 artifacts still
+//! open; they fall back to the block-pruned scan). On the engine,
 //! chain `.index(dir)` after a spilled screen and the artifact is built
 //! as a pipeline stage ([`engine::RunOutput::index`]); on the CLI:
 //!
 //! ```text
-//! tspm mine  --input db.csv --sparsity 50 --out-dir run/
-//! tspm index --in-dir run/  --out-dir idx/
-//! tspm query --index-dir idx/ --seq 420000012
+//! tspm mine   --input db.csv --sparsity 50 --out-dir run/
+//! tspm index  --in-dir run/  --out-dir idx/
+//! tspm query  --index-dir idx/ --seq 420000012
+//! tspm query  --index-dir idx/ --pid 42          # pid-indexed fast path
+//! tspm matrix --index-dir idx/                   # CSR straight from the artifact
+//! ```
+//!
+//! ### The out-of-core ML chain
+//!
+//! The index also feeds the ML layer without materialization:
+//! `.matrix()` / `.msmr(k)` chained after `.index(dir)` build the
+//! patient×sequence CSR **straight from the artifact**
+//! ([`matrix::SeqMatrix::from_index`] — bit-identical to the in-memory
+//! [`matrix::SeqMatrix::build`], resident set one read block + the CSR),
+//! so the paper's full pipeline runs end-to-end under a budget far
+//! below the mined record multiset:
+//!
+//! ```no_run
+//! use tspm_plus::prelude::*;
+//! # let cohort = SyntheaConfig::small().generate();
+//! # let labels = vec![0.0f32; 500];
+//! let out = Engine::from_raw(&cohort)?
+//!     .mine(MiningConfig::default())
+//!     .screen(SparsityConfig { min_patients: 5, threads: 0 })
+//!     .index(std::path::PathBuf::from("idx"))
+//!     .matrix()
+//!     .msmr(200)
+//!     .labels(labels)
+//!     .memory_budget(64 << 20) // ≪ the record multiset
+//!     .run()?;
+//! # Ok::<(), tspm_plus::engine::TspmError>(())
 //! ```
 //!
 //! ## The expert layer
@@ -171,6 +203,7 @@ pub mod prelude {
         BackendChoice, BackendKind, Engine, OutputChoice, OutputKind, Plan, RunOutput,
         RunReport, SequenceOutput, Stage, TspmError,
     };
+    pub use crate::matrix::{MatrixError, SeqMatrix};
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
     pub use crate::msmr::MsmrConfig;
     pub use crate::query::{QueryService, SeqIndex};

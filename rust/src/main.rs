@@ -7,6 +7,7 @@
 //! * `screen`    — sparsity-screen a mined sequence file
 //! * `index`     — build a query-index artifact over a spilled run
 //! * `query`     — point/range queries against an index artifact (JSON out)
+//! * `matrix`    — build the patient×sequence CSR straight from an index
 //! * `postcovid` — vignette 2: WHO Post COVID-19 identification
 //! * `mlho`      — vignette 1: MSMR + logistic-regression workflow
 //! * `bench`     — regenerate the paper's tables (table1|table2|enduser)
@@ -44,6 +45,7 @@ fn main() -> ExitCode {
         "screen" => cmd_screen(rest),
         "index" => cmd_index(rest),
         "query" => cmd_query(rest),
+        "matrix" => cmd_matrix(rest),
         "postcovid" => cmd_postcovid(rest),
         "mlho" => cmd_mlho(rest),
         "bench" => cmd_bench(rest),
@@ -72,6 +74,7 @@ fn print_global_help() {
          \x20 screen     sparsity-screen a mined sequence file\n\
          \x20 index      build a query-index artifact over a spilled run\n\
          \x20 query      point/range queries against an index (JSON output)\n\
+         \x20 matrix     patient×sequence CSR straight from an index (JSON output)\n\
          \x20 postcovid  vignette 2: WHO Post COVID-19 identification\n\
          \x20 mlho       vignette 1: MSMR + classifier workflow\n\
          \x20 bench      regenerate paper tables (table1|table2|enduser)\n\
@@ -170,7 +173,12 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         OptSpec::value("shards", Some("0"), "shards for the sharded backend (0 = auto)"),
         OptSpec::value("duration-unit", Some("1"), "duration unit in days"),
         OptSpec::value("sparsity", Some("0"), "min patients per sequence (0 = no screen)"),
-        OptSpec::value("memory-budget-mb", Some("4096"), "budget steering the auto backend"),
+        OptSpec::value(
+            "memory-budget-mb",
+            Some("4096"),
+            "budget steering the auto backend (env TSPM_MEMORY_BUDGET, in bytes, \
+             overrides this default when the flag is not given)",
+        ),
         OptSpec::value(
             "out-dir",
             None,
@@ -204,6 +212,18 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         }
     }
     let budget_mb: u64 = a.req("memory-budget-mb").map_err(|e| e.to_string())?;
+    let mut budget_bytes = budget_mb << 20;
+    // `TSPM_MEMORY_BUDGET` (bytes) — the same env the test harness
+    // honors — overrides the default when the flag is not explicit, so
+    // CI can pin the whole pipeline's budget in one place.
+    if !a.provided("memory-budget-mb") {
+        if let Some(b) = std::env::var("TSPM_MEMORY_BUDGET")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            budget_bytes = b;
+        }
+    }
     let mining_cfg = MiningConfig {
         threads,
         first_occurrence_only: a.flag("first-occurrence"),
@@ -221,7 +241,7 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
     let out_dir = a.get("out-dir").map(PathBuf::from);
     let mut engine = Engine::from_dbmart(db)
         .backend(backend)
-        .memory_budget(budget_mb << 20)
+        .memory_budget(budget_bytes)
         .mine(mining_cfg);
     engine = match &out_dir {
         Some(dir) => engine.output(OutputChoice::Spilled).out_dir(dir.clone()),
@@ -363,6 +383,11 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
         OptSpec::required("out-dir", "directory for the index artifact"),
         OptSpec::value("block-size", Some("4096"), "records per index block"),
         OptSpec::flag("no-verify", "skip input checksum verification"),
+        OptSpec::flag(
+            "no-pid-index",
+            "skip the pid-major secondary index (writes a v1 artifact: half \
+             the disk, but `tspm query --pid` falls back to scanning)",
+        ),
     ];
     if wants_help(argv) {
         print!(
@@ -389,7 +414,7 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
     }
     // Verification is fused into the build's streaming pass
     // (build_verified) so the input is read once, not twice.
-    let cfg = IndexConfig { block_records };
+    let cfg = IndexConfig { block_records, pid_index: !a.flag("no-pid-index") };
     let built = timer
         .run("build", || {
             if a.flag("no-verify") {
@@ -406,15 +431,84 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
         std::fs::copy(&lookup, out_dir.join("lookup.json")).map_err(|e| e.to_string())?;
     }
     println!(
-        "indexed {} records / {} distinct sequences → {} ({} blocks of {} records, {})",
+        "indexed {} records / {} distinct sequences → {} (v{}, {} blocks of {} records, \
+         {}{})",
         built.total_records,
         built.distinct_seqs(),
         out_dir.display(),
+        built.version,
         built.blocks.len(),
         block_records,
         fmt_bytes(built.artifact_bytes),
+        if built.pids.is_some() { ", pid-major index" } else { "" },
     );
     print!("{}", timer.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// matrix
+// ---------------------------------------------------------------------------
+
+fn cmd_matrix(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("index-dir", "index artifact directory (tspm index --out-dir)"),
+        OptSpec::value(
+            "duration-bucket",
+            None,
+            "bucket days for the duration-aware column space (omit = plain binary)",
+        ),
+        OptSpec::value(
+            "csr-out",
+            None,
+            "write the full CSR (seq_ids/row_ptr/col_idx) as JSON here",
+        ),
+    ];
+    if wants_help(argv) {
+        print!(
+            "{}",
+            usage(
+                "tspm matrix",
+                "build the patient×sequence CSR straight from an index artifact \
+                 (streaming, never materialises the records; JSON summary to stdout)",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let idx = tspm_plus::query::SeqIndex::open(&PathBuf::from(a.get("index-dir").unwrap()))
+        .map_err(|e| e.to_string())?;
+    let bucket: Option<u32> = a.get_parsed("duration-bucket").map_err(|e| e.to_string())?;
+    let num_patients = idx.num_patients;
+    let t = std::time::Instant::now();
+    let m = tspm_plus::matrix::SeqMatrix::from_index_tracked(&idx, num_patients, bucket, None)
+        .map_err(|e| e.to_string())?;
+    let build_ms = t.elapsed().as_secs_f64() * 1e3;
+    if let Some(path) = a.get("csr-out") {
+        let csr = Json::obj(vec![
+            ("seq_ids", Json::Arr(m.seq_ids.iter().map(|&s| Json::from(s)).collect())),
+            ("row_ptr", Json::Arr(m.row_ptr.iter().map(|&p| Json::from(p)).collect())),
+            ("col_idx", Json::Arr(m.col_idx.iter().map(|&c| Json::from(c as u64)).collect())),
+        ]);
+        std::fs::write(path, csr.to_string_pretty()).map_err(|e| e.to_string())?;
+    }
+    let out = Json::obj(vec![
+        ("command", Json::from("matrix")),
+        ("index_records", Json::from(idx.total_records)),
+        ("num_patients", Json::from(num_patients as u64)),
+        ("num_cols", Json::from(m.num_cols())),
+        ("nnz", Json::from(m.nnz())),
+        (
+            "duration_bucket_days",
+            match bucket {
+                Some(b) => Json::from(b as u64),
+                None => Json::Null,
+            },
+        ),
+        ("build_ms", Json::from(build_ms)),
+    ]);
+    print!("{}", out.to_string_pretty());
     Ok(())
 }
 
@@ -498,6 +592,7 @@ fn cmd_query(argv: &[String]) -> Result<(), String> {
                 ("evictions", Json::from(st.evictions)),
                 ("cached_entries", Json::from(st.cached_entries)),
                 ("cached_bytes", Json::from(st.cached_bytes)),
+                ("logical_bytes_read", Json::from(st.logical_bytes_read)),
             ]),
         );
     }

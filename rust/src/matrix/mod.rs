@@ -6,12 +6,71 @@
 //! occurrence matrix. Mined records are sparse, so the matrix is built in
 //! CSR form and densified per tile when feeding the PJRT artifacts
 //! (which take dense `f32` blocks).
+//!
+//! Two builders produce bit-identical CSR output:
+//!
+//! * [`SeqMatrix::build`] over in-memory records (the classic path);
+//! * [`SeqMatrix::from_index`] streams a [`crate::query::SeqIndex`]
+//!   artifact block-at-a-time — the out-of-core path: the record
+//!   multiset is never materialized, the resident set is one read block
+//!   plus the output CSR itself (MemTracker-proven in the conformance
+//!   tests).
 
+use crate::metrics::MemTracker;
 use crate::mining::SeqRecord;
+use crate::query::SeqIndex;
+use crate::seqstore::{SeqReader, RECORD_BYTES};
 use std::collections::HashMap;
+use std::fmt;
+
+/// Errors of the matrix builders.
+#[derive(Debug)]
+pub enum MatrixError {
+    /// A record's pid falls outside the declared row space — previously
+    /// a `debug_assert!` only, which in release builds surfaced as an
+    /// uncontextual index-out-of-bounds panic.
+    PidOutOfRange {
+        pid: u32,
+        num_patients: u32,
+    },
+    /// IO failures while streaming an index artifact.
+    Io(std::io::Error),
+    /// The index artifact and its data file disagree (corrupt or
+    /// hand-edited artifact).
+    Artifact(String),
+}
+
+impl fmt::Display for MatrixError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MatrixError::PidOutOfRange { pid, num_patients } => write!(
+                f,
+                "matrix: record pid {pid} is outside the {num_patients}-row patient \
+                 space — build the matrix with the cohort's patient count"
+            ),
+            MatrixError::Io(e) => write!(f, "matrix io error: {e}"),
+            MatrixError::Artifact(msg) => write!(f, "matrix artifact error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MatrixError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MatrixError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MatrixError {
+    fn from(e: std::io::Error) -> Self {
+        MatrixError::Io(e)
+    }
+}
 
 /// Binary patient × sequence occurrence matrix (CSR over patients).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SeqMatrix {
     /// Column order: distinct sequence ids, ascending.
     pub seq_ids: Vec<u64>,
@@ -25,8 +84,15 @@ pub struct SeqMatrix {
 
 impl SeqMatrix {
     /// Build from mined records. `num_patients` fixes the row space (use
-    /// the dbmart's patient count so rows align with labels).
-    pub fn build(records: &[SeqRecord], num_patients: u32) -> SeqMatrix {
+    /// the dbmart's patient count so rows align with labels). A record
+    /// whose pid falls outside that space is a typed
+    /// [`MatrixError::PidOutOfRange`], not a release-mode panic.
+    pub fn build(records: &[SeqRecord], num_patients: u32) -> Result<SeqMatrix, MatrixError> {
+        // Validate the row space up front so the fill loop below can
+        // index unchecked-by-construction.
+        if let Some(r) = records.iter().find(|r| r.pid >= num_patients) {
+            return Err(MatrixError::PidOutOfRange { pid: r.pid, num_patients });
+        }
         // Column dictionary.
         let mut seq_ids: Vec<u64> = records.iter().map(|r| r.seq).collect();
         seq_ids.sort_unstable();
@@ -37,7 +103,6 @@ impl SeqMatrix {
         // Per-row column sets (deduplicated occurrences).
         let mut rows: Vec<Vec<u32>> = vec![Vec::new(); num_patients as usize];
         for r in records {
-            debug_assert!(r.pid < num_patients, "record pid outside matrix rows");
             rows[r.pid as usize].push(col_of[&r.seq]);
         }
         let mut row_ptr = Vec::with_capacity(num_patients as usize + 1);
@@ -49,7 +114,207 @@ impl SeqMatrix {
             col_idx.extend_from_slice(row);
             row_ptr.push(col_idx.len());
         }
-        SeqMatrix { seq_ids, num_patients, row_ptr, col_idx }
+        Ok(SeqMatrix { seq_ids, num_patients, row_ptr, col_idx })
+    }
+
+    /// Build the CSR matrix **straight from an index artifact**, without
+    /// ever materializing the record multiset: the artifact's
+    /// sequence-major data file is exactly the CSC orientation of this
+    /// matrix, so two block-at-a-time streaming passes (count rows, then
+    /// fill) transpose it into CSR. Output is bit-identical to
+    /// [`SeqMatrix::build`] on the materialized records — all four
+    /// fields — and the resident set is one read block plus the output
+    /// CSR arrays.
+    pub fn from_index(idx: &SeqIndex, num_patients: u32) -> Result<SeqMatrix, MatrixError> {
+        SeqMatrix::from_index_tracked(idx, num_patients, None, None)
+    }
+
+    /// [`SeqMatrix::from_index`] in the duration-aware column space —
+    /// bit-identical to [`SeqMatrix::build_with_durations`].
+    pub fn from_index_with_durations(
+        idx: &SeqIndex,
+        num_patients: u32,
+        bucket_days: u32,
+    ) -> Result<SeqMatrix, MatrixError> {
+        SeqMatrix::from_index_tracked(idx, num_patients, Some(bucket_days), None)
+    }
+
+    /// The full-control index-fed builder: `bucket_days` switches to the
+    /// duration-aware column space, `tracker` accounts every buffer and
+    /// the output arrays so tests can prove the O(block + CSR) bound.
+    pub fn from_index_tracked(
+        idx: &SeqIndex,
+        num_patients: u32,
+        bucket_days: Option<u32>,
+        tracker: Option<&MemTracker>,
+    ) -> Result<SeqMatrix, MatrixError> {
+        let track = |b: u64| {
+            if let Some(t) = tracker {
+                t.add(b)
+            }
+        };
+        let untrack = |b: u64| {
+            if let Some(t) = tracker {
+                t.sub(b)
+            }
+        };
+        let bucket = bucket_days.map(|b| b.max(1));
+        let pack = |r: SeqRecord| match bucket {
+            Some(b) => crate::dbmart::pack_duration(r.seq, r.duration / b),
+            None => r.seq,
+        };
+
+        // One read block is the streaming unit of both passes.
+        let cap = idx.block_records.clamp(1, 64 * 1024);
+        let buf_bytes = (cap * RECORD_BYTES) as u64;
+
+        // Pass 1: count each row's distinct columns and collect the
+        // column dictionary. The data is (seq, pid, duration)-sorted, so
+        // duplicate (column, pid) entries are always consecutive — one
+        // previous-record comparison is a full dedup.
+        let n_rows = num_patients as usize;
+        let mut row_counts = vec![0u32; n_rows];
+        track(n_rows as u64 * 4);
+        // Plain columns come free from the resident per-seq table; the
+        // duration-aware space needs collecting (consecutive-duplicate
+        // pushes, then sort+dedup — bounded by the matrix nnz).
+        let mut packed_cols: Vec<u64> = Vec::new();
+        let mut seen_seqs = 0usize;
+        {
+            let mut prev: Option<(u64, u32, u64)> = None; // (seq, pid, packed)
+            track(buf_bytes);
+            let pass = stream_index_records(idx, cap, |r, _| {
+                if r.pid >= num_patients {
+                    return Err(MatrixError::PidOutOfRange { pid: r.pid, num_patients });
+                }
+                let packed = pack(r);
+                if prev.map_or(true, |(s, _, _)| s != r.seq) {
+                    seen_seqs += 1;
+                }
+                if prev.map_or(true, |(_, p, k)| p != r.pid || k != packed) {
+                    row_counts[r.pid as usize] += 1;
+                    if bucket.is_some() && packed_cols.last() != Some(&packed) {
+                        packed_cols.push(packed);
+                    }
+                }
+                prev = Some((r.seq, r.pid, packed));
+                Ok(())
+            });
+            untrack(buf_bytes);
+            pass?;
+        }
+        if seen_seqs != idx.seqs.len() {
+            return Err(MatrixError::Artifact(format!(
+                "{}: data file holds {seen_seqs} distinct sequences but the sequence \
+                 table lists {}",
+                idx.data_path.display(),
+                idx.seqs.len()
+            )));
+        }
+        let packed_temp_bytes = packed_cols.len() as u64 * 8;
+        track(packed_temp_bytes);
+        let seq_ids: Vec<u64> = match bucket {
+            Some(_) => {
+                let mut cols = std::mem::take(&mut packed_cols);
+                cols.sort_unstable();
+                cols.dedup();
+                cols.shrink_to_fit();
+                cols
+            }
+            None => idx.seqs.iter().map(|e| e.seq).collect(),
+        };
+        untrack(packed_temp_bytes);
+        if seq_ids.len() > u32::MAX as usize {
+            return Err(MatrixError::Artifact(format!(
+                "{} distinct columns overflow the u32 column index space",
+                seq_ids.len()
+            )));
+        }
+        let seq_ids_bytes = seq_ids.len() as u64 * 8;
+        track(seq_ids_bytes);
+
+        // Row pointers from the counts; per-row write cursors.
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        row_ptr.push(0usize);
+        for &c in &row_counts {
+            row_ptr.push(row_ptr.last().unwrap() + c as usize);
+        }
+        let nnz = *row_ptr.last().unwrap();
+        let mut cursors: Vec<usize> = row_ptr[..n_rows].to_vec();
+        let ptr_bytes = (row_ptr.len() as u64 + cursors.len() as u64) * 8;
+        track(ptr_bytes);
+        let mut col_idx = vec![0u32; nnz];
+        track(nnz as u64 * 4);
+
+        // Pass 2: fill. Within one row the stream visits columns in
+        // ascending order (sequences ascend globally; inside one
+        // (seq, pid) run durations — hence buckets — ascend), so the
+        // rows come out sorted without a sort.
+        {
+            let mut prev: Option<(u64, u32, u64)> = None;
+            let mut cur_col = 0usize; // plain path: walks idx.seqs in lockstep
+            track(buf_bytes);
+            let pass = stream_index_records(idx, cap, |r, _| {
+                // Re-validate: the file is re-read, so a swap between
+                // the passes must stay a typed error, not an
+                // out-of-bounds panic on `cursors[r.pid]`.
+                if r.pid >= num_patients {
+                    return Err(MatrixError::PidOutOfRange { pid: r.pid, num_patients });
+                }
+                let packed = pack(r);
+                let col = match bucket {
+                    Some(_) => seq_ids
+                        .binary_search(&packed)
+                        .map_err(|_| {
+                            MatrixError::Artifact(format!(
+                                "{}: column {packed} missing from the dictionary — \
+                                 the data file changed between passes",
+                                idx.data_path.display()
+                            ))
+                        })? as u32,
+                    None => {
+                        if prev.map_or(true, |(s, _, _)| s != r.seq) {
+                            if prev.is_some() {
+                                cur_col += 1;
+                            }
+                            if seq_ids.get(cur_col) != Some(&r.seq) {
+                                return Err(MatrixError::Artifact(format!(
+                                    "{}: sequence {} in the data file disagrees with \
+                                     the sequence table — the artifact is corrupt \
+                                     (or changed between passes)",
+                                    idx.data_path.display(),
+                                    r.seq
+                                )));
+                            }
+                        }
+                        cur_col as u32
+                    }
+                };
+                if prev.map_or(true, |(_, p, k)| p != r.pid || k != packed) {
+                    let cursor = &mut cursors[r.pid as usize];
+                    col_idx[*cursor] = col;
+                    *cursor += 1;
+                }
+                prev = Some((r.seq, r.pid, packed));
+                Ok(())
+            });
+            untrack(buf_bytes);
+            pass?;
+        }
+        debug_assert!(cursors.iter().zip(&row_ptr[1..]).all(|(c, e)| c == e));
+
+        // Release everything we accounted: the temporaries die here, the
+        // CSR arrays transfer to the caller (who re-accounts them if it
+        // keeps its own books — the engine does). The tracker peak over
+        // this call is the O(block + output CSR) proof.
+        drop(cursors);
+        drop(row_counts);
+        untrack(ptr_bytes);
+        untrack(n_rows as u64 * 4);
+        untrack(seq_ids_bytes);
+        untrack(nnz as u64 * 4);
+
+        Ok(SeqMatrix { seq_ids, num_patients, row_ptr, col_idx })
     }
 
     /// Number of feature columns.
@@ -116,7 +381,7 @@ impl SeqMatrix {
         records: &[SeqRecord],
         num_patients: u32,
         bucket_days: u32,
-    ) -> SeqMatrix {
+    ) -> Result<SeqMatrix, MatrixError> {
         let bucket = bucket_days.max(1);
         let packed: Vec<SeqRecord> = records
             .iter()
@@ -160,6 +425,39 @@ impl SeqMatrix {
     }
 }
 
+/// Stream every record of the artifact's sequence-major data file in
+/// order, block at a time (`cap` records per read), through `f` — which
+/// also receives the record's 0-based position. The total is
+/// cross-checked against the manifest so a file swapped mid-build fails
+/// loudly.
+fn stream_index_records(
+    idx: &SeqIndex,
+    cap: usize,
+    mut f: impl FnMut(SeqRecord, u64) -> Result<(), MatrixError>,
+) -> Result<(), MatrixError> {
+    let mut reader = SeqReader::open_with_capacity(&idx.data_path, cap * RECORD_BYTES)?;
+    let mut buf = vec![SeqRecord { seq: 0, pid: 0, duration: 0 }; cap];
+    let mut pos = 0u64;
+    loop {
+        let got = reader.read_batch(&mut buf)?;
+        if got == 0 {
+            break;
+        }
+        for &r in &buf[..got] {
+            f(r, pos)?;
+            pos += 1;
+        }
+    }
+    if pos != idx.total_records {
+        return Err(MatrixError::Artifact(format!(
+            "{}: data file holds {pos} records but the manifest claims {}",
+            idx.data_path.display(),
+            idx.total_records
+        )));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,7 +475,7 @@ mod tests {
             rec(encode_seq(1, 1), 0), // duplicate occurrence
             rec(encode_seq(1, 1), 2),
         ];
-        let m = SeqMatrix::build(&records, 3);
+        let m = SeqMatrix::build(&records, 3).unwrap();
         assert_eq!(m.num_cols(), 2);
         assert_eq!(m.seq_ids, vec![encode_seq(1, 1), encode_seq(2, 1)]);
         assert_eq!(m.nnz(), 3);
@@ -194,7 +492,7 @@ mod tests {
             rec(30, 1),
             rec(10, 3),
         ];
-        let m = SeqMatrix::build(&records, 4);
+        let m = SeqMatrix::build(&records, 4).unwrap();
         let dense = m.to_dense();
         for pid in 0..4u32 {
             for col in 0..3u32 {
@@ -206,7 +504,7 @@ mod tests {
 
     #[test]
     fn dense_tile_pads_beyond_edges() {
-        let m = SeqMatrix::build(&[rec(10, 0)], 1);
+        let m = SeqMatrix::build(&[rec(10, 0)], 1).unwrap();
         let tile = m.dense_tile(0, 4, 0, 8);
         assert_eq!(tile.len(), 32);
         assert_eq!(tile[0], 1.0);
@@ -216,7 +514,7 @@ mod tests {
     #[test]
     fn dense_tile_offsets() {
         let records = vec![rec(10, 0), rec(20, 0), rec(30, 0), rec(20, 1)];
-        let m = SeqMatrix::build(&records, 2);
+        let m = SeqMatrix::build(&records, 2).unwrap();
         // tile over cols [1,3) = seqs 20,30
         let tile = m.dense_tile(0, 2, 1, 2);
         assert_eq!(tile, vec![1.0, 1.0, 1.0, 0.0]);
@@ -225,14 +523,14 @@ mod tests {
     #[test]
     fn col_counts_are_patientwise() {
         let records = vec![rec(10, 0), rec(10, 0), rec(10, 1), rec(20, 1)];
-        let m = SeqMatrix::build(&records, 2);
+        let m = SeqMatrix::build(&records, 2).unwrap();
         assert_eq!(m.col_counts(), vec![2, 1]);
     }
 
     #[test]
     fn select_columns_projects() {
         let records = vec![rec(10, 0), rec(20, 0), rec(30, 1)];
-        let m = SeqMatrix::build(&records, 2);
+        let m = SeqMatrix::build(&records, 2).unwrap();
         let sel = m.select_columns(&[2, 0]); // seqs 30, 10
         assert_eq!(sel.seq_ids, vec![30, 10]);
         assert!(sel.get(1, 0)); // seq 30 for patient 1 → new col 0
@@ -250,7 +548,7 @@ mod tests {
             SeqRecord { seq: 10, pid: 2, duration: 95 },
             SeqRecord { seq: 10, pid: 3, duration: 36 }, // same bucket as pid 1
         ];
-        let m = SeqMatrix::build_with_durations(&records, 4, 30);
+        let m = SeqMatrix::build_with_durations(&records, 4, 30).unwrap();
         assert_eq!(m.num_cols(), 3);
         let buckets: Vec<u32> =
             (0..m.num_cols() as u32).map(|c| m.column_seq_bucket(c).1).collect();
@@ -265,17 +563,89 @@ mod tests {
     #[test]
     fn duration_matrix_without_buckets_matches_plain_when_durations_equal() {
         let records = vec![rec(10, 0), rec(20, 1)]; // all durations 0
-        let plain = SeqMatrix::build(&records, 2);
-        let dur = SeqMatrix::build_with_durations(&records, 2, 30);
+        let plain = SeqMatrix::build(&records, 2).unwrap();
+        let dur = SeqMatrix::build_with_durations(&records, 2, 30).unwrap();
         assert_eq!(plain.num_cols(), dur.num_cols());
         assert_eq!(plain.nnz(), dur.nnz());
     }
 
     #[test]
     fn empty_matrix() {
-        let m = SeqMatrix::build(&[], 5);
+        let m = SeqMatrix::build(&[], 5).unwrap();
         assert_eq!(m.num_cols(), 0);
         assert_eq!(m.nnz(), 0);
         assert_eq!(m.to_dense().len(), 0);
+    }
+
+    #[test]
+    fn pid_outside_the_row_space_is_a_typed_error_not_a_panic() {
+        // Regression: this was a debug_assert!, so release builds hit an
+        // uncontextual index-out-of-bounds panic on rows[r.pid].
+        let records = vec![rec(10, 0), rec(20, 5)];
+        let err = SeqMatrix::build(&records, 3).unwrap_err();
+        match err {
+            MatrixError::PidOutOfRange { pid, num_patients } => {
+                assert_eq!((pid, num_patients), (5, 3));
+            }
+            other => panic!("expected PidOutOfRange, got {other}"),
+        }
+        assert!(err.to_string().contains("pid 5"), "got {err}");
+        // The duration-aware builder shares the validation.
+        let err = SeqMatrix::build_with_durations(&records, 3, 30).unwrap_err();
+        assert!(matches!(err, MatrixError::PidOutOfRange { .. }));
+        // The boundary pid is fine.
+        SeqMatrix::build(&records, 6).unwrap();
+    }
+
+    #[test]
+    fn from_index_round_trips_small_artifacts() {
+        use crate::query::{index, IndexConfig};
+        use crate::seqstore::SeqFileSet;
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_matrix_from_index_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut records = vec![
+            SeqRecord { seq: 10, pid: 0, duration: 5 },
+            SeqRecord { seq: 10, pid: 0, duration: 40 },
+            SeqRecord { seq: 10, pid: 2, duration: 35 },
+            SeqRecord { seq: 20, pid: 0, duration: 0 },
+            SeqRecord { seq: 30, pid: 1, duration: 95 },
+            SeqRecord { seq: 30, pid: 1, duration: 95 },
+        ];
+        records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        let path = dir.join("in.tspm");
+        crate::seqstore::write_file(&path, &records).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: records.len() as u64,
+            num_patients: 4,
+            num_phenx: 3,
+        };
+        let idx = index::build(
+            &input,
+            &dir.join("idx"),
+            &IndexConfig { block_records: 2, ..Default::default() },
+            None,
+        )
+        .unwrap();
+
+        let tracker = MemTracker::new();
+        let direct = SeqMatrix::build(&records, 4).unwrap();
+        let streamed =
+            SeqMatrix::from_index_tracked(&idx, 4, None, Some(&tracker)).unwrap();
+        assert_eq!(streamed, direct, "all four CSR fields must match");
+        assert_eq!(tracker.live(), 0, "every tracked byte released");
+        assert!(tracker.peak() > 0);
+
+        let direct_dur = SeqMatrix::build_with_durations(&records, 4, 30).unwrap();
+        let streamed_dur = SeqMatrix::from_index_with_durations(&idx, 4, 30).unwrap();
+        assert_eq!(streamed_dur, direct_dur);
+        assert!(streamed_dur.num_cols() > direct.num_cols(), "buckets split columns");
+
+        // A row space too small for the artifact's pids is typed.
+        let err = SeqMatrix::from_index(&idx, 2).unwrap_err();
+        assert!(matches!(err, MatrixError::PidOutOfRange { pid: 2, num_patients: 2 }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -362,7 +362,7 @@ mod tests {
             }
         }
         let labels: Vec<f32> = (0..60).map(|p| f32::from(p < 30)).collect();
-        (SeqMatrix::build(&records, 60), labels)
+        (SeqMatrix::build(&records, 60).unwrap(), labels)
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! redundancy — where all MI terms come from 2×2 contingency tables over
 //! the binary patient×sequence matrix.
 //!
+//! MSMR consumes the CSR matrix wherever it came from — the in-memory
+//! [`SeqMatrix::build`] or the index-fed
+//! [`SeqMatrix::from_index`](crate::matrix::SeqMatrix::from_index)
+//! (bit-identical by contract), so the spilled
+//! `mine → screen → index → matrix → msmr` engine chain needs no MSMR
+//! changes: the matrix is the memory boundary, not the record multiset.
+//!
 //! The count contractions (`Xᵀ·y` for relevance, `Xᵀ·X` over the
 //! candidate pool for redundancy) are the dense hot-spot; when an
 //! [`ArtifactSet`] is supplied they run on the AOT-compiled Pallas
@@ -298,7 +305,7 @@ mod tests {
                 records.push(rec(40, pid));
             }
         }
-        let m = SeqMatrix::build(&records, 40);
+        let m = SeqMatrix::build(&records, 40).unwrap();
         let labels: Vec<f32> = (0..40).map(|p| f32::from(p < 20)).collect();
         (m, labels)
     }
@@ -352,7 +359,7 @@ mod tests {
 
     #[test]
     fn empty_matrix_selects_nothing() {
-        let m = SeqMatrix::build(&[], 10);
+        let m = SeqMatrix::build(&[], 10).unwrap();
         let sel = select(&m, &vec![0.0; 10], &MsmrConfig::default(), None).unwrap();
         assert!(sel.columns.is_empty());
     }

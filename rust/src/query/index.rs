@@ -3,13 +3,15 @@
 //!
 //! [`build`] streams a sorted [`SeqFileSet`] exactly once, copying the
 //! records into the artifact's own data file while accumulating the
-//! sparse block index and the per-sequence table, so the artifact is
-//! self-contained (the source spill directory can be deleted afterwards)
-//! and the build's resident set is one read buffer plus the two tables.
-//! [`SeqIndex::open`] validates the manifest's format/version, both
-//! table checksums, and the data file's record count before answering
-//! anything; [`SeqIndex::verify_data`] optionally re-checksums the full
-//! data file.
+//! sparse block index, the per-sequence table, and the per-pid counts,
+//! then counting-sorts the copy into the pid-major secondary index
+//! (a bucket shuffle — out of core, one bucket resident at a time), so
+//! the artifact is self-contained (the source
+//! spill directory can be deleted afterwards). [`SeqIndex::open`]
+//! validates the manifest's format/version, every table checksum, and
+//! the data files' record counts before answering anything;
+//! [`SeqIndex::verify_data`] optionally re-checksums the full data
+//! files.
 
 use super::QueryError;
 use crate::json::Json;
@@ -21,9 +23,14 @@ use std::path::{Path, PathBuf};
 
 /// Manifest `format` value of an index artifact.
 pub const INDEX_FORMAT: &str = "tspm-seqindex";
-/// Layout version this build reads and writes. Bump on any change to
-/// the file layouts below; [`SeqIndex::open`] refuses other versions.
-pub const INDEX_FORMAT_VERSION: u64 = 1;
+/// Layout version this build writes: v2 adds the pid-major secondary
+/// index (`pids.bin` + `pdata_0000.tspm`). Bump on any change to the
+/// file layouts below.
+pub const INDEX_FORMAT_VERSION: u64 = 2;
+/// Oldest layout version [`SeqIndex::open`] still reads. v1 artifacts
+/// (no pid table) open fine — [`crate::query::QueryService::by_patient`]
+/// falls back to the block-pruned scan for them.
+pub const INDEX_MIN_FORMAT_VERSION: u64 = 1;
 /// Manifest `format` value of a spilled-run input manifest
 /// (`tspm mine --out-dir`).
 pub const SPILL_FORMAT: &str = "tspm-spill";
@@ -38,12 +45,22 @@ const MANIFEST_FILE: &str = "manifest.json";
 const DATA_FILE: &str = "data_0000.tspm";
 const BLOCKS_FILE: &str = "blocks.bin";
 const SEQS_FILE: &str = "seqs.bin";
+const PDATA_FILE: &str = "pdata_0000.tspm";
+const PIDS_FILE: &str = "pids.bin";
 
 const BLOCKS_MAGIC: &[u8; 8] = b"TSPMBIX1";
 const SEQS_MAGIC: &[u8; 8] = b"TSPMSQT1";
+const PIDS_MAGIC: &[u8; 8] = b"TSPMPTB1";
 const TABLE_HEADER_BYTES: usize = 16; // magic + count
 const BLOCK_ENTRY_BYTES: usize = 52;
 const SEQ_ENTRY_BYTES: usize = 36;
+const PID_ENTRY_BYTES: usize = 16;
+
+/// Upper bound on the pid-range buckets the pid-major shuffle partitions
+/// into (bounds open file descriptors and, together with the block size,
+/// the shuffle's resident set: one bucket of ~`total/64` records is held
+/// in memory at a time while it is pid-sorted).
+const MAX_PID_BUCKETS: u64 = 64;
 
 const ZERO_REC: SeqRecord = SeqRecord { seq: 0, pid: 0, duration: 0 };
 
@@ -190,7 +207,8 @@ pub fn write_spill_manifest(
 /// [`SpillManifest::verify`] for that.
 pub fn read_spill_manifest(dir: &Path) -> Result<SpillManifest, QueryError> {
     let path = dir.join(MANIFEST_FILE);
-    let j = read_manifest_json(&path, SPILL_FORMAT, SPILL_FORMAT_VERSION)?;
+    let (j, _) =
+        read_manifest_json(&path, SPILL_FORMAT, SPILL_FORMAT_VERSION, SPILL_FORMAT_VERSION)?;
     let total_records = req_u64(&j, "total_records", &path)?;
     let num_patients = req_u64(&j, "num_patients", &path)? as u32;
     let num_phenx = req_u64(&j, "num_phenx", &path)? as u32;
@@ -267,17 +285,51 @@ pub struct SeqTableEntry {
     pub dur_max: u32,
 }
 
+/// One entry of the pid-major secondary index (`pids.bin`): where
+/// patient `pid`'s records live in the pid-major data copy
+/// (`pdata_0000.tspm`). The entries tile the copy contiguously —
+/// `entries[p].start == entries[p-1].start + entries[p-1].count` — so
+/// [`crate::query::QueryService::by_patient`] is exactly one positioned
+/// range read of `count` records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PidEntry {
+    /// First record of the patient's run in the pid-major copy.
+    pub start: u64,
+    /// Records the patient owns.
+    pub count: u64,
+}
+
+/// The loaded pid-major secondary index of a v2 artifact: the resident
+/// per-pid offset/count table plus the pid-major record copy it indexes
+/// (sorted by `(pid, seq, duration)` — within one patient the records
+/// keep the seq-major `(seq, duration)` order, so the fast path returns
+/// byte-identical answers to the v1 scan path).
+#[derive(Clone, Debug)]
+pub struct PidTable {
+    /// The pid-major TSPMSEQ1 record copy all entries refer to.
+    pub data_path: PathBuf,
+    /// Hex FNV-1a checksum over the copy's record encodings (verified on
+    /// demand by [`SeqIndex::verify_data`]).
+    pub data_checksum: String,
+    /// Per-pid entries, indexed by dense pid (`len == num_patients`).
+    pub entries: Vec<PidEntry>,
+}
+
 /// Build-time configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct IndexConfig {
     /// Records per index block ([`DEFAULT_BLOCK_RECORDS`]); also the
     /// query service's read-buffer size.
     pub block_records: usize,
+    /// Build the pid-major secondary index (v2 artifacts; the default).
+    /// `false` writes a bit-compatible v1 artifact — no `pids.bin` /
+    /// `pdata_0000.tspm`, half the disk, `by_patient` scans.
+    pub pid_index: bool,
 }
 
 impl Default for IndexConfig {
     fn default() -> Self {
-        IndexConfig { block_records: DEFAULT_BLOCK_RECORDS }
+        IndexConfig { block_records: DEFAULT_BLOCK_RECORDS, pid_index: true }
     }
 }
 
@@ -293,6 +345,8 @@ pub struct SeqIndex {
     pub dir: PathBuf,
     /// The TSPMSEQ1 data file all offsets refer to.
     pub data_path: PathBuf,
+    /// The manifest's layout version (1 or 2).
+    pub version: u64,
     pub block_records: usize,
     pub total_records: u64,
     pub num_patients: u32,
@@ -306,6 +360,9 @@ pub struct SeqIndex {
     pub blocks: Vec<BlockMeta>,
     /// The per-sequence table, sorted by `seq`.
     pub seqs: Vec<SeqTableEntry>,
+    /// The pid-major secondary index — `Some` for v2 artifacts, `None`
+    /// for v1 (where `by_patient` falls back to the block-pruned scan).
+    pub pids: Option<PidTable>,
 }
 
 impl SeqIndex {
@@ -322,13 +379,19 @@ impl SeqIndex {
             .map(|i| &self.seqs[i])
     }
 
-    /// Open an artifact directory: parse + version-check the manifest,
-    /// load both tables (verifying their checksums), and cross-check
-    /// the data file's header count. O(tables), not O(data) — use
-    /// [`SeqIndex::verify_data`] for the full data checksum.
+    /// Open an artifact directory: parse + version-check the manifest
+    /// (v1 and v2 layouts both open; see the version constants), load
+    /// every table (verifying their checksums), and cross-check the
+    /// data files' header counts. O(tables), not O(data) — use
+    /// [`SeqIndex::verify_data`] for the full data checksums.
     pub fn open(dir: &Path) -> Result<SeqIndex, QueryError> {
         let manifest_path = dir.join(MANIFEST_FILE);
-        let j = read_manifest_json(&manifest_path, INDEX_FORMAT, INDEX_FORMAT_VERSION)?;
+        let (j, version) = read_manifest_json(
+            &manifest_path,
+            INDEX_FORMAT,
+            INDEX_MIN_FORMAT_VERSION,
+            INDEX_FORMAT_VERSION,
+        )?;
         let block_records = req_u64(&j, "block_records", &manifest_path)? as usize;
         if block_records == 0 {
             return Err(QueryError::Artifact(format!(
@@ -414,15 +477,95 @@ impl SeqIndex {
         }
         drop(reader);
 
+        // v2: the pid-major secondary index (per-pid table + pid-major
+        // record copy). v1 manifests have neither section.
+        let mut pids = None;
+        let mut pid_bytes = 0u64;
+        if version >= 2 {
+            let (pids_name, pid_count, pids_checksum) =
+                file_section(&j, "pids", &manifest_path)?;
+            let (pdata_name, pdata_records, pdata_checksum) =
+                file_section(&j, "pdata", &manifest_path)?;
+            if pid_count != num_patients as u64 {
+                return Err(QueryError::Artifact(format!(
+                    "{}: pid table lists {pid_count} patients but the manifest claims \
+                     {num_patients}",
+                    manifest_path.display()
+                )));
+            }
+            if pdata_records != total_records {
+                return Err(QueryError::Artifact(format!(
+                    "{}: pdata.records {pdata_records} disagrees with total_records \
+                     {total_records}",
+                    manifest_path.display()
+                )));
+            }
+            let pids_path = dir.join(&pids_name);
+            let pids_bytes = read_table_file(
+                &pids_path,
+                PIDS_MAGIC,
+                pid_count,
+                PID_ENTRY_BYTES,
+                &pids_checksum,
+            )?;
+            let mut entries = Vec::with_capacity(pid_count as usize);
+            let mut off = TABLE_HEADER_BYTES;
+            for _ in 0..pid_count {
+                entries.push(PidEntry {
+                    start: read_u64(&pids_bytes, &mut off),
+                    count: read_u64(&pids_bytes, &mut off),
+                });
+            }
+            // The entries must tile the pid-major copy contiguously.
+            let mut expect = 0u64;
+            for (p, e) in entries.iter().enumerate() {
+                if e.start != expect {
+                    return Err(QueryError::Artifact(format!(
+                        "{}: pid {p} starts at record {} but the previous entries end \
+                         at {expect}",
+                        pids_path.display(),
+                        e.start
+                    )));
+                }
+                expect += e.count;
+            }
+            if expect != total_records {
+                return Err(QueryError::Artifact(format!(
+                    "{}: pid entries cover {expect} records but the artifact holds \
+                     {total_records}",
+                    pids_path.display()
+                )));
+            }
+            let pdata_path = dir.join(&pdata_name);
+            let reader = SeqReader::open(&pdata_path)?;
+            if reader.total() != total_records {
+                return Err(QueryError::Artifact(format!(
+                    "{}: pid-major copy holds {} records but the manifest claims \
+                     {total_records}",
+                    pdata_path.display(),
+                    reader.total()
+                )));
+            }
+            drop(reader);
+            pid_bytes = pids_bytes.len() as u64 + std::fs::metadata(&pdata_path)?.len();
+            pids = Some(PidTable {
+                data_path: pdata_path,
+                data_checksum: pdata_checksum,
+                entries,
+            });
+        }
+
         let manifest_len = std::fs::metadata(&manifest_path)?.len();
         let artifact_bytes = std::fs::metadata(&data_path)?.len()
             + blocks_bytes.len() as u64
             + seqs_bytes.len() as u64
+            + pid_bytes
             + manifest_len;
 
         Ok(SeqIndex {
             dir: dir.to_path_buf(),
             data_path,
+            version,
             block_records,
             total_records,
             num_patients,
@@ -431,11 +574,13 @@ impl SeqIndex {
             artifact_bytes,
             blocks,
             seqs,
+            pids,
         })
     }
 
-    /// Full integrity check of the data file: re-checksums every record
-    /// against the manifest. O(data) — an explicit opt-in.
+    /// Full integrity check of the data file (and, on v2 artifacts, the
+    /// pid-major copy): re-checksums every record against the manifest.
+    /// O(data) — an explicit opt-in.
     pub fn verify_data(&self) -> Result<(), QueryError> {
         let (n, sum) = checksum_records(&self.data_path)?;
         if n != self.total_records || sum != self.data_checksum {
@@ -445,6 +590,18 @@ impl SeqIndex {
                 self.total_records,
                 self.data_checksum
             )));
+        }
+        if let Some(pt) = &self.pids {
+            let (n, sum) = checksum_records(&pt.data_path)?;
+            if n != self.total_records || sum != pt.data_checksum {
+                return Err(QueryError::Artifact(format!(
+                    "{}: pid-major copy checksum mismatch (manifest {} records / {}, \
+                     found {n} / {sum})",
+                    pt.data_path.display(),
+                    self.total_records,
+                    pt.data_checksum
+                )));
+            }
         }
         Ok(())
     }
@@ -511,8 +668,16 @@ pub fn build_verified(
 /// Best-effort removal of every artifact file — called on failed
 /// builds so a stale manifest can never describe fresher partial data.
 fn remove_partial_artifact(out_dir: &Path) {
-    for name in [DATA_FILE, BLOCKS_FILE, SEQS_FILE, MANIFEST_FILE] {
+    for name in [DATA_FILE, BLOCKS_FILE, SEQS_FILE, PDATA_FILE, PIDS_FILE, MANIFEST_FILE] {
         let _ = std::fs::remove_file(out_dir.join(name));
+    }
+    // Leftover pid-shuffle bucket files of an interrupted build.
+    if let Ok(rd) = std::fs::read_dir(out_dir) {
+        for entry in rd.flatten() {
+            if entry.file_name().to_string_lossy().starts_with("pidsort_") {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
     }
 }
 
@@ -551,6 +716,13 @@ fn build_impl(
     let mut prev: Option<SeqRecord> = None;
     let mut data_fnv = FNV1A64_INIT;
     let mut n = 0u64;
+    // Per-pid record counts for the pid-major secondary index — sized by
+    // the input's dense pid space, accumulated during the same pass.
+    let mut pid_counts: Option<Vec<u64>> =
+        cfg.pid_index.then(|| vec![0u64; input.num_patients as usize]);
+    if pid_counts.is_some() {
+        track(input.num_patients as u64 * 8);
+    }
 
     let read_cap = block_records.clamp(1024, 64 * 1024);
     let mut buf = vec![ZERO_REC; read_cap];
@@ -576,6 +748,20 @@ fn build_impl(
                     }
                 }
                 prev = Some(r);
+                if let Some(counts) = pid_counts.as_mut() {
+                    match counts.get_mut(r.pid as usize) {
+                        Some(c) => *c += 1,
+                        None => {
+                            return Err(QueryError::Artifact(format!(
+                                "{}: record {n} has pid {} but the input claims only \
+                                 {} patients — cannot build the pid-major index",
+                                path.display(),
+                                r.pid,
+                                input.num_patients
+                            )))
+                        }
+                    }
+                }
                 writer.write(r)?;
                 let encoded = seqstore::encode_record(r);
                 data_fnv = fnv1a64(data_fnv, &encoded);
@@ -665,6 +851,19 @@ fn build_impl(
         )));
     }
 
+    // v2: pid-major shuffle — counting-sort the just-written data file
+    // by pid into the pid-major copy, from the exact per-pid counts the
+    // main pass accumulated.
+    let pid_table = match pid_counts.take() {
+        Some(counts) => {
+            let built =
+                build_pid_major(&data_path, out_dir, &counts, written, block_records, tracker)?;
+            untrack(input.num_patients as u64 * 8);
+            Some(built)
+        }
+        None => None,
+    };
+
     // Serialize the tables with checksums over the full file bytes.
     let blocks_bytes = {
         let mut out = Vec::with_capacity(TABLE_HEADER_BYTES + blocks.len() * BLOCK_ENTRY_BYTES);
@@ -698,20 +897,39 @@ fn build_impl(
         }
         out
     };
-    track((blocks_bytes.len() + seqs_bytes.len()) as u64);
+    // v2 only: the per-pid table file.
+    let pids_bytes = pid_table.as_ref().map(|(entries, _)| {
+        let mut out = Vec::with_capacity(TABLE_HEADER_BYTES + entries.len() * PID_ENTRY_BYTES);
+        out.extend_from_slice(PIDS_MAGIC);
+        out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for e in entries {
+            out.extend_from_slice(&e.start.to_le_bytes());
+            out.extend_from_slice(&e.count.to_le_bytes());
+        }
+        out
+    });
+    let pids_len = pids_bytes.as_ref().map_or(0, |b| b.len() as u64);
+    track((blocks_bytes.len() + seqs_bytes.len()) as u64 + pids_len);
     let blocks_checksum = checksum_hex(fnv1a64(FNV1A64_INIT, &blocks_bytes));
     let seqs_checksum = checksum_hex(fnv1a64(FNV1A64_INIT, &seqs_bytes));
+    let pids_checksum =
+        pids_bytes.as_ref().map(|b| checksum_hex(fnv1a64(FNV1A64_INIT, b)));
     std::fs::write(out_dir.join(BLOCKS_FILE), &blocks_bytes)?;
     std::fs::write(out_dir.join(SEQS_FILE), &seqs_bytes)?;
-    untrack((blocks_bytes.len() + seqs_bytes.len()) as u64);
+    if let Some(b) = &pids_bytes {
+        std::fs::write(out_dir.join(PIDS_FILE), b)?;
+    }
+    untrack((blocks_bytes.len() + seqs_bytes.len()) as u64 + pids_len);
     let (blocks_len, seqs_len) = (blocks_bytes.len() as u64, seqs_bytes.len() as u64);
     drop(blocks_bytes);
     drop(seqs_bytes);
+    drop(pids_bytes);
 
+    let version = if pid_table.is_some() { INDEX_FORMAT_VERSION } else { 1 };
     let data_checksum = checksum_hex(data_fnv);
-    let manifest = Json::obj(vec![
+    let mut fields = vec![
         ("format", Json::from(INDEX_FORMAT)),
-        ("version", Json::from(INDEX_FORMAT_VERSION)),
+        ("version", Json::from(version)),
         ("block_records", Json::from(block_records)),
         ("total_records", Json::from(written)),
         ("num_patients", Json::from(input.num_patients as u64)),
@@ -741,18 +959,51 @@ fn build_impl(
                 ("checksum", Json::from(seqs_checksum)),
             ]),
         ),
-    ]);
+    ];
+    if let Some((entries, pdata_checksum)) = &pid_table {
+        fields.push((
+            "pids",
+            Json::obj(vec![
+                ("name", Json::from(PIDS_FILE)),
+                ("count", Json::from(entries.len())),
+                ("checksum", Json::from(pids_checksum.clone().expect("pids serialized"))),
+            ]),
+        ));
+        fields.push((
+            "pdata",
+            Json::obj(vec![
+                ("name", Json::from(PDATA_FILE)),
+                ("records", Json::from(written)),
+                ("checksum", Json::from(pdata_checksum.clone())),
+            ]),
+        ));
+    }
+    let manifest = Json::obj(fields);
     let manifest_text = manifest.to_string_pretty();
     std::fs::write(out_dir.join(MANIFEST_FILE), &manifest_text)?;
 
+    let pdata_disk = if pid_table.is_some() {
+        std::fs::metadata(out_dir.join(PDATA_FILE))?.len()
+    } else {
+        0
+    };
     let artifact_bytes = std::fs::metadata(&data_path)?.len()
         + blocks_len
         + seqs_len
+        + pids_len
+        + pdata_disk
         + manifest_text.len() as u64;
+
+    let pids = pid_table.map(|(entries, pdata_checksum)| PidTable {
+        data_path: out_dir.join(PDATA_FILE),
+        data_checksum: pdata_checksum,
+        entries,
+    });
 
     Ok(SeqIndex {
         dir: out_dir.to_path_buf(),
         data_path,
+        version,
         block_records,
         total_records: written,
         num_patients: input.num_patients,
@@ -761,7 +1012,164 @@ fn build_impl(
         artifact_bytes,
         blocks,
         seqs,
+        pids,
     })
+}
+
+/// Counting-sort the just-written seq-major data file by pid into the
+/// pid-major copy (`pdata_0000.tspm`), returning the per-pid entry table
+/// and the copy's record checksum. Out-of-core in two passes: one scan
+/// partitions the records into at most [`MAX_PID_BUCKETS`] (+1 tail)
+/// pid-range bucket files whose sizes come from the exact per-pid
+/// counts; each bucket is then loaded alone, stably sorted by pid
+/// (records arrive in `(seq, pid, duration)` order, so the stable sort
+/// preserves the `(seq, duration)` order inside every patient), and
+/// appended to the copy. Resident set: one read buffer + one bucket
+/// (~`max(block_records, total/64)` records, more only when a single
+/// patient alone exceeds that — their run must be contiguous anyway).
+fn build_pid_major(
+    data_path: &Path,
+    out_dir: &Path,
+    pid_counts: &[u64],
+    total_records: u64,
+    block_records: usize,
+    tracker: Option<&MemTracker>,
+) -> Result<(Vec<PidEntry>, String), QueryError> {
+    let track = |b: u64| {
+        if let Some(t) = tracker {
+            t.add(b)
+        }
+    };
+    let untrack = |b: u64| {
+        if let Some(t) = tracker {
+            t.sub(b)
+        }
+    };
+
+    let mut entries = Vec::with_capacity(pid_counts.len());
+    let mut start = 0u64;
+    for &c in pid_counts {
+        entries.push(PidEntry { start, count: c });
+        start += c;
+    }
+    debug_assert_eq!(start, total_records, "counts come from the same pass");
+
+    let pdata_path = out_dir.join(PDATA_FILE);
+    if total_records == 0 {
+        let w = SeqWriter::create(&pdata_path)?;
+        w.finish()?;
+        return Ok((entries, checksum_hex(FNV1A64_INIT)));
+    }
+
+    // Pid ranges sized so every closed bucket holds ≥ target records —
+    // at most MAX_PID_BUCKETS full buckets plus a tail, whatever the
+    // pid skew.
+    let target =
+        (block_records as u64).max(total_records.div_ceil(MAX_PID_BUCKETS)).max(1);
+    let mut ranges: Vec<(u32, u64)> = Vec::new(); // (first pid, records in range)
+    {
+        let mut lo = 0usize;
+        let mut acc = 0u64;
+        for (pid, &c) in pid_counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                ranges.push((lo as u32, acc));
+                lo = pid + 1;
+                acc = 0;
+            }
+        }
+        if acc > 0 || ranges.is_empty() {
+            ranges.push((lo as u32, acc));
+        }
+    }
+
+    let read_cap = block_records.clamp(1024, 64 * 1024);
+    let read_bytes = (read_cap * RECORD_BYTES) as u64;
+    // Small per-bucket write buffers: up to ~65 writers are open at
+    // once during the partition pass, so the seqstore default of 1 MiB
+    // each would dwarf the data being shuffled (and the run's budget).
+    let bucket_cap = 8 << 10;
+    let bucket_paths: Vec<PathBuf> = (0..ranges.len())
+        .map(|i| out_dir.join(format!("pidsort_{i:04}.tmp")))
+        .collect();
+    let mut buf = vec![ZERO_REC; read_cap];
+    track(read_bytes);
+    let result = (|| -> Result<String, QueryError> {
+        // Pass 1: partition the data file into one bucket per pid range.
+        let mut writers = Vec::with_capacity(ranges.len());
+        for p in &bucket_paths {
+            writers.push(SeqWriter::create_with_capacity(p, bucket_cap)?);
+        }
+        track((ranges.len() * bucket_cap) as u64);
+        let mut reader = SeqReader::open_with_capacity(data_path, read_cap * RECORD_BYTES)?;
+        loop {
+            let got = reader.read_batch(&mut buf)?;
+            if got == 0 {
+                break;
+            }
+            for &r in &buf[..got] {
+                let i = ranges.partition_point(|&(lo, _)| lo <= r.pid) - 1;
+                writers[i].write(r)?;
+            }
+        }
+        for w in writers {
+            w.finish()?;
+        }
+        untrack((ranges.len() * bucket_cap) as u64);
+
+        // Pass 2: per bucket — load (budget-sized reader), stable-sort
+        // by pid, append to the copy. One bucket's records plus one
+        // reader buffer and the (tracked) pdata writer buffer resident.
+        let mut w = SeqWriter::create_with_capacity(&pdata_path, read_cap * RECORD_BYTES)?;
+        track(read_bytes); // pdata writer buffer
+        let mut fnv = FNV1A64_INIT;
+        for (i, &(_, n_range)) in ranges.iter().enumerate() {
+            track(n_range * RECORD_BYTES as u64 + read_bytes);
+            let mut recs = vec![ZERO_REC; n_range as usize];
+            {
+                let mut br = SeqReader::open_with_capacity(
+                    &bucket_paths[i],
+                    read_cap * RECORD_BYTES,
+                )?;
+                if br.total() != n_range {
+                    untrack(n_range * RECORD_BYTES as u64 + read_bytes);
+                    return Err(QueryError::Artifact(format!(
+                        "{}: pid bucket holds {} records, expected {n_range}",
+                        bucket_paths[i].display(),
+                        br.total()
+                    )));
+                }
+                let mut filled = 0usize;
+                while filled < recs.len() {
+                    let got = br.read_batch(&mut recs[filled..])?;
+                    if got == 0 {
+                        break;
+                    }
+                    filled += got;
+                }
+            }
+            recs.sort_by_key(|r| r.pid); // stable: (seq, duration) kept per pid
+            for &r in &recs {
+                w.write(r)?;
+                fnv = fnv1a64(fnv, &seqstore::encode_record(r));
+            }
+            untrack(n_range * RECORD_BYTES as u64 + read_bytes);
+            let _ = std::fs::remove_file(&bucket_paths[i]);
+        }
+        let written = w.finish()?;
+        untrack(read_bytes); // pdata writer buffer
+        if written != total_records {
+            return Err(QueryError::Artifact(format!(
+                "pid-major copy holds {written} records, expected {total_records}"
+            )));
+        }
+        Ok(checksum_hex(fnv))
+    })();
+    untrack(read_bytes);
+    for p in &bucket_paths {
+        let _ = std::fs::remove_file(p);
+    }
+    Ok((entries, result?))
 }
 
 // ---------------------------------------------------------------------------
@@ -776,12 +1184,14 @@ fn req_u64(j: &Json, field: &str, path: &Path) -> Result<u64, QueryError> {
     j.get(field).and_then(Json::as_u64).ok_or_else(|| field_err(path, field))
 }
 
-/// Parse + gate a manifest file on `(format, version)`.
+/// Parse + gate a manifest file on `format` and a supported version
+/// range; returns the document and the version it declares.
 fn read_manifest_json(
     path: &Path,
     want_format: &str,
-    want_version: u64,
-) -> Result<Json, QueryError> {
+    min_version: u64,
+    max_version: u64,
+) -> Result<(Json, u64), QueryError> {
     let text = std::fs::read_to_string(path).map_err(|e| {
         QueryError::Io(io::Error::new(e.kind(), format!("{}: {e}", path.display())))
     })?;
@@ -795,14 +1205,14 @@ fn read_manifest_json(
         )));
     }
     let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
-    if version != want_version {
+    if !(min_version..=max_version).contains(&version) {
         return Err(QueryError::Artifact(format!(
             "{}: unsupported {want_format} version {version} (this build reads \
-             version {want_version})",
+             versions {min_version}..={max_version})",
             path.display()
         )));
     }
-    Ok(j)
+    Ok((j, version))
 }
 
 /// `(name, count, checksum)` of a manifest file section.
@@ -932,11 +1342,17 @@ mod tests {
         let dir = tmpdir("roundtrip");
         let data = sorted_fixture();
         let input = fileset(&dir, &data, 2);
-        let built =
-            build(&input, &dir.join("idx"), &IndexConfig { block_records: 7 }, None).unwrap();
+        let built = build(
+            &input,
+            &dir.join("idx"),
+            &IndexConfig { block_records: 7, ..Default::default() },
+            None,
+        )
+        .unwrap();
         assert_eq!(built.total_records, data.len() as u64);
         assert_eq!(built.distinct_seqs(), 3);
         assert_eq!(built.blocks.len(), data.len().div_ceil(7));
+        assert_eq!(built.version, INDEX_FORMAT_VERSION);
         // Reopening yields the identical tables and metadata.
         let opened = SeqIndex::open(&dir.join("idx")).unwrap();
         assert_eq!(opened.blocks, built.blocks);
@@ -944,7 +1360,24 @@ mod tests {
         assert_eq!(opened.total_records, built.total_records);
         assert_eq!(opened.block_records, 7);
         assert_eq!(opened.data_checksum, built.data_checksum);
+        assert_eq!(opened.version, built.version);
         opened.verify_data().unwrap();
+        // The pid-major secondary index round-trips too, tiles the copy
+        // contiguously, and the copy holds every pid's records in
+        // (seq, duration) order.
+        let built_pids = built.pids.as_ref().expect("v2 build has a pid table");
+        let opened_pids = opened.pids.as_ref().expect("v2 open has a pid table");
+        assert_eq!(opened_pids.entries, built_pids.entries);
+        assert_eq!(opened_pids.data_checksum, built_pids.data_checksum);
+        assert_eq!(opened_pids.entries.len(), input.num_patients as usize);
+        let pdata = seqstore::read_file(&opened_pids.data_path).unwrap();
+        assert_eq!(pdata.len(), data.len());
+        for (pid, e) in opened_pids.entries.iter().enumerate() {
+            let run = &pdata[e.start as usize..(e.start + e.count) as usize];
+            let expect: Vec<SeqRecord> =
+                data.iter().copied().filter(|r| r.pid == pid as u32).collect();
+            assert_eq!(run, &expect[..], "pid {pid}");
+        }
         // The copied data file is byte-faithful to the input records.
         assert_eq!(seqstore::read_file(&opened.data_path).unwrap(), data);
         // Per-seq entries are exact.
@@ -1000,7 +1433,7 @@ mod tests {
         // Clean input builds fine (no separate verify pass needed).
         let idx_dir = dir.join("idx");
         let built =
-            build_verified(&manifest, &idx_dir, &IndexConfig { block_records: 16 }, None)
+            build_verified(&manifest, &idx_dir, &IndexConfig { block_records: 16, ..Default::default() }, None)
                 .unwrap();
         assert_eq!(built.total_records, data.len() as u64);
 
@@ -1012,7 +1445,7 @@ mod tests {
         seqstore::write_file(victim, &recs).unwrap();
         let idx_dir2 = dir.join("idx2");
         let err =
-            build_verified(&manifest, &idx_dir2, &IndexConfig { block_records: 16 }, None)
+            build_verified(&manifest, &idx_dir2, &IndexConfig { block_records: 16, ..Default::default() }, None)
                 .unwrap_err();
         assert!(err.to_string().contains("does not match"), "got {err}");
         assert!(!idx_dir2.join(DATA_FILE).exists());
@@ -1038,7 +1471,7 @@ mod tests {
         let dir = tmpdir("zeroblock");
         let input = fileset(&dir, &sorted_fixture(), 1);
         let err =
-            build(&input, &dir.join("idx"), &IndexConfig { block_records: 0 }, None).unwrap_err();
+            build(&input, &dir.join("idx"), &IndexConfig { block_records: 0, ..Default::default() }, None).unwrap_err();
         assert!(matches!(err, QueryError::Invalid(_)), "got {err}");
     }
 
@@ -1048,7 +1481,7 @@ mod tests {
         let data = sorted_fixture();
         let input = fileset(&dir, &data, 1);
         let idx_dir = dir.join("idx");
-        build(&input, &idx_dir, &IndexConfig { block_records: 8 }, None).unwrap();
+        build(&input, &idx_dir, &IndexConfig { block_records: 8, ..Default::default() }, None).unwrap();
 
         // Flip one byte of the block table → checksum mismatch.
         let bpath = idx_dir.join(BLOCKS_FILE);
@@ -1065,10 +1498,37 @@ mod tests {
         // A future version is refused with a version message.
         let mpath = idx_dir.join(MANIFEST_FILE);
         let text = std::fs::read_to_string(&mpath).unwrap();
-        std::fs::write(&mpath, text.replace("\"version\": 1", "\"version\": 99")).unwrap();
+        std::fs::write(&mpath, text.replace("\"version\": 2", "\"version\": 99")).unwrap();
         let err = SeqIndex::open(&idx_dir).unwrap_err();
         assert!(err.to_string().contains("version 99"), "got {err}");
         std::fs::write(&mpath, text).unwrap();
+
+        // Tampering with the pid table → checksum mismatch.
+        let ppath = idx_dir.join(PIDS_FILE);
+        let mut pbytes = std::fs::read(&ppath).unwrap();
+        let last = pbytes.len() - 1;
+        pbytes[last] ^= 0xFF;
+        std::fs::write(&ppath, &pbytes).unwrap();
+        let err = SeqIndex::open(&idx_dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got {err}");
+        pbytes[last] ^= 0xFF;
+        std::fs::write(&ppath, &pbytes).unwrap();
+        SeqIndex::open(&idx_dir).unwrap();
+
+        // Truncating the pid-major copy is caught at open (count
+        // mismatch); a silently doctored record is caught by
+        // verify_data's checksum pass.
+        let pdpath = idx_dir.join(PDATA_FILE);
+        let pd_bytes = std::fs::read(&pdpath).unwrap();
+        std::fs::write(&pdpath, &pd_bytes[..pd_bytes.len() - 16]).unwrap();
+        assert!(SeqIndex::open(&idx_dir).is_err());
+        let mut doctored = pd_bytes.clone();
+        let last = doctored.len() - 1;
+        doctored[last] ^= 0xFF;
+        std::fs::write(&pdpath, &doctored).unwrap();
+        let err = SeqIndex::open(&idx_dir).unwrap().verify_data().unwrap_err();
+        assert!(err.to_string().contains("pid-major"), "got {err}");
+        std::fs::write(&pdpath, &pd_bytes).unwrap();
 
         // Truncating the data file is caught at open (count mismatch).
         let opened = SeqIndex::open(&idx_dir).unwrap();
@@ -1104,6 +1564,98 @@ mod tests {
         std::fs::remove_file(victim).unwrap();
         let err = read_spill_manifest(&dir).unwrap().verify().unwrap_err();
         assert!(err.to_string().contains("in_1.tspm"), "got {err}");
+    }
+
+    #[test]
+    fn v1_artifact_without_pid_table_opens_and_round_trips() {
+        // `pid_index: false` writes a bit-compatible v1 artifact: no
+        // pids.bin / pdata, manifest version 1 — and open() still reads
+        // it (the backward-compatibility contract for pre-v2 artifacts).
+        let dir = tmpdir("v1_compat");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 2);
+        let cfg = IndexConfig { block_records: 8, pid_index: false };
+        let built = build(&input, &dir.join("idx"), &cfg, None).unwrap();
+        assert_eq!(built.version, 1);
+        assert!(built.pids.is_none());
+        assert!(!dir.join("idx").join(PIDS_FILE).exists());
+        assert!(!dir.join("idx").join(PDATA_FILE).exists());
+        let text = std::fs::read_to_string(dir.join("idx").join(MANIFEST_FILE)).unwrap();
+        assert!(text.contains("\"version\": 1"), "{text}");
+        let opened = SeqIndex::open(&dir.join("idx")).unwrap();
+        assert_eq!(opened.version, 1);
+        assert!(opened.pids.is_none());
+        assert_eq!(opened.seqs, built.seqs);
+        opened.verify_data().unwrap();
+    }
+
+    #[test]
+    fn empty_input_gets_an_empty_pid_table() {
+        let dir = tmpdir("empty_pids");
+        let input = fileset(&dir, &[], 1);
+        let built = build(&input, &dir.join("idx"), &IndexConfig::default(), None).unwrap();
+        let pids = built.pids.as_ref().expect("v2 build");
+        assert_eq!(pids.entries.len(), 20);
+        assert!(pids.entries.iter().all(|e| e.count == 0));
+        let opened = SeqIndex::open(&dir.join("idx")).unwrap();
+        assert_eq!(opened.pids.unwrap().entries, pids.entries);
+    }
+
+    #[test]
+    fn pid_beyond_the_patient_count_is_rejected_for_v2_builds() {
+        // The pid table is indexed by dense pid, so a record outside the
+        // declared patient space cannot be placed — typed error, not a
+        // bogus artifact. A v1 build (no pid table) still tolerates it.
+        let dir = tmpdir("pid_range");
+        let data = vec![SeqRecord { seq: 1, pid: 25, duration: 3 }];
+        let input = fileset(&dir, &data, 1); // fileset claims 20 patients
+        let err = build(&input, &dir.join("idx"), &IndexConfig::default(), None).unwrap_err();
+        assert!(err.to_string().contains("pid 25"), "got {err}");
+        assert!(!dir.join("idx").join(MANIFEST_FILE).exists(), "failed build cleans up");
+        build(
+            &input,
+            &dir.join("idx_v1"),
+            &IndexConfig { pid_index: false, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn pid_shuffle_is_correct_across_bucket_counts() {
+        // A tiny block size forces many pid-range buckets; a huge one
+        // collapses to a single bucket. Both must produce the identical
+        // pid-major copy.
+        let dir = tmpdir("buckets");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 1);
+        let mut copies = Vec::new();
+        for (name, block) in [("small", 1usize), ("large", 1 << 20)] {
+            let idx_dir = dir.join(name);
+            let built = build(
+                &input,
+                &idx_dir,
+                &IndexConfig { block_records: block, ..Default::default() },
+                None,
+            )
+            .unwrap();
+            let pt = built.pids.as_ref().unwrap();
+            let pdata = seqstore::read_file(&pt.data_path).unwrap();
+            // Globally sorted by (pid, seq, duration).
+            assert!(pdata
+                .windows(2)
+                .all(|w| (w[0].pid, w[0].seq, w[0].duration)
+                    <= (w[1].pid, w[1].seq, w[1].duration)));
+            copies.push((pdata, pt.entries.clone()));
+        }
+        assert_eq!(copies[0], copies[1]);
+        // No shuffle temp files survive.
+        for name in ["small", "large"] {
+            assert!(std::fs::read_dir(dir.join(name))
+                .unwrap()
+                .flatten()
+                .all(|e| !e.file_name().to_string_lossy().starts_with("pidsort_")));
+        }
     }
 
     #[test]

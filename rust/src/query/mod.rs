@@ -27,38 +27,57 @@
 //!   `.index(dir)` as an [`crate::engine::Engine`] plan stage after a
 //!   spilled screen.
 //!
-//! ## The artifact format
+//! ## The artifact format (v2)
 //!
-//! An index directory holds four files:
+//! An index directory holds six files:
 //!
 //! ```text
-//! manifest.json   versioned manifest: format ("tspm-seqindex"), version,
-//!                 block size, record/patient/phenX counts, and the name +
-//!                 count + FNV-1a checksum of each sibling file
-//! data_0000.tspm  the records, TSPMSEQ1-encoded, globally sorted by
-//!                 (seq, pid, duration) — the screen's spill order
-//! blocks.bin      sparse block index: for every block of `block_records`
-//!                 records, its start offset, length, first/last (seq, pid)
-//!                 key, pid min/max and duration min/max (for pruning)
-//! seqs.bin        per-sequence table: record offset + count, distinct
-//!                 patient count (the support), duration min/max
+//! manifest.json    versioned manifest: format ("tspm-seqindex"), version,
+//!                  block size, record/patient/phenX counts, and the name +
+//!                  count + FNV-1a checksum of each sibling file
+//! data_0000.tspm   the records, TSPMSEQ1-encoded, globally sorted by
+//!                  (seq, pid, duration) — the screen's spill order
+//! blocks.bin       sparse block index: for every block of `block_records`
+//!                  records, its start offset, length, first/last (seq, pid)
+//!                  key, pid min/max and duration min/max (for pruning)
+//! seqs.bin         per-sequence table: record offset + count, distinct
+//!                  patient count (the support), duration min/max
+//! pdata_0000.tspm  v2: the pid-major copy — the same records re-sorted by
+//!                  (pid, seq, duration), so one patient's history is one
+//!                  contiguous run
+//! pids.bin         v2: per-pid table — for every dense pid, the (start,
+//!                  count) of its run in the pid-major copy; the entries
+//!                  tile the copy contiguously
 //! ```
 //!
 //! The tables are small next to the data (one block entry per
-//! `block_records` records, one seq entry per distinct sequence) and are
-//! held resident by the service; the data file is only ever read one
-//! block at a time.
+//! `block_records` records, one seq entry per distinct sequence, one
+//! 16-byte pid entry per patient) and are held resident by the service;
+//! the data files are only ever read one block at a time. The pid-major
+//! copy doubles the artifact's record payload on disk — the price of
+//! [`QueryService::by_patient`] reading exactly the patient's own
+//! records instead of scanning the sequence-major file (pass
+//! `pid_index: false` in [`IndexConfig`] to trade that back for a v1
+//! artifact). The pid-major copy serves `by_patient` only; the
+//! out-of-core matrix builder
+//! ([`crate::matrix::SeqMatrix::from_index`]) streams the **seq-major**
+//! data file block-at-a-time — it works on v1 artifacts too — so
+//! engine chains `mine → screen → index → matrix → msmr` never
+//! materialize the record multiset.
 //!
 //! ## Compatibility guarantee
 //!
 //! The manifest's `(format, version)` pair gates every read:
-//! [`SeqIndex::open`] refuses anything but
-//! `("tspm-seqindex", `[`INDEX_FORMAT_VERSION`]`)`, so a future layout
-//! change bumps the version and old artifacts fail loudly instead of
-//! being misread. Within one version the layout is frozen: files are
-//! little-endian, checksummed (FNV-1a 64 over the file bytes; over the
-//! 16-byte record encodings for the data file), and never rewritten in
-//! place — an artifact, once built, is immutable. The spill manifest
+//! [`SeqIndex::open`] reads versions
+//! [`INDEX_MIN_FORMAT_VERSION`]`..=`[`INDEX_FORMAT_VERSION`] and refuses
+//! anything else, so a future layout change bumps the version and old
+//! readers fail loudly instead of misreading. **v1 artifacts stay
+//! readable**: they simply have no pid table, and `by_patient` falls
+//! back to the v1 block-pruned scan with byte-identical answers. Within
+//! one version the layout is frozen: files are little-endian,
+//! checksummed (FNV-1a 64 over the file bytes; over the 16-byte record
+//! encodings for the data files), and never rewritten in place — an
+//! artifact, once built, is immutable. The spill manifest
 //! `tspm mine --out-dir` writes next to `lookup.json` uses the same
 //! scheme (`"tspm-spill"`, [`SPILL_FORMAT_VERSION`]) so `tspm index` can
 //! verify its input before building.
@@ -70,8 +89,8 @@ pub mod service;
 pub use cache::LruCache;
 pub use index::{
     checksum_records, read_spill_manifest, write_spill_manifest, BlockMeta, IndexConfig,
-    SeqIndex, SeqTableEntry, SpillManifest, DEFAULT_BLOCK_RECORDS, INDEX_FORMAT_VERSION,
-    SPILL_FORMAT_VERSION,
+    PidEntry, PidTable, SeqIndex, SeqTableEntry, SpillManifest, DEFAULT_BLOCK_RECORDS,
+    INDEX_FORMAT_VERSION, INDEX_MIN_FORMAT_VERSION, SPILL_FORMAT_VERSION,
 };
 pub use service::{
     Histogram, HistogramBucket, QueryResult, QueryService, QueryStats, SeqSupport,

@@ -90,6 +90,11 @@ pub struct QueryStats {
     pub evictions: u64,
     pub cached_entries: usize,
     pub cached_bytes: usize,
+    /// Logical record bytes streamed from the data files (records read ×
+    /// 16) since the service opened — the IO-bound observable: a
+    /// pid-indexed `by_patient` adds exactly the patient's own records,
+    /// a v1 scan adds every candidate block.
+    pub logical_bytes_read: u64,
 }
 
 /// The query engine over one immutable index artifact.
@@ -99,6 +104,7 @@ pub struct QueryService {
     cache_bytes: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    bytes_read: AtomicU64,
     tracker: Option<Arc<MemTracker>>,
 }
 
@@ -122,6 +128,7 @@ impl QueryService {
             cache_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
             tracker: None,
         }
     }
@@ -136,7 +143,7 @@ impl QueryService {
         &self.index
     }
 
-    /// Cache hit/miss/size counters.
+    /// Cache hit/miss/size and IO counters.
     pub fn stats(&self) -> QueryStats {
         let cache = self.cache.lock().unwrap();
         QueryStats {
@@ -145,6 +152,7 @@ impl QueryService {
             evictions: cache.evictions(),
             cached_entries: cache.len(),
             cached_bytes: cache.bytes(),
+            logical_bytes_read: self.bytes_read.load(Ordering::Relaxed),
         }
     }
 
@@ -167,14 +175,47 @@ impl QueryService {
         Ok(v)
     }
 
-    /// All records of patient `pid`, in `(seq, duration)` order. The
-    /// data is sequence-major, so this scans the data file — but block
-    /// by block, pruned by per-block pid bounds, never materialised.
+    /// All records of patient `pid`, in `(seq, duration)` order.
+    ///
+    /// On a v2 artifact this is the **pid-indexed fast path**: the
+    /// resident per-pid table gives the patient's contiguous run in the
+    /// pid-major copy, so the query reads exactly the patient's own
+    /// records — IO scales with the answer, not the artifact. v1
+    /// artifacts (no pid table) fall back to the block-pruned scan
+    /// ([`QueryService::by_patient_scan`]); both paths return
+    /// byte-identical answers.
     pub fn by_patient(&self, pid: u32) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
         let key = format!("pid:{pid}");
         if let Some(QueryResult::Records(v)) = self.cache_get(&key) {
             return Ok(v);
         }
+        let out = match &self.index.pids {
+            Some(pt) => {
+                let mut out = Vec::new();
+                if let Some(e) = pt.entries.get(pid as usize) {
+                    out.reserve(e.count as usize);
+                    self.scan_file(
+                        &pt.data_path,
+                        e.start,
+                        e.start + e.count,
+                        |r| out.push(r),
+                    )?;
+                }
+                out
+            }
+            None => self.by_patient_scan(pid)?,
+        };
+        let v = Arc::new(out);
+        self.cache_put(key, QueryResult::Records(v.clone()));
+        Ok(v)
+    }
+
+    /// The v1 `by_patient` path: scan the sequence-major data file block
+    /// by block, pruned by per-block pid bounds. Uncached — public so
+    /// the conformance tests (and curious benchmarks) can diff it
+    /// against the pid-indexed fast path; [`QueryService::by_patient`]
+    /// dispatches here automatically for v1 artifacts.
+    pub fn by_patient_scan(&self, pid: u32) -> Result<Vec<SeqRecord>, QueryError> {
         let mut out = Vec::new();
         let blocks = &self.index.blocks;
         let candidate = |b: &super::index::BlockMeta| (b.pid_min..=b.pid_max).contains(&pid);
@@ -198,9 +239,7 @@ impl QueryService {
             })?;
             i = j + 1;
         }
-        let v = Arc::new(out);
-        self.cache_put(key, QueryResult::Records(v.clone()));
-        Ok(v)
+        Ok(out)
     }
 
     /// Distinct patients having `seq` with a duration in the inclusive
@@ -287,14 +326,47 @@ impl QueryService {
         let hist = match self.index.seq_entry(seq).copied() {
             None => Histogram { seq, dur_min: 0, dur_max: 0, total: 0, buckets: Vec::new() },
             Some(e) => {
+                if e.dur_max < e.dur_min {
+                    return Err(QueryError::Artifact(format!(
+                        "{}: sequence {seq} has duration bounds [{}, {}] — the \
+                         sequence table is corrupt",
+                        self.index.data_path.display(),
+                        e.dur_min,
+                        e.dur_max
+                    )));
+                }
                 let span = (e.dur_max - e.dur_min) as u64 + 1;
                 let width = span.div_ceil(n_buckets as u64).max(1);
                 let used = span.div_ceil(width) as usize;
                 let mut counts = vec![0u64; used];
+                // A record whose duration falls outside the index
+                // entry's [dur_min, dur_max] means the data file and the
+                // sequence table disagree (a corrupt or hand-edited
+                // artifact — verify_data() is opt-in, so it can reach
+                // here). Computing `r.duration - e.dur_min` in u32 would
+                // wrap in release and panic on the bucket index; surface
+                // a typed error naming the offender instead.
+                let mut pos = e.start;
+                let mut bad: Option<(u64, u32)> = None;
                 self.scan_range(e.start, e.start + e.count, |r| {
-                    let i = ((r.duration - e.dur_min) as u64 / width) as usize;
-                    counts[i] += 1;
+                    if r.duration < e.dur_min || r.duration > e.dur_max {
+                        bad.get_or_insert((pos, r.duration));
+                    } else {
+                        let i = ((r.duration - e.dur_min) as u64 / width) as usize;
+                        counts[i] += 1;
+                    }
+                    pos += 1;
                 })?;
+                if let Some((record, duration)) = bad {
+                    return Err(QueryError::Artifact(format!(
+                        "{}: record {record} of sequence {seq} has duration \
+                         {duration}, outside the index entry's [{}, {}] — the \
+                         artifact is corrupt (run verify_data() to confirm)",
+                        self.index.data_path.display(),
+                        e.dur_min,
+                        e.dur_max
+                    )));
+                }
                 let buckets = counts
                     .iter()
                     .enumerate()
@@ -364,11 +436,25 @@ impl QueryService {
         (start / b) as usize..((end - 1) / b) as usize + 1
     }
 
-    /// Stream records `[start, end)` of the data file through `f`,
-    /// holding exactly one block-sized record buffer and one
-    /// block-sized reader buffer resident (both tracker-accounted).
+    /// Stream records `[start, end)` of the sequence-major data file
+    /// through `f` — see [`QueryService::scan_file`].
     fn scan_range(
         &self,
+        start: u64,
+        end: u64,
+        f: impl FnMut(SeqRecord),
+    ) -> Result<(), QueryError> {
+        self.scan_file(&self.index.data_path, start, end, f)
+    }
+
+    /// Stream records `[start, end)` of one artifact data file through
+    /// `f`, holding exactly one block-sized record buffer and one
+    /// block-sized reader buffer resident (both tracker-accounted).
+    /// Every record streamed is added to the `logical_bytes_read`
+    /// counter, so tests can prove a query's IO bound.
+    fn scan_file(
+        &self,
+        path: &Path,
         start: u64,
         end: u64,
         mut f: impl FnMut(SeqRecord),
@@ -376,12 +462,13 @@ impl QueryService {
         if start >= end {
             return Ok(());
         }
+        self.bytes_read
+            .fetch_add((end - start) * RECORD_BYTES as u64, Ordering::Relaxed);
         let cap = self.index.block_records.max(1);
         let buf_bytes = (cap * RECORD_BYTES) as u64 * 2;
         self.track(buf_bytes);
         let result = (|| -> Result<(), QueryError> {
-            let mut reader =
-                SeqReader::open_with_capacity(&self.index.data_path, cap * RECORD_BYTES)?;
+            let mut reader = SeqReader::open_with_capacity(path, cap * RECORD_BYTES)?;
             reader.seek_record(start)?;
             let mut buf = vec![ZERO_REC; cap];
             let mut left = end - start;
@@ -391,7 +478,7 @@ impl QueryService {
                 if got == 0 {
                     return Err(QueryError::Artifact(format!(
                         "{}: data file ends before record {end} the index references",
-                        self.index.data_path.display()
+                        path.display()
                     )));
                 }
                 for &r in &buf[..got] {
@@ -435,7 +522,12 @@ mod tests {
         v
     }
 
-    fn service(name: &str, block: usize, cache: usize) -> (QueryService, Vec<SeqRecord>) {
+    fn service_with(
+        name: &str,
+        block: usize,
+        cache: usize,
+        pid_index: bool,
+    ) -> (QueryService, Vec<SeqRecord>) {
         let dir = tmpdir(name);
         let data = fixture();
         let path = dir.join("in.tspm");
@@ -446,9 +538,18 @@ mod tests {
             num_patients: 9,
             num_phenx: 4,
         };
-        let idx = build(&input, &dir.join("idx"), &IndexConfig { block_records: block }, None)
-            .unwrap();
+        let idx = build(
+            &input,
+            &dir.join("idx"),
+            &IndexConfig { block_records: block, pid_index },
+            None,
+        )
+        .unwrap();
         (QueryService::from_index(idx, cache), data)
+    }
+
+    fn service(name: &str, block: usize, cache: usize) -> (QueryService, Vec<SeqRecord>) {
+        service_with(name, block, cache, true)
     }
 
     #[test]
@@ -467,6 +568,66 @@ mod tests {
         let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.pid == 1).collect();
         assert_eq!(*got, expect);
         assert!(svc.by_patient(1000).unwrap().is_empty());
+    }
+
+    #[test]
+    fn by_patient_fast_path_equals_scan_path_and_v1_service() {
+        let (v2, data) = service("by_pid_fast", 4, 0);
+        let (v1, _) = service_with("by_pid_v1", 4, 0, false);
+        assert!(v2.index().pids.is_some());
+        assert!(v1.index().pids.is_none());
+        for pid in 0..10u32 {
+            let expect: Vec<SeqRecord> =
+                data.iter().copied().filter(|r| r.pid == pid).collect();
+            assert_eq!(*v2.by_patient(pid).unwrap(), expect, "fast path, pid {pid}");
+            assert_eq!(v2.by_patient_scan(pid).unwrap(), expect, "scan path, pid {pid}");
+            assert_eq!(*v1.by_patient(pid).unwrap(), expect, "v1 fallback, pid {pid}");
+        }
+    }
+
+    #[test]
+    fn by_patient_io_scales_with_the_answer_not_the_artifact() {
+        let (svc, data) = service("by_pid_io", 4, 0);
+        let before = svc.stats().logical_bytes_read;
+        let got = svc.by_patient(1).unwrap();
+        let delta = svc.stats().logical_bytes_read - before;
+        // Fast path: exactly the patient's own records are streamed.
+        assert_eq!(delta, got.len() as u64 * RECORD_BYTES as u64);
+        assert!(delta < (data.len() * RECORD_BYTES) as u64 / 2, "read ~everything");
+        // The scan path on the same artifact reads strictly more.
+        let before = svc.stats().logical_bytes_read;
+        svc.by_patient_scan(1).unwrap();
+        let scan_delta = svc.stats().logical_bytes_read - before;
+        assert!(scan_delta > delta, "scan {scan_delta} vs indexed {delta}");
+    }
+
+    #[test]
+    fn histogram_on_doctored_artifact_is_a_typed_error_not_a_panic() {
+        // Rewrite one record's duration to a value far outside the
+        // sequence entry's [dur_min, dur_max] — exactly what an opt-in
+        // verify_data() permits to go unnoticed. The u32 subtraction
+        // would wrap in release; it must surface as QueryError::Artifact.
+        let (svc, data) = service("hist_doctored", 4, 0);
+        let idx = svc.index();
+        let target = idx.seq_entry(3).unwrap();
+        let victim = target.start; // first record of seq 3
+        let mut recs = seqstore::read_file(&idx.data_path).unwrap();
+        recs[victim as usize].duration = 1_000_000; // dur_max is 500
+        seqstore::write_file(&idx.data_path, &recs).unwrap();
+        let err = svc.duration_histogram(3, 4).unwrap_err();
+        assert!(
+            matches!(&err, QueryError::Artifact(m) if m.contains("1000000")
+                && m.contains(&format!("record {victim}"))),
+            "got {err}"
+        );
+        // A duration *below* dur_min wraps too — same typed error.
+        recs[victim as usize].duration = 1; // dur_min is 5
+        seqstore::write_file(&idx.data_path, &recs).unwrap();
+        let err = svc.duration_histogram(3, 4).unwrap_err();
+        assert!(matches!(err, QueryError::Artifact(_)), "got {err}");
+        // Untouched sequences still answer.
+        let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.seq == 90).collect();
+        assert_eq!(svc.duration_histogram(90, 4).unwrap().total, expect.len() as u64);
     }
 
     #[test]

@@ -32,7 +32,7 @@ fn mined_matrix() -> (SeqMatrix, Vec<f32>, NumericDbMart) {
     let db = NumericDbMart::encode(&g.dbmart);
     let mut records = mine_sequences(&db, &MiningConfig::default()).unwrap().records;
     sparsity::screen(&mut records, &SparsityConfig { min_patients: 8, threads: 0 });
-    let m = SeqMatrix::build(&records, db.num_patients() as u32);
+    let m = SeqMatrix::build(&records, db.num_patients() as u32).unwrap();
     let pc: std::collections::BTreeSet<&str> =
         g.truth.postcovid.iter().map(|(p, _)| p.as_str()).collect();
     let labels: Vec<f32> = (0..db.num_patients())

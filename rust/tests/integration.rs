@@ -44,7 +44,7 @@ fn csv_mine_screen_store_roundtrip() {
     let back = seqstore::read_file(&store).unwrap();
     assert_eq!(back, records);
 
-    let m = SeqMatrix::build(&back, db.num_patients() as u32);
+    let m = SeqMatrix::build(&back, db.num_patients() as u32).unwrap();
     assert_eq!(m.num_cols() as u64, stats.distinct_after);
     // every record is represented
     for r in back.iter().take(500) {
@@ -305,7 +305,7 @@ fn matrix_projection_consistency() {
     let db = NumericDbMart::encode(&cohort);
     let mut records = mining::mine_sequences(&db, &MiningConfig::default()).unwrap().records;
     sparsity::screen(&mut records, &SparsityConfig { min_patients: 10, threads: 0 });
-    let m = SeqMatrix::build(&records, db.num_patients() as u32);
+    let m = SeqMatrix::build(&records, db.num_patients() as u32).unwrap();
     let cols: Vec<u32> = (0..m.num_cols() as u32).step_by(3).collect();
     let sub = m.select_columns(&cols);
     for (new_col, &old_col) in cols.iter().enumerate() {

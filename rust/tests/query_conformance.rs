@@ -9,6 +9,7 @@ use std::sync::Arc;
 
 use tspm_plus::dbmart::NumericDbMart;
 use tspm_plus::engine::{Engine, OutputKind};
+use tspm_plus::matrix::SeqMatrix;
 use tspm_plus::metrics::MemTracker;
 use tspm_plus::mining::{MiningConfig, SeqRecord};
 use tspm_plus::query::{self, IndexConfig, QueryService, SeqIndex, SeqSupport};
@@ -121,8 +122,13 @@ fn answers_equal_brute_force_across_block_sizes_and_cache_settings() {
 
         for &block in &[7usize, 128, 4096] {
             let idx_dir = dir.join(format!("idx_{block}"));
-            query::index::build(&input, &idx_dir, &IndexConfig { block_records: block }, None)
-                .unwrap();
+            query::index::build(
+                &input,
+                &idx_dir,
+                &IndexConfig { block_records: block, ..Default::default() },
+                None,
+            )
+            .unwrap();
             for &cache_bytes in &[0usize, 1 << 20] {
                 let svc = QueryService::open_with_cache(&idx_dir, cache_bytes).unwrap();
                 let ctx = format!("case={case} block={block} cache={cache_bytes}");
@@ -180,7 +186,13 @@ fn query_memory_is_bounded_by_block_size_not_data_size() {
     let input = spill(&dir, &all, 1, 300);
     let block = 256usize;
     let idx_dir = dir.join("idx");
-    query::index::build(&input, &idx_dir, &IndexConfig { block_records: block }, None).unwrap();
+    query::index::build(
+        &input,
+        &idx_dir,
+        &IndexConfig { block_records: block, ..Default::default() },
+        None,
+    )
+    .unwrap();
 
     let mut svc = QueryService::open_with_cache(&idx_dir, 0).unwrap();
     let tracker = Arc::new(MemTracker::new());
@@ -248,6 +260,192 @@ fn engine_chain_mine_screen_index_query_round_trip() {
     let _ = std::fs::remove_dir_all(&base);
 }
 
+/// Tentpole property: `SeqMatrix::from_index` equals `SeqMatrix::build`
+/// on the materialized records — **all four CSR fields** — across block
+/// sizes and in both column spaces, on random dbmart shapes; and its
+/// working memory stays O(block + output CSR), MemTracker-proven.
+#[test]
+fn from_index_matrix_equals_build_across_block_sizes() {
+    let mut meta = Rng::new(0xC0FFEE);
+    for case in 0..3u64 {
+        let n = 1_000 + meta.gen_range(6_000) as usize;
+        let n_seqs = 1 + meta.gen_range(50);
+        let n_pats = 1 + meta.gen_range(40) as u32;
+        let all = random_sorted(100 + case, n, n_seqs, n_pats as u64);
+        let dir = tmpdir(&format!("matrix_prop_{case}"));
+        let input = spill(&dir, &all, 2, n_pats);
+        let direct = SeqMatrix::build(&all, n_pats).unwrap();
+        let direct_dur = SeqMatrix::build_with_durations(&all, n_pats, 30).unwrap();
+        for &block in &[7usize, 128, 4096] {
+            let idx_dir = dir.join(format!("idx_{block}"));
+            let idx = query::index::build(
+                &input,
+                &idx_dir,
+                &IndexConfig { block_records: block, ..Default::default() },
+                None,
+            )
+            .unwrap();
+            let tracker = MemTracker::new();
+            let streamed =
+                SeqMatrix::from_index_tracked(&idx, n_pats, None, Some(&tracker)).unwrap();
+            assert_eq!(streamed.seq_ids, direct.seq_ids, "case={case} block={block}");
+            assert_eq!(streamed.row_ptr, direct.row_ptr, "case={case} block={block}");
+            assert_eq!(streamed.col_idx, direct.col_idx, "case={case} block={block}");
+            assert_eq!(streamed.num_patients, direct.num_patients);
+            assert_eq!(tracker.live(), 0, "all matrix buffers released");
+            // O(block + output CSR): one read buffer plus the CSR arrays
+            // and their same-order temporaries — never the record set.
+            let cap = block.clamp(1, 64 * 1024) as u64;
+            let (rows, cols, nnz) =
+                (n_pats as u64, direct.seq_ids.len() as u64, direct.nnz() as u64);
+            let bound = 16 * cap + 24 * rows + 8 * cols + 12 * nnz + 64;
+            assert!(
+                tracker.peak() <= bound,
+                "case={case} block={block}: peak {} > bound {bound}",
+                tracker.peak()
+            );
+            let streamed_dur =
+                SeqMatrix::from_index_tracked(&idx, n_pats, Some(30), None).unwrap();
+            assert_eq!(streamed_dur, direct_dur, "case={case} block={block} durations");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Tentpole property: the pid-indexed `by_patient` fast path returns
+/// byte-identical records to the v1 scan path — and to a v1 artifact's
+/// answers — on random dbmarts.
+#[test]
+fn by_patient_fast_path_matches_v1_scan_on_random_dbmarts() {
+    let mut meta = Rng::new(0xFEED);
+    for case in 0..3u64 {
+        let n = 1_000 + meta.gen_range(5_000) as usize;
+        let n_pats = 1 + meta.gen_range(60);
+        let all = random_sorted(200 + case, n, 1 + meta.gen_range(40), n_pats);
+        let dir = tmpdir(&format!("pid_prop_{case}"));
+        let input = spill(&dir, &all, 2, n_pats as u32);
+        let v2_dir = dir.join("idx_v2");
+        let v1_dir = dir.join("idx_v1");
+        query::index::build(&input, &v2_dir, &IndexConfig::default(), None).unwrap();
+        query::index::build(
+            &input,
+            &v1_dir,
+            &IndexConfig { pid_index: false, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let v2 = QueryService::open_with_cache(&v2_dir, 0).unwrap();
+        let v1 = QueryService::open_with_cache(&v1_dir, 0).unwrap();
+        assert!(v2.index().pids.is_some() && v1.index().pids.is_none());
+        for pid in (0..n_pats as u32).chain([n_pats as u32 + 7, u32::MAX]) {
+            let expect = brute_by_pid(&all, pid);
+            assert_eq!(*v2.by_patient(pid).unwrap(), expect, "case={case} pid={pid} fast");
+            assert_eq!(
+                v2.by_patient_scan(pid).unwrap(),
+                expect,
+                "case={case} pid={pid} scan"
+            );
+            assert_eq!(*v1.by_patient(pid).unwrap(), expect, "case={case} pid={pid} v1");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Acceptance: `by_patient` no longer scans the data file — the bytes
+/// read scale with the patient's own records, not the artifact size.
+#[test]
+fn by_patient_io_scales_with_the_answer_not_the_artifact() {
+    let all = random_sorted(31, 60_000, 50, 400);
+    let dir = tmpdir("pid_io");
+    let input = spill(&dir, &all, 1, 400);
+    let idx_dir = dir.join("idx");
+    query::index::build(&input, &idx_dir, &IndexConfig::default(), None).unwrap();
+    let svc = QueryService::open_with_cache(&idx_dir, 0).unwrap();
+    let artifact_record_bytes = (all.len() * RECORD_BYTES) as u64;
+
+    let pid = all[all.len() / 2].pid;
+    let expect = brute_by_pid(&all, pid);
+    let before = svc.stats().logical_bytes_read;
+    let got = svc.by_patient(pid).unwrap();
+    let fast_bytes = svc.stats().logical_bytes_read - before;
+    assert_eq!(*got, expect);
+    // Exactly the patient's own records are streamed — nothing else.
+    assert_eq!(fast_bytes, expect.len() as u64 * RECORD_BYTES as u64);
+    assert!(
+        fast_bytes * 50 < artifact_record_bytes,
+        "fast path read {fast_bytes} of {artifact_record_bytes} bytes"
+    );
+    // The v1 scan path on the same artifact reads the bulk of the file
+    // (random pids appear in nearly every block) — the gap is the win.
+    let before = svc.stats().logical_bytes_read;
+    assert_eq!(svc.by_patient_scan(pid).unwrap(), expect);
+    let scan_bytes = svc.stats().logical_bytes_read - before;
+    assert!(
+        scan_bytes > fast_bytes * 10,
+        "scan {scan_bytes} vs fast {fast_bytes}: the pid index must change the IO class"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: the full out-of-core chain — mine → screen → index →
+/// matrix → msmr — completes under a memory budget far below the
+/// materialized record multiset, with CSR output bit-identical to the
+/// in-memory path.
+#[test]
+fn engine_out_of_core_chain_stays_under_budget() {
+    let db = NumericDbMart::encode(&SyntheaConfig::small().generate());
+    let labels: Vec<f32> = (0..db.num_patients()).map(|p| f32::from(p % 4 == 0)).collect();
+    let base = tmpdir("ooc_chain");
+
+    let golden = Engine::from_dbmart(db.clone())
+        .mine(MiningConfig { work_dir: base.join("mem"), ..Default::default() })
+        .screen(SparsityConfig { min_patients: 5, threads: 2 })
+        .matrix()
+        .msmr(25)
+        .labels(labels.clone())
+        .run()
+        .unwrap();
+
+    let budget: u64 = std::env::var("TSPM_MEMORY_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let spilled = Engine::from_dbmart(db)
+        .mine(MiningConfig { work_dir: base.join("spill"), ..Default::default() })
+        .screen(SparsityConfig { min_patients: 5, threads: 2 })
+        .out_dir(base.join("run"))
+        .index_with(base.join("idx"), 512)
+        .matrix()
+        .msmr(25)
+        .labels(labels)
+        .memory_budget(budget)
+        .run()
+        .unwrap();
+
+    assert_eq!(spilled.report.output, OutputKind::Spilled);
+    assert_eq!(spilled.matrix.as_ref().unwrap(), golden.matrix.as_ref().unwrap());
+    assert_eq!(
+        spilled.selection.as_ref().unwrap().columns,
+        golden.selection.as_ref().unwrap().columns
+    );
+    // The chain never materialised the record multiset: its tracked peak
+    // stays far below the mined payload the in-memory path holds
+    // resident (the forecast is that payload's exact size).
+    let mined_bytes = spilled.report.forecast.total_bytes;
+    assert!(
+        spilled.report.peak_logical_bytes * 2 < mined_bytes,
+        "peak {} is not far below the {mined_bytes}-byte mined multiset",
+        spilled.report.peak_logical_bytes
+    );
+    assert!(
+        spilled.report.peak_logical_bytes < golden.report.peak_logical_bytes,
+        "the out-of-core chain must beat the in-memory chain's peak ({} vs {})",
+        spilled.report.peak_logical_bytes,
+        golden.report.peak_logical_bytes
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
 /// The artifact is self-contained: the spilled inputs can disappear
 /// after the build and every query still answers. Reopening via
 /// `SeqIndex::open` equals the just-built tables.
@@ -258,7 +456,13 @@ fn artifact_is_self_contained_and_reopenable() {
     let input = spill(&dir, &all, 2, 40);
     let idx_dir = dir.join("idx");
     let built =
-        query::index::build(&input, &idx_dir, &IndexConfig { block_records: 64 }, None).unwrap();
+        query::index::build(
+            &input,
+            &idx_dir,
+            &IndexConfig { block_records: 64, ..Default::default() },
+            None,
+        )
+        .unwrap();
     for f in &input.files {
         std::fs::remove_file(f).unwrap();
     }
