@@ -198,4 +198,49 @@ fn main() {
     std::fs::write("BENCH_pid_index.json", pbench.to_string_pretty())
         .expect("write BENCH_pid_index.json");
     println!("wrote BENCH_pid_index.json");
+
+    // serve layer: loopback daemon over the same artifact, mixed
+    // by_sequence/by_patient/patients_with/top_k/histogram workload from
+    // concurrent persistent clients. Sustained QPS + per-kind p50/p99
+    // to BENCH_serve.json.
+    use tspm_plus::serve::{client::run_mixed_workload, Registry, ServeConfig, Server, WorkloadConfig};
+    let registry = std::sync::Arc::new(Registry::new(32 << 20));
+    registry
+        .register("perf", std::sync::Arc::new(svc))
+        .expect("register the already-open service");
+    let server = Server::bind(
+        "127.0.0.1:0",
+        registry,
+        ServeConfig { max_conns: 16, ..ServeConfig::default() },
+    )
+    .expect("bind loopback server");
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.spawn();
+    let wl = WorkloadConfig { requests: 4000, concurrency: 8, seed: 42, artifact: None };
+    let report = run_mixed_workload(&addr, &wl).expect("loopback workload");
+    handle.shutdown();
+    let summary = join.join().unwrap().expect("server drains cleanly");
+    println!(
+        "serve workload: {:.0} QPS over {} requests ({} conns served, {} shed, {} errors)",
+        report.qps, report.total_requests, summary.served, summary.shed, report.errors
+    );
+    for k in &report.kinds {
+        println!(
+            "  {:>14}: n={:<6} p50 {:>6}us  p99 {:>6}us",
+            k.kind, k.count, k.p50_us, k.p99_us
+        );
+    }
+    let mut sbench = match report.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("workload report serializes to an object"),
+    };
+    sbench.insert("bench".to_string(), Json::from("serve_loopback_mixed".to_string()));
+    sbench.insert("records_indexed".to_string(), Json::from(screened.len()));
+    sbench.insert("max_conns".to_string(), Json::from(16u64));
+    sbench.insert("concurrency".to_string(), Json::from(wl.concurrency));
+    sbench.insert("connections_served".to_string(), Json::from(summary.served));
+    sbench.insert("connections_shed".to_string(), Json::from(summary.shed));
+    std::fs::write("BENCH_serve.json", Json::Obj(sbench).to_string_pretty())
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
 }

@@ -50,6 +50,10 @@ impl std::error::Error for CliError {}
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Every explicitly passed value, in command-line order — backs
+    /// repeatable options ([`Args::get_all`]); `values` keeps only the
+    /// last occurrence.
+    multi: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     /// Option names the user explicitly passed (defaults excluded).
     provided: Vec<String>,
@@ -87,6 +91,7 @@ impl Args {
                                 .ok_or_else(|| CliError(format!("--{name} needs a value")))?
                         }
                     };
+                    args.multi.entry(name.to_string()).or_default().push(val.clone());
                     args.values.insert(name.to_string(), val);
                 }
             } else {
@@ -119,6 +124,17 @@ impl Args {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Every value of a repeatable option, in command-line order —
+    /// `--index-dir a --index-dir b` yields `["a", "b"]`. Falls back to
+    /// the default (as a singleton) when the user passed nothing and
+    /// the spec declared one; empty otherwise.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        match self.multi.get(name) {
+            Some(vals) => vals.iter().map(|s| s.as_str()).collect(),
+            None => self.get(name).map(|v| vec![v]).unwrap_or_default(),
+        }
     }
 
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
@@ -208,6 +224,24 @@ mod tests {
         assert_eq!(a.get("patients"), Some("100"));
         assert!(!a.provided("patients"));
         assert!(!a.provided("mode"));
+    }
+
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let a = Args::parse(
+            &sv(&["--out", "a", "--out=b", "--out", "c", "--patients", "5"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.get_all("out"), vec!["a", "b", "c"]);
+        // Scalar accessors keep last-one-wins semantics.
+        assert_eq!(a.get("out"), Some("c"));
+        // An un-passed option with a default answers as a singleton…
+        assert_eq!(a.get_all("patients"), vec!["5"]);
+        assert_eq!(a.get_all("mode"), vec!["memory"]);
+        // …and one with neither value nor default is empty.
+        let b = Args::parse(&sv(&["--out", "o"]), &spec()).unwrap();
+        assert!(b.get_all("nope").is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::mining::MiningError;
 use crate::partition::PartitionError;
 use crate::query::QueryError;
 use crate::runtime::RuntimeError;
+use crate::serve::ServeError;
 use std::fmt;
 
 /// Unified error for every engine-orchestrated pipeline stage.
@@ -41,6 +42,9 @@ pub enum TspmError {
     /// Matrix-builder failures ([`crate::matrix`]): a pid outside the
     /// row space, or an index artifact that disagrees with its tables.
     Matrix(MatrixError),
+    /// Serving-layer failures ([`crate::serve`]): socket errors,
+    /// protocol violations, typed remote errors, admission shedding.
+    Serve(ServeError),
     /// An [`crate::engine::Plan`] that fails validation (empty chain,
     /// ill-ordered stages, missing labels, …).
     Plan(String),
@@ -60,6 +64,7 @@ impl fmt::Display for TspmError {
             TspmError::Runtime(e) => write!(f, "{e}"),
             TspmError::Query(e) => write!(f, "{e}"),
             TspmError::Matrix(e) => write!(f, "{e}"),
+            TspmError::Serve(e) => write!(f, "{e}"),
             TspmError::Plan(msg) => write!(f, "invalid plan: {msg}"),
             TspmError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
         }
@@ -78,6 +83,7 @@ impl std::error::Error for TspmError {
             TspmError::Runtime(e) => Some(e),
             TspmError::Query(e) => Some(e),
             TspmError::Matrix(e) => Some(e),
+            TspmError::Serve(e) => Some(e),
             TspmError::Plan(_) | TspmError::Pipeline(_) => None,
         }
     }
@@ -137,6 +143,12 @@ impl From<MatrixError> for TspmError {
     }
 }
 
+impl From<ServeError> for TspmError {
+    fn from(e: ServeError) -> Self {
+        TspmError::Serve(e)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +175,9 @@ mod tests {
         assert!(matches!(mx, TspmError::Matrix(_)));
         let i: TspmError = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
         assert!(matches!(i, TspmError::Io(_)));
+        let s: TspmError = ServeError::Busy.into();
+        assert!(matches!(s, TspmError::Serve(_)));
+        assert!(s.to_string().contains("busy"), "got {s}");
     }
 
     #[test]

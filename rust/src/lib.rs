@@ -107,6 +107,35 @@
 //! tspm matrix --index-dir idx/                   # CSR straight from the artifact
 //! ```
 //!
+//! ### Serve the results
+//!
+//! For many focused questions against one mined corpus, `tspm query`'s
+//! per-question process launch is the bottleneck — [`serve`] keeps the
+//! artifacts open in a long-lived daemon instead. `tspm serve` opens
+//! one or more index directories behind a [`serve::Registry`] (each
+//! with its own cache and stats, routed by artifact id, hot-swappable
+//! via `register`/`retire` without interrupting in-flight readers) and
+//! answers the same query surface over a versioned, length-prefixed
+//! JSON protocol on TCP — thread-per-connection, bounded by a
+//! connection semaphore that **sheds** excess load with a typed `busy`
+//! frame instead of queueing unboundedly. Heavy `by_patient` answers
+//! stream block-at-a-time ([`query::QueryService::by_patient_visit`]),
+//! so daemon memory stays bounded by the artifact's block size, not the
+//! patient. [`serve::Client`] is the matching blocking client, also
+//! exposed as `tspm client` (the e2e harness):
+//!
+//! ```text
+//! tspm serve  --index-dir idxA/ --index-dir idxB/ --addr 127.0.0.1:7878 --max-conns 64
+//! tspm client --addr 127.0.0.1:7878 --list
+//! tspm client --addr 127.0.0.1:7878 --artifact idxA --seq 420000012
+//! tspm client --addr 127.0.0.1:7878 --artifact idxA --workload 2000
+//! tspm client --addr 127.0.0.1:7878 --retire idxB   # hot-swap
+//! tspm client --addr 127.0.0.1:7878 --shutdown      # graceful drain
+//! ```
+//!
+//! The wire protocol (frame layout, version gate, error codes) is a
+//! compatibility contract documented in the [`serve`] module.
+//!
 //! ### The out-of-core ML chain
 //!
 //! The index also feeds the ML layer without materialization:
@@ -153,7 +182,8 @@
 //!    comparison), [`partition`] (adaptive memory partitioning),
 //!    [`pipeline`] (streaming orchestrator with backpressure).
 //! 3. **Analytics on mined sequences** — [`query`] (indexed artifacts +
-//!    cached query service over spilled results), [`util`] (sequence
+//!    cached query service over spilled results), [`serve`] (the
+//!    concurrent query daemon + wire protocol), [`util`] (sequence
 //!    filters and transitive end-sets), [`matrix`] (patient×sequence matrices),
 //!    [`msmr`] (MSMR feature selection via joint mutual information),
 //!    [`ml`] (MLHO-style classification workflow), [`postcovid`] (the WHO
@@ -192,6 +222,7 @@ pub mod query;
 pub mod rng;
 pub mod runtime;
 pub mod seqstore;
+pub mod serve;
 pub mod sparsity;
 pub mod synthea;
 pub mod util;
@@ -207,6 +238,7 @@ pub mod prelude {
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
     pub use crate::msmr::MsmrConfig;
     pub use crate::query::{QueryService, SeqIndex};
+    pub use crate::serve::{Client, Registry, ServeConfig, ServeError, Server};
     pub use crate::sparsity::SparsityConfig;
     pub use crate::synthea::SyntheaConfig;
 }

@@ -7,6 +7,8 @@
 //! * `screen`    — sparsity-screen a mined sequence file
 //! * `index`     — build a query-index artifact over a spilled run
 //! * `query`     — point/range queries against an index artifact (JSON out)
+//! * `serve`     — long-lived query daemon over one or more index artifacts
+//! * `client`    — talk to a running daemon (also the serve e2e harness)
 //! * `matrix`    — build the patient×sequence CSR straight from an index
 //! * `postcovid` — vignette 2: WHO Post COVID-19 identification
 //! * `mlho`      — vignette 1: MSMR + logistic-regression workflow
@@ -14,9 +16,16 @@
 //! * `e2e`       — full pipeline: synth → mine → screen → MSMR → classify
 //!
 //! Run `tspm <command> --help` for options.
+//!
+//! Exit codes: `0` success, `1` generic failure, `2` usage,
+//! `3` index artifact failed to open (missing/garbled — the message
+//! names the path), `4` a daemon answered `tspm client` with a typed
+//! error frame (e.g. `not_found` after a hot-swap retire).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
 
 use tspm_plus::bench_util::experiments;
 use tspm_plus::cli::{usage, Args, OptSpec};
@@ -27,11 +36,41 @@ use tspm_plus::json::Json;
 use tspm_plus::metrics::{fmt_bytes, PhaseTimer};
 use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{self, PostCovidConfig};
-use tspm_plus::query::{self, IndexConfig, QueryService};
+use tspm_plus::query::{self, IndexConfig, QueryService, DEFAULT_CACHE_BYTES};
 use tspm_plus::runtime::ArtifactSet;
+use tspm_plus::serve::{
+    self, registry::open_service, Client, Registry, ServeConfig, ServeError, Server,
+    WorkloadConfig,
+};
 use tspm_plus::sparsity::{self, SparsityConfig};
 use tspm_plus::synthea::{Scenario, SyntheaConfig, COVID_CODE, SYMPTOM_CODES};
 use tspm_plus::{ml, seqstore};
+
+/// An index artifact failed to open: missing or garbled manifest, bad
+/// data files. The error message names the offending path.
+const EXIT_ARTIFACT: u8 = 3;
+/// The daemon answered `tspm client` with a typed error frame.
+const EXIT_REMOTE: u8 = 4;
+
+/// A command failure with its process exit code. `From<String>` keeps
+/// the plain-`String` error plumbing of the older subcommands working
+/// (`?` converts to the generic code 1).
+struct CmdError {
+    code: u8,
+    message: String,
+}
+
+impl From<String> for CmdError {
+    fn from(message: String) -> Self {
+        CmdError { code: 1, message }
+    }
+}
+
+impl From<&str> for CmdError {
+    fn from(message: &str) -> Self {
+        CmdError { code: 1, message: message.to_string() }
+    }
+}
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -39,28 +78,30 @@ fn main() -> ExitCode {
         print_global_help();
         return ExitCode::from(2);
     };
-    let result = match cmd.as_str() {
-        "synth" => cmd_synth(rest),
-        "mine" => cmd_mine(rest),
-        "screen" => cmd_screen(rest),
-        "index" => cmd_index(rest),
+    let result: Result<(), CmdError> = match cmd.as_str() {
+        "synth" => cmd_synth(rest).map_err(CmdError::from),
+        "mine" => cmd_mine(rest).map_err(CmdError::from),
+        "screen" => cmd_screen(rest).map_err(CmdError::from),
+        "index" => cmd_index(rest).map_err(CmdError::from),
         "query" => cmd_query(rest),
-        "matrix" => cmd_matrix(rest),
-        "postcovid" => cmd_postcovid(rest),
-        "mlho" => cmd_mlho(rest),
-        "bench" => cmd_bench(rest),
-        "e2e" => cmd_e2e(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "matrix" => cmd_matrix(rest).map_err(CmdError::from),
+        "postcovid" => cmd_postcovid(rest).map_err(CmdError::from),
+        "mlho" => cmd_mlho(rest).map_err(CmdError::from),
+        "bench" => cmd_bench(rest).map_err(CmdError::from),
+        "e2e" => cmd_e2e(rest).map_err(CmdError::from),
         "--help" | "-h" | "help" => {
             print_global_help();
             Ok(())
         }
-        other => Err(format!("unknown command {other:?}; try --help")),
+        other => Err(CmdError::from(format!("unknown command {other:?}; try --help"))),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e}");
-            ExitCode::FAILURE
+            eprintln!("error: {}", e.message);
+            ExitCode::from(e.code)
         }
     }
 }
@@ -74,6 +115,8 @@ fn print_global_help() {
          \x20 screen     sparsity-screen a mined sequence file\n\
          \x20 index      build a query-index artifact over a spilled run\n\
          \x20 query      point/range queries against an index (JSON output)\n\
+         \x20 serve      long-lived query daemon over index artifacts\n\
+         \x20 client     talk to a running daemon (queries, workload, admin)\n\
          \x20 matrix     patient×sequence CSR straight from an index (JSON output)\n\
          \x20 postcovid  vignette 2: WHO Post COVID-19 identification\n\
          \x20 mlho       vignette 1: MSMR + classifier workflow\n\
@@ -527,7 +570,7 @@ struct QuerySpec {
     limit: usize,
 }
 
-fn cmd_query(argv: &[String]) -> Result<(), String> {
+fn cmd_query(argv: &[String]) -> Result<(), CmdError> {
     let spec = [
         OptSpec::required("index-dir", "index artifact directory (tspm index --out-dir)"),
         OptSpec::value("seq", None, "sequence id — return its records"),
@@ -568,8 +611,12 @@ fn cmd_query(argv: &[String]) -> Result<(), String> {
     let repeat: usize = a.req("repeat").map_err(|e| e.to_string())?;
     let repeat = repeat.max(1);
 
-    let svc = QueryService::open(&PathBuf::from(a.get("index-dir").unwrap()))
-        .map_err(|e| e.to_string())?;
+    // A missing/garbled artifact is a *distinct* failure class (exit
+    // code 3, message naming the path) so orchestration — and serve's
+    // registry, which shares open_service — can tell "bad artifact"
+    // apart from "bad query".
+    let svc = open_service(&PathBuf::from(a.get("index-dir").unwrap()), DEFAULT_CACHE_BYTES)
+        .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?;
     let mut latencies: Vec<f64> = Vec::with_capacity(repeat);
     let mut body = Json::Null;
     for _ in 0..repeat {
@@ -699,6 +746,363 @@ fn run_query(svc: &QueryService, q: &QuerySpec) -> Result<Json, String> {
             Json::Arr(
                 got.iter()
                     .take(q.limit)
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("pid", Json::from(r.pid as u64)),
+                            ("duration", Json::from(r.duration as u64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
+    let spec = [
+        OptSpec::required(
+            "index-dir",
+            "index artifact directory; repeatable (--index-dir a --index-dir b), \
+             artifact id = directory name",
+        ),
+        OptSpec::value("addr", Some("127.0.0.1:7878"), "listen address (host:port)"),
+        OptSpec::value("max-conns", Some("64"), "connections before shedding with busy"),
+        OptSpec::value("cache-mb", Some("8"), "per-artifact result cache (MiB)"),
+        OptSpec::value("idle-timeout-secs", Some("30"), "close idle connections after this"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm serve", "serve index artifacts over TCP", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let cache_mb: usize = a.req("cache-mb").map_err(|e| e.to_string())?;
+    let cache_bytes = cache_mb << 20;
+    let registry = Arc::new(Registry::new(cache_bytes));
+    for dir in a.get_all("index-dir") {
+        let path = PathBuf::from(dir);
+        let id = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .filter(|s| !s.is_empty())
+            .unwrap_or("index")
+            .to_string();
+        // Same failure class and exit code as `tspm query` on a bad
+        // artifact: code 3, message naming the path.
+        let svc = open_service(&path, cache_bytes)
+            .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?;
+        registry.register(&id, Arc::new(svc)).map_err(|e| e.to_string())?;
+        eprintln!("registered artifact {id:?} from {}", path.display());
+    }
+    let cfg = ServeConfig {
+        max_conns: a.req("max-conns").map_err(|e| e.to_string())?,
+        idle_timeout: Duration::from_secs(
+            a.req("idle-timeout-secs").map_err(|e| e.to_string())?,
+        ),
+        ..ServeConfig::default()
+    };
+    let n_artifacts = registry.len();
+    let server =
+        Server::bind(a.get("addr").unwrap(), registry, cfg.clone()).map_err(|e| e.to_string())?;
+    println!(
+        "listening on {} ({} artifact(s), max {} connections)",
+        server.local_addr(),
+        n_artifacts,
+        cfg.max_conns
+    );
+    // Make the banner visible immediately even when stdout is piped —
+    // the e2e harness polls for it.
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let summary = server.run().map_err(|e| e.to_string())?;
+    println!(
+        "drained: {} connection(s) served, {} shed, {} request(s) answered",
+        summary.served, summary.shed, summary.requests
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+fn cmd_client(argv: &[String]) -> Result<(), CmdError> {
+    let spec = [
+        OptSpec::value("addr", Some("127.0.0.1:7878"), "daemon address (host:port)"),
+        OptSpec::value("artifact", None, "artifact id (omit when one is registered)"),
+        OptSpec::flag("ping", "liveness check"),
+        OptSpec::flag("list", "enumerate registered artifacts"),
+        OptSpec::flag("stats", "cache/IO counters of one artifact"),
+        OptSpec::value("seq", None, "by_sequence query"),
+        OptSpec::value("pid", None, "by_patient query (streamed from the daemon)"),
+        OptSpec::value("top-k", None, "k sequences with the most distinct patients"),
+        OptSpec::value("histogram", None, "with --seq: duration histogram bucket count"),
+        OptSpec::value("duration-min", None, "with --seq: patients_with lower bound"),
+        OptSpec::value("duration-max", None, "with --seq: patients_with upper bound"),
+        OptSpec::value("limit", Some("1000"), "truncate record/patient lists"),
+        OptSpec::value("workload", None, "run a mixed benchmark workload of N requests"),
+        OptSpec::value("workload-concurrency", Some("4"), "workload client connections"),
+        OptSpec::value("workload-seed", Some("42"), "workload mix seed"),
+        OptSpec::value("json-out", None, "also write the output JSON here"),
+        OptSpec::value("register", None, "hot-add: register this index dir (needs --id)"),
+        OptSpec::value("id", None, "artifact id for --register"),
+        OptSpec::value("retire", None, "hot-swap: retire this artifact id"),
+        OptSpec::flag("shutdown", "gracefully drain and stop the daemon"),
+    ];
+    if wants_help(argv) {
+        print!("{}", usage("tspm client", "talk to a running tspm serve daemon", &spec));
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let addr = a.get("addr").unwrap().to_string();
+    let artifact = a.get("artifact").map(str::to_string);
+
+    // Exactly one action per invocation.
+    let actions = [
+        a.flag("ping"),
+        a.flag("list"),
+        a.flag("stats"),
+        a.provided("seq"),
+        a.provided("pid"),
+        a.provided("top-k"),
+        a.provided("workload"),
+        a.provided("register"),
+        a.provided("retire"),
+        a.flag("shutdown"),
+    ];
+    if actions.iter().filter(|&&x| x).count() != 1 {
+        return Err("pick exactly one action: --ping | --list | --stats | --seq | --pid | \
+                    --top-k | --workload | --register | --retire | --shutdown"
+            .into());
+    }
+
+    // The workload drives its own connection pool.
+    if a.provided("workload") {
+        let wl = WorkloadConfig {
+            requests: a.req("workload").map_err(|e| e.to_string())?,
+            concurrency: a.req("workload-concurrency").map_err(|e| e.to_string())?,
+            seed: a.req("workload-seed").map_err(|e| e.to_string())?,
+            artifact,
+        };
+        let report = serve::client::run_mixed_workload(&addr, &wl).map_err(client_err)?;
+        return emit(report.to_json(), a.get("json-out"));
+    }
+
+    let mut client = Client::connect(&addr).map_err(client_err)?;
+    let out = run_client_action(&mut client, &a, artifact.as_deref());
+    match out {
+        Ok(json) => emit(json, a.get("json-out")),
+        Err(ServeError::Remote { code, message }) => {
+            // Surface the typed error as JSON on stdout (so harnesses can
+            // assert on the code) AND as a distinct exit code.
+            let j = Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::from(code.as_str())),
+                    ("message", Json::from(message.clone())),
+                ]),
+            )]);
+            print!("{}", j.to_string_pretty());
+            Err(CmdError { code: EXIT_REMOTE, message: format!("server error [{code}]: {message}") })
+        }
+        Err(e) => Err(client_err(e)),
+    }
+}
+
+/// Non-remote client failures keep the generic exit code; typed remote
+/// answers (including `busy` shedding) exit with [`EXIT_REMOTE`].
+fn client_err(e: ServeError) -> CmdError {
+    let code = match &e {
+        ServeError::Remote { .. } | ServeError::Busy => EXIT_REMOTE,
+        _ => 1,
+    };
+    CmdError { code, message: e.to_string() }
+}
+
+fn emit(json: Json, json_out: Option<&str>) -> Result<(), CmdError> {
+    let text = json.to_string_pretty();
+    print!("{text}");
+    if let Some(path) = json_out {
+        std::fs::write(path, &text).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn run_client_action(
+    client: &mut Client,
+    a: &Args,
+    artifact: Option<&str>,
+) -> Result<Json, ServeError> {
+    let limit: usize = a.get_parsed("limit").map_err(|e| ServeError::Protocol(e.to_string()))?
+        .unwrap_or(1000);
+    let parse_u64 = |name: &str| -> Result<u64, ServeError> {
+        a.get_parsed::<u64>(name)
+            .map_err(|e| ServeError::Protocol(e.to_string()))
+            .map(|v| v.expect("provided() checked"))
+    };
+    if a.flag("ping") {
+        client.ping()?;
+        return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
+    }
+    if a.flag("list") {
+        let arts = client.list()?;
+        return Ok(Json::obj(vec![(
+            "artifacts",
+            Json::Arr(
+                arts.iter()
+                    .map(|x| {
+                        Json::obj(vec![
+                            ("id", Json::from(x.id.clone())),
+                            ("records", Json::from(x.records)),
+                            ("sequences", Json::from(x.sequences)),
+                            ("patients", Json::from(x.patients as u64)),
+                            ("version", Json::from(x.version)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]));
+    }
+    if a.flag("stats") {
+        let (id, st) = client.stats(artifact)?;
+        return Ok(Json::obj(vec![
+            ("artifact", Json::from(id)),
+            ("hits", Json::from(st.hits)),
+            ("misses", Json::from(st.misses)),
+            ("evictions", Json::from(st.evictions)),
+            ("cached_entries", Json::from(st.cached_entries)),
+            ("cached_bytes", Json::from(st.cached_bytes)),
+            ("logical_bytes_read", Json::from(st.logical_bytes_read)),
+        ]));
+    }
+    if a.provided("pid") {
+        let pid = parse_u64("pid")? as u32;
+        // Stream: count everything, keep only `limit` records resident.
+        let mut kept: Vec<tspm_plus::mining::SeqRecord> = Vec::new();
+        let total = client.by_patient_visit(artifact, pid, |chunk| {
+            let room = limit.saturating_sub(kept.len());
+            kept.extend_from_slice(&chunk[..chunk.len().min(room)]);
+        })?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("by_patient")),
+            ("pid", Json::from(pid as u64)),
+            ("count", Json::from(total)),
+            ("returned", Json::from(kept.len())),
+            (
+                "records",
+                Json::Arr(
+                    kept.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("seq", Json::from(r.seq)),
+                                ("duration", Json::from(r.duration as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if a.provided("top-k") {
+        let k = parse_u64("top-k")? as usize;
+        let rows = client.top_k(artifact, k)?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("top_k")),
+            ("k", Json::from(k)),
+            (
+                "sequences",
+                Json::Arr(
+                    rows.iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("seq", Json::from(s.seq)),
+                                ("patients", Json::from(s.patients as u64)),
+                                ("records", Json::from(s.records)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if let Some(dir) = a.get("register") {
+        let id = a
+            .get("id")
+            .ok_or_else(|| ServeError::Protocol("--register needs --id".into()))?;
+        client.register(id, dir)?;
+        return Ok(Json::obj(vec![("ok", Json::Bool(true)), ("registered", Json::from(id))]));
+    }
+    if let Some(id) = a.get("retire") {
+        client.retire(id)?;
+        return Ok(Json::obj(vec![("ok", Json::Bool(true)), ("retired", Json::from(id))]));
+    }
+    if a.flag("shutdown") {
+        client.shutdown()?;
+        return Ok(Json::obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))]));
+    }
+    // Remaining selector: --seq, optionally refined by --histogram or a
+    // duration range (same shapes as `tspm query`).
+    let seq = parse_u64("seq")?;
+    if a.provided("histogram") {
+        let buckets = parse_u64("histogram")? as usize;
+        let h = client.histogram(artifact, seq, buckets)?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("duration_histogram")),
+            ("seq", Json::from(seq)),
+            ("duration_min", Json::from(h.dur_min as u64)),
+            ("duration_max", Json::from(h.dur_max as u64)),
+            ("count", Json::from(h.total)),
+            (
+                "buckets",
+                Json::Arr(
+                    h.buckets
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("lo", Json::from(b.lo as u64)),
+                                ("hi", Json::from(b.hi as u64)),
+                                ("count", Json::from(b.count)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    if a.provided("duration-min") || a.provided("duration-max") {
+        let lo = a
+            .get_parsed::<u32>("duration-min")
+            .map_err(|e| ServeError::Protocol(e.to_string()))?
+            .unwrap_or(0);
+        let hi = a
+            .get_parsed::<u32>("duration-max")
+            .map_err(|e| ServeError::Protocol(e.to_string()))?
+            .unwrap_or(u32::MAX);
+        let (pids, total) = client.patients_with(artifact, seq, lo, hi, Some(limit))?;
+        return Ok(Json::obj(vec![
+            ("query", Json::from("patients_with")),
+            ("seq", Json::from(seq)),
+            ("duration_min", Json::from(lo as u64)),
+            ("duration_max", Json::from(hi as u64)),
+            ("count", Json::from(total)),
+            ("returned", Json::from(pids.len())),
+            ("patients", Json::Arr(pids.iter().map(|&p| Json::from(p as u64)).collect())),
+        ]));
+    }
+    let (records, total) = client.by_sequence(artifact, seq, Some(limit))?;
+    Ok(Json::obj(vec![
+        ("query", Json::from("by_sequence")),
+        ("seq", Json::from(seq)),
+        ("count", Json::from(total)),
+        ("returned", Json::from(records.len())),
+        (
+            "records",
+            Json::Arr(
+                records
+                    .iter()
                     .map(|r| {
                         Json::obj(vec![
                             ("pid", Json::from(r.pid as u64)),
@@ -913,4 +1317,44 @@ fn cmd_e2e(argv: &[String]) -> Result<(), String> {
         ml::mlho_vignette(cfg.patients, 200, 150, artifacts.as_ref()).map_err(|e| e.to_string())?;
     print!("{report}");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use tspm_plus::serve::ErrorCode;
+
+    #[test]
+    fn generic_string_errors_map_to_exit_code_1() {
+        let e = CmdError::from("something broke".to_string());
+        assert_eq!(e.code, 1);
+        assert_eq!(CmdError::from("str form").code, 1);
+    }
+
+    #[test]
+    fn artifact_open_failures_map_to_exit_code_3_and_name_the_path() {
+        let missing = std::env::temp_dir().join("tspm_cli_no_such_index");
+        let _ = std::fs::remove_dir_all(&missing);
+        let err = open_service(&missing, DEFAULT_CACHE_BYTES)
+            .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })
+            .unwrap_err();
+        assert_eq!(err.code, 3);
+        assert!(err.message.contains("tspm_cli_no_such_index"), "{}", err.message);
+    }
+
+    #[test]
+    fn typed_remote_errors_map_to_exit_code_4_others_to_1() {
+        let remote = client_err(ServeError::Remote {
+            code: ErrorCode::NotFound,
+            message: "no artifact \"b\"".into(),
+        });
+        assert_eq!(remote.code, EXIT_REMOTE);
+        assert!(remote.message.contains("not_found"), "{}", remote.message);
+        assert_eq!(client_err(ServeError::Busy).code, EXIT_REMOTE);
+        let io = client_err(ServeError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            "refused",
+        )));
+        assert_eq!(io.code, 1);
+    }
 }

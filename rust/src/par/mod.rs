@@ -11,12 +11,17 @@
 //!   (the "thread-local vector" pattern; caller merges),
 //! * [`par_for_each_dynamic`] — dynamic scheduling over an atomic work
 //!   counter for irregular per-item cost (e.g. patients with very different
-//!   entry counts).
+//!   entry counts),
+//! * [`Semaphore`] — a counting semaphore (`Mutex` + `Condvar`) for
+//!   admission control: bound how many units of work run at once, with a
+//!   non-blocking [`Semaphore::try_acquire`] so callers can shed load
+//!   instead of queueing (the serving layer's connection limit).
 //!
 //! All functions degrade to plain sequential execution for 1 thread or tiny
 //! inputs, so they are safe to call unconditionally.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// Hard ceiling on the worker count, whatever its source. Every worker is
 /// a real scoped OS thread, so an env override like `TSPM_THREADS=100000`
@@ -172,6 +177,66 @@ where
     });
 }
 
+/// A counting semaphore over `Mutex` + `Condvar`.
+///
+/// The serving layer uses it as a **connection limit with shedding
+/// semantics**: the accept loop calls [`Semaphore::try_acquire`] and
+/// turns an exhausted semaphore into an immediate `Busy` response
+/// instead of an unbounded queue; graceful shutdown calls the blocking
+/// [`Semaphore::acquire`] `permits` times to drain every in-flight
+/// holder. Permits are plain counts — releasing a permit that was never
+/// acquired is a caller bug and panics in debug builds.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    total: usize,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    /// A semaphore with `permits` initially-available permits.
+    pub fn new(permits: usize) -> Semaphore {
+        Semaphore { permits: Mutex::new(permits), total: permits, cv: Condvar::new() }
+    }
+
+    /// Take a permit without blocking; `false` when none are available.
+    pub fn try_acquire(&self) -> bool {
+        let mut p = self.permits.lock().unwrap();
+        if *p == 0 {
+            return false;
+        }
+        *p -= 1;
+        true
+    }
+
+    /// Block until a permit is available, then take it.
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    /// Return a permit taken by [`Semaphore::acquire`] /
+    /// [`Semaphore::try_acquire`].
+    pub fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        debug_assert!(*p < self.total, "released a permit that was never acquired");
+        *p += 1;
+        self.cv.notify_one();
+    }
+
+    /// Permits currently available (a racy snapshot — for observability).
+    pub fn available(&self) -> usize {
+        *self.permits.lock().unwrap()
+    }
+
+    /// The permit count the semaphore was built with.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +337,57 @@ mod tests {
         assert_eq!(resolve_threads(None, Some("0"), 16), 16);
         assert_eq!(resolve_threads(None, Some("-2"), 16), 16);
         assert_eq!(resolve_threads(None, None, 16), 16);
+    }
+
+    #[test]
+    fn semaphore_try_acquire_sheds_at_the_limit() {
+        let s = Semaphore::new(2);
+        assert_eq!(s.available(), 2);
+        assert!(s.try_acquire());
+        assert!(s.try_acquire());
+        assert!(!s.try_acquire(), "no third permit");
+        s.release();
+        assert!(s.try_acquire());
+        s.release();
+        s.release();
+        assert_eq!(s.available(), 2);
+        assert_eq!(s.total(), 2);
+    }
+
+    #[test]
+    fn semaphore_acquire_blocks_until_release() {
+        let s = Semaphore::new(1);
+        assert!(s.try_acquire());
+        let turn = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                s.acquire(); // blocks until the main thread releases
+                assert_eq!(turn.load(Ordering::SeqCst), 1, "acquired before release");
+                s.release();
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            turn.store(1, Ordering::SeqCst);
+            s.release();
+        });
+        assert_eq!(s.available(), 1);
+    }
+
+    #[test]
+    fn semaphore_drain_by_acquiring_all_permits() {
+        // The graceful-shutdown pattern: acquire total() permits to wait
+        // for every in-flight holder.
+        let s = Semaphore::new(3);
+        assert!(s.try_acquire());
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                s.release(); // the in-flight holder finishes
+            });
+            for _ in 0..s.total() {
+                s.acquire();
+            }
+            assert_eq!(s.available(), 0, "drained: all permits held here");
+        });
     }
 
     #[test]

@@ -88,9 +88,16 @@ impl<V: Clone> LruCache<V> {
         self.bytes
     }
 
-    /// Entries evicted to make room since construction.
+    /// Entries evicted to make room since construction (or since the
+    /// last [`LruCache::reset_evictions`]).
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Zero the eviction counter without touching the cached entries —
+    /// lets a bench harness measure a steady-state window.
+    pub fn reset_evictions(&mut self) {
+        self.evictions = 0;
     }
 
     pub fn capacity_bytes(&self) -> usize {
@@ -162,5 +169,16 @@ mod tests {
         assert_eq!(c.get("big"), Some(99));
         assert!(c.bytes() <= 100, "bytes {}", c.bytes());
         assert!(c.evictions() >= 9);
+    }
+
+    #[test]
+    fn reset_evictions_keeps_entries() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("a".into(), 1, 60);
+        c.put("b".into(), 2, 60); // evicts a
+        assert_eq!(c.evictions(), 1);
+        c.reset_evictions();
+        assert_eq!(c.evictions(), 0);
+        assert_eq!(c.get("b"), Some(2), "entries survive the counter reset");
     }
 }

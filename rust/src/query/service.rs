@@ -83,6 +83,16 @@ fn result_bytes(r: &QueryResult) -> usize {
 }
 
 /// Cache/traffic counters of one service instance.
+///
+/// A [`QueryService::stats`] snapshot is **internally consistent** for
+/// the cache-side counters: `hits`, `misses`, `evictions`,
+/// `cached_entries` and `cached_bytes` are all read under the one lock
+/// that guards their updates, so concurrent readers never observe a
+/// torn pair — `hits + misses` always equals the number of cache
+/// lookups completed at the snapshot instant. `logical_bytes_read` is a
+/// separate monotone counter updated outside the lock (scans are
+/// lock-free) and is only guaranteed to be *some* value between two
+/// quiescent points.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueryStats {
     pub hits: u64,
@@ -97,13 +107,19 @@ pub struct QueryStats {
     pub logical_bytes_read: u64,
 }
 
+/// Cache plus its hit/miss counters, guarded by one mutex so a stats
+/// snapshot can never observe a torn hit/miss pair.
+struct CacheState {
+    lru: LruCache<QueryResult>,
+    hits: u64,
+    misses: u64,
+}
+
 /// The query engine over one immutable index artifact.
 pub struct QueryService {
     index: SeqIndex,
-    cache: Mutex<LruCache<QueryResult>>,
+    cache: Mutex<CacheState>,
     cache_bytes: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
     bytes_read: AtomicU64,
     tracker: Option<Arc<MemTracker>>,
 }
@@ -124,10 +140,8 @@ impl QueryService {
     pub fn from_index(index: SeqIndex, cache_bytes: usize) -> QueryService {
         QueryService {
             index,
-            cache: Mutex::new(LruCache::new(cache_bytes)),
+            cache: Mutex::new(CacheState { lru: LruCache::new(cache_bytes), hits: 0, misses: 0 }),
             cache_bytes,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             tracker: None,
         }
@@ -143,17 +157,31 @@ impl QueryService {
         &self.index
     }
 
-    /// Cache hit/miss/size and IO counters.
+    /// Cache hit/miss/size and IO counters — one consistent snapshot
+    /// (see [`QueryStats`] for the exact guarantee).
     pub fn stats(&self) -> QueryStats {
-        let cache = self.cache.lock().unwrap();
+        let st = self.cache.lock().unwrap();
         QueryStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: cache.evictions(),
-            cached_entries: cache.len(),
-            cached_bytes: cache.bytes(),
+            hits: st.hits,
+            misses: st.misses,
+            evictions: st.lru.evictions(),
+            cached_entries: st.lru.len(),
+            cached_bytes: st.lru.bytes(),
             logical_bytes_read: self.bytes_read.load(Ordering::Relaxed),
         }
+    }
+
+    /// Zero every traffic counter (hits, misses, evictions,
+    /// `logical_bytes_read`) **without dropping the cached entries**, so
+    /// a bench harness can warm the cache and then measure a clean
+    /// steady-state window. `cached_entries`/`cached_bytes` reflect
+    /// retained state and are untouched.
+    pub fn reset_stats(&self) {
+        let mut st = self.cache.lock().unwrap();
+        st.hits = 0;
+        st.misses = 0;
+        st.lru.reset_evictions();
+        self.bytes_read.store(0, Ordering::Relaxed);
     }
 
     // --- queries -----------------------------------------------------------
@@ -240,6 +268,86 @@ impl QueryService {
             i = j + 1;
         }
         Ok(out)
+    }
+
+    /// Stream patient `pid`'s records through `f` **one block at a
+    /// time**, in the same `(seq, duration)` order
+    /// [`QueryService::by_patient`] returns — without ever materializing
+    /// the patient and without touching the result cache. This is the
+    /// serving-layer path: a daemon writing a heavy patient to a socket
+    /// holds one block of records resident, not `O(patient)`.
+    ///
+    /// Chunks passed to `f` hold at most `block_records` records each.
+    /// The callback's error type is generic (any `E: From<QueryError>`),
+    /// so a caller can abort the stream with its own error — e.g. a
+    /// socket write failure — and get it back unchanged. Returns the
+    /// total number of records streamed.
+    ///
+    /// Memory contract: on a v2 artifact the working set is the shared
+    /// scan buffers (2 × block); on a v1 fallback one extra block-sized
+    /// carry buffer filters the block-pruned scan — all
+    /// tracker-accounted, never proportional to the patient.
+    pub fn by_patient_visit<E: From<QueryError>>(
+        &self,
+        pid: u32,
+        mut f: impl FnMut(&[SeqRecord]) -> Result<(), E>,
+    ) -> Result<u64, E> {
+        if let Some(pt) = &self.index.pids {
+            let mut total = 0u64;
+            if let Some(e) = pt.entries.get(pid as usize) {
+                self.scan_blocks(&pt.data_path, e.start, e.start + e.count, |chunk| {
+                    total += chunk.len() as u64;
+                    f(chunk)
+                })?;
+            }
+            return Ok(total);
+        }
+        // v1 fallback: block-pruned scan of the seq-major file with a
+        // bounded carry buffer — flushed every time it fills, so the
+        // resident set stays one block even for a very heavy patient.
+        let cap = self.index.block_records.max(1);
+        let carry_bytes = (cap * RECORD_BYTES) as u64;
+        self.track(carry_bytes);
+        let result = (|| -> Result<u64, E> {
+            let mut carry: Vec<SeqRecord> = Vec::with_capacity(cap);
+            let mut total = 0u64;
+            let blocks = &self.index.blocks;
+            let candidate = |b: &super::index::BlockMeta| (b.pid_min..=b.pid_max).contains(&pid);
+            let mut i = 0;
+            while i < blocks.len() {
+                if !candidate(&blocks[i]) {
+                    i += 1;
+                    continue;
+                }
+                let mut j = i;
+                while j + 1 < blocks.len() && candidate(&blocks[j + 1]) {
+                    j += 1;
+                }
+                let start = blocks[i].start;
+                let end = blocks[j].start + blocks[j].len as u64;
+                self.scan_blocks(&self.index.data_path, start, end, |chunk| {
+                    for &r in chunk {
+                        if r.pid == pid {
+                            carry.push(r);
+                            if carry.len() == cap {
+                                total += carry.len() as u64;
+                                f(&carry)?;
+                                carry.clear();
+                            }
+                        }
+                    }
+                    Ok(())
+                })?;
+                i = j + 1;
+            }
+            if !carry.is_empty() {
+                total += carry.len() as u64;
+                f(&carry)?;
+            }
+            Ok(total)
+        })();
+        self.untrack(carry_bytes);
+        result
     }
 
     /// Distinct patients having `seq` with a duration in the inclusive
@@ -393,15 +501,14 @@ impl QueryService {
     // --- internals ---------------------------------------------------------
 
     fn cache_get(&self, key: &str) -> Option<QueryResult> {
-        if self.cache_bytes == 0 {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-            return None;
-        }
-        let got = self.cache.lock().unwrap().get(key);
+        let mut st = self.cache.lock().unwrap();
+        let got = if self.cache_bytes == 0 { None } else { st.lru.get(key) };
+        // Counted under the same lock the snapshot reads, so
+        // `hits + misses == lookups` holds at every instant.
         if got.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            st.hits += 1;
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            st.misses += 1;
         }
         got
     }
@@ -411,7 +518,7 @@ impl QueryService {
             return;
         }
         let bytes = result_bytes(&value);
-        self.cache.lock().unwrap().put(key, value, bytes);
+        self.cache.lock().unwrap().lru.put(key, value, bytes);
     }
 
     fn track(&self, bytes: u64) {
@@ -447,11 +554,7 @@ impl QueryService {
         self.scan_file(&self.index.data_path, start, end, f)
     }
 
-    /// Stream records `[start, end)` of one artifact data file through
-    /// `f`, holding exactly one block-sized record buffer and one
-    /// block-sized reader buffer resident (both tracker-accounted).
-    /// Every record streamed is added to the `logical_bytes_read`
-    /// counter, so tests can prove a query's IO bound.
+    /// Per-record wrapper over [`QueryService::scan_blocks`].
     fn scan_file(
         &self,
         path: &Path,
@@ -459,6 +562,29 @@ impl QueryService {
         end: u64,
         mut f: impl FnMut(SeqRecord),
     ) -> Result<(), QueryError> {
+        self.scan_blocks::<QueryError>(path, start, end, |chunk| {
+            for &r in chunk {
+                f(r);
+            }
+            Ok(())
+        })
+    }
+
+    /// Stream records `[start, end)` of one artifact data file through
+    /// `f` one block at a time, holding exactly one block-sized record
+    /// buffer and one block-sized reader buffer resident (both
+    /// tracker-accounted). Every record streamed is added to the
+    /// `logical_bytes_read` counter, so tests can prove a query's IO
+    /// bound. Generic over the callback's error type so a serving layer
+    /// can abort a scan with its own error (e.g. a dead socket) without
+    /// round-tripping through [`QueryError`].
+    fn scan_blocks<E: From<QueryError>>(
+        &self,
+        path: &Path,
+        start: u64,
+        end: u64,
+        mut f: impl FnMut(&[SeqRecord]) -> Result<(), E>,
+    ) -> Result<(), E> {
         if start >= end {
             return Ok(());
         }
@@ -467,23 +593,23 @@ impl QueryService {
         let cap = self.index.block_records.max(1);
         let buf_bytes = (cap * RECORD_BYTES) as u64 * 2;
         self.track(buf_bytes);
-        let result = (|| -> Result<(), QueryError> {
-            let mut reader = SeqReader::open_with_capacity(path, cap * RECORD_BYTES)?;
-            reader.seek_record(start)?;
+        let result = (|| -> Result<(), E> {
+            let mut reader =
+                SeqReader::open_with_capacity(path, cap * RECORD_BYTES).map_err(QueryError::from)?;
+            reader.seek_record(start).map_err(QueryError::from)?;
             let mut buf = vec![ZERO_REC; cap];
             let mut left = end - start;
             while left > 0 {
                 let want = left.min(buf.len() as u64) as usize;
-                let got = reader.read_batch(&mut buf[..want])?;
+                let got = reader.read_batch(&mut buf[..want]).map_err(QueryError::from)?;
                 if got == 0 {
                     return Err(QueryError::Artifact(format!(
                         "{}: data file ends before record {end} the index references",
                         path.display()
-                    )));
+                    ))
+                    .into());
                 }
-                for &r in &buf[..got] {
-                    f(r);
-                }
+                f(&buf[..got])?;
                 left -= got as u64;
             }
             Ok(())
@@ -704,6 +830,145 @@ mod tests {
         assert_eq!(st.hits, 0);
         assert_eq!(st.misses, 2);
         assert_eq!(st.cached_entries, 0);
+    }
+
+    #[test]
+    fn by_patient_visit_streams_the_same_records_in_blocks() {
+        for (name, pid_index) in [("visit_v2", true), ("visit_v1", false)] {
+            let (svc, data) = service_with(name, 4, 0, pid_index);
+            for pid in 0..10u32 {
+                let expect: Vec<SeqRecord> =
+                    data.iter().copied().filter(|r| r.pid == pid).collect();
+                let mut streamed = Vec::new();
+                let mut chunks = 0usize;
+                let total = svc
+                    .by_patient_visit::<QueryError>(pid, |chunk| {
+                        assert!(chunk.len() <= 4, "chunk exceeds block_records");
+                        assert!(!chunk.is_empty(), "empty chunks are never emitted");
+                        chunks += 1;
+                        streamed.extend_from_slice(chunk);
+                        Ok(())
+                    })
+                    .unwrap();
+                assert_eq!(streamed, expect, "{name}, pid {pid}");
+                assert_eq!(total, expect.len() as u64);
+                if expect.len() > 4 {
+                    assert!(chunks > 1, "heavy patient must arrive in several blocks");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_patient_visit_propagates_the_caller_error_type() {
+        #[derive(Debug)]
+        enum SocketDead {
+            Query(QueryError),
+            Dead,
+        }
+        impl From<QueryError> for SocketDead {
+            fn from(e: QueryError) -> Self {
+                SocketDead::Query(e)
+            }
+        }
+        let (svc, _) = service("visit_err", 2, 0);
+        let mut seen = 0usize;
+        let err = svc
+            .by_patient_visit(1, |chunk| {
+                seen += chunk.len();
+                Err(SocketDead::Dead)
+            })
+            .unwrap_err();
+        assert!(matches!(err, SocketDead::Dead), "got {err:?}");
+        assert!(seen > 0 && seen <= 2, "aborted after the first chunk, saw {seen}");
+    }
+
+    #[test]
+    fn by_patient_visit_memory_is_block_bounded_not_patient_bounded() {
+        // One very heavy patient: pid 0 owns ~all of a 6k-record file.
+        let dir = tmpdir("visit_heavy");
+        let mut data: Vec<SeqRecord> = (0..6000u32)
+            .map(|i| SeqRecord { seq: (i % 13) as u64, pid: 0, duration: i })
+            .collect();
+        data.push(SeqRecord { seq: 14, pid: 1, duration: 1 });
+        data.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        let path = dir.join("in.tspm");
+        seqstore::write_file(&path, &data).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: data.len() as u64,
+            num_patients: 2,
+            num_phenx: 0,
+        };
+        for pid_index in [true, false] {
+            let sub = dir.join(if pid_index { "v2" } else { "v1" });
+            let idx = build(
+                &input,
+                &sub,
+                &IndexConfig { block_records: 8, pid_index },
+                None,
+            )
+            .unwrap();
+            let mut svc = QueryService::from_index(idx, 0);
+            let tracker = Arc::new(MemTracker::new());
+            svc.set_tracker(tracker.clone());
+            let mut n = 0u64;
+            svc.by_patient_visit::<QueryError>(0, |chunk| {
+                n += chunk.len() as u64;
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(n, 6000);
+            // 2 scan buffers (+1 carry buffer on the v1 path) of 8
+            // records each — nowhere near the 6000-record patient.
+            let bound = 3 * 8 * RECORD_BYTES as u64;
+            assert!(
+                tracker.peak() <= bound,
+                "pid_index={pid_index}: peak {} > bound {bound}",
+                tracker.peak()
+            );
+            assert!(tracker.peak() < 6000 * RECORD_BYTES as u64 / 10);
+            assert_eq!(tracker.live(), 0);
+        }
+    }
+
+    #[test]
+    fn reset_stats_zeroes_counters_but_keeps_the_cache() {
+        let (svc, _) = service("reset", 4, DEFAULT_CACHE_BYTES);
+        svc.by_sequence(90).unwrap();
+        svc.by_sequence(90).unwrap();
+        let st = svc.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert!(st.logical_bytes_read > 0);
+        svc.reset_stats();
+        let st = svc.stats();
+        assert_eq!((st.hits, st.misses, st.evictions, st.logical_bytes_read), (0, 0, 0, 0));
+        assert_eq!(st.cached_entries, 1, "cached entries survive the reset");
+        // The retained entry answers as a hit against the fresh counters.
+        svc.by_sequence(90).unwrap();
+        let st = svc.stats();
+        assert_eq!((st.hits, st.misses), (1, 0));
+    }
+
+    #[test]
+    fn stats_lookup_identity_holds_under_concurrent_readers() {
+        let (svc, _) = service("torn", 4, DEFAULT_CACHE_BYTES);
+        let svc = Arc::new(svc);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let _ = svc.by_sequence([3u64, 17, 90][((t + i) % 3) as usize]);
+                        // Every snapshot taken mid-hammering must balance.
+                        let st = svc.stats();
+                        assert!(st.hits + st.misses <= 4 * 200);
+                    }
+                });
+            }
+        });
+        let st = svc.stats();
+        assert_eq!(st.hits + st.misses, 4 * 200, "every lookup counted exactly once");
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Blocking client for the serve protocol, plus the loopback workload
+//! harness shared by `tspm client --workload`, the e2e suite, and
+//! `examples/perf_probe.rs`.
+
+use crate::json::Json;
+use crate::mining::SeqRecord;
+use crate::query::{Histogram, QueryStats, SeqSupport};
+use crate::rng::Rng;
+use crate::serve::protocol::{
+    read_frame, write_frame, ArtifactInfo, Request, Response, DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::serve::ServeError;
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// One connection to a serve daemon. Methods are request/response;
+/// reuse the client across calls to amortize the TCP handshake.
+pub struct Client {
+    stream: TcpStream,
+    max_frame: usize,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, ServeError> {
+        Client::connect_with(addr, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    pub fn connect_with(addr: &str, max_frame: usize) -> Result<Client, ServeError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, max_frame })
+    }
+
+    /// Send one request and read one non-error response. `busy` and
+    /// `error` frames come back as typed [`ServeError`]s.
+    fn call(&mut self, req: &Request) -> Result<Response, ServeError> {
+        if let Err(e) = write_frame(&mut self.stream, &req.encode(), self.max_frame) {
+            // The write can fail because admission control already shed
+            // us: the server wrote one `busy` frame and closed. Prefer
+            // that typed answer over the raw broken-pipe error.
+            if let Ok(Response::Busy) = self.read_raw() {
+                return Err(ServeError::Busy);
+            }
+            return Err(e.into());
+        }
+        self.read_response()
+    }
+
+    fn read_raw(&mut self) -> Result<Response, ServeError> {
+        let payload = read_frame(&mut self.stream, self.max_frame)?;
+        Response::decode(&payload).map_err(ServeError::Protocol)
+    }
+
+    fn read_response(&mut self) -> Result<Response, ServeError> {
+        match self.read_raw()? {
+            Response::Busy => Err(ServeError::Busy),
+            Response::Error { code, message } => Err(ServeError::Remote { code, message }),
+            other => Ok(other),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<(), ServeError> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    pub fn list(&mut self) -> Result<Vec<ArtifactInfo>, ServeError> {
+        match self.call(&Request::List)? {
+            Response::Artifacts(a) => Ok(a),
+            other => Err(unexpected("artifacts", &other)),
+        }
+    }
+
+    pub fn stats(&mut self, artifact: Option<&str>) -> Result<(String, QueryStats), ServeError> {
+        let req = Request::Stats { artifact: artifact.map(str::to_string) };
+        match self.call(&req)? {
+            Response::Stats { artifact, stats } => Ok((artifact, stats)),
+            other => Err(unexpected("stats", &other)),
+        }
+    }
+
+    /// Returns `(records, total)`; `records` is truncated to `limit`
+    /// while `total` counts the whole answer.
+    pub fn by_sequence(
+        &mut self,
+        artifact: Option<&str>,
+        seq: u64,
+        limit: Option<usize>,
+    ) -> Result<(Vec<SeqRecord>, u64), ServeError> {
+        let req =
+            Request::BySequence { artifact: artifact.map(str::to_string), seq, limit };
+        match self.call(&req)? {
+            Response::Records { records, total } => Ok((records, total)),
+            other => Err(unexpected("records", &other)),
+        }
+    }
+
+    /// Consume a streamed `by_patient` answer chunk-at-a-time without
+    /// ever holding the whole patient; returns the total record count.
+    pub fn by_patient_visit(
+        &mut self,
+        artifact: Option<&str>,
+        pid: u32,
+        mut f: impl FnMut(&[SeqRecord]),
+    ) -> Result<u64, ServeError> {
+        let req = Request::ByPatient { artifact: artifact.map(str::to_string), pid };
+        write_frame(&mut self.stream, &req.encode(), self.max_frame)
+            .map_err(ServeError::from)?;
+        loop {
+            match self.read_response()? {
+                Response::RecordsPart { records, last, total } => {
+                    if !records.is_empty() {
+                        f(&records);
+                    }
+                    if last {
+                        return Ok(total.unwrap_or(0));
+                    }
+                }
+                other => return Err(unexpected("records_part", &other)),
+            }
+        }
+    }
+
+    /// The buffered convenience form of [`Client::by_patient_visit`].
+    pub fn by_patient(
+        &mut self,
+        artifact: Option<&str>,
+        pid: u32,
+    ) -> Result<Vec<SeqRecord>, ServeError> {
+        let mut out = Vec::new();
+        self.by_patient_visit(artifact, pid, |chunk| out.extend_from_slice(chunk))?;
+        Ok(out)
+    }
+
+    pub fn patients_with(
+        &mut self,
+        artifact: Option<&str>,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+        limit: Option<usize>,
+    ) -> Result<(Vec<u32>, u64), ServeError> {
+        let req = Request::PatientsWith {
+            artifact: artifact.map(str::to_string),
+            seq,
+            dur_min,
+            dur_max,
+            limit,
+        };
+        match self.call(&req)? {
+            Response::Patients { patients, total } => Ok((patients, total)),
+            other => Err(unexpected("patients", &other)),
+        }
+    }
+
+    pub fn top_k(
+        &mut self,
+        artifact: Option<&str>,
+        k: usize,
+    ) -> Result<Vec<SeqSupport>, ServeError> {
+        let req = Request::TopK { artifact: artifact.map(str::to_string), k };
+        match self.call(&req)? {
+            Response::TopK(rows) => Ok(rows),
+            other => Err(unexpected("top_k", &other)),
+        }
+    }
+
+    pub fn histogram(
+        &mut self,
+        artifact: Option<&str>,
+        seq: u64,
+        buckets: usize,
+    ) -> Result<Histogram, ServeError> {
+        let req = Request::Histogram { artifact: artifact.map(str::to_string), seq, buckets };
+        match self.call(&req)? {
+            Response::Histogram(h) => Ok(h),
+            other => Err(unexpected("histogram", &other)),
+        }
+    }
+
+    pub fn register(&mut self, id: &str, dir: &str) -> Result<(), ServeError> {
+        let req = Request::Register { id: id.to_string(), dir: dir.to_string() };
+        match self.call(&req)? {
+            Response::Ok => Ok(()),
+            other => Err(unexpected("ok", &other)),
+        }
+    }
+
+    pub fn retire(&mut self, id: &str) -> Result<(), ServeError> {
+        match self.call(&Request::Retire { id: id.to_string() })? {
+            Response::Ok => Ok(()),
+            other => Err(unexpected("ok", &other)),
+        }
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<(), ServeError> {
+        match self.call(&Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            other => Err(unexpected("ok", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> ServeError {
+    ServeError::Protocol(format!("expected a {wanted} response, got {got:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// mixed workload harness
+// ---------------------------------------------------------------------------
+
+/// Shape of a loopback benchmark run.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Total requests across all client threads.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+    /// Workload mix seed — same seed, same request stream.
+    pub seed: u64,
+    /// Artifact to target; `None` uses default routing.
+    pub artifact: Option<String>,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { requests: 2000, concurrency: 4, seed: 42, artifact: None }
+    }
+}
+
+/// Per-kind latency summary of one workload run.
+#[derive(Clone, Debug)]
+pub struct KindStats {
+    pub kind: &'static str,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// Outcome of [`run_mixed_workload`].
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub total_requests: u64,
+    pub errors: u64,
+    pub busy: u64,
+    pub elapsed_secs: f64,
+    pub qps: f64,
+    pub kinds: Vec<KindStats>,
+}
+
+impl WorkloadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_requests", Json::from(self.total_requests)),
+            ("errors", Json::from(self.errors)),
+            ("busy", Json::from(self.busy)),
+            ("elapsed_secs", Json::from(self.elapsed_secs)),
+            ("qps", Json::from(self.qps)),
+            (
+                "kinds",
+                Json::Obj(
+                    self.kinds
+                        .iter()
+                        .map(|k| {
+                            (
+                                k.kind.to_string(),
+                                Json::obj(vec![
+                                    ("count", Json::from(k.count)),
+                                    ("p50_us", Json::from(k.p50_us)),
+                                    ("p99_us", Json::from(k.p99_us)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+const KINDS: [&str; 5] = ["by_sequence", "by_patient", "patients_with", "top_k", "histogram"];
+
+/// Drive a deterministic mixed query workload against a running daemon
+/// (40% by_sequence, 25% by_patient, 15% patients_with, 10% top_k, 10%
+/// histogram) from `concurrency` persistent connections, and summarize
+/// sustained QPS plus per-kind p50/p99 latency.
+///
+/// Self-priming: a scout connection asks `top_k` for the hot sequences
+/// and samples one sequence's records for patient ids, so the workload
+/// needs no out-of-band knowledge of the artifact.
+pub fn run_mixed_workload(
+    addr: &str,
+    cfg: &WorkloadConfig,
+) -> Result<WorkloadReport, ServeError> {
+    let artifact = cfg.artifact.as_deref();
+    // Prime: discover hot sequences and real patient ids.
+    let mut scout = Client::connect(addr)?;
+    let rows = scout.top_k(artifact, 32)?;
+    let seqs: Vec<u64> = if rows.is_empty() { vec![0] } else { rows.iter().map(|r| r.seq).collect() };
+    let (sample, _) = scout.by_sequence(artifact, seqs[0], Some(256))?;
+    let pids: Vec<u32> =
+        if sample.is_empty() { vec![0] } else { sample.iter().map(|r| r.pid).collect() };
+    drop(scout);
+
+    let threads = cfg.concurrency.max(1);
+    let per_thread = cfg.requests.div_ceil(threads);
+    let started = Instant::now();
+    // (kind index, micros) samples per thread, merged after the join.
+    let mut merged: Vec<Vec<(usize, u64)>> = Vec::new();
+    let mut errors = 0u64;
+    let mut busy = 0u64;
+    let results: Vec<(Vec<(usize, u64)>, u64, u64)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let seqs = &seqs;
+            let pids = &pids;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(t as u64 + 1)));
+                let mut samples = Vec::with_capacity(per_thread);
+                let (mut errs, mut busies) = (0u64, 0u64);
+                let Ok(mut client) = Client::connect(addr) else {
+                    return (samples, 1, 0);
+                };
+                for _ in 0..per_thread {
+                    let roll = rng.gen_range(100);
+                    let seq = seqs[rng.gen_range(seqs.len() as u64) as usize];
+                    let pid = pids[rng.gen_range(pids.len() as u64) as usize];
+                    let kind = match roll {
+                        0..=39 => 0,
+                        40..=64 => 1,
+                        65..=79 => 2,
+                        80..=89 => 3,
+                        _ => 4,
+                    };
+                    let t0 = Instant::now();
+                    let res: Result<(), ServeError> = match kind {
+                        0 => client.by_sequence(artifact, seq, Some(1024)).map(|_| ()),
+                        1 => client.by_patient_visit(artifact, pid, |_| {}).map(|_| ()),
+                        2 => client
+                            .patients_with(artifact, seq, 0, u32::MAX, Some(4096))
+                            .map(|_| ()),
+                        3 => client.top_k(artifact, 16).map(|_| ()),
+                        _ => client.histogram(artifact, seq, 8).map(|_| ()),
+                    };
+                    match res {
+                        Ok(()) => samples.push((kind, t0.elapsed().as_micros() as u64)),
+                        Err(ServeError::Busy) => busies += 1,
+                        Err(ServeError::Io(_)) => {
+                            errs += 1;
+                            break; // connection gone — stop this thread
+                        }
+                        Err(_) => errs += 1,
+                    }
+                }
+                (samples, errs, busies)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (samples, errs, busies) in results {
+        errors += errs;
+        busy += busies;
+        merged.push(samples);
+    }
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+
+    let mut per_kind: Vec<Vec<u64>> = vec![Vec::new(); KINDS.len()];
+    for samples in &merged {
+        for &(kind, us) in samples {
+            per_kind[kind].push(us);
+        }
+    }
+    let mut kinds = Vec::new();
+    for (i, mut lat) in per_kind.into_iter().enumerate() {
+        if lat.is_empty() {
+            continue;
+        }
+        lat.sort_unstable();
+        kinds.push(KindStats {
+            kind: KINDS[i],
+            count: lat.len() as u64,
+            p50_us: percentile(&lat, 0.50),
+            p99_us: percentile(&lat, 0.99),
+        });
+    }
+    let total: u64 = kinds.iter().map(|k| k.count).sum();
+    Ok(WorkloadReport {
+        total_requests: total,
+        errors,
+        busy,
+        elapsed_secs: elapsed,
+        qps: total as f64 / elapsed,
+        kinds,
+    })
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn workload_report_serializes_per_kind_stats() {
+        let report = WorkloadReport {
+            total_requests: 10,
+            errors: 0,
+            busy: 1,
+            elapsed_secs: 2.0,
+            qps: 5.0,
+            kinds: vec![KindStats { kind: "by_sequence", count: 10, p50_us: 3, p99_us: 9 }],
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("qps").and_then(Json::as_f64), Some(5.0));
+        let by_seq = j.get("kinds").and_then(|k| k.get("by_sequence")).unwrap();
+        assert_eq!(by_seq.get("p99_us").and_then(Json::as_u64), Some(9));
+    }
+}

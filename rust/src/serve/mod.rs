@@ -1,0 +1,172 @@
+//! `tspm serve`: a concurrent query daemon over index artifacts.
+//!
+//! The query subsystem ([`crate::query`]) answers one question per
+//! process launch; this module keeps the artifacts open in a long-lived
+//! daemon so many focused questions against one mined corpus — the
+//! access shape targeted time-interval pattern mining motivates — cost
+//! a socket round-trip instead of a cold open. The pieces:
+//!
+//! * [`protocol`] — the wire format (below) and typed request/response
+//!   enums mirroring the [`crate::query::QueryService`] surface;
+//! * [`registry`] — several artifacts at once, routed by id, with
+//!   refcounted hot-swap (`register`/`retire` never interrupts a reader
+//!   that already holds its service);
+//! * [`server`] — thread-per-connection on `std::net`, bounded by a
+//!   [`crate::par::Semaphore`]: excess connections are *shed* with a
+//!   typed `busy` frame rather than queued unboundedly, idle
+//!   connections time out, and shutdown drains in-flight requests;
+//! * [`client`] — the blocking client used by `tspm client`, the e2e
+//!   suite, and the loopback benchmark workload.
+//!
+//! # Wire protocol — compatibility contract
+//!
+//! Like the on-disk artifact format documented in [`crate::query`],
+//! the wire protocol is a compatibility surface: independently built
+//! clients and servers interoperate as long as they honour the rules
+//! below. Breaking any of them requires bumping
+//! [`protocol::PROTOCOL_VERSION`].
+//!
+//! **Frame layout.** Every message in either direction is one frame:
+//!
+//! ```text
+//! bytes 0..4   magic          b"TSPC"
+//! byte  4      version        currently 1
+//! bytes 5..9   payload_len    u32, little-endian
+//! bytes 9..    payload        payload_len bytes of UTF-8 JSON
+//! ```
+//!
+//! **Version gate.** A receiver accepts versions in
+//! `MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION` and refuses anything else
+//! with an `unsupported_version` error before reading the payload.
+//! Within a version, unknown *object keys* must be ignored by readers
+//! (fields may be added without a bump); unknown request/response
+//! `"type"` values are errors.
+//!
+//! **Size guard.** Both sides bound `payload_len`
+//! ([`protocol::DEFAULT_MAX_FRAME_BYTES`] = 16 MiB by default) and
+//! refuse larger frames *before* allocating — a server whose answer
+//! would exceed the guard replies `frame_too_large` and suggests the
+//! request's `limit` field instead of sending the frame.
+//!
+//! **Requests.** The payload is an object with a `"type"` tag:
+//! `ping`, `list`, `stats`, `by_sequence`, `by_patient`,
+//! `patients_with`, `top_k`, `histogram`, `register`, `retire`,
+//! `shutdown`. Query requests carry an optional `"artifact"` id;
+//! `null`/absent routes to the sole registered artifact and is a
+//! `not_found` error when zero or several are registered.
+//!
+//! **Responses.** One frame per request — except `by_patient`, which
+//! streams `records_part` frames (`"last": false`) block-at-a-time and
+//! terminates with a `"last": true` frame carrying the total record
+//! count. Records travel as `[seq, pid, duration]` triples; `seq` fits
+//! JSON's 2^53 integer window by construction (`encode_seq < 10^14`).
+//! A connection that was shed by admission control receives exactly one
+//! `busy` frame and is closed.
+//!
+//! **Error codes.** `error` responses carry a machine-readable
+//! `"code"`: `bad_frame`, `unsupported_version`, `frame_too_large`,
+//! `bad_request`, `not_found`, `artifact`, `invalid`, `io`,
+//! `shutting_down`, `internal` (see [`protocol::ErrorCode`]). Codes are
+//! append-only: a code, once shipped, never changes meaning. After a
+//! `bad_request`, `not_found`, `artifact` or `invalid` error the
+//! connection stays usable; framing-level errors close it.
+
+pub mod client;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use client::{Client, WorkloadConfig, WorkloadReport};
+pub use protocol::{ErrorCode, FrameError, Request, Response};
+pub use registry::{ArtifactOpenError, Registry};
+pub use server::{ServeConfig, Server, ServerHandle};
+
+use crate::query::QueryError;
+
+/// Errors of the serving layer — wraps transport failures, typed remote
+/// errors, and the query layer's own failures.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Socket-level failure.
+    Io(std::io::Error),
+    /// The peer violated the framing or JSON contract.
+    Protocol(String),
+    /// The server answered with a typed `error` frame.
+    Remote { code: ErrorCode, message: String },
+    /// Admission control shed this connection.
+    Busy,
+    /// Unknown artifact id (or ambiguous default routing).
+    NotFound(String),
+    /// An artifact failed to open or answer.
+    Artifact(String),
+    /// A query-layer failure while answering locally.
+    Query(QueryError),
+}
+
+impl ServeError {
+    /// The [`ErrorCode`] this error maps to on the wire.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            ServeError::Io(_) => ErrorCode::Io,
+            ServeError::Protocol(_) => ErrorCode::BadFrame,
+            ServeError::Remote { code, .. } => *code,
+            ServeError::Busy => ErrorCode::Internal, // busy is its own frame type
+            ServeError::NotFound(_) => ErrorCode::NotFound,
+            ServeError::Artifact(_) => ErrorCode::Artifact,
+            ServeError::Query(QueryError::Io(_)) => ErrorCode::Io,
+            ServeError::Query(QueryError::Artifact(_)) => ErrorCode::Artifact,
+            ServeError::Query(QueryError::Invalid(_)) => ErrorCode::Invalid,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Io(e) => write!(f, "serve io error: {e}"),
+            ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ServeError::Remote { code, message } => write!(f, "server error [{code}]: {message}"),
+            ServeError::Busy => write!(f, "server busy: connection shed by admission control"),
+            ServeError::NotFound(m) => write!(f, "not found: {m}"),
+            ServeError::Artifact(m) => write!(f, "artifact error: {m}"),
+            ServeError::Query(e) => write!(f, "query error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Io(e) => Some(e),
+            ServeError::Query(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ServeError {
+    fn from(e: std::io::Error) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+impl From<QueryError> for ServeError {
+    fn from(e: QueryError) -> Self {
+        ServeError::Query(e)
+    }
+}
+
+impl From<FrameError> for ServeError {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Io(io) => ServeError::Io(io),
+            other => ServeError::Protocol(other.to_string()),
+        }
+    }
+}
+
+impl From<ArtifactOpenError> for ServeError {
+    fn from(e: ArtifactOpenError) -> Self {
+        ServeError::Artifact(e.to_string())
+    }
+}

@@ -1,0 +1,858 @@
+//! The wire protocol: versioned length-prefixed JSON frames.
+//!
+//! One **frame** is a 9-byte header followed by a UTF-8 JSON payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"TSPC"
+//! 4       1     protocol version (currently 1)
+//! 5       4     payload length, u32 little-endian
+//! 9       len   payload: one JSON object (a Request or a Response)
+//! ```
+//!
+//! Both sides enforce a **max-frame-size guard** ([`DEFAULT_MAX_FRAME_BYTES`]
+//! unless configured otherwise): a header announcing a larger payload is
+//! rejected *before* any payload byte is read, so a malicious or corrupt
+//! peer can never make the other side allocate unboundedly. The version
+//! byte gates every frame the same way the index-artifact manifest gates
+//! reads: a reader that sees a version outside
+//! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] refuses the frame
+//! with a typed error instead of misparsing it. See the
+//! [`crate::serve`] module docs for the full compatibility contract.
+//!
+//! [`Request`] mirrors the [`crate::query::QueryService`] surface
+//! one-for-one (`by_sequence` / `by_patient` / `patients_with` /
+//! `top_k` / `histogram`) plus registry administration (`register` /
+//! `retire` / `list` / `stats`) and lifecycle (`ping` / `shutdown`).
+//! Every response is a single frame except `by_patient`, which streams:
+//! zero or more `records_part` frames with `"last": false` followed by
+//! exactly one with `"last": true` carrying the total count.
+
+use crate::json::Json;
+use crate::mining::SeqRecord;
+use crate::query::{Histogram, HistogramBucket, QueryStats, SeqSupport};
+use std::io::{Read, Write};
+
+/// First four bytes of every frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"TSPC";
+/// The protocol version this build speaks (and stamps on every frame).
+pub const PROTOCOL_VERSION: u8 = 1;
+/// Oldest version this build still accepts.
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
+/// Frame header size: magic + version + payload length.
+pub const HEADER_BYTES: usize = 9;
+/// Default payload-size guard (16 MiB) — applied to reads *and* writes.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Typed framing failures, distinguished so the server can answer each
+/// with the right [`ErrorCode`] before closing the stream.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    /// The first four bytes were not [`FRAME_MAGIC`].
+    BadMagic([u8; 4]),
+    /// The version byte is outside the supported range.
+    UnsupportedVersion(u8),
+    /// The announced payload exceeds the configured guard.
+    TooLarge { len: usize, max: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:?} (expected {FRAME_MAGIC:?})")
+            }
+            FrameError::UnsupportedVersion(v) => write!(
+                f,
+                "unsupported protocol version {v} (this build speaks \
+                 {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION})"
+            ),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max} byte guard")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one frame. Fails (without writing anything) when `payload`
+/// exceeds `max_frame` — the caller decides whether to substitute a
+/// typed error response instead.
+pub fn write_frame(w: &mut impl Write, payload: &[u8], max_frame: usize) -> Result<(), FrameError> {
+    if payload.len() > max_frame {
+        return Err(FrameError::TooLarge { len: payload.len(), max: max_frame });
+    }
+    let mut hdr = [0u8; HEADER_BYTES];
+    hdr[..4].copy_from_slice(&FRAME_MAGIC);
+    hdr[4] = PROTOCOL_VERSION;
+    hdr[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload, validating magic, version and size guard.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<Vec<u8>, FrameError> {
+    let mut first = [0u8; 1];
+    r.read_exact(&mut first)?;
+    read_frame_resume(first[0], r, max_frame)
+}
+
+/// [`read_frame`] when the first header byte has already been read —
+/// the server's poll loop reads one byte with a short timeout (so it
+/// can notice idle connections and shutdown) and resumes here.
+pub fn read_frame_resume(
+    first: u8,
+    r: &mut impl Read,
+    max_frame: usize,
+) -> Result<Vec<u8>, FrameError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    hdr[0] = first;
+    r.read_exact(&mut hdr[1..])?;
+    if hdr[..4] != FRAME_MAGIC {
+        return Err(FrameError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    let version = hdr[4];
+    if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
+        return Err(FrameError::UnsupportedVersion(version));
+    }
+    let len = u32::from_le_bytes([hdr[5], hdr[6], hdr[7], hdr[8]]) as usize;
+    if len > max_frame {
+        return Err(FrameError::TooLarge { len, max: max_frame });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// error codes
+// ---------------------------------------------------------------------------
+
+/// Machine-readable error codes carried by `{"type":"error"}` frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame itself was malformed (bad magic, truncated header…).
+    BadFrame,
+    /// The frame's protocol version is outside the supported range.
+    UnsupportedVersion,
+    /// A frame (request or response) exceeded the size guard.
+    FrameTooLarge,
+    /// The payload was not a well-formed request.
+    BadRequest,
+    /// The named artifact is not registered (or the request named none
+    /// while several are registered).
+    NotFound,
+    /// The artifact exists but is corrupt / failed to answer
+    /// ([`crate::query::QueryError::Artifact`], or a registry open
+    /// failure on `register`).
+    Artifact,
+    /// A structurally invalid query (zero histogram buckets, …).
+    Invalid,
+    /// A server-side IO failure while answering.
+    Io,
+    /// The server is draining and accepts no new requests.
+    ShuttingDown,
+    /// Anything else — a bug, by contract.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::FrameTooLarge => "frame_too_large",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::Artifact => "artifact",
+            ErrorCode::Invalid => "invalid",
+            ErrorCode::Io => "io",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_frame" => ErrorCode::BadFrame,
+            "unsupported_version" => ErrorCode::UnsupportedVersion,
+            "frame_too_large" => ErrorCode::FrameTooLarge,
+            "bad_request" => ErrorCode::BadRequest,
+            "not_found" => ErrorCode::NotFound,
+            "artifact" => ErrorCode::Artifact,
+            "invalid" => ErrorCode::Invalid,
+            "io" => ErrorCode::Io,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// requests
+// ---------------------------------------------------------------------------
+
+/// One request frame. `artifact: None` routes to the only registered
+/// artifact (an error when several are registered).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    Ping,
+    /// Enumerate registered artifacts.
+    List,
+    /// Cache/IO counters of one artifact's service.
+    Stats { artifact: Option<String> },
+    /// All records of a sequence (optionally truncated to `limit` so
+    /// the single response frame stays under the size guard).
+    BySequence { artifact: Option<String>, seq: u64, limit: Option<usize> },
+    /// All records of a patient — the **streaming** query: the answer
+    /// arrives as `records_part` frames, never one buffer.
+    ByPatient { artifact: Option<String>, pid: u32 },
+    /// Distinct patients having `seq` within a duration range.
+    PatientsWith {
+        artifact: Option<String>,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+        limit: Option<usize>,
+    },
+    /// The `k` sequences with the most distinct patients.
+    TopK { artifact: Option<String>, k: usize },
+    /// Duration histogram of one sequence.
+    Histogram { artifact: Option<String>, seq: u64, buckets: usize },
+    /// Open an index directory and register it under `id` (hot-add).
+    Register { id: String, dir: String },
+    /// Unregister an artifact; in-flight readers finish undisturbed.
+    Retire { id: String },
+    /// Drain in-flight requests and exit the serve loop.
+    Shutdown,
+}
+
+impl Request {
+    /// Stable label for metrics / workload reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::List => "list",
+            Request::Stats { .. } => "stats",
+            Request::BySequence { .. } => "by_sequence",
+            Request::ByPatient { .. } => "by_patient",
+            Request::PatientsWith { .. } => "patients_with",
+            Request::TopK { .. } => "top_k",
+            Request::Histogram { .. } => "histogram",
+            Request::Register { .. } => "register",
+            Request::Retire { .. } => "retire",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let artifact = |a: &Option<String>| match a {
+            Some(s) => Json::from(s.clone()),
+            None => Json::Null,
+        };
+        match self {
+            Request::Ping => Json::obj(vec![("type", Json::from("ping"))]),
+            Request::List => Json::obj(vec![("type", Json::from("list"))]),
+            Request::Stats { artifact: a } => {
+                Json::obj(vec![("type", Json::from("stats")), ("artifact", artifact(a))])
+            }
+            Request::BySequence { artifact: a, seq, limit } => Json::obj(vec![
+                ("type", Json::from("by_sequence")),
+                ("artifact", artifact(a)),
+                ("seq", Json::from(*seq)),
+                ("limit", opt_num(*limit)),
+            ]),
+            Request::ByPatient { artifact: a, pid } => Json::obj(vec![
+                ("type", Json::from("by_patient")),
+                ("artifact", artifact(a)),
+                ("pid", Json::from(*pid as u64)),
+            ]),
+            Request::PatientsWith { artifact: a, seq, dur_min, dur_max, limit } => Json::obj(vec![
+                ("type", Json::from("patients_with")),
+                ("artifact", artifact(a)),
+                ("seq", Json::from(*seq)),
+                ("dur_min", Json::from(*dur_min as u64)),
+                ("dur_max", Json::from(*dur_max as u64)),
+                ("limit", opt_num(*limit)),
+            ]),
+            Request::TopK { artifact: a, k } => Json::obj(vec![
+                ("type", Json::from("top_k")),
+                ("artifact", artifact(a)),
+                ("k", Json::from(*k)),
+            ]),
+            Request::Histogram { artifact: a, seq, buckets } => Json::obj(vec![
+                ("type", Json::from("histogram")),
+                ("artifact", artifact(a)),
+                ("seq", Json::from(*seq)),
+                ("buckets", Json::from(*buckets)),
+            ]),
+            Request::Register { id, dir } => Json::obj(vec![
+                ("type", Json::from("register")),
+                ("id", Json::from(id.clone())),
+                ("dir", Json::from(dir.clone())),
+            ]),
+            Request::Retire { id } => {
+                Json::obj(vec![("type", Json::from("retire")), ("id", Json::from(id.clone()))])
+            }
+            Request::Shutdown => Json::obj(vec![("type", Json::from("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let ty = j.get("type").and_then(Json::as_str).ok_or("request has no \"type\"")?;
+        let artifact = || -> Option<String> {
+            j.get("artifact").and_then(Json::as_str).map(str::to_string)
+        };
+        Ok(match ty {
+            "ping" => Request::Ping,
+            "list" => Request::List,
+            "stats" => Request::Stats { artifact: artifact() },
+            "by_sequence" => Request::BySequence {
+                artifact: artifact(),
+                seq: req_u64(j, "seq")?,
+                limit: opt_usize(j, "limit")?,
+            },
+            "by_patient" => Request::ByPatient {
+                artifact: artifact(),
+                pid: req_u64(j, "pid")? as u32,
+            },
+            "patients_with" => Request::PatientsWith {
+                artifact: artifact(),
+                seq: req_u64(j, "seq")?,
+                dur_min: req_u64(j, "dur_min")? as u32,
+                dur_max: req_u64(j, "dur_max")? as u32,
+                limit: opt_usize(j, "limit")?,
+            },
+            "top_k" => Request::TopK { artifact: artifact(), k: req_u64(j, "k")? as usize },
+            "histogram" => Request::Histogram {
+                artifact: artifact(),
+                seq: req_u64(j, "seq")?,
+                buckets: req_u64(j, "buckets")? as usize,
+            },
+            "register" => Request::Register {
+                id: req_str(j, "id")?,
+                dir: req_str(j, "dir")?,
+            },
+            "retire" => Request::Retire { id: req_str(j, "id")? },
+            "shutdown" => Request::Shutdown,
+            other => return Err(format!("unknown request type {other:?}")),
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string_compact().into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Request, String> {
+        let text = std::str::from_utf8(payload).map_err(|e| format!("payload not UTF-8: {e}"))?;
+        let j = Json::parse(text).map_err(|e| format!("payload not JSON: {e}"))?;
+        Request::from_json(&j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// responses
+// ---------------------------------------------------------------------------
+
+/// One registered artifact's identity row in a `list` answer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub id: String,
+    pub records: u64,
+    pub sequences: u64,
+    pub patients: u32,
+    pub version: u64,
+}
+
+/// One response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    /// Acknowledgement of `register` / `retire` / `shutdown`.
+    Ok,
+    /// Admission control shed this connection — retry later.
+    Busy,
+    Error { code: ErrorCode, message: String },
+    Artifacts(Vec<ArtifactInfo>),
+    Stats { artifact: String, stats: QueryStats },
+    /// Complete `by_sequence` / truncated answer; `total` is the full
+    /// count before any `limit` was applied.
+    Records { records: Vec<SeqRecord>, total: u64 },
+    /// One chunk of a streaming `by_patient` answer. The final frame has
+    /// `last: true`, an empty record list and the stream's total count.
+    RecordsPart { records: Vec<SeqRecord>, last: bool, total: Option<u64> },
+    Patients { patients: Vec<u32>, total: u64 },
+    TopK(Vec<SeqSupport>),
+    Histogram(Histogram),
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Pong => Json::obj(vec![("type", Json::from("pong"))]),
+            Response::Ok => Json::obj(vec![("type", Json::from("ok"))]),
+            Response::Busy => Json::obj(vec![("type", Json::from("busy"))]),
+            Response::Error { code, message } => Json::obj(vec![
+                ("type", Json::from("error")),
+                ("code", Json::from(code.as_str())),
+                ("message", Json::from(message.clone())),
+            ]),
+            Response::Artifacts(infos) => Json::obj(vec![
+                ("type", Json::from("artifacts")),
+                (
+                    "artifacts",
+                    Json::Arr(
+                        infos
+                            .iter()
+                            .map(|a| {
+                                Json::obj(vec![
+                                    ("id", Json::from(a.id.clone())),
+                                    ("records", Json::from(a.records)),
+                                    ("sequences", Json::from(a.sequences)),
+                                    ("patients", Json::from(a.patients as u64)),
+                                    ("version", Json::from(a.version)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Stats { artifact, stats } => Json::obj(vec![
+                ("type", Json::from("stats")),
+                ("artifact", Json::from(artifact.clone())),
+                ("hits", Json::from(stats.hits)),
+                ("misses", Json::from(stats.misses)),
+                ("evictions", Json::from(stats.evictions)),
+                ("cached_entries", Json::from(stats.cached_entries)),
+                ("cached_bytes", Json::from(stats.cached_bytes)),
+                ("logical_bytes_read", Json::from(stats.logical_bytes_read)),
+            ]),
+            Response::Records { records, total } => Json::obj(vec![
+                ("type", Json::from("records")),
+                ("records", records_json(records)),
+                ("total", Json::from(*total)),
+            ]),
+            Response::RecordsPart { records, last, total } => Json::obj(vec![
+                ("type", Json::from("records_part")),
+                ("records", records_json(records)),
+                ("last", Json::Bool(*last)),
+                (
+                    "total",
+                    match total {
+                        Some(t) => Json::from(*t),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+            Response::Patients { patients, total } => Json::obj(vec![
+                ("type", Json::from("patients")),
+                ("patients", Json::Arr(patients.iter().map(|&p| Json::from(p as u64)).collect())),
+                ("total", Json::from(*total)),
+            ]),
+            Response::TopK(rows) => Json::obj(vec![
+                ("type", Json::from("top_k")),
+                (
+                    "rows",
+                    Json::Arr(
+                        rows.iter()
+                            .map(|r| {
+                                Json::Arr(vec![
+                                    Json::from(r.seq),
+                                    Json::from(r.patients as u64),
+                                    Json::from(r.records),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Histogram(h) => Json::obj(vec![
+                ("type", Json::from("histogram")),
+                ("seq", Json::from(h.seq)),
+                ("dur_min", Json::from(h.dur_min as u64)),
+                ("dur_max", Json::from(h.dur_max as u64)),
+                ("total", Json::from(h.total)),
+                (
+                    "buckets",
+                    Json::Arr(
+                        h.buckets
+                            .iter()
+                            .map(|b| {
+                                Json::Arr(vec![
+                                    Json::from(b.lo as u64),
+                                    Json::from(b.hi as u64),
+                                    Json::from(b.count),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        let ty = j.get("type").and_then(Json::as_str).ok_or("response has no \"type\"")?;
+        Ok(match ty {
+            "pong" => Response::Pong,
+            "ok" => Response::Ok,
+            "busy" => Response::Busy,
+            "error" => {
+                let code_str = req_str(j, "code")?;
+                Response::Error {
+                    code: ErrorCode::parse(&code_str)
+                        .ok_or_else(|| format!("unknown error code {code_str:?}"))?,
+                    message: req_str(j, "message")?,
+                }
+            }
+            "artifacts" => {
+                let arr = j.get("artifacts").and_then(Json::as_arr).ok_or("no artifacts")?;
+                let mut infos = Vec::with_capacity(arr.len());
+                for a in arr {
+                    infos.push(ArtifactInfo {
+                        id: req_str(a, "id")?,
+                        records: req_u64(a, "records")?,
+                        sequences: req_u64(a, "sequences")?,
+                        patients: req_u64(a, "patients")? as u32,
+                        version: req_u64(a, "version")?,
+                    });
+                }
+                Response::Artifacts(infos)
+            }
+            "stats" => Response::Stats {
+                artifact: req_str(j, "artifact")?,
+                stats: QueryStats {
+                    hits: req_u64(j, "hits")?,
+                    misses: req_u64(j, "misses")?,
+                    evictions: req_u64(j, "evictions")?,
+                    cached_entries: req_u64(j, "cached_entries")? as usize,
+                    cached_bytes: req_u64(j, "cached_bytes")? as usize,
+                    logical_bytes_read: req_u64(j, "logical_bytes_read")?,
+                },
+            },
+            "records" => Response::Records {
+                records: records_from_json(j.get("records"))?,
+                total: req_u64(j, "total")?,
+            },
+            "records_part" => Response::RecordsPart {
+                records: records_from_json(j.get("records"))?,
+                last: j.get("last").and_then(Json::as_bool).ok_or("no \"last\"")?,
+                total: match j.get("total") {
+                    Some(Json::Null) | None => None,
+                    Some(t) => Some(t.as_u64().ok_or("bad \"total\"")?),
+                },
+            },
+            "patients" => {
+                let arr = j.get("patients").and_then(Json::as_arr).ok_or("no patients")?;
+                let mut patients = Vec::with_capacity(arr.len());
+                for p in arr {
+                    patients.push(p.as_u64().ok_or("bad patient id")? as u32);
+                }
+                Response::Patients { patients, total: req_u64(j, "total")? }
+            }
+            "top_k" => {
+                let arr = j.get("rows").and_then(Json::as_arr).ok_or("no rows")?;
+                let mut rows = Vec::with_capacity(arr.len());
+                for r in arr {
+                    let t = r.as_arr().filter(|t| t.len() == 3).ok_or("bad top_k row")?;
+                    rows.push(SeqSupport {
+                        seq: t[0].as_u64().ok_or("bad seq")?,
+                        patients: t[1].as_u64().ok_or("bad patients")? as u32,
+                        records: t[2].as_u64().ok_or("bad records")?,
+                    });
+                }
+                Response::TopK(rows)
+            }
+            "histogram" => {
+                let arr = j.get("buckets").and_then(Json::as_arr).ok_or("no buckets")?;
+                let mut buckets = Vec::with_capacity(arr.len());
+                for b in arr {
+                    let t = b.as_arr().filter(|t| t.len() == 3).ok_or("bad bucket")?;
+                    buckets.push(HistogramBucket {
+                        lo: t[0].as_u64().ok_or("bad lo")? as u32,
+                        hi: t[1].as_u64().ok_or("bad hi")? as u32,
+                        count: t[2].as_u64().ok_or("bad count")?,
+                    });
+                }
+                Response::Histogram(Histogram {
+                    seq: req_u64(j, "seq")?,
+                    dur_min: req_u64(j, "dur_min")? as u32,
+                    dur_max: req_u64(j, "dur_max")? as u32,
+                    total: req_u64(j, "total")?,
+                    buckets,
+                })
+            }
+            other => return Err(format!("unknown response type {other:?}")),
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string_compact().into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Response, String> {
+        let text = std::str::from_utf8(payload).map_err(|e| format!("payload not UTF-8: {e}"))?;
+        let j = Json::parse(text).map_err(|e| format!("payload not JSON: {e}"))?;
+        Response::from_json(&j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers
+// ---------------------------------------------------------------------------
+
+fn opt_num(v: Option<usize>) -> Json {
+    match v {
+        Some(n) => Json::from(n),
+        None => Json::Null,
+    }
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing or bad \"{key}\""))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing or bad \"{key}\""))
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_u64().ok_or_else(|| format!("bad \"{key}\""))? as usize)),
+    }
+}
+
+/// Records travel as compact `[seq, pid, duration]` triples. `seq`
+/// values are bounded by the `encode_seq` pairing (< 10^14), well under
+/// the 2^53 JSON-number precision limit [`Json::as_u64`] enforces.
+fn records_json(records: &[SeqRecord]) -> Json {
+    Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                Json::Arr(vec![
+                    Json::from(r.seq),
+                    Json::from(r.pid as u64),
+                    Json::from(r.duration as u64),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn records_from_json(j: Option<&Json>) -> Result<Vec<SeqRecord>, String> {
+    let arr = j.and_then(Json::as_arr).ok_or("missing or bad \"records\"")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for r in arr {
+        let t = r.as_arr().filter(|t| t.len() == 3).ok_or("bad record triple")?;
+        out.push(SeqRecord {
+            seq: t[0].as_u64().ok_or("bad record seq")?,
+            pid: t[1].as_u64().ok_or("bad record pid")? as u32,
+            duration: t[2].as_u64().ok_or("bad record duration")? as u32,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_req(r: Request) {
+        let bytes = r.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), r);
+    }
+
+    fn round_trip_resp(r: Response) {
+        let bytes = r.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), r);
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        round_trip_req(Request::Ping);
+        round_trip_req(Request::List);
+        round_trip_req(Request::Stats { artifact: None });
+        round_trip_req(Request::Stats { artifact: Some("idx".into()) });
+        round_trip_req(Request::BySequence { artifact: None, seq: 120_000_042, limit: None });
+        round_trip_req(Request::BySequence {
+            artifact: Some("a".into()),
+            seq: 7,
+            limit: Some(100),
+        });
+        round_trip_req(Request::ByPatient { artifact: Some("a".into()), pid: 42 });
+        round_trip_req(Request::PatientsWith {
+            artifact: None,
+            seq: 3,
+            dur_min: 0,
+            dur_max: u32::MAX,
+            limit: Some(5),
+        });
+        round_trip_req(Request::TopK { artifact: None, k: 10 });
+        round_trip_req(Request::Histogram { artifact: None, seq: 9, buckets: 4 });
+        round_trip_req(Request::Register { id: "b".into(), dir: "/tmp/idx".into() });
+        round_trip_req(Request::Retire { id: "b".into() });
+        round_trip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_response_round_trips() {
+        let rec = SeqRecord { seq: 120_000_042, pid: 7, duration: 365 };
+        round_trip_resp(Response::Pong);
+        round_trip_resp(Response::Ok);
+        round_trip_resp(Response::Busy);
+        round_trip_resp(Response::Error {
+            code: ErrorCode::NotFound,
+            message: "no artifact \"x\"".into(),
+        });
+        round_trip_resp(Response::Artifacts(vec![ArtifactInfo {
+            id: "idx".into(),
+            records: 100,
+            sequences: 10,
+            patients: 5,
+            version: 2,
+        }]));
+        round_trip_resp(Response::Stats {
+            artifact: "idx".into(),
+            stats: QueryStats {
+                hits: 1,
+                misses: 2,
+                evictions: 3,
+                cached_entries: 4,
+                cached_bytes: 5,
+                logical_bytes_read: 6,
+            },
+        });
+        round_trip_resp(Response::Records { records: vec![rec, rec], total: 2 });
+        round_trip_resp(Response::RecordsPart { records: vec![rec], last: false, total: None });
+        round_trip_resp(Response::RecordsPart { records: vec![], last: true, total: Some(9) });
+        round_trip_resp(Response::Patients { patients: vec![1, 2, 3], total: 3 });
+        round_trip_resp(Response::TopK(vec![SeqSupport { seq: 9, patients: 4, records: 12 }]));
+        round_trip_resp(Response::Histogram(Histogram {
+            seq: 9,
+            dur_min: 5,
+            dur_max: 500,
+            total: 12,
+            buckets: vec![HistogramBucket { lo: 5, hi: 128, count: 4 }],
+        }));
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_byte_pipe() {
+        let payload = Request::Ping.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload, 1024).unwrap();
+        assert_eq!(wire.len(), HEADER_BYTES + payload.len());
+        let mut r = &wire[..];
+        let got = read_frame(&mut r, 1024).unwrap();
+        assert_eq!(got, payload);
+        assert!(r.is_empty(), "nothing left on the wire");
+    }
+
+    #[test]
+    fn oversized_frames_are_refused_on_both_sides() {
+        let payload = vec![b'x'; 100];
+        let mut wire = Vec::new();
+        assert!(matches!(
+            write_frame(&mut wire, &payload, 99),
+            Err(FrameError::TooLarge { len: 100, max: 99 })
+        ));
+        assert!(wire.is_empty(), "nothing was written");
+        // A header announcing more than the guard is rejected before the
+        // payload is read (or allocated).
+        write_frame(&mut wire, &payload, 1024).unwrap();
+        let mut r = &wire[..];
+        assert!(matches!(
+            read_frame(&mut r, 99),
+            Err(FrameError::TooLarge { len: 100, max: 99 })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"{}", 1024).unwrap();
+        let mut garbled = wire.clone();
+        garbled[0] = b'X';
+        assert!(matches!(read_frame(&mut &garbled[..], 1024), Err(FrameError::BadMagic(_))));
+        let mut future = wire.clone();
+        future[4] = PROTOCOL_VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut &future[..], 1024),
+            Err(FrameError::UnsupportedVersion(v)) if v == PROTOCOL_VERSION + 1
+        ));
+        let mut ancient = wire;
+        ancient[4] = 0;
+        assert!(matches!(
+            read_frame(&mut &ancient[..], 1024),
+            Err(FrameError::UnsupportedVersion(0))
+        ));
+    }
+
+    #[test]
+    fn truncated_frame_is_an_io_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"{\"type\":\"ping\"}", 1024).unwrap();
+        wire.truncate(wire.len() - 3);
+        assert!(matches!(read_frame(&mut &wire[..], 1024), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn malformed_payloads_are_decode_errors() {
+        assert!(Request::decode(b"not json").is_err());
+        assert!(Request::decode(b"{\"type\":\"warp\"}").is_err());
+        assert!(Request::decode(b"{\"no_type\":1}").is_err());
+        assert!(Response::decode(b"{\"type\":\"error\",\"code\":\"weird\",\"message\":\"m\"}")
+            .is_err());
+        // by_sequence without its seq
+        assert!(Request::decode(b"{\"type\":\"by_sequence\"}").is_err());
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::FrameTooLarge,
+            ErrorCode::BadRequest,
+            ErrorCode::NotFound,
+            ErrorCode::Artifact,
+            ErrorCode::Invalid,
+            ErrorCode::Io,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+}

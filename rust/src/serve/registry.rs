@@ -1,0 +1,287 @@
+//! Multi-artifact registry with refcounted hot-swap.
+//!
+//! The daemon serves several index artifacts at once, each behind its
+//! own [`QueryService`] (so caches and stats stay per-artifact). The
+//! registry is a `RwLock<BTreeMap<id, Arc<QueryService>>>`:
+//!
+//! * **route** takes the read lock just long enough to clone one `Arc`,
+//!   then answers the query entirely outside the lock;
+//! * **register / retire** take the write lock only to mutate the map.
+//!
+//! Retiring therefore never interrupts an in-flight reader: the reader
+//! holds its own `Arc` clone, and the service (plus its mmap-free file
+//! handles) is dropped only when the last clone goes away. A freshly
+//! registered artifact is visible to the *next* `route` call — there is
+//! no epoch machinery because the services are immutable once opened.
+
+use crate::query::{QueryError, QueryService};
+use crate::serve::protocol::ArtifactInfo;
+use crate::serve::ServeError;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+/// An artifact directory that could not be opened — keeps the path so
+/// callers (the `tspm query` CLI, serve's `register` handler) can name
+/// it in the user-facing message and exit-code mapping.
+#[derive(Debug)]
+pub struct ArtifactOpenError {
+    pub dir: PathBuf,
+    pub source: QueryError,
+}
+
+impl std::fmt::Display for ArtifactOpenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot open index artifact at {}: {}", self.dir.display(), self.source)
+    }
+}
+
+impl std::error::Error for ArtifactOpenError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
+/// Open one artifact directory as a [`QueryService`], tagging failures
+/// with the offending path. `cache_bytes` sizes the result cache.
+pub fn open_service(dir: &Path, cache_bytes: usize) -> Result<QueryService, ArtifactOpenError> {
+    QueryService::open_with_cache(dir, cache_bytes)
+        .map_err(|source| ArtifactOpenError { dir: dir.to_path_buf(), source })
+}
+
+/// Routes requests to registered artifacts; see the module docs for the
+/// hot-swap contract.
+pub struct Registry {
+    services: RwLock<BTreeMap<String, Arc<QueryService>>>,
+    cache_bytes: usize,
+}
+
+impl Registry {
+    /// An empty registry whose future `open_and_register` calls size
+    /// each service's cache at `cache_bytes`.
+    pub fn new(cache_bytes: usize) -> Registry {
+        Registry { services: RwLock::new(BTreeMap::new()), cache_bytes }
+    }
+
+    /// Open `dir` and register it under `id`.
+    pub fn open_and_register(&self, id: &str, dir: &Path) -> Result<(), ServeError> {
+        let svc = open_service(dir, self.cache_bytes)?;
+        self.register(id, Arc::new(svc))
+    }
+
+    /// Register an already-open service. Duplicate ids are refused (use
+    /// retire-then-register to replace an artifact).
+    pub fn register(&self, id: &str, svc: Arc<QueryService>) -> Result<(), ServeError> {
+        let mut map = self.services.write().unwrap();
+        if map.contains_key(id) {
+            return Err(ServeError::Artifact(format!(
+                "artifact id {id:?} is already registered"
+            )));
+        }
+        map.insert(id.to_string(), svc);
+        Ok(())
+    }
+
+    /// Unregister `id`; returns whether it was present. In-flight
+    /// readers holding the `Arc` finish undisturbed.
+    pub fn retire(&self, id: &str) -> bool {
+        self.services.write().unwrap().remove(id).is_some()
+    }
+
+    /// Resolve a request's artifact id to a service. `None` routes to
+    /// the sole registered artifact; when zero or several are
+    /// registered the caller must name one, and the error lists the
+    /// known ids so a client can self-correct.
+    pub fn route(&self, id: Option<&str>) -> Result<Arc<QueryService>, ServeError> {
+        self.route_entry(id).map(|(_, svc)| svc)
+    }
+
+    /// [`Registry::route`] plus the resolved id — for responses that
+    /// echo the artifact name (`stats`).
+    pub fn route_entry(&self, id: Option<&str>) -> Result<(String, Arc<QueryService>), ServeError> {
+        let map = self.services.read().unwrap();
+        match id {
+            Some(id) => map.get_key_value(id).map(|(k, v)| (k.clone(), v.clone())).ok_or_else(
+                || {
+                    ServeError::NotFound(format!(
+                        "no artifact {id:?} (registered: {})",
+                        ids_for_display(&map)
+                    ))
+                },
+            ),
+            None => {
+                if map.len() == 1 {
+                    let (k, v) = map.iter().next().unwrap();
+                    Ok((k.clone(), v.clone()))
+                } else {
+                    Err(ServeError::NotFound(format!(
+                        "request names no artifact and {} are registered \
+                         (registered: {})",
+                        map.len(),
+                        ids_for_display(&map)
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.services.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.services.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.services.read().unwrap().is_empty()
+    }
+
+    /// Identity rows for the `list` response.
+    pub fn describe(&self) -> Vec<ArtifactInfo> {
+        self.services
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(id, svc)| {
+                let idx = svc.index();
+                ArtifactInfo {
+                    id: id.clone(),
+                    records: idx.total_records,
+                    sequences: idx.distinct_seqs(),
+                    patients: idx.num_patients,
+                    version: idx.version,
+                }
+            })
+            .collect()
+    }
+}
+
+fn ids_for_display(map: &BTreeMap<String, Arc<QueryService>>) -> String {
+    if map.is_empty() {
+        "none".to_string()
+    } else {
+        map.keys().cloned().collect::<Vec<_>>().join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::SeqRecord;
+    use crate::query::index::{build, IndexConfig};
+    use crate::seqstore::{self, SeqFileSet};
+    use crate::serve::protocol::ErrorCode;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fixture(dir: &Path, n_pids: u32) -> PathBuf {
+        let mut records = Vec::new();
+        for pid in 0..n_pids {
+            for s in 0..4u64 {
+                records.push(SeqRecord { seq: s * 10 + 1, pid, duration: s as u32 * 7 });
+            }
+        }
+        records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        let path = dir.join("in.tspm");
+        seqstore::write_file(&path, &records).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: records.len() as u64,
+            num_patients: n_pids,
+            num_phenx: 4,
+        };
+        let out = dir.join("index");
+        build(&input, &out, &IndexConfig { block_records: 64, pid_index: true }, None).unwrap();
+        out
+    }
+
+    #[test]
+    fn route_by_id_and_default_routing() {
+        let dir = tmpdir("route");
+        let idx = fixture(&dir, 3);
+        let reg = Registry::new(1 << 16);
+        reg.open_and_register("a", &idx).unwrap();
+        // Sole artifact: None routes to it.
+        assert!(reg.route(None).is_ok());
+        assert!(reg.route(Some("a")).is_ok());
+        let err = reg.route(Some("ghost")).unwrap_err();
+        assert_eq!(err.code(), ErrorCode::NotFound);
+        assert!(err.to_string().contains("ghost"), "{err}");
+        assert!(err.to_string().contains('a'), "lists known ids: {err}");
+        // Second artifact: None becomes ambiguous.
+        reg.open_and_register("b", &idx).unwrap();
+        assert_eq!(reg.route(None).unwrap_err().code(), ErrorCode::NotFound);
+        assert_eq!(reg.ids(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.describe().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_register_is_refused() {
+        let dir = tmpdir("dup");
+        let idx = fixture(&dir, 2);
+        let reg = Registry::new(1 << 16);
+        reg.open_and_register("a", &idx).unwrap();
+        let err = reg.open_and_register("a", &idx).unwrap_err();
+        assert_eq!(err.code(), ErrorCode::Artifact);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_failure_names_the_path() {
+        let missing = std::env::temp_dir().join("tspm_registry_no_such_artifact");
+        let _ = std::fs::remove_dir_all(&missing);
+        let err = open_service(&missing, 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("tspm_registry_no_such_artifact"), "names the path: {msg}");
+        // Registering it surfaces the same message through ServeError.
+        let reg = Registry::new(0);
+        let serr = reg.open_and_register("x", &missing).unwrap_err();
+        assert_eq!(serr.code(), ErrorCode::Artifact);
+        assert!(serr.to_string().contains("tspm_registry_no_such_artifact"), "{serr}");
+        assert!(reg.is_empty(), "failed register leaves the registry untouched");
+    }
+
+    #[test]
+    fn retire_never_interrupts_in_flight_readers() {
+        let dir = tmpdir("hotswap");
+        let idx = fixture(&dir, 4);
+        let reg = Registry::new(1 << 16);
+        reg.open_and_register("a", &idx).unwrap();
+
+        // A "reader" grabs its Arc, then the artifact is retired while
+        // the reader is mid-query.
+        let svc = reg.route(Some("a")).unwrap();
+        let retired = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                while !retired.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                // Post-retire: the held Arc still answers, byte-identically.
+                let rows = svc.top_k_by_support(4).unwrap();
+                assert_eq!(rows.len(), 4);
+                let recs = svc.by_patient(2).unwrap();
+                assert_eq!(recs.len(), 4);
+            });
+            assert!(reg.retire("a"));
+            assert!(!reg.retire("a"), "second retire is a no-op");
+            retired.store(true, Ordering::Release);
+        });
+        // New lookups see the retirement.
+        assert_eq!(reg.route(Some("a")).unwrap_err().code(), ErrorCode::NotFound);
+        // Re-register under the same id works after retirement.
+        reg.open_and_register("a", &idx).unwrap();
+        assert!(reg.route(Some("a")).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

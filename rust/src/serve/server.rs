@@ -1,0 +1,592 @@
+//! The serve loop: thread-per-connection with admission control.
+//!
+//! A [`Server`] owns a `TcpListener`, a shared [`Registry`], and a
+//! [`Semaphore`] of `max_conns` permits. The accept loop tries to take
+//! a permit for every incoming connection; when none is free the
+//! connection is **shed** — one `busy` frame, then closed — rather than
+//! queued, so a saturated daemon degrades with bounded latency instead
+//! of an unbounded backlog. Each admitted connection runs on its own
+//! thread, releasing the permit on exit (including panics, via a drop
+//! guard).
+//!
+//! Reads are polled: the handler waits for the first header byte with a
+//! short [`ServeConfig::poll_interval`] timeout so it can notice idle
+//! expiry and shutdown between requests, then switches to the full
+//! [`ServeConfig::idle_timeout`] for the frame remainder — a frame is
+//! never abandoned halfway, which would desynchronize the stream.
+//!
+//! Graceful shutdown ([`ServerHandle::shutdown`] or a `shutdown`
+//! request): set the flag, self-connect to wake the blocking
+//! `accept()`, stop admitting, then drain by acquiring every permit —
+//! which blocks until all in-flight handlers have finished their
+//! current request and exited.
+
+use crate::par::Semaphore;
+use crate::query::QueryError;
+use crate::serve::protocol::{
+    read_frame_resume, write_frame, ErrorCode, FrameError, Request, Response,
+};
+use crate::serve::registry::Registry;
+use crate::serve::ServeError;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Tunables for one serve loop.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Admission limit: concurrent connections beyond this are shed
+    /// with a `busy` frame.
+    pub max_conns: usize,
+    /// A connection idle longer than this is closed.
+    pub idle_timeout: Duration,
+    /// Granularity of the idle/shutdown poll between requests.
+    pub poll_interval: Duration,
+    /// Frame-size guard for reads and writes.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_conns: 64,
+            idle_timeout: Duration::from_secs(30),
+            poll_interval: Duration::from_millis(100),
+            max_frame_bytes: crate::serve::protocol::DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// Counters + shutdown flag shared by the accept loop, the handlers,
+/// and every [`ServerHandle`].
+struct ServerState {
+    shutdown: AtomicBool,
+    conns: Semaphore,
+    addr: SocketAddr,
+    served: AtomicU64,
+    shed: AtomicU64,
+    requests: AtomicU64,
+}
+
+impl ServerState {
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // Wake the blocking accept() so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// What one serve loop did, returned by [`Server::run`] after drain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeSummary {
+    /// Connections admitted.
+    pub served: u64,
+    /// Connections shed with `busy`.
+    pub shed: u64,
+    /// Requests answered (including error answers).
+    pub requests: u64,
+}
+
+/// Remote control for a running server: trigger shutdown from another
+/// thread, inspect the bound address.
+#[derive(Clone)]
+pub struct ServerHandle {
+    state: Arc<ServerState>,
+}
+
+impl ServerHandle {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Stop admitting, wake the accept loop, let in-flight requests
+    /// finish. Idempotent.
+    pub fn shutdown(&self) {
+        self.state.begin_shutdown();
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.state.shutdown.load(Ordering::Acquire)
+    }
+}
+
+/// A bound (not yet running) serve loop.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    cfg: ServeConfig,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    pub fn bind(addr: &str, registry: Arc<Registry>, cfg: ServeConfig) -> Result<Server, ServeError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            shutdown: AtomicBool::new(false),
+            conns: Semaphore::new(cfg.max_conns),
+            addr: local,
+            served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        });
+        Ok(Server { listener, registry, cfg, state })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { state: Arc::clone(&self.state) }
+    }
+
+    /// Run the accept loop until shutdown, then drain and report.
+    pub fn run(self) -> Result<ServeSummary, ServeError> {
+        for incoming in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::Acquire) {
+                break; // drop the (possibly wake-up) connection unanswered
+            }
+            let mut stream = match incoming {
+                Ok(s) => s,
+                Err(_) => continue, // transient accept failure
+            };
+            if !self.state.conns.try_acquire() {
+                self.state.shed.fetch_add(1, Ordering::Relaxed);
+                // Best-effort: tell the peer it was shed, then close.
+                let _ = write_frame(&mut stream, &Response::Busy.encode(), self.cfg.max_frame_bytes);
+                continue;
+            }
+            self.state.served.fetch_add(1, Ordering::Relaxed);
+            let registry = Arc::clone(&self.registry);
+            let state = Arc::clone(&self.state);
+            let cfg = self.cfg.clone();
+            std::thread::spawn(move || {
+                let _permit = PermitGuard { state: &state };
+                handle_conn(stream, &registry, &cfg, &state);
+            });
+        }
+        // Drain: every permit reacquired == every handler exited.
+        for _ in 0..self.cfg.max_conns {
+            self.state.conns.acquire();
+        }
+        Ok(ServeSummary {
+            served: self.state.served.load(Ordering::Relaxed),
+            shed: self.state.shed.load(Ordering::Relaxed),
+            requests: self.state.requests.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Run on a background thread — the in-process form the tests and
+    /// the loopback benchmark use.
+    pub fn spawn(self) -> (ServerHandle, std::thread::JoinHandle<Result<ServeSummary, ServeError>>) {
+        let handle = self.handle();
+        let join = std::thread::spawn(move || self.run());
+        (handle, join)
+    }
+}
+
+/// Releases one admission permit when the handler thread exits, even on
+/// panic.
+struct PermitGuard<'a> {
+    state: &'a ServerState,
+}
+
+impl Drop for PermitGuard<'_> {
+    fn drop(&mut self) {
+        self.state.conns.release();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, registry: &Registry, cfg: &ServeConfig, state: &ServerState) {
+    let _ = stream.set_nodelay(true);
+    let mut idle = Duration::ZERO;
+    loop {
+        if state.shutdown.load(Ordering::Acquire) {
+            break; // in-flight request already finished; admit no more
+        }
+        // Phase 1: wait for the first header byte with a short timeout
+        // so idle expiry and shutdown are noticed between requests.
+        let _ = stream.set_read_timeout(Some(cfg.poll_interval));
+        let mut first = [0u8; 1];
+        match stream.read(&mut first) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {}
+            Err(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+            {
+                idle += cfg.poll_interval;
+                if idle >= cfg.idle_timeout {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+        idle = Duration::ZERO;
+        // Phase 2: a frame has started — commit to reading it whole
+        // under the full timeout (abandoning a frame midway would
+        // desynchronize the stream).
+        let _ = stream.set_read_timeout(Some(cfg.idle_timeout));
+        let payload = match read_frame_resume(first[0], &mut stream, cfg.max_frame_bytes) {
+            Ok(p) => p,
+            Err(e) => {
+                let code = match &e {
+                    FrameError::BadMagic(_) => Some(ErrorCode::BadFrame),
+                    FrameError::UnsupportedVersion(_) => Some(ErrorCode::UnsupportedVersion),
+                    FrameError::TooLarge { .. } => Some(ErrorCode::FrameTooLarge),
+                    FrameError::Io(_) => None,
+                };
+                if let Some(code) = code {
+                    let resp = Response::Error { code, message: e.to_string() };
+                    let _ = write_frame(&mut stream, &resp.encode(), cfg.max_frame_bytes);
+                }
+                break; // framing errors close the connection
+            }
+        };
+        match answer(&mut stream, &payload, registry, cfg, state) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => break,
+        }
+    }
+}
+
+/// Decode and dispatch one request; `Ok(true)` keeps the connection.
+fn answer(
+    stream: &mut TcpStream,
+    payload: &[u8],
+    registry: &Registry,
+    cfg: &ServeConfig,
+    state: &ServerState,
+) -> Result<bool, FrameError> {
+    let req = match Request::decode(payload) {
+        Ok(r) => r,
+        Err(m) => {
+            // A malformed payload inside a well-formed frame: the
+            // stream is still in sync, so answer and keep going.
+            send(stream, &Response::Error { code: ErrorCode::BadRequest, message: m }, cfg)?;
+            return Ok(true);
+        }
+    };
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    match req {
+        Request::Ping => send(stream, &Response::Pong, cfg)?,
+        Request::List => send(stream, &Response::Artifacts(registry.describe()), cfg)?,
+        Request::Stats { artifact } => {
+            let resp = match registry.route_entry(artifact.as_deref()) {
+                Ok((id, svc)) => Response::Stats { artifact: id, stats: svc.stats() },
+                Err(e) => error_response(&e),
+            };
+            send(stream, &resp, cfg)?;
+        }
+        Request::BySequence { artifact, seq, limit } => {
+            let resp = registry
+                .route(artifact.as_deref())
+                .and_then(|svc| svc.by_sequence(seq).map_err(ServeError::from))
+                .map(|recs| {
+                    let total = recs.len() as u64;
+                    let records = match limit {
+                        Some(l) if recs.len() > l => recs[..l].to_vec(),
+                        _ => recs.as_ref().clone(),
+                    };
+                    Response::Records { records, total }
+                })
+                .unwrap_or_else(|e| error_response(&e));
+            send(stream, &resp, cfg)?;
+        }
+        Request::ByPatient { artifact, pid } => {
+            stream_by_patient(stream, registry, artifact.as_deref(), pid, cfg)?;
+        }
+        Request::PatientsWith { artifact, seq, dur_min, dur_max, limit } => {
+            let resp = registry
+                .route(artifact.as_deref())
+                .and_then(|svc| {
+                    svc.patients_with(seq, dur_min, dur_max).map_err(ServeError::from)
+                })
+                .map(|pids| {
+                    let total = pids.len() as u64;
+                    let patients = match limit {
+                        Some(l) if pids.len() > l => pids[..l].to_vec(),
+                        _ => pids.as_ref().clone(),
+                    };
+                    Response::Patients { patients, total }
+                })
+                .unwrap_or_else(|e| error_response(&e));
+            send(stream, &resp, cfg)?;
+        }
+        Request::TopK { artifact, k } => {
+            let resp = registry
+                .route(artifact.as_deref())
+                .and_then(|svc| svc.top_k_by_support(k).map_err(ServeError::from))
+                .map(|rows| Response::TopK(rows.as_ref().clone()))
+                .unwrap_or_else(|e| error_response(&e));
+            send(stream, &resp, cfg)?;
+        }
+        Request::Histogram { artifact, seq, buckets } => {
+            let resp = registry
+                .route(artifact.as_deref())
+                .and_then(|svc| svc.duration_histogram(seq, buckets).map_err(ServeError::from))
+                .map(|h| Response::Histogram(h.as_ref().clone()))
+                .unwrap_or_else(|e| error_response(&e));
+            send(stream, &resp, cfg)?;
+        }
+        Request::Register { id, dir } => {
+            let resp = match registry.open_and_register(&id, std::path::Path::new(&dir)) {
+                Ok(()) => Response::Ok,
+                Err(e) => error_response(&e),
+            };
+            send(stream, &resp, cfg)?;
+        }
+        Request::Retire { id } => {
+            let resp = if registry.retire(&id) {
+                Response::Ok
+            } else {
+                error_response(&ServeError::NotFound(format!("no artifact {id:?} to retire")))
+            };
+            send(stream, &resp, cfg)?;
+        }
+        Request::Shutdown => {
+            send(stream, &Response::Ok, cfg)?;
+            state.begin_shutdown();
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+/// Stream a `by_patient` answer block-at-a-time: the handler's live
+/// memory stays bounded by the artifact's block size however many
+/// records the patient has.
+fn stream_by_patient(
+    stream: &mut TcpStream,
+    registry: &Registry,
+    artifact: Option<&str>,
+    pid: u32,
+    cfg: &ServeConfig,
+) -> Result<(), FrameError> {
+    let svc = match registry.route(artifact) {
+        Ok(s) => s,
+        Err(e) => return send(stream, &error_response(&e), cfg),
+    };
+    /// Splits socket failures (fatal for the connection) from query
+    /// failures (reported in-band as a stream-terminating error frame).
+    enum StreamErr {
+        Frame(FrameError),
+        Query(QueryError),
+    }
+    impl From<QueryError> for StreamErr {
+        fn from(e: QueryError) -> Self {
+            StreamErr::Query(e)
+        }
+    }
+    let result = svc.by_patient_visit::<StreamErr>(pid, |chunk| {
+        let part =
+            Response::RecordsPart { records: chunk.to_vec(), last: false, total: None };
+        write_frame(stream, &part.encode(), cfg.max_frame_bytes).map_err(StreamErr::Frame)
+    });
+    match result {
+        Ok(total) => send(
+            stream,
+            &Response::RecordsPart { records: Vec::new(), last: true, total: Some(total) },
+            cfg,
+        ),
+        // In-band terminator: the client treats an error frame in place
+        // of a records_part as the end of the (failed) stream.
+        Err(StreamErr::Query(e)) => send(stream, &error_response(&ServeError::Query(e)), cfg),
+        Err(StreamErr::Frame(e)) => Err(e),
+    }
+}
+
+/// Write a response, substituting a typed `frame_too_large` error when
+/// the encoded payload would exceed the guard.
+fn send(stream: &mut TcpStream, resp: &Response, cfg: &ServeConfig) -> Result<(), FrameError> {
+    let payload = resp.encode();
+    match write_frame(stream, &payload, cfg.max_frame_bytes) {
+        Err(FrameError::TooLarge { len, max }) => {
+            let err = Response::Error {
+                code: ErrorCode::FrameTooLarge,
+                message: format!(
+                    "response of {len} bytes exceeds the {max} byte frame guard; \
+                     narrow the query or pass a \"limit\""
+                ),
+            };
+            write_frame(stream, &err.encode(), cfg.max_frame_bytes)
+        }
+        other => other,
+    }
+}
+
+fn error_response(e: &ServeError) -> Response {
+    Response::Error { code: e.code(), message: e.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::SeqRecord;
+    use crate::query::index::{build, IndexConfig};
+    use crate::seqstore::{self, SeqFileSet};
+    use crate::serve::client::Client;
+    use std::path::{Path, PathBuf};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("tspm_server_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fixture_index(dir: &Path) -> PathBuf {
+        let mut records = Vec::new();
+        for pid in 0..5u32 {
+            for s in [3u64, 17, 90] {
+                records.push(SeqRecord { seq: s, pid, duration: (s as u32) * 3 + pid });
+            }
+        }
+        records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        let path = dir.join("in.tspm");
+        seqstore::write_file(&path, &records).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: records.len() as u64,
+            num_patients: 5,
+            num_phenx: 4,
+        };
+        let out = dir.join("index");
+        build(&input, &out, &IndexConfig { block_records: 4, pid_index: true }, None).unwrap();
+        out
+    }
+
+    fn fast_cfg(max_conns: usize) -> ServeConfig {
+        ServeConfig {
+            max_conns,
+            idle_timeout: Duration::from_secs(5),
+            poll_interval: Duration::from_millis(5),
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn ping_list_query_shutdown_round_trip() {
+        let dir = tmpdir("smoke");
+        let idx = fixture_index(&dir);
+        let registry = Arc::new(Registry::new(1 << 16));
+        registry.open_and_register("idx", &idx).unwrap();
+        let server = Server::bind("127.0.0.1:0", registry, fast_cfg(4)).unwrap();
+        let addr = server.local_addr();
+        let (_handle, join) = server.spawn();
+
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        c.ping().unwrap();
+        let arts = c.list().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].id, "idx");
+        assert_eq!(arts[0].records, 15);
+        // Default routing works with a single artifact.
+        let (recs, total) = c.by_sequence(None, 17, None).unwrap();
+        assert_eq!(total, 5);
+        assert_eq!(recs.len(), 5);
+        assert!(recs.iter().all(|r| r.seq == 17));
+        // limit truncates the frame but reports the full total.
+        let (recs, total) = c.by_sequence(Some("idx"), 17, Some(2)).unwrap();
+        assert_eq!((recs.len(), total), (2, 5));
+        // Streaming by_patient equals the flat answer.
+        let streamed = c.by_patient(None, 2).unwrap();
+        assert_eq!(streamed.len(), 3);
+        assert!(streamed.iter().all(|r| r.pid == 2));
+        let rows = c.top_k(None, 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        let hist = c.histogram(None, 3, 4).unwrap();
+        assert_eq!(hist.total, 5);
+        let (pids, ptotal) = c.patients_with(None, 90, 0, u32::MAX, None).unwrap();
+        assert_eq!((pids.len() as u64, ptotal), (5, 5));
+        let (name, stats) = c.stats(None).unwrap();
+        assert_eq!(name, "idx");
+        assert!(stats.hits + stats.misses > 0);
+
+        c.shutdown().unwrap();
+        let summary = join.join().unwrap().unwrap();
+        assert!(summary.served >= 1);
+        assert!(summary.requests >= 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_artifact_is_a_typed_not_found() {
+        let dir = tmpdir("notfound");
+        let idx = fixture_index(&dir);
+        let registry = Arc::new(Registry::new(1 << 16));
+        registry.open_and_register("idx", &idx).unwrap();
+        let server = Server::bind("127.0.0.1:0", registry, fast_cfg(2)).unwrap();
+        let addr = server.local_addr();
+        let (handle, join) = server.spawn();
+
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let err = c.by_sequence(Some("ghost"), 17, None).unwrap_err();
+        match err {
+            ServeError::Remote { code, message } => {
+                assert_eq!(code, ErrorCode::NotFound);
+                assert!(message.contains("ghost"), "{message}");
+            }
+            other => panic!("expected typed remote NotFound, got {other}"),
+        }
+        // The connection survived the error answer.
+        c.ping().unwrap();
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_payload_keeps_the_connection_garbled_frame_closes_it() {
+        let dir = tmpdir("badreq");
+        let idx = fixture_index(&dir);
+        let registry = Arc::new(Registry::new(1 << 16));
+        registry.open_and_register("idx", &idx).unwrap();
+        let server = Server::bind("127.0.0.1:0", registry, fast_cfg(2)).unwrap();
+        let addr = server.local_addr();
+        let (handle, join) = server.spawn();
+
+        // A well-formed frame with a nonsense payload answers
+        // bad_request and keeps the stream usable.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        write_frame(&mut raw, b"{\"type\":\"warp\"}", 1024).unwrap();
+        let payload =
+            crate::serve::protocol::read_frame(&mut raw, DEFAULT_TEST_FRAME).unwrap();
+        match Response::decode(&payload).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("expected bad_request, got {other:?}"),
+        }
+        write_frame(&mut raw, &Request::Ping.encode(), 1024).unwrap();
+        let payload =
+            crate::serve::protocol::read_frame(&mut raw, DEFAULT_TEST_FRAME).unwrap();
+        assert_eq!(Response::decode(&payload).unwrap(), Response::Pong);
+
+        // Garbage bytes (bad magic) get a typed answer, then the server
+        // closes the connection.
+        use std::io::Write;
+        raw.write_all(b"XXXXYYYYZZZZ").unwrap();
+        raw.flush().unwrap();
+        let payload =
+            crate::serve::protocol::read_frame(&mut raw, DEFAULT_TEST_FRAME).unwrap();
+        match Response::decode(&payload).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadFrame),
+            other => panic!("expected bad_frame, got {other:?}"),
+        }
+        let mut rest = Vec::new();
+        raw.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server closed after the framing error");
+
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    const DEFAULT_TEST_FRAME: usize = 1 << 20;
+}

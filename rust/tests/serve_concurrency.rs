@@ -1,0 +1,420 @@
+//! Serving-layer concurrency smoke tests: N threads hammering one
+//! `QueryService` (directly, and through the serve loop via `Client`)
+//! must see byte-identical answers to a single-threaded run, the cache
+//! counters must balance (`hits + misses == lookups`), admission
+//! control must shed excess connections with a typed `busy`, artifact
+//! hot-swap must never interrupt in-flight readers, and streaming
+//! `by_patient` must hold block-bounded memory (MemTracker-asserted).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tspm_plus::metrics::MemTracker;
+use tspm_plus::mining::SeqRecord;
+use tspm_plus::query::{self, IndexConfig, QueryError, QueryService};
+use tspm_plus::rng::Rng;
+use tspm_plus::seqstore::{self, SeqFileSet, RECORD_BYTES};
+use tspm_plus::serve::{Client, ErrorCode, Registry, ServeConfig, ServeError, Server};
+
+/// Small blocks so even the fixture-sized artifacts span many of them.
+const BLOCK_RECORDS: usize = 32;
+const CACHE_BYTES: usize = 1 << 20;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tspm_serve_conc_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A random sorted multiset shaped like a screened run.
+fn random_sorted(seed: u64, n: usize, n_seqs: u64, n_pids: u64) -> Vec<SeqRecord> {
+    let mut r = Rng::new(seed);
+    let mut v: Vec<SeqRecord> = (0..n)
+        .map(|_| SeqRecord {
+            seq: r.gen_range(n_seqs),
+            pid: r.gen_range(n_pids) as u32,
+            duration: r.gen_range(350) as u32,
+        })
+        .collect();
+    v.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+    v
+}
+
+/// Spill `records` and build a v2 (pid-indexed) artifact under a fresh
+/// tmpdir; returns the index directory.
+fn build_artifact(name: &str, records: &[SeqRecord], num_patients: u32) -> PathBuf {
+    let dir = tmpdir(name);
+    let spill = dir.join("part_0.tspm");
+    seqstore::write_file(&spill, records).unwrap();
+    let input = SeqFileSet {
+        files: vec![spill],
+        total_records: records.len() as u64,
+        num_patients,
+        num_phenx: 0,
+    };
+    let out = dir.join("idx");
+    query::index::build(
+        &input,
+        &out,
+        &IndexConfig { block_records: BLOCK_RECORDS, pid_index: true },
+        None,
+    )
+    .unwrap();
+    out
+}
+
+/// Short poll so shed-permit release and shutdown are visible quickly.
+fn fast_cfg(max_conns: usize) -> ServeConfig {
+    ServeConfig {
+        max_conns,
+        poll_interval: Duration::from_millis(5),
+        idle_timeout: Duration::from_secs(10),
+        ..ServeConfig::default()
+    }
+}
+
+/// Probe sets exercising every query kind, including absent keys.
+fn probes(records: &[SeqRecord]) -> (Vec<u64>, Vec<u32>) {
+    let mut seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+    seqs.dedup();
+    let stride = (seqs.len() / 10).max(1);
+    let mut seq_probes: Vec<u64> = seqs.iter().step_by(stride).take(10).copied().collect();
+    seq_probes.push(999_999_999); // absent
+    let mut pid_probes: Vec<u32> = vec![0, 1, 2, 3, 5, 8, 13, 21, 34, 55];
+    pid_probes.push(9_999); // absent
+    (seq_probes, pid_probes)
+}
+
+// ---------------------------------------------------------------------------
+// 1. one shared QueryService under thread contention
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_service_answers_match_single_threaded_and_counters_balance() {
+    const THREADS: usize = 8;
+    let records = random_sorted(7, 6_000, 48, 64);
+    let dir = build_artifact("svc_contention", &records, 64);
+    let svc = Arc::new(QueryService::open_with_cache(&dir, CACHE_BYTES).unwrap());
+
+    // Single-threaded baseline from an *independent* service over the
+    // same artifact, so the contended instance's cache can't leak into
+    // the expected answers.
+    let base = QueryService::open_with_cache(&dir, CACHE_BYTES).unwrap();
+    let (seq_probes, pid_probes) = probes(&records);
+    let exp_seq: Vec<Vec<SeqRecord>> =
+        seq_probes.iter().map(|&s| (*base.by_sequence(s).unwrap()).clone()).collect();
+    let exp_pw: Vec<Vec<u32>> = seq_probes
+        .iter()
+        .map(|&s| (*base.patients_with(s, 0, 350).unwrap()).clone())
+        .collect();
+    let exp_hist: Vec<_> = seq_probes
+        .iter()
+        .map(|&s| (*base.duration_histogram(s, 8).unwrap()).clone())
+        .collect();
+    let exp_pid: Vec<Vec<SeqRecord>> =
+        pid_probes.iter().map(|&p| (*base.by_patient(p).unwrap()).clone()).collect();
+    let exp_topk = (*base.top_k_by_support(10).unwrap()).clone();
+
+    svc.reset_stats();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let svc = Arc::clone(&svc);
+            let (seq_probes, pid_probes) = (&seq_probes, &pid_probes);
+            let (exp_seq, exp_pw, exp_hist, exp_pid, exp_topk) =
+                (&exp_seq, &exp_pw, &exp_hist, &exp_pid, &exp_topk);
+            scope.spawn(move || {
+                // Each thread walks the probes in a different rotation so
+                // the cache sees genuinely interleaved access patterns.
+                for i in 0..seq_probes.len() {
+                    let j = (i + t) % seq_probes.len();
+                    let s = seq_probes[j];
+                    assert_eq!(*svc.by_sequence(s).unwrap(), exp_seq[j], "seq {s}");
+                    assert_eq!(*svc.patients_with(s, 0, 350).unwrap(), exp_pw[j]);
+                    assert_eq!(*svc.duration_histogram(s, 8).unwrap(), exp_hist[j]);
+                }
+                for i in 0..pid_probes.len() {
+                    let j = (i + t) % pid_probes.len();
+                    let p = pid_probes[j];
+                    assert_eq!(*svc.by_patient(p).unwrap(), exp_pid[j], "pid {p}");
+                    // The uncached streaming path must agree chunk-for-chunk.
+                    let mut streamed = Vec::new();
+                    let total = svc
+                        .by_patient_visit::<QueryError>(p, |chunk| {
+                            assert!(chunk.len() <= BLOCK_RECORDS);
+                            streamed.extend_from_slice(chunk);
+                            Ok(())
+                        })
+                        .unwrap();
+                    assert_eq!(streamed, exp_pid[j]);
+                    assert_eq!(total as usize, exp_pid[j].len());
+                }
+                assert_eq!(*svc.top_k_by_support(10).unwrap(), *exp_topk);
+            });
+        }
+    });
+
+    // Every cacheable call either hit or missed — nothing torn, nothing
+    // double-counted. (by_patient_visit bypasses the cache by contract.)
+    let lookups = (THREADS * (3 * seq_probes.len() + pid_probes.len() + 1)) as u64;
+    let st = svc.stats();
+    assert_eq!(st.hits + st.misses, lookups, "stats: {st:?}");
+    assert!(st.misses >= (3 * seq_probes.len() + pid_probes.len() + 1) as u64);
+}
+
+// ---------------------------------------------------------------------------
+// 2. the server loop under concurrent clients, ending in graceful drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_clients_get_single_threaded_answers_and_server_drains() {
+    const CLIENTS: usize = 6;
+    let records = random_sorted(11, 5_000, 40, 64);
+    let dir = build_artifact("srv_clients", &records, 64);
+    let direct = QueryService::open_with_cache(&dir, CACHE_BYTES).unwrap();
+    let (seq_probes, pid_probes) = probes(&records);
+
+    let registry = Arc::new(Registry::new(CACHE_BYTES));
+    registry.open_and_register("idx", &dir).unwrap();
+    let server = Server::bind("127.0.0.1:0", registry, fast_cfg(16)).unwrap();
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.spawn();
+
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let (addr, direct) = (&addr, &direct);
+            let (seq_probes, pid_probes) = (&seq_probes, &pid_probes);
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for i in 0..seq_probes.len() {
+                    let s = seq_probes[(i + t) % seq_probes.len()];
+                    let want = direct.by_sequence(s).unwrap();
+                    let (got, total) = c.by_sequence(None, s, None).unwrap();
+                    assert_eq!(got, *want, "seq {s}");
+                    assert_eq!(total as usize, want.len());
+                    // A limit truncates the page but reports the full total.
+                    let (page, lim_total) = c.by_sequence(None, s, Some(3)).unwrap();
+                    assert_eq!(page, want[..want.len().min(3)]);
+                    assert_eq!(lim_total as usize, want.len());
+                    let want_pw = direct.patients_with(s, 0, 350).unwrap();
+                    let (pw, pw_total) = c.patients_with(None, s, 0, 350, None).unwrap();
+                    assert_eq!(pw, *want_pw);
+                    assert_eq!(pw_total as usize, want_pw.len());
+                    assert_eq!(
+                        c.histogram(None, s, 8).unwrap(),
+                        *direct.duration_histogram(s, 8).unwrap()
+                    );
+                }
+                for i in 0..pid_probes.len() {
+                    let p = pid_probes[(i + t) % pid_probes.len()];
+                    let want = direct.by_patient(p).unwrap();
+                    let mut streamed = Vec::new();
+                    let total = c
+                        .by_patient_visit(None, p, |chunk| {
+                            assert!(chunk.len() <= BLOCK_RECORDS);
+                            streamed.extend_from_slice(chunk);
+                        })
+                        .unwrap();
+                    assert_eq!(streamed, *want, "pid {p}");
+                    assert_eq!(total as usize, want.len());
+                }
+                assert_eq!(c.top_k(None, 10).unwrap(), *direct.top_k_by_support(10).unwrap());
+            });
+        }
+    });
+
+    handle.shutdown();
+    let summary = join.join().unwrap().expect("server drains cleanly");
+    assert_eq!(summary.shed, 0, "no client should have been shed: {summary:?}");
+    assert!(summary.served >= CLIENTS as u64, "summary: {summary:?}");
+    assert!(summary.requests > 0);
+}
+
+// ---------------------------------------------------------------------------
+// 3. admission control: excess connections get a typed busy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn excess_connections_are_shed_with_typed_busy() {
+    let records = random_sorted(3, 400, 8, 8);
+    let dir = build_artifact("srv_busy", &records, 8);
+    let registry = Arc::new(Registry::new(CACHE_BYTES));
+    registry.open_and_register("idx", &dir).unwrap();
+    let server = Server::bind("127.0.0.1:0", registry, fast_cfg(1)).unwrap();
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.spawn();
+
+    // The sole permit goes to the first client…
+    let mut holder = Client::connect(&addr).unwrap();
+    holder.ping().unwrap();
+    // …so the second is shed — a typed Busy, never a hang or a raw
+    // connection reset.
+    let mut shed = Client::connect(&addr).unwrap();
+    match shed.ping() {
+        Err(ServeError::Busy) => {}
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    drop(shed);
+
+    // Releasing the holder frees the permit (the handler notices the
+    // EOF within one poll interval); new clients are admitted again.
+    drop(holder);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut c = Client::connect(&addr).unwrap();
+        match c.ping() {
+            Ok(()) => break,
+            Err(ServeError::Busy) => {
+                assert!(Instant::now() < deadline, "permit never released");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+
+    handle.shutdown();
+    let summary = join.join().unwrap().unwrap();
+    assert!(summary.shed >= 1, "shed counter must record the busy: {summary:?}");
+}
+
+// ---------------------------------------------------------------------------
+// 4. hot-swap: retire/register mid-run never drops a connection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_swap_yields_typed_not_found_and_never_drops_connections() {
+    let rec_a = random_sorted(21, 2_000, 24, 32);
+    let rec_b = random_sorted(22, 2_000, 24, 32);
+    let dir_a = build_artifact("swap_a", &rec_a, 32);
+    let dir_b = build_artifact("swap_b", &rec_b, 32);
+    let registry = Arc::new(Registry::new(CACHE_BYTES));
+    registry.open_and_register("a", &dir_a).unwrap();
+    registry.open_and_register("b", &dir_b).unwrap();
+    let server = Server::bind("127.0.0.1:0", registry, fast_cfg(8)).unwrap();
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.spawn();
+
+    let probe_a = rec_a[rec_a.len() / 2].seq;
+    let probe_b = rec_b[rec_b.len() / 2].seq;
+    let mut ops = Client::connect(&addr).unwrap();
+    let mut rdr = Client::connect(&addr).unwrap();
+    let before = rdr.by_sequence(Some("b"), probe_b, None).unwrap();
+    assert!(!before.0.is_empty());
+
+    // Retire "b" on one connection; the reader's connection survives
+    // and gets a *typed* not_found naming the artifact — not a drop.
+    ops.retire("b").unwrap();
+    match rdr.by_sequence(Some("b"), probe_b, None) {
+        Err(ServeError::Remote { code: ErrorCode::NotFound, message }) => {
+            assert!(message.contains('b'), "message should name the id: {message}");
+        }
+        other => panic!("expected typed not_found, got {other:?}"),
+    }
+    rdr.ping().unwrap(); // same connection, still alive
+    assert!(!rdr.by_sequence(Some("a"), probe_a, None).unwrap().0.is_empty());
+
+    // Register it back over the wire: answers return byte-identically.
+    ops.register("b", dir_b.to_str().unwrap()).unwrap();
+    assert_eq!(rdr.by_sequence(Some("b"), probe_b, None).unwrap(), before);
+
+    // Thrash the swap while a reader hammers "b": every answer is
+    // either the full correct one or a typed not_found — never an IO
+    // error, never a truncated record set.
+    std::thread::scope(|scope| {
+        let addr = &addr;
+        let swapper = scope.spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for _ in 0..20 {
+                c.retire("b").unwrap();
+                c.register("b", dir_b.to_str().unwrap()).unwrap();
+            }
+        });
+        let expected = &before.0;
+        scope.spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut ok = 0u32;
+            let mut missed = 0u32;
+            for _ in 0..200 {
+                match c.by_sequence(Some("b"), probe_b, None) {
+                    Ok((recs, _)) => {
+                        assert_eq!(recs, *expected);
+                        ok += 1;
+                    }
+                    Err(ServeError::Remote { code: ErrorCode::NotFound, .. }) => missed += 1,
+                    Err(e) => panic!("hot-swap broke a reader: {e}"),
+                }
+            }
+            assert_eq!(ok + missed, 200);
+            assert!(ok > 0, "reader never saw the artifact");
+        });
+        swapper.join().unwrap();
+    });
+
+    // Retiring an unknown id is typed, too.
+    match ops.retire("ghost") {
+        Err(ServeError::Remote { code: ErrorCode::NotFound, .. }) => {}
+        other => panic!("expected not_found, got {other:?}"),
+    }
+
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 5. streaming by_patient holds block-bounded memory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streaming_by_patient_memory_is_bounded_by_block_size() {
+    // One deliberately heavy patient: 4096 records across 256 sequences,
+    // 128× the block size — a buffered answer would hold all of it.
+    const HEAVY_PID: u32 = 3;
+    let mut records: Vec<SeqRecord> = Vec::new();
+    for s in 0..256u64 {
+        for k in 0..16u32 {
+            records.push(SeqRecord { seq: s, pid: HEAVY_PID, duration: k });
+        }
+        // A little background noise from other patients (pids 0..3,
+        // never the heavy one).
+        records.push(SeqRecord { seq: s, pid: (s % 3) as u32, duration: 1 });
+    }
+    records.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+    let dir = build_artifact("heavy_patient", &records, 8);
+
+    let mut svc = QueryService::open_with_cache(&dir, CACHE_BYTES).unwrap();
+    let tracker = Arc::new(MemTracker::new());
+    svc.set_tracker(Arc::clone(&tracker));
+
+    let mut streamed: Vec<SeqRecord> = Vec::new();
+    let mut max_chunk = 0usize;
+    let total = svc
+        .by_patient_visit::<QueryError>(HEAVY_PID, |chunk| {
+            max_chunk = max_chunk.max(chunk.len());
+            streamed.extend_from_slice(chunk);
+            Ok(())
+        })
+        .unwrap();
+
+    let block_bytes = (BLOCK_RECORDS * RECORD_BYTES) as u64;
+    let patient_bytes = total * RECORD_BYTES as u64;
+    assert_eq!(total, 4096);
+    assert!(max_chunk <= BLOCK_RECORDS);
+    // The contract under test: the v2 streaming path holds the two
+    // shared scan buffers — nothing proportional to the patient.
+    assert!(
+        tracker.peak() <= 2 * block_bytes,
+        "peak {} exceeds two blocks ({})",
+        tracker.peak(),
+        2 * block_bytes
+    );
+    assert!(
+        patient_bytes >= 64 * block_bytes,
+        "fixture too small to prove anything: {patient_bytes} vs {block_bytes}"
+    );
+
+    // And the stream is byte-identical to the buffered answer.
+    assert_eq!(streamed, *svc.by_patient(HEAVY_PID).unwrap());
+}
