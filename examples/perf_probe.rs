@@ -3,7 +3,7 @@
 use std::time::Instant;
 use tspm_plus::dbmart::NumericDbMart;
 use tspm_plus::json::Json;
-use tspm_plus::mining::{self, MiningConfig};
+use tspm_plus::mining::{self, MiningConfig, SeqRecord};
 use tspm_plus::pipeline::{self, PipelineConfig};
 use tspm_plus::sparsity::{self, SparsityConfig};
 use tspm_plus::synthea::SyntheaConfig;
@@ -243,4 +243,97 @@ fn main() {
     std::fs::write("BENCH_serve.json", Json::Obj(sbench).to_string_pretty())
         .expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");
+
+    // ingest layer: appending a delta segment vs re-indexing the whole
+    // cohort from scratch, then merged-view vs compacted-artifact
+    // point-query latency (the read cost a compaction buys back).
+    // Written to BENCH_ingest.json.
+    use tspm_plus::ingest::{compact, CompactConfig, MergedView, SegmentSet};
+    use tspm_plus::query::{IndexConfig, QuerySurface};
+    let ing_dir = std::env::temp_dir().join("tspm_perf_ingest");
+    let _ = std::fs::remove_dir_all(&ing_dir);
+    std::fs::create_dir_all(&ing_dir).unwrap();
+    let make_run = |name: &str, recs: &[SeqRecord]| {
+        let path = ing_dir.join(name);
+        tspm_plus::seqstore::write_file(&path, recs).unwrap();
+        tspm_plus::seqstore::SeqFileSet {
+            files: vec![path],
+            total_records: recs.len() as u64,
+            num_patients,
+            num_phenx: 0,
+        }
+    };
+    // Split the screened cohort into a base half and a delta half at a
+    // patient boundary — the pid-partition contract segments live under.
+    let split_pid = num_patients / 2;
+    let base_half: Vec<SeqRecord> =
+        screened.iter().copied().filter(|r| r.pid < split_pid).collect();
+    let delta_half: Vec<SeqRecord> =
+        screened.iter().copied().filter(|r| r.pid >= split_pid).collect();
+    let set_dir = ing_dir.join("segset");
+    let mut segset = SegmentSet::init(&set_dir).unwrap();
+    segset
+        .add_segment(&make_run("base.tspm", &base_half), &IndexConfig::default(), None)
+        .unwrap();
+    let t = Instant::now();
+    segset
+        .add_segment(&make_run("delta.tspm", &delta_half), &IndexConfig::default(), None)
+        .unwrap();
+    let delta_ingest_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    tspm_plus::query::index::build(
+        &make_run("full.tspm", &screened),
+        &ing_dir.join("full_idx"),
+        &IndexConfig::default(),
+        None,
+    )
+    .unwrap();
+    let full_reindex_secs = t.elapsed().as_secs_f64();
+    println!(
+        "delta ingest ({} records): {:.3}s vs full re-index ({} records): {:.3}s ({:.1}x)",
+        delta_half.len(),
+        delta_ingest_secs,
+        screened.len(),
+        full_reindex_secs,
+        full_reindex_secs / delta_ingest_secs.max(1e-9)
+    );
+    let view = MergedView::open(&set_dir, 32 << 20).unwrap();
+    let t = Instant::now();
+    let merged_ans = view.by_sequence(probe_seq).unwrap();
+    let merged_query_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let compacted = compact(&mut segset, &CompactConfig::default(), None).unwrap();
+    let compact_secs = t.elapsed().as_secs_f64();
+    let csvc = tspm_plus::query::QueryService::from_index(compacted, 32 << 20);
+    let t = Instant::now();
+    let compact_ans = csvc.by_sequence(probe_seq).unwrap();
+    let compacted_query_secs = t.elapsed().as_secs_f64();
+    assert_eq!(*merged_ans, *compact_ans, "merged view and compacted artifact must agree");
+    println!(
+        "query seq {probe_seq}: merged view {:.3}ms vs compacted {:.3}ms (compact took {:.3}s)",
+        merged_query_secs * 1e3,
+        compacted_query_secs * 1e3,
+        compact_secs
+    );
+    let ibench = Json::obj(vec![
+        ("bench", Json::from("ingest_delta_vs_full".to_string())),
+        ("records_total", Json::from(screened.len())),
+        ("records_delta", Json::from(delta_half.len())),
+        ("delta_ingest_secs", Json::from(delta_ingest_secs)),
+        ("full_reindex_secs", Json::from(full_reindex_secs)),
+        (
+            "speedup_delta_over_full",
+            Json::from(full_reindex_secs / delta_ingest_secs.max(1e-9)),
+        ),
+        ("compact_secs", Json::from(compact_secs)),
+        ("merged_query_secs", Json::from(merged_query_secs)),
+        ("compacted_query_secs", Json::from(compacted_query_secs)),
+        (
+            "merged_read_penalty",
+            Json::from(merged_query_secs / compacted_query_secs.max(1e-9)),
+        ),
+    ]);
+    std::fs::write("BENCH_ingest.json", ibench.to_string_pretty())
+        .expect("write BENCH_ingest.json");
+    println!("wrote BENCH_ingest.json");
 }

@@ -329,6 +329,78 @@ impl NumericDbMart {
         Ok(NumericDbMart { entries, lookup })
     }
 
+    /// Like [`NumericDbMart::try_encode`] but seeded from an existing
+    /// vocabulary: patients and phenX codes already in `base` keep their
+    /// dense ids, new ones continue after them in first-appearance
+    /// order. The delta-ingest path uses this so every segment of a
+    /// segment set shares one id space (the set-level `lookup.json`);
+    /// ids from `base` never move, which is what keeps previously
+    /// committed segments translatable. The returned lookup is the
+    /// *union* vocabulary — persist it as the new base.
+    pub fn try_encode_with(
+        raw: &DbMart,
+        base: &LookupTables,
+    ) -> Result<NumericDbMart, EncodeError> {
+        let mut lookup = base.clone();
+        // Tolerate bases whose descriptions were trimmed or absent.
+        if lookup.descriptions.len() < lookup.phenx.len() {
+            lookup.descriptions.resize(lookup.phenx.len(), None);
+        }
+        // Owned keys: the map must outlive both the base strings and the
+        // delta rows it interns, so borrowing either is off the table.
+        let mut patient_ids: HashMap<String, u32> = lookup
+            .patients
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.clone(), i as u32))
+            .collect();
+        let mut entries = Vec::with_capacity(raw.entries.len());
+        for e in &raw.entries {
+            if e.date == i32::MIN {
+                return Err(EncodeError(format!(
+                    "patient {:?} has date i32::MIN ({}) — a missing-value sentinel, \
+                     not a real date; clean or re-date the row before encoding",
+                    e.patient_id,
+                    i32::MIN
+                )));
+            }
+            let pid = match patient_ids.get(e.patient_id.as_str()) {
+                Some(&p) => p,
+                None => {
+                    let p = lookup.patients.len() as u32;
+                    patient_ids.insert(e.patient_id.clone(), p);
+                    lookup.patients.push(e.patient_id.clone());
+                    p
+                }
+            };
+            let xid = match lookup.phenx_index.get(e.phenx.as_str()) {
+                Some(&x) => {
+                    if lookup.descriptions[x as usize].is_none() {
+                        if let Some(d) = &e.description {
+                            lookup.descriptions[x as usize] = Some(d.clone());
+                        }
+                    }
+                    x
+                }
+                None => {
+                    let x = lookup.phenx.len() as u32;
+                    if x >= MAX_PHENX {
+                        return Err(EncodeError(format!(
+                            "more than {MAX_PHENX} distinct phenX codes; the 7-digit \
+                             sequence hash cannot represent this vocabulary"
+                        )));
+                    }
+                    lookup.phenx_index.insert(e.phenx.clone(), x);
+                    lookup.phenx.push(e.phenx.clone());
+                    lookup.descriptions.push(e.description.clone());
+                    x
+                }
+            };
+            entries.push(NumericEntry { patient: pid, date: e.date, phenx: xid });
+        }
+        Ok(NumericDbMart { entries, lookup })
+    }
+
     pub fn num_patients(&self) -> usize {
         self.lookup.patients.len()
     }
@@ -544,6 +616,41 @@ mod tests {
         // The neighbouring value is a real (if extreme) date and passes.
         let ok = DbMart::new(vec![entry("p", i32::MIN + 1, "x")]);
         assert!(NumericDbMart::try_encode(&ok).is_ok());
+    }
+
+    #[test]
+    fn try_encode_with_extends_a_base_vocabulary() {
+        let base_raw =
+            DbMart::new(vec![entry("alice", 1, "covid"), entry("bob", 2, "cough")]);
+        let base = NumericDbMart::encode(&base_raw);
+        let delta = DbMart::new(vec![
+            entry("bob", 3, "fatigue"), // known patient, new code
+            entry("carol", 4, "covid"), // new patient, known code
+        ]);
+        let n = NumericDbMart::try_encode_with(&delta, &base.lookup).unwrap();
+        assert_eq!(n.lookup.patients, vec!["alice", "bob", "carol"]);
+        assert_eq!(n.lookup.phenx, vec!["covid", "cough", "fatigue"]);
+        assert_eq!(n.entries[0], NumericEntry { patient: 1, date: 3, phenx: 2 });
+        assert_eq!(n.entries[1], NumericEntry { patient: 2, date: 4, phenx: 0 });
+        // The union vocabulary counts base patients the delta never saw.
+        assert_eq!(n.num_patients(), 3);
+
+        // An empty base degenerates to plain try_encode.
+        let solo =
+            NumericDbMart::try_encode_with(&base_raw, &LookupTables::default()).unwrap();
+        assert_eq!(solo.lookup.patients, base.lookup.patients);
+        assert_eq!(solo.entries, base.entries);
+
+        // The sentinel-date check still applies.
+        let bad = DbMart::new(vec![entry("p", i32::MIN, "x")]);
+        assert!(NumericDbMart::try_encode_with(&bad, &base.lookup).is_err());
+
+        // A delta row can backfill a description the base lacked.
+        let mut d = entry("alice", 5, "covid");
+        d.description = Some("post covid".into());
+        let n2 =
+            NumericDbMart::try_encode_with(&DbMart::new(vec![d]), &base.lookup).unwrap();
+        assert_eq!(n2.lookup.phenx_description(0), Some("post covid"));
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub use plan::{Plan, Stage};
 
 use crate::config::RunConfig;
 use crate::dbmart::{DbMart, NumericDbMart};
+use crate::ingest::SegmentSet;
 use crate::matrix::SeqMatrix;
 use crate::metrics::{fmt_bytes, fmt_duration, MemTracker, PhaseTimer};
 use crate::mining::{MiningConfig, SeqRecord, SequenceSet};
@@ -276,7 +277,9 @@ pub struct RunOutput {
     pub matrix: Option<SeqMatrix>,
     pub selection: Option<Selection>,
     /// The query-index artifact, when the plan chained `.index(dir)`
-    /// (already on disk; open it with [`crate::query::QueryService`]).
+    /// (already on disk; open it with [`crate::query::QueryService`]) —
+    /// or the freshly committed segment when it chained `.ingest(dir)`
+    /// (the two sinks are mutually exclusive, so one slot serves both).
     pub index: Option<SeqIndex>,
     pub report: RunReport,
 }
@@ -399,6 +402,26 @@ impl Engine {
         self
     }
 
+    /// Append the ingest stage: commit the spilled screen output as a
+    /// new immutable **segment** of the segment set at `set_dir`
+    /// ([`crate::ingest::SegmentSet`]), creating the set on first use.
+    /// The delta-cohort counterpart of [`Engine::index`]: instead of a
+    /// standalone artifact the run appends to a growing set that
+    /// [`crate::ingest::MergedView`] queries as one. Requires a screen
+    /// stage before it, forces spilled residency, and is terminal. The
+    /// segments of one set must hold **disjoint patients** — see the
+    /// [`crate::ingest`] correctness contract.
+    pub fn ingest(self, set_dir: PathBuf) -> Engine {
+        self.ingest_with(set_dir, query::DEFAULT_BLOCK_RECORDS)
+    }
+
+    /// [`Engine::ingest`] with an explicit block size for the new
+    /// segment's index.
+    pub fn ingest_with(mut self, set_dir: PathBuf, block_records: usize) -> Engine {
+        self.stages.push(Stage::Ingest { set_dir, block_records });
+        self
+    }
+
     // --- execution knobs ---------------------------------------------------
 
     /// Per-patient phenotype labels (`labels[pid] ∈ {0,1}`) for MSMR.
@@ -499,11 +522,12 @@ impl Engine {
         // Residency: chains with in-memory consumers (duration screen,
         // matrix, MSMR) always materialise — Plan::validate already
         // rejected an explicit Spilled there, so only Auto lands here.
-        // An index stage forces spilled output whatever the budget: the
-        // builder consumes the screen's spill files directly.
+        // An index or ingest stage forces spilled output whatever the
+        // budget: both builders consume the screen's spill files
+        // directly.
         let out_kind = if !plan.spill_capable() {
             OutputKind::InMemory
-        } else if plan.index_stage().is_some() {
+        } else if plan.index_stage().is_some() || plan.ingest_stage().is_some() {
             OutputKind::Spilled
         } else {
             backend::resolve_output(plan.output, kind, &fc, budget)
@@ -601,6 +625,33 @@ impl Engine {
             stages.push(StageReport {
                 stage: "index".into(),
                 elapsed: timer.elapsed("index").unwrap_or_default(),
+                records_out: built.total_records,
+                bytes_out: built.artifact_bytes,
+            });
+            index = Some(built);
+        }
+
+        // 2c. Ingest: commit the sorted spilled screen output as a new
+        // segment of the set (mine → screen → ingest chains only). The
+        // built segment rides the index slot — the two sinks are
+        // mutually exclusive, enforced by Plan::validate.
+        if let Some((set_dir, block_records)) = plan.ingest_stage() {
+            let files = output
+                .as_spilled()
+                .expect("validated: ingest implies spilled output")
+                .clone();
+            let set_dir = set_dir.to_path_buf();
+            let built = timer.run("ingest", || -> Result<SeqIndex, TspmError> {
+                let mut set = SegmentSet::open_or_init(&set_dir)?;
+                Ok(set.add_segment(
+                    &files,
+                    &query::IndexConfig { block_records, ..Default::default() },
+                    Some(&tracker),
+                )?)
+            })?;
+            stages.push(StageReport {
+                stage: "ingest".into(),
+                elapsed: timer.elapsed("ingest").unwrap_or_default(),
                 records_out: built.total_records,
                 bytes_out: built.artifact_bytes,
             });
@@ -929,6 +980,43 @@ mod tests {
             .plan()
             .unwrap_err();
         assert!(err.to_string().contains("spill"), "got {err}");
+    }
+
+    /// `.ingest(dir)` as a plan stage: each run commits one new segment
+    /// into the shared set, and the merged view sees all of them.
+    #[test]
+    fn ingest_stage_appends_segments_to_a_shared_set() {
+        use crate::query::QuerySurface;
+
+        let db = small_db();
+        let base = std::env::temp_dir().join("tspm_engine_ingest_stage");
+        let _ = std::fs::remove_dir_all(&base);
+        let set_dir = base.join("set");
+        let mut per_run = Vec::new();
+        for i in 0..2 {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(MiningConfig {
+                    work_dir: base.join(format!("work{i}")),
+                    ..Default::default()
+                })
+                .screen(SparsityConfig { min_patients: 5, threads: 2 })
+                .out_dir(base.join(format!("run{i}")))
+                .ingest(set_dir.clone())
+                .run()
+                .unwrap();
+            assert_eq!(out.report.output, OutputKind::Spilled, "ingest forces spill");
+            let names: Vec<&str> =
+                out.report.stages.iter().map(|s| s.stage.as_str()).collect();
+            assert_eq!(names, ["mine", "screen", "ingest"]);
+            let built = out.index.as_ref().expect("ingest returns the new segment");
+            assert_eq!(built.total_records, out.sequences.len() as u64);
+            per_run.push(built.total_records);
+        }
+        let set = SegmentSet::open(&set_dir).unwrap();
+        assert_eq!(set.segments(), ["seg_0000", "seg_0001"]);
+        let view = crate::ingest::MergedView::open(&set_dir, 0).unwrap();
+        assert_eq!(view.describe().records, per_run.iter().sum::<u64>());
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     /// The out-of-core ML chain: mine → screen → index → matrix → msmr

@@ -52,6 +52,12 @@ pub enum Stage {
     /// only; the engine forces spilled residency. Matrix/MSMR stages may
     /// follow — they feed from the artifact.
     Index { out_dir: PathBuf, block_records: usize },
+    /// Mine the cohort into a brand-new segment of the segment set at
+    /// `set_dir` ([`crate::ingest::SegmentSet::add_segment`]) — the
+    /// delta-cohort counterpart of `Index`. Terminal: downstream stages
+    /// query the set ([`crate::ingest::MergedView`]) or compact it
+    /// first.
+    Ingest { set_dir: PathBuf, block_records: usize },
 }
 
 impl Stage {
@@ -64,6 +70,7 @@ impl Stage {
             Stage::Matrix { .. } => "matrix",
             Stage::Msmr(_) => "msmr",
             Stage::Index { .. } => "index",
+            Stage::Ingest { .. } => "ingest",
         }
     }
 
@@ -75,7 +82,11 @@ impl Stage {
         match self {
             Stage::Mine(_) => 0,
             Stage::Screen(_) => 1,
-            Stage::Index { .. } => 2,
+            // Index and Ingest share a rank: they are alternative
+            // artifact sinks, and equal ranks make a chain holding both
+            // invalid — validate() reports that pair with its own
+            // message before the generic duplicate error can fire.
+            Stage::Index { .. } | Stage::Ingest { .. } => 2,
             Stage::DurationScreen { .. } => 3,
             Stage::Matrix { .. } => 4,
             Stage::Msmr(_) => 5,
@@ -116,6 +127,16 @@ impl Plan {
                 first.name()
             )));
         }
+        if self.index_stage().is_some() && self.ingest_stage().is_some() {
+            // Both sit at the same rank, so the generic duplicate error
+            // below would name only one of them — report the real
+            // conflict instead.
+            return Err(TspmError::Plan(
+                "index and ingest are alternative artifact sinks — one chain writes \
+                 a standalone artifact (.index) or a segment (.ingest), never both"
+                    .into(),
+            ));
+        }
         let mut prev_rank = first.rank();
         for stage in &self.stages[1..] {
             let rank = stage.rank();
@@ -144,7 +165,15 @@ impl Plan {
             let bad = self
                 .stages
                 .iter()
-                .find(|s| !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Index { .. }))
+                .find(|s| {
+                    !matches!(
+                        s,
+                        Stage::Mine(_)
+                            | Stage::Screen(_)
+                            | Stage::Index { .. }
+                            | Stage::Ingest { .. }
+                    )
+                })
                 .expect("spill_capable is false");
             return Err(TspmError::Plan(format!(
                 "spilled output supports mine → screen chains (plus index-fed matrix/msmr); \
@@ -191,6 +220,39 @@ impl Plan {
             }
             if block_records == 0 {
                 return Err(TspmError::Plan("index: block_records must be ≥ 1".into()));
+            }
+        }
+        if let Some((_, block_records)) = self.ingest_stage() {
+            // Ingest consumes the same sorted spilled screen output as
+            // Index, and is additionally *terminal*: the chain's result
+            // is a new segment in the set, and downstream stages should
+            // query the set (or compact it) instead of the lone delta.
+            if let Some(bad) = self.stages.iter().find(|s| {
+                !matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Ingest { .. })
+            }) {
+                return Err(TspmError::Plan(format!(
+                    "stage {:?} cannot join an ingest chain — ingest is terminal \
+                     (mine → screen → ingest); query the segment set or compact it \
+                     for downstream stages",
+                    bad.name()
+                )));
+            }
+            if self.screen_config().is_none() {
+                return Err(TspmError::Plan(
+                    "ingest needs the sorted spilled screen output — insert .screen(...) \
+                     before .ingest(dir)"
+                        .into(),
+                ));
+            }
+            if self.output == OutputChoice::InMemory {
+                return Err(TspmError::Plan(
+                    "ingest builds from spill files — drop .output(OutputChoice::InMemory) \
+                     (ingest plans force spilled residency)"
+                        .into(),
+                ));
+            }
+            if block_records == 0 {
+                return Err(TspmError::Plan("ingest: block_records must be ≥ 1".into()));
             }
         }
         for stage in &self.stages {
@@ -283,6 +345,16 @@ impl Plan {
         })
     }
 
+    /// `(set_dir, block_records)` of the ingest stage, if present.
+    pub fn ingest_stage(&self) -> Option<(&std::path::Path, usize)> {
+        self.stages.iter().find_map(|s| match s {
+            Stage::Ingest { set_dir, block_records } => {
+                Some((set_dir.as_path(), *block_records))
+            }
+            _ => None,
+        })
+    }
+
     /// Can this chain produce a spilled result? mine → screen chains
     /// can, and index chains can take it further: the index stage feeds
     /// matrix (and thus MSMR) straight from the artifact, so those
@@ -301,6 +373,10 @@ impl Plan {
                         | Stage::Msmr(_)
                 )
             })
+        } else if self.ingest_stage().is_some() {
+            self.stages
+                .iter()
+                .all(|s| matches!(s, Stage::Mine(_) | Stage::Screen(_) | Stage::Ingest { .. }))
         } else {
             self.stages
                 .iter()
@@ -511,6 +587,71 @@ mod tests {
             Stage::Mine(MiningConfig::default()),
             Stage::Screen(SparsityConfig::default()),
             idx(0),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("block_records"), "got {err}");
+    }
+
+    #[test]
+    fn ingest_stage_validation() {
+        let ing = |block_records| Stage::Ingest {
+            set_dir: PathBuf::from("/tmp/tspm_plan_ingest"),
+            block_records,
+        };
+        // The canonical ingest chain validates, under Auto and Spilled.
+        for output in [OutputChoice::Auto, OutputChoice::Spilled] {
+            let mut p = plan_of(vec![
+                Stage::Mine(MiningConfig::default()),
+                Stage::Screen(SparsityConfig::default()),
+                ing(4096),
+            ]);
+            p.output = output;
+            p.validate().unwrap();
+            assert!(p.spill_capable());
+            assert_eq!(p.describe(), "mine → screen → ingest");
+            assert_eq!(p.ingest_stage().unwrap().1, 4096);
+        }
+        // Ingest without the screen is rejected.
+        let err = plan_of(vec![Stage::Mine(MiningConfig::default()), ing(4096)])
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("screen"), "got {err}");
+        // Ingest is terminal: matrix after it is rejected with its own
+        // message, not the generic ordering one.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            ing(4096),
+            Stage::Matrix { duration_bucket_days: None },
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("terminal"), "got {err}");
+        // Index + ingest in one chain names the real conflict.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            Stage::Index { out_dir: PathBuf::from("/tmp/tspm_plan_both"), block_records: 64 },
+            ing(4096),
+        ])
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("alternative artifact sinks"), "got {err}");
+        // Explicit in-memory residency contradicts ingest.
+        let mut p = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            ing(4096),
+        ]);
+        p.output = OutputChoice::InMemory;
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("spill"), "got {err}");
+        // Degenerate block size.
+        let err = plan_of(vec![
+            Stage::Mine(MiningConfig::default()),
+            Stage::Screen(SparsityConfig::default()),
+            ing(0),
         ])
         .validate()
         .unwrap_err();

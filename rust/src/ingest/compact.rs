@@ -1,0 +1,248 @@
+//! [`compact`] — fold K segments into one artifact in one bounded pass.
+//!
+//! Compaction is two streaming k-way merges (the
+//! [`crate::sparsity`] merge machinery under two different total
+//! orders), never a re-sort:
+//!
+//! 1. the segments' seq-major data files merge under the spill order
+//!    `(seq, pid, duration)`, feeding the new data file, its checksum,
+//!    and the block/sequence tables (the index builder's own
+//!    accumulator, so the tables come out bit-identical to a fresh
+//!    build);
+//! 2. the segments' **pid-major copies** merge under `(pid, seq,
+//!    duration)`, deriving the new `pdata` file and per-pid table from
+//!    the merge stream directly — no second full sort of the union.
+//!
+//! Memory is bounded by `buffer_bytes` split across the merge cursors,
+//! and the output is bit-identical for every budget (merge tie-breaking
+//! is positional, never buffer-dependent). The new artifact is built in
+//! a `compact_tmp` staging directory, renamed to its final
+//! never-reused segment name, and only then does the manifest swap to
+//! it — a crash at any step leaves the old segment set fully live.
+
+use crate::metrics::MemTracker;
+use crate::mining::SeqRecord;
+use crate::query::index::{
+    checksum_hex, fnv1a64, write_tables_and_manifest, TableAccum, DATA_FILE,
+    DEFAULT_BLOCK_RECORDS, FNV1A64_INIT, PDATA_FILE,
+};
+use crate::query::{PidEntry, QueryError, SeqIndex};
+use crate::seqstore::{self, SeqWriter, RECORD_BYTES};
+use crate::sparsity::{merge_sorted_runs_by, spill_key};
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::SegmentSet;
+
+/// Staging directory inside the set — never visible as a segment.
+const COMPACT_TMP: &str = "compact_tmp";
+
+/// Compaction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactConfig {
+    /// Records per index block of the compacted artifact
+    /// ([`DEFAULT_BLOCK_RECORDS`]). Must match the block size used for
+    /// a reference build when comparing artifacts bit-for-bit.
+    pub block_records: usize,
+    /// Total merge-buffer budget in bytes, split across the per-segment
+    /// cursors and the output writer. Any value ≥ 1 works; the output
+    /// is bit-identical regardless.
+    pub buffer_bytes: usize,
+    /// Test hook: fail with an injected IO error after this many merged
+    /// records, leaving whatever partial state the failure produced.
+    /// The crash-safety suite uses it to prove the old set survives.
+    #[doc(hidden)]
+    pub fail_after_records: Option<u64>,
+}
+
+impl Default for CompactConfig {
+    fn default() -> Self {
+        CompactConfig {
+            block_records: DEFAULT_BLOCK_RECORDS,
+            buffer_bytes: 64 << 20,
+            fail_after_records: None,
+        }
+    }
+}
+
+/// Fold every live segment of `set` into a single fresh artifact and
+/// atomically swap the manifest to it. On success the set holds exactly
+/// one segment (a brand-new name — compaction never rewrites in place)
+/// and the retired segment directories are removed best-effort. On
+/// *any* failure the staging directory is discarded and the manifest —
+/// and so every reader — still sees the old segments, untouched.
+///
+/// The compacted artifact is **bit-identical** to a fresh
+/// [`crate::query::index::build`] over the union of the segments'
+/// records at the same `block_records` (enforced by the property tests
+/// in `rust/tests/ingest_conformance.rs`), so compacting is invisible
+/// to every consumer of the artifact format.
+pub fn compact(
+    set: &mut SegmentSet,
+    cfg: &CompactConfig,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqIndex, QueryError> {
+    if cfg.block_records == 0 {
+        return Err(QueryError::Invalid("compact block_records must be ≥ 1".into()));
+    }
+    if set.is_empty() {
+        return Err(QueryError::Invalid("compact needs at least one segment".into()));
+    }
+    let tmp = set.dir().join(COMPACT_TMP);
+    if tmp.exists() {
+        // A stale *directory* is debris from an interrupted compaction
+        // and is safe to reclaim; anything else in the way is an error.
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    let result = compact_impl(set, cfg, tracker, &tmp);
+    if result.is_err() {
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+    result
+}
+
+fn compact_impl(
+    set: &mut SegmentSet,
+    cfg: &CompactConfig,
+    tracker: Option<&MemTracker>,
+    tmp: &Path,
+) -> Result<SeqIndex, QueryError> {
+    let mut segments = Vec::with_capacity(set.len());
+    for dir in set.segment_dirs() {
+        let idx = SeqIndex::open(&dir)?;
+        if idx.pids.is_none() {
+            return Err(QueryError::Invalid(format!(
+                "segment {} is a v1 artifact without a pid-major copy — compact \
+                 needs v2 segments",
+                dir.display()
+            )));
+        }
+        segments.push(idx);
+    }
+    let expected: u64 = segments.iter().map(|s| s.total_records).sum();
+    let num_patients = segments.iter().map(|s| s.num_patients).max().unwrap_or(0);
+    let num_phenx = segments.iter().map(|s| s.num_phenx).max().unwrap_or(0);
+
+    // One buffer slot per input cursor plus one for the output writer.
+    let slot = (cfg.buffer_bytes / (segments.len() + 1)).max(RECORD_BYTES);
+    let per_run = slot / RECORD_BYTES;
+    std::fs::create_dir_all(tmp)?;
+    if let Some(t) = tracker {
+        t.add((slot * (segments.len() + 1)) as u64);
+    }
+
+    // Pass A: merge the seq-major data files in spill order, feeding
+    // the data file, its checksum, and the block/seq tables.
+    let data_paths: Vec<PathBuf> = segments.iter().map(|s| s.data_path.clone()).collect();
+    let mut writer = SeqWriter::create_with_capacity(&tmp.join(DATA_FILE), slot)?;
+    let mut tables = TableAccum::new(cfg.block_records);
+    let mut data_fnv = FNV1A64_INIT;
+    let mut merged = 0u64;
+    merge_sorted_runs_by(&data_paths, per_run, spill_key, |r| {
+        if let Some(limit) = cfg.fail_after_records {
+            if merged >= limit {
+                return Err(io::Error::new(
+                    io::ErrorKind::Other,
+                    "injected compaction failure (test hook)",
+                ));
+            }
+        }
+        writer.write(r)?;
+        data_fnv = fnv1a64(data_fnv, &seqstore::encode_record(r));
+        tables.push(r);
+        merged += 1;
+        Ok(())
+    })?;
+    let written = writer.finish()?;
+    if written != expected {
+        return Err(QueryError::Artifact(format!(
+            "compaction merged {written} records, segment manifests promise {expected}"
+        )));
+    }
+    let (blocks, seqs) = tables.finish();
+
+    // Pass B: merge the pid-major copies in (pid, seq, duration) order —
+    // the pdata file and per-pid table fall out of the stream, no
+    // second sort of the union.
+    let pdata_paths: Vec<PathBuf> =
+        segments.iter().map(|s| s.dir.join(PDATA_FILE)).collect();
+    let mut pid_counts = vec![0u64; num_patients as usize];
+    let mut pwriter = SeqWriter::create_with_capacity(&tmp.join(PDATA_FILE), slot)?;
+    let mut pdata_fnv = FNV1A64_INIT;
+    let mut pid_err = false;
+    merge_sorted_runs_by(
+        &pdata_paths,
+        per_run,
+        |r: &SeqRecord| ((r.pid as u128) << 96) | ((r.seq as u128) << 32) | r.duration as u128,
+        |r| {
+            match pid_counts.get_mut(r.pid as usize) {
+                Some(c) => *c += 1,
+                None => {
+                    pid_err = true;
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("pid {} outside the dense space of {num_patients}", r.pid),
+                    ));
+                }
+            }
+            pwriter.write(r)?;
+            pdata_fnv = fnv1a64(pdata_fnv, &seqstore::encode_record(r));
+            Ok(())
+        },
+    )
+    .map_err(|e| {
+        if pid_err {
+            QueryError::Artifact(format!("segment pid-major copy is corrupt: {e}"))
+        } else {
+            QueryError::Io(e)
+        }
+    })?;
+    let pwritten = pwriter.finish()?;
+    if pwritten != expected {
+        return Err(QueryError::Artifact(format!(
+            "pid-major merge produced {pwritten} records, data merge produced {expected} \
+             — the segments' copies disagree"
+        )));
+    }
+    let mut entries = Vec::with_capacity(pid_counts.len());
+    let mut start = 0u64;
+    for &c in &pid_counts {
+        entries.push(PidEntry { start, count: c });
+        start += c;
+    }
+    let pid_table = Some((entries, checksum_hex(pdata_fnv)));
+
+    write_tables_and_manifest(
+        tmp,
+        cfg.block_records,
+        written,
+        num_patients,
+        num_phenx,
+        data_fnv,
+        blocks,
+        seqs,
+        pid_table,
+        tracker,
+    )?;
+    if let Some(t) = tracker {
+        t.sub((slot * (segments.len() + 1)) as u64);
+    }
+
+    // Publish: rename the staged artifact to its final (never-reused)
+    // segment name, then swap the manifest. Readers that opened the old
+    // segments keep their file handles; new opens see only the new set.
+    let new_name = format!("seg_{:04}", set.next_segment());
+    let final_dir = set.dir().join(&new_name);
+    std::fs::rename(tmp, &final_dir)?;
+    let retired = match set.commit_replacement(new_name) {
+        Ok(old) => old,
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&final_dir);
+            return Err(e);
+        }
+    };
+    for name in retired {
+        let _ = std::fs::remove_dir_all(set.dir().join(name));
+    }
+    SeqIndex::open(&final_dir)
+}

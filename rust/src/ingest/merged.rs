@@ -1,0 +1,401 @@
+//! [`MergedView`] — the full query surface over a whole segment set.
+//!
+//! Every answer is produced by a deterministic k-way merge over the
+//! per-segment answers (ties break toward the lower-numbered segment,
+//! like the spill merge in [`crate::sparsity`]), or by summing the
+//! per-segment resident tables — never by materializing a union
+//! artifact. Under the pid-partition contract of [`crate::ingest`],
+//! every method is byte-identical to a [`QueryService`] over one
+//! artifact built from the union cohort; the registered
+//! `ingest_conformance` suite enforces this on every adversarial
+//! cohort shape, segment split, block size, and cache setting.
+
+use crate::mining::SeqRecord;
+use crate::query::index::INDEX_FORMAT_VERSION;
+use crate::query::service::{Histogram, HistogramBucket, QueryService, QueryStats, SeqSupport};
+use crate::query::{QueryError, QuerySurface, SurfaceInfo};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap};
+use std::path::Path;
+use std::sync::Arc;
+
+use super::SegmentSet;
+
+/// One query surface over N immutable segments. Cheap to construct
+/// (per-segment tables are already resident in each [`QueryService`]);
+/// each service keeps its own result cache, so repeated queries against
+/// the view still hit per-segment caches.
+pub struct MergedView {
+    segments: Vec<Arc<QueryService>>,
+}
+
+/// Merge already-sorted per-segment answers into one sorted vector.
+/// The heap key carries the segment index, so ties break toward the
+/// lower-numbered (older) segment and the output never depends on how
+/// many segments the records happen to be split across.
+fn merge_sorted<T: Copy>(parts: &[Arc<Vec<T>>], key: impl Fn(&T) -> u128) -> Vec<T> {
+    let mut out = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+    let mut pos = vec![0usize; parts.len()];
+    let mut heap: BinaryHeap<Reverse<(u128, usize)>> = BinaryHeap::new();
+    for (i, p) in parts.iter().enumerate() {
+        if let Some(first) = p.first() {
+            heap.push(Reverse((key(first), i)));
+        }
+    }
+    while let Some(Reverse((_, i))) = heap.pop() {
+        out.push(parts[i][pos[i]]);
+        pos[i] += 1;
+        if let Some(next) = parts[i].get(pos[i]) {
+            heap.push(Reverse((key(next), i)));
+        }
+    }
+    out
+}
+
+impl MergedView {
+    /// View over an explicit list of opened segment services, oldest
+    /// first (the order fixes merge tie-breaking).
+    pub fn new(segments: Vec<Arc<QueryService>>) -> MergedView {
+        MergedView { segments }
+    }
+
+    /// Open every live segment of the set at `set_dir`, giving each
+    /// segment's service a result cache of `cache_bytes` (0 disables
+    /// caching, as for [`QueryService::open_with_cache`]).
+    pub fn open(set_dir: &Path, cache_bytes: usize) -> Result<MergedView, QueryError> {
+        let set = SegmentSet::open(set_dir)?;
+        let mut segments = Vec::with_capacity(set.len());
+        for dir in set.segment_dirs() {
+            segments.push(Arc::new(QueryService::open_with_cache(&dir, cache_bytes)?));
+        }
+        Ok(MergedView { segments })
+    }
+
+    /// Number of segments behind the view.
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The per-segment services, oldest first.
+    pub fn services(&self) -> &[Arc<QueryService>] {
+        &self.segments
+    }
+}
+
+impl QuerySurface for MergedView {
+    fn by_sequence(&self, seq: u64) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        let mut parts = Vec::with_capacity(self.segments.len());
+        for svc in &self.segments {
+            parts.push(svc.by_sequence(seq)?);
+        }
+        // Segment runs are (pid, duration)-sorted; so is the merge.
+        Ok(Arc::new(merge_sorted(&parts, |r| {
+            ((r.pid as u128) << 32) | r.duration as u128
+        })))
+    }
+
+    fn by_patient(&self, pid: u32) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        let mut parts = Vec::with_capacity(self.segments.len());
+        for svc in &self.segments {
+            parts.push(svc.by_patient(pid)?);
+        }
+        // Per-patient runs are (seq, duration)-sorted; so is the merge.
+        Ok(Arc::new(merge_sorted(&parts, |r| {
+            ((r.seq as u128) << 32) | r.duration as u128
+        })))
+    }
+
+    fn visit_patient(
+        &self,
+        pid: u32,
+        f: &mut dyn FnMut(&[SeqRecord]) -> Result<(), QueryError>,
+    ) -> Result<u64, QueryError> {
+        // The cross-segment merge needs the whole patient anyway, so
+        // the chunk bound here is one patient: materialize the merged
+        // run once and emit it as a single chunk.
+        let recs = self.by_patient(pid)?;
+        if !recs.is_empty() {
+            f(&recs)?;
+        }
+        Ok(recs.len() as u64)
+    }
+
+    fn patients_with(
+        &self,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+    ) -> Result<Arc<Vec<u32>>, QueryError> {
+        let mut parts = Vec::with_capacity(self.segments.len());
+        for svc in &self.segments {
+            parts.push(svc.patients_with(seq, dur_min, dur_max)?);
+        }
+        let mut out = merge_sorted(&parts, |&pid| pid as u128);
+        // Segments partition patients, so duplicates can only come from
+        // a violated contract — dedup keeps the answer well-formed
+        // (ascending distinct pids) regardless.
+        out.dedup();
+        Ok(Arc::new(out))
+    }
+
+    fn top_k_by_support(&self, k: usize) -> Result<Arc<Vec<SeqSupport>>, QueryError> {
+        // Sum supports across segments *before* ranking. Patient counts
+        // add exactly because segments partition patients. The ranking
+        // order is the documented total order of the query surface —
+        // support descending, then seq ascending — applied to the
+        // summed supports, so the result is identical for any segment
+        // layout (including one segment, i.e. a plain artifact).
+        let mut agg: BTreeMap<u64, (u32, u64)> = BTreeMap::new();
+        for svc in &self.segments {
+            for e in &svc.index().seqs {
+                let slot = agg.entry(e.seq).or_insert((0, 0));
+                slot.0 += e.patients;
+                slot.1 += e.count;
+            }
+        }
+        let mut v: Vec<SeqSupport> = agg
+            .into_iter()
+            .map(|(seq, (patients, records))| SeqSupport { seq, patients, records })
+            .collect();
+        v.sort_unstable_by(|a, b| b.patients.cmp(&a.patients).then(a.seq.cmp(&b.seq)));
+        v.truncate(k);
+        Ok(Arc::new(v))
+    }
+
+    fn duration_histogram(
+        &self,
+        seq: u64,
+        n_buckets: usize,
+    ) -> Result<Arc<Histogram>, QueryError> {
+        if n_buckets == 0 {
+            return Err(QueryError::Invalid("histogram needs at least one bucket".into()));
+        }
+        // Global duration bounds and total: fold the per-segment table
+        // entries exactly the way the index builder folds records, so
+        // the bucket layout matches a union artifact's bit for bit.
+        let mut global: Option<(u32, u32, u64)> = None;
+        for svc in &self.segments {
+            if let Some(e) = svc.index().seq_entry(seq) {
+                if e.dur_max < e.dur_min {
+                    return Err(QueryError::Artifact(format!(
+                        "{}: sequence {seq} has duration bounds [{}, {}] — the \
+                         sequence table is corrupt",
+                        svc.index().data_path.display(),
+                        e.dur_min,
+                        e.dur_max
+                    )));
+                }
+                global = Some(match global {
+                    None => (e.dur_min, e.dur_max, e.count),
+                    Some((lo, hi, n)) => {
+                        (lo.min(e.dur_min), hi.max(e.dur_max), n + e.count)
+                    }
+                });
+            }
+        }
+        let hist = match global {
+            None => Histogram { seq, dur_min: 0, dur_max: 0, total: 0, buckets: Vec::new() },
+            Some((dur_min, dur_max, total)) => {
+                let span = (dur_max - dur_min) as u64 + 1;
+                let width = span.div_ceil(n_buckets as u64).max(1);
+                let used = span.div_ceil(width) as usize;
+                let mut counts = vec![0u64; used];
+                for svc in &self.segments {
+                    let Some(e) = svc.index().seq_entry(seq).copied() else { continue };
+                    for r in svc.by_sequence(seq)?.iter() {
+                        if r.duration < e.dur_min || r.duration > e.dur_max {
+                            return Err(QueryError::Artifact(format!(
+                                "{}: sequence {seq} has a record with duration {}, \
+                                 outside the index entry's [{}, {}] — the segment \
+                                 is corrupt",
+                                svc.index().data_path.display(),
+                                r.duration,
+                                e.dur_min,
+                                e.dur_max
+                            )));
+                        }
+                        // In global bounds by the per-segment check, so
+                        // the bucket index stays in range.
+                        counts[((r.duration - dur_min) as u64 / width) as usize] += 1;
+                    }
+                }
+                let buckets = counts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &count)| {
+                        let lo = dur_min as u64 + i as u64 * width;
+                        let hi = (lo + width - 1).min(dur_max as u64);
+                        HistogramBucket { lo: lo as u32, hi: hi as u32, count }
+                    })
+                    .collect();
+                Histogram { seq, dur_min, dur_max, total, buckets }
+            }
+        };
+        Ok(Arc::new(hist))
+    }
+
+    fn stats(&self) -> QueryStats {
+        let mut total = QueryStats::default();
+        for svc in &self.segments {
+            let s = svc.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+            total.cached_entries += s.cached_entries;
+            total.cached_bytes += s.cached_bytes;
+            total.logical_bytes_read += s.logical_bytes_read;
+        }
+        total
+    }
+
+    fn describe(&self) -> SurfaceInfo {
+        let mut seqs = std::collections::BTreeSet::new();
+        let mut records = 0u64;
+        let mut patients = 0u32;
+        let mut version = 0u64;
+        for svc in &self.segments {
+            let idx = svc.index();
+            records += idx.total_records;
+            patients = patients.max(idx.num_patients);
+            version = version.max(idx.version);
+            for e in &idx.seqs {
+                seqs.insert(e.seq);
+            }
+        }
+        if self.segments.is_empty() {
+            version = INDEX_FORMAT_VERSION;
+        }
+        SurfaceInfo { records, sequences: seqs.len() as u64, patients, version }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::index::{build, IndexConfig};
+    use crate::seqstore::{self, SeqFileSet};
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tspm_merged_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Build one artifact from `records` (already (seq, pid, duration)
+    /// sorted) and return its service.
+    fn service(dir: &Path, records: &[SeqRecord], num_patients: u32) -> Arc<QueryService> {
+        let run = dir.join("run.tspm");
+        seqstore::write_file(&run, records).unwrap();
+        let input = SeqFileSet {
+            files: vec![run],
+            total_records: records.len() as u64,
+            num_patients,
+            num_phenx: 5,
+        };
+        let idx = build(
+            &input,
+            &dir.join("idx"),
+            &IndexConfig { block_records: 3, pid_index: true },
+            None,
+        )
+        .unwrap();
+        Arc::new(QueryService::from_index(idx, 0))
+    }
+
+    fn fixture() -> Vec<SeqRecord> {
+        let mut v = Vec::new();
+        for pid in 0..6u32 {
+            for seq in [2u64, 40, 41] {
+                v.push(SeqRecord { seq, pid, duration: pid * 2 + seq as u32 });
+            }
+        }
+        // pid 0 gets an extra record of seq 2 at a duplicate duration.
+        v.push(SeqRecord { seq: 2, pid: 0, duration: 2 });
+        v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        v
+    }
+
+    fn split_by_pid(records: &[SeqRecord], groups: &[&[u32]]) -> Vec<Vec<SeqRecord>> {
+        groups
+            .iter()
+            .map(|g| records.iter().copied().filter(|r| g.contains(&r.pid)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn merged_answers_equal_single_artifact_answers() {
+        let dir = tmpdir("equal");
+        let all = fixture();
+        let full = service(&dir.join("full"), &all, 6);
+        let parts = split_by_pid(&all, &[&[0, 3], &[1, 4, 5], &[2]]);
+        let view = MergedView::new(
+            parts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| service(&dir.join(format!("s{i}")), p, 6))
+                .collect(),
+        );
+        assert_eq!(view.num_segments(), 3);
+        for seq in [2u64, 40, 41, 999] {
+            assert_eq!(*view.by_sequence(seq).unwrap(), *full.by_sequence(seq).unwrap());
+            assert_eq!(
+                *view.duration_histogram(seq, 4).unwrap(),
+                *full.duration_histogram(seq, 4).unwrap()
+            );
+            assert_eq!(
+                *view.patients_with(seq, 0, 8).unwrap(),
+                *full.patients_with(seq, 0, 8).unwrap()
+            );
+        }
+        for pid in 0..7u32 {
+            assert_eq!(*view.by_patient(pid).unwrap(), *full.by_patient(pid).unwrap());
+        }
+        for k in [0usize, 1, 2, 3, 10] {
+            assert_eq!(
+                *view.top_k_by_support(k).unwrap(),
+                *full.top_k_by_support(k).unwrap()
+            );
+        }
+        let info = view.describe();
+        assert_eq!(info.records, all.len() as u64);
+        assert_eq!(info.sequences, 3);
+        assert_eq!(info.patients, 6);
+    }
+
+    #[test]
+    fn top_k_ties_rank_by_seq_ascending_across_any_layout() {
+        // seqs 40 and 41 both have support 6; their summed cross-segment
+        // supports tie, so the documented order must put 40 first.
+        let dir = tmpdir("ties");
+        let all = fixture();
+        let parts = split_by_pid(&all, &[&[5, 0], &[4, 1, 2, 3]]);
+        let view = MergedView::new(
+            parts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| service(&dir.join(format!("s{i}")), p, 6))
+                .collect(),
+        );
+        let top = view.top_k_by_support(3).unwrap();
+        let order: Vec<u64> = top.iter().map(|s| s.seq).collect();
+        assert_eq!(order, vec![2, 40, 41]);
+        assert_eq!(top[1].patients, top[2].patients);
+    }
+
+    #[test]
+    fn zero_buckets_is_invalid_and_empty_view_answers_empty() {
+        let view = MergedView::new(Vec::new());
+        assert!(matches!(view.duration_histogram(1, 0), Err(QueryError::Invalid(_))));
+        assert!(view.by_sequence(1).unwrap().is_empty());
+        assert!(view.by_patient(1).unwrap().is_empty());
+        assert!(view.top_k_by_support(5).unwrap().is_empty());
+        let h = view.duration_histogram(1, 3).unwrap();
+        assert_eq!(h.total, 0);
+        assert!(h.buckets.is_empty());
+        assert_eq!(view.describe().records, 0);
+    }
+}

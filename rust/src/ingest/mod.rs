@@ -1,0 +1,395 @@
+//! Incremental ingest — immutable index segments under one manifest.
+//!
+//! Every [`crate::query::SeqIndex`] artifact is immutable once built,
+//! which makes it a natural **segment** of a growing dataset: instead of
+//! re-mining the whole cohort when a new batch of records arrives,
+//! `tspm ingest` mines just the delta into its *own* artifact and adds
+//! it to a [`SegmentSet`]. Queries then run over all segments at once
+//! through [`MergedView`] (the [`crate::query::QuerySurface`] trait
+//! implemented by bounded k-way merge), and [`compact`] periodically
+//! folds K segments back into one artifact in a single bounded-memory
+//! merge pass. This is the LSM shape: writes append segments, reads
+//! merge, compaction restores the one-artifact fast path.
+//!
+//! ## The segment-set manifest
+//!
+//! A segment set is a directory holding segment subdirectories (each a
+//! complete v2 index artifact) plus one manifest file:
+//!
+//! ```text
+//! segments.json   {"format": "tspm-segset", "version": 1,
+//!                  "next_segment": N, "segments": ["seg_0000", ...],
+//!                  "checksum": "<fnv-1a 64 hex>"}
+//! seg_0000/       immutable v2 index artifact (manifest.json, data,
+//! seg_0001/       blocks, seqs, pdata, pids) — never rewritten
+//! lookup.json     cohort string tables, extended by each ingest so
+//!                 delta cohorts share one dense pid/phenX id space
+//! ```
+//!
+//! `segments.json` is the *only* mutable file, and it is only ever
+//! replaced atomically: writers serialize the new manifest to
+//! `segments.json.tmp` and `rename(2)` it over the old one, so a reader
+//! (or a crash) sees either the old complete set or the new complete
+//! set, never a mix. Segment names come from the monotonically
+//! increasing `next_segment` counter and are **never reused**, so a
+//! retired segment directory can linger (crash between rename and
+//! cleanup) without ever being mistaken for live data. The `checksum`
+//! field is FNV-1a 64 over the segment names and the counter, so a
+//! truncated or hand-edited manifest is a typed error, not a silently
+//! smaller set.
+//!
+//! ## Compatibility guarantee
+//!
+//! The `(format, version)` pair gates every read, exactly like the
+//! artifact manifests documented in [`crate::query`]: [`SegmentSet::open`]
+//! accepts only `"tspm-segset"` version [`SEGSET_FORMAT_VERSION`] and
+//! fails loudly on anything else. The segments themselves are ordinary
+//! v2 artifacts under the [`crate::query`] compatibility rules — a
+//! segment set never changes what is *inside* a segment, so artifact
+//! readers and segment readers can evolve independently.
+//!
+//! ## The correctness contract
+//!
+//! Segments partition the cohort **by patient**: one patient's records
+//! live in exactly one segment (the CLI enforces this by splitting
+//! deltas at patient boundaries, and per-segment distinct-patient
+//! counts stay exact under that partition). Under this contract the
+//! whole query surface over a [`MergedView`] is byte-identical to a
+//! single artifact built from the union cohort, and a compacted
+//! artifact is bit-identical to a fresh full-cohort index — both
+//! properties enforced by `rust/tests/ingest_conformance.rs` on every
+//! adversarial cohort shape.
+
+pub mod compact;
+pub mod merged;
+
+pub use compact::{compact, CompactConfig};
+pub use merged::MergedView;
+
+use crate::metrics::MemTracker;
+use crate::query::index::{self, checksum_hex, fnv1a64, IndexConfig, FNV1A64_INIT};
+use crate::query::{QueryError, SeqIndex};
+use crate::seqstore::SeqFileSet;
+use std::path::{Path, PathBuf};
+
+/// Manifest `format` tag of a segment set.
+pub const SEGSET_FORMAT: &str = "tspm-segset";
+/// Current (and only) segment-set manifest version.
+pub const SEGSET_FORMAT_VERSION: u64 = 1;
+
+/// The one mutable file of a segment set — always swapped atomically.
+const SEGSET_MANIFEST: &str = "segments.json";
+
+/// A set of immutable index segments under one atomically-swapped
+/// manifest. See the [module docs](self) for the on-disk format.
+#[derive(Debug)]
+pub struct SegmentSet {
+    dir: PathBuf,
+    segments: Vec<String>,
+    next_segment: u64,
+}
+
+/// Checksum pinned by the manifest: the segment names and the counter,
+/// in order, with a separator no name can contain.
+fn manifest_checksum(segments: &[String], next_segment: u64) -> String {
+    let mut h = FNV1A64_INIT;
+    for name in segments {
+        h = fnv1a64(h, name.as_bytes());
+        h = fnv1a64(h, b"\n");
+    }
+    h = fnv1a64(h, &next_segment.to_le_bytes());
+    checksum_hex(h)
+}
+
+impl SegmentSet {
+    /// Create an empty segment set at `dir` (created if missing) and
+    /// commit its manifest. Fails if a manifest already exists there.
+    pub fn init(dir: &Path) -> Result<SegmentSet, QueryError> {
+        std::fs::create_dir_all(dir)?;
+        if dir.join(SEGSET_MANIFEST).exists() {
+            return Err(QueryError::Invalid(format!(
+                "segment set already initialized at {}",
+                dir.display()
+            )));
+        }
+        let set =
+            SegmentSet { dir: dir.to_path_buf(), segments: Vec::new(), next_segment: 0 };
+        set.commit()?;
+        Ok(set)
+    }
+
+    /// Open the segment set at `dir`, validating manifest format,
+    /// version and checksum, and that every listed segment directory
+    /// exists.
+    pub fn open(dir: &Path) -> Result<SegmentSet, QueryError> {
+        let path = dir.join(SEGSET_MANIFEST);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            QueryError::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let v = crate::json::Json::parse(&text).map_err(|e| {
+            QueryError::Artifact(format!("bad json in {}: {e}", path.display()))
+        })?;
+        let field = |k: &str| {
+            v.get(k).ok_or_else(|| {
+                QueryError::Artifact(format!("{} missing field {k:?}", path.display()))
+            })
+        };
+        let format = field("format")?.as_str().unwrap_or_default().to_string();
+        if format != SEGSET_FORMAT {
+            return Err(QueryError::Artifact(format!(
+                "{} has format {format:?}, want {SEGSET_FORMAT:?}",
+                path.display()
+            )));
+        }
+        let version = field("version")?.as_u64().unwrap_or(0);
+        if version != SEGSET_FORMAT_VERSION {
+            return Err(QueryError::Artifact(format!(
+                "{} has version {version}, this build reads {SEGSET_FORMAT_VERSION}",
+                path.display()
+            )));
+        }
+        let next_segment = field("next_segment")?.as_u64().ok_or_else(|| {
+            QueryError::Artifact(format!("{} next_segment is not a u64", path.display()))
+        })?;
+        let mut segments = Vec::new();
+        for s in field("segments")?.as_arr().ok_or_else(|| {
+            QueryError::Artifact(format!("{} segments is not an array", path.display()))
+        })? {
+            let name = s.as_str().ok_or_else(|| {
+                QueryError::Artifact(format!(
+                    "{} segments holds a non-string entry",
+                    path.display()
+                ))
+            })?;
+            segments.push(name.to_string());
+        }
+        let want = field("checksum")?.as_str().unwrap_or_default().to_string();
+        let got = manifest_checksum(&segments, next_segment);
+        if want != got {
+            return Err(QueryError::Artifact(format!(
+                "{} checksum mismatch: manifest says {want}, contents hash to {got}",
+                path.display()
+            )));
+        }
+        for name in &segments {
+            if !dir.join(name).join("manifest.json").is_file() {
+                return Err(QueryError::Artifact(format!(
+                    "segment set lists {name:?} but {} has no such artifact",
+                    dir.display()
+                )));
+            }
+        }
+        Ok(SegmentSet { dir: dir.to_path_buf(), segments, next_segment })
+    }
+
+    /// [`open`](SegmentSet::open) if a manifest exists at `dir`, else
+    /// [`init`](SegmentSet::init) — the `tspm ingest` entry point.
+    pub fn open_or_init(dir: &Path) -> Result<SegmentSet, QueryError> {
+        if dir.join(SEGSET_MANIFEST).is_file() {
+            SegmentSet::open(dir)
+        } else {
+            SegmentSet::init(dir)
+        }
+    }
+
+    /// The set's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Live segment names, oldest first.
+    pub fn segments(&self) -> &[String] {
+        &self.segments
+    }
+
+    /// Absolute directories of the live segments, oldest first.
+    pub fn segment_dirs(&self) -> Vec<PathBuf> {
+        self.segments.iter().map(|s| self.dir.join(s)).collect()
+    }
+
+    /// Number of live segments.
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// True when the set holds no segments yet.
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// The next segment name the set will allocate (for tests/tools).
+    pub fn next_segment(&self) -> u64 {
+        self.next_segment
+    }
+
+    /// Atomically replace `segments.json` with the current in-memory
+    /// state: serialize to `segments.json.tmp`, then `rename(2)` over
+    /// the live manifest. A reader never observes a partial manifest.
+    pub(crate) fn commit(&self) -> Result<(), QueryError> {
+        use crate::json::Json;
+        let m = Json::obj(vec![
+            ("format", Json::from(SEGSET_FORMAT)),
+            ("version", Json::from(SEGSET_FORMAT_VERSION)),
+            ("next_segment", Json::from(self.next_segment)),
+            (
+                "segments",
+                Json::Arr(self.segments.iter().map(|s| Json::from(s.as_str())).collect()),
+            ),
+            (
+                "checksum",
+                Json::from(manifest_checksum(&self.segments, self.next_segment).as_str()),
+            ),
+        ]);
+        let tmp = self.dir.join(format!("{SEGSET_MANIFEST}.tmp"));
+        std::fs::write(&tmp, m.to_string_pretty())?;
+        std::fs::rename(&tmp, self.dir.join(SEGSET_MANIFEST))?;
+        Ok(())
+    }
+
+    /// Swap the whole live set for the single segment `name` (already
+    /// renamed into place by the compactor) and commit. Returns the
+    /// retired segment names for cleanup. On a failed commit the
+    /// in-memory state rolls back to match the still-live old manifest;
+    /// the caller owns removing the orphaned new directory.
+    pub(crate) fn commit_replacement(
+        &mut self,
+        name: String,
+    ) -> Result<Vec<String>, QueryError> {
+        let old = std::mem::replace(&mut self.segments, vec![name]);
+        self.next_segment += 1;
+        if let Err(e) = self.commit() {
+            self.segments = old;
+            self.next_segment -= 1;
+            return Err(e);
+        }
+        Ok(old)
+    }
+
+    /// Build `input` (a sorted, screened record run — the same thing
+    /// `tspm index` consumes) into a brand-new segment and commit it to
+    /// the set. The artifact is built in a hidden temp directory and
+    /// renamed into place before the manifest swap, so a crash at any
+    /// point leaves either the old set or the new set — never a
+    /// half-built segment behind a live manifest entry.
+    pub fn add_segment(
+        &mut self,
+        input: &SeqFileSet,
+        cfg: &IndexConfig,
+        tracker: Option<&MemTracker>,
+    ) -> Result<SeqIndex, QueryError> {
+        let name = format!("seg_{:04}", self.next_segment);
+        let tmp = self.dir.join(format!(".seg_{:04}.tmp", self.next_segment));
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp)?;
+        }
+        if let Err(e) = index::build(input, &tmp, cfg, tracker) {
+            let _ = std::fs::remove_dir_all(&tmp);
+            return Err(e);
+        }
+        let final_dir = self.dir.join(&name);
+        if let Err(e) = std::fs::rename(&tmp, &final_dir) {
+            let _ = std::fs::remove_dir_all(&tmp);
+            return Err(e.into());
+        }
+        self.segments.push(name);
+        self.next_segment += 1;
+        if let Err(e) = self.commit() {
+            // Roll back the in-memory state to match the live manifest;
+            // the orphan directory is harmless (its name is spent).
+            let name = self.segments.pop().expect("just pushed");
+            self.next_segment -= 1;
+            let _ = std::fs::remove_dir_all(self.dir.join(&name));
+            return Err(e);
+        }
+        SeqIndex::open(&final_dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::SeqRecord;
+    use crate::seqstore;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tspm_ingest_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fileset(dir: &Path, records: &[SeqRecord]) -> SeqFileSet {
+        let path = dir.join("run.tspm");
+        seqstore::write_file(&path, records).unwrap();
+        SeqFileSet {
+            files: vec![path],
+            total_records: records.len() as u64,
+            num_patients: 8,
+            num_phenx: 4,
+        }
+    }
+
+    #[test]
+    fn init_open_roundtrip_and_checksum_gate() {
+        let dir = tmpdir("roundtrip");
+        let set = SegmentSet::init(&dir).unwrap();
+        assert!(set.is_empty());
+        assert!(SegmentSet::init(&dir).is_err(), "double init must fail");
+        let reopened = SegmentSet::open(&dir).unwrap();
+        assert_eq!(reopened.segments(), &[] as &[String]);
+        assert_eq!(reopened.next_segment(), 0);
+
+        // A hand-edited manifest (extra segment, stale checksum) is a
+        // typed artifact error, not a silently different set.
+        let path = dir.join(SEGSET_MANIFEST);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("[]", "[\"seg_0000\"]")).unwrap();
+        match SegmentSet::open(&dir) {
+            Err(QueryError::Artifact(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn add_segment_commits_atomically_and_numbers_monotonically() {
+        let dir = tmpdir("add");
+        let mut set = SegmentSet::open_or_init(&dir).unwrap();
+        let recs: Vec<SeqRecord> =
+            (0..8).map(|p| SeqRecord { seq: 5, pid: p, duration: p }).collect();
+        let sub = tmpdir("add_input");
+        let idx = set
+            .add_segment(&fileset(&sub, &recs), &IndexConfig::default(), None)
+            .unwrap();
+        assert_eq!(idx.total_records, 8);
+        assert_eq!(set.segments(), &["seg_0000".to_string()]);
+        assert_eq!(set.next_segment(), 1);
+        // The committed manifest round-trips and the artifact opens.
+        let reopened = SegmentSet::open(&dir).unwrap();
+        assert_eq!(reopened.segments(), set.segments());
+        SeqIndex::open(&reopened.segment_dirs()[0]).unwrap();
+        // No temp debris.
+        assert!(!dir.join(".seg_0000.tmp").exists());
+        assert!(!dir.join(format!("{SEGSET_MANIFEST}.tmp")).exists());
+    }
+
+    #[test]
+    fn failed_build_leaves_manifest_and_disk_untouched() {
+        let dir = tmpdir("fail");
+        let mut set = SegmentSet::open_or_init(&dir).unwrap();
+        let before = std::fs::read_to_string(dir.join(SEGSET_MANIFEST)).unwrap();
+        // Unsorted input: index::build rejects it mid-stream.
+        let recs =
+            vec![SeqRecord { seq: 9, pid: 0, duration: 0 }, SeqRecord { seq: 1, pid: 0, duration: 0 }];
+        let sub = tmpdir("fail_input");
+        assert!(set
+            .add_segment(&fileset(&sub, &recs), &IndexConfig::default(), None)
+            .is_err());
+        assert_eq!(set.next_segment(), 0, "failed add must not burn a name");
+        let after = std::fs::read_to_string(dir.join(SEGSET_MANIFEST)).unwrap();
+        assert_eq!(before, after, "manifest bytes must be untouched");
+        assert!(!dir.join("seg_0000").exists());
+        assert!(!dir.join(".seg_0000.tmp").exists());
+    }
+}

@@ -136,6 +136,34 @@
 //! The wire protocol (frame layout, version gate, error codes) is a
 //! compatibility contract documented in the [`serve`] module.
 //!
+//! ### Ingest continuously
+//!
+//! Cohorts grow; re-mining everything per delta does not scale. The
+//! [`ingest`] subsystem treats index artifacts as **immutable segments**
+//! under a versioned, checksummed, atomically-swapped segment-set
+//! manifest (`segments.json` — format documented in the [`ingest`]
+//! module): `tspm ingest` (or `.ingest(set_dir)` on the engine) mines
+//! *only the delta cohort* — encoded against the set's persisted
+//! vocabulary so every segment shares one id space — and commits it as
+//! a new segment. [`ingest::MergedView`] answers the **full query
+//! surface** over all segments by bounded k-way merge, byte-identical
+//! to a single artifact of the union cohort as long as segments hold
+//! disjoint patients (the set's correctness contract), and
+//! [`ingest::compact`] folds the segments back into one artifact in a
+//! single bounded-memory merge pass — bit-identical to a fresh
+//! `tspm index` of the union, crash-safe at every step. The daemon
+//! serves a set as one artifact (`tspm serve --set-dir`, hot-swappable
+//! mid-workload). [`query::QuerySurface`] is the shared seam: one
+//! artifact and a merged set answer through the same trait object.
+//!
+//! ```text
+//! tspm ingest  --input delta1.csv --set-dir set/   # seg_0000
+//! tspm ingest  --input delta2.csv --set-dir set/   # seg_0001
+//! tspm query   --set-dir set/ --top-k 10           # merged view
+//! tspm compact --set-dir set/                      # fold to one segment
+//! tspm serve   --set-dir set/ --addr 127.0.0.1:7878
+//! ```
+//!
 //! ### The out-of-core ML chain
 //!
 //! The index also feeds the ML layer without materialization:
@@ -182,7 +210,8 @@
 //!    comparison), [`partition`] (adaptive memory partitioning),
 //!    [`pipeline`] (streaming orchestrator with backpressure).
 //! 3. **Analytics on mined sequences** — [`query`] (indexed artifacts +
-//!    cached query service over spilled results), [`serve`] (the
+//!    cached query service over spilled results), [`ingest`] (incremental
+//!    segment sets, merged views, compaction), [`serve`] (the
 //!    concurrent query daemon + wire protocol), [`util`] (sequence
 //!    filters and transitive end-sets), [`matrix`] (patient×sequence matrices),
 //!    [`msmr`] (MSMR feature selection via joint mutual information),
@@ -207,6 +236,7 @@ pub mod cli;
 pub mod config;
 pub mod dbmart;
 pub mod engine;
+pub mod ingest;
 pub mod json;
 pub mod matrix;
 pub mod metrics;
@@ -234,10 +264,11 @@ pub mod prelude {
         BackendChoice, BackendKind, Engine, OutputChoice, OutputKind, Plan, RunOutput,
         RunReport, SequenceOutput, Stage, TspmError,
     };
+    pub use crate::ingest::{compact, CompactConfig, MergedView, SegmentSet};
     pub use crate::matrix::{MatrixError, SeqMatrix};
     pub use crate::mining::{MiningConfig, MiningMode, SeqRecord, SequenceSet};
     pub use crate::msmr::MsmrConfig;
-    pub use crate::query::{QueryService, SeqIndex};
+    pub use crate::query::{QueryService, QuerySurface, SeqIndex, SurfaceInfo};
     pub use crate::serve::{Client, Registry, ServeConfig, ServeError, Server};
     pub use crate::sparsity::SparsityConfig;
     pub use crate::synthea::SyntheaConfig;

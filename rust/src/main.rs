@@ -6,7 +6,10 @@
 //! * `mine`      — mine transitive sequences from a dbmart CSV
 //! * `screen`    — sparsity-screen a mined sequence file
 //! * `index`     — build a query-index artifact over a spilled run
-//! * `query`     — point/range queries against an index artifact (JSON out)
+//! * `ingest`    — mine a delta cohort into a new segment of a segment set
+//! * `compact`   — fold a segment set into one artifact (bounded merge)
+//! * `query`     — point/range queries against an index artifact or a
+//!   segment set's merged view (JSON out)
 //! * `serve`     — long-lived query daemon over one or more index artifacts
 //! * `client`    — talk to a running daemon (also the serve e2e harness)
 //! * `matrix`    — build the patient×sequence CSR straight from an index
@@ -30,13 +33,14 @@ use std::time::Duration;
 use tspm_plus::bench_util::experiments;
 use tspm_plus::cli::{usage, Args, OptSpec};
 use tspm_plus::config::RunConfig;
-use tspm_plus::dbmart::{format_seq, DbMart, NumericDbMart};
+use tspm_plus::dbmart::{format_seq, DbMart, LookupTables, NumericDbMart};
 use tspm_plus::engine::{BackendChoice, Engine, OutputChoice, SequenceOutput};
+use tspm_plus::ingest::{compact, CompactConfig, MergedView, SegmentSet};
 use tspm_plus::json::Json;
 use tspm_plus::metrics::{fmt_bytes, PhaseTimer};
 use tspm_plus::mining::MiningConfig;
 use tspm_plus::postcovid::{self, PostCovidConfig};
-use tspm_plus::query::{self, IndexConfig, QueryService, DEFAULT_CACHE_BYTES};
+use tspm_plus::query::{self, IndexConfig, QuerySurface, DEFAULT_CACHE_BYTES};
 use tspm_plus::runtime::ArtifactSet;
 use tspm_plus::serve::{
     self, registry::open_service, Client, Registry, ServeConfig, ServeError, Server,
@@ -83,6 +87,8 @@ fn main() -> ExitCode {
         "mine" => cmd_mine(rest).map_err(CmdError::from),
         "screen" => cmd_screen(rest).map_err(CmdError::from),
         "index" => cmd_index(rest).map_err(CmdError::from),
+        "ingest" => cmd_ingest(rest).map_err(CmdError::from),
+        "compact" => cmd_compact(rest),
         "query" => cmd_query(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
@@ -114,7 +120,9 @@ fn print_global_help() {
          \x20 mine       mine transitive sequences (+durations) from a dbmart CSV\n\
          \x20 screen     sparsity-screen a mined sequence file\n\
          \x20 index      build a query-index artifact over a spilled run\n\
-         \x20 query      point/range queries against an index (JSON output)\n\
+         \x20 ingest     mine a delta cohort into a new segment of a segment set\n\
+         \x20 compact    fold a segment set into one artifact (bounded merge)\n\
+         \x20 query      point/range queries against an index or segment set (JSON output)\n\
          \x20 serve      long-lived query daemon over index artifacts\n\
          \x20 client     talk to a running daemon (queries, workload, admin)\n\
          \x20 matrix     patient×sequence CSR straight from an index (JSON output)\n\
@@ -490,6 +498,170 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
 }
 
 // ---------------------------------------------------------------------------
+// ingest / compact
+// ---------------------------------------------------------------------------
+
+fn cmd_ingest(argv: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec::required("input", "delta dbmart CSV path"),
+        OptSpec::required("set-dir", "segment-set directory (created on first ingest)"),
+        OptSpec::value("block-size", Some("4096"), "records per index block of the segment"),
+        OptSpec::value(
+            "sparsity",
+            Some("1"),
+            "min patients per sequence *within the delta* (1 = keep everything; \
+             per-segment thresholds > 1 are not equivalent to screening the union)",
+        ),
+        OptSpec::value("threads", Some("0"), "worker threads (0 = auto)"),
+        OptSpec::value("duration-unit", Some("1"), "duration unit in days (match the base)"),
+        OptSpec::value("memory-budget-mb", Some("4096"), "budget for the mine+screen run"),
+    ];
+    if wants_help(argv) {
+        print!(
+            "{}",
+            usage(
+                "tspm ingest",
+                "mine a delta cohort into a new immutable segment of a segment set. \
+                 Segments must hold disjoint patients; the set-level lookup.json keeps \
+                 one id space across deltas (`tspm query --set-dir` reads the merged \
+                 view, `tspm compact` folds the set back to one artifact)",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let set_dir = PathBuf::from(a.get("set-dir").unwrap());
+    let block_records: usize = a.req("block-size").map_err(|e| e.to_string())?;
+    let threads: usize = a.req("threads").map_err(|e| e.to_string())?;
+    let min_patients: u32 = a.req("sparsity").map_err(|e| e.to_string())?;
+    if min_patients == 0 {
+        return Err("ingest needs --sparsity ≥ 1 (segments hold sorted, screened \
+                    records; 1 keeps every sequence)"
+            .into());
+    }
+    let budget_mb: u64 = a.req("memory-budget-mb").map_err(|e| e.to_string())?;
+    let mut timer = PhaseTimer::new();
+
+    // Encode the delta against the set's persisted vocabulary so every
+    // segment shares one dense id space; first ingest starts it.
+    let raw = timer
+        .run("load", || DbMart::read_csv(Path::new(a.get("input").unwrap())))
+        .map_err(|e| e.to_string())?;
+    let lookup_path = set_dir.join("lookup.json");
+    let base = if lookup_path.is_file() {
+        let text = std::fs::read_to_string(&lookup_path).map_err(|e| e.to_string())?;
+        let json = Json::parse(&text)
+            .map_err(|e| format!("{}: {e}", lookup_path.display()))?;
+        LookupTables::from_json(&json)
+            .ok_or_else(|| format!("{}: not a lookup table", lookup_path.display()))?
+    } else {
+        LookupTables::default()
+    };
+    let db = timer
+        .run("encode", || NumericDbMart::try_encode_with(&raw, &base))
+        .map_err(|e| e.to_string())?;
+
+    let duration_unit: u32 = a.req("duration-unit").map_err(|e| e.to_string())?;
+    let work = std::env::temp_dir().join(format!("tspm_ingest_{}", std::process::id()));
+    let result = timer.run("run", || {
+        Engine::from_dbmart(db)
+            .memory_budget(budget_mb << 20)
+            .mine(MiningConfig {
+                threads,
+                duration_unit_days: duration_unit,
+                work_dir: work.join("mine"),
+                ..Default::default()
+            })
+            .screen(SparsityConfig { min_patients, threads })
+            .out_dir(work.join("run"))
+            .ingest_with(set_dir.clone(), block_records)
+            .run()
+    });
+    let result = match result {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&work);
+            return Err(e.to_string());
+        }
+    };
+    let built = result.index.expect("ingest plan returns the committed segment");
+
+    // Persist the union vocabulary atomically only after the segment
+    // committed — a crash leaves the old lookup and the old manifest.
+    let tmp = set_dir.join("lookup.json.tmp");
+    std::fs::write(&tmp, result.db.lookup.to_json().to_string_pretty())
+        .map_err(|e| e.to_string())?;
+    std::fs::rename(&tmp, &lookup_path).map_err(|e| e.to_string())?;
+    let _ = std::fs::remove_dir_all(&work);
+
+    let set = SegmentSet::open(&set_dir).map_err(|e| e.to_string())?;
+    println!(
+        "ingested {} rows → segment {} ({} records, {} distinct sequences, {}); \
+         set {} now holds {} segment(s); union vocabulary {} patients / {} phenX",
+        raw.len(),
+        built.dir.file_name().and_then(|s| s.to_str()).unwrap_or("?"),
+        built.total_records,
+        built.distinct_seqs(),
+        fmt_bytes(built.artifact_bytes),
+        set_dir.display(),
+        set.len(),
+        result.db.num_patients(),
+        result.db.num_phenx(),
+    );
+    print!("{}", result.report.render());
+    print!("{}", timer.report());
+    Ok(())
+}
+
+fn cmd_compact(argv: &[String]) -> Result<(), CmdError> {
+    let spec = [
+        OptSpec::required("set-dir", "segment-set directory (tspm ingest --set-dir)"),
+        OptSpec::value("block-size", Some("4096"), "records per index block of the output"),
+        OptSpec::value("memory-budget-mb", Some("64"), "merge-buffer budget"),
+    ];
+    if wants_help(argv) {
+        print!(
+            "{}",
+            usage(
+                "tspm compact",
+                "fold every segment of a set into one artifact in a bounded-memory \
+                 merge (bit-identical to a fresh index of the union); the manifest \
+                 swaps atomically, so a crash leaves the old segments live",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let a = Args::parse(argv, &spec).map_err(|e| e.to_string())?;
+    let set_dir = PathBuf::from(a.get("set-dir").unwrap());
+    let budget_mb: usize = a.req("memory-budget-mb").map_err(|e| e.to_string())?;
+    let mut timer = PhaseTimer::new();
+    let mut set = SegmentSet::open(&set_dir)
+        .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: format!("{}: {e}", set_dir.display()) })?;
+    let folded = set.len();
+    let cfg = CompactConfig {
+        block_records: a.req("block-size").map_err(|e| e.to_string())?,
+        buffer_bytes: budget_mb << 20,
+        ..Default::default()
+    };
+    let built = timer
+        .run("compact", || compact(&mut set, &cfg, None))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "compacted {} segment(s) → {} ({} records, {} distinct sequences, {} blocks, {})",
+        folded,
+        built.dir.display(),
+        built.total_records,
+        built.distinct_seqs(),
+        built.blocks.len(),
+        fmt_bytes(built.artifact_bytes),
+    );
+    print!("{}", timer.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // matrix
 // ---------------------------------------------------------------------------
 
@@ -572,7 +744,13 @@ struct QuerySpec {
 
 fn cmd_query(argv: &[String]) -> Result<(), CmdError> {
     let spec = [
-        OptSpec::required("index-dir", "index artifact directory (tspm index --out-dir)"),
+        OptSpec::value("index-dir", None, "index artifact directory (tspm index --out-dir)"),
+        OptSpec::value(
+            "set-dir",
+            None,
+            "segment-set directory (tspm ingest --set-dir) — query the merged view \
+             over every segment; alternative to --index-dir",
+        ),
         OptSpec::value("seq", None, "sequence id — return its records"),
         OptSpec::value("pid", None, "patient id — return all of the patient's records"),
         OptSpec::value("top-k", None, "return the k sequences with the most distinct patients"),
@@ -614,14 +792,26 @@ fn cmd_query(argv: &[String]) -> Result<(), CmdError> {
     // A missing/garbled artifact is a *distinct* failure class (exit
     // code 3, message naming the path) so orchestration — and serve's
     // registry, which shares open_service — can tell "bad artifact"
-    // apart from "bad query".
-    let svc = open_service(&PathBuf::from(a.get("index-dir").unwrap()), DEFAULT_CACHE_BYTES)
-        .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?;
+    // apart from "bad query". Both sources answer through the same
+    // QuerySurface, so the query shapes below never notice which one
+    // they run against.
+    let svc: Box<dyn QuerySurface> = match (a.get("index-dir"), a.get("set-dir")) {
+        (Some(dir), None) => Box::new(
+            open_service(&PathBuf::from(dir), DEFAULT_CACHE_BYTES)
+                .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?,
+        ),
+        (None, Some(dir)) => Box::new(
+            MergedView::open(&PathBuf::from(dir), DEFAULT_CACHE_BYTES).map_err(|e| {
+                CmdError { code: EXIT_ARTIFACT, message: format!("{dir}: {e}") }
+            })?,
+        ),
+        _ => return Err("pick exactly one of --index-dir, --set-dir".into()),
+    };
     let mut latencies: Vec<f64> = Vec::with_capacity(repeat);
     let mut body = Json::Null;
     for _ in 0..repeat {
         let t = std::time::Instant::now();
-        body = run_query(&svc, &q)?;
+        body = run_query(svc.as_ref(), &q)?;
         latencies.push(t.elapsed().as_secs_f64() * 1e3);
     }
     let Json::Obj(mut obj) = body else { unreachable!("run_query returns objects") };
@@ -647,7 +837,7 @@ fn cmd_query(argv: &[String]) -> Result<(), CmdError> {
     Ok(())
 }
 
-fn run_query(svc: &QueryService, q: &QuerySpec) -> Result<Json, String> {
+fn run_query(svc: &dyn QuerySurface, q: &QuerySpec) -> Result<Json, String> {
     if let Some(k) = q.top_k {
         let got = svc.top_k_by_support(k).map_err(|e| e.to_string())?;
         return Ok(Json::obj(vec![
@@ -764,10 +954,17 @@ fn run_query(svc: &QueryService, q: &QuerySpec) -> Result<Json, String> {
 
 fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
     let spec = [
-        OptSpec::required(
+        OptSpec::value(
             "index-dir",
+            None,
             "index artifact directory; repeatable (--index-dir a --index-dir b), \
              artifact id = directory name",
+        ),
+        OptSpec::value(
+            "set-dir",
+            None,
+            "segment-set directory, served as ONE merged artifact (id = directory \
+             name); repeatable and mixable with --index-dir",
         ),
         OptSpec::value("addr", Some("127.0.0.1:7878"), "listen address (host:port)"),
         OptSpec::value("max-conns", Some("64"), "connections before shedding with busy"),
@@ -782,20 +979,33 @@ fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
     let cache_mb: usize = a.req("cache-mb").map_err(|e| e.to_string())?;
     let cache_bytes = cache_mb << 20;
     let registry = Arc::new(Registry::new(cache_bytes));
-    for dir in a.get_all("index-dir") {
-        let path = PathBuf::from(dir);
-        let id = path
-            .file_name()
+    if a.get_all("index-dir").is_empty() && a.get_all("set-dir").is_empty() {
+        return Err("need at least one --index-dir or --set-dir".into());
+    }
+    let display_id = |path: &Path| {
+        path.file_name()
             .and_then(|s| s.to_str())
             .filter(|s| !s.is_empty())
             .unwrap_or("index")
-            .to_string();
+            .to_string()
+    };
+    for dir in a.get_all("index-dir") {
+        let path = PathBuf::from(dir);
+        let id = display_id(&path);
         // Same failure class and exit code as `tspm query` on a bad
         // artifact: code 3, message naming the path.
         let svc = open_service(&path, cache_bytes)
             .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?;
         registry.register(&id, Arc::new(svc)).map_err(|e| e.to_string())?;
         eprintln!("registered artifact {id:?} from {}", path.display());
+    }
+    for dir in a.get_all("set-dir") {
+        let path = PathBuf::from(dir);
+        let id = display_id(&path);
+        registry
+            .open_and_register_set(&id, &path)
+            .map_err(|e| CmdError { code: EXIT_ARTIFACT, message: e.to_string() })?;
+        eprintln!("registered segment set {id:?} from {}", path.display());
     }
     let cfg = ServeConfig {
         max_conns: a.req("max-conns").map_err(|e| e.to_string())?,

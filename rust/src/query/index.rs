@@ -42,10 +42,13 @@ pub const SPILL_FORMAT_VERSION: u64 = 1;
 pub const DEFAULT_BLOCK_RECORDS: usize = 4096;
 
 const MANIFEST_FILE: &str = "manifest.json";
-const DATA_FILE: &str = "data_0000.tspm";
+// The data-file names are pub(crate): the segment compactor
+// ([`crate::ingest`]) streams its merge output straight into them and
+// then reuses [`write_tables_and_manifest`] for everything else.
+pub(crate) const DATA_FILE: &str = "data_0000.tspm";
 const BLOCKS_FILE: &str = "blocks.bin";
 const SEQS_FILE: &str = "seqs.bin";
-const PDATA_FILE: &str = "pdata_0000.tspm";
+pub(crate) const PDATA_FILE: &str = "pdata_0000.tspm";
 const PIDS_FILE: &str = "pids.bin";
 
 const BLOCKS_MAGIC: &[u8; 8] = b"TSPMBIX1";
@@ -81,7 +84,7 @@ pub fn fnv1a64(mut state: u64, bytes: &[u8]) -> u64 {
     state
 }
 
-fn checksum_hex(h: u64) -> String {
+pub(crate) fn checksum_hex(h: u64) -> String {
     format!("{h:016x}")
 }
 
@@ -707,12 +710,7 @@ fn build_impl(
     let data_path = out_dir.join(DATA_FILE);
     let mut writer = SeqWriter::create(&data_path)?;
 
-    let mut blocks: Vec<BlockMeta> = Vec::new();
-    let mut seqs: Vec<SeqTableEntry> = Vec::new();
-    let mut block = BlockMeta::default();
-    let mut se = SeqTableEntry::default();
-    let mut seq_open = false;
-    let mut last_pid_in_seq = 0u32;
+    let mut tables = TableAccum::new(block_records);
     let mut prev: Option<SeqRecord> = None;
     let mut data_fnv = FNV1A64_INIT;
     let mut n = 0u64;
@@ -767,57 +765,7 @@ fn build_impl(
                 data_fnv = fnv1a64(data_fnv, &encoded);
                 file_fnv = fnv1a64(file_fnv, &encoded);
                 file_records += 1;
-
-                // Block accounting (len == 0 means "no open block").
-                if block.len == 0 {
-                    block = BlockMeta {
-                        start: n,
-                        len: 0,
-                        first_seq: r.seq,
-                        first_pid: r.pid,
-                        last_seq: r.seq,
-                        last_pid: r.pid,
-                        pid_min: r.pid,
-                        pid_max: r.pid,
-                        dur_min: r.duration,
-                        dur_max: r.duration,
-                    };
-                }
-                block.len += 1;
-                block.last_seq = r.seq;
-                block.last_pid = r.pid;
-                block.pid_min = block.pid_min.min(r.pid);
-                block.pid_max = block.pid_max.max(r.pid);
-                block.dur_min = block.dur_min.min(r.duration);
-                block.dur_max = block.dur_max.max(r.duration);
-                if block.len as usize >= block_records {
-                    blocks.push(block);
-                    block.len = 0;
-                }
-
-                // Per-sequence accounting.
-                if !seq_open || se.seq != r.seq {
-                    if seq_open {
-                        seqs.push(se);
-                    }
-                    se = SeqTableEntry {
-                        seq: r.seq,
-                        start: n,
-                        count: 0,
-                        patients: 1,
-                        dur_min: r.duration,
-                        dur_max: r.duration,
-                    };
-                    seq_open = true;
-                    last_pid_in_seq = r.pid;
-                } else if r.pid != last_pid_in_seq {
-                    se.patients += 1;
-                    last_pid_in_seq = r.pid;
-                }
-                se.count += 1;
-                se.dur_min = se.dur_min.min(r.duration);
-                se.dur_max = se.dur_max.max(r.duration);
-
+                tables.push(r);
                 n += 1;
             }
         }
@@ -833,12 +781,7 @@ fn build_impl(
             }
         }
     }
-    if block.len > 0 {
-        blocks.push(block);
-    }
-    if seq_open {
-        seqs.push(se);
-    }
+    let (blocks, seqs) = tables.finish();
     untrack((read_cap * RECORD_BYTES) as u64);
     drop(buf);
 
@@ -863,6 +806,148 @@ fn build_impl(
         }
         None => None,
     };
+
+    write_tables_and_manifest(
+        out_dir,
+        block_records,
+        written,
+        input.num_patients,
+        input.num_phenx,
+        data_fnv,
+        blocks,
+        seqs,
+        pid_table,
+        tracker,
+    )
+}
+
+/// Streaming accumulator of the sparse block index and the per-sequence
+/// table: feed records in global `(seq, pid, duration)` order via
+/// [`TableAccum::push`], then [`TableAccum::finish`]. Extracted from the
+/// build pass so the segment compactor ([`crate::ingest`]) derives
+/// **bit-identical** tables from its merge stream — any accounting drift
+/// between the two producers would break the compaction ≡ fresh-build
+/// contract the ingest conformance suite enforces.
+pub(crate) struct TableAccum {
+    block_records: usize,
+    blocks: Vec<BlockMeta>,
+    seqs: Vec<SeqTableEntry>,
+    block: BlockMeta,
+    se: SeqTableEntry,
+    seq_open: bool,
+    last_pid_in_seq: u32,
+    n: u64,
+}
+
+impl TableAccum {
+    pub(crate) fn new(block_records: usize) -> TableAccum {
+        TableAccum {
+            block_records,
+            blocks: Vec::new(),
+            seqs: Vec::new(),
+            block: BlockMeta::default(),
+            se: SeqTableEntry::default(),
+            seq_open: false,
+            last_pid_in_seq: 0,
+            n: 0,
+        }
+    }
+
+    pub(crate) fn push(&mut self, r: SeqRecord) {
+        // Block accounting (len == 0 means "no open block").
+        if self.block.len == 0 {
+            self.block = BlockMeta {
+                start: self.n,
+                len: 0,
+                first_seq: r.seq,
+                first_pid: r.pid,
+                last_seq: r.seq,
+                last_pid: r.pid,
+                pid_min: r.pid,
+                pid_max: r.pid,
+                dur_min: r.duration,
+                dur_max: r.duration,
+            };
+        }
+        self.block.len += 1;
+        self.block.last_seq = r.seq;
+        self.block.last_pid = r.pid;
+        self.block.pid_min = self.block.pid_min.min(r.pid);
+        self.block.pid_max = self.block.pid_max.max(r.pid);
+        self.block.dur_min = self.block.dur_min.min(r.duration);
+        self.block.dur_max = self.block.dur_max.max(r.duration);
+        if self.block.len as usize >= self.block_records {
+            self.blocks.push(self.block);
+            self.block.len = 0;
+        }
+
+        // Per-sequence accounting.
+        if !self.seq_open || self.se.seq != r.seq {
+            if self.seq_open {
+                self.seqs.push(self.se);
+            }
+            self.se = SeqTableEntry {
+                seq: r.seq,
+                start: self.n,
+                count: 0,
+                patients: 1,
+                dur_min: r.duration,
+                dur_max: r.duration,
+            };
+            self.seq_open = true;
+            self.last_pid_in_seq = r.pid;
+        } else if r.pid != self.last_pid_in_seq {
+            self.se.patients += 1;
+            self.last_pid_in_seq = r.pid;
+        }
+        self.se.count += 1;
+        self.se.dur_min = self.se.dur_min.min(r.duration);
+        self.se.dur_max = self.se.dur_max.max(r.duration);
+
+        self.n += 1;
+    }
+
+    pub(crate) fn finish(mut self) -> (Vec<BlockMeta>, Vec<SeqTableEntry>) {
+        if self.block.len > 0 {
+            self.blocks.push(self.block);
+        }
+        if self.seq_open {
+            self.seqs.push(self.se);
+        }
+        (self.blocks, self.seqs)
+    }
+}
+
+/// Serialize the tables, write the manifest, and assemble the
+/// [`SeqIndex`]. The data file(s) must already sit in `out_dir` under
+/// their canonical names ([`DATA_FILE`], and [`PDATA_FILE`] when
+/// `pid_table` is `Some`). Shared verbatim between [`build`] and the
+/// segment compactor so both produce byte-identical artifacts from
+/// identical record streams.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn write_tables_and_manifest(
+    out_dir: &Path,
+    block_records: usize,
+    written: u64,
+    num_patients: u32,
+    num_phenx: u32,
+    data_fnv: u64,
+    blocks: Vec<BlockMeta>,
+    seqs: Vec<SeqTableEntry>,
+    pid_table: Option<(Vec<PidEntry>, String)>,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqIndex, QueryError> {
+    let track = |b: u64| {
+        if let Some(t) = tracker {
+            t.add(b)
+        }
+    };
+    let untrack = |b: u64| {
+        if let Some(t) = tracker {
+            t.sub(b)
+        }
+    };
+    let data_path = out_dir.join(DATA_FILE);
 
     // Serialize the tables with checksums over the full file bytes.
     let blocks_bytes = {
@@ -932,8 +1017,8 @@ fn build_impl(
         ("version", Json::from(version)),
         ("block_records", Json::from(block_records)),
         ("total_records", Json::from(written)),
-        ("num_patients", Json::from(input.num_patients as u64)),
-        ("num_phenx", Json::from(input.num_phenx as u64)),
+        ("num_patients", Json::from(num_patients as u64)),
+        ("num_phenx", Json::from(num_phenx as u64)),
         ("distinct_seqs", Json::from(seqs.len())),
         (
             "data",
@@ -1006,8 +1091,8 @@ fn build_impl(
         version,
         block_records,
         total_records: written,
-        num_patients: input.num_patients,
-        num_phenx: input.num_phenx,
+        num_patients,
+        num_phenx,
         data_checksum,
         artifact_bytes,
         blocks,

@@ -81,10 +81,23 @@
 //! `tspm mine --out-dir` writes next to `lookup.json` uses the same
 //! scheme (`"tspm-spill"`, [`SPILL_FORMAT_VERSION`]) so `tspm index` can
 //! verify its input before building.
+//!
+//! ## Beyond one artifact: segment sets
+//!
+//! An artifact never changes after it is built, which makes it a natural
+//! **segment** of a growing dataset: [`crate::ingest`] groups several
+//! artifacts under a segment-set manifest (`segments.json`, format
+//! `"tspm-segset"`, same versioned + checksummed + atomically-swapped
+//! scheme as the manifests above) and answers the full query surface
+//! over all of them at once. The [`QuerySurface`] trait in this module
+//! is the seam: [`QueryService`] implements it over one artifact,
+//! [`crate::ingest::MergedView`] over a whole set, and the serving layer
+//! routes to either through `Arc<dyn QuerySurface>`.
 
 pub mod cache;
 pub mod index;
 pub mod service;
+pub mod surface;
 
 pub use cache::LruCache;
 pub use index::{
@@ -96,6 +109,7 @@ pub use service::{
     Histogram, HistogramBucket, QueryResult, QueryService, QueryStats, SeqSupport,
     DEFAULT_CACHE_BYTES,
 };
+pub use surface::{QuerySurface, SurfaceInfo};
 
 use std::fmt;
 

@@ -1,0 +1,220 @@
+//! The object-safe query surface — one trait over every answer source.
+//!
+//! [`crate::query::QueryService`] answers over a single artifact;
+//! [`crate::ingest::MergedView`] answers over a whole segment set. The
+//! serving layer ([`crate::serve::Registry`]) and the CLI want to route
+//! to either without caring which, so both implement [`QuerySurface`]:
+//! the full query surface plus a [`describe`](QuerySurface::describe)
+//! summary, all through `&self` (implementations are `Send + Sync`, so
+//! one instance is shared across serving threads behind an `Arc`).
+//!
+//! The trait is deliberately **object-safe** — registries hold
+//! `Arc<dyn QuerySurface>` — which is why streaming uses
+//! [`visit_patient`](QuerySurface::visit_patient) with a `&mut dyn
+//! FnMut` callback over [`QueryError`] instead of the generic
+//! [`crate::query::QueryService::by_patient_visit`]: a caller that must
+//! abort with its own error (a dead socket, say) stashes it, returns a
+//! `QueryError` to stop the scan, and re-raises the stashed error
+//! afterwards (see `serve::server`).
+
+use super::service::{Histogram, QueryService, QueryStats, SeqSupport};
+use super::QueryError;
+use crate::mining::SeqRecord;
+use std::sync::Arc;
+
+/// Size/shape summary of one query surface — what `tspm client --list`
+/// reports per registered artifact or segment set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SurfaceInfo {
+    /// Total records behind the surface (summed across segments).
+    pub records: u64,
+    /// Distinct sequences (for a merged view: of the union).
+    pub sequences: u64,
+    /// Patients in the dense pid space.
+    pub patients: u32,
+    /// Artifact format version (for a merged view: the maximum across
+    /// its segments).
+    pub version: u64,
+}
+
+/// The query surface shared by [`QueryService`] (one artifact) and
+/// [`crate::ingest::MergedView`] (a segment set). Answer semantics are
+/// pinned by the single-artifact service and the ingest conformance
+/// suite: **every method must return byte-identical answers no matter
+/// how the records are split into segments.**
+pub trait QuerySurface: Send + Sync {
+    /// All records of `seq`, in `(pid, duration)` order.
+    fn by_sequence(&self, seq: u64) -> Result<Arc<Vec<SeqRecord>>, QueryError>;
+
+    /// All records of patient `pid`, in `(seq, duration)` order.
+    fn by_patient(&self, pid: u32) -> Result<Arc<Vec<SeqRecord>>, QueryError>;
+
+    /// Stream patient `pid`'s records through `f` in bounded chunks, in
+    /// the same order [`QuerySurface::by_patient`] returns; returns the
+    /// total streamed. Implementations bound the chunk size (one index
+    /// block for a service; one patient for a merged view, whose merge
+    /// must see the whole patient anyway).
+    fn visit_patient(
+        &self,
+        pid: u32,
+        f: &mut dyn FnMut(&[SeqRecord]) -> Result<(), QueryError>,
+    ) -> Result<u64, QueryError>;
+
+    /// Distinct patients having `seq` with a duration in the inclusive
+    /// range (bounds canonicalized), ascending pid.
+    fn patients_with(
+        &self,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+    ) -> Result<Arc<Vec<u32>>, QueryError>;
+
+    /// The `k` sequences with the most distinct patients. Total order:
+    /// support descending, then seq ascending — for a merged view the
+    /// supports are summed across segments *before* ranking, so the
+    /// result never depends on the segment layout.
+    fn top_k_by_support(&self, k: usize) -> Result<Arc<Vec<SeqSupport>>, QueryError>;
+
+    /// Histogram of `seq`'s durations over `n_buckets` equal-width
+    /// buckets spanning its global `[dur_min, dur_max]`.
+    fn duration_histogram(
+        &self,
+        seq: u64,
+        n_buckets: usize,
+    ) -> Result<Arc<Histogram>, QueryError>;
+
+    /// Cache/traffic counters (summed across segments for a merged
+    /// view).
+    fn stats(&self) -> QueryStats;
+
+    /// Size/shape summary for listings.
+    fn describe(&self) -> SurfaceInfo;
+}
+
+impl QuerySurface for QueryService {
+    fn by_sequence(&self, seq: u64) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        QueryService::by_sequence(self, seq)
+    }
+
+    fn by_patient(&self, pid: u32) -> Result<Arc<Vec<SeqRecord>>, QueryError> {
+        QueryService::by_patient(self, pid)
+    }
+
+    fn visit_patient(
+        &self,
+        pid: u32,
+        f: &mut dyn FnMut(&[SeqRecord]) -> Result<(), QueryError>,
+    ) -> Result<u64, QueryError> {
+        self.by_patient_visit::<QueryError>(pid, |chunk| f(chunk))
+    }
+
+    fn patients_with(
+        &self,
+        seq: u64,
+        dur_min: u32,
+        dur_max: u32,
+    ) -> Result<Arc<Vec<u32>>, QueryError> {
+        QueryService::patients_with(self, seq, dur_min, dur_max)
+    }
+
+    fn top_k_by_support(&self, k: usize) -> Result<Arc<Vec<SeqSupport>>, QueryError> {
+        QueryService::top_k_by_support(self, k)
+    }
+
+    fn duration_histogram(
+        &self,
+        seq: u64,
+        n_buckets: usize,
+    ) -> Result<Arc<Histogram>, QueryError> {
+        QueryService::duration_histogram(self, seq, n_buckets)
+    }
+
+    fn stats(&self) -> QueryStats {
+        QueryService::stats(self)
+    }
+
+    fn describe(&self) -> SurfaceInfo {
+        let idx = self.index();
+        SurfaceInfo {
+            records: idx.total_records,
+            sequences: idx.distinct_seqs(),
+            patients: idx.num_patients,
+            version: idx.version,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::index::{build, IndexConfig};
+    use crate::seqstore::{self, SeqFileSet};
+
+    fn fixture_service(name: &str) -> (QueryService, Vec<SeqRecord>) {
+        let dir = std::env::temp_dir()
+            .join(format!("tspm_surface_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut data = Vec::new();
+        for (seq, n_pids) in [(4u64, 3u32), (11, 5)] {
+            for pid in 0..n_pids {
+                for d in [1u32, 9] {
+                    data.push(SeqRecord { seq, pid, duration: d });
+                }
+            }
+        }
+        data.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+        let path = dir.join("in.tspm");
+        seqstore::write_file(&path, &data).unwrap();
+        let input = SeqFileSet {
+            files: vec![path],
+            total_records: data.len() as u64,
+            num_patients: 5,
+            num_phenx: 2,
+        };
+        let idx = build(
+            &input,
+            &dir.join("idx"),
+            &IndexConfig { block_records: 4, pid_index: true },
+            None,
+        )
+        .unwrap();
+        (QueryService::from_index(idx, 0), data)
+    }
+
+    #[test]
+    fn trait_object_answers_match_the_inherent_methods() {
+        let (svc, data) = fixture_service("dyn_equiv");
+        let dynamic: &dyn QuerySurface = &svc;
+        assert_eq!(*dynamic.by_sequence(11).unwrap(), *svc.by_sequence(11).unwrap());
+        assert_eq!(*dynamic.by_patient(2).unwrap(), *svc.by_patient(2).unwrap());
+        assert_eq!(
+            *dynamic.patients_with(11, 0, 5).unwrap(),
+            *svc.patients_with(11, 0, 5).unwrap()
+        );
+        assert_eq!(
+            *dynamic.top_k_by_support(2).unwrap(),
+            *svc.top_k_by_support(2).unwrap()
+        );
+        assert_eq!(
+            *dynamic.duration_histogram(4, 3).unwrap(),
+            *svc.duration_histogram(4, 3).unwrap()
+        );
+        let mut streamed = Vec::new();
+        let total = dynamic
+            .visit_patient(2, &mut |chunk| {
+                streamed.extend_from_slice(chunk);
+                Ok(())
+            })
+            .unwrap();
+        let expect: Vec<SeqRecord> = data.iter().copied().filter(|r| r.pid == 2).collect();
+        assert_eq!(streamed, expect);
+        assert_eq!(total, expect.len() as u64);
+        let info = dynamic.describe();
+        assert_eq!(info.records, data.len() as u64);
+        assert_eq!(info.sequences, 2);
+        assert_eq!(info.patients, 5);
+        assert_eq!(info.version, 2);
+    }
+}

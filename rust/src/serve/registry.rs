@@ -1,8 +1,9 @@
 //! Multi-artifact registry with refcounted hot-swap.
 //!
-//! The daemon serves several index artifacts at once, each behind its
-//! own [`QueryService`] (so caches and stats stay per-artifact). The
-//! registry is a `RwLock<BTreeMap<id, Arc<QueryService>>>`:
+//! The daemon serves several query surfaces at once — single index
+//! artifacts behind a [`QueryService`], whole segment sets behind a
+//! [`MergedView`] — each keeping its own caches and stats. The registry
+//! is a `RwLock<BTreeMap<id, Arc<dyn QuerySurface>>>`:
 //!
 //! * **route** takes the read lock just long enough to clone one `Arc`,
 //!   then answers the query entirely outside the lock;
@@ -12,9 +13,14 @@
 //! holds its own `Arc` clone, and the service (plus its mmap-free file
 //! handles) is dropped only when the last clone goes away. A freshly
 //! registered artifact is visible to the *next* `route` call — there is
-//! no epoch machinery because the services are immutable once opened.
+//! no epoch machinery because the surfaces are immutable once opened.
+//! That same contract is the segment-set hot-swap story: after `tspm
+//! ingest` or `tspm compact` changes a set on disk, retire the old id
+//! and register the set again — readers mid-query drain on the old
+//! segments, new queries see the new ones.
 
-use crate::query::{QueryError, QueryService};
+use crate::ingest::MergedView;
+use crate::query::{QueryError, QueryService, QuerySurface};
 use crate::serve::protocol::ArtifactInfo;
 use crate::serve::ServeError;
 use std::collections::BTreeMap;
@@ -52,7 +58,7 @@ pub fn open_service(dir: &Path, cache_bytes: usize) -> Result<QueryService, Arti
 /// Routes requests to registered artifacts; see the module docs for the
 /// hot-swap contract.
 pub struct Registry {
-    services: RwLock<BTreeMap<String, Arc<QueryService>>>,
+    services: RwLock<BTreeMap<String, Arc<dyn QuerySurface>>>,
     cache_bytes: usize,
 }
 
@@ -69,9 +75,19 @@ impl Registry {
         self.register(id, Arc::new(svc))
     }
 
-    /// Register an already-open service. Duplicate ids are refused (use
+    /// Open the segment set at `set_dir` as a [`MergedView`] and
+    /// register it under `id` — one id answers over every live segment.
+    /// Each segment's service gets its own `cache_bytes`-sized cache.
+    pub fn open_and_register_set(&self, id: &str, set_dir: &Path) -> Result<(), ServeError> {
+        let view = MergedView::open(set_dir, self.cache_bytes)
+            .map_err(|source| ArtifactOpenError { dir: set_dir.to_path_buf(), source })?;
+        self.register(id, Arc::new(view))
+    }
+
+    /// Register an already-open query surface (a [`QueryService`], a
+    /// [`MergedView`], …). Duplicate ids are refused (use
     /// retire-then-register to replace an artifact).
-    pub fn register(&self, id: &str, svc: Arc<QueryService>) -> Result<(), ServeError> {
+    pub fn register(&self, id: &str, svc: Arc<dyn QuerySurface>) -> Result<(), ServeError> {
         let mut map = self.services.write().unwrap();
         if map.contains_key(id) {
             return Err(ServeError::Artifact(format!(
@@ -88,17 +104,20 @@ impl Registry {
         self.services.write().unwrap().remove(id).is_some()
     }
 
-    /// Resolve a request's artifact id to a service. `None` routes to
-    /// the sole registered artifact; when zero or several are
+    /// Resolve a request's artifact id to a query surface. `None`
+    /// routes to the sole registered artifact; when zero or several are
     /// registered the caller must name one, and the error lists the
     /// known ids so a client can self-correct.
-    pub fn route(&self, id: Option<&str>) -> Result<Arc<QueryService>, ServeError> {
+    pub fn route(&self, id: Option<&str>) -> Result<Arc<dyn QuerySurface>, ServeError> {
         self.route_entry(id).map(|(_, svc)| svc)
     }
 
     /// [`Registry::route`] plus the resolved id — for responses that
     /// echo the artifact name (`stats`).
-    pub fn route_entry(&self, id: Option<&str>) -> Result<(String, Arc<QueryService>), ServeError> {
+    pub fn route_entry(
+        &self,
+        id: Option<&str>,
+    ) -> Result<(String, Arc<dyn QuerySurface>), ServeError> {
         let map = self.services.read().unwrap();
         match id {
             Some(id) => map.get_key_value(id).map(|(k, v)| (k.clone(), v.clone())).ok_or_else(
@@ -145,20 +164,20 @@ impl Registry {
             .unwrap()
             .iter()
             .map(|(id, svc)| {
-                let idx = svc.index();
+                let info = svc.describe();
                 ArtifactInfo {
                     id: id.clone(),
-                    records: idx.total_records,
-                    sequences: idx.distinct_seqs(),
-                    patients: idx.num_patients,
-                    version: idx.version,
+                    records: info.records,
+                    sequences: info.sequences,
+                    patients: info.patients,
+                    version: info.version,
                 }
             })
             .collect()
     }
 }
 
-fn ids_for_display(map: &BTreeMap<String, Arc<QueryService>>) -> String {
+fn ids_for_display(map: &BTreeMap<String, Arc<dyn QuerySurface>>) -> String {
     if map.is_empty() {
         "none".to_string()
     } else {
@@ -249,6 +268,45 @@ mod tests {
         assert_eq!(serr.code(), ErrorCode::Artifact);
         assert!(serr.to_string().contains("tspm_registry_no_such_artifact"), "{serr}");
         assert!(reg.is_empty(), "failed register leaves the registry untouched");
+    }
+
+    #[test]
+    fn segment_set_registers_as_one_surface() {
+        use crate::ingest::SegmentSet;
+        let dir = tmpdir("segset");
+        let set_dir = dir.join("set");
+        let mut set = SegmentSet::open_or_init(&set_dir).unwrap();
+        for (lo, hi) in [(0u32, 2u32), (2, 5)] {
+            let mut records = Vec::new();
+            for pid in lo..hi {
+                for s in 0..4u64 {
+                    records.push(SeqRecord { seq: s * 10 + 1, pid, duration: s as u32 * 7 });
+                }
+            }
+            records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+            let path = dir.join(format!("in_{lo}.tspm"));
+            seqstore::write_file(&path, &records).unwrap();
+            let input = SeqFileSet {
+                files: vec![path],
+                total_records: records.len() as u64,
+                num_patients: 5,
+                num_phenx: 4,
+            };
+            set.add_segment(&input, &IndexConfig { block_records: 64, pid_index: true }, None)
+                .unwrap();
+        }
+        let reg = Registry::new(1 << 16);
+        reg.open_and_register_set("set", &set_dir).unwrap();
+        let rows = reg.describe();
+        assert_eq!((rows[0].records, rows[0].patients, rows[0].sequences), (20, 5, 4));
+        let svc = reg.route(Some("set")).unwrap();
+        assert_eq!(svc.by_sequence(11).unwrap().len(), 5);
+        assert_eq!(svc.by_patient(3).unwrap().len(), 4);
+        // Hot-swap: retire and re-register after the set changed on disk.
+        assert!(reg.retire("set"));
+        reg.open_and_register_set("set", &set_dir).unwrap();
+        assert!(reg.route(Some("set")).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -336,7 +336,17 @@ fn answer(
             send(stream, &resp, cfg)?;
         }
         Request::Register { id, dir } => {
-            let resp = match registry.open_and_register(&id, std::path::Path::new(&dir)) {
+            // A directory holding a segment-set manifest registers as a
+            // merged view; anything else as a single artifact. This is
+            // how a daemon hot-swaps a segment set mid-workload:
+            // retire the old id, register the set's directory again.
+            let path = std::path::Path::new(&dir);
+            let result = if path.join("segments.json").is_file() {
+                registry.open_and_register_set(&id, path)
+            } else {
+                registry.open_and_register(&id, path)
+            };
+            let resp = match result {
                 Ok(()) => Response::Ok,
                 Err(e) => error_response(&e),
             };
@@ -373,22 +383,29 @@ fn stream_by_patient(
         Ok(s) => s,
         Err(e) => return send(stream, &error_response(&e), cfg),
     };
-    /// Splits socket failures (fatal for the connection) from query
-    /// failures (reported in-band as a stream-terminating error frame).
-    enum StreamErr {
-        Frame(FrameError),
-        Query(QueryError),
-    }
-    impl From<QueryError> for StreamErr {
-        fn from(e: QueryError) -> Self {
-            StreamErr::Query(e)
-        }
-    }
-    let result = svc.by_patient_visit::<StreamErr>(pid, |chunk| {
+    // Socket failures are fatal for the connection; query failures are
+    // reported in-band as a stream-terminating error frame. The
+    // object-safe visit_patient callback can only carry a QueryError,
+    // so a frame error is stashed here, the scan aborted with a
+    // synthetic io error, and the stash re-raised on the way out.
+    let mut frame_err: Option<FrameError> = None;
+    let result = svc.visit_patient(pid, &mut |chunk| {
         let part =
             Response::RecordsPart { records: chunk.to_vec(), last: false, total: None };
-        write_frame(stream, &part.encode(), cfg.max_frame_bytes).map_err(StreamErr::Frame)
+        match write_frame(stream, &part.encode(), cfg.max_frame_bytes) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                frame_err = Some(e);
+                Err(QueryError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "stream aborted by a connection failure",
+                )))
+            }
+        }
     });
+    if let Some(e) = frame_err {
+        return Err(e);
+    }
     match result {
         Ok(total) => send(
             stream,
@@ -397,8 +414,7 @@ fn stream_by_patient(
         ),
         // In-band terminator: the client treats an error frame in place
         // of a records_part as the end of the (failed) stream.
-        Err(StreamErr::Query(e)) => send(stream, &error_response(&ServeError::Query(e)), cfg),
-        Err(StreamErr::Frame(e)) => Err(e),
+        Err(e) => send(stream, &error_response(&ServeError::Query(e)), cfg),
     }
 }
 
@@ -514,6 +530,54 @@ mod tests {
         let summary = join.join().unwrap().unwrap();
         assert!(summary.served >= 1);
         assert!(summary.requests >= 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serves_a_segment_set_like_one_artifact() {
+        use crate::ingest::SegmentSet;
+        let dir = tmpdir("segset");
+        let set_dir = dir.join("set");
+        let mut set = SegmentSet::open_or_init(&set_dir).unwrap();
+        for (i, pids) in [&[0u32, 1][..], &[2, 3, 4][..]].iter().enumerate() {
+            let mut records = Vec::new();
+            for &pid in pids.iter() {
+                for s in [3u64, 17, 90] {
+                    records.push(SeqRecord { seq: s, pid, duration: (s as u32) * 3 + pid });
+                }
+            }
+            records.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+            let path = dir.join(format!("in_{i}.tspm"));
+            seqstore::write_file(&path, &records).unwrap();
+            let input = SeqFileSet {
+                files: vec![path],
+                total_records: records.len() as u64,
+                num_patients: 5,
+                num_phenx: 4,
+            };
+            set.add_segment(&input, &IndexConfig { block_records: 4, pid_index: true }, None)
+                .unwrap();
+        }
+        let registry = Arc::new(Registry::new(1 << 16));
+        registry.open_and_register_set("set", &set_dir).unwrap();
+        let server = Server::bind("127.0.0.1:0", registry, fast_cfg(4)).unwrap();
+        let addr = server.local_addr();
+        let (handle, join) = server.spawn();
+
+        // Same wire answers the single-artifact smoke test gets.
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let arts = c.list().unwrap();
+        assert_eq!((arts.len(), arts[0].records), (1, 15));
+        let (recs, total) = c.by_sequence(None, 17, None).unwrap();
+        assert_eq!((recs.len() as u64, total), (5, 5));
+        assert!(recs.windows(2).all(|w| w[0].pid <= w[1].pid), "merged (pid, dur) order");
+        let streamed = c.by_patient(None, 2).unwrap();
+        assert_eq!(streamed.len(), 3);
+        assert!(streamed.iter().all(|r| r.pid == 2));
+        let hist = c.histogram(None, 3, 4).unwrap();
+        assert_eq!(hist.total, 5);
+        handle.shutdown();
+        join.join().unwrap().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

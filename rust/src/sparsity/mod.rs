@@ -258,8 +258,9 @@ const ZERO_REC: SeqRecord = SeqRecord { seq: 0, pid: 0, duration: 0 };
 /// Sorting on the *full* record key makes the merged stream — and with
 /// it the survivor file — byte-identical for every buffer size and run
 /// layout: records with equal keys are identical, so tie order between
-/// runs cannot change the output.
-fn spill_key(r: &SeqRecord) -> u128 {
+/// runs cannot change the output. `pub(crate)` so the segment compactor
+/// ([`crate::ingest`]) merges segment data files under the same order.
+pub(crate) fn spill_key(r: &SeqRecord) -> u128 {
     ((r.seq as u128) << 64) | ((r.pid as u128) << 32) | r.duration as u128
 }
 
@@ -322,6 +323,25 @@ const MERGE_FAN_IN: usize = 64;
 fn merge_sorted_runs(
     paths: &[PathBuf],
     per_run: usize,
+    emit: impl FnMut(SeqRecord) -> io::Result<()>,
+) -> io::Result<()> {
+    merge_sorted_runs_by(paths, per_run, spill_key, emit)
+}
+
+/// [`merge_sorted_runs`] under an arbitrary total order: the key
+/// function maps each record to a `u128` and the merged stream is
+/// emitted in ascending key order. Every run in `paths` must already be
+/// sorted by the same key. Ties between runs break toward the
+/// lower-indexed run (the heap key carries the run index), so the
+/// output is deterministic for any run layout — provided equal-key
+/// records are byte-identical, as they are under the full-record keys
+/// this crate uses. `pub(crate)` for the segment compactor
+/// ([`crate::ingest`]), which merges pid-major segment copies under a
+/// `(pid, seq, duration)` order.
+pub(crate) fn merge_sorted_runs_by(
+    paths: &[PathBuf],
+    per_run: usize,
+    key: impl Fn(&SeqRecord) -> u128,
     mut emit: impl FnMut(SeqRecord) -> io::Result<()>,
 ) -> io::Result<()> {
     let mut cursors = Vec::with_capacity(paths.len());
@@ -331,14 +351,14 @@ fn merge_sorted_runs(
     let mut heap: BinaryHeap<Reverse<(u128, usize)>> = BinaryHeap::new();
     for (i, c) in cursors.iter().enumerate() {
         if let Some(r) = c.head() {
-            heap.push(Reverse((spill_key(&r), i)));
+            heap.push(Reverse((key(&r), i)));
         }
     }
     while let Some(Reverse((_, i))) = heap.pop() {
         let r = cursors[i].head().expect("heap entry implies a buffered record");
         cursors[i].advance()?;
         if let Some(next) = cursors[i].head() {
-            heap.push(Reverse((spill_key(&next), i)));
+            heap.push(Reverse((key(&next), i)));
         }
         emit(r)?;
     }

@@ -1,0 +1,594 @@
+//! Ingest conformance harness — merged views and compaction.
+//!
+//! The ingest layer promises that segmenting a cohort is *invisible*:
+//! under the pid-partition contract of `tspm_plus::ingest`, the full
+//! query surface over a [`MergedView`] is **byte-identical** to a
+//! [`QueryService`] over one artifact built from the union cohort, and
+//! a compacted segment set is **bit-identical** on disk to a fresh
+//! full-cohort index. Segment splits are exactly the kind of hidden
+//! axis that slips past happy-path tests (a merge that works for two
+//! segments can still tie-break wrong for five), so this harness reuses
+//! the adversarial cohort shapes of `conformance.rs` — empty cohorts,
+//! single-entry patients, heavy skew, duplicate timestamps, maximal
+//! durations, randomized mixtures — and drives every one through every
+//! split into 1/2/5 segments by random pid partition, across block
+//! sizes 7/128/4096 and with caching on and off.
+//!
+//! Compaction gets property tests on top: bit-identical output across
+//! memory budgets (1 KiB / 64 KiB / unbounded), idempotence
+//! (`compact(compact(S))` changes nothing), equality with a fresh
+//! `tspm index` of the union, and crash safety (an injected
+//! mid-compaction failure leaves the old manifest live, answering, and
+//! free of partial artifacts).
+
+use std::path::{Path, PathBuf};
+use tspm_plus::dbmart::{DbMart, DbMartEntry, NumericDbMart};
+use tspm_plus::ingest::{compact, CompactConfig, MergedView, SegmentSet};
+use tspm_plus::mining::{self, MiningConfig, SeqRecord};
+use tspm_plus::query::{index, IndexConfig, QueryService, QuerySurface, SeqIndex};
+use tspm_plus::rng::Rng;
+use tspm_plus::seqstore::{self, SeqFileSet};
+
+const BLOCK_SIZES: [usize; 3] = [7, 128, 4096];
+const SPLITS: [usize; 3] = [1, 2, 5];
+const CACHES: [usize; 2] = [0, 1 << 20];
+
+fn entry(p: &str, date: i32, x: &str) -> DbMartEntry {
+    DbMartEntry { patient_id: p.into(), date, phenx: x.into(), description: None }
+}
+
+fn sorted(mut v: Vec<SeqRecord>) -> Vec<SeqRecord> {
+    v.sort_unstable_by_key(|r| (r.seq, r.pid, r.duration));
+    v
+}
+
+/// Serialize sorted records to their canonical little-endian byte layout
+/// so "byte-identical" is literal, not just field-wise equality.
+fn record_bytes(records: &[SeqRecord]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(records.len() * 16);
+    for r in records {
+        out.extend_from_slice(&r.seq.to_le_bytes());
+        out.extend_from_slice(&r.pid.to_le_bytes());
+        out.extend_from_slice(&r.duration.to_le_bytes());
+    }
+    out
+}
+
+/// Unique work directory per (shape, axis point) so concurrently running
+/// tests never share file names.
+fn work_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tspm_ing_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Mine the cohort in-memory and return the golden sorted records plus
+/// the global (num_patients, num_phenx) the whole harness pins. Ingest
+/// segments are screened at `min_patients = 1` (sort-only), so the
+/// golden run is the mined output itself, sorted into spill order.
+fn golden_of(mart: &DbMart, cfg: &MiningConfig) -> (Vec<SeqRecord>, u32, u32) {
+    let db = NumericDbMart::encode(mart);
+    let records = sorted(mining::mine_sequences(&db, cfg).unwrap().records);
+    (records, db.num_patients() as u32, db.lookup.phenx.len() as u32)
+}
+
+/// Write `records` (already in spill order) as a single-file run that
+/// carries the *global* cohort dimensions — the pid-partition contract:
+/// every segment indexes the same dense pid space.
+fn run_file(dir: &Path, records: &[SeqRecord], np: u32, nx: u32) -> SeqFileSet {
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join("run.tspm");
+    seqstore::write_file(&path, records).unwrap();
+    SeqFileSet {
+        files: vec![path],
+        total_records: records.len() as u64,
+        num_patients: np,
+        num_phenx: nx,
+    }
+}
+
+/// One artifact over the whole cohort — the reference every merged view
+/// must match byte for byte.
+fn build_full(dir: &Path, records: &[SeqRecord], np: u32, nx: u32, block: usize) -> SeqIndex {
+    let input = run_file(dir, records, np, nx);
+    index::build(
+        &input,
+        &dir.join("idx"),
+        &IndexConfig { block_records: block, pid_index: true },
+        None,
+    )
+    .unwrap()
+}
+
+/// Partition patients into `parts` groups by a seeded coin and build one
+/// segment per group (empty groups included — an empty segment is a
+/// legal, adversarial member of a set).
+#[allow(clippy::too_many_arguments)]
+fn build_split_set(
+    set_dir: &Path,
+    input_dir: &Path,
+    records: &[SeqRecord],
+    np: u32,
+    nx: u32,
+    block: usize,
+    parts: usize,
+    seed: u64,
+) -> SegmentSet {
+    let mut rng = Rng::new(seed);
+    let group_of: Vec<usize> =
+        (0..np).map(|_| rng.gen_range(parts as u64) as usize).collect();
+    let mut set = SegmentSet::init(set_dir).unwrap();
+    for g in 0..parts {
+        let part: Vec<SeqRecord> = records
+            .iter()
+            .copied()
+            .filter(|r| group_of[r.pid as usize] == g)
+            .collect();
+        let input = run_file(&input_dir.join(format!("part{g}")), &part, np, nx);
+        set.add_segment(&input, &IndexConfig { block_records: block, pid_index: true }, None)
+            .unwrap();
+    }
+    set
+}
+
+/// The whole query surface, compared answer by answer. `ctx` names the
+/// axis point so a failure says exactly which split broke.
+fn assert_surfaces_identical(
+    ctx: &str,
+    full: &dyn QuerySurface,
+    view: &dyn QuerySurface,
+    seqs: &[u64],
+    np: u32,
+) {
+    assert_eq!(view.describe(), full.describe(), "{ctx}: describe");
+
+    let mut probe_seqs = seqs.to_vec();
+    probe_seqs.push(u64::MAX); // absent sequence
+    for &s in &probe_seqs {
+        assert_eq!(
+            record_bytes(&view.by_sequence(s).unwrap()),
+            record_bytes(&full.by_sequence(s).unwrap()),
+            "{ctx}: by_sequence({s})"
+        );
+        for (lo, hi) in [(0, u32::MAX), (0, 0), (1, 1000)] {
+            assert_eq!(
+                *view.patients_with(s, lo, hi).unwrap(),
+                *full.patients_with(s, lo, hi).unwrap(),
+                "{ctx}: patients_with({s}, {lo}, {hi})"
+            );
+        }
+        for buckets in [1usize, 3, 7] {
+            assert_eq!(
+                *view.duration_histogram(s, buckets).unwrap(),
+                *full.duration_histogram(s, buckets).unwrap(),
+                "{ctx}: histogram({s}, {buckets})"
+            );
+        }
+        assert!(view.duration_histogram(s, 0).is_err(), "{ctx}: 0 buckets must fail");
+    }
+
+    // Every patient plus two past the dense space (must answer empty,
+    // identically, not panic).
+    for pid in 0..np + 2 {
+        let full_run = record_bytes(&full.by_patient(pid).unwrap());
+        assert_eq!(
+            record_bytes(&view.by_patient(pid).unwrap()),
+            full_run,
+            "{ctx}: by_patient({pid})"
+        );
+        let mut streamed = Vec::new();
+        let total = view
+            .visit_patient(pid, &mut |chunk| {
+                streamed.extend_from_slice(chunk);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(record_bytes(&streamed), full_run, "{ctx}: visit_patient({pid})");
+        assert_eq!(total as usize, streamed.len(), "{ctx}: visit_patient({pid}) total");
+    }
+
+    for k in [0usize, 1, 3, seqs.len() + 7] {
+        assert_eq!(
+            *view.top_k_by_support(k).unwrap(),
+            *full.top_k_by_support(k).unwrap(),
+            "{ctx}: top_k({k})"
+        );
+    }
+}
+
+/// Harness core: for a cohort shape, sweep block size × split count ×
+/// cache setting and assert the merged view matches the single-artifact
+/// reference on the full surface.
+fn assert_ingest_conforms(shape: &str, mart: &DbMart, cfg: &MiningConfig) {
+    let (golden, np, nx) = golden_of(mart, cfg);
+    let base = work_dir(shape);
+    for block in BLOCK_SIZES {
+        let full_dir = base.join(format!("full_b{block}"));
+        let full_idx = build_full(&full_dir, &golden, np, nx, block);
+        let seqs: Vec<u64> = full_idx.seqs.iter().map(|e| e.seq).collect();
+        for parts in SPLITS {
+            let set_dir = base.join(format!("set_b{block}_k{parts}"));
+            let input_dir = base.join(format!("in_b{block}_k{parts}"));
+            build_split_set(
+                &set_dir,
+                &input_dir,
+                &golden,
+                np,
+                nx,
+                block,
+                parts,
+                0xD15C0 + parts as u64,
+            );
+            for cache in CACHES {
+                let full = QueryService::open_with_cache(&full_idx.dir, cache).unwrap();
+                let view = MergedView::open(&set_dir, cache).unwrap();
+                assert_eq!(view.num_segments(), parts, "{shape}: segment count");
+                let ctx = format!("{shape}/b{block}/k{parts}/c{cache}");
+                assert_surfaces_identical(&ctx, &full, &view, &seqs, np);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial shapes (mirroring conformance.rs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ingest_conformance_empty_cohort() {
+    let mart = DbMart::new(vec![]);
+    assert_ingest_conforms("empty", &mart, &MiningConfig::default());
+}
+
+#[test]
+fn ingest_conformance_single_entry_patients() {
+    let mart = DbMart::new(
+        (0..40).map(|p| entry(&format!("p{p}"), p, &format!("x{}", p % 7))).collect(),
+    );
+    assert_ingest_conforms("single_entry", &mart, &MiningConfig::default());
+}
+
+#[test]
+fn ingest_conformance_heavily_skewed() {
+    let mut entries = Vec::new();
+    for i in 0..200 {
+        entries.push(entry("whale", i, &format!("x{}", i % 23)));
+    }
+    let mut rng = Rng::new(42);
+    for p in 0..50 {
+        for i in 0..(1 + rng.gen_range(3)) {
+            entries.push(entry(
+                &format!("minnow{p}"),
+                i as i32,
+                &format!("x{}", rng.gen_range(23)),
+            ));
+        }
+    }
+    let mart = DbMart::new(entries);
+    assert_ingest_conforms("skewed", &mart, &MiningConfig::default());
+}
+
+#[test]
+fn ingest_conformance_duplicate_timestamps() {
+    let mut entries = Vec::new();
+    for p in 0..20 {
+        for i in 0..10 {
+            entries.push(entry(&format!("p{p}"), 1000 + p, &format!("c{}", i % 4)));
+        }
+    }
+    let mart = DbMart::new(entries);
+    assert_ingest_conforms("dup_ts", &mart, &MiningConfig::default());
+}
+
+#[test]
+fn ingest_conformance_max_duration_buckets() {
+    let mut entries = Vec::new();
+    for p in 0..8 {
+        let pid = format!("p{p}");
+        entries.push(entry(&pid, 0, "start"));
+        entries.push(entry(&pid, 2_100_000_000, "end"));
+        entries.push(entry(&pid, 1_000_000_000 + p, "mid"));
+    }
+    let mart = DbMart::new(entries);
+    assert_ingest_conforms("max_dur", &mart, &MiningConfig::default());
+    assert_ingest_conforms(
+        "max_dur_monthly",
+        &mart,
+        &MiningConfig { duration_unit_days: 30, ..Default::default() },
+    );
+}
+
+#[test]
+fn ingest_conformance_random_mixture() {
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(0xBEEF + seed);
+        let mut entries = Vec::new();
+        let n_patients = 1 + rng.gen_range(30);
+        for p in 0..n_patients {
+            let n = match rng.gen_range(4) {
+                0 => 1,
+                1 => 2,
+                _ => 1 + rng.gen_range(40),
+            };
+            let same_date = rng.gen_range(3) == 0;
+            for _ in 0..n {
+                let date = if same_date { 7 } else { rng.gen_range(3000) as i32 };
+                entries.push(entry(
+                    &format!("p{p}"),
+                    date,
+                    &format!("c{}", rng.gen_range(15)),
+                ));
+            }
+        }
+        let mart = DbMart::new(entries);
+        assert_ingest_conforms(
+            &format!("random{seed}"),
+            &mart,
+            &MiningConfig { include_self_pairs: false, ..Default::default() },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compaction properties
+// ---------------------------------------------------------------------------
+
+/// Every file of an artifact directory, name-sorted, for bit-identity
+/// comparison.
+fn artifact_files(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+fn assert_artifacts_bit_identical(ctx: &str, got: &Path, want: &Path) {
+    let got = artifact_files(got);
+    let want = artifact_files(want);
+    let names = |v: &[(String, Vec<u8>)]| {
+        v.iter().map(|(n, _)| n.clone()).collect::<Vec<String>>()
+    };
+    assert_eq!(names(&got), names(&want), "{ctx}: artifact file lists differ");
+    for ((name, g), (_, w)) in got.iter().zip(&want) {
+        assert!(
+            g == w,
+            "{ctx}: {name} differs ({} vs {} bytes)",
+            g.len(),
+            w.len()
+        );
+    }
+}
+
+/// The mixture cohort the compaction properties run on — big enough to
+/// span many blocks, screened the way ingest screens (min_patients = 1).
+fn compaction_cohort() -> (Vec<SeqRecord>, u32, u32) {
+    let mut rng = Rng::new(0xBEEF);
+    let mut entries = Vec::new();
+    let n_patients = 1 + rng.gen_range(30);
+    for p in 0..n_patients {
+        let n = 1 + rng.gen_range(40);
+        for _ in 0..n {
+            entries.push(entry(
+                &format!("p{p}"),
+                rng.gen_range(3000) as i32,
+                &format!("c{}", rng.gen_range(15)),
+            ));
+        }
+    }
+    let mart = DbMart::new(entries);
+    golden_of(&mart, &MiningConfig { include_self_pairs: false, ..Default::default() })
+}
+
+/// Budget invariance + idempotence + fresh-build equality, all against
+/// the same reference artifact.
+#[test]
+fn compaction_is_budget_invariant_idempotent_and_equals_a_fresh_build() {
+    let (golden, np, nx) = compaction_cohort();
+    let base = work_dir("compact_props");
+    let block = 128;
+    let fresh = build_full(&base.join("fresh"), &golden, np, nx, block);
+
+    let mut first_compacted: Option<PathBuf> = None;
+    for (tag, budget) in [("1k", 1024usize), ("64k", 64 << 10), ("max", usize::MAX)] {
+        let set_dir = base.join(format!("set_{tag}"));
+        build_split_set(
+            &set_dir,
+            &base.join(format!("in_{tag}")),
+            &golden,
+            np,
+            nx,
+            block,
+            3,
+            0xC0FFEE,
+        );
+        let mut set = SegmentSet::open(&set_dir).unwrap();
+        let cfg = CompactConfig {
+            block_records: block,
+            buffer_bytes: budget,
+            ..Default::default()
+        };
+        let idx = compact(&mut set, &cfg, None).unwrap();
+        assert_eq!(set.segments().len(), 1, "budget {tag}: one live segment");
+        assert_artifacts_bit_identical(
+            &format!("budget {tag} vs fresh build"),
+            &idx.dir,
+            &fresh.dir,
+        );
+        // Retired segment directories are gone; no staging debris.
+        assert!(!set_dir.join("compact_tmp").exists(), "budget {tag}: staging dir");
+        for g in 0..3 {
+            assert!(!set_dir.join(format!("seg_{g:04}")).exists(), "budget {tag}: retired");
+        }
+        first_compacted.get_or_insert(set_dir);
+    }
+
+    // Idempotence: compacting the already-compacted set changes nothing
+    // but the segment name.
+    let set_dir = first_compacted.unwrap();
+    let mut set = SegmentSet::open(&set_dir).unwrap();
+    let cfg = CompactConfig { block_records: block, buffer_bytes: 1024, ..Default::default() };
+    let idx2 = compact(&mut set, &cfg, None).unwrap();
+    assert_artifacts_bit_identical("compact(compact(S))", &idx2.dir, &fresh.dir);
+
+    // And the compacted set still answers like the reference service.
+    let full = QueryService::open_with_cache(&fresh.dir, 0).unwrap();
+    let view = MergedView::open(&set_dir, 0).unwrap();
+    let seqs: Vec<u64> = fresh.seqs.iter().map(|e| e.seq).collect();
+    assert_surfaces_identical("compacted set", &full, &view, &seqs, np);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Crash safety: an injected failure mid-merge must leave the old
+/// manifest byte-identical, the old segments fully answering, and no
+/// partial artifact or staging directory visible.
+#[test]
+fn failed_compaction_leaves_the_live_set_intact() {
+    let (golden, np, nx) = compaction_cohort();
+    let base = work_dir("compact_crash");
+    let set_dir = base.join("set");
+    build_split_set(&set_dir, &base.join("in"), &golden, np, nx, 128, 2, 0xBAD5EED);
+
+    let manifest_path = set_dir.join("segments.json");
+    let manifest_before = std::fs::read(&manifest_path).unwrap();
+    let listing = |dir: &Path| {
+        let mut v: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        v.sort();
+        v
+    };
+    let listing_before = listing(&set_dir);
+    let answers_before = record_bytes(
+        &MergedView::open(&set_dir, 0).unwrap().by_sequence(golden[0].seq).unwrap(),
+    );
+
+    let mut set = SegmentSet::open(&set_dir).unwrap();
+    let cfg = CompactConfig {
+        block_records: 128,
+        buffer_bytes: 1024,
+        fail_after_records: Some(5),
+    };
+    let err = compact(&mut set, &cfg, None).unwrap_err();
+    assert!(err.to_string().contains("injected"), "unexpected error: {err}");
+
+    assert_eq!(
+        std::fs::read(&manifest_path).unwrap(),
+        manifest_before,
+        "manifest bytes must be untouched by a failed compaction"
+    );
+    assert_eq!(
+        listing(&set_dir),
+        listing_before,
+        "no partial artifact or staging debris may be visible"
+    );
+    let reopened = SegmentSet::open(&set_dir).unwrap();
+    assert_eq!(reopened.segments(), ["seg_0000", "seg_0001"]);
+    let view = MergedView::open(&set_dir, 0).unwrap();
+    assert_eq!(
+        record_bytes(&view.by_sequence(golden[0].seq).unwrap()),
+        answers_before,
+        "the old set must keep answering after a failed compaction"
+    );
+
+    // A plain file squatting on the staging name is an error (it is not
+    // recognizable compaction debris), and it too must leave the
+    // manifest alone.
+    let tmp = set_dir.join("compact_tmp");
+    std::fs::write(&tmp, b"not a directory").unwrap();
+    let mut set = SegmentSet::open(&set_dir).unwrap();
+    assert!(compact(&mut set, &CompactConfig::default(), None).is_err());
+    assert!(tmp.is_file(), "an unrecognized staging path must not be deleted");
+    assert_eq!(std::fs::read(&manifest_path).unwrap(), manifest_before);
+
+    // A stale staging *directory* (debris of an interrupted run) is
+    // reclaimed and compaction goes through.
+    std::fs::remove_file(&tmp).unwrap();
+    std::fs::create_dir(&tmp).unwrap();
+    std::fs::write(tmp.join("junk.bin"), b"stale").unwrap();
+    let mut set = SegmentSet::open(&set_dir).unwrap();
+    let idx = compact(&mut set, &CompactConfig::default(), None).unwrap();
+    assert!(!tmp.exists());
+    assert_eq!(
+        record_bytes(&QueryService::open_with_cache(&idx.dir, 0)
+            .unwrap()
+            .by_sequence(golden[0].seq)
+            .unwrap()),
+        answers_before
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-segment top-k tie-breaking
+// ---------------------------------------------------------------------------
+
+/// Regression: supports are summed across segments *before* ranking,
+/// and ties rank by seq ascending — for every segment layout, including
+/// layouts where per-segment supports disagree about the order.
+#[test]
+fn cross_segment_top_k_ties_use_the_documented_total_order() {
+    // seq 5 → patients {0..5} (support 5); seqs 7 and 9 → support 4
+    // each, over *different* patients so per-segment counts diverge.
+    let mut records = Vec::new();
+    for pid in 0..5u32 {
+        records.push(SeqRecord { seq: 5, pid, duration: pid });
+    }
+    for pid in 0..4u32 {
+        records.push(SeqRecord { seq: 7, pid, duration: 10 + pid });
+    }
+    for pid in 1..5u32 {
+        records.push(SeqRecord { seq: 9, pid, duration: 20 + pid });
+    }
+    let records = sorted(records);
+    let (np, nx) = (5u32, 3u32);
+
+    let base = work_dir("topk_ties");
+    let full_idx = build_full(&base.join("full"), &records, np, nx, 7);
+    let full = QueryService::open_with_cache(&full_idx.dir, 0).unwrap();
+    let want = full.top_k_by_support(10).unwrap();
+    let order: Vec<u64> = want.iter().map(|s| s.seq).collect();
+    assert_eq!(order, [5, 7, 9], "reference order: support desc, then seq asc");
+    assert_eq!(want[1].patients, want[2].patients, "7 and 9 must tie");
+
+    // Two very different pid layouts; in the second, segment 0 sees seq
+    // 9 but no seq 7 at all, so any per-segment ranking shortcut breaks.
+    for (tag, groups) in [("even", vec![vec![0u32, 1], vec![2, 3, 4]]),
+        ("skewed", vec![vec![4u32], vec![0, 3], vec![1, 2]])]
+    {
+        let set_dir = base.join(format!("set_{tag}"));
+        let mut set = SegmentSet::init(&set_dir).unwrap();
+        for (g, pids) in groups.iter().enumerate() {
+            let part: Vec<SeqRecord> =
+                records.iter().copied().filter(|r| pids.contains(&r.pid)).collect();
+            let input = run_file(&base.join(format!("in_{tag}_{g}")), &part, np, nx);
+            set.add_segment(
+                &input,
+                &IndexConfig { block_records: 7, pid_index: true },
+                None,
+            )
+            .unwrap();
+        }
+        let view = MergedView::open(&set_dir, 0).unwrap();
+        assert_eq!(
+            *view.top_k_by_support(10).unwrap(),
+            *want,
+            "{tag}: merged top-k must match the single-artifact order"
+        );
+        for k in [1usize, 2, 3] {
+            assert_eq!(
+                *view.top_k_by_support(k).unwrap(),
+                *full.top_k_by_support(k).unwrap(),
+                "{tag}: truncation at k={k}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
