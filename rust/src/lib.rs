@@ -254,6 +254,7 @@ pub mod runtime;
 pub mod seqstore;
 pub mod serve;
 pub mod sparsity;
+pub mod sync;
 pub mod synthea;
 pub mod util;
 

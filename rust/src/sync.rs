@@ -1,0 +1,217 @@
+//! Synchronization shim — `std::sync` normally, `loom::sync` under
+//! model checking.
+//!
+//! The repo's strongest contract is byte-identical output across every
+//! thread count, schedule and memory budget. Differential tests can
+//! only sample schedules; **loom** model-checks them exhaustively. This
+//! module is the seam that makes that possible without forking the
+//! production code: every concurrency-bearing module ([`crate::par`],
+//! the sharded merge in [`crate::mining`], the counted cache in
+//! [`crate::query`], the hot-swap registry in [`crate::serve`]) imports
+//! its primitives from here instead of `std::sync`.
+//!
+//! * In a **default build** (`cfg(not(loom))`) everything below is a
+//!   plain re-export of the `std::sync` type of the same name — the
+//!   shim compiles away entirely. The `shim_reexports_are_std_types`
+//!   smoke test pins this: the re-exports are the *identical* types
+//!   (same `TypeId`, same size), so non-loom builds are bit-for-bit
+//!   unaffected.
+//! * Under `RUSTFLAGS="--cfg loom"` the same names resolve to
+//!   `loom::sync` equivalents, and the `#[cfg(loom)]` test suites
+//!   (filter: `loom`) explore every interleaving the modeled protocols
+//!   allow. The `loom` crate is deliberately **not** a committed
+//!   dependency (the build must stay hermetic); the loom CI lane adds
+//!   it on the fly:
+//!
+//! ```text
+//! cargo add loom@0.7 --dev
+//! RUSTFLAGS="--cfg loom" cargo test --release --lib loom
+//! ```
+//!
+//! (A dev-dependency suffices: the `--lib` test target links
+//! dev-dependencies everywhere in the crate, and only test builds ever
+//! set `--cfg loom`.)
+//!
+//! ## Poison policy
+//!
+//! A panicking holder must never wedge the whole process: one
+//! connection thread dying inside the admission-control semaphore or
+//! the query cache must not turn every later `lock()` into a panic.
+//! The [`lock_ignore_poison`] / [`read_ignore_poison`] /
+//! [`write_ignore_poison`] / [`wait_ignore_poison`] helpers recover the
+//! guard from a poisoned lock via `PoisonError::into_inner`. This is
+//! sound for every protected structure in this crate because each one
+//! is updated to a consistent state before anything that can panic runs
+//! (counters are plain integer writes; the LRU's bookkeeping never
+//! unwinds mid-update except in the caller-supplied `Clone`, which runs
+//! after the map is consistent).
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Atomic types and orderings — `std::sync::atomic` or
+/// `loom::sync::atomic`.
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(loom)]
+pub use loom::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Write-once cell under loom. `loom` ships no `OnceLock`, so the model
+/// build substitutes a `Mutex<Option<T>>` with the same `set` /
+/// `into_inner` subset the sharded merge uses; the *protocol* under
+/// test (claim a slot index atomically, fill it exactly once, drain in
+/// slot order) is unchanged.
+#[cfg(loom)]
+pub struct OnceLock<T> {
+    inner: Mutex<Option<T>>,
+}
+
+#[cfg(loom)]
+impl<T> OnceLock<T> {
+    pub fn new() -> OnceLock<T> {
+        OnceLock { inner: Mutex::new(None) }
+    }
+
+    /// Store `value` if the cell is empty; returns it back otherwise —
+    /// same contract as `std::sync::OnceLock::set`.
+    pub fn set(&self, value: T) -> Result<(), T> {
+        let mut slot = lock_ignore_poison(&self.inner);
+        if slot.is_some() {
+            return Err(value);
+        }
+        *slot = Some(value);
+        Ok(())
+    }
+
+    /// Consume the cell, returning its value if one was ever set.
+    pub fn into_inner(self) -> Option<T> {
+        lock_ignore_poison(&self.inner).take()
+    }
+}
+
+#[cfg(loom)]
+impl<T> Default for OnceLock<T> {
+    fn default() -> Self {
+        OnceLock::new()
+    }
+}
+
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+/// See the module docs for why this is sound here.
+pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`RwLock::read`] with poison recovery.
+pub fn read_ignore_poison<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`RwLock::write`] with poison recovery.
+pub fn write_ignore_poison<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with poison recovery — returns the reacquired
+/// guard even when another holder of the same mutex panicked while the
+/// waiter slept.
+pub fn wait_ignore_poison<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use std::any::TypeId;
+
+    /// The default-build contract: every shim re-export IS the
+    /// `std::sync` type — same `TypeId`, same layout — so non-loom
+    /// builds pay nothing and break nothing.
+    #[test]
+    fn shim_reexports_are_std_types() {
+        assert_eq!(
+            TypeId::of::<super::Mutex<u64>>(),
+            TypeId::of::<std::sync::Mutex<u64>>()
+        );
+        assert_eq!(TypeId::of::<super::Condvar>(), TypeId::of::<std::sync::Condvar>());
+        assert_eq!(
+            TypeId::of::<super::RwLock<Vec<u8>>>(),
+            TypeId::of::<std::sync::RwLock<Vec<u8>>>()
+        );
+        assert_eq!(
+            TypeId::of::<super::OnceLock<String>>(),
+            TypeId::of::<std::sync::OnceLock<String>>()
+        );
+        assert_eq!(
+            TypeId::of::<super::Arc<u32>>(),
+            TypeId::of::<std::sync::Arc<u32>>()
+        );
+        assert_eq!(
+            TypeId::of::<super::atomic::AtomicUsize>(),
+            TypeId::of::<std::sync::atomic::AtomicUsize>()
+        );
+        assert_eq!(
+            TypeId::of::<super::atomic::AtomicU64>(),
+            TypeId::of::<std::sync::atomic::AtomicU64>()
+        );
+        assert_eq!(
+            std::mem::size_of::<super::Mutex<u64>>(),
+            std::mem::size_of::<std::sync::Mutex<u64>>()
+        );
+        assert_eq!(
+            std::mem::size_of::<super::atomic::AtomicUsize>(),
+            std::mem::size_of::<std::sync::atomic::AtomicUsize>()
+        );
+    }
+
+    #[test]
+    fn lock_ignore_poison_recovers_a_poisoned_mutex() {
+        let m = super::Mutex::new(7u32);
+        // A holder panics with the guard live → the mutex is poisoned.
+        let res = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("holder dies");
+            })
+            .join()
+        });
+        assert!(res.is_err());
+        assert!(m.lock().is_err(), "plain lock() sees the poison");
+        // Recovery: the data is still there and writable.
+        let mut g = super::lock_ignore_poison(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*super::lock_ignore_poison(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_ignore_poison_recovers_both_sides() {
+        let l = super::RwLock::new(1u32);
+        let res = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = l.write().unwrap();
+                panic!("writer dies");
+            })
+            .join()
+        });
+        assert!(res.is_err());
+        assert_eq!(*super::read_ignore_poison(&l), 1);
+        *super::write_ignore_poison(&l) = 2;
+        assert_eq!(*super::read_ignore_poison(&l), 2);
+    }
+}
