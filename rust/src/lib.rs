@@ -229,6 +229,46 @@
 //! let mined = tspm_plus::mining::mine_sequences(&numeric, &cfg).unwrap();
 //! println!("mined {} sequences", mined.records.len());
 //! ```
+//!
+//! ## Verification
+//!
+//! Beyond the differential test wall, four static/dynamic gates guard
+//! the contracts the tests can only sample:
+//!
+//! 1. **Loom model checking** — every concurrency-bearing module takes
+//!    its primitives from the [`sync`] shim (`std::sync` normally,
+//!    `loom::sync` under `cfg(loom)`), and `#[cfg(loom)]` suites
+//!    exhaustively check the semaphore (no lost wakeups, exact permit
+//!    accounting), the dynamic scheduler (no double-claimed work), the
+//!    cache stats (`hits + misses == lookups`, never torn), the
+//!    write-once shard-merge slots, and the registry hot-swap (no
+//!    reader observes a retired artifact mid-swap). Run:
+//!    `cargo add loom@0.7 --dev` then
+//!    `RUSTFLAGS="--cfg loom" cargo test --release --lib loom`
+//!    (the loom dependency is CI-lane-only; the committed manifest
+//!    stays dependency-free).
+//! 2. **Miri** — the crate is strict-provenance clean (the one
+//!    pointer-through-`usize` laundering in `sparsity` was replaced by
+//!    safe disjoint `split_at_mut` partitioning). Run the curated fast
+//!    subset: `MIRIFLAGS="-Zmiri-strict-provenance" cargo +nightly miri
+//!    test --lib`.
+//! 3. **Sanitizers** — TSan/ASan lanes exercise `serve_concurrency`
+//!    and small-shape conformance:
+//!    `RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std
+//!    --target x86_64-unknown-linux-gnu --test serve_concurrency`.
+//! 4. **Invariant lint** — `cargo xtask lint` statically enforces the
+//!    repo contracts: the wire protocol (`serve::protocol` `ErrorCode`
+//!    / `Request` variants) is append-only versus the committed
+//!    snapshot `xtask/snapshots/wire.txt`; artifact `FORMAT`/`VERSION`
+//!    constants agree across `query::index`, `ingest`, and module
+//!    docs; deterministic-output modules (mining/sparsity/query/
+//!    ingest) never iterate a `HashMap` or call `SystemTime::now`
+//!    (annotate provably order-insensitive sites with
+//!    `// lint:allow(hashmap_iter)` on the preceding line); and every
+//!    `unsafe` block sits in `xtask/snapshots/unsafe_allowlist.txt`
+//!    AND carries a `// SAFETY:` comment. To *intentionally* extend
+//!    the wire protocol, append new variants at the end and re-bless
+//!    the snapshot with `cargo xtask lint --bless` in the same commit.
 
 pub mod baseline;
 pub mod bench_util;

@@ -15,6 +15,50 @@
 
 use std::time::{Duration, Instant};
 
+/// Minimal hand-rolled `getrusage(2)` FFI. The crate is deliberately
+/// dependency-free, so the usual `libc` crate is not available; only
+/// the one call and the fields the fallback reads are declared. Layout
+/// matches the LP64 Unix `struct rusage` (two `timeval`s, then 14
+/// longs, `ru_maxrss` first among them).
+#[cfg(unix)]
+mod libc {
+    #[allow(dead_code)]
+    #[repr(C)]
+    pub struct Timeval {
+        pub tv_sec: i64,
+        pub tv_usec: i64,
+    }
+
+    // Named after the C type it mirrors; the padding fields exist only
+    // to make the layout exact and are never read.
+    #[allow(non_camel_case_types, dead_code)]
+    #[repr(C)]
+    pub struct rusage {
+        pub ru_utime: Timeval,
+        pub ru_stime: Timeval,
+        pub ru_maxrss: i64,
+        pub ru_ixrss: i64,
+        pub ru_idrss: i64,
+        pub ru_isrss: i64,
+        pub ru_minflt: i64,
+        pub ru_majflt: i64,
+        pub ru_nswap: i64,
+        pub ru_inblock: i64,
+        pub ru_oublock: i64,
+        pub ru_msgsnd: i64,
+        pub ru_msgrcv: i64,
+        pub ru_nsignals: i64,
+        pub ru_nvcsw: i64,
+        pub ru_nivcsw: i64,
+    }
+
+    pub const RUSAGE_SELF: i32 = 0;
+
+    extern "C" {
+        pub fn getrusage(who: i32, usage: *mut rusage) -> i32;
+    }
+}
+
 /// High-water-mark RSS of this process in bytes.
 ///
 /// Reads `VmHWM` from `/proc/self/status`; falls back to
@@ -23,6 +67,11 @@ pub fn peak_rss_bytes() -> u64 {
     if let Some(v) = read_status_kb("VmHWM:") {
         return v * 1024;
     }
+    #[cfg(unix)]
+    // SAFETY: `usage` is a live, properly aligned out-parameter;
+    // all-zero bytes are a valid `rusage` (plain old C data), and
+    // getrusage(2) writes only within the struct it is handed.
+    // `ru_maxrss` is read only after the call reports success.
     unsafe {
         let mut usage: libc::rusage = std::mem::zeroed();
         if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 {

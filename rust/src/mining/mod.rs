@@ -26,7 +26,7 @@ use crate::par;
 use crate::psort;
 use crate::seqstore::{SeqFileSet, SeqWriter};
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use crate::sync::OnceLock;
 
 /// Upper bound on the shard count accepted by configuration and plan
 /// validation. Shards beyond this add pure bookkeeping overhead (each is
@@ -926,5 +926,51 @@ mod tests {
         let tracker = MemTracker::new();
         let got = mine_sequences_tracked(&db, &MiningConfig::default(), Some(&tracker)).unwrap();
         assert!(tracker.peak() >= got.byte_size());
+    }
+}
+
+/// Exhaustive-interleaving check of the sharded merge's write-once slot
+/// protocol: each worker claims a shard index from the atomic counter,
+/// fills that shard's `OnceLock` slot exactly once, and the merge drains
+/// the slots in shard order — so the merged output can never depend on
+/// completion order. Compiled only under `RUSTFLAGS="--cfg loom"`; see
+/// the crate "Verification" docs.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use crate::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::{Arc, OnceLock};
+
+    #[test]
+    fn loom_shard_slots_are_write_once_and_merge_in_shard_order() {
+        loom::model(|| {
+            const SHARDS: usize = 3;
+            let slots: Arc<Vec<OnceLock<Vec<u32>>>> =
+                Arc::new((0..SHARDS).map(|_| OnceLock::new()).collect());
+            let next = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let slots = Arc::clone(&slots);
+                let next = Arc::clone(&next);
+                handles.push(loom::thread::spawn(move || loop {
+                    let si = next.fetch_add(1, Ordering::Relaxed);
+                    if si >= SHARDS {
+                        break;
+                    }
+                    // "Mine" the shard: its payload is a function of the
+                    // shard index alone, like the real per-shard output.
+                    let filled = slots[si].set(vec![si as u32; si + 1]).is_ok();
+                    assert!(filled, "shard {si} claimed twice");
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            // Drain in shard order: on every schedule the merge sees the
+            // same deterministic concatenation.
+            let slots = Arc::try_unwrap(slots).unwrap_or_else(|_| panic!("slots still shared"));
+            let merged: Vec<u32> =
+                slots.into_iter().flat_map(|s| s.into_inner().unwrap_or_default()).collect();
+            assert_eq!(merged, vec![0, 1, 1, 2, 2, 2], "completion order never leaks");
+        });
     }
 }

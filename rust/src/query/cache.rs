@@ -8,7 +8,14 @@
 //! thousand tiny ones thrash). Eviction is strict LRU: every `get` hit
 //! re-stamps the entry; `put` evicts oldest-first until the new entry
 //! fits. A value larger than the whole budget is simply not cached.
+//!
+//! [`SharedCache`] is the thread-safe face: the LRU plus its hit/miss
+//! counters behind **one** mutex (from the [`crate::sync`] shim, so the
+//! protocol is loom-model-checked), which is what makes a
+//! [`SharedCache::snapshot`] internally consistent — `hits + misses`
+//! always equals the number of completed lookups, never a torn pair.
 
+use crate::sync::{lock_ignore_poison, Mutex};
 use std::collections::{BTreeMap, HashMap};
 
 struct Slot<V> {
@@ -105,7 +112,104 @@ impl<V: Clone> LruCache<V> {
     }
 }
 
-#[cfg(test)]
+/// One internally-consistent view of a [`SharedCache`]'s counters: all
+/// five fields were read under the same lock acquisition that guards
+/// their updates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+struct Counted<V: Clone> {
+    lru: LruCache<V>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A counted, thread-safe LRU: the cache **and** its hit/miss counters
+/// behind a single mutex, so `hits + misses == lookups` holds at every
+/// instant a [`SharedCache::snapshot`] can observe.
+///
+/// Lock acquisition recovers from poisoning
+/// ([`crate::sync::lock_ignore_poison`]): the LRU's bookkeeping is fully
+/// consistent before the only caller-controlled code (the value's
+/// `Clone`) runs, so a panicking clone strands at most one uncounted
+/// lookup — it never corrupts the map or wedges later callers.
+pub struct SharedCache<V: Clone> {
+    state: Mutex<Counted<V>>,
+    capacity_bytes: usize,
+}
+
+impl<V: Clone> SharedCache<V> {
+    /// A shared cache with an approximate byte budget (0 disables
+    /// caching — every lookup is a counted miss).
+    pub fn new(capacity_bytes: usize) -> SharedCache<V> {
+        SharedCache {
+            state: Mutex::new(Counted { lru: LruCache::new(capacity_bytes), hits: 0, misses: 0 }),
+            capacity_bytes,
+        }
+    }
+
+    /// Look a key up and count the outcome — hit or miss is decided and
+    /// recorded under the same lock the snapshot reads.
+    pub fn get(&self, key: &str) -> Option<V> {
+        let mut st = lock_ignore_poison(&self.state);
+        if self.capacity_bytes == 0 {
+            st.misses += 1;
+            return None;
+        }
+        match st.lru.get(key) {
+            Some(v) => {
+                st.hits += 1;
+                Some(v)
+            }
+            None => {
+                st.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a key; see [`LruCache::put`] for the
+    /// eviction/oversize semantics.
+    pub fn put(&self, key: String, value: V, bytes: usize) {
+        if self.capacity_bytes == 0 {
+            return;
+        }
+        lock_ignore_poison(&self.state).lru.put(key, value, bytes);
+    }
+
+    /// All counters in one consistent read (see [`CacheSnapshot`]).
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let st = lock_ignore_poison(&self.state);
+        CacheSnapshot {
+            hits: st.hits,
+            misses: st.misses,
+            evictions: st.lru.evictions(),
+            entries: st.lru.len(),
+            bytes: st.lru.bytes(),
+        }
+    }
+
+    /// Zero hits/misses/evictions without dropping cached entries — the
+    /// bench-harness steady-state window.
+    pub fn reset(&self) {
+        let mut st = lock_ignore_poison(&self.state);
+        st.hits = 0;
+        st.misses = 0;
+        st.lru.reset_evictions();
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -180,5 +284,99 @@ mod tests {
         c.reset_evictions();
         assert_eq!(c.evictions(), 0);
         assert_eq!(c.get("b"), Some(2), "entries survive the counter reset");
+    }
+
+    #[test]
+    fn shared_cache_counts_every_lookup_exactly_once() {
+        let c: SharedCache<u32> = SharedCache::new(1024);
+        assert_eq!(c.get("a"), None); // miss
+        c.put("a".into(), 1, 10);
+        assert_eq!(c.get("a"), Some(1)); // hit
+        assert_eq!(c.get("b"), None); // miss
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert_eq!(s.hits + s.misses, 3, "every lookup counted once");
+        assert_eq!((s.entries, s.bytes), (1, 10));
+        c.reset();
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 1));
+        // zero capacity: every lookup is a counted miss, puts are no-ops
+        let z: SharedCache<u32> = SharedCache::new(0);
+        z.put("a".into(), 1, 1);
+        assert_eq!(z.get("a"), None);
+        assert_eq!(z.snapshot().misses, 1);
+    }
+
+    /// A value whose `Clone` panics on demand — the only caller-supplied
+    /// code that runs inside the cache's critical section.
+    struct Grenade {
+        armed: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    impl Clone for Grenade {
+        fn clone(&self) -> Grenade {
+            if self.armed.load(std::sync::atomic::Ordering::SeqCst) {
+                panic!("clone panics while the cache lock is held");
+            }
+            Grenade { armed: self.armed.clone() }
+        }
+    }
+
+    #[test]
+    fn shared_cache_survives_a_panicking_clone_under_the_lock() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let armed = std::sync::Arc::new(AtomicBool::new(false));
+        let c: SharedCache<Grenade> = SharedCache::new(1024);
+        c.put("k".into(), Grenade { armed: armed.clone() }, 10);
+        assert!(c.get("k").is_some(), "disarmed clone works");
+        // Arm it: the next hit panics inside the critical section and
+        // poisons the mutex.
+        armed.store(true, Ordering::SeqCst);
+        let res = std::thread::scope(|s| s.spawn(|| c.get("k")).join());
+        assert!(res.is_err(), "the clone did panic");
+        armed.store(false, Ordering::SeqCst);
+        // Poison recovery: the cache still answers, counts, and accepts
+        // new entries; the interrupted lookup is simply uncounted.
+        assert!(c.get("k").is_some(), "recovered after poisoning");
+        c.put("k2".into(), Grenade { armed: armed.clone() }, 10);
+        assert!(c.get("k2").is_some());
+        let s = c.snapshot();
+        assert_eq!(s.entries, 2);
+        assert!(s.hits >= 3, "counters still advance after recovery");
+    }
+}
+
+/// Exhaustive-interleaving check of the torn-snapshot contract. The
+/// workload performs miss → put → hit on one key; on *every* schedule an
+/// observer snapshot must satisfy `hits <= misses` (a hit can only exist
+/// after its preceding miss), which only holds because the counters and
+/// the LRU share a single lock. See the crate "Verification" docs.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::Arc;
+
+    #[test]
+    fn loom_snapshot_is_never_torn() {
+        loom::model(|| {
+            let c: Arc<SharedCache<u32>> = Arc::new(SharedCache::new(1024));
+            let worker = {
+                let c = Arc::clone(&c);
+                loom::thread::spawn(move || {
+                    assert_eq!(c.get("k"), None); // miss
+                    c.put("k".into(), 7, 8);
+                    assert_eq!(c.get("k"), Some(7)); // hit
+                })
+            };
+            let s = c.snapshot();
+            assert!(
+                s.hits <= s.misses,
+                "torn snapshot: hit visible without its preceding miss ({s:?})"
+            );
+            assert!(s.hits + s.misses <= 2, "over-counted lookups ({s:?})");
+            worker.join().unwrap();
+            let end = c.snapshot();
+            assert_eq!((end.hits, end.misses), (1, 1));
+        });
     }
 }

@@ -99,7 +99,7 @@ pub mod index;
 pub mod service;
 pub mod surface;
 
-pub use cache::LruCache;
+pub use cache::{CacheSnapshot, LruCache, SharedCache};
 pub use index::{
     checksum_records, read_spill_manifest, write_spill_manifest, BlockMeta, IndexConfig,
     PidEntry, PidTable, SeqIndex, SeqTableEntry, SpillManifest, DEFAULT_BLOCK_RECORDS,

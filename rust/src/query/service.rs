@@ -9,21 +9,22 @@
 //!
 //! Caching: results are cached under a canonicalized key (range bounds
 //! normalized, `k` clamped to the distinct-sequence count) in a
-//! size-bounded LRU ([`crate::query::LruCache`]); results are shared as
-//! `Arc`s, so a cache hit clones a pointer, not the records. Hit/miss
-//! counts are observable via [`QueryService::stats`]. The service is
-//! `&self` throughout (cache behind a mutex, counters atomic), so a
-//! serving layer can share one instance across threads.
+//! size-bounded counted LRU ([`crate::query::cache::SharedCache`]);
+//! results are shared as `Arc`s, so a cache hit clones a pointer, not
+//! the records. Hit/miss counts are observable via
+//! [`QueryService::stats`]. The service is `&self` throughout (cache
+//! behind a mutex, counters atomic), so a serving layer can share one
+//! instance across threads.
 
-use super::cache::LruCache;
+use super::cache::SharedCache;
 use super::index::SeqIndex;
 use super::QueryError;
 use crate::metrics::MemTracker;
 use crate::mining::SeqRecord;
 use crate::seqstore::{SeqReader, RECORD_BYTES};
+use crate::sync::atomic::{AtomicU64, Ordering};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Default result-cache budget (32 MiB).
 pub const DEFAULT_CACHE_BYTES: usize = 32 << 20;
@@ -107,19 +108,13 @@ pub struct QueryStats {
     pub logical_bytes_read: u64,
 }
 
-/// Cache plus its hit/miss counters, guarded by one mutex so a stats
-/// snapshot can never observe a torn hit/miss pair.
-struct CacheState {
-    lru: LruCache<QueryResult>,
-    hits: u64,
-    misses: u64,
-}
-
-/// The query engine over one immutable index artifact.
+/// The query engine over one immutable index artifact. The cache and
+/// its hit/miss counters live in one [`SharedCache`] (a single mutex,
+/// from the [`crate::sync`] shim), which is what makes the stats
+/// guarantee above model-checkable under loom.
 pub struct QueryService {
     index: SeqIndex,
-    cache: Mutex<CacheState>,
-    cache_bytes: usize,
+    cache: SharedCache<QueryResult>,
     bytes_read: AtomicU64,
     tracker: Option<Arc<MemTracker>>,
 }
@@ -140,8 +135,7 @@ impl QueryService {
     pub fn from_index(index: SeqIndex, cache_bytes: usize) -> QueryService {
         QueryService {
             index,
-            cache: Mutex::new(CacheState { lru: LruCache::new(cache_bytes), hits: 0, misses: 0 }),
-            cache_bytes,
+            cache: SharedCache::new(cache_bytes),
             bytes_read: AtomicU64::new(0),
             tracker: None,
         }
@@ -160,13 +154,13 @@ impl QueryService {
     /// Cache hit/miss/size and IO counters — one consistent snapshot
     /// (see [`QueryStats`] for the exact guarantee).
     pub fn stats(&self) -> QueryStats {
-        let st = self.cache.lock().unwrap();
+        let s = self.cache.snapshot();
         QueryStats {
-            hits: st.hits,
-            misses: st.misses,
-            evictions: st.lru.evictions(),
-            cached_entries: st.lru.len(),
-            cached_bytes: st.lru.bytes(),
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            cached_entries: s.entries,
+            cached_bytes: s.bytes,
             logical_bytes_read: self.bytes_read.load(Ordering::Relaxed),
         }
     }
@@ -177,10 +171,7 @@ impl QueryService {
     /// steady-state window. `cached_entries`/`cached_bytes` reflect
     /// retained state and are untouched.
     pub fn reset_stats(&self) {
-        let mut st = self.cache.lock().unwrap();
-        st.hits = 0;
-        st.misses = 0;
-        st.lru.reset_evictions();
+        self.cache.reset();
         self.bytes_read.store(0, Ordering::Relaxed);
     }
 
@@ -501,24 +492,17 @@ impl QueryService {
     // --- internals ---------------------------------------------------------
 
     fn cache_get(&self, key: &str) -> Option<QueryResult> {
-        let mut st = self.cache.lock().unwrap();
-        let got = if self.cache_bytes == 0 { None } else { st.lru.get(key) };
-        // Counted under the same lock the snapshot reads, so
-        // `hits + misses == lookups` holds at every instant.
-        if got.is_some() {
-            st.hits += 1;
-        } else {
-            st.misses += 1;
-        }
-        got
+        // SharedCache counts the outcome under the same lock the
+        // snapshot reads, so `hits + misses == lookups` at every instant.
+        self.cache.get(key)
     }
 
     fn cache_put(&self, key: String, value: QueryResult) {
-        if self.cache_bytes == 0 {
+        if self.cache.capacity_bytes() == 0 {
             return;
         }
         let bytes = result_bytes(&value);
-        self.cache.lock().unwrap().lru.put(key, value, bytes);
+        self.cache.put(key, value, bytes);
     }
 
     fn track(&self, bytes: u64) {

@@ -1,0 +1,1121 @@
+//! `cargo xtask lint` — static enforcement of the repository's
+//! compatibility and determinism contracts.
+//!
+//! Four checks, all source-level (no compilation, no dependencies):
+//!
+//! 1. **Append-only wire protocol** — the `ErrorCode` and `Request`
+//!    enums in `rust/src/serve/protocol.rs` must extend the committed
+//!    snapshot (`xtask/snapshots/wire.txt`) by appending at the end
+//!    only; reordering, renaming, or removing a variant breaks every
+//!    deployed client and fails the lint. The protocol version
+//!    constants are pinned the same way. `--bless` rewrites the
+//!    snapshot after an intentional extension.
+//! 2. **Artifact format constants agree with their docs** — the
+//!    `FORMAT`/`VERSION` constants in `query::index` and `ingest` must
+//!    be internally coherent (min ≤ current) and the literals quoted in
+//!    module docs (`"tspm-seqindex"`, `"tspm-spill"`, `"tspm-segset"`,
+//!    "currently N" in the serve docs) must match the constants, so the
+//!    documented contract can never drift from the enforced one.
+//! 3. **Determinism bans** — the deterministic-output modules
+//!    (`mining`, `sparsity`, `query`, `ingest`) may not iterate a
+//!    `HashMap` (iteration order is randomized per process — the exact
+//!    failure mode the byte-identical-output contract forbids) nor call
+//!    `SystemTime::now`. Provably order-insensitive sites are annotated
+//!    `// lint:allow(hashmap_iter)` within the five lines above.
+//! 4. **Unsafe audit** — every `unsafe` in `rust/src` must sit in
+//!    `xtask/snapshots/unsafe_allowlist.txt` (per-file occurrence
+//!    budget) and carry a `// SAFETY:` comment in the five lines above
+//!    it.
+//!
+//! The checks operate on comment/string-stripped source lines, so
+//! mentioning `unsafe` or `HashMap` in docs never trips them. Test
+//! modules (everything at and after the first `#[cfg(test…)]` line — a
+//! repo convention: tests sit at the bottom of each file) are exempt
+//! from the determinism bans but not from the unsafe audit.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// The deterministic-output modules (check 3's scope), as path prefixes
+/// relative to the repo root.
+const DETERMINISTIC_DIRS: [&str; 4] =
+    ["rust/src/mining", "rust/src/sparsity", "rust/src/query", "rust/src/ingest"];
+
+const WIRE_SNAPSHOT: &str = "xtask/snapshots/wire.txt";
+const UNSAFE_ALLOWLIST: &str = "xtask/snapshots/unsafe_allowlist.txt";
+const PROTOCOL_RS: &str = "rust/src/serve/protocol.rs";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let bless = args.iter().any(|a| a == "--bless");
+            match run_lint(&repo_root(), bless) {
+                Ok(0) => {
+                    println!("xtask lint: all invariants hold");
+                    ExitCode::SUCCESS
+                }
+                Ok(n) => {
+                    eprintln!("xtask lint: {n} violation(s)");
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: error: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint [--bless]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Repo root = the parent of xtask's manifest dir.
+fn repo_root() -> PathBuf {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let p = PathBuf::from(manifest);
+    p.parent().map(Path::to_path_buf).unwrap_or(p)
+}
+
+fn run_lint(root: &Path, bless: bool) -> Result<usize, String> {
+    let files = load_tree(root)?;
+    let mut violations = Vec::new();
+
+    // 1. wire snapshot (or bless it)
+    let rendered = render_wire_snapshot(&files, &mut violations);
+    if let Some(rendered) = rendered {
+        let snap_path = root.join(WIRE_SNAPSHOT);
+        if bless {
+            std::fs::write(&snap_path, &rendered)
+                .map_err(|e| format!("cannot write {}: {e}", snap_path.display()))?;
+            println!("xtask lint: blessed {WIRE_SNAPSHOT}");
+        } else {
+            match std::fs::read_to_string(&snap_path) {
+                Ok(committed) => {
+                    check_wire_append_only(&committed, &files, &mut violations)
+                }
+                Err(_) => violations.push(Violation {
+                    file: WIRE_SNAPSHOT.into(),
+                    line: 0,
+                    rule: "wire-snapshot",
+                    msg: "snapshot missing; run `cargo xtask lint --bless` and commit it"
+                        .into(),
+                }),
+            }
+        }
+    }
+
+    // 2. format/version constants vs docs
+    check_format_constants(&files, &mut violations);
+
+    // 3. determinism bans
+    check_determinism(&files, &mut violations);
+
+    // 4. unsafe audit
+    let allowlist = std::fs::read_to_string(root.join(UNSAFE_ALLOWLIST)).unwrap_or_default();
+    check_unsafe(&files, &allowlist, &mut violations);
+
+    for v in &violations {
+        eprintln!("xtask lint: {}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    Ok(violations.len())
+}
+
+// ---------------------------------------------------------------------------
+// Source model
+// ---------------------------------------------------------------------------
+
+struct SourceFile {
+    /// Repo-relative path with `/` separators.
+    path: String,
+    /// Raw lines, 0-indexed.
+    raw: Vec<String>,
+    /// Comment- and string-stripped lines, same indices as `raw`.
+    code: Vec<String>,
+}
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize, // 1-indexed; 0 = whole file
+    rule: &'static str,
+    msg: String,
+}
+
+fn load_tree(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let mut paths = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut paths)
+        .map_err(|e| format!("walking rust/src: {e}"))?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(source_file(rel, &text));
+    }
+    Ok(files)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn source_file(path: String, text: &str) -> SourceFile {
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let code = strip_code(text);
+    SourceFile { path, raw, code }
+}
+
+/// Strip `//` comments, `/* */` block comments, and the *contents* of
+/// string/char literals, preserving line structure so indices map 1:1
+/// onto the raw lines.
+fn strip_code(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_block = false;
+    for line in text.lines() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut s = String::with_capacity(line.len());
+        let mut i = 0;
+        let mut in_str = false; // string literals in this repo never span lines
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            if in_block {
+                if c == '*' && next == Some('/') {
+                    in_block = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if in_str {
+                if c == '\\' {
+                    i += 2; // skip the escaped char
+                } else {
+                    if c == '"' {
+                        in_str = false;
+                        s.push('"');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            match c {
+                '/' if next == Some('/') => break, // line comment: drop the rest
+                '/' if next == Some('*') => {
+                    in_block = true;
+                    i += 2;
+                }
+                '"' => {
+                    in_str = true;
+                    s.push('"');
+                    i += 1;
+                }
+                '\'' => {
+                    // char literal ('x', '\n') vs lifetime ('a): skip the
+                    // literal's contents, keep lifetimes as-is.
+                    if next == Some('\\') && chars.get(i + 3) == Some(&'\'') {
+                        s.push('\'');
+                        s.push('\'');
+                        i += 4;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        s.push('\'');
+                        s.push('\'');
+                        i += 3;
+                    } else {
+                        s.push('\'');
+                        i += 1;
+                    }
+                }
+                _ => {
+                    s.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(s);
+    }
+    out
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `haystack` contains `token` with identifier boundaries on both sides.
+fn contains_token(haystack: &str, token: &str) -> bool {
+    find_token(haystack, token, 0).is_some()
+}
+
+fn find_token(haystack: &str, token: &str, from: usize) -> Option<usize> {
+    let mut start = from;
+    while start <= haystack.len() {
+        let pos = haystack[start..].find(token)? + start;
+        let before_ok =
+            pos == 0 || !is_ident_char(haystack[..pos].chars().next_back().unwrap());
+        let after = pos + token.len();
+        let after_ok =
+            after >= haystack.len() || !is_ident_char(haystack[after..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        start = pos + token.len().max(1);
+    }
+    None
+}
+
+fn get<'a>(files: &'a [SourceFile], path: &str) -> Option<&'a SourceFile> {
+    files.iter().find(|f| f.path == path)
+}
+
+// ---------------------------------------------------------------------------
+// Check 1 — append-only wire snapshot
+// ---------------------------------------------------------------------------
+
+/// Parse the variant names of `enum_name` from stripped code lines:
+/// lines whose brace depth (relative to the enum's opening `{`) is 1 and
+/// that begin with an uppercase identifier.
+fn enum_variants(code: &[String], enum_name: &str) -> Option<Vec<String>> {
+    let decl = format!("enum {enum_name}");
+    let start = code.iter().position(|l| l.contains(&decl))?;
+    let mut depth = 0i32;
+    let mut entered = false;
+    let mut variants = Vec::new();
+    for line in &code[start..] {
+        let depth_at_start = depth;
+        for ch in line.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if !entered {
+            if depth > 0 {
+                entered = true;
+            }
+            continue;
+        }
+        if depth_at_start == 1 {
+            if let Some(name) = leading_variant_ident(line) {
+                variants.push(name);
+            }
+        }
+        if depth <= 0 {
+            break;
+        }
+    }
+    Some(variants)
+}
+
+fn leading_variant_ident(line: &str) -> Option<String> {
+    let t = line.trim_start();
+    if t.starts_with('#') {
+        return None; // attribute, e.g. #[non_exhaustive]
+    }
+    let ident: String = t.chars().take_while(|&c| is_ident_char(c)).collect();
+    let first = ident.chars().next()?;
+    if !first.is_ascii_uppercase() {
+        return None;
+    }
+    let rest = t[ident.len()..].trim_start();
+    if rest.is_empty()
+        || rest.starts_with(',')
+        || rest.starts_with('{')
+        || rest.starts_with('(')
+        || rest.starts_with('=')
+    {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// The value text of `pub const NAME … = value;` — matched on stripped
+/// code, extracted from the raw line (string contents survive there).
+fn const_value(f: &SourceFile, name: &str) -> Option<(usize, String)> {
+    for (i, code) in f.code.iter().enumerate() {
+        if contains_token(code, "const") && contains_token(code, name) && code.contains('=') {
+            let raw = &f.raw[i];
+            let eq = raw.find('=')?;
+            let v = raw[eq + 1..].trim().trim_end_matches(';').trim().to_string();
+            return Some((i + 1, v));
+        }
+    }
+    None
+}
+
+/// Current wire-protocol state rendered in the snapshot format, or
+/// `None` (with violations pushed) when protocol.rs is unparseable.
+fn render_wire_snapshot(files: &[SourceFile], violations: &mut Vec<Violation>) -> Option<String> {
+    let Some(proto) = get(files, PROTOCOL_RS) else {
+        violations.push(Violation {
+            file: PROTOCOL_RS.into(),
+            line: 0,
+            rule: "wire-snapshot",
+            msg: "file not found".into(),
+        });
+        return None;
+    };
+    let mut missing = Vec::new();
+    let errors = enum_variants(&proto.code, "ErrorCode").unwrap_or_else(|| {
+        missing.push("enum ErrorCode");
+        Vec::new()
+    });
+    let requests = enum_variants(&proto.code, "Request").unwrap_or_else(|| {
+        missing.push("enum Request");
+        Vec::new()
+    });
+    let pv = const_value(proto, "PROTOCOL_VERSION").map(|(_, v)| v).unwrap_or_else(|| {
+        missing.push("PROTOCOL_VERSION");
+        String::new()
+    });
+    let mpv = const_value(proto, "MIN_PROTOCOL_VERSION").map(|(_, v)| v).unwrap_or_else(|| {
+        missing.push("MIN_PROTOCOL_VERSION");
+        String::new()
+    });
+    if !missing.is_empty() {
+        violations.push(Violation {
+            file: PROTOCOL_RS.into(),
+            line: 0,
+            rule: "wire-snapshot",
+            msg: format!("cannot parse: {}", missing.join(", ")),
+        });
+        return None;
+    }
+    let mut s = String::new();
+    s.push_str(
+        "# Committed wire-protocol snapshot — the append-only contract for\n\
+         # rust/src/serve/protocol.rs. `cargo xtask lint` fails if the live\n\
+         # `ErrorCode` / `Request` enums reorder, rename, or drop anything listed\n\
+         # here (appending new variants at the END is allowed), or if the\n\
+         # protocol version constants drift. To intentionally extend the\n\
+         # protocol: append the new variants, then re-bless this file with\n\
+         # `cargo xtask lint --bless` in the same commit.\n\n",
+    );
+    s.push_str(&format!("protocol_version = {pv}\n"));
+    s.push_str(&format!("min_protocol_version = {mpv}\n"));
+    s.push_str("\n[ErrorCode]\n");
+    for v in &errors {
+        s.push_str(v);
+        s.push('\n');
+    }
+    s.push_str("\n[Request]\n");
+    for v in &requests {
+        s.push_str(v);
+        s.push('\n');
+    }
+    Some(s)
+}
+
+/// Parse a snapshot file into (key=value pairs, per-section variant lists).
+fn parse_snapshot(text: &str) -> (BTreeMap<String, String>, BTreeMap<String, Vec<String>>) {
+    let mut kv = BTreeMap::new();
+    let mut sections: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let mut current: Option<String> = None;
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = t.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            current = Some(name.to_string());
+            sections.entry(name.to_string()).or_default();
+        } else if let Some(section) = &current {
+            sections.get_mut(section).expect("section exists").push(t.to_string());
+        } else if let Some((k, v)) = t.split_once('=') {
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    (kv, sections)
+}
+
+fn check_wire_append_only(
+    committed: &str,
+    files: &[SourceFile],
+    violations: &mut Vec<Violation>,
+) {
+    let Some(proto) = get(files, PROTOCOL_RS) else { return };
+    let (kv, sections) = parse_snapshot(committed);
+    for (enum_name, live) in [
+        ("ErrorCode", enum_variants(&proto.code, "ErrorCode").unwrap_or_default()),
+        ("Request", enum_variants(&proto.code, "Request").unwrap_or_default()),
+    ] {
+        let Some(snap) = sections.get(enum_name) else {
+            violations.push(Violation {
+                file: WIRE_SNAPSHOT.into(),
+                line: 0,
+                rule: "wire-append-only",
+                msg: format!("snapshot has no [{enum_name}] section; re-bless"),
+            });
+            continue;
+        };
+        if live.len() < snap.len() {
+            violations.push(Violation {
+                file: PROTOCOL_RS.into(),
+                line: 0,
+                rule: "wire-append-only",
+                msg: format!(
+                    "{enum_name} lost variants: snapshot has {}, source has {} — \
+                     removing wire variants breaks deployed clients",
+                    snap.len(),
+                    live.len()
+                ),
+            });
+            continue;
+        }
+        for (i, want) in snap.iter().enumerate() {
+            if &live[i] != want {
+                violations.push(Violation {
+                    file: PROTOCOL_RS.into(),
+                    line: 0,
+                    rule: "wire-append-only",
+                    msg: format!(
+                        "{enum_name} variant {i} is {:?}, snapshot says {want:?} — \
+                         variants are append-only (append at the end, never \
+                         reorder/rename; `--bless` only for intentional extensions)",
+                        live[i]
+                    ),
+                });
+                break;
+            }
+        }
+    }
+    for (key, const_name) in [
+        ("protocol_version", "PROTOCOL_VERSION"),
+        ("min_protocol_version", "MIN_PROTOCOL_VERSION"),
+    ] {
+        let live = const_value(proto, const_name).map(|(_, v)| v);
+        let snap = kv.get(key);
+        if live.as_deref() != snap.map(String::as_str) {
+            violations.push(Violation {
+                file: PROTOCOL_RS.into(),
+                line: 0,
+                rule: "wire-append-only",
+                msg: format!(
+                    "{const_name} is {:?} but the snapshot pins {:?} — protocol \
+                     version changes must be blessed deliberately",
+                    live.unwrap_or_default(),
+                    snap.cloned().unwrap_or_default()
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 2 — artifact format constants agree with docs
+// ---------------------------------------------------------------------------
+
+fn check_format_constants(files: &[SourceFile], violations: &mut Vec<Violation>) {
+    let mut push = |file: &str, line: usize, msg: String| {
+        violations.push(Violation { file: file.into(), line, rule: "format-constants", msg });
+    };
+
+    // Pull every constant; a missing one is itself a violation (the
+    // contract lives in these names).
+    let mut consts: BTreeMap<&str, (String, usize, String)> = BTreeMap::new();
+    for (path, names) in [
+        (PROTOCOL_RS, &["PROTOCOL_VERSION", "MIN_PROTOCOL_VERSION"][..]),
+        (
+            "rust/src/query/index.rs",
+            &[
+                "INDEX_FORMAT",
+                "INDEX_FORMAT_VERSION",
+                "INDEX_MIN_FORMAT_VERSION",
+                "SPILL_FORMAT",
+                "SPILL_FORMAT_VERSION",
+            ][..],
+        ),
+        ("rust/src/ingest/mod.rs", &["SEGSET_FORMAT", "SEGSET_FORMAT_VERSION"][..]),
+    ] {
+        let Some(f) = get(files, path) else {
+            push(path, 0, "file not found".into());
+            continue;
+        };
+        for name in names {
+            match const_value(f, name) {
+                Some((line, v)) => {
+                    consts.insert(name, (path.to_string(), line, v));
+                }
+                None => push(path, 0, format!("constant {name} not found")),
+            }
+        }
+    }
+    let int = |name: &str| -> Option<u64> {
+        consts.get(name).and_then(|(_, _, v)| v.parse().ok())
+    };
+    let strv = |name: &str| -> Option<String> {
+        consts.get(name).map(|(_, _, v)| v.trim_matches('"').to_string())
+    };
+
+    // min ≤ current, for every versioned surface that has a min.
+    for (min, cur) in [
+        ("MIN_PROTOCOL_VERSION", "PROTOCOL_VERSION"),
+        ("INDEX_MIN_FORMAT_VERSION", "INDEX_FORMAT_VERSION"),
+    ] {
+        if let (Some(lo), Some(hi)) = (int(min), int(cur)) {
+            if lo > hi {
+                let (path, line, _) = &consts[min];
+                push(path, *line, format!("{min} ({lo}) exceeds {cur} ({hi})"));
+            }
+        }
+    }
+
+    // Doc claims "currently N" in the serve layer must equal
+    // PROTOCOL_VERSION.
+    if let Some(pv) = int("PROTOCOL_VERSION") {
+        for path in [PROTOCOL_RS, "rust/src/serve/mod.rs"] {
+            let Some(f) = get(files, path) else { continue };
+            for (i, raw) in f.raw.iter().enumerate() {
+                let Some(pos) = raw.find("currently ") else { continue };
+                let digits: String = raw[pos + "currently ".len()..]
+                    .chars()
+                    .take_while(char::is_ascii_digit)
+                    .collect();
+                if let Ok(n) = digits.parse::<u64>() {
+                    if n != pv {
+                        push(
+                            path,
+                            i + 1,
+                            format!(
+                                "docs say the protocol version is currently {n}, \
+                                 PROTOCOL_VERSION is {pv}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // The format names quoted in module docs must match the constants.
+    for (const_name, doc_path) in [
+        ("INDEX_FORMAT", "rust/src/query/mod.rs"),
+        ("SPILL_FORMAT", "rust/src/query/mod.rs"),
+        ("SEGSET_FORMAT", "rust/src/ingest/mod.rs"),
+    ] {
+        let Some(fmt) = strv(const_name) else { continue };
+        let Some(doc) = get(files, doc_path) else { continue };
+        if !doc.raw.iter().any(|l| l.contains(&fmt)) {
+            let (path, line, _) = &consts[const_name];
+            push(
+                path,
+                *line,
+                format!(
+                    "{const_name} = {fmt:?} is never mentioned in {doc_path}'s \
+                     module docs — the documented format contract drifted"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 3 — determinism bans in mining/sparsity/query/ingest
+// ---------------------------------------------------------------------------
+
+/// Index of the first test-module line (`#[cfg(test…)]`), if any. The
+/// repo convention keeps test modules at the bottom of each file, so
+/// everything from here on is exempt from the determinism bans.
+fn first_test_line(code: &[String]) -> usize {
+    code.iter()
+        .position(|l| l.contains("#[cfg(test") || l.contains("#[cfg(all(test"))
+        .unwrap_or(code.len())
+}
+
+/// `line` (0-indexed) carries a `lint:allow(rule)` marker on itself or
+/// within the five raw lines above it.
+fn suppressed(f: &SourceFile, line: usize, rule: &str) -> bool {
+    let marker = format!("lint:allow({rule})");
+    let lo = line.saturating_sub(5);
+    f.raw[lo..=line].iter().any(|l| l.contains(&marker))
+}
+
+/// Identifiers declared with a `HashMap<…>` type in this file: the
+/// identifier immediately before the `: HashMap<` type ascription
+/// (covers `let`, `let mut`, struct fields, and function parameters).
+fn hashmap_idents(code: &[String]) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in code {
+        let mut from = 0;
+        while let Some(pos) = line[from..].find("HashMap<").map(|p| p + from) {
+            from = pos + "HashMap<".len();
+            let prefix = line[..pos].trim_end();
+            // type ascription: `name: HashMap<…>` (reject paths `::`)
+            let Some(p) = prefix.strip_suffix(':') else { continue };
+            if p.ends_with(':') {
+                continue;
+            }
+            let ident: String = p
+                .chars()
+                .rev()
+                .take_while(|&c| is_ident_char(c))
+                .collect::<String>()
+                .chars()
+                .rev()
+                .collect();
+            if !ident.is_empty() && !names.contains(&ident) {
+                names.push(ident);
+            }
+        }
+    }
+    names
+}
+
+/// Iteration over `name` on this stripped line: a method whose order is
+/// the map's internal order, or a `for … in name` loop.
+fn iterates_map(code: &str, name: &str) -> bool {
+    const METHODS: [&str; 7] =
+        [".iter()", ".iter_mut()", ".values()", ".values_mut()", ".keys()", ".into_iter()", ".drain("];
+    let mut from = 0;
+    while let Some(pos) = find_token(code, name, from) {
+        from = pos + name.len();
+        let after = &code[pos + name.len()..];
+        if METHODS.iter().any(|m| after.starts_with(m)) {
+            return true;
+        }
+        let before = code[..pos].trim_end();
+        let before = before.strip_suffix("&mut").unwrap_or(before).trim_end();
+        let before = before.strip_suffix('&').unwrap_or(before).trim_end();
+        if before.ends_with("in")
+            && before[..before.len() - 2]
+                .chars()
+                .next_back()
+                .is_none_or(|c| !is_ident_char(c))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+fn check_determinism(files: &[SourceFile], violations: &mut Vec<Violation>) {
+    for f in files {
+        if !DETERMINISTIC_DIRS.iter().any(|d| f.path.starts_with(d)) {
+            continue;
+        }
+        let limit = first_test_line(&f.code);
+        let maps = hashmap_idents(&f.code[..limit]);
+        for (i, code) in f.code[..limit].iter().enumerate() {
+            if contains_token(code, "SystemTime") && code.contains("SystemTime::now") {
+                if !suppressed(f, i, "system_time") {
+                    violations.push(Violation {
+                        file: f.path.clone(),
+                        line: i + 1,
+                        rule: "no-system-time",
+                        msg: "SystemTime::now in a deterministic-output module — \
+                              output must not depend on the clock"
+                            .into(),
+                    });
+                }
+                continue;
+            }
+            for name in &maps {
+                if iterates_map(code, name) && !suppressed(f, i, "hashmap_iter") {
+                    violations.push(Violation {
+                        file: f.path.clone(),
+                        line: i + 1,
+                        rule: "no-hashmap-iter",
+                        msg: format!(
+                            "iteration over HashMap `{name}` in a deterministic-output \
+                             module — iteration order is randomized per process; sort \
+                             first, use a BTreeMap, or annotate the line above with \
+                             `// lint:allow(hashmap_iter)` and a proof of order-\
+                             insensitivity"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 4 — unsafe audit
+// ---------------------------------------------------------------------------
+
+fn parse_allowlist(text: &str) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some((path, n)) = t.split_once('=') {
+            if let Ok(n) = n.trim().parse() {
+                out.insert(path.trim().to_string(), n);
+            }
+        }
+    }
+    out
+}
+
+fn check_unsafe(files: &[SourceFile], allowlist_text: &str, violations: &mut Vec<Violation>) {
+    let allow = parse_allowlist(allowlist_text);
+    for f in files {
+        let mut count = 0usize;
+        for (i, code) in f.code.iter().enumerate() {
+            if !contains_token(code, "unsafe") {
+                continue;
+            }
+            count += 1;
+            let lo = i.saturating_sub(5);
+            if !f.raw[lo..=i].iter().any(|l| l.contains("SAFETY:")) {
+                violations.push(Violation {
+                    file: f.path.clone(),
+                    line: i + 1,
+                    rule: "unsafe-undocumented",
+                    msg: "`unsafe` without a `// SAFETY:` comment in the five lines \
+                          above it"
+                        .into(),
+                });
+            }
+        }
+        let budget = allow.get(&f.path).copied().unwrap_or(0);
+        if count > budget {
+            violations.push(Violation {
+                file: f.path.clone(),
+                line: 0,
+                rule: "unsafe-allowlist",
+                msg: format!(
+                    "{count} `unsafe` occurrence(s), allowlist budget is {budget} \
+                     ({UNSAFE_ALLOWLIST}) — adding unsafe is a review decision, \
+                     grow the budget in the same commit or write safe code"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests — each acceptance-criteria seeded violation has a case here.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROTO_SRC: &str = r#"
+//! header doc mentioning unsafe and HashMap freely.
+pub const PROTOCOL_VERSION: u8 = 1;
+pub const MIN_PROTOCOL_VERSION: u8 = 1;
+
+/// Wire error codes.
+pub enum ErrorCode {
+    /// The frame itself was malformed.
+    BadFrame,
+    UnsupportedVersion,
+    Internal,
+}
+
+pub enum Request {
+    Ping,
+    Stats { artifact: Option<String> },
+    PatientsWith {
+        artifact: Option<String>,
+        seq: u64,
+    },
+    Shutdown,
+}
+"#;
+
+    fn proto_file() -> SourceFile {
+        source_file(PROTOCOL_RS.to_string(), PROTO_SRC)
+    }
+
+    #[test]
+    fn enum_parser_reads_variants_in_order() {
+        let f = proto_file();
+        assert_eq!(
+            enum_variants(&f.code, "ErrorCode").unwrap(),
+            vec!["BadFrame", "UnsupportedVersion", "Internal"]
+        );
+        assert_eq!(
+            enum_variants(&f.code, "Request").unwrap(),
+            vec!["Ping", "Stats", "PatientsWith", "Shutdown"],
+            "struct-variant fields are not variants"
+        );
+        assert_eq!(const_value(&f, "PROTOCOL_VERSION").unwrap().1, "1");
+    }
+
+    #[test]
+    fn snapshot_round_trip_passes() {
+        let files = vec![proto_file()];
+        let mut v = Vec::new();
+        let rendered = render_wire_snapshot(&files, &mut v).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+        check_wire_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "a freshly blessed snapshot must pass: {v:?}");
+        // Appending a variant at the end still passes (append-only).
+        let extended = PROTO_SRC.replace("    Internal,\n", "    Internal,\n    Shed,\n");
+        let files = vec![source_file(PROTOCOL_RS.to_string(), &extended)];
+        let mut v = Vec::new();
+        check_wire_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "appending at the end is allowed: {v:?}");
+    }
+
+    /// Seeded violation 1: a reordered `ErrorCode` variant fails.
+    #[test]
+    fn reordered_error_code_variant_fails() {
+        let files = vec![proto_file()];
+        let mut v = Vec::new();
+        let rendered = render_wire_snapshot(&files, &mut v).unwrap();
+        let reordered = PROTO_SRC.replace(
+            "    BadFrame,\n    UnsupportedVersion,",
+            "    UnsupportedVersion,\n    BadFrame,",
+        );
+        assert_ne!(reordered, PROTO_SRC, "seed applied");
+        let files = vec![source_file(PROTOCOL_RS.to_string(), &reordered)];
+        let mut v = Vec::new();
+        check_wire_append_only(&rendered, &files, &mut v);
+        assert!(
+            v.iter().any(|v| v.rule == "wire-append-only" && v.msg.contains("ErrorCode")),
+            "{v:?}"
+        );
+        // Removing a variant fails too.
+        let removed = PROTO_SRC.replace("    UnsupportedVersion,\n", "");
+        let files = vec![source_file(PROTOCOL_RS.to_string(), &removed)];
+        let mut v = Vec::new();
+        check_wire_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("lost variants")), "{v:?}");
+        // A version bump without a bless fails.
+        let bumped = PROTO_SRC.replace("PROTOCOL_VERSION: u8 = 1", "PROTOCOL_VERSION: u8 = 2");
+        let files = vec![source_file(PROTOCOL_RS.to_string(), &bumped)];
+        let mut v = Vec::new();
+        check_wire_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("PROTOCOL_VERSION")), "{v:?}");
+    }
+
+    /// Seeded violation 2: a new undocumented `unsafe` block fails both
+    /// the SAFETY audit and the allowlist budget.
+    #[test]
+    fn undocumented_unsafe_fails() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+        let f = source_file("rust/src/par/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_unsafe(&[f], "", &mut v);
+        assert!(v.iter().any(|v| v.rule == "unsafe-undocumented"), "{v:?}");
+        assert!(v.iter().any(|v| v.rule == "unsafe-allowlist"), "{v:?}");
+
+        // Documented AND budgeted: clean.
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: p is valid per the caller contract.\n    unsafe { *p = 0 };\n}\n";
+        let f = source_file("rust/src/par/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_unsafe(&[f], "rust/src/par/mod.rs = 1\n", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+
+        // Mentioning unsafe in comments or strings is NOT an occurrence.
+        let src = "// unsafe is discussed here\nfn f() { let _ = \"unsafe\"; }\n";
+        let f = source_file("rust/src/par/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_unsafe(&[f], "", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// Seeded violation 3: HashMap iteration in `mining` fails, the
+    /// suppression marker clears it, and test modules are exempt.
+    #[test]
+    fn hashmap_iteration_in_mining_fails() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() {\n\
+                   \x20   let mut m: HashMap<u32, u32> = HashMap::new();\n\
+                   \x20   for (k, v) in m {\n\
+                   \x20       drop((k, v));\n\
+                   \x20   }\n\
+                   }\n";
+        let f = source_file("rust/src/mining/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_determinism(&[f], &mut v);
+        assert!(v.iter().any(|v| v.rule == "no-hashmap-iter"), "{v:?}");
+
+        // .values() and .keys() and .iter() are equally banned.
+        for call in ["m.values()", "m.keys()", "m.iter()", "m.drain(..)"] {
+            let src = format!(
+                "fn f() {{\n    let m: HashMap<u32, u32> = HashMap::new();\n    let _ = {call};\n}}\n"
+            );
+            let f = source_file("rust/src/mining/mod.rs".into(), &src);
+            let mut v = Vec::new();
+            check_determinism(&[f], &mut v);
+            assert!(v.iter().any(|v| v.rule == "no-hashmap-iter"), "{call}: {v:?}");
+        }
+
+        // The suppression marker on the line above clears it.
+        let src = "fn f() {\n\
+                   \x20   let m: HashMap<u32, u32> = HashMap::new();\n\
+                   \x20   // lint:allow(hashmap_iter) — summed, order-insensitive\n\
+                   \x20   let _: u32 = m.values().sum();\n\
+                   }\n";
+        let f = source_file("rust/src/mining/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_determinism(&[f], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+
+        // Test modules (bottom-of-file convention) are exempt.
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   use std::collections::HashMap;\n\
+                   \x20   fn t() {\n\
+                   \x20       let m: HashMap<u32, u32> = HashMap::new();\n\
+                   \x20       for x in m.values() {}\n\
+                   \x20   }\n\
+                   }\n";
+        let f = source_file("rust/src/mining/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_determinism(&[f], &mut v);
+        assert!(v.is_empty(), "test modules are exempt: {v:?}");
+
+        // Outside the deterministic dirs nothing fires.
+        let src = "fn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n    for x in m {}\n}\n";
+        let f = source_file("rust/src/metrics/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_determinism(&[f], &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn system_time_in_deterministic_module_fails() {
+        let src = "fn f() -> std::time::SystemTime {\n    std::time::SystemTime::now()\n}\n";
+        let f = source_file("rust/src/ingest/mod.rs".into(), src);
+        let mut v = Vec::new();
+        check_determinism(&[f], &mut v);
+        assert!(v.iter().any(|v| v.rule == "no-system-time"), "{v:?}");
+    }
+
+    #[test]
+    fn format_doc_drift_fails() {
+        let index = source_file(
+            "rust/src/query/index.rs".into(),
+            "pub const INDEX_FORMAT: &str = \"tspm-seqindex\";\n\
+             pub const INDEX_FORMAT_VERSION: u64 = 2;\n\
+             pub const INDEX_MIN_FORMAT_VERSION: u64 = 1;\n\
+             pub const SPILL_FORMAT: &str = \"tspm-spill\";\n\
+             pub const SPILL_FORMAT_VERSION: u64 = 1;\n",
+        );
+        let ingest = source_file(
+            "rust/src/ingest/mod.rs".into(),
+            "//! The manifest format is \"tspm-segset\".\n\
+             pub const SEGSET_FORMAT: &str = \"tspm-segset\";\n\
+             pub const SEGSET_FORMAT_VERSION: u64 = 1;\n",
+        );
+        let proto = proto_file();
+        // query/mod.rs docs mention the spill format but NOT the index
+        // format → exactly one drift violation.
+        let query_mod = source_file(
+            "rust/src/query/mod.rs".into(),
+            "//! artifacts use \"tspm-spill\" spill manifests.\n",
+        );
+        let serve_mod = source_file(
+            "rust/src/serve/mod.rs".into(),
+            "//! byte  4      version        currently 1\n",
+        );
+        let files = vec![index, ingest, proto, query_mod, serve_mod];
+        let mut v = Vec::new();
+        check_format_constants(&files, &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("INDEX_FORMAT"), "{v:?}");
+
+        // A doc claiming the wrong protocol version fails.
+        let serve_mod = source_file(
+            "rust/src/serve/mod.rs".into(),
+            "//! byte  4      version        currently 3\n",
+        );
+        let files = vec![
+            source_file(
+                "rust/src/query/mod.rs".into(),
+                "//! \"tspm-seqindex\" and \"tspm-spill\" are documented here.\n",
+            ),
+            source_file(
+                "rust/src/query/index.rs".into(),
+                "pub const INDEX_FORMAT: &str = \"tspm-seqindex\";\n\
+                 pub const INDEX_FORMAT_VERSION: u64 = 2;\n\
+                 pub const INDEX_MIN_FORMAT_VERSION: u64 = 1;\n\
+                 pub const SPILL_FORMAT: &str = \"tspm-spill\";\n\
+                 pub const SPILL_FORMAT_VERSION: u64 = 1;\n",
+            ),
+            source_file(
+                "rust/src/ingest/mod.rs".into(),
+                "//! \"tspm-segset\"\npub const SEGSET_FORMAT: &str = \"tspm-segset\";\n\
+                 pub const SEGSET_FORMAT_VERSION: u64 = 1;\n",
+            ),
+            proto_file(),
+            serve_mod,
+        ];
+        let mut v = Vec::new();
+        check_format_constants(&files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("currently 3")), "{v:?}");
+    }
+
+    #[test]
+    fn min_version_above_current_fails() {
+        let bad = PROTO_SRC.replace(
+            "pub const MIN_PROTOCOL_VERSION: u8 = 1;",
+            "pub const MIN_PROTOCOL_VERSION: u8 = 9;",
+        );
+        let files = vec![
+            source_file(PROTOCOL_RS.to_string(), &bad),
+            source_file(
+                "rust/src/query/index.rs".into(),
+                "pub const INDEX_FORMAT: &str = \"x\";\n\
+                 pub const INDEX_FORMAT_VERSION: u64 = 2;\n\
+                 pub const INDEX_MIN_FORMAT_VERSION: u64 = 1;\n\
+                 pub const SPILL_FORMAT: &str = \"y\";\n\
+                 pub const SPILL_FORMAT_VERSION: u64 = 1;\n",
+            ),
+            source_file(
+                "rust/src/ingest/mod.rs".into(),
+                "//! \"z\"\npub const SEGSET_FORMAT: &str = \"z\";\n\
+                 pub const SEGSET_FORMAT_VERSION: u64 = 1;\n",
+            ),
+            source_file("rust/src/query/mod.rs".into(), "//! \"x\" \"y\"\n"),
+            source_file("rust/src/serve/mod.rs".into(), "//! nothing here\n"),
+        ];
+        let mut v = Vec::new();
+        check_format_constants(&files, &mut v);
+        assert!(
+            v.iter().any(|v| v.msg.contains("MIN_PROTOCOL_VERSION")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn strip_code_removes_comments_and_string_contents() {
+        let got = strip_code(
+            "let s = \"unsafe in a string\"; // unsafe in a comment\nlet c = 'x';\n/* block\nunsafe\n*/ let d = 1;",
+        );
+        assert_eq!(got[0], "let s = \"\"; ");
+        assert_eq!(got[1], "let c = '';");
+        assert_eq!(got[2], "");
+        assert_eq!(got[3], "");
+        assert_eq!(got[4], " let d = 1;");
+        assert!(!got.iter().any(|l| contains_token(l, "unsafe")));
+    }
+
+    #[test]
+    fn allowlist_parser_reads_budgets() {
+        let a = parse_allowlist("# comment\nrust/src/metrics/mod.rs = 1\n\nx/y.rs = 3\n");
+        assert_eq!(a.get("rust/src/metrics/mod.rs"), Some(&1));
+        assert_eq!(a.get("x/y.rs"), Some(&3));
+        assert_eq!(a.len(), 2);
+    }
+}
