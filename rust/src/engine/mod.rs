@@ -70,9 +70,10 @@ use crate::config::RunConfig;
 use crate::dbmart::{DbMart, NumericDbMart};
 use crate::ingest::SegmentSet;
 use crate::matrix::SeqMatrix;
-use crate::metrics::{fmt_bytes, fmt_duration, MemTracker, PhaseTimer};
+use crate::metrics::{fmt_bytes, fmt_duration, MemTracker};
 use crate::mining::{MiningConfig, SeqRecord, SequenceSet};
 use crate::msmr::{self, MsmrConfig, Selection};
+use crate::obs::{self, names, Span, Tracer};
 use crate::partition;
 use crate::query::{self, SeqIndex};
 use crate::runtime::ArtifactSet;
@@ -295,6 +296,7 @@ pub struct Engine {
     output: OutputChoice,
     out_dir: Option<PathBuf>,
     labels: Option<Vec<f32>>,
+    tracer: Option<Tracer>,
 }
 
 impl Engine {
@@ -308,6 +310,7 @@ impl Engine {
             output: OutputChoice::Auto,
             out_dir: None,
             labels: None,
+            tracer: None,
         }
     }
 
@@ -459,6 +462,16 @@ impl Engine {
         self
     }
 
+    /// Attach a tracer: every stage runs under a child span of one
+    /// `engine.run` root, and [`RunReport`] stage timings are read from
+    /// those spans (default: [`Tracer::from_env`], so `TSPM_TRACE=1`
+    /// traces any run without code changes). Tracing never touches the
+    /// data path — outputs are byte-identical with it on or off.
+    pub fn tracer(mut self, tracer: Tracer) -> Engine {
+        self.tracer = Some(tracer);
+        self
+    }
+
     // --- plan / run --------------------------------------------------------
 
     /// Assemble and validate the plan without executing it.
@@ -508,7 +521,8 @@ impl Engine {
     /// (MSMR contractions); `None` uses the pure-Rust paths.
     pub fn run_with(self, artifacts: Option<&ArtifactSet>) -> Result<RunOutput, TspmError> {
         let plan = self.plan()?;
-        let Engine { db, labels, memory_budget_bytes, .. } = self;
+        let Engine { db, labels, memory_budget_bytes, tracer, .. } = self;
+        let tracer = tracer.unwrap_or_else(Tracer::from_env);
 
         let mining_cfg = plan
             .mining_config()
@@ -538,33 +552,48 @@ impl Engine {
             .unwrap_or_else(|| mining_cfg.work_dir.join("engine_out"));
         let mine_dir = out_dir.join("mine");
 
-        let mut timer = PhaseTimer::new();
         let tracker = MemTracker::new();
         let mut stages: Vec<StageReport> = Vec::new();
 
+        // One root span covers the run; each stage runs under a child
+        // span whose measured duration *is* the RunReport timing (the
+        // old PhaseTimer is gone — spans are the single clock). The
+        // ambient-context guard lets instrumented callees (cache, block
+        // reads) link their spans into this trace without new
+        // parameters.
+        let mut run_span = tracer.span("engine.run");
+        run_span.attr("backend", kind.to_string());
+        run_span.attr("output", out_kind.to_string());
+        run_span.attr("forecast_sequences", fc.total_sequences);
+        let ctx = obs::trace::push_current(&run_span);
+
         // 1. Mine, on the resolved backend, into the resolved residency.
-        let mut output = timer.run("mine", || -> Result<SequenceOutput, TspmError> {
-            match out_kind {
-                OutputKind::InMemory => Ok(SequenceOutput::InMemory(backend::execute(
-                    kind,
-                    &db,
-                    &mining_cfg,
-                    chunk_cap,
-                    &tracker,
-                )?)),
-                OutputKind::Spilled => Ok(SequenceOutput::Spilled(backend::execute_spilled(
-                    kind,
-                    &db,
-                    &mining_cfg,
-                    chunk_cap,
-                    &mine_dir,
-                    &tracker,
-                )?)),
-            }
-        })?;
+        let (mine_res, mine_elapsed) =
+            observed_stage(&run_span, "engine.mine", &tracker, || -> Result<SequenceOutput, TspmError> {
+                match out_kind {
+                    OutputKind::InMemory => Ok(SequenceOutput::InMemory(backend::execute(
+                        kind,
+                        &db,
+                        &mining_cfg,
+                        chunk_cap,
+                        &tracker,
+                    )?)),
+                    OutputKind::Spilled => {
+                        Ok(SequenceOutput::Spilled(backend::execute_spilled(
+                            kind,
+                            &db,
+                            &mining_cfg,
+                            chunk_cap,
+                            &mine_dir,
+                            &tracker,
+                        )?))
+                    }
+                }
+            });
+        let mut output: SequenceOutput = mine_res?;
         stages.push(StageReport {
             stage: "mine".into(),
-            elapsed: timer.elapsed("mine").unwrap_or_default(),
+            elapsed: mine_elapsed,
             records_out: output.len() as u64,
             bytes_out: output.byte_size(),
         });
@@ -574,30 +603,34 @@ impl Engine {
         // (`sparsity::screen_spilled`) over spill files.
         let mut screen_stats = None;
         if let Some(sc) = plan.screen_config() {
-            let stats = timer.run("screen", || -> Result<ScreenStats, TspmError> {
-                match &mut output {
-                    SequenceOutput::InMemory(set) => Ok(sparsity::screen(&mut set.records, &sc)),
-                    SequenceOutput::Spilled(files) => {
-                        let spill_cfg = sparsity::SpillScreenConfig {
-                            min_patients: sc.min_patients,
-                            threads: sc.threads,
-                            buffer_bytes: screen_buffer_bytes(budget),
-                            out_dir: out_dir.clone(),
-                        };
-                        let (survivors, stats) =
-                            sparsity::screen_spilled(files, &spill_cfg, Some(&tracker))?;
-                        // The mined intermediates are consumed; the
-                        // survivor file is the durable result.
-                        let _ = files.remove();
-                        let _ = std::fs::remove_dir(&mine_dir);
-                        *files = survivors;
-                        Ok(stats)
+            let (stats_res, screen_elapsed) =
+                observed_stage(&run_span, "engine.screen", &tracker, || -> Result<ScreenStats, TspmError> {
+                    match &mut output {
+                        SequenceOutput::InMemory(set) => {
+                            Ok(sparsity::screen(&mut set.records, &sc))
+                        }
+                        SequenceOutput::Spilled(files) => {
+                            let spill_cfg = sparsity::SpillScreenConfig {
+                                min_patients: sc.min_patients,
+                                threads: sc.threads,
+                                buffer_bytes: screen_buffer_bytes(budget),
+                                out_dir: out_dir.clone(),
+                            };
+                            let (survivors, stats) =
+                                sparsity::screen_spilled(files, &spill_cfg, Some(&tracker))?;
+                            // The mined intermediates are consumed; the
+                            // survivor file is the durable result.
+                            let _ = files.remove();
+                            let _ = std::fs::remove_dir(&mine_dir);
+                            *files = survivors;
+                            Ok(stats)
+                        }
                     }
-                }
-            })?;
+                });
+            let stats: ScreenStats = stats_res?;
             stages.push(StageReport {
                 stage: "screen".into(),
-                elapsed: timer.elapsed("screen").unwrap_or_default(),
+                elapsed: screen_elapsed,
                 records_out: stats.records_after,
                 bytes_out: output.byte_size(),
             });
@@ -614,17 +647,19 @@ impl Engine {
                 .expect("validated: index implies spilled output")
                 .clone();
             let dir = dir.to_path_buf();
-            let built = timer.run("index", || -> Result<SeqIndex, TspmError> {
-                Ok(query::index::build(
-                    &files,
-                    &dir,
-                    &query::IndexConfig { block_records, ..Default::default() },
-                    Some(&tracker),
-                )?)
-            })?;
+            let (built_res, index_elapsed) =
+                observed_stage(&run_span, "engine.index", &tracker, || -> Result<SeqIndex, TspmError> {
+                    Ok(query::index::build(
+                        &files,
+                        &dir,
+                        &query::IndexConfig { block_records, ..Default::default() },
+                        Some(&tracker),
+                    )?)
+                });
+            let built: SeqIndex = built_res?;
             stages.push(StageReport {
                 stage: "index".into(),
-                elapsed: timer.elapsed("index").unwrap_or_default(),
+                elapsed: index_elapsed,
                 records_out: built.total_records,
                 bytes_out: built.artifact_bytes,
             });
@@ -641,17 +676,19 @@ impl Engine {
                 .expect("validated: ingest implies spilled output")
                 .clone();
             let set_dir = set_dir.to_path_buf();
-            let built = timer.run("ingest", || -> Result<SeqIndex, TspmError> {
-                let mut set = SegmentSet::open_or_init(&set_dir)?;
-                Ok(set.add_segment(
-                    &files,
-                    &query::IndexConfig { block_records, ..Default::default() },
-                    Some(&tracker),
-                )?)
-            })?;
+            let (built_res, ingest_elapsed) =
+                observed_stage(&run_span, "engine.ingest", &tracker, || -> Result<SeqIndex, TspmError> {
+                    let mut set = SegmentSet::open_or_init(&set_dir)?;
+                    Ok(set.add_segment(
+                        &files,
+                        &query::IndexConfig { block_records, ..Default::default() },
+                        Some(&tracker),
+                    )?)
+                });
+            let built: SeqIndex = built_res?;
             stages.push(StageReport {
                 stage: "ingest".into(),
-                elapsed: timer.elapsed("ingest").unwrap_or_default(),
+                elapsed: ingest_elapsed,
                 records_out: built.total_records,
                 bytes_out: built.artifact_bytes,
             });
@@ -664,13 +701,14 @@ impl Engine {
             let set = output
                 .as_in_memory_mut()
                 .expect("validated: duration_screen implies in-memory output");
-            let stats = timer.run("duration_screen", || {
-                sparsity::screen_by_duration(&mut set.records, bucket, min_distinct)
-            });
+            let (stats, ds_elapsed) =
+                observed_stage(&run_span, "engine.duration_screen", &tracker, || {
+                    sparsity::screen_by_duration(&mut set.records, bucket, min_distinct)
+                });
             let bytes = set.byte_size();
             stages.push(StageReport {
                 stage: "duration_screen".into(),
-                elapsed: timer.elapsed("duration_screen").unwrap_or_default(),
+                elapsed: ds_elapsed,
                 records_out: stats.records_after,
                 bytes_out: bytes,
             });
@@ -682,8 +720,12 @@ impl Engine {
         // the index artifact — the multiset is never materialised.
         let mut matrix = None;
         if let Some(bucket) = plan.matrix_stage() {
-            let m = timer.run("matrix", || -> Result<SeqMatrix, TspmError> {
-                match &output {
+            let (m_res, matrix_elapsed) = observed_stage(
+                &run_span,
+                "engine.matrix",
+                &tracker,
+                || -> Result<SeqMatrix, TspmError> {
+                    match &output {
                     SequenceOutput::InMemory(sequences) => Ok(match bucket {
                         Some(b) => SeqMatrix::build_with_durations(
                             &sequences.records,
@@ -694,26 +736,28 @@ impl Engine {
                             SeqMatrix::build(&sequences.records, sequences.num_patients)?
                         }
                     }),
-                    SequenceOutput::Spilled(files) => {
-                        let idx = index
-                            .as_ref()
-                            .expect("validated: spilled matrix implies an index stage");
-                        Ok(SeqMatrix::from_index_tracked(
-                            idx,
-                            files.num_patients,
-                            bucket,
-                            Some(&tracker),
-                        )?)
+                        SequenceOutput::Spilled(files) => {
+                            let idx = index
+                                .as_ref()
+                                .expect("validated: spilled matrix implies an index stage");
+                            Ok(SeqMatrix::from_index_tracked(
+                                idx,
+                                files.num_patients,
+                                bucket,
+                                Some(&tracker),
+                            )?)
+                        }
                     }
-                }
-            })?;
+                },
+            );
+            let m = m_res?;
             let bytes = (m.nnz() * std::mem::size_of::<u32>()
                 + m.row_ptr.len() * std::mem::size_of::<usize>()
                 + m.seq_ids.len() * std::mem::size_of::<u64>()) as u64;
             tracker.add(bytes);
             stages.push(StageReport {
                 stage: "matrix".into(),
-                elapsed: timer.elapsed("matrix").unwrap_or_default(),
+                elapsed: matrix_elapsed,
                 records_out: m.nnz() as u64,
                 bytes_out: bytes,
             });
@@ -725,10 +769,13 @@ impl Engine {
         if let Some(mcfg) = plan.msmr_config() {
             let m = matrix.as_ref().expect("validated: msmr implies matrix");
             let l = labels.as_ref().expect("validated: msmr implies labels");
-            let sel = timer.run("msmr", || msmr::select(m, l, &mcfg, artifacts))?;
+            let (sel_res, msmr_elapsed) = observed_stage(&run_span, "engine.msmr", &tracker, || {
+                msmr::select(m, l, &mcfg, artifacts)
+            });
+            let sel = sel_res?;
             stages.push(StageReport {
                 stage: "msmr".into(),
-                elapsed: timer.elapsed("msmr").unwrap_or_default(),
+                elapsed: msmr_elapsed,
                 records_out: sel.columns.len() as u64,
                 bytes_out: (sel.columns.len()
                     * (std::mem::size_of::<u32>() + std::mem::size_of::<f64>()))
@@ -736,6 +783,10 @@ impl Engine {
             });
             selection = Some(sel);
         }
+
+        drop(ctx);
+        run_span.attr("peak_logical_bytes", tracker.peak());
+        run_span.finish();
 
         Ok(RunOutput {
             sequences: output,
@@ -762,6 +813,32 @@ impl Engine {
 /// capped so huge budgets don't allocate absurd buffers.
 fn screen_buffer_bytes(budget: u64) -> u64 {
     (budget / 8).clamp(1 << 16, 1 << 28)
+}
+
+/// Stage-duration histogram edges in microseconds: 1ms … 60s.
+const STAGE_BUCKETS_US: &[u64] =
+    &[1_000, 10_000, 100_000, 1_000_000, 10_000_000, 60_000_000];
+
+/// Run one pipeline stage under a child span of the run root. The
+/// span's measured duration is returned (and becomes the
+/// [`StageReport`] timing); the global registry gets the same duration
+/// as a histogram sample plus the tracker's live/peak gauges at the
+/// stage boundary.
+fn observed_stage<R>(
+    parent: &Span,
+    name: &'static str,
+    tracker: &MemTracker,
+    f: impl FnOnce() -> R,
+) -> (R, Duration) {
+    let span = parent.child(name);
+    let out = f();
+    let elapsed = span.finish();
+    let reg = obs::metrics::global();
+    reg.histogram(names::ENGINE_STAGE_DURATION_US, STAGE_BUCKETS_US)
+        .observe(elapsed.as_micros() as u64);
+    reg.gauge(names::MEM_LIVE_BYTES).set(tracker.live());
+    reg.gauge(names::MEM_PEAK_BYTES).set(tracker.peak());
+    (out, elapsed)
 }
 
 #[cfg(test)]

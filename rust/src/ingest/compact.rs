@@ -94,8 +94,13 @@ pub fn compact(
         // and is safe to reclaim; anything else in the way is an error.
         std::fs::remove_dir_all(&tmp)?;
     }
+    let folded = set.segments().len() as u64;
     let result = compact_impl(set, cfg, tracker, &tmp);
-    if result.is_err() {
+    if result.is_ok() {
+        let reg = crate::obs::metrics::global();
+        reg.counter(crate::obs::names::COMPACT_RUNS).inc();
+        reg.counter(crate::obs::names::COMPACT_SEGMENTS_FOLDED).add(folded);
+    } else {
         let _ = std::fs::remove_dir_all(&tmp);
     }
     result

@@ -301,6 +301,11 @@ impl SegmentSet {
             let _ = std::fs::remove_dir_all(self.dir.join(&name));
             return Err(e);
         }
+        // Counted only after the manifest commit — the metric reflects
+        // durable segments, not attempts.
+        crate::obs::metrics::global()
+            .counter(crate::obs::names::INGEST_SEGMENTS_COMMITTED)
+            .inc();
         SeqIndex::open(&final_dir)
     }
 }

@@ -164,6 +164,29 @@
 //! tspm serve   --set-dir set/ --addr 127.0.0.1:7878
 //! ```
 //!
+//! ### Observe the system
+//!
+//! The [`obs`] subsystem makes a live run inspectable without touching
+//! its output (tracing rides on stderr or a side file, never the data
+//! path — mined/screened/indexed bytes are identical with tracing on or
+//! off). Three switches:
+//!
+//! * **Tracing** — set `TSPM_TRACE=1` (JSONL spans to stderr) or
+//!   `TSPM_TRACE=/tmp/trace.jsonl` (to a file) on any command. Spans
+//!   carry a 128-bit trace id, parent links, and attributes; `tspm
+//!   client --trace-id <hex>` stamps requests so the *server-side*
+//!   spans (admission → routing → cache → block reads) share the
+//!   client's id and one `grep` reconstructs the request tree.
+//! * **Metrics** — `tspm serve --metrics-addr 127.0.0.1:9187` opens a
+//!   plain-HTTP Prometheus scrape endpoint
+//!   (`curl 127.0.0.1:9187/metrics`); the same exposition is available
+//!   in-band via `tspm client --metrics`. Names are pinned by the
+//!   append-only snapshot `xtask/snapshots/metrics.txt` (see the
+//!   [`obs`] docs for the contract).
+//! * **Slow-query log** — `tspm serve --slow-query-ms 50` (or
+//!   `TSPM_SLOW_QUERY_MS=50`) dumps the span of any request slower
+//!   than the threshold, even when tracing is otherwise off.
+//!
 //! ### The out-of-core ML chain
 //!
 //! The index also feeds the ML layer without materialization:
@@ -266,9 +289,13 @@
 //!    (annotate provably order-insensitive sites with
 //!    `// lint:allow(hashmap_iter)` on the preceding line); and every
 //!    `unsafe` block sits in `xtask/snapshots/unsafe_allowlist.txt`
-//!    AND carries a `// SAFETY:` comment. To *intentionally* extend
-//!    the wire protocol, append new variants at the end and re-bless
-//!    the snapshot with `cargo xtask lint --bless` in the same commit.
+//!    AND carries a `// SAFETY:` comment; and the exposition metric
+//!    names in [`obs::names`] are well-formed (`[a-z][a-z0-9_]*`) and
+//!    append-only versus `xtask/snapshots/metrics.txt`, so dashboards
+//!    never break from a silent rename. To *intentionally* extend the
+//!    wire protocol or the metric set, append new variants/constants
+//!    at the end and re-bless the snapshots with
+//!    `cargo xtask lint --bless` in the same commit.
 
 pub mod baseline;
 pub mod bench_util;
@@ -283,6 +310,7 @@ pub mod metrics;
 pub mod mining;
 pub mod ml;
 pub mod msmr;
+pub mod obs;
 pub mod par;
 pub mod partition;
 pub mod pipeline;

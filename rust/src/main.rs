@@ -970,6 +970,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
         OptSpec::value("max-conns", Some("64"), "connections before shedding with busy"),
         OptSpec::value("cache-mb", Some("8"), "per-artifact result cache (MiB)"),
         OptSpec::value("idle-timeout-secs", Some("30"), "close idle connections after this"),
+        OptSpec::value(
+            "metrics-addr",
+            None,
+            "also serve Prometheus text metrics over plain HTTP here \
+             (e.g. 127.0.0.1:9187)",
+        ),
+        OptSpec::value(
+            "slow-query-ms",
+            None,
+            "trace requests slower than this even when TSPM_TRACE is off",
+        ),
     ];
     if wants_help(argv) {
         print!("{}", usage("tspm serve", "serve index artifacts over TCP", &spec));
@@ -1012,7 +1023,42 @@ fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
         idle_timeout: Duration::from_secs(
             a.req("idle-timeout-secs").map_err(|e| e.to_string())?,
         ),
+        slow_query_threshold: a
+            .get_parsed::<u64>("slow-query-ms")
+            .map_err(|e| e.to_string())?
+            .map(Duration::from_millis),
         ..ServeConfig::default()
+    };
+    // The process-RSS collector samples /proc (or getrusage) at scrape
+    // time; unavailable probes simply omit their lines.
+    tspm_plus::obs::metrics::global().register_collector(Box::new(|out| {
+        use tspm_plus::obs::metrics::{Sample, SampleKind};
+        if let Some(peak) = tspm_plus::metrics::peak_rss_bytes() {
+            out.push(Sample {
+                name: tspm_plus::obs::names::PROCESS_PEAK_RSS_BYTES.to_string(),
+                kind: SampleKind::Gauge,
+                value: peak,
+            });
+        }
+        if let Some(cur) = tspm_plus::metrics::current_rss_bytes() {
+            out.push(Sample {
+                name: tspm_plus::obs::names::PROCESS_CURRENT_RSS_BYTES.to_string(),
+                kind: SampleKind::Gauge,
+                value: cur,
+            });
+        }
+    }));
+    let metrics_server = match a.get("metrics-addr") {
+        Some(maddr) => {
+            let srv = tspm_plus::obs::expo::MetricsServer::bind(
+                maddr,
+                tspm_plus::obs::metrics::global(),
+            )
+            .map_err(|e| format!("cannot bind metrics endpoint {maddr}: {e}"))?;
+            eprintln!("metrics endpoint on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
     };
     let n_artifacts = registry.len();
     let server =
@@ -1028,6 +1074,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), CmdError> {
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
     let summary = server.run().map_err(|e| e.to_string())?;
+    if let Some(mut srv) = metrics_server {
+        srv.shutdown();
+    }
     println!(
         "drained: {} connection(s) served, {} shed, {} request(s) answered",
         summary.served, summary.shed, summary.requests
@@ -1061,6 +1110,13 @@ fn cmd_client(argv: &[String]) -> Result<(), CmdError> {
         OptSpec::value("id", None, "artifact id for --register"),
         OptSpec::value("retire", None, "hot-swap: retire this artifact id"),
         OptSpec::flag("shutdown", "gracefully drain and stop the daemon"),
+        OptSpec::flag("metrics", "print the daemon's Prometheus metrics text"),
+        OptSpec::value(
+            "trace-id",
+            None,
+            "hex trace id (1-32 chars) stamped on every request and adopted \
+             by the daemon's server-side spans",
+        ),
     ];
     if wants_help(argv) {
         print!("{}", usage("tspm client", "talk to a running tspm serve daemon", &spec));
@@ -1082,10 +1138,11 @@ fn cmd_client(argv: &[String]) -> Result<(), CmdError> {
         a.provided("register"),
         a.provided("retire"),
         a.flag("shutdown"),
+        a.flag("metrics"),
     ];
     if actions.iter().filter(|&&x| x).count() != 1 {
         return Err("pick exactly one action: --ping | --list | --stats | --seq | --pid | \
-                    --top-k | --workload | --register | --retire | --shutdown"
+                    --top-k | --workload | --register | --retire | --shutdown | --metrics"
             .into());
     }
 
@@ -1102,6 +1159,21 @@ fn cmd_client(argv: &[String]) -> Result<(), CmdError> {
     }
 
     let mut client = Client::connect(&addr).map_err(client_err)?;
+    if let Some(hex) = a.get("trace-id") {
+        let tid = tspm_plus::obs::TraceId::from_hex(hex)
+            .ok_or_else(|| format!("--trace-id {hex:?} is not 1-32 hex characters"))?;
+        client.set_trace_id(tid);
+    }
+    if a.flag("metrics") {
+        // Raw exposition text, not JSON — pipe it straight to a file or
+        // a promtool check.
+        let text = client.metrics().map_err(client_err)?;
+        print!("{text}");
+        if let Some(path) = a.get("json-out") {
+            std::fs::write(path, &text).map_err(|e| e.to_string())?;
+        }
+        return Ok(());
+    }
     let out = run_client_action(&mut client, &a, artifact.as_deref());
     match out {
         Ok(json) => emit(json, a.get("json-out")),

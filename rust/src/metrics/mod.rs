@@ -7,8 +7,10 @@
 //!
 //! * [`PhaseTimer`] — named phase measurements with a formatted report,
 //! * [`peak_rss_bytes`] — the process high-water-mark RSS from
-//!   `/proc/self/status` (`VmHWM`), falling back to `getrusage(2)`,
-//! * [`current_rss_bytes`] — instantaneous RSS (`VmRSS`),
+//!   `/proc/self/status` (`VmHWM`), falling back to `getrusage(2)`;
+//!   `None` (rendered "unavailable", never a misleading `0 B`) when no
+//!   probe works on the platform,
+//! * [`current_rss_bytes`] — instantaneous RSS (`VmRSS`), same contract,
 //! * [`MemTracker`] — byte-accurate logical accounting of the engine's own
 //!   major allocations (what the paper reports as the algorithm's memory),
 //!   useful on machines where RSS is polluted by the allocator or runtime.
@@ -62,10 +64,12 @@ mod libc {
 /// High-water-mark RSS of this process in bytes.
 ///
 /// Reads `VmHWM` from `/proc/self/status`; falls back to
-/// `getrusage(RUSAGE_SELF).ru_maxrss` (kilobytes on Linux).
-pub fn peak_rss_bytes() -> u64 {
+/// `getrusage(RUSAGE_SELF).ru_maxrss` (kilobytes on Linux). `None` when
+/// neither probe works — callers must render "unavailable" rather than
+/// treating the old `0` sentinel as a real measurement.
+pub fn peak_rss_bytes() -> Option<u64> {
     if let Some(v) = read_status_kb("VmHWM:") {
-        return v * 1024;
+        return Some(v * 1024);
     }
     #[cfg(unix)]
     // SAFETY: `usage` is a live, properly aligned out-parameter;
@@ -74,16 +78,17 @@ pub fn peak_rss_bytes() -> u64 {
     // `ru_maxrss` is read only after the call reports success.
     unsafe {
         let mut usage: libc::rusage = std::mem::zeroed();
-        if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 {
-            return (usage.ru_maxrss as u64) * 1024;
+        if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 && usage.ru_maxrss > 0 {
+            return Some((usage.ru_maxrss as u64) * 1024);
         }
     }
-    0
+    None
 }
 
-/// Instantaneous RSS of this process in bytes (`VmRSS`), 0 if unavailable.
-pub fn current_rss_bytes() -> u64 {
-    read_status_kb("VmRSS:").map(|v| v * 1024).unwrap_or(0)
+/// Instantaneous RSS of this process in bytes (`VmRSS`), `None` if the
+/// `/proc` probe is unavailable on the platform.
+pub fn current_rss_bytes() -> Option<u64> {
+    read_status_kb("VmRSS:").map(|v| v * 1024)
 }
 
 fn read_status_kb(field: &str) -> Option<u64> {
@@ -95,6 +100,15 @@ fn read_status_kb(field: &str) -> Option<u64> {
         }
     }
     None
+}
+
+/// Render an optional probe reading: the measurement when available,
+/// the word `unavailable` otherwise — never a misleading `0 B`.
+pub fn fmt_opt_bytes(bytes: Option<u64>) -> String {
+    match bytes {
+        Some(b) => fmt_bytes(b),
+        None => "unavailable".to_string(),
+    }
 }
 
 /// Format a byte count as a human-readable string (GiB/MiB/KiB/B).
@@ -147,11 +161,14 @@ impl PhaseTimer {
 
     /// Run `f` as the named phase, recording wall time and RSS delta.
     pub fn run<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
-        let rss_before = current_rss_bytes() as i64;
+        // A delta of two unavailable probes degrades to 0, which the
+        // report prints as "+0 B" — acceptable for the per-phase
+        // breakdown; absolute readings go through [`fmt_opt_bytes`].
+        let rss_before = current_rss_bytes().unwrap_or(0) as i64;
         let start = Instant::now();
         let out = f();
         let elapsed = start.elapsed();
-        let rss_after = current_rss_bytes() as i64;
+        let rss_after = current_rss_bytes().unwrap_or(0) as i64;
         self.phases.push(Phase {
             name: name.to_string(),
             elapsed,
@@ -224,7 +241,19 @@ impl MemTracker {
 
     pub fn sub(&self, bytes: u64) {
         use std::sync::atomic::Ordering;
-        self.live.fetch_sub(bytes, Ordering::Relaxed);
+        // Saturate, never wrap: a mismatched add/sub pair must not send
+        // `live` to ~u64::MAX and poison every later peak. The counter
+        // is updated *before* the debug assertion so the accounting is
+        // already consistent if the assertion unwinds.
+        let mut underflow = false;
+        let _ = self.live.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |live| {
+            underflow = live < bytes;
+            Some(live.saturating_sub(bytes))
+        });
+        debug_assert!(
+            !underflow,
+            "MemTracker::sub({bytes}) exceeds live bytes — mismatched add/sub pair"
+        );
     }
 
     pub fn live(&self) -> u64 {
@@ -240,11 +269,21 @@ impl MemTracker {
 mod tests {
     use super::*;
 
+    // The probes read /proc/self/status; only Linux guarantees them.
+    #[cfg(target_os = "linux")]
     #[test]
     fn peak_rss_positive_on_linux() {
-        assert!(peak_rss_bytes() > 0);
-        assert!(current_rss_bytes() > 0);
-        assert!(peak_rss_bytes() >= current_rss_bytes() / 2);
+        let peak = peak_rss_bytes().expect("VmHWM readable on Linux");
+        let current = current_rss_bytes().expect("VmRSS readable on Linux");
+        assert!(peak > 0);
+        assert!(current > 0);
+        assert!(peak >= current / 2);
+    }
+
+    #[test]
+    fn opt_bytes_renders_unavailable() {
+        assert_eq!(fmt_opt_bytes(None), "unavailable");
+        assert_eq!(fmt_opt_bytes(Some(512)), "512 B");
     }
 
     #[test]
@@ -285,5 +324,24 @@ mod tests {
         m.add(10);
         assert_eq!(m.live(), 40);
         assert_eq!(m.peak(), 150);
+    }
+
+    /// Regression: a mismatched sub used to wrap `live` to ~u64::MAX,
+    /// poisoning every later peak. It now saturates to 0 (flagged by a
+    /// debug assertion) and subsequent accounting stays sane.
+    #[test]
+    fn mem_tracker_sub_underflow_saturates() {
+        let m = MemTracker::new();
+        m.add(10);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| m.sub(25)));
+        if cfg!(debug_assertions) {
+            assert!(result.is_err(), "debug builds flag the mismatched pair");
+        } else {
+            assert!(result.is_ok(), "release builds saturate silently");
+        }
+        assert_eq!(m.live(), 0, "saturated, not wrapped");
+        m.add(7);
+        assert_eq!(m.live(), 7);
+        assert_eq!(m.peak(), 10, "peak survives the bad sub");
     }
 }

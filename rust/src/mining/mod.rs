@@ -564,13 +564,20 @@ pub fn mine_sequences_sharded_tracked(
         // them in shard order.
         let slots: Vec<OnceLock<Vec<SeqRecord>>> =
             (0..shard_ranges.len()).map(|_| OnceLock::new()).collect();
+        // Observability: counters only (atomic adds — no effect on the
+        // deterministic merge order or output bytes).
+        let claimed = crate::obs::metrics::global().counter(crate::obs::names::MINE_SHARDS_CLAIMED);
         par::par_for_each_dynamic(shard_ranges.len(), threads, 1, |si| {
+            claimed.inc();
             let mut local: Vec<SeqRecord> = Vec::new();
             let mut scratch: Vec<NumericEntry> = Vec::new();
             mine_patient_range(entries, bounds, &shard_ranges[si], cfg, &mut scratch, &mut local);
             let filled = slots[si].set(local).is_ok();
             debug_assert!(filled, "shard {si} claimed twice");
         });
+        crate::obs::metrics::global()
+            .counter(crate::obs::names::MINE_SHARDS_MERGED)
+            .add(slots.len() as u64);
         slots.into_iter().map(|s| s.into_inner().unwrap_or_default()).collect()
     })
 }

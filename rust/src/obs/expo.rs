@@ -1,0 +1,166 @@
+//! The scrape endpoint: a minimal plain-HTTP server that answers every
+//! request with the Prometheus text exposition of a
+//! [`MetricsRegistry`].
+//!
+//! This is deliberately not a web framework: one listener thread,
+//! non-blocking accept polled against a shutdown flag, and a
+//! fixed-form `HTTP/1.1 200 OK` response with a `Content-Length` and
+//! `Connection: close`. That is everything a Prometheus-compatible
+//! scraper (or `curl`) needs, and nothing the dependency-free crate
+//! would have to maintain. The serve daemon starts one with
+//! `tspm serve --metrics-addr HOST:PORT`; the same body is also
+//! available in-band via the wire protocol's `metrics` request.
+
+use crate::obs::metrics::MetricsRegistry;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop re-checks the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(10);
+/// Per-connection read timeout: scrapers send a one-line request.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+/// Request-head cap; a scrape request is a few hundred bytes.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// A running scrape endpoint. Dropping it (or calling
+/// [`MetricsServer::shutdown`]) stops the listener thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9187`, port 0 for ephemeral) and
+    /// serve `registry`'s exposition until shutdown.
+    pub fn bind(addr: &str, registry: &'static MetricsRegistry) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("tspm-metrics".into())
+            .spawn(move || accept_loop(listener, registry, thread_stop))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: &'static MetricsRegistry, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Scrapes are tiny and rare (seconds apart); serve them
+                // inline rather than spawning per connection.
+                let _ = serve_scrape(stream, registry);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(_) => std::thread::sleep(POLL_INTERVAL),
+        }
+    }
+}
+
+/// Read the request head (we answer every path identically), then write
+/// one self-delimiting response and close.
+fn serve_scrape(mut stream: TcpStream, registry: &'static MetricsRegistry) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_REQUEST_BYTES {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    let body = registry.render_prometheus();
+    write_http_ok(&mut stream, &body)
+}
+
+/// The fixed-form scrape response; exposed for the in-band wire path's
+/// tests to share the body format.
+fn write_http_ok(stream: &mut TcpStream, body: &str) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::global;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_exposition() {
+        global().counter("tspm_test_expo_counter").add(5);
+        let mut server = MetricsServer::bind("127.0.0.1:0", global()).unwrap();
+        let response = scrape(server.local_addr());
+        assert!(response.starts_with("HTTP/1.1 200 OK\r\n"), "{response}");
+        assert!(response.contains("Content-Type: text/plain"), "{response}");
+        let (head, body) = response.split_once("\r\n\r\n").unwrap();
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        assert!(body.contains("tspm_test_expo_counter 5\n"), "{body}");
+        // Consecutive scrapes observe monotone counters.
+        global().counter("tspm_test_expo_counter").add(2);
+        let second = scrape(server.local_addr());
+        assert!(second.contains("tspm_test_expo_counter 7\n"), "{second}");
+        // shutdown() joins the listener thread; returning proves the
+        // accept loop honoured the stop flag.
+        server.shutdown();
+    }
+}

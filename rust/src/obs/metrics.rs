@@ -1,0 +1,532 @@
+//! The metrics registry: named counters, gauges, and fixed-bucket
+//! histograms, plus the consistent cache-counter pair.
+//!
+//! Built on the [`crate::sync`] shim so the registry participates in
+//! the loom verification gate and recovers from poisoned locks (a
+//! panicking instrumented thread must never wedge the scrape endpoint).
+//! Handles are `Arc`s: registration is get-or-create by name, so any
+//! module can say `obs::metrics::global().counter(names::…)` and hold
+//! the handle for lock-free updates.
+//!
+//! Two consistency notes, both load-bearing for the CI scrape checks:
+//!
+//! * **Cache counters** (`tspm_cache_hits` / `_misses` / `_lookups`)
+//!   are kept as one mutex-protected pair ([`CacheCounters`]) and
+//!   rendered from a single locked snapshot, so every exposition
+//!   satisfies `hits + misses == lookups` exactly — no torn reads
+//!   between separately-loaded atomics.
+//! * **Counters are monotone**: there is no reset. Process-wide totals
+//!   only ever grow, which is what lets a scraper `rate()` them.
+//!
+//! Rendering is deterministic: families sort by name (the maps are
+//! `BTreeMap`s), histograms emit cumulative `_bucket{le="…"}` series
+//! plus `_sum`/`_count`.
+
+use crate::obs::names;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock_ignore_poison, read_ignore_poison, write_ignore_poison, Mutex, RwLock};
+use std::collections::BTreeMap;
+// Handles are shared as plain `std::sync::Arc` (like the serve
+// registry's surfaces): the refcount is not what loom checks here —
+// the locked maps and the cache pair are — and loom's Arc does not
+// model every std API the handles need.
+use std::sync::Arc;
+
+/// `[a-z][a-z0-9_]*` — the naming rule `cargo xtask lint` enforces
+/// statically on [`names`]; checked dynamically (debug builds) at
+/// registration too.
+pub fn valid_metric_name(name: &str) -> bool {
+    let mut bytes = name.bytes();
+    match bytes.next() {
+        Some(b) if b.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    bytes.all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+}
+
+/// Monotone event count.
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { value: AtomicU64::new(0) }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (set-to-latest).
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { value: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are inclusive upper edges; one
+/// implicit `+Inf` bucket catches the rest.
+pub struct Histogram {
+    bounds: Vec<u64>,
+    /// `bounds.len() + 1` slots; the last is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[u64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+}
+
+/// One consistent scrape of the cache pair.
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct CacheTotals {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheTotals {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+/// Process-wide cache counters under one lock, so a scrape can never
+/// observe `hits + misses != lookups`. Every [`crate::query`] cache
+/// feeds this in addition to its own per-service snapshot.
+pub struct CacheCounters {
+    inner: Mutex<CacheTotals>,
+}
+
+impl CacheCounters {
+    fn new() -> CacheCounters {
+        CacheCounters { inner: Mutex::new(CacheTotals::default()) }
+    }
+
+    pub fn record_lookup(&self, hit: bool) {
+        let mut t = lock_ignore_poison(&self.inner);
+        if hit {
+            t.hits += 1;
+        } else {
+            t.misses += 1;
+        }
+    }
+
+    pub fn record_evictions(&self, n: u64) {
+        lock_ignore_poison(&self.inner).evictions += n;
+    }
+
+    pub fn totals(&self) -> CacheTotals {
+        *lock_ignore_poison(&self.inner)
+    }
+}
+
+/// A sample contributed by a registered collector (values computed at
+/// scrape time — RSS probes, per-artifact stats, …).
+pub struct Sample {
+    pub name: String,
+    pub kind: SampleKind,
+    pub value: u64,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SampleKind {
+    Counter,
+    Gauge,
+}
+
+type Collector = Box<dyn Fn(&mut Vec<Sample>) + Send + Sync>;
+
+/// The registry. Usually accessed through [`global`]; tests build their
+/// own.
+pub struct MetricsRegistry {
+    counters: RwLock<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<&'static str, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<&'static str, Arc<Histogram>>>,
+    collectors: Mutex<Vec<Collector>>,
+    cache: CacheCounters,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            histograms: RwLock::new(BTreeMap::new()),
+            collectors: Mutex::new(Vec::new()),
+            cache: CacheCounters::new(),
+        }
+    }
+
+    /// Get-or-create the named counter.
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        if let Some(c) = read_ignore_poison(&self.counters).get(name) {
+            return Arc::clone(c);
+        }
+        let mut map = write_ignore_poison(&self.counters);
+        Arc::clone(map.entry(name).or_insert_with(|| Arc::new(Counter::new())))
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        if let Some(g) = read_ignore_poison(&self.gauges).get(name) {
+            return Arc::clone(g);
+        }
+        let mut map = write_ignore_poison(&self.gauges);
+        Arc::clone(map.entry(name).or_insert_with(|| Arc::new(Gauge::new())))
+    }
+
+    /// Get-or-create the named histogram. The first registration wins
+    /// the bucket layout; later callers share it.
+    pub fn histogram(&self, name: &'static str, bounds: &[u64]) -> Arc<Histogram> {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        if let Some(h) = read_ignore_poison(&self.histograms).get(name) {
+            return Arc::clone(h);
+        }
+        let mut map = write_ignore_poison(&self.histograms);
+        Arc::clone(map.entry(name).or_insert_with(|| Arc::new(Histogram::new(bounds))))
+    }
+
+    /// The consistent cache pair (see the module docs).
+    pub fn cache(&self) -> &CacheCounters {
+        &self.cache
+    }
+
+    /// Register a scrape-time collector; its samples are merged (and
+    /// sorted) into every rendering.
+    pub fn register_collector(&self, f: Collector) {
+        lock_ignore_poison(&self.collectors).push(f);
+    }
+
+    /// Prometheus text exposition — the format pinned by the
+    /// [`crate::obs`] module docs.
+    pub fn render_prometheus(&self) -> String {
+        let mut blocks: Vec<(String, String)> = Vec::new();
+        {
+            let map = read_ignore_poison(&self.counters);
+            for (name, c) in map.iter() {
+                blocks.push((
+                    (*name).to_string(),
+                    format!("# TYPE {name} counter\n{name} {}\n", c.get()),
+                ));
+            }
+        }
+        {
+            let map = read_ignore_poison(&self.gauges);
+            for (name, g) in map.iter() {
+                blocks.push((
+                    (*name).to_string(),
+                    format!("# TYPE {name} gauge\n{name} {}\n", g.get()),
+                ));
+            }
+        }
+        {
+            let map = read_ignore_poison(&self.histograms);
+            for (name, h) in map.iter() {
+                let mut b = format!("# TYPE {name} histogram\n");
+                let mut cum = 0u64;
+                for (i, bound) in h.bounds.iter().enumerate() {
+                    cum += h.counts[i].load(Ordering::Relaxed);
+                    b.push_str(&format!("{name}_bucket{{le=\"{bound}\"}} {cum}\n"));
+                }
+                cum += h.counts[h.bounds.len()].load(Ordering::Relaxed);
+                b.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                b.push_str(&format!("{name}_sum {}\n", h.sum()));
+                b.push_str(&format!("{name}_count {}\n", h.count()));
+                blocks.push(((*name).to_string(), b));
+            }
+        }
+        // One locked snapshot → the three cache lines always agree.
+        let t = self.cache.totals();
+        for (name, value) in [
+            (names::CACHE_HITS, t.hits),
+            (names::CACHE_MISSES, t.misses),
+            (names::CACHE_LOOKUPS, t.lookups()),
+            (names::CACHE_EVICTIONS, t.evictions),
+        ] {
+            blocks.push((
+                name.to_string(),
+                format!("# TYPE {name} counter\n{name} {value}\n"),
+            ));
+        }
+        let mut samples = Vec::new();
+        for f in lock_ignore_poison(&self.collectors).iter() {
+            f(&mut samples);
+        }
+        for s in samples {
+            let kind = match s.kind {
+                SampleKind::Counter => "counter",
+                SampleKind::Gauge => "gauge",
+            };
+            blocks.push((
+                s.name.clone(),
+                format!("# TYPE {} {kind}\n{} {}\n", s.name, s.name, s.value),
+            ));
+        }
+        blocks.sort_by(|a, b| a.0.cmp(&b.0));
+        blocks.into_iter().map(|(_, b)| b).collect()
+    }
+}
+
+/// The process-wide registry every instrumentation site feeds.
+pub fn global() -> &'static MetricsRegistry {
+    // std's OnceLock regardless of cfg(loom): the global is never what
+    // a loom model checks (loom suites build their own registries).
+    static GLOBAL: std::sync::OnceLock<MetricsRegistry> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_validate() {
+        assert!(valid_metric_name("tspm_cache_hits"));
+        assert!(valid_metric_name("a"));
+        assert!(valid_metric_name("ab_c123"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("Tspm_x"));
+        assert!(!valid_metric_name("1abc"));
+        assert!(!valid_metric_name("_x"));
+        assert!(!valid_metric_name("tspm-cache"));
+        assert!(!valid_metric_name("tspm cache"));
+    }
+
+    #[test]
+    fn every_declared_name_is_valid() {
+        for name in [
+            names::CACHE_HITS,
+            names::CACHE_MISSES,
+            names::CACHE_LOOKUPS,
+            names::CACHE_EVICTIONS,
+            names::QUERY_BLOCK_READS,
+            names::QUERY_BYTES_READ,
+            names::MINE_SHARDS_CLAIMED,
+            names::MINE_SHARDS_MERGED,
+            names::SCREEN_SPILL_RUNS_OPENED,
+            names::SCREEN_SPILL_BYTES_MERGED,
+            names::SCREEN_SPILL_MERGE_PASSES,
+            names::INGEST_SEGMENTS_COMMITTED,
+            names::COMPACT_RUNS,
+            names::COMPACT_SEGMENTS_FOLDED,
+            names::SERVE_REQUESTS,
+            names::SERVE_SHED,
+            names::SERVE_CONNS,
+            names::SERVE_REQUEST_DURATION_US,
+            names::ENGINE_STAGE_DURATION_US,
+            names::MEM_LIVE_BYTES,
+            names::MEM_PEAK_BYTES,
+            names::PROCESS_PEAK_RSS_BYTES,
+            names::PROCESS_CURRENT_RSS_BYTES,
+        ] {
+            assert!(valid_metric_name(name), "{name}");
+        }
+    }
+
+    #[test]
+    fn registration_is_get_or_create() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("tspm_test_counter");
+        let b = reg.counter("tspm_test_counter");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = reg.gauge("tspm_test_gauge");
+        g.set(7);
+        assert_eq!(reg.gauge("tspm_test_gauge").get(), 7);
+        let h1 = reg.histogram("tspm_test_hist", &[10, 100]);
+        let h2 = reg.histogram("tspm_test_hist", &[1]); // layout: first wins
+        assert!(Arc::ptr_eq(&h1, &h2));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("tspm_test_hist", &[10, 100, 1000]);
+        for v in [5, 10, 11, 500, 5000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 5526);
+        let text = reg.render_prometheus();
+        assert!(text.contains("tspm_test_hist_bucket{le=\"10\"} 2\n"), "{text}");
+        assert!(text.contains("tspm_test_hist_bucket{le=\"100\"} 3\n"), "{text}");
+        assert!(text.contains("tspm_test_hist_bucket{le=\"1000\"} 4\n"), "{text}");
+        assert!(text.contains("tspm_test_hist_bucket{le=\"+Inf\"} 5\n"), "{text}");
+        assert!(text.contains("tspm_test_hist_sum 5526\n"), "{text}");
+        assert!(text.contains("tspm_test_hist_count 5\n"), "{text}");
+    }
+
+    #[test]
+    fn render_is_sorted_and_typed() {
+        let reg = MetricsRegistry::new();
+        reg.counter("tspm_zz").add(1);
+        reg.gauge("tspm_aa").set(2);
+        let text = reg.render_prometheus();
+        let aa = text.find("tspm_aa 2").unwrap();
+        let zz = text.find("tspm_zz 1").unwrap();
+        assert!(aa < zz, "families sort by name:\n{text}");
+        assert!(text.contains("# TYPE tspm_aa gauge\n"));
+        assert!(text.contains("# TYPE tspm_zz counter\n"));
+        // The cache pair renders even when untouched.
+        assert!(text.contains("tspm_cache_hits 0\n"));
+        assert!(text.contains("tspm_cache_lookups 0\n"));
+    }
+
+    #[test]
+    fn collectors_contribute_scrape_time_samples() {
+        let reg = MetricsRegistry::new();
+        reg.register_collector(Box::new(|out| {
+            out.push(Sample {
+                name: "tspm_test_rss_bytes".into(),
+                kind: SampleKind::Gauge,
+                value: 4096,
+            });
+        }));
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE tspm_test_rss_bytes gauge\ntspm_test_rss_bytes 4096\n"));
+    }
+
+    /// The equality the serve-e2e CI job asserts on live scrapes: with
+    /// a writer hammering lookups from another thread, every rendering
+    /// still satisfies hits + misses == lookups.
+    #[test]
+    fn cache_pair_is_never_torn_under_concurrent_scrapes() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let stop = Arc::new(crate::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let reg = Arc::clone(&reg);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    reg.cache().record_lookup(i % 3 == 0);
+                    i += 1;
+                }
+            })
+        };
+        let parse = |text: &str, name: &str| -> u64 {
+            text.lines()
+                .find(|l| l.starts_with(&format!("{name} ")))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        for _ in 0..200 {
+            let text = reg.render_prometheus();
+            let h = parse(&text, names::CACHE_HITS);
+            let m = parse(&text, names::CACHE_MISSES);
+            let l = parse(&text, names::CACHE_LOOKUPS);
+            assert_eq!(h + m, l, "torn scrape: {h} + {m} != {l}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        let t = reg.cache().totals();
+        assert_eq!(t.hits + t.misses, t.lookups());
+    }
+
+    #[test]
+    fn global_registry_is_one_instance() {
+        let a = global() as *const MetricsRegistry;
+        let b = global() as *const MetricsRegistry;
+        assert_eq!(a, b);
+    }
+}
+
+/// Exhaustive-interleaving check of the registry's two concurrency
+/// protocols: get-or-create registration racing an increment, and the
+/// cache pair racing a snapshot — on every schedule the counter loses
+/// no update and the snapshot is internally consistent. Compiled only
+/// under `RUSTFLAGS="--cfg loom"`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::Arc as LoomArc;
+
+    #[test]
+    fn loom_counter_and_cache_pair_lose_no_updates() {
+        loom::model(|| {
+            let reg = LoomArc::new(MetricsRegistry::new());
+            let t1 = {
+                let reg = LoomArc::clone(&reg);
+                loom::thread::spawn(move || {
+                    reg.counter("tspm_loom_counter").inc();
+                    reg.cache().record_lookup(true);
+                })
+            };
+            let t2 = {
+                let reg = LoomArc::clone(&reg);
+                loom::thread::spawn(move || {
+                    reg.counter("tspm_loom_counter").inc();
+                    reg.cache().record_lookup(false);
+                })
+            };
+            // A concurrent snapshot is always consistent, whatever the
+            // interleaving admitted so far.
+            let t = reg.cache().totals();
+            assert_eq!(t.hits + t.misses, t.lookups());
+            assert!(t.hits <= 1 && t.misses <= 1);
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(reg.counter("tspm_loom_counter").get(), 2);
+            let t = reg.cache().totals();
+            assert_eq!((t.hits, t.misses), (1, 1));
+        });
+    }
+}

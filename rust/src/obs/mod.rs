@@ -1,0 +1,67 @@
+//! Unified observability: structured tracing, a metrics registry, and
+//! Prometheus-style exposition — dependency-free, like everything else
+//! in the crate.
+//!
+//! The paper's claims are performance claims; the ROADMAP north star is
+//! a production daemon. Both need more than a per-run [`crate::metrics::PhaseTimer`]:
+//! a live `tspm serve` process must be scrapeable, and a single query
+//! must be traceable from `tspm client` through admission, registry
+//! routing, the result cache, and the block reads that answered it.
+//! This module is that layer, in three pillars:
+//!
+//! 1. **Tracing** ([`trace`]) — [`trace::Span`]s with a 128-bit
+//!    [`trace::TraceId`], parent links, and key-value attributes,
+//!    emitted as JSONL through a pluggable [`trace::TraceSink`] (file,
+//!    stderr, or an in-memory sink for tests). Time comes from an
+//!    injectable monotonic [`trace::Clock`] — never `SystemTime::now` —
+//!    so instrumented code inside the deterministic-output modules
+//!    stays `cargo xtask lint`-clean, and mined/screened/indexed output
+//!    is byte-identical with tracing on or off (the trace stream rides
+//!    on stderr or a side file, never on the data path). Enable with
+//!    `TSPM_TRACE=1` (stderr) or `TSPM_TRACE=/path/to/trace.jsonl`.
+//!    A *slow-query log* rides on the same spans: request spans above a
+//!    threshold (`TSPM_SLOW_QUERY_MS`, or `tspm serve --slow-query-ms`)
+//!    are dumped even when tracing is otherwise off.
+//! 2. **Metrics** ([`metrics`]) — a process-wide registry of named
+//!    counters, gauges, and fixed-bucket histograms, built on the
+//!    [`crate::sync`] shim so the same code is loom-model-checkable and
+//!    recovers from poisoned locks. The existing per-artifact
+//!    [`crate::query::QueryStats`] / cache snapshots remain the
+//!    per-service view; the registry aggregates the same update sites
+//!    process-wide (cache lookups are recorded under one lock so a
+//!    scrape always sees `hits + misses == lookups`).
+//! 3. **Exposition** ([`expo`]) — Prometheus-text-format rendering
+//!    (`# TYPE` lines, `_bucket`/`_sum`/`_count` histogram series),
+//!    served by a plain-HTTP scrape endpoint (`tspm serve
+//!    --metrics-addr HOST:PORT`) and over the serve wire protocol as a
+//!    `metrics` request frame.
+//!
+//! ## Metric-naming contract
+//!
+//! Every exposition name is a `pub const` in [`names`], matches
+//! `[a-z][a-z0-9_]*`, and is **append-only**: `cargo xtask lint` checks
+//! the constants against `xtask/snapshots/metrics.txt` exactly like the
+//! wire-protocol snapshot, so a rename or removal (which would silently
+//! break every dashboard scraping the old name) fails CI. New metrics
+//! are added by appending a constant and re-blessing with
+//! `cargo xtask lint --bless` in the same commit.
+//!
+//! ## Exposition format
+//!
+//! The scrape body is Prometheus text format: one `# TYPE <name>
+//! <counter|gauge|histogram>` line per family followed by its samples,
+//! families sorted by name, histograms rendered as cumulative
+//! `<name>_bucket{le="..."}` series plus `<name>_sum` / `<name>_count`.
+//! All values are integers. This format is part of the compatibility
+//! surface pinned by the snapshot above.
+
+pub mod expo;
+pub mod metrics;
+pub mod names;
+pub mod trace;
+
+pub use metrics::{global, CacheTotals, Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{
+    Clock, FileSink, ManualClock, MemorySink, MonotonicClock, Span, StderrSink, TraceId,
+    TraceSink, Tracer,
+};

@@ -1,0 +1,59 @@
+//! The exposition names — the append-only metric-name contract.
+//!
+//! Every metric the crate exposes is named by a constant here, and
+//! nowhere else: instrumentation sites pass these constants to
+//! [`crate::obs::metrics::MetricsRegistry`], and `cargo xtask lint`
+//! parses this file, enforces the `[a-z][a-z0-9_]*` naming rule, and
+//! diffs the list against `xtask/snapshots/metrics.txt` with the same
+//! append-only discipline as the wire-protocol snapshot. Renaming or
+//! removing a constant breaks scrapers and fails the lint; append new
+//! names at the end and re-bless with `cargo xtask lint --bless`.
+
+/// Result-cache lookups that hit, process-wide across every cache.
+pub const CACHE_HITS: &str = "tspm_cache_hits";
+/// Result-cache lookups that missed.
+pub const CACHE_MISSES: &str = "tspm_cache_misses";
+/// Total result-cache lookups; a scrape always sees
+/// `tspm_cache_hits + tspm_cache_misses == tspm_cache_lookups` because
+/// all three are rendered from one locked snapshot.
+pub const CACHE_LOOKUPS: &str = "tspm_cache_lookups";
+/// Entries evicted from result caches to respect their byte budgets.
+pub const CACHE_EVICTIONS: &str = "tspm_cache_evictions";
+/// Index blocks scanned by `QueryService` (the single IO choke point).
+pub const QUERY_BLOCK_READS: &str = "tspm_query_block_reads";
+/// Logical bytes those block scans read.
+pub const QUERY_BYTES_READ: &str = "tspm_query_bytes_read";
+/// Mining shards dynamically claimed by workers.
+pub const MINE_SHARDS_CLAIMED: &str = "tspm_mine_shards_claimed";
+/// Mining shards merged (in stable shard order) into the output.
+pub const MINE_SHARDS_MERGED: &str = "tspm_mine_shards_merged";
+/// Sorted spill runs opened by `screen_spilled`'s external merge.
+pub const SCREEN_SPILL_RUNS_OPENED: &str = "tspm_screen_spill_runs_opened";
+/// Bytes streamed through `screen_spilled` merge passes.
+pub const SCREEN_SPILL_BYTES_MERGED: &str = "tspm_screen_spill_bytes_merged";
+/// Merge passes (fan-in reductions) `screen_spilled` performed.
+pub const SCREEN_SPILL_MERGE_PASSES: &str = "tspm_screen_spill_merge_passes";
+/// Segments committed to segment sets by incremental ingest.
+pub const INGEST_SEGMENTS_COMMITTED: &str = "tspm_ingest_segments_committed";
+/// Compactions run over segment sets.
+pub const COMPACT_RUNS: &str = "tspm_compact_runs";
+/// Segments folded away by those compactions (the fan-in).
+pub const COMPACT_SEGMENTS_FOLDED: &str = "tspm_compact_segments_folded";
+/// Requests the serve daemon answered (any outcome).
+pub const SERVE_REQUESTS: &str = "tspm_serve_requests";
+/// Connections shed by admission control with a typed `busy` frame.
+pub const SERVE_SHED: &str = "tspm_serve_shed";
+/// Connections admitted and served to completion.
+pub const SERVE_CONNS: &str = "tspm_serve_conns";
+/// Request service time in microseconds (fixed-bucket histogram).
+pub const SERVE_REQUEST_DURATION_US: &str = "tspm_serve_request_duration_us";
+/// Engine stage wall time in microseconds (fixed-bucket histogram).
+pub const ENGINE_STAGE_DURATION_US: &str = "tspm_engine_stage_duration_us";
+/// Live logical bytes tracked by the engine's `MemTracker` view.
+pub const MEM_LIVE_BYTES: &str = "tspm_mem_live_bytes";
+/// Peak logical bytes tracked by the engine's `MemTracker` view.
+pub const MEM_PEAK_BYTES: &str = "tspm_mem_peak_bytes";
+/// Process high-water-mark RSS, when the platform probe is available.
+pub const PROCESS_PEAK_RSS_BYTES: &str = "tspm_process_peak_rss_bytes";
+/// Process instantaneous RSS, when the platform probe is available.
+pub const PROCESS_CURRENT_RSS_BYTES: &str = "tspm_process_current_rss_bytes";

@@ -155,20 +155,26 @@ impl<V: Clone> SharedCache<V> {
     }
 
     /// Look a key up and count the outcome — hit or miss is decided and
-    /// recorded under the same lock the snapshot reads.
+    /// recorded under the same lock the snapshot reads. The outcome is
+    /// additionally fed to the process-wide [`crate::obs`] registry
+    /// (dual-feed: this cache's snapshot stays the per-service view,
+    /// the registry aggregates every cache in the process).
     pub fn get(&self, key: &str) -> Option<V> {
         let mut st = lock_ignore_poison(&self.state);
         if self.capacity_bytes == 0 {
             st.misses += 1;
+            record_global_lookup(false);
             return None;
         }
         match st.lru.get(key) {
             Some(v) => {
                 st.hits += 1;
+                record_global_lookup(true);
                 Some(v)
             }
             None => {
                 st.misses += 1;
+                record_global_lookup(false);
                 None
             }
         }
@@ -180,7 +186,14 @@ impl<V: Clone> SharedCache<V> {
         if self.capacity_bytes == 0 {
             return;
         }
-        lock_ignore_poison(&self.state).lru.put(key, value, bytes);
+        let mut st = lock_ignore_poison(&self.state);
+        let before = st.lru.evictions();
+        st.lru.put(key, value, bytes);
+        let evicted = st.lru.evictions().saturating_sub(before);
+        drop(st);
+        if evicted > 0 {
+            record_global_evictions(evicted);
+        }
     }
 
     /// All counters in one consistent read (see [`CacheSnapshot`]).
@@ -208,6 +221,25 @@ impl<V: Clone> SharedCache<V> {
         self.capacity_bytes
     }
 }
+
+/// Feed the process-wide registry's cache pair. Compiled out under
+/// loom: the global registry lives outside any loom model, and loom
+/// primitives must not be touched from within one.
+#[cfg(not(loom))]
+fn record_global_lookup(hit: bool) {
+    crate::obs::metrics::global().cache().record_lookup(hit);
+}
+
+#[cfg(loom)]
+fn record_global_lookup(_hit: bool) {}
+
+#[cfg(not(loom))]
+fn record_global_evictions(n: u64) {
+    crate::obs::metrics::global().cache().record_evictions(n);
+}
+
+#[cfg(loom)]
+fn record_global_evictions(_n: u64) {}
 
 #[cfg(all(test, not(loom)))]
 mod tests {

@@ -572,8 +572,20 @@ impl QueryService {
         if start >= end {
             return Ok(());
         }
-        self.bytes_read
-            .fetch_add((end - start) * RECORD_BYTES as u64, Ordering::Relaxed);
+        let scan_bytes = (end - start) * RECORD_BYTES as u64;
+        self.bytes_read.fetch_add(scan_bytes, Ordering::Relaxed);
+        // Process-wide aggregates (counters — atomic adds only) plus an
+        // ambient child span when a tracer is active on this thread
+        // (the serve request path pushes one), so a traced request's
+        // JSONL shows exactly which block scans answered it.
+        let reg = crate::obs::metrics::global();
+        reg.counter(crate::obs::names::QUERY_BLOCK_READS).inc();
+        reg.counter(crate::obs::names::QUERY_BYTES_READ).add(scan_bytes);
+        let mut scan_span = crate::obs::trace::current_span("query.block_scan");
+        if let Some(s) = scan_span.as_mut() {
+            s.attr("records", end - start);
+            s.attr("bytes", scan_bytes);
+        }
         let cap = self.index.block_records.max(1);
         let buf_bytes = (cap * RECORD_BYTES) as u64 * 2;
         self.track(buf_bytes);

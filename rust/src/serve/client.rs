@@ -4,6 +4,7 @@
 
 use crate::json::Json;
 use crate::mining::SeqRecord;
+use crate::obs::TraceId;
 use crate::query::{Histogram, QueryStats, SeqSupport};
 use crate::rng::Rng;
 use crate::serve::protocol::{
@@ -18,6 +19,7 @@ use std::time::Instant;
 pub struct Client {
     stream: TcpStream,
     max_frame: usize,
+    trace_id: Option<String>,
 }
 
 impl Client {
@@ -28,13 +30,26 @@ impl Client {
     pub fn connect_with(addr: &str, max_frame: usize) -> Result<Client, ServeError> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, max_frame })
+        Ok(Client { stream, max_frame, trace_id: None })
+    }
+
+    /// Stamp every subsequent request with `id` (the `"trace_id"`
+    /// envelope key): the server adopts it as the trace of its
+    /// server-side spans, so one grep over the daemon's trace output
+    /// finds everything this client caused.
+    pub fn set_trace_id(&mut self, id: TraceId) {
+        self.trace_id = Some(id.to_hex());
+    }
+
+    fn encode_request(&self, req: &Request) -> Vec<u8> {
+        req.encode_traced(self.trace_id.as_deref())
     }
 
     /// Send one request and read one non-error response. `busy` and
     /// `error` frames come back as typed [`ServeError`]s.
     fn call(&mut self, req: &Request) -> Result<Response, ServeError> {
-        if let Err(e) = write_frame(&mut self.stream, &req.encode(), self.max_frame) {
+        let payload = self.encode_request(req);
+        if let Err(e) = write_frame(&mut self.stream, &payload, self.max_frame) {
             // The write can fail because admission control already shed
             // us: the server wrote one `busy` frame and closed. Prefer
             // that typed answer over the raw broken-pipe error.
@@ -106,7 +121,8 @@ impl Client {
         mut f: impl FnMut(&[SeqRecord]),
     ) -> Result<u64, ServeError> {
         let req = Request::ByPatient { artifact: artifact.map(str::to_string), pid };
-        write_frame(&mut self.stream, &req.encode(), self.max_frame)
+        let payload = self.encode_request(&req);
+        write_frame(&mut self.stream, &payload, self.max_frame)
             .map_err(ServeError::from)?;
         loop {
             match self.read_response()? {
@@ -192,6 +208,15 @@ impl Client {
         match self.call(&Request::Retire { id: id.to_string() })? {
             Response::Ok => Ok(()),
             other => Err(unexpected("ok", &other)),
+        }
+    }
+
+    /// The daemon's metrics registry in Prometheus text exposition
+    /// format — the same bytes its `--metrics-addr` endpoint serves.
+    pub fn metrics(&mut self) -> Result<String, ServeError> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
+            other => Err(unexpected("metrics", &other)),
         }
     }
 
@@ -375,16 +400,9 @@ pub fn run_mixed_workload(
     }
     let mut kinds = Vec::new();
     for (i, mut lat) in per_kind.into_iter().enumerate() {
-        if lat.is_empty() {
-            continue;
+        if let Some(stats) = kind_stats(KINDS[i], &mut lat) {
+            kinds.push(stats);
         }
-        lat.sort_unstable();
-        kinds.push(KindStats {
-            kind: KINDS[i],
-            count: lat.len() as u64,
-            p50_us: percentile(&lat, 0.50),
-            p99_us: percentile(&lat, 0.99),
-        });
     }
     let total: u64 = kinds.iter().map(|k| k.count).sum();
     Ok(WorkloadReport {
@@ -394,6 +412,22 @@ pub fn run_mixed_workload(
         elapsed_secs: elapsed,
         qps: total as f64 / elapsed,
         kinds,
+    })
+}
+
+/// Summarize one request kind's latency samples (sorting in place);
+/// `None` when the kind saw no successful request, so it is omitted
+/// from the report rather than reported as a zero-latency row.
+fn kind_stats(kind: &'static str, lat_us: &mut Vec<u64>) -> Option<KindStats> {
+    if lat_us.is_empty() {
+        return None;
+    }
+    lat_us.sort_unstable();
+    Some(KindStats {
+        kind,
+        count: lat_us.len() as u64,
+        p50_us: percentile(lat_us, 0.50),
+        p99_us: percentile(lat_us, 0.99),
     })
 }
 
@@ -414,6 +448,33 @@ mod tests {
         assert_eq!(percentile(&v, 0.50), 50);
         assert_eq!(percentile(&v, 0.99), 99);
         assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn empty_kind_is_omitted_not_zeroed() {
+        assert!(kind_stats("by_sequence", &mut Vec::new()).is_none());
+    }
+
+    #[test]
+    fn single_sample_is_both_percentiles() {
+        let s = kind_stats("top_k", &mut vec![42]).unwrap();
+        assert_eq!((s.count, s.p50_us, s.p99_us), (1, 42, 42));
+    }
+
+    #[test]
+    fn identical_latencies_collapse_to_one_value() {
+        let s = kind_stats("histogram", &mut vec![9; 1000]).unwrap();
+        assert_eq!((s.count, s.p50_us, s.p99_us), (1000, 9, 9));
+    }
+
+    #[test]
+    fn p50_never_exceeds_p99() {
+        // Unsorted input with a heavy tail; kind_stats sorts in place.
+        let mut lat: Vec<u64> = (0..500).map(|i| (i * 7919) % 10_000).collect();
+        lat.push(1_000_000);
+        let s = kind_stats("by_patient", &mut lat).unwrap();
+        assert!(s.p50_us <= s.p99_us, "p50 {} > p99 {}", s.p50_us, s.p99_us);
+        assert_eq!(s.count, 501);
     }
 
     #[test]

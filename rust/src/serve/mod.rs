@@ -51,9 +51,21 @@
 //! **Requests.** The payload is an object with a `"type"` tag:
 //! `ping`, `list`, `stats`, `by_sequence`, `by_patient`,
 //! `patients_with`, `top_k`, `histogram`, `register`, `retire`,
-//! `shutdown`. Query requests carry an optional `"artifact"` id;
-//! `null`/absent routes to the sole registered artifact and is a
-//! `not_found` error when zero or several are registered.
+//! `shutdown`, `metrics`. Query requests carry an optional
+//! `"artifact"` id; `null`/absent routes to the sole registered
+//! artifact and is a `not_found` error when zero or several are
+//! registered. A `metrics` request returns the server's metrics
+//! registry rendered in Prometheus text exposition format.
+//!
+//! **Trace envelope.** Any request object may additionally carry an
+//! optional top-level `"trace_id"` key (1–32 hex characters). It rides
+//! *outside* the request enum — added by
+//! [`protocol::Request::encode_traced`], recovered by
+//! [`protocol::Request::decode_traced`] — so it needed no version bump:
+//! readers ignore unknown object keys. A server that receives one
+//! adopts it as the trace id of the server-side `serve.request` span,
+//! stitching client and server traces together; absent, the server
+//! generates its own.
 //!
 //! **Responses.** One frame per request — except `by_patient`, which
 //! streams `records_part` frames (`"last": false`) block-at-a-time and

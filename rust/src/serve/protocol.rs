@@ -23,10 +23,19 @@
 //! [`Request`] mirrors the [`crate::query::QueryService`] surface
 //! one-for-one (`by_sequence` / `by_patient` / `patients_with` /
 //! `top_k` / `histogram`) plus registry administration (`register` /
-//! `retire` / `list` / `stats`) and lifecycle (`ping` / `shutdown`).
-//! Every response is a single frame except `by_patient`, which streams:
-//! zero or more `records_part` frames with `"last": false` followed by
-//! exactly one with `"last": true` carrying the total count.
+//! `retire` / `list` / `stats`), lifecycle (`ping` / `shutdown`) and
+//! observability (`metrics`, answered with the server's Prometheus
+//! text exposition). Every response is a single frame except
+//! `by_patient`, which streams: zero or more `records_part` frames
+//! with `"last": false` followed by exactly one with `"last": true`
+//! carrying the total count.
+//!
+//! Any request may additionally carry a top-level `"trace_id"` key —
+//! an **envelope** field that rides outside the request enum (see
+//! [`Request::encode_traced`] / [`Request::decode_traced`]). Readers
+//! ignore unknown JSON keys, so the envelope needs no version bump:
+//! old servers silently drop it, new servers adopt the client's trace
+//! id as the root of their server-side spans.
 
 use crate::json::Json;
 use crate::mining::SeqRecord;
@@ -250,6 +259,10 @@ pub enum Request {
     Retire { id: String },
     /// Drain in-flight requests and exit the serve loop.
     Shutdown,
+    /// The server's metrics registry in Prometheus text exposition
+    /// format — answered without touching any artifact, so it works
+    /// even when nothing is registered.
+    Metrics,
 }
 
 impl Request {
@@ -267,6 +280,7 @@ impl Request {
             Request::Register { .. } => "register",
             Request::Retire { .. } => "retire",
             Request::Shutdown => "shutdown",
+            Request::Metrics => "metrics",
         }
     }
 
@@ -320,6 +334,7 @@ impl Request {
                 Json::obj(vec![("type", Json::from("retire")), ("id", Json::from(id.clone()))])
             }
             Request::Shutdown => Json::obj(vec![("type", Json::from("shutdown"))]),
+            Request::Metrics => Json::obj(vec![("type", Json::from("metrics"))]),
         }
     }
 
@@ -360,6 +375,7 @@ impl Request {
             },
             "retire" => Request::Retire { id: req_str(j, "id")? },
             "shutdown" => Request::Shutdown,
+            "metrics" => Request::Metrics,
             other => return Err(format!("unknown request type {other:?}")),
         })
     }
@@ -372,6 +388,29 @@ impl Request {
         let text = std::str::from_utf8(payload).map_err(|e| format!("payload not UTF-8: {e}"))?;
         let j = Json::parse(text).map_err(|e| format!("payload not JSON: {e}"))?;
         Request::from_json(&j)
+    }
+
+    /// [`encode`](Request::encode) plus the optional top-level
+    /// `"trace_id"` envelope key. With `None` the output is
+    /// byte-identical to the plain encoding; with `Some`, readers that
+    /// predate the key ignore it (unknown keys are dropped), so the
+    /// envelope is append-only at the JSON level — no version bump.
+    pub fn encode_traced(&self, trace_id: Option<&str>) -> Vec<u8> {
+        let mut j = self.to_json();
+        if let (Json::Obj(map), Some(id)) = (&mut j, trace_id) {
+            map.insert("trace_id".to_string(), Json::from(id));
+        }
+        j.to_string_compact().into_bytes()
+    }
+
+    /// [`decode`](Request::decode) that also surfaces the optional
+    /// top-level `"trace_id"` envelope key (`None` when absent or not
+    /// a string — a malformed trace id never fails the request).
+    pub fn decode_traced(payload: &[u8]) -> Result<(Request, Option<String>), String> {
+        let text = std::str::from_utf8(payload).map_err(|e| format!("payload not UTF-8: {e}"))?;
+        let j = Json::parse(text).map_err(|e| format!("payload not JSON: {e}"))?;
+        let trace_id = j.get("trace_id").and_then(Json::as_str).map(str::to_string);
+        Ok((Request::from_json(&j)?, trace_id))
     }
 }
 
@@ -409,6 +448,9 @@ pub enum Response {
     Patients { patients: Vec<u32>, total: u64 },
     TopK(Vec<SeqSupport>),
     Histogram(Histogram),
+    /// Prometheus text exposition, verbatim — the same bytes the
+    /// `--metrics-addr` HTTP endpoint serves.
+    Metrics { text: String },
 }
 
 impl Response {
@@ -513,6 +555,10 @@ impl Response {
                     ),
                 ),
             ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("type", Json::from("metrics")),
+                ("text", Json::from(text.clone())),
+            ]),
         }
     }
 
@@ -607,6 +653,7 @@ impl Response {
                     buckets,
                 })
             }
+            "metrics" => Response::Metrics { text: req_str(j, "text")? },
             other => return Err(format!("unknown response type {other:?}")),
         })
     }
@@ -722,6 +769,23 @@ mod tests {
         round_trip_req(Request::Register { id: "b".into(), dir: "/tmp/idx".into() });
         round_trip_req(Request::Retire { id: "b".into() });
         round_trip_req(Request::Shutdown);
+        round_trip_req(Request::Metrics);
+    }
+
+    #[test]
+    fn trace_id_envelope_rides_outside_the_enum() {
+        let traced = Request::Ping.encode_traced(Some("00ab"));
+        let (req, tid) = Request::decode_traced(&traced).unwrap();
+        assert_eq!(req, Request::Ping);
+        assert_eq!(tid.as_deref(), Some("00ab"));
+        // A reader that predates the envelope ignores the unknown key.
+        assert_eq!(Request::decode(&traced).unwrap(), Request::Ping);
+        // No trace id → byte-identical to the plain encoding, and the
+        // traced decoder reports None rather than inventing one.
+        assert_eq!(Request::Ping.encode_traced(None), Request::Ping.encode());
+        let (req, tid) = Request::decode_traced(&Request::Ping.encode()).unwrap();
+        assert_eq!(req, Request::Ping);
+        assert_eq!(tid, None);
     }
 
     #[test]
@@ -764,6 +828,9 @@ mod tests {
             total: 12,
             buckets: vec![HistogramBucket { lo: 5, hi: 128, count: 4 }],
         }));
+        round_trip_resp(Response::Metrics {
+            text: "# TYPE tspm_cache_hits counter\ntspm_cache_hits 3\n".into(),
+        });
     }
 
     #[test]

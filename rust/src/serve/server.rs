@@ -21,8 +21,9 @@
 //! which blocks until all in-flight handlers have finished their
 //! current request and exited.
 
+use crate::obs::{self, names, TraceId, Tracer};
 use crate::par::Semaphore;
-use crate::query::QueryError;
+use crate::query::{QueryError, QuerySurface};
 use crate::serve::protocol::{
     read_frame_resume, write_frame, ErrorCode, FrameError, Request, Response,
 };
@@ -33,6 +34,10 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// `tspm_serve_request_duration_us` histogram layout: 100µs → 10s.
+const REQUEST_BUCKETS_US: &[u64] =
+    &[100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000];
 
 /// Tunables for one serve loop.
 #[derive(Clone, Debug)]
@@ -46,6 +51,12 @@ pub struct ServeConfig {
     pub poll_interval: Duration,
     /// Frame-size guard for reads and writes.
     pub max_frame_bytes: usize,
+    /// Tracer for server-side spans. `None` builds one from the
+    /// environment at bind time (`TSPM_TRACE`, `TSPM_SLOW_QUERY_MS`).
+    pub tracer: Option<Tracer>,
+    /// Slow-query threshold applied to the tracer at bind time; `None`
+    /// keeps whatever the tracer (or environment) already set.
+    pub slow_query_threshold: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +66,8 @@ impl Default for ServeConfig {
             idle_timeout: Duration::from_secs(30),
             poll_interval: Duration::from_millis(100),
             max_frame_bytes: crate::serve::protocol::DEFAULT_MAX_FRAME_BYTES,
+            tracer: None,
+            slow_query_threshold: None,
         }
     }
 }
@@ -68,6 +81,7 @@ struct ServerState {
     served: AtomicU64,
     shed: AtomicU64,
     requests: AtomicU64,
+    tracer: Tracer,
 }
 
 impl ServerState {
@@ -125,6 +139,10 @@ impl Server {
     pub fn bind(addr: &str, registry: Arc<Registry>, cfg: ServeConfig) -> Result<Server, ServeError> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
+        let tracer = cfg.tracer.clone().unwrap_or_else(Tracer::from_env);
+        if let Some(t) = cfg.slow_query_threshold {
+            tracer.set_slow_threshold_us(t.as_micros() as u64);
+        }
         let state = Arc::new(ServerState {
             shutdown: AtomicBool::new(false),
             conns: Semaphore::new(cfg.max_conns),
@@ -132,6 +150,7 @@ impl Server {
             served: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            tracer,
         });
         Ok(Server { listener, registry, cfg, state })
     }
@@ -156,17 +175,20 @@ impl Server {
             };
             if !self.state.conns.try_acquire() {
                 self.state.shed.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::global().counter(names::SERVE_SHED).inc();
                 // Best-effort: tell the peer it was shed, then close.
                 let _ = write_frame(&mut stream, &Response::Busy.encode(), self.cfg.max_frame_bytes);
                 continue;
             }
             self.state.served.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::global().counter(names::SERVE_CONNS).inc();
+            let admitted_us = self.state.tracer.now_micros();
             let registry = Arc::clone(&self.registry);
             let state = Arc::clone(&self.state);
             let cfg = self.cfg.clone();
             std::thread::spawn(move || {
                 let _permit = PermitGuard { state: &state };
-                handle_conn(stream, &registry, &cfg, &state);
+                handle_conn(stream, &registry, &cfg, &state, admitted_us);
             });
         }
         // Drain: every permit reacquired == every handler exited.
@@ -201,9 +223,18 @@ impl Drop for PermitGuard<'_> {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, registry: &Registry, cfg: &ServeConfig, state: &ServerState) {
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &Registry,
+    cfg: &ServeConfig,
+    state: &ServerState,
+    admitted_us: u64,
+) {
     let _ = stream.set_nodelay(true);
     let mut idle = Duration::ZERO;
+    // Admission wait is reported once, attached to the connection's
+    // first request (whose trace id does not exist until then).
+    let mut admission = Some(admitted_us);
     loop {
         if state.shutdown.load(Ordering::Acquire) {
             break; // in-flight request already finished; admit no more
@@ -249,22 +280,25 @@ fn handle_conn(mut stream: TcpStream, registry: &Registry, cfg: &ServeConfig, st
                 break; // framing errors close the connection
             }
         };
-        match answer(&mut stream, &payload, registry, cfg, state) {
+        match answer(&mut stream, &payload, registry, cfg, state, admission.take()) {
             Ok(true) => {}
             Ok(false) | Err(_) => break,
         }
     }
 }
 
-/// Decode and dispatch one request; `Ok(true)` keeps the connection.
+/// Decode one request, open its `serve.request` root span (adopting
+/// the client's trace id when the frame carried one), and dispatch;
+/// `Ok(true)` keeps the connection.
 fn answer(
     stream: &mut TcpStream,
     payload: &[u8],
     registry: &Registry,
     cfg: &ServeConfig,
     state: &ServerState,
+    admission_us: Option<u64>,
 ) -> Result<bool, FrameError> {
-    let req = match Request::decode(payload) {
+    let (req, wire_trace) = match Request::decode_traced(payload) {
         Ok(r) => r,
         Err(m) => {
             // A malformed payload inside a well-formed frame: the
@@ -274,6 +308,47 @@ fn answer(
         }
     };
     state.requests.fetch_add(1, Ordering::Relaxed);
+    let reg = obs::metrics::global();
+    reg.counter(names::SERVE_REQUESTS).inc();
+    let mut span = match wire_trace.as_deref().and_then(TraceId::from_hex) {
+        Some(tid) => state.tracer.span_in(tid, "serve.request"),
+        None => state.tracer.span("serve.request"),
+    };
+    span.attr("kind", req.kind());
+    span.mark_slow_eligible();
+    if let Some(start) = admission_us {
+        // Accept → first request byte, measured before the trace id
+        // existed and attached retroactively as a sibling span.
+        let now = state.tracer.now_micros();
+        state.tracer.emit_manual(
+            span.trace_id(),
+            Some(span.id()),
+            "serve.admission",
+            start,
+            now.saturating_sub(start),
+        );
+    }
+    // While the request span is on the thread's context stack, spans
+    // opened deeper in the stack (routing, cache, block scans) become
+    // its children — that is the whole propagation chain.
+    let keep = {
+        let _ctx = obs::trace::push_current(&span);
+        dispatch(stream, req, registry, cfg, state)
+    };
+    let elapsed = span.finish();
+    reg.histogram(names::SERVE_REQUEST_DURATION_US, REQUEST_BUCKETS_US)
+        .observe(elapsed.as_micros() as u64);
+    keep
+}
+
+/// Answer one decoded request; `Ok(true)` keeps the connection.
+fn dispatch(
+    stream: &mut TcpStream,
+    req: Request,
+    registry: &Registry,
+    cfg: &ServeConfig,
+    state: &ServerState,
+) -> Result<bool, FrameError> {
     match req {
         Request::Ping => send(stream, &Response::Pong, cfg)?,
         Request::List => send(stream, &Response::Artifacts(registry.describe()), cfg)?,
@@ -285,8 +360,7 @@ fn answer(
             send(stream, &resp, cfg)?;
         }
         Request::BySequence { artifact, seq, limit } => {
-            let resp = registry
-                .route(artifact.as_deref())
+            let resp = traced_route(registry, artifact.as_deref())
                 .and_then(|svc| svc.by_sequence(seq).map_err(ServeError::from))
                 .map(|recs| {
                     let total = recs.len() as u64;
@@ -303,8 +377,7 @@ fn answer(
             stream_by_patient(stream, registry, artifact.as_deref(), pid, cfg)?;
         }
         Request::PatientsWith { artifact, seq, dur_min, dur_max, limit } => {
-            let resp = registry
-                .route(artifact.as_deref())
+            let resp = traced_route(registry, artifact.as_deref())
                 .and_then(|svc| {
                     svc.patients_with(seq, dur_min, dur_max).map_err(ServeError::from)
                 })
@@ -320,16 +393,14 @@ fn answer(
             send(stream, &resp, cfg)?;
         }
         Request::TopK { artifact, k } => {
-            let resp = registry
-                .route(artifact.as_deref())
+            let resp = traced_route(registry, artifact.as_deref())
                 .and_then(|svc| svc.top_k_by_support(k).map_err(ServeError::from))
                 .map(|rows| Response::TopK(rows.as_ref().clone()))
                 .unwrap_or_else(|e| error_response(&e));
             send(stream, &resp, cfg)?;
         }
         Request::Histogram { artifact, seq, buckets } => {
-            let resp = registry
-                .route(artifact.as_deref())
+            let resp = traced_route(registry, artifact.as_deref())
                 .and_then(|svc| svc.duration_histogram(seq, buckets).map_err(ServeError::from))
                 .map(|h| Response::Histogram(h.as_ref().clone()))
                 .unwrap_or_else(|e| error_response(&e));
@@ -365,8 +436,31 @@ fn answer(
             state.begin_shutdown();
             return Ok(false);
         }
+        Request::Metrics => {
+            // Answered from the process-wide registry without routing —
+            // scraping works even when no artifact is registered.
+            let text = obs::metrics::global().render_prometheus();
+            send(stream, &Response::Metrics { text }, cfg)?;
+        }
     }
     Ok(true)
+}
+
+/// [`Registry::route`] under a `serve.route` child span, when a
+/// request span is on the thread's context stack.
+fn traced_route(
+    registry: &Registry,
+    artifact: Option<&str>,
+) -> Result<Arc<dyn QuerySurface>, ServeError> {
+    let span = obs::trace::current_span("serve.route");
+    let result = registry.route(artifact);
+    if let Some(mut s) = span {
+        if let Some(a) = artifact {
+            s.attr("artifact", a);
+        }
+        s.attr("ok", result.is_ok());
+    }
+    result
 }
 
 /// Stream a `by_patient` answer block-at-a-time: the handler's live
@@ -379,7 +473,7 @@ fn stream_by_patient(
     pid: u32,
     cfg: &ServeConfig,
 ) -> Result<(), FrameError> {
-    let svc = match registry.route(artifact) {
+    let svc = match traced_route(registry, artifact) {
         Ok(s) => s,
         Err(e) => return send(stream, &error_response(&e), cfg),
     };

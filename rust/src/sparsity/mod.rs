@@ -548,8 +548,12 @@ pub fn screen_spilled(
     // final screened merge below then also stays under the fd bound and
     // keeps useful per-run buffers. Multi-pass output is identical to a
     // single-pass merge (full-key order, equal keys are equal records).
+    // Process-wide merge observability: counters only — atomic adds
+    // that cannot perturb the deterministic merge output.
+    let obs_reg = crate::obs::metrics::global();
     let mut generation = 0u32;
     while runs.len() > MERGE_FAN_IN {
+        obs_reg.counter(crate::obs::names::SCREEN_SPILL_MERGE_PASSES).inc();
         let per_run = (cap / MERGE_FAN_IN).max(1);
         let mut next: Vec<PathBuf> = Vec::new();
         for (gi, group) in runs.chunks(MERGE_FAN_IN).enumerate() {
@@ -557,8 +561,18 @@ pub fn screen_spilled(
             let group_bytes =
                 (group.len() * per_run) as u64 * REC_BYTES * 2 + write_cap as u64;
             track(group_bytes);
+            obs_reg
+                .counter(crate::obs::names::SCREEN_SPILL_RUNS_OPENED)
+                .add(group.len() as u64);
             let mut w = SeqWriter::create_with_capacity(&path, write_cap)?;
-            merge_sorted_runs(group, per_run, |r| w.write(r))?;
+            let mut pass_records = 0u64;
+            merge_sorted_runs(group, per_run, |r| {
+                pass_records += 1;
+                w.write(r)
+            })?;
+            obs_reg
+                .counter(crate::obs::names::SCREEN_SPILL_BYTES_MERGED)
+                .add(pass_records * REC_BYTES);
             w.finish()?;
             untrack(group_bytes);
             next.push(path);
@@ -571,6 +585,13 @@ pub fn screen_spilled(
     }
 
     // --- pass 3: final k-way merge + streaming screen --------------------
+    obs_reg.counter(crate::obs::names::SCREEN_SPILL_MERGE_PASSES).inc();
+    obs_reg
+        .counter(crate::obs::names::SCREEN_SPILL_RUNS_OPENED)
+        .add(runs.len() as u64);
+    obs_reg
+        .counter(crate::obs::names::SCREEN_SPILL_BYTES_MERGED)
+        .add(stats.records_before * REC_BYTES);
     let per_run = (cap / runs.len().max(1)).max(1);
     // Cursor record buffers + their reader buffers.
     let merge_bytes = (runs.len() * per_run) as u64 * REC_BYTES * 2;

@@ -594,3 +594,64 @@ fn external_merge_screen_is_deterministic_across_buffer_sizes() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Tracing is a pure observer
+// ---------------------------------------------------------------------------
+
+/// Attaching a live tracer must not change one byte of any backend's
+/// output: spans time the stages, they never touch the data path. The
+/// traced run writes into a [`MemorySink`] and the test also pins that
+/// spans really were emitted — a silently disabled tracer would make
+/// the byte comparison vacuous. (CI additionally re-runs this whole
+/// suite under `TSPM_TRACE=1`, which routes every *untraced* engine's
+/// `Tracer::from_env` to stderr JSONL.)
+#[test]
+fn traced_run_output_is_byte_identical_to_untraced() {
+    let mut rng = Rng::new(0x7ACE);
+    let mut entries = Vec::new();
+    for p in 0..20 {
+        for _ in 0..(1 + rng.gen_range(25)) {
+            entries.push(entry(
+                &format!("p{p}"),
+                rng.gen_range(2_000) as i32,
+                &format!("c{}", rng.gen_range(12)),
+            ));
+        }
+    }
+    let db = NumericDbMart::encode(&DbMart::new(entries));
+    let cfg = MiningConfig { include_self_pairs: false, ..Default::default() };
+    let fc = engine::forecast(&db, &cfg);
+    let floor = (fc.max_patient_sequences + 32) * 16;
+    let budget = env_budget().unwrap_or(floor).max(floor);
+
+    for (choice, kind) in ALL_BACKENDS {
+        let untraced = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig { work_dir: work_dir(&format!("untraced_{kind}")), ..cfg.clone() })
+            .backend(choice)
+            .memory_budget(budget)
+            .tracer(tspm_plus::obs::Tracer::disabled())
+            .run()
+            .unwrap_or_else(|e| panic!("untraced/{kind}: {e}"));
+
+        let sink = std::sync::Arc::new(tspm_plus::obs::MemorySink::new());
+        let traced = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig { work_dir: work_dir(&format!("traced_{kind}")), ..cfg.clone() })
+            .backend(choice)
+            .memory_budget(budget)
+            .tracer(tspm_plus::obs::Tracer::new(sink.clone()))
+            .run()
+            .unwrap_or_else(|e| panic!("traced/{kind}: {e}"));
+
+        let a = sorted(untraced.sequences.materialize().unwrap().records);
+        let b = sorted(traced.sequences.materialize().unwrap().records);
+        assert!(!a.is_empty(), "{kind}: fixture mined nothing");
+        assert_eq!(record_bytes(&a), record_bytes(&b), "{kind}: tracing changed the output");
+
+        let lines = sink.lines();
+        assert!(
+            lines.iter().any(|l| l.contains("\"name\":\"engine.run\"")),
+            "{kind}: traced run emitted no engine.run span: {lines:?}"
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! End-to-end trace propagation across the serving wire.
+//!
+//! A client stamps its requests with a `trace_id` (the optional
+//! envelope key documented in `serve::protocol`); the server must adopt
+//! that id as the trace of its own `serve.request` root span and of
+//! every span hanging off it — the retroactive `serve.admission`
+//! measurement, the `serve.route` registry hop, and the query layer's
+//! `query.block_scan` leaves. An unstamped connection must instead get
+//! server-generated ids. Both are asserted by parsing the JSONL the
+//! server's tracer writes into a [`MemorySink`].
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tspm_plus::json::Json;
+use tspm_plus::mining::SeqRecord;
+use tspm_plus::obs::{MemorySink, TraceId, Tracer};
+use tspm_plus::query::{self, IndexConfig};
+use tspm_plus::rng::Rng;
+use tspm_plus::seqstore::{self, SeqFileSet};
+use tspm_plus::serve::{Client, Registry, ServeConfig, Server};
+
+/// Small blocks so the fixture spans several and a cold `by_sequence`
+/// really performs block scans.
+const BLOCK_RECORDS: usize = 32;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tspm_trace_prop_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Spill a random sorted multiset and build a pid-indexed artifact.
+fn build_artifact(name: &str) -> (PathBuf, Vec<SeqRecord>) {
+    let mut r = Rng::new(41);
+    let mut records: Vec<SeqRecord> = (0..2_000)
+        .map(|_| SeqRecord {
+            seq: r.gen_range(24),
+            pid: r.gen_range(32) as u32,
+            duration: r.gen_range(350) as u32,
+        })
+        .collect();
+    records.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+    let dir = tmpdir(name);
+    let spill = dir.join("part_0.tspm");
+    seqstore::write_file(&spill, &records).unwrap();
+    let input = SeqFileSet {
+        files: vec![spill],
+        total_records: records.len() as u64,
+        num_patients: 32,
+        num_phenx: 0,
+    };
+    let out = dir.join("idx");
+    query::index::build(
+        &input,
+        &out,
+        &IndexConfig { block_records: BLOCK_RECORDS, pid_index: true },
+        None,
+    )
+    .unwrap();
+    (out, records)
+}
+
+fn span_name(v: &Json) -> &str {
+    v.get("name").and_then(Json::as_str).unwrap_or("")
+}
+
+fn span_trace(v: &Json) -> &str {
+    v.get("trace").and_then(Json::as_str).unwrap_or("")
+}
+
+#[test]
+fn client_trace_id_propagates_into_server_spans() {
+    let (dir, records) = build_artifact("propagation");
+    let registry = Arc::new(Registry::new(1 << 20));
+    registry.open_and_register("idx", &dir).unwrap();
+
+    let sink = Arc::new(MemorySink::new());
+    let cfg = ServeConfig {
+        tracer: Some(Tracer::new(sink.clone())),
+        poll_interval: Duration::from_millis(5),
+        idle_timeout: Duration::from_secs(10),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let (handle, join) = server.spawn();
+
+    // A short client-chosen id: from_hex accepts 1–32 hex chars, the
+    // wire carries it verbatim, the server re-renders it zero-padded.
+    let want = TraceId::from_hex("c0ffee").unwrap();
+    let want_hex = want.to_hex();
+
+    let mut stamped = Client::connect(&addr).unwrap();
+    stamped.set_trace_id(want);
+    let probe = records[records.len() / 2].seq;
+    let (recs, _) = stamped.by_sequence(None, probe, None).unwrap();
+    assert!(!recs.is_empty(), "fixture probe must exist");
+    assert_eq!(stamped.top_k(None, 5).unwrap().len(), 5);
+    // The metrics frame flows through the same traced request path.
+    let text = stamped.metrics().unwrap();
+    assert!(text.contains("tspm_serve_requests"), "metrics frame: {text}");
+
+    // A second connection that never stamps anything.
+    let mut plain = Client::connect(&addr).unwrap();
+    plain.ping().unwrap();
+
+    drop(stamped);
+    drop(plain);
+    handle.shutdown();
+    join.join().unwrap().expect("server drains cleanly");
+
+    let spans: Vec<Json> =
+        sink.lines().iter().map(|l| Json::parse(l).expect("span lines are JSON")).collect();
+    assert!(!spans.is_empty(), "server tracer emitted nothing");
+
+    // Every span of the stamped connection carries the client's id.
+    let ours: Vec<&Json> = spans.iter().filter(|v| span_trace(v) == want_hex).collect();
+    let names: Vec<&str> = ours.iter().map(|v| span_name(v)).collect();
+    let count = |n: &str| names.iter().filter(|x| **x == n).count();
+    assert_eq!(count("serve.request"), 3, "one root per stamped request: {names:?}");
+    assert_eq!(count("serve.admission"), 1, "admission attaches once per connection");
+    assert_eq!(count("serve.route"), 2, "by_sequence and top_k route; metrics does not");
+    assert!(count("query.block_scan") >= 1, "cold by_sequence must scan blocks: {names:?}");
+
+    // Child spans link to a stamped serve.request root by parent id.
+    let root_ids: Vec<u64> = ours
+        .iter()
+        .filter(|v| span_name(v) == "serve.request")
+        .map(|v| v.get("span").and_then(Json::as_u64).expect("span id"))
+        .collect();
+    for v in ours.iter().filter(|v| span_name(v) != "serve.request") {
+        let parent = v.get("parent").and_then(Json::as_u64);
+        assert!(
+            parent.is_some_and(|p| root_ids.contains(&p)),
+            "{} span must hang off a serve.request root: {v:?}",
+            span_name(v)
+        );
+    }
+
+    // The request roots record the wire kind as an attribute.
+    let kinds: Vec<&str> = ours
+        .iter()
+        .filter(|v| span_name(v) == "serve.request")
+        .map(|v| {
+            v.get("attrs").and_then(|a| a.get("kind")).and_then(Json::as_str).expect("kind attr")
+        })
+        .collect();
+    for k in ["by_sequence", "top_k", "metrics"] {
+        assert!(kinds.contains(&k), "missing request kind {k}: {kinds:?}");
+    }
+
+    // The unstamped connection still gets traced — under a fresh
+    // server-generated id, never the zero id, never the client's.
+    let plain_roots: Vec<&Json> = spans
+        .iter()
+        .filter(|v| {
+            span_name(v) == "serve.request"
+                && v.get("attrs").and_then(|a| a.get("kind")).and_then(Json::as_str)
+                    == Some("ping")
+        })
+        .collect();
+    assert_eq!(plain_roots.len(), 1, "exactly one ping request");
+    let generated = span_trace(plain_roots[0]);
+    assert_eq!(generated.len(), 32, "ids render as 32 hex chars: {generated}");
+    assert_ne!(generated, want_hex);
+    assert_ne!(generated, TraceId::NONE.to_hex(), "generated ids are never zero");
+}

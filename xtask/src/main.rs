@@ -1,7 +1,7 @@
 //! `cargo xtask lint` — static enforcement of the repository's
 //! compatibility and determinism contracts.
 //!
-//! Four checks, all source-level (no compilation, no dependencies):
+//! Five checks, all source-level (no compilation, no dependencies):
 //!
 //! 1. **Append-only wire protocol** — the `ErrorCode` and `Request`
 //!    enums in `rust/src/serve/protocol.rs` must extend the committed
@@ -26,6 +26,12 @@
 //!    `xtask/snapshots/unsafe_allowlist.txt` (per-file occurrence
 //!    budget) and carry a `// SAFETY:` comment in the five lines above
 //!    it.
+//! 5. **Append-only metric names** — the exposition-name constants in
+//!    `rust/src/obs/names.rs` must match `[a-z][a-z0-9_]*` and extend
+//!    the committed snapshot (`xtask/snapshots/metrics.txt`) by
+//!    appending at the end only; renaming or removing a name breaks
+//!    every dashboard and alert scraping it. `--bless` rewrites the
+//!    snapshot after an intentional extension.
 //!
 //! The checks operate on comment/string-stripped source lines, so
 //! mentioning `unsafe` or `HashMap` in docs never trips them. Test
@@ -43,8 +49,10 @@ const DETERMINISTIC_DIRS: [&str; 4] =
     ["rust/src/mining", "rust/src/sparsity", "rust/src/query", "rust/src/ingest"];
 
 const WIRE_SNAPSHOT: &str = "xtask/snapshots/wire.txt";
+const METRICS_SNAPSHOT: &str = "xtask/snapshots/metrics.txt";
 const UNSAFE_ALLOWLIST: &str = "xtask/snapshots/unsafe_allowlist.txt";
 const PROTOCOL_RS: &str = "rust/src/serve/protocol.rs";
+const NAMES_RS: &str = "rust/src/obs/names.rs";
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -117,6 +125,30 @@ fn run_lint(root: &Path, bless: bool) -> Result<usize, String> {
     // 4. unsafe audit
     let allowlist = std::fs::read_to_string(root.join(UNSAFE_ALLOWLIST)).unwrap_or_default();
     check_unsafe(&files, &allowlist, &mut violations);
+
+    // 5. metric-name snapshot (or bless it)
+    let rendered = render_metrics_snapshot(&files, &mut violations);
+    if let Some(rendered) = rendered {
+        let snap_path = root.join(METRICS_SNAPSHOT);
+        if bless {
+            std::fs::write(&snap_path, &rendered)
+                .map_err(|e| format!("cannot write {}: {e}", snap_path.display()))?;
+            println!("xtask lint: blessed {METRICS_SNAPSHOT}");
+        } else {
+            match std::fs::read_to_string(&snap_path) {
+                Ok(committed) => {
+                    check_metrics_append_only(&committed, &files, &mut violations)
+                }
+                Err(_) => violations.push(Violation {
+                    file: METRICS_SNAPSHOT.into(),
+                    line: 0,
+                    rule: "metric-snapshot",
+                    msg: "snapshot missing; run `cargo xtask lint --bless` and commit it"
+                        .into(),
+                }),
+            }
+        }
+    }
 
     for v in &violations {
         eprintln!("xtask lint: {}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
@@ -808,6 +840,142 @@ fn check_unsafe(files: &[SourceFile], allowlist_text: &str, violations: &mut Vec
 }
 
 // ---------------------------------------------------------------------------
+// Check 5 — append-only metric-name snapshot
+// ---------------------------------------------------------------------------
+
+/// `[a-z][a-z0-9_]*` — mirrors `obs::metrics::valid_metric_name`
+/// (xtask is dependency-free, so the rule is restated, and check 5
+/// guarantees the two can never disagree about committed names).
+fn valid_metric_name(name: &str) -> bool {
+    let bytes = name.as_bytes();
+    match bytes.first() {
+        Some(b) if b.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    bytes[1..]
+        .iter()
+        .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || *b == b'_')
+}
+
+/// The `(line, "value")` of every `pub const NAME: &str = "value";` in
+/// `f`, in declaration order — declaration order IS the snapshot order.
+fn metric_names(f: &SourceFile) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, code) in f.code.iter().enumerate() {
+        if !(contains_token(code, "const") && code.contains("&str") && code.contains('=')) {
+            continue;
+        }
+        let raw = &f.raw[i];
+        let Some(eq) = raw.find('=') else { continue };
+        let rest = &raw[eq + 1..];
+        let Some(q1) = rest.find('"') else { continue };
+        let Some(q2) = rest[q1 + 1..].find('"') else { continue };
+        out.push((i + 1, rest[q1 + 1..q1 + 1 + q2].to_string()));
+    }
+    out
+}
+
+/// Current metric names rendered in the snapshot format, validating the
+/// naming rule along the way; `None` (with violations pushed) when
+/// names.rs is missing or empty.
+fn render_metrics_snapshot(
+    files: &[SourceFile],
+    violations: &mut Vec<Violation>,
+) -> Option<String> {
+    let Some(f) = get(files, NAMES_RS) else {
+        violations.push(Violation {
+            file: NAMES_RS.into(),
+            line: 0,
+            rule: "metric-snapshot",
+            msg: "file not found".into(),
+        });
+        return None;
+    };
+    let names = metric_names(f);
+    if names.is_empty() {
+        violations.push(Violation {
+            file: NAMES_RS.into(),
+            line: 0,
+            rule: "metric-snapshot",
+            msg: "no `pub const NAME: &str = \"…\";` metric names found".into(),
+        });
+        return None;
+    }
+    for (line, name) in &names {
+        if !valid_metric_name(name) {
+            violations.push(Violation {
+                file: NAMES_RS.into(),
+                line: *line,
+                rule: "metric-name",
+                msg: format!(
+                    "metric name {name:?} violates the exposition naming rule \
+                     [a-z][a-z0-9_]*"
+                ),
+            });
+        }
+    }
+    let mut s = String::new();
+    s.push_str(
+        "# Committed metric-name snapshot — the append-only contract for\n\
+         # rust/src/obs/names.rs. Exposition names are a public scrape surface:\n\
+         # `cargo xtask lint` fails if a name listed here is renamed, removed,\n\
+         # or reordered (appending new names at the END is allowed), or if any\n\
+         # name violates [a-z][a-z0-9_]*. To add a metric: append its constant\n\
+         # to names.rs, then re-bless this file with `cargo xtask lint --bless`\n\
+         # in the same commit.\n\n",
+    );
+    for (_, name) in &names {
+        s.push_str(name);
+        s.push('\n');
+    }
+    Some(s)
+}
+
+fn check_metrics_append_only(
+    committed: &str,
+    files: &[SourceFile],
+    violations: &mut Vec<Violation>,
+) {
+    let Some(f) = get(files, NAMES_RS) else { return };
+    let live: Vec<String> = metric_names(f).into_iter().map(|(_, n)| n).collect();
+    let snap: Vec<&str> = committed
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect();
+    if live.len() < snap.len() {
+        violations.push(Violation {
+            file: NAMES_RS.into(),
+            line: 0,
+            rule: "metric-append-only",
+            msg: format!(
+                "lost metric names: snapshot has {}, source has {} — renaming or \
+                 removing an exposition name breaks every scraper",
+                snap.len(),
+                live.len()
+            ),
+        });
+        return;
+    }
+    for (i, want) in snap.iter().enumerate() {
+        if live[i] != *want {
+            violations.push(Violation {
+                file: NAMES_RS.into(),
+                line: 0,
+                rule: "metric-append-only",
+                msg: format!(
+                    "metric name {i} is {:?}, snapshot says {want:?} — names are \
+                     append-only (append at the end, never reorder/rename; \
+                     `--bless` only for intentional extensions)",
+                    live[i]
+                ),
+            });
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tests — each acceptance-criteria seeded violation has a case here.
 // ---------------------------------------------------------------------------
 
@@ -1096,6 +1264,73 @@ pub enum Request {
             v.iter().any(|v| v.msg.contains("MIN_PROTOCOL_VERSION")),
             "{v:?}"
         );
+    }
+
+    const NAMES_SRC: &str = "//! exposition names\n\
+        /// hits\n\
+        pub const CACHE_HITS: &str = \"tspm_cache_hits\";\n\
+        /// misses\n\
+        pub const CACHE_MISSES: &str = \"tspm_cache_misses\";\n\
+        pub const SERVE_REQUESTS: &str = \"tspm_serve_requests\";\n";
+
+    fn names_file() -> SourceFile {
+        source_file(NAMES_RS.to_string(), NAMES_SRC)
+    }
+
+    #[test]
+    fn metric_snapshot_round_trip_passes() {
+        let files = vec![names_file()];
+        let mut v = Vec::new();
+        let rendered = render_metrics_snapshot(&files, &mut v).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+        check_metrics_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "a freshly blessed snapshot must pass: {v:?}");
+        // Appending a name at the end still passes (append-only).
+        let extended =
+            format!("{NAMES_SRC}pub const NEW_THING: &str = \"tspm_new_thing\";\n");
+        let files = vec![source_file(NAMES_RS.to_string(), &extended)];
+        let mut v = Vec::new();
+        check_metrics_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "appending at the end is allowed: {v:?}");
+    }
+
+    /// Seeded violation: renaming or removing an exposition name fails.
+    #[test]
+    fn renamed_or_removed_metric_name_fails() {
+        let files = vec![names_file()];
+        let mut v = Vec::new();
+        let rendered = render_metrics_snapshot(&files, &mut v).unwrap();
+        let renamed = NAMES_SRC.replace("tspm_cache_misses", "tspm_cache_miss_total");
+        assert_ne!(renamed, NAMES_SRC, "seed applied");
+        let files = vec![source_file(NAMES_RS.to_string(), &renamed)];
+        let mut v = Vec::new();
+        check_metrics_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.rule == "metric-append-only"), "{v:?}");
+
+        let removed = NAMES_SRC
+            .replace("pub const CACHE_MISSES: &str = \"tspm_cache_misses\";\n", "");
+        let files = vec![source_file(NAMES_RS.to_string(), &removed)];
+        let mut v = Vec::new();
+        check_metrics_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("lost metric names")), "{v:?}");
+    }
+
+    /// Seeded violation: a name outside `[a-z][a-z0-9_]*` fails even
+    /// before the snapshot diff.
+    #[test]
+    fn invalid_metric_name_fails() {
+        assert!(valid_metric_name("tspm_cache_hits"));
+        assert!(valid_metric_name("a1_2"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("1tspm"));
+        assert!(!valid_metric_name("_tspm"));
+        assert!(!valid_metric_name("TspmRequests"));
+        assert!(!valid_metric_name("tspm-requests"));
+        let bad = NAMES_SRC.replace("tspm_serve_requests", "TspmServeRequests");
+        let files = vec![source_file(NAMES_RS.to_string(), &bad)];
+        let mut v = Vec::new();
+        let _ = render_metrics_snapshot(&files, &mut v);
+        assert!(v.iter().any(|v| v.rule == "metric-name"), "{v:?}");
     }
 
     #[test]
