@@ -336,4 +336,68 @@ fn main() {
     std::fs::write("BENCH_ingest.json", ibench.to_string_pretty())
         .expect("write BENCH_ingest.json");
     println!("wrote BENCH_ingest.json");
+
+    // predicate pushdown: targeted vs full mine+screen on the same
+    // cohort, best-of-3 each. The targeted run prunes non-matching pairs
+    // inside the per-patient inner loop before duration encoding, so it
+    // should win on wall time AND on the tracker's peak logical bytes —
+    // the two numbers a cohort-scale target query cares about. Written
+    // to BENCH_targeted.json.
+    use tspm_plus::engine::Engine;
+    use tspm_plus::target::{TargetPos, TargetSpec};
+    let mut freq = vec![0u64; db.num_phenx()];
+    for e in &db.entries {
+        freq[e.phenx as usize] += 1;
+    }
+    let mut by_freq: Vec<u32> = (0..db.num_phenx() as u32).collect();
+    by_freq.sort_unstable_by_key(|&c| std::cmp::Reverse(freq[c as usize]));
+    let targets: Vec<u32> = by_freq.into_iter().take(2).collect();
+    let spec = TargetSpec::for_codes(targets.clone()).with_pos(TargetPos::Either);
+    let race_sc = SparsityConfig { min_patients: 7, threads: 0 };
+    let race = |target: Option<&TargetSpec>| {
+        let mut best = f64::MAX;
+        let mut records = 0u64;
+        let mut peak = 0u64;
+        for _ in 0..3 {
+            let t = Instant::now();
+            let mut eng =
+                Engine::from_dbmart(db.clone()).mine(MiningConfig::default()).screen(race_sc);
+            if let Some(s) = target {
+                eng = eng.target(s.clone());
+            }
+            let out = eng.run().unwrap();
+            best = best.min(t.elapsed().as_secs_f64());
+            records = out.sequences.len() as u64;
+            peak = out.report.peak_logical_bytes;
+        }
+        (best, records, peak)
+    };
+    let (full_secs, full_records, full_peak) = race(None);
+    let (tgt_secs, tgt_records, tgt_peak) = race(Some(&spec));
+    println!(
+        "targeted ({}) vs full: {:.3}s vs {:.3}s ({:.1}x), peak {} vs {} bytes, \
+         {} vs {} records",
+        spec.render(),
+        tgt_secs,
+        full_secs,
+        full_secs / tgt_secs.max(1e-9),
+        tgt_peak,
+        full_peak,
+        tgt_records,
+        full_records
+    );
+    let tbench = Json::obj(vec![
+        ("bench", Json::from("targeted_vs_full".to_string())),
+        ("target", Json::from(spec.render())),
+        ("full_best_secs", Json::from(full_secs)),
+        ("targeted_best_secs", Json::from(tgt_secs)),
+        ("speedup_targeted_over_full", Json::from(full_secs / tgt_secs.max(1e-9))),
+        ("full_peak_logical_bytes", Json::from(full_peak)),
+        ("targeted_peak_logical_bytes", Json::from(tgt_peak)),
+        ("full_records", Json::from(full_records)),
+        ("targeted_records", Json::from(tgt_records)),
+    ]);
+    std::fs::write("BENCH_targeted.json", tbench.to_string_pretty())
+        .expect("write BENCH_targeted.json");
+    println!("wrote BENCH_targeted.json");
 }

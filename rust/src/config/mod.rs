@@ -11,6 +11,7 @@ use crate::engine::{BackendChoice, OutputChoice};
 use crate::json::Json;
 use crate::mining::{MiningConfig, MiningMode};
 use crate::sparsity::SparsityConfig;
+use crate::target::{TargetPos, TargetSpec};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
@@ -68,6 +69,18 @@ pub struct RunConfig {
     pub sparsity_screen: bool,
     /// Minimum number of distinct patients a sequence must occur in.
     pub sparsity_min_patients: u32,
+    // --- targeting ---
+    /// PhenX code *names* the run is targeted to (empty = mine everything).
+    /// Resolved against the cohort's vocabulary when the engine is built;
+    /// unknown names are rejected before mining starts.
+    pub target_codes: Vec<String>,
+    /// Which end of a mined pair a target code must occupy:
+    /// `first`, `second` or `either`.
+    pub target_pos: String,
+    /// Inclusive lower bound on the encoded duration (`null` = unbounded).
+    pub target_dur_min: Option<u32>,
+    /// Inclusive upper bound on the encoded duration (`null` = unbounded).
+    pub target_dur_max: Option<u32>,
     // --- partitioning ---
     /// Cap on elements per chunk (paper: R's 2^31-1 vector limit).
     pub max_elements_per_chunk: u64,
@@ -94,6 +107,10 @@ impl Default for RunConfig {
             duration_unit_days: 1,
             sparsity_screen: true,
             sparsity_min_patients: 50,
+            target_codes: Vec::new(),
+            target_pos: "either".to_string(),
+            target_dur_min: None,
+            target_dur_max: None,
             max_elements_per_chunk: (1u64 << 31) - 1,
             artifacts_dir: "artifacts".to_string(),
             work_dir: "/tmp/tspm_work".to_string(),
@@ -118,6 +135,19 @@ impl RunConfig {
             ("duration_unit_days", Json::from(self.duration_unit_days as u64)),
             ("sparsity_screen", Json::from(self.sparsity_screen)),
             ("sparsity_min_patients", Json::from(self.sparsity_min_patients as u64)),
+            (
+                "target_codes",
+                Json::Arr(self.target_codes.iter().map(|c| Json::from(c.clone())).collect()),
+            ),
+            ("target_pos", Json::from(self.target_pos.clone())),
+            (
+                "target_dur_min",
+                self.target_dur_min.map_or(Json::Null, |v| Json::from(v as u64)),
+            ),
+            (
+                "target_dur_max",
+                self.target_dur_max.map_or(Json::Null, |v| Json::from(v as u64)),
+            ),
             ("max_elements_per_chunk", Json::from(self.max_elements_per_chunk)),
             ("artifacts_dir", Json::from(self.artifacts_dir.clone())),
             ("work_dir", Json::from(self.work_dir.clone())),
@@ -132,6 +162,7 @@ impl RunConfig {
             "patients", "avg_entries", "vocab_size", "seed", "threads",
             "first_occurrence_only", "mode", "backend", "shards", "output",
             "duration_unit_days", "sparsity_screen", "sparsity_min_patients",
+            "target_codes", "target_pos", "target_dur_min", "target_dur_max",
             "max_elements_per_chunk", "artifacts_dir", "work_dir",
         ];
         for k in obj.keys() {
@@ -190,6 +221,41 @@ impl RunConfig {
             c.work_dir =
                 v.as_str().ok_or_else(|| ConfigError("work_dir must be a string".into()))?.to_string();
         }
+        if let Some(v) = j.get("target_codes") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| ConfigError("target_codes must be an array of strings".into()))?;
+            c.target_codes = arr
+                .iter()
+                .map(|e| {
+                    e.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| ConfigError("target_codes must be an array of strings".into()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        if let Some(v) = j.get("target_pos") {
+            c.target_pos =
+                v.as_str().ok_or_else(|| ConfigError("target_pos must be a string".into()))?.to_string();
+        }
+        if let Some(v) = j.get("target_dur_min") {
+            if !matches!(v, Json::Null) {
+                c.target_dur_min = Some(
+                    v.as_u64()
+                        .ok_or_else(|| ConfigError("target_dur_min must be a non-negative integer".into()))?
+                        as u32,
+                );
+            }
+        }
+        if let Some(v) = j.get("target_dur_max") {
+            if !matches!(v, Json::Null) {
+                c.target_dur_max = Some(
+                    v.as_u64()
+                        .ok_or_else(|| ConfigError("target_dur_max must be a non-negative integer".into()))?
+                        as u32,
+                );
+            }
+        }
         c.validate()?;
         Ok(c)
     }
@@ -244,6 +310,19 @@ impl RunConfig {
                 self.shards
             )));
         }
+        if let Err(e) = self.target_pos.parse::<TargetPos>() {
+            return Err(ConfigError(e));
+        }
+        if let (Some(lo), Some(hi)) = (self.target_dur_min, self.target_dur_max) {
+            if lo > hi {
+                return Err(ConfigError(format!(
+                    "target duration band is inverted: min {lo} > max {hi}"
+                )));
+            }
+        }
+        if self.target_codes.iter().any(|c| c.is_empty()) {
+            return Err(ConfigError("target_codes entries must be non-empty names".into()));
+        }
         Ok(())
     }
 
@@ -290,6 +369,38 @@ impl RunConfig {
     /// names are an error, mirroring [`RunConfig::backend_choice`].
     pub fn output_choice(&self) -> Result<OutputChoice, ConfigError> {
         self.output.parse::<OutputChoice>().map_err(ConfigError)
+    }
+
+    /// Build the [`TargetSpec`] this config describes, resolving code
+    /// *names* to encoded phenX ids via `resolve` (usually
+    /// `|name| db.lookup.phenx_id(name)`). Returns `Ok(None)` when the
+    /// config requests no targeting at all; unknown names error with the
+    /// offending name, not a bare id.
+    pub fn target_spec_with(
+        &self,
+        resolve: impl Fn(&str) -> Option<u32>,
+    ) -> Result<Option<TargetSpec>, String> {
+        let pos: TargetPos = self.target_pos.parse()?;
+        if self.target_codes.is_empty()
+            && self.target_dur_min.is_none()
+            && self.target_dur_max.is_none()
+        {
+            return Ok(None);
+        }
+        let mut spec = if self.target_codes.is_empty() {
+            TargetSpec::all()
+        } else {
+            let mut ids = Vec::with_capacity(self.target_codes.len());
+            for name in &self.target_codes {
+                ids.push(resolve(name).ok_or_else(|| {
+                    format!("target code {name:?} is not in the cohort's vocabulary")
+                })?);
+            }
+            TargetSpec::for_codes(ids)
+        };
+        spec = spec.with_pos(pos).with_duration_band(self.target_dur_min, self.target_dur_max);
+        spec.validate()?;
+        Ok(Some(spec))
     }
 }
 
@@ -422,6 +533,51 @@ mod tests {
         let c = RunConfig::from_json(&j).unwrap();
         assert_eq!(c.patients, 7);
         assert_eq!(c.vocab_size, RunConfig::default().vocab_size);
+    }
+
+    #[test]
+    fn target_fields_roundtrip_and_validate() {
+        let mut c = RunConfig::default();
+        c.target_codes = vec!["C9".into(), "C3".into()];
+        c.target_pos = "first".into();
+        c.target_dur_max = Some(90);
+        c.validate().unwrap();
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+
+        // Old configs without the keys still load (targeting defaults off).
+        let j = Json::parse(r#"{"patients": 7}"#).unwrap();
+        let old = RunConfig::from_json(&j).unwrap();
+        assert!(old.target_codes.is_empty());
+        assert!(old.target_spec_with(|_| None).unwrap().is_none());
+
+        // Inverted band and bad position are rejected at validate time.
+        let j = Json::parse(r#"{"target_dur_min": 10, "target_dur_max": 2}"#).unwrap();
+        assert!(RunConfig::from_json(&j).unwrap_err().0.contains("inverted"));
+        let j = Json::parse(r#"{"target_pos": "sideways"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn target_spec_resolution_names_the_unknown_code() {
+        let mut c = RunConfig::default();
+        c.target_codes = vec!["flu".into(), "ghost".into()];
+        let resolve = |name: &str| (name == "flu").then_some(7u32);
+        let err = c.target_spec_with(resolve).unwrap_err();
+        assert!(err.contains("ghost"), "got {err}");
+
+        c.target_codes = vec!["flu".into(), "flu".into()];
+        c.target_pos = "second".into();
+        let spec = c.target_spec_with(resolve).unwrap().unwrap();
+        assert_eq!(spec, TargetSpec::for_codes([7]).with_pos(TargetPos::Second));
+
+        // A duration band alone still builds a (codeless) spec.
+        c.target_codes.clear();
+        c.target_pos = "either".into();
+        c.target_dur_max = Some(30);
+        let spec = c.target_spec_with(|_| None).unwrap().unwrap();
+        assert!(spec.codes().is_none());
+        assert!(!spec.is_all());
     }
 
     #[test]

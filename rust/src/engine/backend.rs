@@ -60,7 +60,7 @@
 use super::error::TspmError;
 use crate::dbmart::NumericDbMart;
 use crate::metrics::MemTracker;
-use crate::mining::{self, MiningConfig, MiningMode, SeqRecord, SequenceSet};
+use crate::mining::{self, MineContext, MiningConfig, MiningMode, SeqRecord, SequenceSet};
 use crate::partition;
 use crate::pipeline::{self, PipelineConfig};
 use crate::seqstore::SeqFileSet;
@@ -190,7 +190,11 @@ pub struct MiningForecast {
 /// Predict the mining output without mining. Matches
 /// [`crate::partition::plan`]'s per-patient prediction exactly, so the
 /// forecast is never an underestimate (and is exact when self-pairs are
-/// included, an upper bound otherwise).
+/// included, an upper bound otherwise). The forecast deliberately
+/// ignores any [`crate::target::TargetSpec`]: targeted runs emit a
+/// subset of the full multiset, so the untargeted figure stays a valid
+/// upper bound for backend/residency selection (predicting targeted
+/// selectivity would require mining).
 pub fn forecast(db: &NumericDbMart, cfg: &MiningConfig) -> MiningForecast {
     let n_patients = db.num_patients();
     if n_patients == 0 {
@@ -307,11 +311,12 @@ pub fn resolve_output(
 pub fn execute_spilled(
     kind: BackendKind,
     db: &NumericDbMart,
-    cfg: &MiningConfig,
+    ctx: MineContext<'_>,
     chunk_cap: u64,
     mine_dir: &Path,
     tracker: &MemTracker,
 ) -> Result<SeqFileSet, TspmError> {
+    let cfg = ctx.cfg;
     match kind {
         BackendKind::FileBacked => {
             let cfg = MiningConfig {
@@ -319,7 +324,11 @@ pub fn execute_spilled(
                 work_dir: mine_dir.to_path_buf(),
                 ..cfg.clone()
             };
-            Ok(mining::mine_sequences_to_files_tracked(db, &cfg, Some(tracker))?)
+            Ok(mining::mine_sequences_to_files_with(
+                db,
+                MineContext::with_target(&cfg, ctx.target),
+                Some(tracker),
+            )?)
         }
         BackendKind::Streaming => {
             let pipe_cfg = PipelineConfig {
@@ -328,6 +337,7 @@ pub fn execute_spilled(
                 screen: None,
                 shards: cfg.worker_threads(),
                 spill_dir: Some(mine_dir.to_path_buf()),
+                target: ctx.target.cloned(),
                 ..Default::default()
             };
             match pipeline::run(db, &pipe_cfg)?.sequences {
@@ -338,7 +348,7 @@ pub fn execute_spilled(
             }
         }
         BackendKind::InMemory | BackendKind::Sharded => {
-            let set = execute(kind, db, cfg, chunk_cap, tracker)?;
+            let set = execute(kind, db, ctx, chunk_cap, tracker)?;
             std::fs::create_dir_all(mine_dir)?;
             let path = mine_dir.join("mined_0000.tspm");
             crate::seqstore::write_file(&path, &set.records)?;
@@ -360,20 +370,25 @@ pub fn execute_spilled(
 pub fn execute(
     kind: BackendKind,
     db: &NumericDbMart,
-    cfg: &MiningConfig,
+    ctx: MineContext<'_>,
     chunk_cap: u64,
     tracker: &MemTracker,
 ) -> Result<SequenceSet, TspmError> {
+    let cfg = ctx.cfg;
     match kind {
         BackendKind::InMemory => {
-            Ok(mining::mine_sequences_tracked(db, cfg, Some(tracker))?)
+            Ok(mining::mine_sequences_with(db, ctx, Some(tracker))?)
         }
         BackendKind::Sharded => {
-            Ok(mining::mine_sequences_sharded_tracked(db, cfg, Some(tracker))?)
+            Ok(mining::mine_sequences_sharded_with(db, ctx, Some(tracker))?)
         }
         BackendKind::FileBacked => {
             let cfg = MiningConfig { mode: MiningMode::FileBased, ..cfg.clone() };
-            let files = mining::mine_sequences_to_files_tracked(db, &cfg, Some(tracker))?;
+            let files = mining::mine_sequences_to_files_with(
+                db,
+                MineContext::with_target(&cfg, ctx.target),
+                Some(tracker),
+            )?;
             // Collection materialises the full set (the engine contract
             // returns an in-memory SequenceSet); the backend's memory win
             // is confined to the mining phase above. See the module docs
@@ -400,6 +415,7 @@ pub fn execute(
                 // worker count; the pipeline's own auto (0) would use the
                 // machine default and ignore an explicit `threads`.
                 shards: cfg.worker_threads(),
+                target: ctx.target.cloned(),
                 ..Default::default()
             };
             match pipeline::run(db, &pipe_cfg)?.sequences {

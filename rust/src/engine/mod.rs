@@ -49,6 +49,14 @@
 //! memory budget far below the record multiset, with CSR output
 //! bit-identical to the in-memory path.
 //!
+//! Runs can also be **targeted**: [`Engine::target`] pushes a
+//! [`TargetSpec`] predicate (endpoint codes, duration band) down into
+//! every backend's mining inner loop and the screens, producing — at a
+//! fraction of the cost — output byte-identical to mining everything
+//! and filtering afterwards. An `.index(dir)`/`.ingest(dir)` sink
+//! records the spec in its manifest so artifacts answer "what was this
+//! index targeted to".
+//!
 //! The original free functions remain available as the "expert layer"
 //! (see the crate docs); the façade is the supported composition seam —
 //! future scaling work (async backends, caching, sharded serving) plugs
@@ -65,13 +73,14 @@ pub use backend::{
 };
 pub use error::TspmError;
 pub use plan::{Plan, Stage};
+pub use crate::target::{TargetPos, TargetSpec};
 
 use crate::config::RunConfig;
 use crate::dbmart::{DbMart, NumericDbMart};
 use crate::ingest::SegmentSet;
 use crate::matrix::SeqMatrix;
 use crate::metrics::{fmt_bytes, fmt_duration, MemTracker};
-use crate::mining::{MiningConfig, SeqRecord, SequenceSet};
+use crate::mining::{MineContext, MiningConfig, SeqRecord, SequenceSet};
 use crate::msmr::{self, MsmrConfig, Selection};
 use crate::obs::{self, names, Span, Tracer};
 use crate::partition;
@@ -297,6 +306,7 @@ pub struct Engine {
     out_dir: Option<PathBuf>,
     labels: Option<Vec<f32>>,
     tracer: Option<Tracer>,
+    target: Option<TargetSpec>,
 }
 
 impl Engine {
@@ -311,6 +321,7 @@ impl Engine {
             out_dir: None,
             labels: None,
             tracer: None,
+            target: None,
         }
     }
 
@@ -327,6 +338,13 @@ impl Engine {
     /// `max_elements_per_chunk`.
     pub fn from_config(db: NumericDbMart, cfg: &RunConfig) -> Result<Engine, TspmError> {
         cfg.validate()?;
+        // Target codes in a RunConfig are *names*; resolve them through
+        // the cohort's interning table before the db moves into the
+        // builder. Unknown names fail here, with the name in the error —
+        // the numeric vocab check in plan() could only report an id.
+        let target = cfg
+            .target_spec_with(|name| db.lookup.phenx_id(name))
+            .map_err(TspmError::Plan)?;
         // No explicit out_dir: run_with already derives
         // `<work_dir>/engine_out` from the mining config's work_dir,
         // which from_config sets from cfg.work_dir.
@@ -338,6 +356,9 @@ impl Engine {
                     .saturating_mul(std::mem::size_of::<SeqRecord>() as u64),
             )
             .mine(cfg.mining_config());
+        if let Some(spec) = target {
+            engine = engine.target(spec);
+        }
         if let Some(sc) = cfg.sparsity_config() {
             engine = engine.screen(sc);
         }
@@ -427,6 +448,20 @@ impl Engine {
 
     // --- execution knobs ---------------------------------------------------
 
+    /// Restrict the mine to sequences matching `spec` ([`TargetSpec`]):
+    /// endpoint-code membership and/or a duration band. The predicate is
+    /// **pushed down** into every backend's per-patient inner loop —
+    /// non-matching pairs are skipped before duration encoding — and the
+    /// screen then counts support within the targeted multiset, so the
+    /// run costs O(matching pairs), not O(all pairs). Output is
+    /// byte-identical to mining everything and filtering afterwards
+    /// (`rust/tests/conformance.rs` proves it per backend);
+    /// [`TargetSpec::all`] is byte-identical to not calling this at all.
+    pub fn target(mut self, spec: TargetSpec) -> Engine {
+        self.target = Some(spec);
+        self
+    }
+
     /// Per-patient phenotype labels (`labels[pid] ∈ {0,1}`) for MSMR.
     pub fn labels(mut self, labels: Vec<f32>) -> Engine {
         self.labels = Some(labels);
@@ -482,8 +517,15 @@ impl Engine {
             memory_budget_bytes: self.memory_budget_bytes,
             output: self.output,
             out_dir: self.out_dir.clone(),
+            target: self.target.clone(),
         };
         plan.validate()?;
+        // The structural spec checks ran inside plan.validate (via
+        // MineContext); only the engine knows the cohort, so the vocab
+        // membership check lives here.
+        if let Some(t) = &self.target {
+            t.validate_vocab(self.db.num_phenx() as u32).map_err(TspmError::Plan)?;
+        }
         if plan.wants_msmr() {
             match &self.labels {
                 None => {
@@ -561,10 +603,20 @@ impl Engine {
         // ambient-context guard lets instrumented callees (cache, block
         // reads) link their spans into this trace without new
         // parameters.
+        // The validated target travels as part of the MineContext: the
+        // backends push it into the per-patient inner loop, the screens
+        // re-apply it (a proven no-op on an already-targeted stream),
+        // and the index manifest records it.
+        let target = plan.target.as_ref().filter(|t| !t.is_all());
+        let mine_ctx = MineContext::with_target(&mining_cfg, plan.target.as_ref());
+
         let mut run_span = tracer.span("engine.run");
         run_span.attr("backend", kind.to_string());
         run_span.attr("output", out_kind.to_string());
         run_span.attr("forecast_sequences", fc.total_sequences);
+        if let Some(t) = target {
+            run_span.attr("target", t.render());
+        }
         let ctx = obs::trace::push_current(&run_span);
 
         // 1. Mine, on the resolved backend, into the resolved residency.
@@ -574,7 +626,7 @@ impl Engine {
                     OutputKind::InMemory => Ok(SequenceOutput::InMemory(backend::execute(
                         kind,
                         &db,
-                        &mining_cfg,
+                        mine_ctx,
                         chunk_cap,
                         &tracker,
                     )?)),
@@ -582,7 +634,7 @@ impl Engine {
                         Ok(SequenceOutput::Spilled(backend::execute_spilled(
                             kind,
                             &db,
-                            &mining_cfg,
+                            mine_ctx,
                             chunk_cap,
                             &mine_dir,
                             &tracker,
@@ -607,7 +659,7 @@ impl Engine {
                 observed_stage(&run_span, "engine.screen", &tracker, || -> Result<ScreenStats, TspmError> {
                     match &mut output {
                         SequenceOutput::InMemory(set) => {
-                            Ok(sparsity::screen(&mut set.records, &sc))
+                            Ok(sparsity::screen_with(&mut set.records, &sc, target))
                         }
                         SequenceOutput::Spilled(files) => {
                             let spill_cfg = sparsity::SpillScreenConfig {
@@ -616,8 +668,12 @@ impl Engine {
                                 buffer_bytes: screen_buffer_bytes(budget),
                                 out_dir: out_dir.clone(),
                             };
-                            let (survivors, stats) =
-                                sparsity::screen_spilled(files, &spill_cfg, Some(&tracker))?;
+                            let (survivors, stats) = sparsity::screen_spilled_with(
+                                files,
+                                &spill_cfg,
+                                target,
+                                Some(&tracker),
+                            )?;
                             // The mined intermediates are consumed; the
                             // survivor file is the durable result.
                             let _ = files.remove();
@@ -652,7 +708,11 @@ impl Engine {
                     Ok(query::index::build(
                         &files,
                         &dir,
-                        &query::IndexConfig { block_records, ..Default::default() },
+                        &query::IndexConfig {
+                            block_records,
+                            target: target.cloned(),
+                            ..Default::default()
+                        },
                         Some(&tracker),
                     )?)
                 });
@@ -681,7 +741,11 @@ impl Engine {
                     let mut set = SegmentSet::open_or_init(&set_dir)?;
                     Ok(set.add_segment(
                         &files,
-                        &query::IndexConfig { block_records, ..Default::default() },
+                        &query::IndexConfig {
+                            block_records,
+                            target: target.cloned(),
+                            ..Default::default()
+                        },
                         Some(&tracker),
                     )?)
                 });
@@ -1139,6 +1203,120 @@ mod tests {
             spilled.selection.as_ref().unwrap().columns,
             golden.selection.as_ref().unwrap().columns
         );
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    /// The engine-level pushdown contract: a targeted run equals the
+    /// full run filtered by the spec and re-screened — same records,
+    /// same stats — on every backend, resident or spilled.
+    #[test]
+    fn targeted_run_matches_filtered_full_run_on_every_backend() {
+        let db = small_db();
+        let sc = SparsityConfig { min_patients: 3, threads: 2 };
+        let spec = TargetSpec::for_codes([0, 2, 5]).with_duration_band(Some(1), None);
+        let base = std::env::temp_dir().join("tspm_engine_targeted");
+        let _ = std::fs::remove_dir_all(&base);
+
+        // Reference: full mine → filter by the spec → screen.
+        let full = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .backend(BackendChoice::InMemory)
+            .run()
+            .unwrap();
+        let mut expect: Vec<SeqRecord> = full
+            .sequences
+            .materialize()
+            .unwrap()
+            .records
+            .into_iter()
+            .filter(|r| spec.matches_record(r))
+            .collect();
+        let expect_stats = sparsity::screen(&mut expect, &sc);
+        let expect = sorted(expect);
+        assert!(expect_stats.records_after > 0, "spec must keep something to compare");
+
+        for (i, choice) in [
+            BackendChoice::InMemory,
+            BackendChoice::Sharded,
+            BackendChoice::FileBacked,
+            BackendChoice::Streaming,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let out = Engine::from_dbmart(db.clone())
+                .mine(MiningConfig {
+                    work_dir: base.join(format!("b{i}")),
+                    ..Default::default()
+                })
+                .screen(sc)
+                .target(spec.clone())
+                .backend(choice)
+                .memory_budget(50_000 * 16)
+                .run()
+                .unwrap();
+            assert_eq!(
+                sorted(out.sequences.clone().materialize().unwrap().records),
+                expect,
+                "backend {} ({} output) diverged from filter-then-screen",
+                out.report.backend,
+                out.report.output
+            );
+            assert_eq!(out.screen_stats.unwrap(), expect_stats, "backend {choice:?}");
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn target_outside_the_vocabulary_is_rejected_at_plan_time() {
+        let db = small_db();
+        let vocab = db.num_phenx() as u32;
+        let err = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .target(TargetSpec::for_codes([vocab + 3]))
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("outside the encoded vocabulary"), "got {err}");
+        // Structurally invalid specs fail through the same gate as every
+        // other stage (MineContext in Plan::validate).
+        let err = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .target(TargetSpec::for_codes(std::iter::empty::<u32>()))
+            .plan()
+            .unwrap_err();
+        assert!(err.to_string().contains("empty code set"), "got {err}");
+        // A valid in-vocab spec — and the all() spec — both pass.
+        assert!(Engine::from_dbmart(db.clone())
+            .mine(MiningConfig::default())
+            .target(TargetSpec::for_codes([0]))
+            .plan()
+            .is_ok());
+        assert!(Engine::from_dbmart(db)
+            .mine(MiningConfig::default())
+            .target(TargetSpec::all())
+            .plan()
+            .is_ok());
+    }
+
+    /// A targeted `.index(dir)` run stamps the spec into the artifact's
+    /// manifest, and reopening the index surfaces it.
+    #[test]
+    fn targeted_index_records_the_spec_in_the_manifest() {
+        let db = small_db();
+        let base = std::env::temp_dir().join("tspm_engine_targeted_index");
+        let _ = std::fs::remove_dir_all(&base);
+        let spec = TargetSpec::for_codes([1, 3]);
+        let out = Engine::from_dbmart(db)
+            .mine(MiningConfig { work_dir: base.join("work"), ..Default::default() })
+            .screen(SparsityConfig { min_patients: 2, threads: 1 })
+            .target(spec.clone())
+            .out_dir(base.join("run"))
+            .index(base.join("idx"))
+            .run()
+            .unwrap();
+        assert_eq!(out.index.as_ref().unwrap().target.as_ref(), Some(&spec));
+        let reopened = SeqIndex::open(&base.join("idx")).unwrap();
+        assert_eq!(reopened.target.as_ref(), Some(&spec));
         let _ = std::fs::remove_dir_all(&base);
     }
 

@@ -22,9 +22,10 @@
 
 use super::backend::{BackendChoice, OutputChoice};
 use super::error::TspmError;
-use crate::mining::MiningConfig;
+use crate::mining::{MineContext, MiningConfig};
 use crate::msmr::MsmrConfig;
 use crate::sparsity::SparsityConfig;
+use crate::target::TargetSpec;
 use std::path::PathBuf;
 
 /// One pipeline stage, with its full configuration captured at build
@@ -108,6 +109,11 @@ pub struct Plan {
     /// Destination for spilled results (`None` = under the mining
     /// `work_dir`).
     pub out_dir: Option<PathBuf>,
+    /// The targeting predicate pushed into the mining inner loop and the
+    /// screens ([`crate::target`]). `None` (or an
+    /// [`TargetSpec::is_all`] spec) mines the full multiset — bytes
+    /// identical to plans predating this field.
+    pub target: Option<TargetSpec>,
 }
 
 impl Plan {
@@ -257,16 +263,14 @@ impl Plan {
         }
         for stage in &self.stages {
             match stage {
-                Stage::Mine(cfg) if cfg.duration_unit_days == 0 => {
-                    return Err(TspmError::Plan("mine: duration_unit_days must be ≥ 1".into()));
-                }
-                Stage::Mine(cfg) if cfg.shards > crate::mining::MAX_SHARDS => {
-                    return Err(TspmError::Plan(format!(
-                        "mine: shards must be ≤ {} (got {}); 0 selects the default \
-                         layout",
-                        crate::mining::MAX_SHARDS,
-                        cfg.shards
-                    )));
+                // The one copy of mine-stage semantics: config checks
+                // (duration unit, shard cap) and the target's structural
+                // checks all live in MineContext::validate — the plan
+                // layer no longer re-validates overlapping fields.
+                Stage::Mine(cfg) => {
+                    MineContext::with_target(cfg, self.target.as_ref())
+                        .validate()
+                        .map_err(|e| TspmError::Plan(format!("mine: {e}")))?;
                 }
                 Stage::Screen(cfg) if cfg.min_patients == 0 => {
                     return Err(TspmError::Plan(
@@ -401,6 +405,7 @@ mod tests {
             memory_budget_bytes: None,
             output: OutputChoice::Auto,
             out_dir: None,
+            target: None,
         }
     }
 
@@ -710,6 +715,32 @@ mod tests {
         assert!(!p.spill_capable());
         p.output = OutputChoice::Spilled;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn target_is_validated_like_other_stages() {
+        use crate::target::TargetSpec;
+        let mine = || vec![Stage::Mine(MiningConfig::default())];
+        // Valid specs (including all()) pass.
+        for spec in [
+            TargetSpec::all(),
+            TargetSpec::for_codes([3, 1]),
+            TargetSpec::all().with_duration_band(Some(1), Some(9)),
+        ] {
+            let mut p = plan_of(mine());
+            p.target = Some(spec);
+            p.validate().unwrap();
+        }
+        // Empty code set and inverted band are plan errors, reported
+        // before any work starts.
+        let mut p = plan_of(mine());
+        p.target = Some(TargetSpec::for_codes([]));
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("empty code set"), "got {err}");
+        let mut p = plan_of(mine());
+        p.target = Some(TargetSpec::all().with_duration_band(Some(7), Some(2)));
+        let err = p.validate().unwrap_err();
+        assert!(err.to_string().contains("inverted"), "got {err}");
     }
 
     #[test]

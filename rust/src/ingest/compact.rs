@@ -127,6 +127,17 @@ fn compact_impl(
     let expected: u64 = segments.iter().map(|s| s.total_records).sum();
     let num_patients = segments.iter().map(|s| s.num_patients).max().unwrap_or(0);
     let num_phenx = segments.iter().map(|s| s.num_phenx).max().unwrap_or(0);
+    // A target spec survives compaction only when every segment agrees on
+    // it — a mixed set's union is *not* the output of any single targeted
+    // run, so the folded artifact would lie about its own provenance.
+    let unanimous_target = {
+        let first = segments[0].target.clone();
+        if segments.iter().all(|s| s.target == first) {
+            first
+        } else {
+            None
+        }
+    };
 
     // One buffer slot per input cursor plus one for the output writer.
     let slot = (cfg.buffer_bytes / (segments.len() + 1)).max(RECORD_BYTES);
@@ -143,6 +154,7 @@ fn compact_impl(
     let mut tables = TableAccum::new(cfg.block_records);
     let mut data_fnv = FNV1A64_INIT;
     let mut merged = 0u64;
+    let mut pass_span = crate::obs::trace::current_span("ingest.compact_merge_pass");
     merge_sorted_runs_by(&data_paths, per_run, spill_key, |r| {
         if let Some(limit) = cfg.fail_after_records {
             if merged >= limit {
@@ -159,6 +171,12 @@ fn compact_impl(
         Ok(())
     })?;
     let written = writer.finish()?;
+    if let Some(s) = pass_span.as_mut() {
+        s.attr("pass", "data");
+        s.attr("runs_merged", data_paths.len() as u64);
+        s.attr("bytes_merged", written * RECORD_BYTES as u64);
+    }
+    drop(pass_span);
     if written != expected {
         return Err(QueryError::Artifact(format!(
             "compaction merged {written} records, segment manifests promise {expected}"
@@ -175,6 +193,7 @@ fn compact_impl(
     let mut pwriter = SeqWriter::create_with_capacity(&tmp.join(PDATA_FILE), slot)?;
     let mut pdata_fnv = FNV1A64_INIT;
     let mut pid_err = false;
+    let mut pass_span = crate::obs::trace::current_span("ingest.compact_merge_pass");
     merge_sorted_runs_by(
         &pdata_paths,
         per_run,
@@ -203,6 +222,12 @@ fn compact_impl(
         }
     })?;
     let pwritten = pwriter.finish()?;
+    if let Some(s) = pass_span.as_mut() {
+        s.attr("pass", "pdata");
+        s.attr("runs_merged", pdata_paths.len() as u64);
+        s.attr("bytes_merged", pwritten * RECORD_BYTES as u64);
+    }
+    drop(pass_span);
     if pwritten != expected {
         return Err(QueryError::Artifact(format!(
             "pid-major merge produced {pwritten} records, data merge produced {expected} \
@@ -227,6 +252,7 @@ fn compact_impl(
         blocks,
         seqs,
         pid_table,
+        unanimous_target.as_ref(),
         tracker,
     )?;
     if let Some(t) = tracker {
@@ -250,4 +276,114 @@ fn compact_impl(
         let _ = std::fs::remove_dir_all(set.dir().join(name));
     }
     SeqIndex::open(&final_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::index::IndexConfig;
+    use crate::seqstore::SeqFileSet;
+    use crate::target::TargetSpec;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tspm_compact_{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fileset(dir: &Path, records: &[SeqRecord]) -> SeqFileSet {
+        let path = dir.join("run.tspm");
+        seqstore::write_file(&path, records).unwrap();
+        SeqFileSet {
+            files: vec![path],
+            total_records: records.len() as u64,
+            num_patients: 8,
+            num_phenx: 4,
+        }
+    }
+
+    fn recs(pids: std::ops::Range<u32>) -> Vec<SeqRecord> {
+        pids.map(|p| SeqRecord { seq: 10001, pid: p, duration: p }).collect()
+    }
+
+    #[test]
+    fn compact_emits_merge_pass_spans_and_keeps_a_unanimous_target() {
+        use crate::obs::trace::{
+            push_current, Clock, ManualClock, MemorySink, TraceSink, Tracer,
+        };
+        use std::sync::Arc;
+
+        let dir = tmpdir("spans");
+        let mut set = SegmentSet::open_or_init(&dir).unwrap();
+        let spec = TargetSpec::for_codes([1, 3]);
+        let cfg = IndexConfig { target: Some(spec.clone()), ..Default::default() };
+        let in1 = tmpdir("spans_in1");
+        let in2 = tmpdir("spans_in2");
+        set.add_segment(&fileset(&in1, &recs(0..4)), &cfg, None).unwrap();
+        set.add_segment(&fileset(&in2, &recs(4..8)), &cfg, None).unwrap();
+
+        let sink = Arc::new(MemorySink::new());
+        let clock = Arc::new(ManualClock::new());
+        let tracer = Tracer::with_sinks(
+            Some(sink.clone() as Arc<dyn TraceSink>),
+            Arc::new(MemorySink::new()),
+            clock.clone() as Arc<dyn Clock>,
+        );
+        let root = tracer.span("compact");
+        let guard = push_current(&root);
+        let folded = compact(&mut set, &CompactConfig::default(), None).unwrap();
+        drop(guard);
+        root.finish();
+
+        assert_eq!(folded.target.as_ref(), Some(&spec), "unanimous target survives the fold");
+
+        let passes: Vec<crate::json::Json> = sink
+            .lines()
+            .iter()
+            .map(|l| crate::json::Json::parse(l).unwrap())
+            .filter(|v| {
+                v.get("name").and_then(crate::json::Json::as_str)
+                    == Some("ingest.compact_merge_pass")
+            })
+            .collect();
+        assert_eq!(passes.len(), 2, "one data pass + one pdata pass");
+        let total_bytes = 8 * RECORD_BYTES as u64;
+        for p in &passes {
+            let attrs = p.get("attrs").expect("merge pass spans carry attrs");
+            assert_eq!(
+                attrs.get("runs_merged").and_then(crate::json::Json::as_u64),
+                Some(2),
+                "both segments feed each merge pass"
+            );
+            assert_eq!(
+                attrs.get("bytes_merged").and_then(crate::json::Json::as_u64),
+                Some(total_bytes),
+                "each pass streams the whole union once"
+            );
+        }
+        let pass_kinds: Vec<&str> = passes
+            .iter()
+            .map(|p| p.get("attrs").unwrap().get("pass").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(pass_kinds, ["data", "pdata"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_targets_fold_to_an_untargeted_artifact() {
+        let dir = tmpdir("mixed");
+        let mut set = SegmentSet::open_or_init(&dir).unwrap();
+        let in1 = tmpdir("mixed_in1");
+        let in2 = tmpdir("mixed_in2");
+        let targeted =
+            IndexConfig { target: Some(TargetSpec::for_codes([1])), ..Default::default() };
+        set.add_segment(&fileset(&in1, &recs(0..4)), &targeted, None).unwrap();
+        set.add_segment(&fileset(&in2, &recs(4..8)), &IndexConfig::default(), None).unwrap();
+        let folded = compact(&mut set, &CompactConfig::default(), None).unwrap();
+        assert!(folded.target.is_none(), "disagreeing segments must not claim a target");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

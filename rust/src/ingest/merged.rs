@@ -265,7 +265,21 @@ impl QuerySurface for MergedView {
         if self.segments.is_empty() {
             version = INDEX_FORMAT_VERSION;
         }
-        SurfaceInfo { records, sequences: seqs.len() as u64, patients, version }
+        // A merged view reports a target only when every segment was
+        // mined under the *same* spec — a mixed set's union is not the
+        // output of any single targeted run (same rule as `compact`).
+        let target = match self.segments.first() {
+            Some(first) => {
+                let spec = first.index().target.clone();
+                if self.segments.iter().all(|s| s.index().target == spec) {
+                    spec.map(|t| t.render())
+                } else {
+                    None
+                }
+            }
+            None => None,
+        };
+        SurfaceInfo { records, sequences: seqs.len() as u64, patients, version, target }
     }
 }
 
@@ -299,7 +313,7 @@ mod tests {
         let idx = build(
             &input,
             &dir.join("idx"),
-            &IndexConfig { block_records: 3, pid_index: true },
+            &IndexConfig { block_records: 3, ..Default::default() },
             None,
         )
         .unwrap();

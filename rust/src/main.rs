@@ -213,8 +213,44 @@ fn load_numeric(input: &str) -> Result<NumericDbMart, String> {
     NumericDbMart::try_encode(&raw).map_err(|e| e.to_string())
 }
 
+/// The four `--target-*` options shared by `mine` and `ingest`.
+fn target_opt_specs() -> [OptSpec; 4] {
+    [
+        OptSpec::value(
+            "target-code",
+            None,
+            "mine only pairs touching this code name (repeatable)",
+        ),
+        OptSpec::value(
+            "target-pos",
+            Some("either"),
+            "which end a target code must occupy: first|second|either",
+        ),
+        OptSpec::value("target-dur-min", None, "inclusive min duration (encoded units)"),
+        OptSpec::value("target-dur-max", None, "inclusive max duration (encoded units)"),
+    ]
+}
+
+/// Build the [`tspm_plus::target::TargetSpec`] the `--target-*` flags
+/// describe, resolving code names against `db`'s vocabulary. Funnels
+/// through [`RunConfig::target_spec_with`] so the CLI, config files and
+/// the engine validate targeting through one path.
+fn target_from_args(
+    a: &Args,
+    db: &NumericDbMart,
+) -> Result<Option<tspm_plus::target::TargetSpec>, String> {
+    let mut cfg = RunConfig::default();
+    cfg.target_codes = a.get_all("target-code").into_iter().map(str::to_string).collect();
+    if let Some(p) = a.get("target-pos") {
+        cfg.target_pos = p.to_string();
+    }
+    cfg.target_dur_min = a.get_parsed("target-dur-min").map_err(|e| e.to_string())?;
+    cfg.target_dur_max = a.get_parsed("target-dur-max").map_err(|e| e.to_string())?;
+    cfg.target_spec_with(|name| db.lookup.phenx_id(name))
+}
+
 fn cmd_mine(argv: &[String]) -> Result<(), String> {
-    let spec = [
+    let mut spec = vec![
         OptSpec::required("input", "dbmart CSV path"),
         OptSpec::value("out", Some("sequences.tspm"), "output sequence file"),
         OptSpec::value("lookup-out", Some("lookup.json"), "lookup-table JSON output"),
@@ -240,6 +276,7 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
         OptSpec::flag("first-occurrence", "keep only first occurrence of each phenX"),
         OptSpec::flag("explain", "print a Fig.2-style decomposition of sample sequences"),
     ];
+    spec.extend(target_opt_specs());
     if wants_help(argv) {
         print!("{}", usage("tspm mine", "mine transitive sequences", &spec));
         return Ok(());
@@ -290,10 +327,14 @@ fn cmd_mine(argv: &[String]) -> Result<(), String> {
     // the CLI keeps its historical single-file behaviour by pinning the
     // in-memory output.
     let out_dir = a.get("out-dir").map(PathBuf::from);
+    let target = target_from_args(&a, &db)?;
     let mut engine = Engine::from_dbmart(db)
         .backend(backend)
         .memory_budget(budget_bytes)
         .mine(mining_cfg);
+    if let Some(spec) = target {
+        engine = engine.target(spec);
+    }
     engine = match &out_dir {
         Some(dir) => engine.output(OutputChoice::Spilled).out_dir(dir.clone()),
         None => engine.output(OutputChoice::InMemory),
@@ -465,7 +506,11 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
     }
     // Verification is fused into the build's streaming pass
     // (build_verified) so the input is read once, not twice.
-    let cfg = IndexConfig { block_records, pid_index: !a.flag("no-pid-index") };
+    let cfg = IndexConfig {
+        block_records,
+        pid_index: !a.flag("no-pid-index"),
+        ..Default::default()
+    };
     let built = timer
         .run("build", || {
             if a.flag("no-verify") {
@@ -502,7 +547,7 @@ fn cmd_index(argv: &[String]) -> Result<(), String> {
 // ---------------------------------------------------------------------------
 
 fn cmd_ingest(argv: &[String]) -> Result<(), String> {
-    let spec = [
+    let mut spec = vec![
         OptSpec::required("input", "delta dbmart CSV path"),
         OptSpec::required("set-dir", "segment-set directory (created on first ingest)"),
         OptSpec::value("block-size", Some("4096"), "records per index block of the segment"),
@@ -516,6 +561,7 @@ fn cmd_ingest(argv: &[String]) -> Result<(), String> {
         OptSpec::value("duration-unit", Some("1"), "duration unit in days (match the base)"),
         OptSpec::value("memory-budget-mb", Some("4096"), "budget for the mine+screen run"),
     ];
+    spec.extend(target_opt_specs());
     if wants_help(argv) {
         print!(
             "{}",
@@ -563,16 +609,21 @@ fn cmd_ingest(argv: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
 
     let duration_unit: u32 = a.req("duration-unit").map_err(|e| e.to_string())?;
+    let target = target_from_args(&a, &db)?;
     let work = std::env::temp_dir().join(format!("tspm_ingest_{}", std::process::id()));
     let result = timer.run("run", || {
-        Engine::from_dbmart(db)
+        let mut engine = Engine::from_dbmart(db)
             .memory_budget(budget_mb << 20)
             .mine(MiningConfig {
                 threads,
                 duration_unit_days: duration_unit,
                 work_dir: work.join("mine"),
                 ..Default::default()
-            })
+            });
+        if let Some(spec) = target {
+            engine = engine.target(spec);
+        }
+        engine
             .screen(SparsityConfig { min_patients, threads })
             .out_dir(work.join("run"))
             .ingest_with(set_dir.clone(), block_records)
@@ -1236,13 +1287,17 @@ fn run_client_action(
             Json::Arr(
                 arts.iter()
                     .map(|x| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("id", Json::from(x.id.clone())),
                             ("records", Json::from(x.records)),
                             ("sequences", Json::from(x.sequences)),
                             ("patients", Json::from(x.patients as u64)),
                             ("version", Json::from(x.version)),
-                        ])
+                        ];
+                        if let Some(t) = &x.target {
+                            fields.push(("target", Json::from(t.clone())));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),

@@ -19,12 +19,29 @@
 //! The optional *first-occurrence-only* filter reproduces the protocol of
 //! the paper's comparison benchmark (and of the earlier AD study): only
 //! the first occurrence of each phenX per patient enters sequencing.
+//!
+//! ## Targeted mining (predicate pushdown)
+//!
+//! Every mining path accepts a [`MineContext`] carrying an optional
+//! [`TargetSpec`]. The spec's endpoint predicate is evaluated inside the
+//! per-patient inner loop *before* duration encoding, and its duration
+//! band right after the span division — non-matching pairs are never
+//! materialized. **Pushdown safety:** the predicate is per-record and is
+//! checked on exactly the pairs the full mine would enumerate, in the
+//! same order, so the targeted output is the filtered full output record
+//! for record (see [`crate::target`] module docs for the full argument;
+//! `rust/tests/conformance.rs` enforces byte-equality across all four
+//! backends). Pruning happens per pair *after* scheduling decisions:
+//! the shard layout, worker ranges, and merge order depend only on the
+//! cohort and configuration, never on the spec, so the sharded backend's
+//! byte-determinism guarantees are unchanged.
 
 use crate::dbmart::{encode_seq, NumericDbMart, NumericEntry};
 use crate::metrics::MemTracker;
 use crate::par;
 use crate::psort;
 use crate::seqstore::{SeqFileSet, SeqWriter};
+use crate::target::TargetSpec;
 use std::path::PathBuf;
 use crate::sync::OnceLock;
 
@@ -106,13 +123,63 @@ impl MiningConfig {
     /// `duration_unit_days` used to be silently clamped to 1, which gave
     /// programmatic callers different semantics from the validated
     /// [`crate::config::RunConfig`] / [`crate::engine::Plan`] surfaces;
-    /// it is now rejected everywhere.
+    /// it is now rejected everywhere. Likewise `shards > MAX_SHARDS`:
+    /// previously only `Plan::validate` rejected it (mining clamped
+    /// silently) — this is now the one copy of both checks, and the
+    /// plan/config layers delegate here via [`MineContext::validate`].
     pub fn validate(&self) -> Result<(), MiningError> {
         if self.duration_unit_days == 0 {
             return Err(MiningError::InvalidConfig(
                 "duration_unit_days must be ≥ 1 (0 would divide by zero; use 1 for days)"
                     .into(),
             ));
+        }
+        if self.shards > MAX_SHARDS {
+            return Err(MiningError::InvalidConfig(format!(
+                "shards must be ≤ {MAX_SHARDS} (got {}); beyond that each shard is pure \
+                 bookkeeping overhead",
+                self.shards
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The one validated mining context: configuration plus the optional
+/// targeting predicate. Threaded through every backend path
+/// ([`mine_with_scheduler`], [`mine_patient_range`]) so a fifth copy of
+/// config plumbing is never needed when a new dimension lands —
+/// `Plan::validate` and `RunConfig::validate` both delegate to
+/// [`MineContext::validate`] instead of re-validating overlapping fields.
+#[derive(Clone, Copy, Debug)]
+pub struct MineContext<'a> {
+    pub cfg: &'a MiningConfig,
+    /// The pushdown predicate; `None` mines the full multiset.
+    pub target: Option<&'a TargetSpec>,
+}
+
+impl<'a> MineContext<'a> {
+    /// An untargeted context — mines exactly what `cfg` alone would.
+    pub fn new(cfg: &'a MiningConfig) -> MineContext<'a> {
+        MineContext { cfg, target: None }
+    }
+
+    /// A context with an optional target. A spec that constrains nothing
+    /// ([`TargetSpec::is_all`]) is normalized to `None`, so
+    /// `TargetSpec::all()` takes the byte-identical untargeted path.
+    pub fn with_target(cfg: &'a MiningConfig, target: Option<&'a TargetSpec>) -> MineContext<'a> {
+        MineContext { cfg, target: target.filter(|t| !t.is_all()) }
+    }
+
+    /// The collapsed validator: config semantics
+    /// ([`MiningConfig::validate`]) plus the target's structural checks
+    /// (empty code set, inverted duration band). Vocabulary membership
+    /// needs a cohort and stays at the engine layer
+    /// (`TargetSpec::validate_vocab`).
+    pub fn validate(&self) -> Result<(), MiningError> {
+        self.cfg.validate()?;
+        if let Some(t) = self.target {
+            t.validate().map_err(MiningError::InvalidConfig)?;
         }
         Ok(())
     }
@@ -262,18 +329,26 @@ fn first_occurrences(chunk: &[NumericEntry], out: &mut Vec<NumericEntry>) {
 }
 
 /// Emit all transitive sequences for one (already filtered, date-sorted)
-/// patient chunk into `sink`.
+/// patient chunk into `sink`, pruning pairs the target rejects — the
+/// endpoint check runs *before* duration encoding, the band check right
+/// after the span division (module docs: "Targeted mining").
 #[inline]
-fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnMut(SeqRecord)) {
+fn sequence_chunk(chunk: &[NumericEntry], ctx: MineContext<'_>, mut sink: impl FnMut(SeqRecord)) {
     // Zero is rejected by MiningConfig::validate at every entry point
     // (and by Plan::validate) — no silent clamp.
-    let unit = cfg.duration_unit_days as u64;
+    let unit = ctx.cfg.duration_unit_days as u64;
     debug_assert!(unit > 0, "entry points must validate duration_unit_days");
+    let include_self_pairs = ctx.cfg.include_self_pairs;
     for i in 0..chunk.len() {
         let x = chunk[i];
         for y in &chunk[i + 1..] {
-            if !cfg.include_self_pairs && y.phenx == x.phenx {
+            if !include_self_pairs && y.phenx == x.phenx {
                 continue;
+            }
+            if let Some(t) = ctx.target {
+                if !t.matches_pair(x.phenx, y.phenx) {
+                    continue;
+                }
             }
             debug_assert!(y.date >= x.date, "chunk must be date-sorted");
             // Widened span: an i32 subtraction overflows on adversarial
@@ -283,6 +358,11 @@ fn sequence_chunk(chunk: &[NumericEntry], cfg: &MiningConfig, mut sink: impl FnM
             let span = (y.date as i64 - x.date as i64) as u64;
             let duration = u32::try_from(span / unit)
                 .expect("i32 date span divided by a positive unit fits u32");
+            if let Some(t) = ctx.target {
+                if !t.matches_duration(duration) {
+                    continue;
+                }
+            }
             sink(SeqRecord { seq: encode_seq(x.phenx, y.phenx), pid: x.patient, duration });
         }
     }
@@ -331,19 +411,19 @@ fn mine_patient_range(
     entries: &[NumericEntry],
     bounds: &[usize],
     pr: &std::ops::Range<usize>,
-    cfg: &MiningConfig,
+    ctx: MineContext<'_>,
     scratch: &mut Vec<NumericEntry>,
     out: &mut impl RecordSink,
 ) {
     for w in bounds[pr.start..pr.end + 1].windows(2) {
         let chunk = &entries[w[0]..w[1]];
-        if cfg.first_occurrence_only {
+        if ctx.cfg.first_occurrence_only {
             first_occurrences(chunk, scratch);
             out.reserve(pairs_for(scratch.len()));
-            sequence_chunk(scratch, cfg, |r| out.push(r));
+            sequence_chunk(scratch, ctx, |r| out.push(r));
         } else {
             out.reserve(pairs_for(chunk.len()));
-            sequence_chunk(chunk, cfg, |r| out.push(r));
+            sequence_chunk(chunk, ctx, |r| out.push(r));
         }
     }
 }
@@ -367,13 +447,23 @@ pub fn mine_sequences_tracked(
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SequenceSet, MiningError> {
-    mine_with_scheduler(db, cfg, tracker, |entries, bounds, threads| {
+    mine_sequences_with(db, MineContext::new(cfg), tracker)
+}
+
+/// [`mine_sequences_tracked`] with a full [`MineContext`] — the targeted
+/// entry point the engine backends call.
+pub fn mine_sequences_with(
+    db: &NumericDbMart,
+    ctx: MineContext<'_>,
+    tracker: Option<&MemTracker>,
+) -> Result<SequenceSet, MiningError> {
+    mine_with_scheduler(db, ctx, tracker, |entries, bounds, threads| {
         let patient_ranges = balance_patients(bounds, threads);
         par::par_map_chunks(patient_ranges.len(), threads, |range| {
             let mut local: Vec<SeqRecord> = Vec::new();
             let mut scratch: Vec<NumericEntry> = Vec::new();
             for pr in &patient_ranges[range] {
-                mine_patient_range(entries, bounds, pr, cfg, &mut scratch, &mut local);
+                mine_patient_range(entries, bounds, pr, ctx, &mut scratch, &mut local);
             }
             local
         })
@@ -387,14 +477,15 @@ pub fn mine_sequences_tracked(
 /// order**, merge them in that order, and account logical memory.
 fn mine_with_scheduler<F>(
     db: &NumericDbMart,
-    cfg: &MiningConfig,
+    ctx: MineContext<'_>,
     tracker: Option<&MemTracker>,
     schedule: F,
 ) -> Result<SequenceSet, MiningError>
 where
     F: FnOnce(&[NumericEntry], &[usize], usize) -> Vec<Vec<SeqRecord>>,
 {
-    cfg.validate()?;
+    ctx.validate()?;
+    let cfg = ctx.cfg;
     let threads = cfg.worker_threads();
     let track = |b: u64| {
         if let Some(t) = tracker {
@@ -423,10 +514,13 @@ where
     for b in &mut buffers {
         records.append(b);
     }
-    // `total` counts self-pairs; with include_self_pairs=false the actual
-    // output is smaller, so `total` is an upper bound used for capacity.
+    // `total` counts self-pairs and ignores the target; with
+    // include_self_pairs=false or a target active the actual output is
+    // smaller, so `total` is an upper bound used for capacity.
     debug_assert!(records.len() as u64 <= total);
-    debug_assert!(!cfg.include_self_pairs || records.len() as u64 == total);
+    debug_assert!(
+        !cfg.include_self_pairs || ctx.target.is_some() || records.len() as u64 == total
+    );
 
     untrack(entries_bytes);
     drop(entries);
@@ -456,7 +550,18 @@ pub fn mine_sequences_to_files_tracked(
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SeqFileSet, MiningError> {
-    cfg.validate()?;
+    mine_sequences_to_files_with(db, MineContext::new(cfg), tracker)
+}
+
+/// [`mine_sequences_to_files_tracked`] with a full [`MineContext`] — the
+/// targeted entry point for the file-backed backend.
+pub fn mine_sequences_to_files_with(
+    db: &NumericDbMart,
+    ctx: MineContext<'_>,
+    tracker: Option<&MemTracker>,
+) -> Result<SeqFileSet, MiningError> {
+    ctx.validate()?;
+    let cfg = ctx.cfg;
     let threads = cfg.worker_threads();
     std::fs::create_dir_all(&cfg.work_dir)?;
     if let Some(t) = tracker {
@@ -478,7 +583,7 @@ pub fn mine_sequences_to_files_tracked(
             {
                 let mut sink = WriterSink { writer: &mut writer, err: &mut err };
                 for pr in &patient_ranges[range] {
-                    mine_patient_range(&entries, &bounds, pr, cfg, &mut scratch, &mut sink);
+                    mine_patient_range(&entries, &bounds, pr, ctx, &mut scratch, &mut sink);
                 }
             }
             if let Some(e) = err {
@@ -555,10 +660,23 @@ pub fn mine_sequences_sharded_tracked(
     cfg: &MiningConfig,
     tracker: Option<&MemTracker>,
 ) -> Result<SequenceSet, MiningError> {
-    mine_with_scheduler(db, cfg, tracker, |entries, bounds, threads| {
+    mine_sequences_sharded_with(db, MineContext::new(cfg), tracker)
+}
+
+/// [`mine_sequences_sharded_tracked`] with a full [`MineContext`] — the
+/// targeted entry point for the sharded backend. The shard layout and
+/// merge order are computed exactly as in the untargeted path (the spec
+/// only prunes pairs inside a shard), so the determinism guarantees
+/// above carry over unchanged.
+pub fn mine_sequences_sharded_with(
+    db: &NumericDbMart,
+    ctx: MineContext<'_>,
+    tracker: Option<&MemTracker>,
+) -> Result<SequenceSet, MiningError> {
+    mine_with_scheduler(db, ctx, tracker, |entries, bounds, threads| {
         let n_patients = bounds.len().saturating_sub(1);
         let shard_ranges =
-            balance_patients(bounds, effective_shards(cfg.shards, n_patients));
+            balance_patients(bounds, effective_shards(ctx.cfg.shards, n_patients));
         // One write-once slot per shard: workers fill slots in whatever
         // order the dynamic scheduler hands out shards; the merge reads
         // them in shard order.
@@ -571,7 +689,7 @@ pub fn mine_sequences_sharded_tracked(
             claimed.inc();
             let mut local: Vec<SeqRecord> = Vec::new();
             let mut scratch: Vec<NumericEntry> = Vec::new();
-            mine_patient_range(entries, bounds, &shard_ranges[si], cfg, &mut scratch, &mut local);
+            mine_patient_range(entries, bounds, &shard_ranges[si], ctx, &mut scratch, &mut local);
             let filled = slots[si].set(local).is_ok();
             debug_assert!(filled, "shard {si} claimed twice");
         });
@@ -933,6 +1051,121 @@ mod tests {
         let tracker = MemTracker::new();
         let got = mine_sequences_tracked(&db, &MiningConfig::default(), Some(&tracker)).unwrap();
         assert!(tracker.peak() >= got.byte_size());
+    }
+
+    #[test]
+    fn oversized_shard_count_is_rejected_everywhere() {
+        // The shard cap used to live only in Plan::validate; the collapsed
+        // MineContext validator rejects it at every mining entry point.
+        let db = tiny_db();
+        let cfg = MiningConfig { shards: MAX_SHARDS + 1, ..Default::default() };
+        assert!(matches!(mine_sequences(&db, &cfg), Err(MiningError::InvalidConfig(_))));
+        assert!(matches!(
+            mine_sequences_sharded(&db, &cfg),
+            Err(MiningError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn targeted_mine_equals_filtered_full_mine() {
+        use crate::target::{TargetPos, TargetSpec};
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let cfg = MiningConfig::default();
+        let full = mine_sequences(&db, &cfg).unwrap();
+        let specs = [
+            TargetSpec::for_codes([0, 2, 5]),
+            TargetSpec::for_codes([1]).with_pos(TargetPos::First),
+            TargetSpec::for_codes([3, 4]).with_pos(TargetPos::Second),
+            TargetSpec::all().with_duration_band(Some(1), Some(60)),
+            TargetSpec::for_codes([0, 1, 2]).with_duration_band(None, Some(30)),
+        ];
+        for spec in &specs {
+            let want: Vec<SeqRecord> = full
+                .records
+                .iter()
+                .copied()
+                .filter(|r| spec.matches_record(r))
+                .collect();
+            let ctx = MineContext::with_target(&cfg, Some(spec));
+            let got = mine_sequences_with(&db, ctx, None).unwrap();
+            // Same records in the same order — the pushdown is a pure
+            // per-pair filter over the identical enumeration.
+            assert_eq!(got.records, want, "spec {}", spec.render());
+            let sharded_cfg = MiningConfig { shards: 7, threads: 3, ..cfg.clone() };
+            let sharded = mine_sequences_sharded_with(
+                &db,
+                MineContext::with_target(&sharded_cfg, Some(spec)),
+                None,
+            )
+            .unwrap();
+            let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+            let mut a = sharded.records;
+            let mut b = want.clone();
+            a.sort_unstable_by_key(key);
+            b.sort_unstable_by_key(key);
+            assert_eq!(a, b, "sharded spec {}", spec.render());
+        }
+    }
+
+    #[test]
+    fn all_target_is_normalized_to_untargeted() {
+        let db = tiny_db();
+        let cfg = MiningConfig::default();
+        let all = TargetSpec::all();
+        let ctx = MineContext::with_target(&cfg, Some(&all));
+        assert!(ctx.target.is_none(), "all() must take the untargeted path");
+        let got = mine_sequences_with(&db, ctx, None).unwrap();
+        let want = mine_sequences(&db, &cfg).unwrap();
+        assert_eq!(got.records, want.records);
+    }
+
+    #[test]
+    fn targeted_file_mode_matches_targeted_memory_mode() {
+        let mart = crate::synthea::SyntheaConfig::small().generate();
+        let db = NumericDbMart::encode(&mart);
+        let spec = TargetSpec::for_codes([0, 3]).with_duration_band(Some(1), None);
+        let cfg = MiningConfig::default();
+        let mem = mine_sequences_with(&db, MineContext::with_target(&cfg, Some(&spec)), None)
+            .unwrap();
+        let dir = std::env::temp_dir().join("tspm_test_targeted_filemode");
+        let _ = std::fs::remove_dir_all(&dir);
+        let file_cfg = MiningConfig {
+            mode: MiningMode::FileBased,
+            work_dir: dir.clone(),
+            threads: 2,
+            ..Default::default()
+        };
+        let files = mine_sequences_to_files_with(
+            &db,
+            MineContext::with_target(&file_cfg, Some(&spec)),
+            None,
+        )
+        .unwrap();
+        assert_eq!(files.total_records as usize, mem.len());
+        let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+        let mut from_files = files.read_all().unwrap();
+        let mut from_mem = mem.records.clone();
+        from_files.sort_unstable_by_key(key);
+        from_mem.sort_unstable_by_key(key);
+        assert_eq!(from_files, from_mem);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn invalid_target_is_rejected_by_the_context_validator() {
+        let db = tiny_db();
+        let cfg = MiningConfig::default();
+        let empty = TargetSpec::for_codes([]);
+        assert!(matches!(
+            mine_sequences_with(&db, MineContext::with_target(&cfg, Some(&empty)), None),
+            Err(MiningError::InvalidConfig(_))
+        ));
+        let inverted = TargetSpec::all().with_duration_band(Some(9), Some(2));
+        assert!(matches!(
+            mine_sequences_with(&db, MineContext::with_target(&cfg, Some(&inverted)), None),
+            Err(MiningError::InvalidConfig(_))
+        ));
     }
 }
 

@@ -24,10 +24,11 @@
 
 use crate::dbmart::NumericDbMart;
 use crate::engine::{SequenceOutput, TspmError};
-use crate::mining::{self, MiningConfig, SeqRecord, SequenceSet};
+use crate::mining::{self, MineContext, MiningConfig, SeqRecord, SequenceSet};
 use crate::partition;
 use crate::seqstore::{SeqFileSet, SeqWriter};
 use crate::sparsity::{self, SparsityConfig};
+use crate::target::TargetSpec;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
@@ -53,6 +54,10 @@ pub struct PipelineConfig {
     /// pipeline's resident set then never includes the output at all,
     /// and the run returns [`SequenceOutput::Spilled`].
     pub spill_dir: Option<PathBuf>,
+    /// Optional targeting predicate pushed into every miner shard's
+    /// inner loop ([`crate::target`]); `None` (or an `is_all` spec)
+    /// streams the full multiset.
+    pub target: Option<TargetSpec>,
 }
 
 impl Default for PipelineConfig {
@@ -64,6 +69,7 @@ impl Default for PipelineConfig {
             shards: 0, // auto
             screen: None,
             spill_dir: None,
+            target: None,
         }
     }
 }
@@ -127,7 +133,11 @@ fn send_with_backpressure<T>(
 
 /// Run the streaming pipeline over a dbmart.
 pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, TspmError> {
-    cfg.mining.validate()?;
+    // The collapsed validator: mining config semantics plus the target's
+    // structural checks in one place. An is_all() spec normalizes to no
+    // target, keeping the untargeted path byte-identical.
+    let target = cfg.target.as_ref().filter(|t| !t.is_all());
+    MineContext::with_target(&cfg.mining, target).validate()?;
     if cfg.spill_dir.is_some() && cfg.screen.is_some() {
         return Err(TspmError::Pipeline(
             "the in-memory screen cannot combine with spill_dir — screen spilled \
@@ -194,7 +204,8 @@ pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, T
                     // Each shard mines its chunk single-threaded; shard-level
                     // parallelism already saturates the pool.
                     let local_cfg = MiningConfig { threads: 1, ..mining_cfg.clone() };
-                    match mining::mine_sequences(&sub, &local_cfg) {
+                    let ctx = MineContext::with_target(&local_cfg, target);
+                    match mining::mine_sequences_with(&sub, ctx, None) {
                         Ok(set) => {
                             metrics_ref
                                 .records
@@ -250,7 +261,12 @@ pub fn run(db: &NumericDbMart, cfg: &PipelineConfig) -> Result<PipelineResult, T
         return Err(TspmError::Pipeline(f));
     }
 
-    let screen_stats = cfg.screen.as_ref().map(|sc| sparsity::screen(&mut merged, sc));
+    // The merged stream is already the targeted multiset (miners pruned
+    // in the inner loop), so passing the spec again is a proven no-op —
+    // it keeps the screen's documented "targeted universe" semantics in
+    // force even if a caller bypasses the miner pushdown.
+    let screen_stats =
+        cfg.screen.as_ref().map(|sc| sparsity::screen_with(&mut merged, sc, target));
     let sequences = match spill {
         Some((path, writer)) => {
             let count = writer.finish()?;
@@ -390,6 +406,38 @@ mod tests {
         let result = run(&db, &cfg).unwrap();
         let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
         assert_eq!(result.sequences.len(), batch.len());
+    }
+
+    #[test]
+    fn targeted_pipeline_matches_filtered_batch() {
+        let db = test_db();
+        let spec = crate::target::TargetSpec::for_codes([0, 2])
+            .with_duration_band(Some(1), None);
+        let batch = mining::mine_sequences(&db, &MiningConfig::default()).unwrap();
+        let mut want: Vec<SeqRecord> =
+            batch.records.into_iter().filter(|r| spec.matches_record(r)).collect();
+        let cfg = PipelineConfig {
+            chunk_cap: 50_000,
+            shards: 3,
+            target: Some(spec),
+            ..Default::default()
+        };
+        let streamed = run(&db, &cfg).unwrap();
+        let mut got = streamed.sequences.materialize().unwrap().records;
+        let key = |r: &SeqRecord| (r.seq, r.pid, r.duration);
+        got.sort_unstable_by_key(key);
+        want.sort_unstable_by_key(key);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn invalid_target_is_rejected_before_any_thread_spawns() {
+        let db = test_db();
+        let cfg = PipelineConfig {
+            target: Some(crate::target::TargetSpec::for_codes([])),
+            ..Default::default()
+        };
+        assert!(run(&db, &cfg).is_err());
     }
 
     #[test]

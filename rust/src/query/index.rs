@@ -18,6 +18,7 @@ use crate::json::Json;
 use crate::metrics::MemTracker;
 use crate::mining::SeqRecord;
 use crate::seqstore::{self, SeqFileSet, SeqReader, SeqWriter, RECORD_BYTES};
+use crate::target::TargetSpec;
 use std::io;
 use std::path::{Path, PathBuf};
 
@@ -319,7 +320,7 @@ pub struct PidTable {
 }
 
 /// Build-time configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct IndexConfig {
     /// Records per index block ([`DEFAULT_BLOCK_RECORDS`]); also the
     /// query service's read-buffer size.
@@ -328,11 +329,18 @@ pub struct IndexConfig {
     /// `false` writes a bit-compatible v1 artifact — no `pids.bin` /
     /// `pdata_0000.tspm`, half the disk, `by_patient` scans.
     pub pid_index: bool,
+    /// The [`TargetSpec`] the indexed run was mined under, recorded in
+    /// the manifest (append-only `target` key, **no version bump** —
+    /// readers that predate it ignore the key) so `tspm list` and
+    /// [`crate::query::SurfaceInfo`] can answer "what was this index
+    /// targeted to". `None` (or an `is_all` spec) writes no key at all,
+    /// keeping untargeted manifests byte-identical to previous builds.
+    pub target: Option<TargetSpec>,
 }
 
 impl Default for IndexConfig {
     fn default() -> Self {
-        IndexConfig { block_records: DEFAULT_BLOCK_RECORDS, pid_index: true }
+        IndexConfig { block_records: DEFAULT_BLOCK_RECORDS, pid_index: true, target: None }
     }
 }
 
@@ -366,6 +374,10 @@ pub struct SeqIndex {
     /// The pid-major secondary index — `Some` for v2 artifacts, `None`
     /// for v1 (where `by_patient` falls back to the block-pruned scan).
     pub pids: Option<PidTable>,
+    /// The [`TargetSpec`] the artifact's run was mined under, when its
+    /// manifest recorded one. `None` means an untargeted (full) mine —
+    /// including every artifact written before the key existed.
+    pub target: Option<TargetSpec>,
 }
 
 impl SeqIndex {
@@ -558,6 +570,16 @@ impl SeqIndex {
             });
         }
 
+        // Optional append-only key (no version bump): the spec the run
+        // was targeted to. Absent on untargeted and pre-key artifacts; a
+        // malformed value is a typed error, not a silent None.
+        let target = match j.get("target") {
+            None => None,
+            Some(t) => Some(TargetSpec::from_json(t).map_err(|e| {
+                QueryError::Artifact(format!("{}: {e}", manifest_path.display()))
+            })?),
+        };
+
         let manifest_len = std::fs::metadata(&manifest_path)?.len();
         let artifact_bytes = std::fs::metadata(&data_path)?.len()
             + blocks_bytes.len() as u64
@@ -578,6 +600,7 @@ impl SeqIndex {
             blocks,
             seqs,
             pids,
+            target,
         })
     }
 
@@ -817,6 +840,7 @@ fn build_impl(
         blocks,
         seqs,
         pid_table,
+        cfg.target.as_ref(),
         tracker,
     )
 }
@@ -935,8 +959,12 @@ pub(crate) fn write_tables_and_manifest(
     blocks: Vec<BlockMeta>,
     seqs: Vec<SeqTableEntry>,
     pid_table: Option<(Vec<PidEntry>, String)>,
+    target: Option<&TargetSpec>,
     tracker: Option<&MemTracker>,
 ) -> Result<SeqIndex, QueryError> {
+    // Normalize: an is_all spec means "untargeted" and writes no key, so
+    // spec presence in a manifest always carries information.
+    let target = target.filter(|t| !t.is_all());
     let track = |b: u64| {
         if let Some(t) = tracker {
             t.add(b)
@@ -1063,6 +1091,14 @@ pub(crate) fn write_tables_and_manifest(
             ]),
         ));
     }
+    // Append-only manifest key, deliberately WITHOUT a version bump:
+    // pre-target readers parse by name and ignore unknown keys, so an
+    // old binary opens a targeted artifact fine (it just cannot report
+    // the spec). `cargo xtask lint` pins this compatibility class —
+    // adding keys is allowed, changing or removing existing ones is not.
+    if let Some(t) = target {
+        fields.push(("target", t.to_json()));
+    }
     let manifest = Json::obj(fields);
     let manifest_text = manifest.to_string_pretty();
     std::fs::write(out_dir.join(MANIFEST_FILE), &manifest_text)?;
@@ -1098,6 +1134,7 @@ pub(crate) fn write_tables_and_manifest(
         blocks,
         seqs,
         pids,
+        target: target.cloned(),
     })
 }
 
@@ -1659,7 +1696,7 @@ mod tests {
         let dir = tmpdir("v1_compat");
         let data = sorted_fixture();
         let input = fileset(&dir, &data, 2);
-        let cfg = IndexConfig { block_records: 8, pid_index: false };
+        let cfg = IndexConfig { block_records: 8, pid_index: false, ..Default::default() };
         let built = build(&input, &dir.join("idx"), &cfg, None).unwrap();
         assert_eq!(built.version, 1);
         assert!(built.pids.is_none());
@@ -1741,6 +1778,67 @@ mod tests {
                 .flatten()
                 .all(|e| !e.file_name().to_string_lossy().starts_with("pidsort_")));
         }
+    }
+
+    #[test]
+    fn target_key_round_trips_without_a_version_bump() {
+        let dir = tmpdir("target_key");
+        let data = sorted_fixture();
+        let input = fileset(&dir, &data, 1);
+
+        // Untargeted build: NO target key in the manifest — byte-level
+        // compatibility class unchanged.
+        let plain_dir = dir.join("plain");
+        let plain = build(&input, &plain_dir, &IndexConfig::default(), None).unwrap();
+        assert!(plain.target.is_none());
+        let text = std::fs::read_to_string(plain_dir.join(MANIFEST_FILE)).unwrap();
+        assert!(!text.contains("\"target\""), "{text}");
+
+        // Targeted build: key present, version untouched, spec reopens
+        // identically (canonical form survives the JSON round trip).
+        let spec = crate::target::TargetSpec::for_codes([4, 1, 4])
+            .with_pos(crate::target::TargetPos::First)
+            .with_duration_band(Some(2), Some(90));
+        let t_dir = dir.join("targeted");
+        let built = build(
+            &input,
+            &t_dir,
+            &IndexConfig { target: Some(spec.clone()), ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(built.version, plain.version, "append-only key must not bump");
+        assert_eq!(built.target.as_ref(), Some(&spec));
+        let text = std::fs::read_to_string(t_dir.join(MANIFEST_FILE)).unwrap();
+        assert!(text.contains("\"target\""), "{text}");
+        let opened = SeqIndex::open(&t_dir).unwrap();
+        assert_eq!(opened.target.as_ref(), Some(&spec));
+
+        // An all() spec is normalized away — same manifest as untargeted.
+        let all_dir = dir.join("all");
+        let built = build(
+            &input,
+            &all_dir,
+            &IndexConfig { target: Some(crate::target::TargetSpec::all()), ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert!(built.target.is_none());
+        assert_eq!(
+            std::fs::read_to_string(all_dir.join(MANIFEST_FILE)).unwrap(),
+            std::fs::read_to_string(plain_dir.join(MANIFEST_FILE)).unwrap(),
+            "all() must write the byte-identical manifest"
+        );
+
+        // A manifest whose target value is malformed is a typed error.
+        let text = std::fs::read_to_string(t_dir.join(MANIFEST_FILE)).unwrap();
+        std::fs::write(
+            t_dir.join(MANIFEST_FILE),
+            text.replace("\"pos\": \"first\"", "\"pos\": \"sideways\""),
+        )
+        .unwrap();
+        let err = SeqIndex::open(&t_dir).unwrap_err();
+        assert!(err.to_string().contains("target"), "got {err}");
     }
 
     #[test]

@@ -663,7 +663,7 @@ mod tests {
         let idx = build(
             &input,
             &dir.join("idx"),
-            &IndexConfig { block_records: block, pid_index },
+            &IndexConfig { block_records: block, pid_index, ..Default::default() },
             None,
         )
         .unwrap();
@@ -901,7 +901,7 @@ mod tests {
             let idx = build(
                 &input,
                 &sub,
-                &IndexConfig { block_records: 8, pid_index },
+                &IndexConfig { block_records: 8, pid_index, ..Default::default() },
                 None,
             )
             .unwrap();

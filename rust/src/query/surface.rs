@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 /// Size/shape summary of one query surface — what `tspm client --list`
 /// reports per registered artifact or segment set.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SurfaceInfo {
     /// Total records behind the surface (summed across segments).
     pub records: u64,
@@ -35,6 +35,11 @@ pub struct SurfaceInfo {
     /// Artifact format version (for a merged view: the maximum across
     /// its segments).
     pub version: u64,
+    /// Rendered [`crate::target::TargetSpec`] the surface's records were
+    /// mined under (`None` = untargeted). For a merged view this is the
+    /// segments' *unanimous* spec; segments that disagree report `None`,
+    /// because their union is not the output of any single targeted run.
+    pub target: Option<String>,
 }
 
 /// The query surface shared by [`QueryService`] (one artifact) and
@@ -140,6 +145,7 @@ impl QuerySurface for QueryService {
             sequences: idx.distinct_seqs(),
             patients: idx.num_patients,
             version: idx.version,
+            target: idx.target.as_ref().map(|t| t.render()),
         }
     }
 }
@@ -176,7 +182,11 @@ mod tests {
         let idx = build(
             &input,
             &dir.join("idx"),
-            &IndexConfig { block_records: 4, pid_index: true },
+            &IndexConfig {
+                block_records: 4,
+                target: Some(crate::target::TargetSpec::for_codes([0, 1])),
+                ..Default::default()
+            },
             None,
         )
         .unwrap();
@@ -216,5 +226,10 @@ mod tests {
         assert_eq!(info.sequences, 2);
         assert_eq!(info.patients, 5);
         assert_eq!(info.version, 2);
+        assert_eq!(
+            info.target.as_deref(),
+            Some(crate::target::TargetSpec::for_codes([0, 1]).render().as_str()),
+            "describe surfaces the manifest's target spec"
+        );
     }
 }

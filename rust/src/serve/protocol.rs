@@ -426,6 +426,11 @@ pub struct ArtifactInfo {
     pub sequences: u64,
     pub patients: u32,
     pub version: u64,
+    /// Rendered target spec the artifact was mined under, when its
+    /// manifest records one. Carried as an **optional** wire key (same
+    /// append-only rule as `trace_id`): absent for untargeted artifacts,
+    /// ignored by readers that predate it — no protocol version bump.
+    pub target: Option<String>,
 }
 
 /// One response frame.
@@ -472,13 +477,17 @@ impl Response {
                         infos
                             .iter()
                             .map(|a| {
-                                Json::obj(vec![
+                                let mut fields = vec![
                                     ("id", Json::from(a.id.clone())),
                                     ("records", Json::from(a.records)),
                                     ("sequences", Json::from(a.sequences)),
                                     ("patients", Json::from(a.patients as u64)),
                                     ("version", Json::from(a.version)),
-                                ])
+                                ];
+                                if let Some(t) = &a.target {
+                                    fields.push(("target", Json::from(t.clone())));
+                                }
+                                Json::obj(fields)
                             })
                             .collect(),
                     ),
@@ -586,6 +595,7 @@ impl Response {
                         sequences: req_u64(a, "sequences")?,
                         patients: req_u64(a, "patients")? as u32,
                         version: req_u64(a, "version")?,
+                        target: a.get("target").and_then(Json::as_str).map(str::to_string),
                     });
                 }
                 Response::Artifacts(infos)
@@ -798,13 +808,24 @@ mod tests {
             code: ErrorCode::NotFound,
             message: "no artifact \"x\"".into(),
         });
-        round_trip_resp(Response::Artifacts(vec![ArtifactInfo {
-            id: "idx".into(),
-            records: 100,
-            sequences: 10,
-            patients: 5,
-            version: 2,
-        }]));
+        round_trip_resp(Response::Artifacts(vec![
+            ArtifactInfo {
+                id: "idx".into(),
+                records: 100,
+                sequences: 10,
+                patients: 5,
+                version: 2,
+                target: None,
+            },
+            ArtifactInfo {
+                id: "idx2".into(),
+                records: 7,
+                sequences: 3,
+                patients: 2,
+                version: 2,
+                target: Some("codes[3,9]@first".into()),
+            },
+        ]));
         round_trip_resp(Response::Stats {
             artifact: "idx".into(),
             stats: QueryStats {

@@ -175,6 +175,7 @@ impl Registry {
                     sequences: info.sequences,
                     patients: info.patients,
                     version: info.version,
+                    target: info.target,
                 }
             })
             .collect()
@@ -274,7 +275,8 @@ mod tests {
             num_phenx: 4,
         };
         let out = dir.join("index");
-        build(&input, &out, &IndexConfig { block_records: 64, pid_index: true }, None).unwrap();
+        build(&input, &out, &IndexConfig { block_records: 64, ..Default::default() }, None)
+            .unwrap();
         out
     }
 
@@ -347,7 +349,7 @@ mod tests {
                 num_patients: 5,
                 num_phenx: 4,
             };
-            set.add_segment(&input, &IndexConfig { block_records: 64, pid_index: true }, None)
+            set.add_segment(&input, &IndexConfig { block_records: 64, ..Default::default() }, None)
                 .unwrap();
         }
         let reg = Registry::new(1 << 16);

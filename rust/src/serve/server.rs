@@ -569,7 +569,8 @@ mod tests {
             num_phenx: 4,
         };
         let out = dir.join("index");
-        build(&input, &out, &IndexConfig { block_records: 4, pid_index: true }, None).unwrap();
+        build(&input, &out, &IndexConfig { block_records: 4, ..Default::default() }, None)
+            .unwrap();
         out
     }
 
@@ -649,7 +650,7 @@ mod tests {
                 num_patients: 5,
                 num_phenx: 4,
             };
-            set.add_segment(&input, &IndexConfig { block_records: 4, pid_index: true }, None)
+            set.add_segment(&input, &IndexConfig { block_records: 4, ..Default::default() }, None)
                 .unwrap();
         }
         let registry = Arc::new(Registry::new(1 << 16));

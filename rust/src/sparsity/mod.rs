@@ -22,9 +22,29 @@
 //!   O(buffer), never O(records) — this is what lets a file-backed or
 //!   streaming engine run finish when the screened output itself does
 //!   not fit RAM.
+//!
+//! ## Targeted screening semantics
+//!
+//! Every screen has a `_with` variant taking an optional
+//! [`crate::target::TargetSpec`]. Support (*distinct patients*) is then
+//! counted **within the targeted multiset**: records the spec rejects
+//! are removed before counting, and the `*_before` fields of
+//! [`ScreenStats`] describe that targeted universe, not the full mine.
+//!
+//! **Pushdown safety.** The spec is a per-record predicate, and each
+//! `_with` variant applies it as a filter *first* and then runs the
+//! untargeted algorithm unchanged — so `targeted-screen(input)` is
+//! *by construction* byte-identical to `screen(filter(input))`. Combined
+//! with the mining-side argument (targeted mining emits exactly the
+//! filtered full multiset, see [`crate::target`] and [`crate::mining`]),
+//! this proves the end-to-end contract
+//! `targeted-mine → screen ≡ full-mine → filter → screen`, which
+//! `rust/tests/conformance.rs` enforces byte-for-byte. When the input
+//! was already mined under the same spec, the filter is a no-op pass.
 
 use crate::metrics::MemTracker;
 use crate::mining::SeqRecord;
+use crate::target::TargetSpec;
 use crate::par;
 use crate::psort;
 use crate::seqstore::{SeqFileSet, SeqReader, SeqWriter, WRITER_BUFFER_BYTES};
@@ -61,6 +81,37 @@ pub struct ScreenStats {
     pub distinct_after: u64,
 }
 
+/// Drop records a target rejects — the shared prologue of every `_with`
+/// screen variant. A `None` (or `is_all`) spec leaves the buffer
+/// untouched, so the untargeted paths stay byte-identical. Centralizing
+/// the filter here is what makes "targeted screen ≡ filter → screen"
+/// true by construction for all four implementations at once.
+fn apply_target(records: &mut Vec<SeqRecord>, target: Option<&TargetSpec>) {
+    if let Some(t) = target.filter(|t| !t.is_all()) {
+        records.retain(|r| t.matches_record(r));
+    }
+}
+
+/// Distinct-patient count of one sequence run whose records are sorted
+/// by pid (ties adjacent): one pid-transition scan. The one survivor
+/// predicate shared by [`screen`], [`screen_paper_strategy`], and the
+/// tests — extracted so the targeted variants cannot diverge from the
+/// untargeted ones. The streaming twin in [`screen_spilled`] counts the
+/// same transitions cursor-wise (it never holds a full run).
+#[inline]
+pub(crate) fn run_support(run: &[SeqRecord]) -> u32 {
+    if run.is_empty() {
+        return 0;
+    }
+    let mut distinct = 1u32;
+    for w in run.windows(2) {
+        if w[0].pid != w[1].pid {
+            distinct += 1;
+        }
+    }
+    distinct
+}
+
 /// The production screen: radix sort by `(seq, pid)` + run scan + one
 /// stable in-place compaction (perf pass, EXPERIMENTS.md §Perf).
 ///
@@ -74,6 +125,18 @@ pub struct ScreenStats {
 /// occurring in ≥ `min_patients` distinct patients, sorted by
 /// `(seq, pid)`.
 pub fn screen(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    screen_with(records, cfg, None)
+}
+
+/// [`screen`] over the targeted universe: records the spec rejects are
+/// dropped first, then the untargeted algorithm runs unchanged (module
+/// docs: "Targeted screening semantics").
+pub fn screen_with(
+    records: &mut Vec<SeqRecord>,
+    cfg: &SparsityConfig,
+    target: Option<&TargetSpec>,
+) -> ScreenStats {
+    apply_target(records, target);
     let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
     let mut stats = ScreenStats {
         records_before: records.len() as u64,
@@ -88,24 +151,20 @@ pub fn screen(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats
     psort::sort_auto(records, |r| ((r.seq as u128) << 32) | r.pid as u128, threads);
 
     // 2+3. Run scan + stable compaction in one forward pass: for each
-    // distinct-sequence run, count pid transitions; dense runs are
-    // copied (within the same buffer, never overlapping reads ahead of
-    // writes) to the write cursor.
+    // distinct-sequence run, count pid transitions (run_support); dense
+    // runs are copied (within the same buffer, never overlapping reads
+    // ahead of writes) to the write cursor.
     let len = records.len();
     let mut write = 0usize;
     let mut i = 0usize;
     while i < len {
         let seq = records[i].seq;
-        let mut distinct = 1u32;
         let mut j = i + 1;
         while j < len && records[j].seq == seq {
-            if records[j].pid != records[j - 1].pid {
-                distinct += 1;
-            }
             j += 1;
         }
         stats.distinct_before += 1;
-        if distinct >= cfg.min_patients {
+        if run_support(&records[i..j]) >= cfg.min_patients {
             stats.distinct_after += 1;
             let run_len = j - i;
             if write != i {
@@ -128,6 +187,17 @@ pub fn screen(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats
 /// u32::MAX`) → sort by patient id → truncate at the first tombstone →
 /// restore sequence order.
 pub fn screen_paper_strategy(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    screen_paper_strategy_with(records, cfg, None)
+}
+
+/// [`screen_paper_strategy`] over the targeted universe (module docs:
+/// "Targeted screening semantics").
+pub fn screen_paper_strategy_with(
+    records: &mut Vec<SeqRecord>,
+    cfg: &SparsityConfig,
+    target: Option<&TargetSpec>,
+) -> ScreenStats {
+    apply_target(records, target);
     let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
     let mut stats = ScreenStats {
         records_before: records.len() as u64,
@@ -189,14 +259,9 @@ pub fn screen_paper_strategy(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig)
             for run in rr {
                 let slice = &mut part[starts[run] - base..starts[run + 1] - base];
                 // Distinct patients in the run: pid transitions (input is
-                // pid-sorted within the run).
-                let mut distinct = 1u32;
-                for w in 0..slice.len().saturating_sub(1) {
-                    if slice[w].pid != slice[w + 1].pid {
-                        distinct += 1;
-                    }
-                }
-                if distinct < min_patients {
+                // pid-sorted within the run) — the shared run_support
+                // predicate, same as screen's.
+                if run_support(slice) < min_patients {
                     for r in slice.iter_mut() {
                         r.pid = TOMBSTONE_PID;
                     }
@@ -224,7 +289,19 @@ pub fn screen_paper_strategy(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig)
 /// Naive hash-based screen (correctness oracle / ablation baseline):
 /// count distinct patients per sequence with a hash map, then filter.
 pub fn screen_naive(records: &mut Vec<SeqRecord>, cfg: &SparsityConfig) -> ScreenStats {
+    screen_naive_with(records, cfg, None)
+}
+
+/// [`screen_naive`] over the targeted universe — the oracle for the
+/// targeted conformance contract (module docs: "Targeted screening
+/// semantics").
+pub fn screen_naive_with(
+    records: &mut Vec<SeqRecord>,
+    cfg: &SparsityConfig,
+    target: Option<&TargetSpec>,
+) -> ScreenStats {
     use std::collections::HashMap;
+    apply_target(records, target);
     let mut stats = ScreenStats {
         records_before: records.len() as u64,
         ..Default::default()
@@ -477,6 +554,21 @@ pub fn screen_spilled(
     cfg: &SpillScreenConfig,
     tracker: Option<&MemTracker>,
 ) -> io::Result<(SeqFileSet, ScreenStats)> {
+    screen_spilled_with(input, cfg, None, tracker)
+}
+
+/// [`screen_spilled`] over the targeted universe: records the spec
+/// rejects are dropped as each input batch is read (pass 1), before they
+/// ever reach a sorted run — so `records_before` and all downstream
+/// stats describe the targeted multiset, exactly as the in-memory
+/// `_with` variants do (module docs: "Targeted screening semantics").
+pub fn screen_spilled_with(
+    input: &SeqFileSet,
+    cfg: &SpillScreenConfig,
+    target: Option<&TargetSpec>,
+    tracker: Option<&MemTracker>,
+) -> io::Result<(SeqFileSet, ScreenStats)> {
+    let target = target.filter(|t| !t.is_all());
     let threads = par::num_threads(Some(cfg.threads).filter(|&t| t > 0));
     let track = |b: u64| {
         if let Some(t) = tracker {
@@ -528,8 +620,25 @@ pub fn screen_spilled(
             if n == 0 {
                 break;
             }
-            filled += n;
-            stats.records_before += n as u64;
+            // Targeted pushdown: compact the just-read batch in place so
+            // only matching records count toward `filled` (and the
+            // stats). Rejected records never reach a sorted run, keeping
+            // every later pass identical to screening the filtered set.
+            let kept = match target {
+                Some(t) => {
+                    let mut w = filled;
+                    for i in filled..filled + n {
+                        if t.matches_record(&buf[i]) {
+                            buf[w] = buf[i];
+                            w += 1;
+                        }
+                    }
+                    w - filled
+                }
+                None => n,
+            };
+            filled += kept;
+            stats.records_before += kept as u64;
             if filled == cap {
                 flush(&mut buf[..filled], &mut runs)?;
                 filled = 0;
@@ -554,6 +663,13 @@ pub fn screen_spilled(
     let mut generation = 0u32;
     while runs.len() > MERGE_FAN_IN {
         obs_reg.counter(crate::obs::names::SCREEN_SPILL_MERGE_PASSES).inc();
+        // Per-pass observability: a child of the ambient span (the
+        // engine's screen stage, or a test root) carrying the pass's
+        // merge fan-in and byte volume. Attrs only — the span cannot
+        // perturb the merge output.
+        let mut pass_span = crate::obs::trace::current_span("sparsity.spill_merge_pass");
+        let runs_in_pass = runs.len() as u64;
+        let mut pass_bytes = 0u64;
         let per_run = (cap / MERGE_FAN_IN).max(1);
         let mut next: Vec<PathBuf> = Vec::new();
         for (gi, group) in runs.chunks(MERGE_FAN_IN).enumerate() {
@@ -573,10 +689,17 @@ pub fn screen_spilled(
             obs_reg
                 .counter(crate::obs::names::SCREEN_SPILL_BYTES_MERGED)
                 .add(pass_records * REC_BYTES);
+            pass_bytes += pass_records * REC_BYTES;
             w.finish()?;
             untrack(group_bytes);
             next.push(path);
         }
+        if let Some(s) = pass_span.as_mut() {
+            s.attr("generation", u64::from(generation));
+            s.attr("runs_merged", runs_in_pass);
+            s.attr("bytes_merged", pass_bytes);
+        }
+        drop(pass_span);
         for p in &runs {
             let _ = std::fs::remove_file(p);
         }
@@ -592,6 +715,13 @@ pub fn screen_spilled(
     obs_reg
         .counter(crate::obs::names::SCREEN_SPILL_BYTES_MERGED)
         .add(stats.records_before * REC_BYTES);
+    let mut final_span = crate::obs::trace::current_span("sparsity.spill_merge_pass");
+    if let Some(s) = final_span.as_mut() {
+        s.attr("generation", u64::from(generation));
+        s.attr("runs_merged", runs.len() as u64);
+        s.attr("bytes_merged", stats.records_before * REC_BYTES);
+        s.attr("final", true);
+    }
     let per_run = (cap / runs.len().max(1)).max(1);
     // Cursor record buffers + their reader buffers.
     let merge_bytes = (runs.len() * per_run) as u64 * REC_BYTES * 2;
@@ -642,6 +772,7 @@ pub fn screen_spilled(
     let written = out.finish()?;
     debug_assert_eq!(written, records_after);
     stats.records_after = records_after;
+    drop(final_span);
 
     untrack(write_cap as u64);
     untrack(scratch.len() as u64 * REC_BYTES);
@@ -1004,6 +1135,176 @@ mod tests {
         // (buffers only — scratch dominates at 64 KiB).
         assert!(tracker.peak() < 200 * 1024, "peak {}", tracker.peak());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_support_counts_pid_transitions() {
+        assert_eq!(run_support(&[]), 0);
+        assert_eq!(run_support(&[rec(1, 5)]), 1);
+        assert_eq!(run_support(&[rec(1, 5), rec(1, 5), rec(1, 5)]), 1);
+        assert_eq!(run_support(&[rec(1, 1), rec(1, 1), rec(1, 2), rec(1, 9)]), 3);
+    }
+
+    /// All four `_with` screens must equal "filter by the spec, then run
+    /// the untargeted screen" — records AND stats — which is the
+    /// screen-side half of the pushdown-safety contract.
+    #[test]
+    fn targeted_screens_equal_filter_then_screen() {
+        use crate::dbmart::encode_seq;
+        let mut r = Rng::new(0x7A6E);
+        let records: Vec<SeqRecord> = (0..30_000)
+            .map(|_| SeqRecord {
+                seq: encode_seq(r.gen_range(12) as u32, r.gen_range(12) as u32),
+                pid: r.gen_range(70) as u32,
+                duration: r.gen_range(400) as u32,
+            })
+            .collect();
+        let specs = [
+            TargetSpec::for_codes([3, 7, 11]),
+            TargetSpec::for_codes([5]).with_pos(crate::target::TargetPos::First),
+            TargetSpec::for_codes([2, 4]).with_pos(crate::target::TargetPos::Second),
+            TargetSpec::all().with_duration_band(Some(10), Some(250)),
+            TargetSpec::for_codes([0, 9]).with_duration_band(Some(1), None),
+            TargetSpec::all(),
+        ];
+        let cfg = SparsityConfig { min_patients: 3, threads: 2 };
+        for (si, spec) in specs.iter().enumerate() {
+            // Reference: explicit filter, then the untargeted screen.
+            let mut expect: Vec<SeqRecord> =
+                records.iter().copied().filter(|r| spec.matches_record(r)).collect();
+            let expect_stats = screen(&mut expect, &cfg);
+
+            let mut a = records.clone();
+            let sa = screen_with(&mut a, &cfg, Some(spec));
+            assert_eq!(a, expect, "screen_with spec={si}");
+            assert_eq!(sa, expect_stats, "screen_with stats spec={si}");
+
+            let mut b = records.clone();
+            let sb = screen_naive_with(&mut b, &cfg, Some(spec));
+            b.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            let mut expect_sorted = expect.clone();
+            expect_sorted.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            assert_eq!(b, expect_sorted, "screen_naive_with spec={si}");
+            assert_eq!(sb.records_after, expect_stats.records_after, "spec={si}");
+            assert_eq!(sb.distinct_after, expect_stats.distinct_after, "spec={si}");
+
+            // Duration is not part of the paper strategy's sort key, so
+            // compare as the untargeted oracle test does: multiset order.
+            let mut c = records.clone();
+            let sc = screen_paper_strategy_with(&mut c, &cfg, Some(spec));
+            c.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+            assert_eq!(c, expect_sorted, "screen_paper_strategy_with spec={si}");
+            assert_eq!(sc.records_after, expect_stats.records_after, "spec={si}");
+            assert_eq!(sc.distinct_after, expect_stats.distinct_after, "spec={si}");
+            assert_eq!(sc.distinct_before, expect_stats.distinct_before, "spec={si}");
+            assert_eq!(sc.records_before, expect_stats.records_before, "spec={si}");
+        }
+    }
+
+    #[test]
+    fn targeted_spilled_screen_matches_targeted_in_memory() {
+        use crate::dbmart::encode_seq;
+        let mut r = Rng::new(0x51D);
+        let records: Vec<SeqRecord> = (0..8_000)
+            .map(|_| SeqRecord {
+                seq: encode_seq(r.gen_range(8) as u32, r.gen_range(8) as u32),
+                pid: r.gen_range(40) as u32,
+                duration: r.gen_range(300) as u32,
+            })
+            .collect();
+        let spec = TargetSpec::for_codes([1, 4, 6]).with_duration_band(None, Some(200));
+        let cfg = SparsityConfig { min_patients: 2, threads: 1 };
+        let mut expect = records.clone();
+        let expect_stats = screen_with(&mut expect, &cfg, Some(&spec));
+        expect.sort_unstable_by_key(|x| (x.seq, x.pid, x.duration));
+
+        let dir = spill_dir("targeted");
+        let input = spilled_input(&dir, &records, 3);
+        for buffer_bytes in [1024u64, u64::MAX] {
+            let spill_cfg = SpillScreenConfig {
+                min_patients: 2,
+                threads: 1,
+                buffer_bytes,
+                out_dir: dir.join(format!("out_{buffer_bytes}")),
+            };
+            let (out, stats) =
+                screen_spilled_with(&input, &spill_cfg, Some(&spec), None).unwrap();
+            assert_eq!(stats, expect_stats, "buf={buffer_bytes}");
+            assert_eq!(out.read_all().unwrap(), expect, "buf={buffer_bytes}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_merge_passes_emit_span_attrs() {
+        use crate::obs::trace::{
+            push_current, Clock, ManualClock, MemorySink, TraceSink, Tracer,
+        };
+        use std::sync::Arc;
+        let sink = Arc::new(MemorySink::new());
+        let clock = Arc::new(ManualClock::new());
+        let tracer = Tracer::with_sinks(
+            Some(sink.clone() as Arc<dyn TraceSink>),
+            Arc::new(MemorySink::new()),
+            clock.clone() as Arc<dyn Clock>,
+        );
+        let root = tracer.span("screen");
+        let guard = push_current(&root);
+
+        // Enough records under a tiny buffer (64-record cap at 1 KiB) to
+        // force > MERGE_FAN_IN sorted runs → at least one compaction
+        // pass before the final merge.
+        let records: Vec<SeqRecord> = (0..5_000)
+            .map(|i| SeqRecord { seq: (i % 11) as u64, pid: (i % 97) as u32, duration: 0 })
+            .collect();
+        let dir = spill_dir("span_attrs");
+        let input = spilled_input(&dir, &records, 2);
+        let cfg = SpillScreenConfig {
+            min_patients: 1,
+            threads: 1,
+            buffer_bytes: 1024,
+            out_dir: dir.join("out"),
+        };
+        screen_spilled(&input, &cfg, None).unwrap();
+        drop(guard);
+        root.finish();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let passes: Vec<crate::json::Json> = sink
+            .lines()
+            .iter()
+            .map(|l| crate::json::Json::parse(l).unwrap())
+            .filter(|v| {
+                v.get("name").and_then(crate::json::Json::as_str)
+                    == Some("sparsity.spill_merge_pass")
+            })
+            .collect();
+        assert!(passes.len() >= 2, "compaction pass + final pass, got {}", passes.len());
+        for p in &passes {
+            let attrs = p.get("attrs").expect("merge pass spans carry attrs");
+            assert!(attrs.get("runs_merged").and_then(crate::json::Json::as_u64).unwrap() > 0);
+            assert!(attrs.get("bytes_merged").and_then(crate::json::Json::as_u64).is_some());
+            assert!(attrs.get("generation").and_then(crate::json::Json::as_u64).is_some());
+        }
+        // Exactly one final pass, carrying the whole multiset's bytes.
+        let finals: Vec<_> = passes
+            .iter()
+            .filter(|p| {
+                p.get("attrs")
+                    .and_then(|a| a.get("final"))
+                    .and_then(crate::json::Json::as_bool)
+                    == Some(true)
+            })
+            .collect();
+        assert_eq!(finals.len(), 1);
+        let total_bytes = records.len() as u64 * REC_BYTES;
+        assert_eq!(
+            finals[0]
+                .get("attrs")
+                .and_then(|a| a.get("bytes_merged"))
+                .and_then(crate::json::Json::as_u64),
+            Some(total_bytes)
+        );
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Targeted mining — the canonical predicate pushed down the stage stack.
+//!
+//! The paper's workflows (Post COVID-19 phenotyping) almost always ask
+//! focused questions: "patterns involving *these* codes in *this*
+//! duration band". Mining the full transitive multiset and filtering
+//! afterwards answers them at full-cohort cost; [`TargetSpec`] is the
+//! predicate the engine instead threads down through
+//! [`crate::engine::Plan::target`] → the mining backends
+//! ([`crate::mining::MineContext`]) → the sparsity screens → the index
+//! manifest, so non-matching pairs are pruned inside the per-patient
+//! inner loop *before* duration encoding (Liang et al., "Targeted
+//! Mining of Time-Interval Related Patterns").
+//!
+//! ## Pushdown safety
+//!
+//! The predicate is **per-record**: a mined record matches iff its
+//! decoded `(first, second)` endpoint pair matches the code-set/position
+//! constraint *and* its duration lies in the band. Targeted mining
+//! evaluates exactly this predicate on exactly the pairs the full mine
+//! would enumerate, so the targeted multiset **is** the filtered full
+//! multiset — record for record, in the same order. Every downstream
+//! stage (screening, indexing) is a function of that multiset, hence
+//! `targeted-mine → screen ≡ full-mine → filter → screen`, byte for
+//! byte. The conformance suite (`rust/tests/conformance.rs`) enforces
+//! this across all four backends, adversarial cohort shapes, and both
+//! residencies.
+//!
+//! ## Canonical form
+//!
+//! Specs are canonicalized on construction — the code set is sorted and
+//! deduplicated — so spec equality is order- and duplicate-insensitive
+//! (`properties.rs` holds the property test), and the manifest rendering
+//! of a spec is a stable function of what it matches.
+
+use crate::dbmart::decode_seq;
+use crate::json::Json;
+use crate::mining::SeqRecord;
+use std::fmt;
+
+/// Which sequence endpoint the target code set constrains.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TargetPos {
+    /// The *first* (earlier) code of the pair must be in the set.
+    First,
+    /// The *second* (later) code of the pair must be in the set.
+    Second,
+    /// Either endpoint in the set makes the pair a match (the default).
+    #[default]
+    Either,
+}
+
+impl TargetPos {
+    /// The CLI/config spelling of this position.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TargetPos::First => "first",
+            TargetPos::Second => "second",
+            TargetPos::Either => "either",
+        }
+    }
+}
+
+impl std::str::FromStr for TargetPos {
+    type Err = String;
+    fn from_str(s: &str) -> Result<TargetPos, String> {
+        match s {
+            "first" => Ok(TargetPos::First),
+            "second" => Ok(TargetPos::Second),
+            "either" => Ok(TargetPos::Either),
+            other => Err(format!(
+                "unknown target position {other:?} (expected first|second|either)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for TargetPos {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The canonical targeting predicate: an optional endpoint code set
+/// (`None` = no code constraint) plus an optional duration band, both
+/// inclusive. Construct via [`TargetSpec::all`] /
+/// [`TargetSpec::for_codes`] and the `with_*` builders — the code set is
+/// canonicalized (sorted, deduplicated) on every construction path, so
+/// two specs built from permuted/duplicated code lists compare equal.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TargetSpec {
+    /// Canonical (sorted, deduplicated) numeric phenx code set; `None`
+    /// means "any code". Kept private so no path can bypass
+    /// canonicalization — read it via [`TargetSpec::codes`].
+    codes: Option<Vec<u32>>,
+    /// Which endpoint the code set constrains.
+    pub pos: TargetPos,
+    /// Inclusive lower duration bound (in the mining duration unit).
+    pub dur_min: Option<u32>,
+    /// Inclusive upper duration bound.
+    pub dur_max: Option<u32>,
+}
+
+impl TargetSpec {
+    /// The untargeted spec: matches every pair and every duration.
+    /// Mining under it is byte-identical to mining with no spec at all.
+    pub fn all() -> TargetSpec {
+        TargetSpec::default()
+    }
+
+    /// A spec matching pairs whose endpoint (per [`TargetPos::Either`])
+    /// is in `codes`. The list is canonicalized: order and duplicates do
+    /// not matter.
+    pub fn for_codes(codes: impl IntoIterator<Item = u32>) -> TargetSpec {
+        let mut v: Vec<u32> = codes.into_iter().collect();
+        v.sort_unstable();
+        v.dedup();
+        TargetSpec { codes: Some(v), ..TargetSpec::default() }
+    }
+
+    /// This spec with the endpoint constraint moved to `pos`.
+    pub fn with_pos(mut self, pos: TargetPos) -> TargetSpec {
+        self.pos = pos;
+        self
+    }
+
+    /// This spec with an inclusive duration band (`None` = unbounded on
+    /// that side). Validation rejects inverted bands.
+    pub fn with_duration_band(
+        mut self,
+        dur_min: Option<u32>,
+        dur_max: Option<u32>,
+    ) -> TargetSpec {
+        self.dur_min = dur_min;
+        self.dur_max = dur_max;
+        self
+    }
+
+    /// The canonical code set, when the spec constrains codes.
+    pub fn codes(&self) -> Option<&[u32]> {
+        self.codes.as_deref()
+    }
+
+    /// True when the spec constrains nothing — no code set and no
+    /// duration band. The engine treats such a spec exactly like no
+    /// spec, so `TargetSpec::all()` reproduces the untargeted bytes.
+    pub fn is_all(&self) -> bool {
+        self.codes.is_none() && self.dur_min.is_none() && self.dur_max.is_none()
+    }
+
+    /// Structural validation (no vocabulary needed): rejects an *empty*
+    /// code set (a spec that can never match is a caller bug — use
+    /// [`TargetSpec::all`] for "no constraint") and inverted duration
+    /// bands.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(codes) = &self.codes {
+            if codes.is_empty() {
+                return Err(
+                    "target: empty code set matches nothing — use TargetSpec::all() \
+                     for an unconstrained mine"
+                        .into(),
+                );
+            }
+        }
+        if let (Some(lo), Some(hi)) = (self.dur_min, self.dur_max) {
+            if lo > hi {
+                return Err(format!(
+                    "target: inverted duration band ({lo} > {hi})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Vocabulary validation: every target code must be a phenx id the
+    /// encoded dbmart actually contains (`< num_phenx`). Called where a
+    /// cohort is in hand ([`crate::engine::Engine::plan`]); structural
+    /// validation alone suffices elsewhere.
+    pub fn validate_vocab(&self, num_phenx: u32) -> Result<(), String> {
+        if let Some(codes) = &self.codes {
+            if let Some(&bad) = codes.iter().find(|&&c| c >= num_phenx) {
+                return Err(format!(
+                    "target: code {bad} is outside the encoded vocabulary \
+                     (cohort has {num_phenx} codes)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Does a `(first, second)` endpoint pair match the code/position
+    /// constraint? (Duration is checked separately — the mining loop
+    /// prunes on this *before* computing the duration.)
+    #[inline]
+    pub fn matches_pair(&self, first: u32, second: u32) -> bool {
+        match &self.codes {
+            None => true,
+            Some(codes) => match self.pos {
+                TargetPos::First => codes.binary_search(&first).is_ok(),
+                TargetPos::Second => codes.binary_search(&second).is_ok(),
+                TargetPos::Either => {
+                    codes.binary_search(&first).is_ok()
+                        || codes.binary_search(&second).is_ok()
+                }
+            },
+        }
+    }
+
+    /// Does an already-encoded duration fall in the band?
+    #[inline]
+    pub fn matches_duration(&self, duration: u32) -> bool {
+        self.dur_min.map_or(true, |lo| duration >= lo)
+            && self.dur_max.map_or(true, |hi| duration <= hi)
+    }
+
+    /// The full per-record predicate — the filter a post-hoc pass over a
+    /// full mine would apply. Pushdown safety (module docs) is exactly
+    /// the statement that targeted mining emits the subset of records
+    /// satisfying this.
+    #[inline]
+    pub fn matches_record(&self, r: &SeqRecord) -> bool {
+        let (first, second) = decode_seq(r.seq);
+        self.matches_pair(first, second) && self.matches_duration(r.duration)
+    }
+
+    /// Serialize for manifests and run configs. Only present fields are
+    /// written, so an `all()` spec serializes to an empty object.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(codes) = &self.codes {
+            fields.push((
+                "codes",
+                Json::Arr(codes.iter().map(|&c| Json::from(c as u64)).collect()),
+            ));
+            fields.push(("pos", Json::from(self.pos.as_str())));
+        }
+        if let Some(lo) = self.dur_min {
+            fields.push(("dur_min", Json::from(lo as u64)));
+        }
+        if let Some(hi) = self.dur_max {
+            fields.push(("dur_max", Json::from(hi as u64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a spec back from [`TargetSpec::to_json`] form. Unknown keys
+    /// are ignored (manifests evolve append-only); the code list is
+    /// re-canonicalized, so hand-edited manifests still yield canonical
+    /// specs.
+    pub fn from_json(j: &Json) -> Result<TargetSpec, String> {
+        let codes = match j.get("codes") {
+            None => None,
+            Some(arr) => {
+                let list = arr.as_arr().ok_or("target: codes must be an array")?;
+                let mut v = Vec::with_capacity(list.len());
+                for item in list {
+                    let c = item
+                        .as_u64()
+                        .filter(|&c| c <= u32::MAX as u64)
+                        .ok_or("target: codes must be u32 values")?;
+                    v.push(c as u32);
+                }
+                v.sort_unstable();
+                v.dedup();
+                Some(v)
+            }
+        };
+        let pos = match j.get("pos").and_then(Json::as_str) {
+            None => TargetPos::Either,
+            Some(s) => s.parse()?,
+        };
+        let parse_dur = |key: &str| -> Result<Option<u32>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_u64()
+                    .filter(|&d| d <= u32::MAX as u64)
+                    .map(|d| Some(d as u32))
+                    .ok_or_else(|| format!("target: {key} must be a u32")),
+            }
+        };
+        Ok(TargetSpec {
+            codes,
+            pos,
+            dur_min: parse_dur("dur_min")?,
+            dur_max: parse_dur("dur_max")?,
+        })
+    }
+
+    /// Compact human rendering for `list` / `SurfaceInfo` surfaces, e.g.
+    /// `codes[3,7,9]@either dur[2..30]`. Stable because the code set is
+    /// canonical.
+    pub fn render(&self) -> String {
+        if self.is_all() {
+            return "all".into();
+        }
+        let mut out = String::new();
+        if let Some(codes) = &self.codes {
+            out.push_str("codes[");
+            for (i, c) in codes.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&c.to_string());
+            }
+            out.push_str(&format!("]@{}", self.pos));
+        }
+        if self.dur_min.is_some() || self.dur_max.is_some() {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            let lo = self.dur_min.map(|d| d.to_string()).unwrap_or_default();
+            let hi = self.dur_max.map(|d| d.to_string()).unwrap_or_default();
+            out.push_str(&format!("dur[{lo}..{hi}]"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbmart::encode_seq;
+
+    #[test]
+    fn construction_is_order_and_duplicate_insensitive() {
+        let a = TargetSpec::for_codes([9, 3, 7, 3, 9]);
+        let b = TargetSpec::for_codes([3, 7, 9]);
+        assert_eq!(a, b);
+        assert_eq!(a.codes(), Some(&[3u32, 7, 9][..]));
+    }
+
+    #[test]
+    fn all_matches_everything_and_validates() {
+        let t = TargetSpec::all();
+        assert!(t.is_all());
+        t.validate().unwrap();
+        t.validate_vocab(0).unwrap();
+        assert!(t.matches_pair(0, 123));
+        assert!(t.matches_duration(u32::MAX));
+        assert!(t.matches_record(&SeqRecord { seq: encode_seq(5, 6), pid: 0, duration: 9 }));
+    }
+
+    #[test]
+    fn empty_code_set_and_inverted_band_are_rejected() {
+        let err = TargetSpec::for_codes([]).validate().unwrap_err();
+        assert!(err.contains("empty"), "got {err}");
+        let err = TargetSpec::all()
+            .with_duration_band(Some(10), Some(3))
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("inverted"), "got {err}");
+        // A half-open band is fine either way.
+        TargetSpec::all().with_duration_band(Some(10), None).validate().unwrap();
+        TargetSpec::all().with_duration_band(None, Some(3)).validate().unwrap();
+    }
+
+    #[test]
+    fn vocab_validation_names_the_offending_code() {
+        let t = TargetSpec::for_codes([2, 41]);
+        t.validate_vocab(42).unwrap();
+        let err = t.validate_vocab(41).unwrap_err();
+        assert!(err.contains("41"), "got {err}");
+    }
+
+    #[test]
+    fn position_constrains_the_right_endpoint() {
+        let first = TargetSpec::for_codes([5]).with_pos(TargetPos::First);
+        let second = TargetSpec::for_codes([5]).with_pos(TargetPos::Second);
+        let either = TargetSpec::for_codes([5]);
+        assert!(first.matches_pair(5, 9) && !first.matches_pair(9, 5));
+        assert!(!second.matches_pair(5, 9) && second.matches_pair(9, 5));
+        assert!(either.matches_pair(5, 9) && either.matches_pair(9, 5));
+        assert!(!either.matches_pair(1, 2));
+    }
+
+    #[test]
+    fn duration_band_is_inclusive() {
+        let t = TargetSpec::all().with_duration_band(Some(2), Some(4));
+        assert!(!t.matches_duration(1));
+        assert!(t.matches_duration(2) && t.matches_duration(3) && t.matches_duration(4));
+        assert!(!t.matches_duration(5));
+    }
+
+    #[test]
+    fn matches_record_is_pair_and_band_conjunction() {
+        let t = TargetSpec::for_codes([7])
+            .with_pos(TargetPos::First)
+            .with_duration_band(None, Some(10));
+        let hit = SeqRecord { seq: encode_seq(7, 3), pid: 1, duration: 10 };
+        let wrong_code = SeqRecord { seq: encode_seq(3, 7), pid: 1, duration: 5 };
+        let wrong_dur = SeqRecord { seq: encode_seq(7, 3), pid: 1, duration: 11 };
+        assert!(t.matches_record(&hit));
+        assert!(!t.matches_record(&wrong_code));
+        assert!(!t.matches_record(&wrong_dur));
+    }
+
+    #[test]
+    fn json_round_trips_and_ignores_unknown_keys() {
+        for spec in [
+            TargetSpec::all(),
+            TargetSpec::for_codes([4, 1, 4]).with_pos(TargetPos::Second),
+            TargetSpec::for_codes([2]).with_duration_band(Some(1), Some(30)),
+            TargetSpec::all().with_duration_band(None, Some(90)),
+        ] {
+            let j = spec.to_json();
+            let back = TargetSpec::from_json(&j).unwrap();
+            assert_eq!(back, spec, "{j:?}");
+        }
+        let j = Json::parse(r#"{"codes": [9, 2, 2], "pos": "first", "future_key": 1}"#)
+            .unwrap();
+        let t = TargetSpec::from_json(&j).unwrap();
+        assert_eq!(t, TargetSpec::for_codes([2, 9]).with_pos(TargetPos::First));
+        assert!(TargetSpec::from_json(
+            &Json::parse(r#"{"codes": "nope"}"#).unwrap()
+        )
+        .is_err());
+        assert!(TargetSpec::from_json(
+            &Json::parse(r#"{"pos": "sideways"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn render_is_stable_and_compact() {
+        assert_eq!(TargetSpec::all().render(), "all");
+        assert_eq!(
+            TargetSpec::for_codes([9, 3]).with_pos(TargetPos::First).render(),
+            "codes[3,9]@first"
+        );
+        assert_eq!(
+            TargetSpec::for_codes([1])
+                .with_duration_band(Some(2), Some(30))
+                .render(),
+            "codes[1]@either dur[2..30]"
+        );
+        assert_eq!(
+            TargetSpec::all().with_duration_band(Some(5), None).render(),
+            "dur[5..]"
+        );
+    }
+}

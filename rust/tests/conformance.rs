@@ -243,6 +243,101 @@ fn assert_screens_conform(shape: &str, golden: &[SeqRecord]) {
     }
 }
 
+/// Targeted-mining conformance: for a battery of [`TargetSpec`]s, a
+/// targeted run (predicate pushed into every backend's per-patient inner
+/// loop, support counted within the targeted multiset) must be
+/// **byte-identical** to the reference semantics `full mine → filter →
+/// screen`, on every backend and at both residencies. `TargetSpec::all()`
+/// must be the identity: byte-identical to an untargeted run.
+fn assert_targeted_conform(
+    shape: &str,
+    mart: &DbMart,
+    cfg: &MiningConfig,
+    golden: &[SeqRecord],
+) {
+    use tspm_plus::target::{TargetPos, TargetSpec};
+    let db = NumericDbMart::encode(mart);
+    let nx = db.num_phenx() as u32;
+    let fc = engine::forecast(&db, cfg);
+    let floor = (fc.max_patient_sequences + 32) * 16;
+    let budget = env_budget().unwrap_or(floor).max(floor);
+    let sc = SparsityConfig { min_patients: 2, threads: 1 };
+
+    // Duration-band-only spec works on every shape (even the empty
+    // vocabulary); code specs need a non-empty encoded vocabulary or the
+    // plan rightly rejects them.
+    let mut specs = vec![TargetSpec::all().with_duration_band(None, Some(500))];
+    if nx > 0 {
+        specs.push(TargetSpec::for_codes([0, nx / 2]).with_pos(TargetPos::First));
+        specs.push(
+            TargetSpec::for_codes([nx - 1, 0])
+                .with_pos(TargetPos::Second)
+                .with_duration_band(Some(1), None),
+        );
+    }
+
+    for (si, spec) in specs.iter().enumerate() {
+        let mut reference: Vec<SeqRecord> =
+            golden.iter().copied().filter(|r| spec.matches_record(r)).collect();
+        let ref_stats = sparsity::screen(&mut reference, &sc);
+        let reference = record_bytes(&sorted(reference));
+
+        for (choice, kind) in ALL_BACKENDS {
+            for spill in [false, true] {
+                let tag = format!(
+                    "{shape}_t{si}_{kind}_{}",
+                    if spill { "sp" } else { "mem" }
+                );
+                let mut eng = Engine::from_dbmart(db.clone())
+                    .mine(MiningConfig {
+                        work_dir: work_dir(&format!("{tag}_mine")),
+                        ..cfg.clone()
+                    })
+                    .target(spec.clone())
+                    .screen(sc)
+                    .backend(choice)
+                    .memory_budget(budget);
+                if spill {
+                    eng = eng
+                        .output(OutputChoice::Spilled)
+                        .out_dir(work_dir(&format!("{tag}_out")));
+                }
+                let out = eng.run().unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert_eq!(
+                    out.screen_stats,
+                    Some(ref_stats),
+                    "{tag}: screen stats must be counted within the targeted multiset"
+                );
+                let got =
+                    record_bytes(&sorted(out.sequences.materialize().unwrap().records));
+                assert_eq!(
+                    got, reference,
+                    "{tag}: targeted output diverged from full-mine → filter → screen"
+                );
+            }
+        }
+    }
+
+    for (choice, kind) in ALL_BACKENDS {
+        let out = Engine::from_dbmart(db.clone())
+            .mine(MiningConfig {
+                work_dir: work_dir(&format!("{shape}_tall_{kind}")),
+                ..cfg.clone()
+            })
+            .target(TargetSpec::all())
+            .backend(choice)
+            .memory_budget(budget)
+            .run()
+            .unwrap_or_else(|e| panic!("{shape}/all/{kind}: {e}"));
+        let got = sorted(out.sequences.materialize().unwrap().records);
+        assert_eq!(
+            record_bytes(&got),
+            record_bytes(golden),
+            "{shape}/{kind}: TargetSpec::all() must be the identity"
+        );
+    }
+}
+
 /// Write `records` as a three-file spill set under `dir`.
 fn spilled_input(dir: &Path, records: &[SeqRecord]) -> SeqFileSet {
     std::fs::create_dir_all(dir).unwrap();
@@ -277,6 +372,7 @@ fn conformance_empty_cohort() {
     let golden = assert_backends_conform("empty", &mart, &MiningConfig::default());
     assert!(golden.is_empty());
     assert_screens_conform("empty", &golden);
+    assert_targeted_conform("empty", &mart, &MiningConfig::default(), &golden);
 }
 
 /// Shape 2 — single-entry patients only: every patient mines to zero
@@ -290,6 +386,7 @@ fn conformance_single_entry_patients() {
     let golden = assert_backends_conform("single_entry", &mart, &MiningConfig::default());
     assert!(golden.is_empty(), "single-entry patients must yield no pairs");
     assert_screens_conform("single_entry", &golden);
+    assert_targeted_conform("single_entry", &mart, &MiningConfig::default(), &golden);
 }
 
 /// Shape 3 — heavily skewed cohort: one 200-entry patient next to fifty
@@ -315,6 +412,7 @@ fn conformance_heavily_skewed() {
     let golden = assert_backends_conform("skewed", &mart, &MiningConfig::default());
     assert!(golden.len() as u64 >= mining::pairs_for(200));
     assert_screens_conform("skewed", &golden);
+    assert_targeted_conform("skewed", &mart, &MiningConfig::default(), &golden);
 }
 
 /// Shape 4 — duplicate timestamps: all of a patient's entries share one
@@ -335,6 +433,7 @@ fn conformance_duplicate_timestamps() {
     let golden = assert_backends_conform("dup_ts", &mart, &MiningConfig::default());
     assert!(golden.iter().all(|r| r.duration == 0), "same-date pairs must span 0 days");
     assert_screens_conform("dup_ts", &golden);
+    assert_targeted_conform("dup_ts", &mart, &MiningConfig::default(), &golden);
     assert_backends_conform(
         "dup_ts_first",
         &mart,
@@ -364,6 +463,7 @@ fn conformance_max_duration_buckets() {
     );
     assert!(monthly.iter().all(|r| r.duration <= 2_100_000_000 / 30 + 1));
     assert_screens_conform("max_dur", &golden);
+    assert_targeted_conform("max_dur", &mart, &MiningConfig::default(), &golden);
 }
 
 /// Shape 6 — randomized mixture: every adversarial trait at once, across
@@ -398,6 +498,12 @@ fn conformance_random_mixture() {
             &MiningConfig { include_self_pairs: false, ..Default::default() },
         );
         assert_screens_conform(&format!("random{seed}"), &golden);
+        assert_targeted_conform(
+            &format!("random{seed}"),
+            &mart,
+            &MiningConfig { include_self_pairs: false, ..Default::default() },
+            &golden,
+        );
     }
 }
 

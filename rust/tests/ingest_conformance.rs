@@ -95,7 +95,7 @@ fn build_full(dir: &Path, records: &[SeqRecord], np: u32, nx: u32, block: usize)
     index::build(
         &input,
         &dir.join("idx"),
-        &IndexConfig { block_records: block, pid_index: true },
+        &IndexConfig { block_records: block, ..Default::default() },
         None,
     )
     .unwrap()
@@ -126,7 +126,7 @@ fn build_split_set(
             .filter(|r| group_of[r.pid as usize] == g)
             .collect();
         let input = run_file(&input_dir.join(format!("part{g}")), &part, np, nx);
-        set.add_segment(&input, &IndexConfig { block_records: block, pid_index: true }, None)
+        set.add_segment(&input, &IndexConfig { block_records: block, ..Default::default() }, None)
             .unwrap();
     }
     set
@@ -571,7 +571,7 @@ fn cross_segment_top_k_ties_use_the_documented_total_order() {
             let input = run_file(&base.join(format!("in_{tag}_{g}")), &part, np, nx);
             set.add_segment(
                 &input,
-                &IndexConfig { block_records: 7, pid_index: true },
+                &IndexConfig { block_records: 7, ..Default::default() },
                 None,
             )
             .unwrap();

@@ -302,6 +302,82 @@ fn sharded_merge_deterministic_on_random_dbmarts() {
     }
 }
 
+/// TargetSpec canonicalization: spec equality must be insensitive to the
+/// order and multiplicity of the code list. Any permutation with any
+/// duplication canonicalizes to the same spec, the same rendering, the
+/// same JSON — and, end to end, the same targeted mining bytes.
+#[test]
+fn target_spec_canonicalization_order_and_duplicate_insensitive() {
+    use tspm_plus::engine::Engine;
+    use tspm_plus::target::{TargetPos, TargetSpec};
+    let mut rng = Rng::new(0x7A96);
+    for case in 0..40u64 {
+        let n = 1 + rng.gen_range(12) as usize;
+        let codes: Vec<u32> = (0..n).map(|_| rng.gen_range(30) as u32).collect();
+        // A shuffled view of the same set, with random extra duplicates.
+        let mut noisy = codes.clone();
+        for _ in 0..rng.gen_range(8) {
+            noisy.push(codes[rng.gen_range(n as u64) as usize]);
+        }
+        for i in (1..noisy.len()).rev() {
+            let j = rng.gen_range((i + 1) as u64) as usize;
+            noisy.swap(i, j);
+        }
+        let pos = match rng.gen_range(3) {
+            0 => TargetPos::First,
+            1 => TargetPos::Second,
+            _ => TargetPos::Either,
+        };
+        let lo = if rng.gen_bool(0.5) { Some(rng.gen_range(100) as u32) } else { None };
+        let hi = if rng.gen_bool(0.5) {
+            Some(lo.unwrap_or(0) + rng.gen_range(500) as u32)
+        } else {
+            None
+        };
+        let a = TargetSpec::for_codes(codes.clone()).with_pos(pos).with_duration_band(lo, hi);
+        let b = TargetSpec::for_codes(noisy).with_pos(pos).with_duration_band(lo, hi);
+        assert_eq!(a, b, "case={case}: canonical specs must be equal");
+        assert_eq!(a.render(), b.render(), "case={case}");
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact(),
+            "case={case}"
+        );
+        // The canonical code list is strictly sorted (sorted + deduped).
+        let cs = a.codes().expect("non-empty code list");
+        assert!(cs.windows(2).all(|w| w[0] < w[1]), "case={case}: {cs:?}");
+
+        // End to end on a small cohort: both spellings mine to identical
+        // bytes (a handful of cases keeps the runtime bounded).
+        if case < 4 {
+            let mart = random_dbmart(&mut Rng::new(7000 + case));
+            let db = NumericDbMart::encode(&mart);
+            let vocab = db.num_phenx() as u32;
+            let work = std::env::temp_dir().join(format!("tspm_prop_target_{case}"));
+            let cfg = MiningConfig { work_dir: work, ..Default::default() };
+            let clamp = |s: &TargetSpec| {
+                // keep codes inside this cohort's vocabulary
+                let kept: Vec<u32> =
+                    s.codes().unwrap().iter().copied().filter(|&c| c < vocab).collect();
+                if kept.is_empty() {
+                    TargetSpec::all().with_duration_band(lo, hi)
+                } else {
+                    TargetSpec::for_codes(kept).with_pos(pos).with_duration_band(lo, hi)
+                }
+            };
+            let run = |spec: TargetSpec| {
+                let out = Engine::from_dbmart(db.clone())
+                    .mine(cfg.clone())
+                    .target(spec)
+                    .run()
+                    .unwrap();
+                sorted(out.sequences.materialize().unwrap().records)
+            };
+            assert_eq!(run(clamp(&a)), run(clamp(&b)), "case={case}: mined bytes diverged");
+        }
+    }
+}
+
 /// The engine façade is a pure re-orchestration: on every random cohort
 /// and every backend it yields exactly the expert-layer mine+screen
 /// result.

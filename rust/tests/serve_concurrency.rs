@@ -60,7 +60,7 @@ fn build_artifact(name: &str, records: &[SeqRecord], num_patients: u32) -> PathB
     query::index::build(
         &input,
         &out,
-        &IndexConfig { block_records: BLOCK_RECORDS, pid_index: true },
+        &IndexConfig { block_records: BLOCK_RECORDS, ..Default::default() },
         None,
     )
     .unwrap();

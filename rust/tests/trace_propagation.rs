@@ -58,7 +58,7 @@ fn build_artifact(name: &str) -> (PathBuf, Vec<SeqRecord>) {
     query::index::build(
         &input,
         &out,
-        &IndexConfig { block_records: BLOCK_RECORDS, pid_index: true },
+        &IndexConfig { block_records: BLOCK_RECORDS, ..Default::default() },
         None,
     )
     .unwrap();

@@ -1,7 +1,7 @@
 //! `cargo xtask lint` — static enforcement of the repository's
 //! compatibility and determinism contracts.
 //!
-//! Five checks, all source-level (no compilation, no dependencies):
+//! Six checks, all source-level (no compilation, no dependencies):
 //!
 //! 1. **Append-only wire protocol** — the `ErrorCode` and `Request`
 //!    enums in `rust/src/serve/protocol.rs` must extend the committed
@@ -16,6 +16,15 @@
 //!    module docs (`"tspm-seqindex"`, `"tspm-spill"`, `"tspm-segset"`,
 //!    "currently N" in the serve docs) must match the constants, so the
 //!    documented contract can never drift from the enforced one.
+//! 2b. **Append-only manifest keys** — the top-level keys that
+//!    `query::index::write_tables_and_manifest` writes into
+//!    `manifest.json` must be a superset of the committed snapshot
+//!    (`xtask/snapshots/manifest_keys.txt`) whenever
+//!    `INDEX_FORMAT_VERSION` is unchanged: readers parse keys by name
+//!    and ignore unknown ones, so *adding* a key (e.g. `target`) is
+//!    compatible without a version bump, while dropping or renaming an
+//!    existing key is a silent format break and fails the lint. Key
+//!    sets are compared, never positions. `--bless` records additions.
 //! 3. **Determinism bans** — the deterministic-output modules
 //!    (`mining`, `sparsity`, `query`, `ingest`) may not iterate a
 //!    `HashMap` (iteration order is randomized per process — the exact
@@ -50,9 +59,11 @@ const DETERMINISTIC_DIRS: [&str; 4] =
 
 const WIRE_SNAPSHOT: &str = "xtask/snapshots/wire.txt";
 const METRICS_SNAPSHOT: &str = "xtask/snapshots/metrics.txt";
+const MANIFEST_SNAPSHOT: &str = "xtask/snapshots/manifest_keys.txt";
 const UNSAFE_ALLOWLIST: &str = "xtask/snapshots/unsafe_allowlist.txt";
 const PROTOCOL_RS: &str = "rust/src/serve/protocol.rs";
 const NAMES_RS: &str = "rust/src/obs/names.rs";
+const INDEX_RS: &str = "rust/src/query/index.rs";
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -118,6 +129,32 @@ fn run_lint(root: &Path, bless: bool) -> Result<usize, String> {
 
     // 2. format/version constants vs docs
     check_format_constants(&files, &mut violations);
+
+    // 2b. seqindex manifest key set (or bless it): append-only WITHOUT a
+    // version bump — readers parse by name and ignore unknown keys, so
+    // adding a key is compatible; dropping or renaming one is not.
+    let rendered = render_manifest_snapshot(&files, &mut violations);
+    if let Some(rendered) = rendered {
+        let snap_path = root.join(MANIFEST_SNAPSHOT);
+        if bless {
+            std::fs::write(&snap_path, &rendered)
+                .map_err(|e| format!("cannot write {}: {e}", snap_path.display()))?;
+            println!("xtask lint: blessed {MANIFEST_SNAPSHOT}");
+        } else {
+            match std::fs::read_to_string(&snap_path) {
+                Ok(committed) => {
+                    check_manifest_append_only(&committed, &files, &mut violations)
+                }
+                Err(_) => violations.push(Violation {
+                    file: MANIFEST_SNAPSHOT.into(),
+                    line: 0,
+                    rule: "manifest-keys",
+                    msg: "snapshot missing; run `cargo xtask lint --bless` and commit it"
+                        .into(),
+                }),
+            }
+        }
+    }
 
     // 3. determinism bans
     check_determinism(&files, &mut violations);
@@ -568,7 +605,7 @@ fn check_format_constants(files: &[SourceFile], violations: &mut Vec<Violation>)
     for (path, names) in [
         (PROTOCOL_RS, &["PROTOCOL_VERSION", "MIN_PROTOCOL_VERSION"][..]),
         (
-            "rust/src/query/index.rs",
+            INDEX_RS,
             &[
                 "INDEX_FORMAT",
                 "INDEX_FORMAT_VERSION",
@@ -657,6 +694,172 @@ fn check_format_constants(files: &[SourceFile], violations: &mut Vec<Violation>)
                      module docs — the documented format contract drifted"
                 ),
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 2b — seqindex manifest key set is append-only without a version bump
+// ---------------------------------------------------------------------------
+
+/// Content of the first `"…"` literal on a raw source line.
+fn first_string_literal(raw: &str) -> Option<String> {
+    let a = raw.find('"')?;
+    let b = raw[a + 1..].find('"')? + a + 1;
+    Some(raw[a + 1..b].to_string())
+}
+
+/// Top-level keys written into the seqindex `manifest.json` by
+/// `write_tables_and_manifest` in `rust/src/query/index.rs`: the tuple
+/// keys inside the `fields` vec literal (square-bracket depth 1 — the
+/// nested per-file `Json::obj(vec![…])` keys sit at depth 2) plus every
+/// later `fields.push(…)` site, up to `Json::obj(fields)`. Returned
+/// sorted + deduplicated: the manifest serializes through a `BTreeMap`,
+/// so key *sets*, never positions, are the contract.
+fn manifest_keys(f: &SourceFile) -> Option<Vec<String>> {
+    let start = f.code.iter().position(|l| l.contains("let mut fields = vec!["))?;
+    let end = start
+        + f.code[start..].iter().position(|l| l.contains("Json::obj(fields)"))?;
+    let mut keys = Vec::new();
+    let mut depth = 0i32; // square brackets only: vec! nesting
+    let mut in_outer_vec = true; // until the `fields` literal's `];`
+    let mut pending_push = false;
+    for i in start..end {
+        let code = &f.code[i];
+        let depth_at_start = depth;
+        for ch in code.chars() {
+            match ch {
+                '[' => depth += 1,
+                ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if code.contains("fields.push(") {
+            pending_push = true;
+        }
+        let t = code.trim_start();
+        // Inside the vec literal: a tuple key sits at depth 1 (nested
+        // per-file objects open their own vec! and sit at depth 2).
+        // After it closes: keys only come from `fields.push(…)` sites,
+        // read at depth 0 before any nested vec! reopens.
+        let in_vec_key = in_outer_vec
+            && depth_at_start == 1
+            && (t.starts_with("(\"") || t.starts_with('"'));
+        if in_vec_key || (pending_push && depth_at_start == 0) {
+            if let Some(k) = first_string_literal(&f.raw[i]) {
+                keys.push(k);
+                pending_push = false;
+            }
+        }
+        if i > start && in_outer_vec && depth == 0 {
+            in_outer_vec = false;
+        }
+    }
+    if keys.is_empty() {
+        return None;
+    }
+    keys.sort();
+    keys.dedup();
+    Some(keys)
+}
+
+/// Current manifest key contract rendered in the snapshot format, or
+/// `None` (with violations pushed) when index.rs is unparseable.
+fn render_manifest_snapshot(
+    files: &[SourceFile],
+    violations: &mut Vec<Violation>,
+) -> Option<String> {
+    let mut fail = |msg: &str| {
+        violations.push(Violation {
+            file: INDEX_RS.into(),
+            line: 0,
+            rule: "manifest-keys",
+            msg: msg.into(),
+        });
+    };
+    let Some(idx) = get(files, INDEX_RS) else {
+        fail("file not found");
+        return None;
+    };
+    let Some(keys) = manifest_keys(idx) else {
+        fail("cannot locate the manifest `fields` literal in write_tables_and_manifest");
+        return None;
+    };
+    let Some((_, version)) = const_value(idx, "INDEX_FORMAT_VERSION") else {
+        fail("INDEX_FORMAT_VERSION not found");
+        return None;
+    };
+    let mut s = String::new();
+    s.push_str(
+        "# Committed seqindex manifest key set — the compatibility contract for\n\
+         # manifest.json written by rust/src/query/index.rs. Readers parse keys\n\
+         # by NAME and ignore unknown ones, so APPENDING a new key is allowed\n\
+         # without an INDEX_FORMAT_VERSION bump (re-bless with\n\
+         # `cargo xtask lint --bless` in the same commit). Dropping or renaming\n\
+         # a key listed here while the version stays put breaks deployed\n\
+         # readers and fails the lint; such a change demands a version bump.\n\
+         # Key SETS are compared, never positions — the manifest serializes\n\
+         # through a BTreeMap, so ordering carries no information.\n\n",
+    );
+    s.push_str(&format!("index_format_version = {version}\n"));
+    s.push_str("\n[ManifestKeys]\n");
+    for k in &keys {
+        s.push_str(k);
+        s.push('\n');
+    }
+    Some(s)
+}
+
+fn check_manifest_append_only(
+    committed: &str,
+    files: &[SourceFile],
+    violations: &mut Vec<Violation>,
+) {
+    let Some(idx) = get(files, INDEX_RS) else { return };
+    let live_keys = manifest_keys(idx).unwrap_or_default();
+    let live_version =
+        const_value(idx, "INDEX_FORMAT_VERSION").map(|(_, v)| v).unwrap_or_default();
+    let (kv, sections) = parse_snapshot(committed);
+    let Some(snap_keys) = sections.get("ManifestKeys") else {
+        violations.push(Violation {
+            file: MANIFEST_SNAPSHOT.into(),
+            line: 0,
+            rule: "manifest-keys",
+            msg: "snapshot has no [ManifestKeys] section; re-bless".into(),
+        });
+        return;
+    };
+    let snap_version = kv.get("index_format_version").cloned().unwrap_or_default();
+    if live_version != snap_version {
+        // A deliberate format-version bump may reshape the key set
+        // freely — but must be blessed in the same commit.
+        violations.push(Violation {
+            file: INDEX_RS.into(),
+            line: 0,
+            rule: "manifest-keys",
+            msg: format!(
+                "INDEX_FORMAT_VERSION is {live_version:?} but the snapshot pins \
+                 {snap_version:?} — format version changes must be blessed deliberately"
+            ),
+        });
+        return;
+    }
+    // Same version: existing keys are frozen. New keys in the source that
+    // the snapshot has not seen yet are ACCEPTED without a version bump
+    // (append-only evolution); a snapshot key missing from the source is
+    // a silent format break.
+    for want in snap_keys {
+        if !live_keys.iter().any(|k| k == want) {
+            violations.push(Violation {
+                file: INDEX_RS.into(),
+                line: 0,
+                rule: "manifest-keys",
+                msg: format!(
+                    "manifest key {want:?} vanished while INDEX_FORMAT_VERSION stayed \
+                     {live_version} — existing keys are frozen; only appending new \
+                     keys is allowed without a version bump"
+                ),
+            });
         }
     }
 }
@@ -1072,6 +1275,106 @@ pub enum Request {
         let mut v = Vec::new();
         check_wire_append_only(&rendered, &files, &mut v);
         assert!(v.iter().any(|v| v.msg.contains("PROTOCOL_VERSION")), "{v:?}");
+    }
+
+    const INDEX_SRC: &str = r#"
+pub const INDEX_FORMAT: &str = "tspm-seqindex";
+pub const INDEX_FORMAT_VERSION: u64 = 2;
+
+fn write_tables_and_manifest() {
+    let mut fields = vec![
+        ("format", Json::from(INDEX_FORMAT)),
+        ("version", Json::from(version)),
+        ("total_records", Json::from(written)),
+        (
+            "data",
+            Json::obj(vec![
+                ("name", Json::from(DATA_FILE)),
+                ("checksum", Json::from(data_checksum)),
+            ]),
+        ),
+    ];
+    if let Some((entries, pdata_checksum)) = &pid_table {
+        fields.push((
+            "pids",
+            Json::obj(vec![
+                ("name", Json::from(PIDS_FILE)),
+                ("checksum", Json::from(pids_checksum)),
+            ]),
+        ));
+    }
+    if let Some(t) = target {
+        fields.push(("target", t.to_json()));
+    }
+    let manifest = Json::obj(fields);
+}
+"#;
+
+    fn index_file(src: &str) -> SourceFile {
+        source_file(INDEX_RS.to_string(), src)
+    }
+
+    #[test]
+    fn manifest_key_parser_sees_top_level_keys_only() {
+        let keys = manifest_keys(&index_file(INDEX_SRC)).unwrap();
+        // Nested per-file keys (name/checksum) must NOT appear; push
+        // sites (single- and multi-line) must.
+        assert_eq!(keys, vec!["data", "format", "pids", "target", "total_records", "version"]);
+    }
+
+    /// Seeded violations for the manifest-key contract: an append-only
+    /// key addition without a version bump passes; dropping or renaming
+    /// an existing key fails; an unblessed version bump fails.
+    #[test]
+    fn manifest_key_set_is_append_only_without_version_bump() {
+        let files = vec![index_file(INDEX_SRC)];
+        let mut v = Vec::new();
+        let rendered = render_manifest_snapshot(&files, &mut v).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+        check_manifest_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "a freshly blessed snapshot must pass: {v:?}");
+
+        // Appending a NEW key with the version unchanged is accepted.
+        let added = INDEX_SRC.replace(
+            "    let manifest = Json::obj(fields);",
+            "    fields.push((\"provenance\", Json::from(1u64)));\n    \
+             let manifest = Json::obj(fields);",
+        );
+        assert_ne!(added, INDEX_SRC, "seed applied");
+        let files = vec![index_file(&added)];
+        let mut v = Vec::new();
+        check_manifest_append_only(&rendered, &files, &mut v);
+        assert!(v.is_empty(), "append-only key addition must pass: {v:?}");
+
+        // Renaming an existing key with the version unchanged fails.
+        let renamed = INDEX_SRC.replace("(\"total_records\",", "(\"record_total\",");
+        assert_ne!(renamed, INDEX_SRC, "seed applied");
+        let files = vec![index_file(&renamed)];
+        let mut v = Vec::new();
+        check_manifest_append_only(&rendered, &files, &mut v);
+        assert!(
+            v.iter().any(|v| v.rule == "manifest-keys" && v.msg.contains("total_records")),
+            "{v:?}"
+        );
+
+        // Dropping a push-site key fails the same way.
+        let dropped = INDEX_SRC.replace(
+            "    if let Some(t) = target {\n        fields.push((\"target\", t.to_json()));\n    }\n",
+            "",
+        );
+        assert_ne!(dropped, INDEX_SRC, "seed applied");
+        let files = vec![index_file(&dropped)];
+        let mut v = Vec::new();
+        check_manifest_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("\"target\"")), "{v:?}");
+
+        // A version bump without a bless fails.
+        let bumped =
+            INDEX_SRC.replace("INDEX_FORMAT_VERSION: u64 = 2", "INDEX_FORMAT_VERSION: u64 = 3");
+        let files = vec![index_file(&bumped)];
+        let mut v = Vec::new();
+        check_manifest_append_only(&rendered, &files, &mut v);
+        assert!(v.iter().any(|v| v.msg.contains("INDEX_FORMAT_VERSION")), "{v:?}");
     }
 
     /// Seeded violation 2: a new undocumented `unsafe` block fails both
